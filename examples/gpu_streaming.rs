@@ -1,0 +1,71 @@
+//! The paper's Algorithm 1 in action: explicit 3-slot streaming of
+//! CloverLeaf 2D over PCIe vs NVLink, with the §4.1 optimisations
+//! toggled one at a time — a miniature of Figures 7–8.
+//!
+//!     cargo run --release --example gpu_streaming
+
+use ops_oc::bench_support::{run_cl2d, Figure};
+use ops_oc::coordinator::Platform;
+use ops_oc::memory::Link;
+
+fn main() {
+    println!("=== CloverLeaf 2D, explicit GPU memory management ===\n");
+
+    let mut fig = Figure::new(
+        "Tiling optimisations (cf. paper Fig. 8)",
+        "effective GB/s (modelled)",
+    );
+    let combos = [
+        ("NoPrefetch NoCyclic", false, false),
+        ("NoPrefetch Cyclic", true, false),
+        ("Prefetch Cyclic", true, true),
+    ];
+    for link in [Link::PciE, Link::NvLink] {
+        for (name, cyclic, prefetch) in combos {
+            let s = fig.add_series(&format!("{}-{}", link.name(), name));
+            for gb in [8.0, 16.0, 32.0, 47.0] {
+                let (m, oom) = run_cl2d(
+                    Platform::GpuExplicit {
+                        link,
+                        cyclic,
+                        prefetch,
+                    },
+                    8,
+                    6144,
+                    gb,
+                    4,
+                    0,
+                );
+                fig.push(
+                    s,
+                    gb,
+                    if oom {
+                        None
+                    } else {
+                        Some(m.effective_bandwidth_gbs())
+                    },
+                );
+            }
+        }
+    }
+    println!("{}", fig.render());
+
+    // transfer ledger for one configuration
+    let (m, _) = run_cl2d(
+        Platform::GpuExplicit {
+            link: Link::PciE,
+            cyclic: true,
+            prefetch: true,
+        },
+        8,
+        6144,
+        47.0,
+        4,
+        0,
+    );
+    println!("transfer ledger at 47 GB (PCIe, Cyclic+Prefetch):");
+    println!("  H2D {:>8.1} GB", m.h2d_bytes as f64 / 1e9);
+    println!("  D2H {:>8.1} GB", m.d2h_bytes as f64 / 1e9);
+    println!("  D2D {:>8.1} GB (tile edge copies)", m.d2d_bytes as f64 / 1e9);
+    println!("  tiles executed: {}", m.tiles);
+}

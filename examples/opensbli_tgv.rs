@@ -1,0 +1,54 @@
+//! OpenSBLI Taylor–Green vortex: tiling across multiple timesteps (the
+//! paper's §5.3 depth study — "we can tile across an arbitrary number of
+//! loops"), plus the physics monitor.
+//!
+//!     cargo run --release --example opensbli_tgv
+
+use ops_oc::apps::opensbli::OpenSbli;
+use ops_oc::coordinator::{print_summary, Config, Platform};
+use ops_oc::memory::{AppCalib, Link};
+use ops_oc::ops::OpsContext;
+
+fn main() {
+    println!("=== OpenSBLI 3D Taylor-Green vortex ===\n");
+
+    // physics run: watch the kinetic energy decay
+    let cfg = Config::new(Platform::KnlFlatDdr4, AppCalib::OPENSBLI);
+    let mut ctx = OpsContext::new(cfg.build_engine());
+    let mut app = OpenSbli::new(&mut ctx, 32, 1, 1);
+    app.initialise(&mut ctx);
+    ctx.flush();
+    println!("kinetic-energy decay (Re=1600, 32^3):");
+    for step in 0..6 {
+        app.exchange_halos(&mut ctx);
+        app.step(&mut ctx, 0);
+        let ke = app.kinetic_energy(&mut ctx);
+        println!("  step {:>2}  KE = {ke:.6}", step + 1);
+    }
+
+    // tile-depth study at 47 GB modelled, PCIe vs NVLink
+    println!("\ntiling depth study at 47 GB (cf. paper §5.3 / Fig. 10):");
+    for link in [Link::PciE, Link::NvLink] {
+        for spc in [1usize, 2, 3] {
+            let (m, _) = ops_oc::bench_support::run_sbli_tall(
+                Platform::GpuExplicit {
+                    link,
+                    cyclic: true,
+                    prefetch: true,
+                },
+                spc,
+                47.0,
+                2,
+            );
+            println!(
+                "  {} tile over {spc} timestep(s): {:>6.1} GB/s effective",
+                link.name(),
+                m.effective_bandwidth_gbs()
+            );
+        }
+    }
+
+    let (m, oom) = ops_oc::bench_support::run_sbli_tall(Platform::KnlCacheTiled, 3, 47.0, 2);
+    println!();
+    print_summary("KNL cache tiled, 3 steps/chain", 47_000_000_000, &m, oom);
+}

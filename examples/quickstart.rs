@@ -1,0 +1,45 @@
+//! Quickstart: declare a stencil problem in the DSL, run it through two
+//! modelled memory systems, and print the paper's Average Bandwidth
+//! metric.
+//!
+//!     cargo run --release --example quickstart
+
+use ops_oc::apps::diffusion::Diffusion2D;
+use ops_oc::coordinator::{print_summary, Config, Platform};
+use ops_oc::memory::{AppCalib, Link};
+use ops_oc::ops::OpsContext;
+
+fn main() {
+    // A 2D diffusion problem whose modelled size (scale x actual bytes)
+    // is ~24 GB — 1.5x larger than the 16 GB fast memory.
+    let scale = 1 << 15;
+
+    for platform in [
+        Platform::KnlCacheTiled,
+        Platform::GpuExplicit {
+            link: Link::NvLink,
+            cyclic: true,
+            prefetch: true,
+        },
+    ] {
+        let cfg = Config::new(platform, AppCalib::CLOVERLEAF_2D);
+        let mut ctx = OpsContext::new(cfg.build_engine());
+        let app = Diffusion2D::new(&mut ctx, 16, 3072, scale);
+        app.run(&mut ctx, 50, 5);
+        let heat = {
+            // a trigger point: returns data, flushes the chain
+            let mut c2 = ctx;
+            let h = app.total_heat(&mut c2);
+            ctx = c2;
+            h
+        };
+        println!("final interior heat: {heat:.6}");
+        print_summary(
+            &platform.label(),
+            ctx.problem_bytes(),
+            ctx.metrics(),
+            ctx.oom(),
+        );
+        println!();
+    }
+}

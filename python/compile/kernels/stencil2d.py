@@ -1,0 +1,138 @@
+"""L1 Pallas kernels: the stencil hot-spots.
+
+All kernels run with ``interpret=True`` — on this CPU image, real-TPU
+lowering would emit a Mosaic custom-call the CPU PJRT plugin cannot
+execute. The *structure* is still written for TPU:
+
+* pointwise kernels (EOS, axpy) tile with ``BlockSpec`` so each program
+  instance works on a VMEM-resident block (8×128-aligned when possible);
+* the Laplacian streams row-tiles through the kernel with dynamic slices
+  (`pl.dslice`) because its ±1 halo makes non-overlapping BlockSpec
+  windows insufficient — the row-tile is the HBM↔VMEM schedule that the
+  paper's CUDA version expressed with thread blocks
+  (DESIGN.md §Hardware-Adaptation).
+
+VMEM accounting (per program instance, f64):
+    laplacian2d: (TILE_ROWS+2 + TILE_ROWS*2) * nx_pad * 8 B
+                 → TILE_ROWS=32, nx_pad≤1026: ~0.8 MiB  (« 16 MiB VMEM)
+    eos/axpy:    3–4 blocks of 32×256 → ≤ 0.3 MiB
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height for the Laplacian streaming kernel.
+TILE_ROWS = 32
+# Block shape for the pointwise kernels.
+BLOCK = (32, 256)
+
+
+def _lap_kernel(u_ref, k_ref, o_ref, *, tile_rows, ny_pad):
+    """One program instance computes `tile_rows` interior rows."""
+    # program_id is int32; slice starts must match the x64 index type.
+    pid = jnp.int64(pl.program_id(0))
+    row0 = pid * tile_rows  # first *interior* row of this tile (0-based
+    # within the interior, so padded row index row0+1)
+
+    # Load tile_rows+2 rows (the tile plus its ±1 halo rows).
+    u = pl.load(u_ref, (pl.dslice(row0, tile_rows + 2), slice(None)))
+    k = pl.load(k_ref, (pl.dslice(row0 + 1, tile_rows), slice(None)))
+
+    up = u[:-2, 1:-1]
+    down = u[2:, 1:-1]
+    left = u[1:-1, :-2]
+    right = u[1:-1, 2:]
+    mid = u[1:-1, 1:-1]
+    lap = k[:, 1:-1] * (up + down + left + right - 4.0 * mid)
+
+    # Store interior columns of the tile's rows; halo columns stay 0.
+    out = jnp.zeros_like(k)
+    out = out.at[:, 1:-1].set(lap)
+    pl.store(o_ref, (pl.dslice(row0 + 1, tile_rows), slice(None)), out)
+    del ny_pad
+
+
+def laplacian2d(u, kappa, *, tile_rows=None):
+    """Pallas 5-point weighted Laplacian over a padded [ny_pad, nx_pad]
+    array. `tile_rows` must divide the interior height; when omitted, the
+    largest divisor ≤ TILE_ROWS is chosen automatically.
+    """
+    ny_pad, nx_pad = u.shape
+    interior = ny_pad - 2
+    if tile_rows is None:
+        tile_rows = next(
+            t for t in range(min(TILE_ROWS, interior), 0, -1) if interior % t == 0
+        )
+    assert interior % tile_rows == 0, (ny_pad, tile_rows)
+    grid = (interior // tile_rows,)
+    out = pl.pallas_call(
+        functools.partial(_lap_kernel, tile_rows=tile_rows, ny_pad=ny_pad),
+        out_shape=jax.ShapeDtypeStruct((ny_pad, nx_pad), u.dtype),
+        grid=grid,
+        interpret=True,
+    )(u, kappa)
+    # The kernel stores interior rows only; the halo rows of the output
+    # are uninitialised — pin them to the contract's zeros.
+    zero = jnp.zeros((1, nx_pad), out.dtype)
+    return out.at[0:1, :].set(zero).at[ny_pad - 1 : ny_pad, :].set(zero)
+
+
+def _axpy_kernel(u_ref, l_ref, o_ref, *, alpha):
+    o_ref[...] = u_ref[...] + alpha * l_ref[...]
+
+
+def axpy_update(u, lap, alpha):
+    """Pointwise explicit-Euler update, BlockSpec-tiled."""
+    ny, nx = u.shape
+    by = min(BLOCK[0], ny)
+    bx = min(BLOCK[1], nx)
+    # fall back to one block when the shape doesn't divide evenly
+    if ny % by or nx % bx:
+        by, bx = ny, nx
+    grid = (ny // by, nx // bx)
+    spec = pl.BlockSpec((by, bx), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_axpy_kernel, alpha=alpha),
+        out_shape=jax.ShapeDtypeStruct((ny, nx), u.dtype),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(u, lap)
+
+
+def _eos_kernel(d_ref, e_ref, p_ref, ss_ref, *, gamma):
+    d = jnp.maximum(d_ref[...], 1.0e-16)
+    e = e_ref[...]
+    v = 1.0 / d
+    p = (gamma - 1.0) * d * e
+    pe = (gamma - 1.0) * d
+    pv = -d * p * v
+    ss2 = v * v * (p * pe - pv)
+    p_ref[...] = p
+    ss_ref[...] = jnp.sqrt(jnp.maximum(ss2, 1.0e-16))
+
+
+def ideal_gas(density, energy, gamma=1.4):
+    """CloverLeaf EOS as a BlockSpec-tiled pointwise Pallas kernel."""
+    ny, nx = density.shape
+    by = min(BLOCK[0], ny)
+    bx = min(BLOCK[1], nx)
+    if ny % by or nx % bx:
+        by, bx = ny, nx
+    grid = (ny // by, nx // bx)
+    spec = pl.BlockSpec((by, bx), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_eos_kernel, gamma=gamma),
+        out_shape=[
+            jax.ShapeDtypeStruct((ny, nx), density.dtype),
+            jax.ShapeDtypeStruct((ny, nx), density.dtype),
+        ],
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        interpret=True,
+    )(density, energy)

@@ -1,0 +1,87 @@
+"""L1 Pallas kernels, 3D: the 7-point Laplacian and the 4th-order
+central first derivative used by the OpenSBLI-style RHS.
+
+Same conventions as stencil2d: interpret=True (CPU image), z-slab
+streaming via dynamic slices plays the HBM↔VMEM schedule role, padded
+arrays [nz_pad, ny_pad, nx_pad] row-major x-fastest.
+
+VMEM accounting (per program instance, f64):
+    laplacian3d: (TILE_Z+2 + TILE_Z) * ny_pad * nx_pad * 8 B
+                 → TILE_Z=4, 130×130 planes: ~4.9 MiB (< 16 MiB VMEM)
+    deriv4_z:    (TILE_Z+4 + TILE_Z) * plane ≈ same order
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_Z = 4
+
+
+def _pick_tile(interior, want):
+    return next(t for t in range(min(want, interior), 0, -1) if interior % t == 0)
+
+
+def _lap3d_kernel(u_ref, o_ref, *, tile_z):
+    pid = jnp.int64(pl.program_id(0))
+    z0 = pid * tile_z
+    u = pl.load(u_ref, (pl.dslice(z0, tile_z + 2), slice(None), slice(None)))
+    mid = u[1:-1, 1:-1, 1:-1]
+    lap = (
+        u[:-2, 1:-1, 1:-1]
+        + u[2:, 1:-1, 1:-1]
+        + u[1:-1, :-2, 1:-1]
+        + u[1:-1, 2:, 1:-1]
+        + u[1:-1, 1:-1, :-2]
+        + u[1:-1, 1:-1, 2:]
+        - 6.0 * mid
+    )
+    out = jnp.zeros(u[1:-1].shape, u.dtype)
+    out = out.at[:, 1:-1, 1:-1].set(lap)
+    pl.store(o_ref, (pl.dslice(z0 + 1, tile_z), slice(None), slice(None)), out)
+
+
+def laplacian3d(u, *, tile_z=None):
+    """7-point Laplacian over a padded [nz, ny, nx] array; halo planes of
+    the output are zero."""
+    nz, ny, nx = u.shape
+    interior = nz - 2
+    if tile_z is None:
+        tile_z = _pick_tile(interior, TILE_Z)
+    assert interior % tile_z == 0, (nz, tile_z)
+    out = pl.pallas_call(
+        functools.partial(_lap3d_kernel, tile_z=tile_z),
+        out_shape=jax.ShapeDtypeStruct((nz, ny, nx), u.dtype),
+        grid=(interior // tile_z,),
+        interpret=True,
+    )(u)
+    zero = jnp.zeros((1, ny, nx), out.dtype)
+    return out.at[0:1].set(zero).at[nz - 1 : nz].set(zero)
+
+
+def _deriv4_z_kernel(u_ref, o_ref, *, tile_z, inv12h):
+    pid = jnp.int64(pl.program_id(0))
+    z0 = pid * tile_z
+    u = pl.load(u_ref, (pl.dslice(z0, tile_z + 4), slice(None), slice(None)))
+    d = (8.0 * (u[3:-1] - u[1:-3]) - (u[4:] - u[:-4])) * inv12h
+    pl.store(o_ref, (pl.dslice(z0 + 2, tile_z), slice(None), slice(None)), d)
+
+
+def deriv4_z(u, h, *, tile_z=None):
+    """4th-order central ∂/∂z over a padded (depth ≥ 2) array; the two
+    halo planes at each end of the output are zero."""
+    nz, ny, nx = u.shape
+    interior = nz - 4
+    if tile_z is None:
+        tile_z = _pick_tile(interior, TILE_Z)
+    assert interior % tile_z == 0, (nz, tile_z)
+    out = pl.pallas_call(
+        functools.partial(_deriv4_z_kernel, tile_z=tile_z, inv12h=1.0 / (12.0 * h)),
+        out_shape=jax.ShapeDtypeStruct((nz, ny, nx), u.dtype),
+        grid=(interior // tile_z,),
+        interpret=True,
+    )(u)
+    zero = jnp.zeros((2, ny, nx), out.dtype)
+    return out.at[0:2].set(zero).at[nz - 2 : nz].set(zero)

@@ -1,0 +1,50 @@
+"""L2: JAX compute graphs composing the L1 Pallas kernels.
+
+Each function is the full-sweep semantic of one Rust par_loop (see the
+PJRT-executor contract in rust/src/exec/pjrt.rs: compute everywhere, the
+executor writes back only the tile's sub-range), plus a fused multi-loop
+chain used for HLO fusion analysis in the perf pass.
+
+Everything is f64 (jax_enable_x64) to match the Rust native executor.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import stencil2d  # noqa: E402
+
+ALPHA = 0.1
+
+
+def diff_lap(u, kappa):
+    """`diff_lap` par_loop: conductivity-weighted 5-point Laplacian."""
+    return (stencil2d.laplacian2d(u, kappa),)
+
+
+def diff_update(u, lap):
+    """`diff_update` par_loop: u += alpha * lap."""
+    return (stencil2d.axpy_update(u, lap, ALPHA),)
+
+
+def cl2d_ideal_gas(density, energy):
+    """`cl2d_ideal_gas` par_loop: EOS -> (pressure, soundspeed)."""
+    p, ss = stencil2d.ideal_gas(density, energy)
+    return (p, ss)
+
+
+def diff_chain(u, kappa, steps: int):
+    """A fused diffusion chain (L2-level loop fusion study): `steps`
+    timesteps of lap+update in one XLA program. Used by the perf pass to
+    compare per-loop dispatch against whole-chain fusion, mirroring what
+    tiling buys the paper at the memory level.
+    """
+
+    def body(u, _):
+        lap = stencil2d.laplacian2d(u, kappa)
+        return stencil2d.axpy_update(u, lap, ALPHA), None
+
+    out, _ = jax.lax.scan(body, u, None, length=steps)
+    return (out,)

@@ -1,0 +1,73 @@
+"""L1 correctness, 3D kernels: Pallas vs jnp oracle (hypothesis sweeps)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, stencil3d
+
+settings.register_profile("ci3d", max_examples=15, deadline=None)
+settings.load_profile("ci3d")
+
+
+def rng(shape, seed):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.uniform(-3.0, 3.0, size=shape))
+
+
+@given(
+    nz=st.integers(min_value=3, max_value=14),
+    ny=st.integers(min_value=3, max_value=12),
+    nx=st.integers(min_value=3, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_laplacian3d_matches_ref(nz, ny, nx, seed):
+    u = rng((nz, ny, nx), seed)
+    got = stencil3d.laplacian3d(u, tile_z=1)
+    want = ref.laplacian3d(u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-13, atol=1e-13)
+
+
+@pytest.mark.parametrize("tile_z", [1, 2, 4, 8])
+def test_laplacian3d_tile_invariance(tile_z):
+    u = rng((2 + 8, 9, 7), 5)
+    got = stencil3d.laplacian3d(u, tile_z=tile_z)
+    want = ref.laplacian3d(u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-13)
+
+
+def test_laplacian3d_of_linear_field_is_zero():
+    z, y, x = jnp.mgrid[0:10, 0:8, 0:6]
+    u = (1.0 * x + 2.0 * y + 3.0 * z).astype(jnp.float64)
+    got = stencil3d.laplacian3d(u)
+    np.testing.assert_allclose(np.asarray(got[1:-1, 1:-1, 1:-1]), 0.0, atol=1e-11)
+
+
+@given(
+    nz=st.integers(min_value=5, max_value=16),
+    ny=st.integers(min_value=2, max_value=10),
+    nx=st.integers(min_value=2, max_value=10),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_deriv4_matches_ref(nz, ny, nx, seed):
+    u = rng((nz, ny, nx), seed)
+    got = stencil3d.deriv4_z(u, 0.37, tile_z=1)
+    want = ref.deriv4_z(u, 0.37)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+def test_deriv4_exact_on_cubics():
+    # 4th-order central differences are exact for polynomials up to deg 4.
+    h = 0.25
+    z = (jnp.arange(20) * h)[:, None, None] * jnp.ones((1, 4, 4))
+    u = z**3 - 2.0 * z
+    got = stencil3d.deriv4_z(u.astype(jnp.float64), h, tile_z=16)
+    want = 3.0 * z**2 - 2.0
+    np.testing.assert_allclose(
+        np.asarray(got[2:-2]), np.asarray(want[2:-2]), rtol=1e-11
+    )

@@ -1,0 +1,37 @@
+//! §5.3's OpenSBLI tile-depth study: tiling across 1, 2 or 3 timesteps
+//! per chain, PCIe vs NVLink — more depth means more in-tile reuse and
+//! more time to hide transfers.
+use ops_oc::bench_support::{bw_point, run_sbli_tall, Figure};
+use ops_oc::coordinator::Platform;
+use ops_oc::memory::Link;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let mut fig = Figure::new(
+        "Fig 10: OpenSBLI tiling depth on the P100",
+        "effective GB/s (modelled)",
+    );
+    for link in [Link::PciE, Link::NvLink] {
+        let tag = if link == Link::PciE { "P" } else { "N" };
+        for spc in [1usize, 2, 3] {
+            let s = fig.add_series(&format!("{tag}-{spc} step/chain"));
+            // deep chains do halo-deep redundant computation, so keep the
+            // sweep small: 3 sizes, 1 chain per cell
+            for gb in [16.0, 32.0, 47.0] {
+                fig.push(
+                    s,
+                    gb,
+                    bw_point(run_sbli_tall(
+                        Platform::GpuExplicit { link, cyclic: true, prefetch: true },
+                        spc,
+                        gb,
+                        1,
+                    )),
+                );
+            }
+        }
+    }
+    println!("{}", fig.render());
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

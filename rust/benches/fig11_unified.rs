@@ -1,0 +1,43 @@
+//! Figure 11: problem scaling with Unified Memory on the P100 — plain
+//! page migration, + tiling, + bulk prefetches; PCIe and NVLink.
+use ops_oc::bench_support::{bw_point, run_cl2d, run_sbli_tall, Figure, GPU_SIZES_GB};
+use ops_oc::coordinator::Platform;
+use ops_oc::memory::Link;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    for app in ["CloverLeaf 2D", "OpenSBLI"] {
+        let mut fig = Figure::new(
+            &format!("Fig 11: {app} with Unified Memory"),
+            "effective GB/s (modelled)",
+        );
+        for link in [Link::PciE, Link::NvLink] {
+            let tag = if link == Link::PciE { "P" } else { "N" };
+            for (name, tiled, prefetch) in [
+                ("UM", false, false),
+                ("UM tiled", true, false),
+                ("UM tiled+prefetch", true, true),
+            ] {
+                let s = fig.add_series(&format!("{tag}-{name}"));
+                // SBLI's deep-halo chains are compute-heavy; a 5-point
+                // sweep keeps the full shape
+                let sizes: &[f64] = if app == "OpenSBLI" {
+                    &[6.0, 16.0, 24.0, 36.0, 47.0]
+                } else {
+                    &GPU_SIZES_GB
+                };
+                for &gb in sizes {
+                    let p = Platform::GpuUnified { link, tiled, prefetch };
+                    let v = match app {
+                        "CloverLeaf 2D" => bw_point(run_cl2d(p, 8, 6144, gb, 8, 0)),
+                        _ => bw_point(run_sbli_tall(p, 2, gb, 1)),
+                    };
+                    fig.push(s, gb, v);
+                }
+            }
+        }
+        println!("{}", fig.render());
+    }
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,27 @@
+//! Figure 3: CloverLeaf 2D problem scaling on the KNL — flat DDR4, flat
+//! MCDRAM (OOM > 16 GB), cache mode, cache mode + tiling.
+use ops_oc::bench_support::{bw_point, run_cl2d, Figure, KNL_SIZES_GB};
+use ops_oc::coordinator::Platform;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let mut fig = Figure::new(
+        "Fig 3: CloverLeaf 2D problem scaling on the KNL",
+        "effective GB/s (modelled)",
+    );
+    let series = [
+        ("flat DDR4", Platform::KnlFlatDdr4),
+        ("flat MCDRAM", Platform::KnlFlatMcdram),
+        ("cache", Platform::KnlCache),
+        ("cache tiled", Platform::KnlCacheTiled),
+    ];
+    for (name, p) in series {
+        let s = fig.add_series(name);
+        for gb in KNL_SIZES_GB {
+            fig.push(s, gb, bw_point(run_cl2d(p, 8, 6144, gb, 4, 2)));
+        }
+    }
+    println!("{}", fig.render());
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

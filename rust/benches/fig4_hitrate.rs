@@ -1,0 +1,25 @@
+//! Figure 4: MCDRAM cache hit rate on CloverLeaf 2D, with and without
+//! tiling, as the problem grows past the 16 GB cache.
+use ops_oc::bench_support::{run_cl2d, Figure, KNL_SIZES_GB};
+use ops_oc::coordinator::Platform;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let mut fig = Figure::new(
+        "Fig 4: MCDRAM cache hit rate, CloverLeaf 2D",
+        "hit rate (%)",
+    );
+    for (name, p) in [
+        ("cache", Platform::KnlCache),
+        ("cache tiled", Platform::KnlCacheTiled),
+    ] {
+        let s = fig.add_series(name);
+        for gb in KNL_SIZES_GB {
+            let (m, oom) = run_cl2d(p, 8, 6144, gb, 4, 2);
+            fig.push(s, gb, (!oom).then(|| m.cache_hit_rate() * 100.0));
+        }
+    }
+    println!("{}", fig.render());
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

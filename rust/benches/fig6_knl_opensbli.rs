@@ -1,0 +1,26 @@
+//! Figure 6: OpenSBLI (3D Taylor-Green vortex) problem scaling on the KNL.
+use ops_oc::bench_support::{bw_point, run_sbli_tall, Figure, KNL_SIZES_GB};
+use ops_oc::coordinator::Platform;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let mut fig = Figure::new(
+        "Fig 6: OpenSBLI problem scaling on the KNL",
+        "effective GB/s (modelled)",
+    );
+    let series = [
+        ("flat DDR4", Platform::KnlFlatDdr4),
+        ("flat MCDRAM", Platform::KnlFlatMcdram),
+        ("cache", Platform::KnlCache),
+        ("cache tiled", Platform::KnlCacheTiled),
+    ];
+    for (name, p) in series {
+        let s = fig.add_series(name);
+        for gb in KNL_SIZES_GB {
+            fig.push(s, gb, bw_point(run_sbli_tall(p, 1, gb, 2)));
+        }
+    }
+    println!("{}", fig.render());
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

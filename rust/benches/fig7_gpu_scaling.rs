@@ -1,0 +1,33 @@
+//! Figure 7: problem scaling on the P100 — in-memory baseline (OOM past
+//! 16 GB) vs explicit tiled streaming over PCIe and NVLink, for all
+//! three applications.
+use ops_oc::bench_support::{bw_point, run_cl2d, run_cl3d, run_sbli_tall, Figure, GPU_SIZES_GB};
+use ops_oc::coordinator::Platform;
+use ops_oc::memory::Link;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let platforms = |link| Platform::GpuExplicit { link, cyclic: true, prefetch: true };
+    for app in ["CloverLeaf 2D", "CloverLeaf 3D", "OpenSBLI"] {
+        let mut fig = Figure::new(
+            &format!("Fig 7: {app} problem scaling on the P100"),
+            "effective GB/s (modelled)",
+        );
+        let base = fig.add_series("baseline (resident)");
+        let pcie = fig.add_series("tiled PCIe");
+        let nvl = fig.add_series("tiled NVLink");
+        for gb in GPU_SIZES_GB {
+            let run = |p| match app {
+                "CloverLeaf 2D" => run_cl2d(p, 8, 6144, gb, 4, 0),
+                "CloverLeaf 3D" => run_cl3d(p, [8, 8, 6144], gb, 2, 0),
+                _ => run_sbli_tall(p, 2, gb, 1),
+            };
+            fig.push(base, gb, bw_point(run(Platform::GpuBaseline { link: Link::NvLink })));
+            fig.push(pcie, gb, bw_point(run(platforms(Link::PciE))));
+            fig.push(nvl, gb, bw_point(run(platforms(Link::NvLink))));
+        }
+        println!("{}", fig.render());
+    }
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

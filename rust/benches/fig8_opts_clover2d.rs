@@ -1,0 +1,41 @@
+//! Figure 8: the §4.1 optimisations on CloverLeaf 2D (P100):
+//! NoPrefetch/NoCyclic -> NoPrefetch/Cyclic -> Prefetch/Cyclic, on PCIe
+//! (P-) and NVLink (N-).
+use ops_oc::bench_support::{bw_point, run_cl2d, Figure, GPU_SIZES_GB};
+use ops_oc::coordinator::Platform;
+use ops_oc::memory::Link;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let mut fig = Figure::new(
+        "Fig 8: tiling optimisations, CloverLeaf 2D on the P100",
+        "effective GB/s (modelled)",
+    );
+    for link in [Link::PciE, Link::NvLink] {
+        let tag = if link == Link::PciE { "P" } else { "N" };
+        for (name, cyclic, prefetch) in [
+            ("NoPrefetch NoCyclic", false, false),
+            ("NoPrefetch Cyclic", true, false),
+            ("Prefetch Cyclic", true, true),
+        ] {
+            let s = fig.add_series(&format!("{tag}-{name}"));
+            for gb in GPU_SIZES_GB {
+                fig.push(
+                    s,
+                    gb,
+                    bw_point(run_cl2d(
+                        Platform::GpuExplicit { link, cyclic, prefetch },
+                        8,
+                        6144,
+                        gb,
+                        4,
+                        0,
+                    )),
+                );
+            }
+        }
+    }
+    println!("{}", fig.render());
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,108 @@
+//! Hot-path microbenchmarks for the §Perf pass: the simulator and
+//! planner components that sit on the coordinator's critical path.
+use ops_oc::memory::{AddressMap, CacheSim};
+use ops_oc::ops::kernel::kernel;
+use ops_oc::ops::stencil::shapes;
+use ops_oc::ops::*;
+use ops_oc::exec::{Executor, NativeExecutor};
+use ops_oc::tiling::plan::plan_chain;
+use ops_oc::tiling::dependency::compute_shifts;
+use std::hint::black_box;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: u32, unit_per_iter: f64, unit: &str, mut f: F) {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "{name:<34} {:>10.3} ms/iter   {:>10.1} M{unit}/s",
+        dt * 1e3,
+        unit_per_iter / dt / 1e6
+    );
+}
+
+fn fixture(nds: u32, ny: usize) -> (Vec<Dataset>, Vec<Stencil>, Vec<LoopInst>) {
+    let datasets: Vec<Dataset> = (0..nds)
+        .map(|i| Dataset {
+            id: DatasetId(i),
+            block: BlockId(0),
+            name: format!("d{i}"),
+            size: [16, ny, 1],
+            halo_lo: [2, 2, 0],
+            halo_hi: [2, 2, 0],
+            elem_bytes: 8,
+        })
+        .collect();
+    let stencils = vec![
+        Stencil { id: StencilId(0), name: "pt".into(), points: shapes::point() },
+        Stencil { id: StencilId(1), name: "s1".into(), points: shapes::star2d(1) },
+    ];
+    let chain: Vec<LoopInst> = (0..128)
+        .map(|li| LoopInst {
+            name: format!("l{li}"),
+            block: BlockId(0),
+            range: [(0, 16), (0, ny as isize), (0, 1)],
+            args: vec![
+                Arg::dat(DatasetId(li % nds), StencilId(1), Access::Read),
+                Arg::dat(DatasetId((li + 1) % nds), StencilId(0), Access::Write),
+            ],
+            kernel: kernel(|c| {
+                let v = c.r(0, -1, 0) + c.r(0, 1, 0);
+                c.w(1, 0, 0, v);
+            }),
+            seq: li as u64,
+            bw_efficiency: 1.0,
+        })
+        .collect();
+    (datasets, stencils, chain)
+}
+
+fn main() {
+    println!("== hot-path microbenches ==");
+
+    // 1. cache simulator: granule access throughput
+    let mut sim = CacheSim::new(16 << 30, 1 << 20);
+    let n_granules = 200_000u64;
+    bench("cache_sim.access_range", 20, n_granules as f64, "granule", || {
+        let r = sim.access_range(black_box(0), n_granules * (1 << 20), true, false);
+        black_box(r);
+    });
+
+    // 2. dependency analysis (O(L^2 * args)) on a 128-loop chain
+    let (datasets, stencils, chain) = fixture(25, 4096);
+    bench("compute_shifts(128 loops)", 50, 128.0, "loop", || {
+        black_box(compute_shifts(&chain, &stencils, 1));
+    });
+
+    // 3. full plan construction, 64 tiles
+    bench("plan_chain(128 loops, 64 tiles)", 20, 128.0 * 64.0, "loop-tile", || {
+        black_box(plan_chain(&chain, &datasets, &stencils, 64));
+    });
+
+    // 4. native executor point throughput
+    let mut store = DataStore::new();
+    datasets.iter().for_each(|d| store.alloc(d));
+    let mut reds: Vec<Reduction> = vec![];
+    let mut exec = NativeExecutor::new();
+    let pts = 16.0 * 4096.0 * 8.0;
+    bench("native executor (8 loops)", 10, pts, "point", || {
+        for l in chain.iter().take(8) {
+            exec.run_loop(l, l.range, &datasets, &mut store, &mut reds);
+        }
+    });
+
+    // 5. address-map slab computation
+    let map = AddressMap::new(&datasets, 1 << 20);
+    bench("address_map.slab x128", 1000, 128.0, "slab", || {
+        for l in &chain {
+            for (d, s, _) in l.dat_args() {
+                let slab = map.slab(&datasets[d.0 as usize], &stencils[s.0 as usize], &l.range, 1);
+                black_box(slab);
+            }
+        }
+    });
+}

@@ -1,0 +1,126 @@
+//! Shared kernel helpers for CloverLeaf: reflective halo-strip loops.
+//!
+//! In the original, `update_halo` is an MPI exchange plus physical
+//! boundary conditions; on our single modelled rank it reduces to the
+//! boundary conditions — eight small strip loops (two per edge direction
+//! per field) that mirror interior values into the depth-2 halo,
+//! optionally flipping the sign of the normal velocity component. These
+//! strips also exercise the tiling planner's handling of partial-range
+//! loops (they land in the first/last tiles only).
+
+use crate::ops::kernel::kernel;
+use crate::ops::{Access, Arg, BlockId, Ctx, DatasetId, OpsContext, StencilId};
+
+/// Mirror offset for the low-side halo at logical index `i` (< 0):
+/// cell-centred fields reflect about the face at −½ (`i' = −1−i`),
+/// node-centred fields about node 0 (`i' = −i`).
+#[inline]
+fn mirror_lo(i: isize, node: bool) -> isize {
+    if node {
+        -2 * i // offset to i' = -i
+    } else {
+        -1 - 2 * i // offset to i' = -1-i
+    }
+}
+
+/// Mirror offset for the high-side halo at logical index `i` (≥ size):
+/// `size` is the dataset's interior extent.
+#[inline]
+fn mirror_hi(i: isize, size: isize, node: bool) -> isize {
+    if node {
+        2 * (size - 1) - 2 * i
+    } else {
+        2 * size - 2 * i - 1
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+/// Emit the four halo-strip loops for dataset `d` of interior size
+/// `sx`×`sy`. `st_halo_x`/`st_halo_y` must cover mirror offsets ±4 along
+/// their own direction only — keeping the strips out of the *other*
+/// direction's skew computation.
+pub fn halo_strips(
+    ctx: &mut OpsContext,
+    block: BlockId,
+    name: &str,
+    d: DatasetId,
+    st_halo_x: StencilId,
+    st_halo_y: StencilId,
+    sx: isize,
+    sy: isize,
+    node_x: bool,
+    node_y: bool,
+    flip_x: bool,
+    flip_y: bool,
+) {
+    let sgn_y = if flip_y { -1.0 } else { 1.0 };
+    let sgn_x = if flip_x { -1.0 } else { 1.0 };
+
+    // bottom / top strips (write halo rows, read mirrored interior rows)
+    ctx.par_loop(
+        &format!("{name}_bot"),
+        block,
+        [(-2, sx + 2), (-2, 0), (0, 1)],
+        kernel(move |c: &mut Ctx| {
+            let [_, y, _] = c.idx();
+            let v = c.r(0, 0, mirror_lo(y, node_y));
+            c.w(0, 0, 0, sgn_y * v);
+        }),
+        vec![Arg::dat(d, st_halo_y, Access::ReadWrite)],
+    );
+    ctx.par_loop(
+        &format!("{name}_top"),
+        block,
+        [(-2, sx + 2), (sy, sy + 2), (0, 1)],
+        kernel(move |c: &mut Ctx| {
+            let [_, y, _] = c.idx();
+            let v = c.r(0, 0, mirror_hi(y, sy, node_y));
+            c.w(0, 0, 0, sgn_y * v);
+        }),
+        vec![Arg::dat(d, st_halo_y, Access::ReadWrite)],
+    );
+    // left / right strips (full padded y so corners are refreshed too)
+    ctx.par_loop(
+        &format!("{name}_left"),
+        block,
+        [(-2, 0), (-2, sy + 2), (0, 1)],
+        kernel(move |c: &mut Ctx| {
+            let [x, _, _] = c.idx();
+            let v = c.r(0, mirror_lo(x, node_x), 0);
+            c.w(0, 0, 0, sgn_x * v);
+        }),
+        vec![Arg::dat(d, st_halo_x, Access::ReadWrite)],
+    );
+    ctx.par_loop(
+        &format!("{name}_right"),
+        block,
+        [(sx, sx + 2), (-2, sy + 2), (0, 1)],
+        kernel(move |c: &mut Ctx| {
+            let [x, _, _] = c.idx();
+            let v = c.r(0, mirror_hi(x, sx, node_x), 0);
+            c.w(0, 0, 0, sgn_x * v);
+        }),
+        vec![Arg::dat(d, st_halo_x, Access::ReadWrite)],
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mirror_formulas() {
+        // cells: -1 -> 0, -2 -> 1
+        assert_eq!(-1 + mirror_lo(-1, false), 0);
+        assert_eq!(-2 + mirror_lo(-2, false), 1);
+        // nodes: -1 -> 1, -2 -> 2
+        assert_eq!(-1 + mirror_lo(-1, true), 1);
+        assert_eq!(-2 + mirror_lo(-2, true), 2);
+        // cells hi (size 8): 8 -> 7, 9 -> 6
+        assert_eq!(8 + mirror_hi(8, 8, false), 7);
+        assert_eq!(9 + mirror_hi(9, 8, false), 6);
+        // nodes hi (size 9, last interior 8): 9 -> 7, 10 -> 6
+        assert_eq!(9 + mirror_hi(9, 9, true), 7);
+        assert_eq!(10 + mirror_hi(10, 9, true), 6);
+    }
+}

@@ -1,0 +1,1224 @@
+//! CloverLeaf 2D: the Mantevo hydro mini-app (compressible Euler on a
+//! staggered Cartesian grid, explicit second-order predictor–corrector
+//! Lagrangian step + directionally-split van-Leer advection), expressed
+//! as OPS-style parallel loops.
+//!
+//! Faithful to the structure the paper measures: **25 datasets** per
+//! gridpoint (7 cell-centred state fields, 4 node-centred velocities,
+//! 4 face fluxes, 7 work arrays, 3 geometry fields), multi-point
+//! staggered stencils, and one long loop chain per timestep terminated by
+//! the `calc_dt` reduction (the OPS trigger point). Simplifications vs
+//! the original (documented in DESIGN.md): uniform grid spacing (the 1D
+//! `celldx/celldy` tables become loop constants) and reflective halo
+//! loops standing in for MPI halo exchange + boundary conditions.
+
+pub mod kernels;
+
+use crate::ops::kernel::kernel;
+use crate::ops::stencil::shapes;
+use crate::ops::{Access, Arg, BlockId, DatasetId, OpsContext, RedOp, ReductionId, StencilId};
+
+const G_SMALL: f64 = 1.0e-16;
+const G_BIG: f64 = 1.0e21;
+
+/// Simulation state: all handles + run parameters.
+pub struct CloverLeaf2D {
+    pub block: BlockId,
+    pub nx: usize,
+    pub ny: usize,
+    pub dx: f64,
+    pub dy: f64,
+    pub gamma: f64,
+    pub dtinit: f64,
+    pub dt: f64,
+
+    // cell-centred fields
+    pub density0: DatasetId,
+    pub density1: DatasetId,
+    pub energy0: DatasetId,
+    pub energy1: DatasetId,
+    pub pressure: DatasetId,
+    pub viscosity: DatasetId,
+    pub soundspeed: DatasetId,
+    // node-centred velocities
+    pub xvel0: DatasetId,
+    pub xvel1: DatasetId,
+    pub yvel0: DatasetId,
+    pub yvel1: DatasetId,
+    // face fluxes
+    pub vol_flux_x: DatasetId,
+    pub vol_flux_y: DatasetId,
+    pub mass_flux_x: DatasetId,
+    pub mass_flux_y: DatasetId,
+    // work arrays (named after their primary roles)
+    pub work1: DatasetId, // pre_vol
+    pub work2: DatasetId, // post_vol
+    pub work3: DatasetId, // node_flux
+    pub work4: DatasetId, // node_mass_post
+    pub work5: DatasetId, // node_mass_pre
+    pub work6: DatasetId, // mom_flux
+    pub work7: DatasetId, // ener_flux
+    // geometry (2D fields, as in the original)
+    pub volume: DatasetId,
+    pub xarea: DatasetId,
+    pub yarea: DatasetId,
+
+    // stencils
+    s_pt: StencilId,
+    s_cell_to_node: StencilId, // node reads cells at (-1..0)^2
+    s_node_to_cell: StencilId, // cell reads nodes at (0..1)^2
+    s_xp1: StencilId,          // (0,0),(1,0)
+    s_yp1: StencilId,          // (0,0),(0,1)
+    s_xm1: StencilId,          // (-1,0),(0,0)
+    s_ym1: StencilId,          // (0,-1),(0,0)
+    s_star: StencilId,
+    s_adv_x: StencilId,   // (-2..1, 0)
+    s_adv_y: StencilId,   // (0, -2..1)
+    s_mom_x: StencilId,   // (-1..2, 0)
+    s_mom_y: StencilId,   // (0, -1..2)
+    s_nflux_x: StencilId, // (0,-1),(0,0),(1,-1),(1,0)
+    s_nflux_y: StencilId, // (-1,0),(0,0),(-1,1),(0,1)
+    s_halo_x: StencilId, // (-4..4, 0): x-edge mirror reads
+    s_halo_y: StencilId, // (0, -4..4): y-edge mirror reads
+
+    // reductions
+    pub r_dt: ReductionId,
+    pub r_vol: ReductionId,
+    pub r_mass: ReductionId,
+    pub r_ie: ReductionId,
+    pub r_ke: ReductionId,
+    pub r_press: ReductionId,
+
+    /// Sweep alternation (xy / yx), as in the original.
+    step_parity: bool,
+}
+
+/// Result of `field_summary` — the paper's per-app sanity table.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FieldSummary {
+    pub volume: f64,
+    pub mass: f64,
+    pub internal_energy: f64,
+    pub kinetic_energy: f64,
+    pub pressure: f64,
+}
+
+/// Van-Leer-style limited difference used by the advection kernels.
+#[inline]
+fn limited(diffuw: f64, diffdw: f64, sigma: f64) -> f64 {
+    if diffuw * diffdw > 0.0 {
+        let auw = diffuw.abs();
+        let adw = diffdw.abs();
+        let wind = if diffdw <= 0.0 { -1.0 } else { 1.0 };
+        let one_by_six = 1.0 / 6.0;
+        (1.0 - sigma)
+            * wind
+            * (one_by_six * ((1.0 + sigma) * auw + (2.0 - sigma) * adw))
+                .min(auw)
+                .min(adw)
+    } else {
+        0.0
+    }
+}
+
+impl CloverLeaf2D {
+    /// Declare all datasets/stencils. `model_scale` multiplies modelled
+    /// bytes per element so a small grid can stand in for a paper-sized
+    /// problem inside the memory simulators.
+    pub fn new(ctx: &mut OpsContext, nx: usize, ny: usize, model_scale: u64) -> Self {
+        ctx.set_model_elem_bytes(8 * model_scale.max(1));
+        let block = ctx.decl_block("clover", [nx, ny, 1]);
+        let h = [2, 2, 0];
+        let cell = [nx, ny, 1];
+        let node = [nx + 1, ny + 1, 1];
+        let xface = [nx + 1, ny, 1];
+        let yface = [nx, ny + 1, 1];
+
+        let dat =
+            |ctx: &mut OpsContext, n: &str, s: [usize; 3]| ctx.decl_dat(block, n, s, h, h);
+
+        let density0 = dat(ctx, "density0", cell);
+        let density1 = dat(ctx, "density1", cell);
+        let energy0 = dat(ctx, "energy0", cell);
+        let energy1 = dat(ctx, "energy1", cell);
+        let pressure = dat(ctx, "pressure", cell);
+        let viscosity = dat(ctx, "viscosity", cell);
+        let soundspeed = dat(ctx, "soundspeed", cell);
+        let xvel0 = dat(ctx, "xvel0", node);
+        let xvel1 = dat(ctx, "xvel1", node);
+        let yvel0 = dat(ctx, "yvel0", node);
+        let yvel1 = dat(ctx, "yvel1", node);
+        let vol_flux_x = dat(ctx, "vol_flux_x", xface);
+        let vol_flux_y = dat(ctx, "vol_flux_y", yface);
+        let mass_flux_x = dat(ctx, "mass_flux_x", xface);
+        let mass_flux_y = dat(ctx, "mass_flux_y", yface);
+        let work1 = dat(ctx, "work1", node);
+        let work2 = dat(ctx, "work2", node);
+        let work3 = dat(ctx, "work3", node);
+        let work4 = dat(ctx, "work4", node);
+        let work5 = dat(ctx, "work5", node);
+        let work6 = dat(ctx, "work6", node);
+        let work7 = dat(ctx, "work7", node);
+        let volume = dat(ctx, "volume", cell);
+        let xarea = dat(ctx, "xarea", xface);
+        let yarea = dat(ctx, "yarea", yface);
+
+        let s_pt = ctx.decl_stencil("s2d_00", shapes::point());
+        let s_cell_to_node = ctx.decl_stencil(
+            "cell_to_node",
+            shapes::offsets2d(&[(0, 0), (-1, 0), (0, -1), (-1, -1)]),
+        );
+        let s_node_to_cell = ctx.decl_stencil(
+            "node_to_cell",
+            shapes::offsets2d(&[(0, 0), (1, 0), (0, 1), (1, 1)]),
+        );
+        let s_xp1 = ctx.decl_stencil("xp1", shapes::offsets2d(&[(0, 0), (1, 0)]));
+        let s_yp1 = ctx.decl_stencil("yp1", shapes::offsets2d(&[(0, 0), (0, 1)]));
+        let s_xm1 = ctx.decl_stencil("xm1", shapes::offsets2d(&[(-1, 0), (0, 0)]));
+        let s_ym1 = ctx.decl_stencil("ym1", shapes::offsets2d(&[(0, -1), (0, 0)]));
+        let s_star = ctx.decl_stencil("star1", shapes::star2d(1));
+        let s_adv_x =
+            ctx.decl_stencil("adv_x", shapes::offsets2d(&[(-2, 0), (-1, 0), (0, 0), (1, 0)]));
+        let s_adv_y =
+            ctx.decl_stencil("adv_y", shapes::offsets2d(&[(0, -2), (0, -1), (0, 0), (0, 1)]));
+        let s_mom_x =
+            ctx.decl_stencil("mom_x", shapes::offsets2d(&[(-1, 0), (0, 0), (1, 0), (2, 0)]));
+        let s_mom_y =
+            ctx.decl_stencil("mom_y", shapes::offsets2d(&[(0, -1), (0, 0), (0, 1), (0, 2)]));
+        let s_nflux_x = ctx.decl_stencil(
+            "nflux_x",
+            shapes::offsets2d(&[(0, -1), (0, 0), (1, -1), (1, 0)]),
+        );
+        let s_nflux_y = ctx.decl_stencil(
+            "nflux_y",
+            shapes::offsets2d(&[(-1, 0), (0, 0), (-1, 1), (0, 1)]),
+        );
+        let s_halo_x = ctx.decl_stencil(
+            "halo_mirror_x",
+            (-4..=4).map(|k| [k, 0, 0]).collect(),
+        );
+        let s_halo_y = ctx.decl_stencil(
+            "halo_mirror_y",
+            (-4..=4).map(|k| [0, k, 0]).collect(),
+        );
+
+        let r_dt = ctx.decl_reduction("dt", RedOp::Min);
+        let r_vol = ctx.decl_reduction("vol", RedOp::Sum);
+        let r_mass = ctx.decl_reduction("mass", RedOp::Sum);
+        let r_ie = ctx.decl_reduction("ie", RedOp::Sum);
+        let r_ke = ctx.decl_reduction("ke", RedOp::Sum);
+        let r_press = ctx.decl_reduction("press", RedOp::Sum);
+
+        CloverLeaf2D {
+            block,
+            nx,
+            ny,
+            dx: 10.0 / nx as f64,
+            dy: 10.0 / ny as f64,
+            gamma: 1.4,
+            dtinit: 0.04,
+            dt: 0.04,
+            density0,
+            density1,
+            energy0,
+            energy1,
+            pressure,
+            viscosity,
+            soundspeed,
+            xvel0,
+            xvel1,
+            yvel0,
+            yvel1,
+            vol_flux_x,
+            vol_flux_y,
+            mass_flux_x,
+            mass_flux_y,
+            work1,
+            work2,
+            work3,
+            work4,
+            work5,
+            work6,
+            work7,
+            volume,
+            xarea,
+            yarea,
+            s_pt,
+            s_cell_to_node,
+            s_node_to_cell,
+            s_xp1,
+            s_yp1,
+            s_xm1,
+            s_ym1,
+            s_star,
+            s_adv_x,
+            s_adv_y,
+            s_mom_x,
+            s_mom_y,
+            s_nflux_x,
+            s_nflux_y,
+            s_halo_x,
+            s_halo_y,
+            r_dt,
+            r_vol,
+            r_mass,
+            r_ie,
+            r_ke,
+            r_press,
+            step_parity: false,
+        }
+    }
+
+    fn cells(&self) -> crate::ops::Range3 {
+        [(0, self.nx as isize), (0, self.ny as isize), (0, 1)]
+    }
+
+    fn cells_h(&self, d: isize) -> crate::ops::Range3 {
+        [
+            (-d, self.nx as isize + d),
+            (-d, self.ny as isize + d),
+            (0, 1),
+        ]
+    }
+
+    fn nodes(&self) -> crate::ops::Range3 {
+        [(0, self.nx as isize + 1), (0, self.ny as isize + 1), (0, 1)]
+    }
+
+    // ---------------------------------------------------------------- init
+
+    /// Two-state shock problem (the standard clover.in setup): ambient
+    /// (ρ=0.2, e=1.0) with a dense energetic box in the lower-left corner
+    /// (ρ=1.0, e=2.5). Also fills the geometry fields.
+    pub fn initialise(&self, ctx: &mut OpsContext) {
+        let (dx, dy) = (self.dx, self.dy);
+        let (nx, ny) = (self.nx as isize, self.ny as isize);
+        ctx.par_loop(
+            "cl2d_init_geom",
+            self.block,
+            self.cells_h(2),
+            kernel(move |c| {
+                c.w(0, 0, 0, dx * dy);
+                c.w(1, 0, 0, dy);
+                c.w(2, 0, 0, dx);
+            }),
+            vec![
+                Arg::dat(self.volume, self.s_pt, Access::Write),
+                Arg::dat(self.xarea, self.s_pt, Access::Write),
+                Arg::dat(self.yarea, self.s_pt, Access::Write),
+            ],
+        );
+        let (bx, by) = (nx / 2, ny / 2);
+        ctx.par_loop(
+            "cl2d_init_state",
+            self.block,
+            self.cells_h(2),
+            kernel(move |c| {
+                let [x, y, _] = c.idx();
+                let in_box = x >= 0 && x < bx && y >= 0 && y < by;
+                if in_box {
+                    c.w(0, 0, 0, 1.0);
+                    c.w(1, 0, 0, 2.5);
+                } else {
+                    c.w(0, 0, 0, 0.2);
+                    c.w(1, 0, 0, 1.0);
+                }
+            }),
+            vec![
+                Arg::dat(self.density0, self.s_pt, Access::Write),
+                Arg::dat(self.energy0, self.s_pt, Access::Write),
+            ],
+        );
+        ctx.par_loop(
+            "cl2d_init_vel",
+            self.block,
+            [(-2, nx + 3), (-2, ny + 3), (0, 1)],
+            kernel(|c| {
+                c.w(0, 0, 0, 0.0);
+                c.w(1, 0, 0, 0.0);
+                c.w(2, 0, 0, 0.0);
+                c.w(3, 0, 0, 0.0);
+            }),
+            vec![
+                Arg::dat(self.xvel0, self.s_pt, Access::Write),
+                Arg::dat(self.yvel0, self.s_pt, Access::Write),
+                Arg::dat(self.xvel1, self.s_pt, Access::Write),
+                Arg::dat(self.yvel1, self.s_pt, Access::Write),
+            ],
+        );
+        self.ideal_gas(ctx, false);
+        self.halo_cell(ctx, "halo_pressure", self.pressure);
+        self.halo_cell(ctx, "halo_density0", self.density0);
+        self.halo_cell(ctx, "halo_energy0", self.energy0);
+    }
+
+    // ------------------------------------------------------------ kernels
+
+    /// Equation of state: pressure + soundspeed from density/energy.
+    pub fn ideal_gas(&self, ctx: &mut OpsContext, predict: bool) {
+        let gamma = self.gamma;
+        let (den, ener) = if predict {
+            (self.density1, self.energy1)
+        } else {
+            (self.density0, self.energy0)
+        };
+        ctx.par_loop(
+            "cl2d_ideal_gas",
+            self.block,
+            self.cells(),
+            kernel(move |c| {
+                let d = c.r(0, 0, 0).max(G_SMALL);
+                let e = c.r(1, 0, 0);
+                let v = 1.0 / d;
+                let p = (gamma - 1.0) * d * e;
+                let pe = (gamma - 1.0) * d;
+                let pv = -d * p * v; // dp/dv along isochor, as in the original
+                let ss2 = v * v * (p * pe - pv);
+                c.w(2, 0, 0, p);
+                c.w(3, 0, 0, ss2.max(G_SMALL).sqrt());
+            }),
+            vec![
+                Arg::dat(den, self.s_pt, Access::Read),
+                Arg::dat(ener, self.s_pt, Access::Read),
+                Arg::dat(self.pressure, self.s_pt, Access::Write),
+                Arg::dat(self.soundspeed, self.s_pt, Access::Write),
+            ],
+        );
+    }
+
+    /// Tensor artificial viscosity (Wilkins-style, as in CloverLeaf).
+    pub fn viscosity_kernel(&self, ctx: &mut OpsContext) {
+        let (dx, dy) = (self.dx, self.dy);
+        ctx.par_loop(
+            "cl2d_viscosity",
+            self.block,
+            self.cells(),
+            kernel(move |c| {
+                let ugrad = 0.5 * ((c.r(1, 1, 0) + c.r(1, 1, 1)) - (c.r(1, 0, 0) + c.r(1, 0, 1)));
+                let vgrad = 0.5 * ((c.r(2, 0, 1) + c.r(2, 1, 1)) - (c.r(2, 0, 0) + c.r(2, 1, 0)));
+                let div = dy * ugrad + dx * vgrad;
+                let strain2 = 0.5 * ((c.r(1, 0, 1) + c.r(1, 1, 1)) - (c.r(1, 0, 0) + c.r(1, 1, 0)))
+                    / dy
+                    + 0.5 * ((c.r(2, 1, 0) + c.r(2, 1, 1)) - (c.r(2, 0, 0) + c.r(2, 0, 1))) / dx;
+                let pgradx = (c.r(0, 1, 0) - c.r(0, -1, 0)) / (2.0 * dx);
+                let pgrady = (c.r(0, 0, 1) - c.r(0, 0, -1)) / (2.0 * dy);
+                let pgradx2 = pgradx * pgradx;
+                let pgrady2 = pgrady * pgrady;
+                let limiter = ((0.5 * ugrad / dx) * pgradx2
+                    + (0.5 * vgrad / dy) * pgrady2
+                    + strain2 * pgradx * pgrady)
+                    / (pgradx2 + pgrady2).max(G_SMALL);
+                if limiter > 0.0 || div >= 0.0 {
+                    c.w(4, 0, 0, 0.0);
+                } else {
+                    let pgx = pgradx.abs().max(G_SMALL);
+                    let pgy = pgrady.abs().max(G_SMALL);
+                    let pgrad = (pgradx2 + pgrady2).sqrt();
+                    let xgrad = (dx * pgrad / pgx).abs();
+                    let ygrad = (dy * pgrad / pgy).abs();
+                    let grad = xgrad.min(ygrad);
+                    let grad2 = grad * grad;
+                    c.w(4, 0, 0, 2.0 * c.r(3, 0, 0) * grad2 * limiter * limiter);
+                }
+            }),
+            vec![
+                Arg::dat(self.pressure, self.s_star, Access::Read),
+                Arg::dat(self.xvel0, self.s_node_to_cell, Access::Read),
+                Arg::dat(self.yvel0, self.s_node_to_cell, Access::Read),
+                Arg::dat(self.density0, self.s_pt, Access::Read),
+                Arg::dat(self.viscosity, self.s_pt, Access::Write),
+            ],
+        );
+    }
+
+    /// CFL timestep: min over cells of sound/viscous/velocity limits.
+    /// Returns the chosen dt — the chain trigger point.
+    pub fn calc_dt(&mut self, ctx: &mut OpsContext) -> f64 {
+        let (dx, dy) = (self.dx, self.dy);
+        ctx.par_loop(
+            "cl2d_calc_dt",
+            self.block,
+            self.cells(),
+            kernel(move |c| {
+                let cc = c.r(1, 0, 0) * c.r(1, 0, 0)
+                    + 2.0 * c.r(2, 0, 0) / c.r(0, 0, 0).max(G_SMALL);
+                let cc = cc.max(G_SMALL).sqrt();
+                let dtct = 0.7 * dx.min(dy) / cc;
+                let mut du: f64 = G_SMALL;
+                let mut dv: f64 = G_SMALL;
+                for &(ox, oy) in &[(0, 0), (1, 0), (0, 1), (1, 1)] {
+                    du = du.max(c.r(3, ox, oy).abs());
+                    dv = dv.max(c.r(4, ox, oy).abs());
+                }
+                let dtut = 0.5 * dx / du;
+                let dtvt = 0.5 * dy / dv;
+                let div = (c.r(3, 1, 0) + c.r(3, 1, 1) - c.r(3, 0, 0) - c.r(3, 0, 1)) / dx
+                    + (c.r(4, 0, 1) + c.r(4, 1, 1) - c.r(4, 0, 0) - c.r(4, 1, 0)) / dy;
+                let dtdivt = if div < -G_SMALL { -0.5 / div } else { G_BIG };
+                c.red_min(0, dtct.min(dtut).min(dtvt).min(dtdivt).min(G_BIG));
+            }),
+            vec![
+                Arg::dat(self.density0, self.s_pt, Access::Read),
+                Arg::dat(self.soundspeed, self.s_pt, Access::Read),
+                Arg::dat(self.viscosity, self.s_pt, Access::Read),
+                Arg::dat(self.xvel0, self.s_node_to_cell, Access::Read),
+                Arg::dat(self.yvel0, self.s_node_to_cell, Access::Read),
+                Arg::GblRed {
+                    red: self.r_dt,
+                    op: RedOp::Min,
+                },
+            ],
+        );
+        let dt_cand = ctx.reduction_result(self.r_dt);
+        self.dt = dt_cand.min(self.dt * 1.5).min(self.dtinit);
+        self.dt
+    }
+
+    /// PdV: volume-change update of energy and density. The predictor
+    /// uses `xvel0` only with dt/2; the corrector the vel0+vel1 average
+    /// with the full dt — exactly the original's two branches.
+    pub fn pdv(&self, ctx: &mut OpsContext, predict: bool) {
+        let dt = self.dt;
+        ctx.par_loop(
+            if predict { "cl2d_pdv_predict" } else { "cl2d_pdv" },
+            self.block,
+            self.cells(),
+            kernel(move |c| {
+                let (lf, rf, bf, tf) = if predict {
+                    let frac = 0.25 * dt * 0.5;
+                    (
+                        c.r(5, 0, 0) * frac * 2.0 * (c.r(1, 0, 0) + c.r(1, 0, 1)),
+                        c.r(5, 1, 0) * frac * 2.0 * (c.r(1, 1, 0) + c.r(1, 1, 1)),
+                        c.r(6, 0, 0) * frac * 2.0 * (c.r(3, 0, 0) + c.r(3, 1, 0)),
+                        c.r(6, 0, 1) * frac * 2.0 * (c.r(3, 0, 1) + c.r(3, 1, 1)),
+                    )
+                } else {
+                    let frac = 0.25 * dt;
+                    (
+                        c.r(5, 0, 0)
+                            * frac
+                            * (c.r(1, 0, 0) + c.r(1, 0, 1) + c.r(2, 0, 0) + c.r(2, 0, 1)),
+                        c.r(5, 1, 0)
+                            * frac
+                            * (c.r(1, 1, 0) + c.r(1, 1, 1) + c.r(2, 1, 0) + c.r(2, 1, 1)),
+                        c.r(6, 0, 0)
+                            * frac
+                            * (c.r(3, 0, 0) + c.r(3, 1, 0) + c.r(4, 0, 0) + c.r(4, 1, 0)),
+                        c.r(6, 0, 1)
+                            * frac
+                            * (c.r(3, 0, 1) + c.r(3, 1, 1) + c.r(4, 0, 1) + c.r(4, 1, 1)),
+                    )
+                };
+                let total_flux = rf - lf + tf - bf;
+                let vol = c.r(7, 0, 0);
+                let volume_change = vol / (vol + total_flux).max(G_SMALL);
+                let d0 = c.r(0, 0, 0);
+                let recip = 1.0 / (d0 * vol).max(G_SMALL);
+                let e1 = c.r(8, 0, 0) - (c.r(9, 0, 0) + c.r(10, 0, 0)) * total_flux * recip;
+                c.w(11, 0, 0, e1);
+                c.w(12, 0, 0, d0 * volume_change);
+            }),
+            vec![
+                Arg::dat(self.density0, self.s_pt, Access::Read),
+                Arg::dat(self.xvel0, self.s_node_to_cell, Access::Read),
+                Arg::dat(self.xvel1, self.s_node_to_cell, Access::Read),
+                Arg::dat(self.yvel0, self.s_node_to_cell, Access::Read),
+                Arg::dat(self.yvel1, self.s_node_to_cell, Access::Read),
+                Arg::dat(self.xarea, self.s_yp1, Access::Read),
+                Arg::dat(self.yarea, self.s_xp1, Access::Read),
+                Arg::dat(self.volume, self.s_pt, Access::Read),
+                Arg::dat(self.energy0, self.s_pt, Access::Read),
+                Arg::dat(self.pressure, self.s_pt, Access::Read),
+                Arg::dat(self.viscosity, self.s_pt, Access::Read),
+                Arg::dat(self.energy1, self.s_pt, Access::Write),
+                Arg::dat(self.density1, self.s_pt, Access::Write),
+            ],
+        );
+    }
+
+    /// Revert: discard the predictor state.
+    pub fn revert(&self, ctx: &mut OpsContext) {
+        ctx.par_loop(
+            "cl2d_revert",
+            self.block,
+            self.cells(),
+            kernel(|c| {
+                let d = c.r(0, 0, 0);
+                let e = c.r(1, 0, 0);
+                c.w(2, 0, 0, d);
+                c.w(3, 0, 0, e);
+            }),
+            vec![
+                Arg::dat(self.density0, self.s_pt, Access::Read),
+                Arg::dat(self.energy0, self.s_pt, Access::Read),
+                Arg::dat(self.density1, self.s_pt, Access::Write),
+                Arg::dat(self.energy1, self.s_pt, Access::Write),
+            ],
+        );
+    }
+
+    /// Accelerate: nodal momentum update from pressure + viscosity
+    /// gradients.
+    pub fn accelerate(&self, ctx: &mut OpsContext) {
+        let dt = self.dt;
+        let (dx, dy) = (self.dx, self.dy);
+        ctx.par_loop(
+            "cl2d_accelerate",
+            self.block,
+            self.nodes(),
+            kernel(move |c| {
+                let vol = dx * dy;
+                let nodal_mass = 0.25
+                    * (c.r(0, -1, -1) + c.r(0, 0, -1) + c.r(0, 0, 0) + c.r(0, -1, 0))
+                    * vol;
+                let sbm = 0.25 * dt / nodal_mass.max(G_SMALL);
+                let dpx = (c.r(1, 0, 0) - c.r(1, -1, 0)) + (c.r(1, 0, -1) - c.r(1, -1, -1));
+                let dvx = (c.r(2, 0, 0) - c.r(2, -1, 0)) + (c.r(2, 0, -1) - c.r(2, -1, -1));
+                let dpy = (c.r(1, 0, 0) - c.r(1, 0, -1)) + (c.r(1, -1, 0) - c.r(1, -1, -1));
+                let dvy = (c.r(2, 0, 0) - c.r(2, 0, -1)) + (c.r(2, -1, 0) - c.r(2, -1, -1));
+                let xv = c.r(3, 0, 0) - sbm * dy * (dpx + dvx);
+                let yv = c.r(4, 0, 0) - sbm * dx * (dpy + dvy);
+                c.w(5, 0, 0, xv);
+                c.w(6, 0, 0, yv);
+            }),
+            vec![
+                Arg::dat(self.density0, self.s_cell_to_node, Access::Read),
+                Arg::dat(self.pressure, self.s_cell_to_node, Access::Read),
+                Arg::dat(self.viscosity, self.s_cell_to_node, Access::Read),
+                Arg::dat(self.xvel0, self.s_pt, Access::Read),
+                Arg::dat(self.yvel0, self.s_pt, Access::Read),
+                Arg::dat(self.xvel1, self.s_pt, Access::Write),
+                Arg::dat(self.yvel1, self.s_pt, Access::Write),
+            ],
+        );
+    }
+
+    /// Face volume fluxes from the time-averaged velocities.
+    pub fn flux_calc(&self, ctx: &mut OpsContext) {
+        let dt = self.dt;
+        ctx.par_loop(
+            "cl2d_flux_calc_x",
+            self.block,
+            [(0, self.nx as isize + 1), (0, self.ny as isize), (0, 1)],
+            kernel(move |c| {
+                let f = 0.25
+                    * dt
+                    * c.r(0, 0, 0)
+                    * (c.r(1, 0, 0) + c.r(1, 0, 1) + c.r(2, 0, 0) + c.r(2, 0, 1));
+                c.w(3, 0, 0, f);
+            }),
+            vec![
+                Arg::dat(self.xarea, self.s_pt, Access::Read),
+                Arg::dat(self.xvel0, self.s_yp1, Access::Read),
+                Arg::dat(self.xvel1, self.s_yp1, Access::Read),
+                Arg::dat(self.vol_flux_x, self.s_pt, Access::Write),
+            ],
+        );
+        ctx.par_loop(
+            "cl2d_flux_calc_y",
+            self.block,
+            [(0, self.nx as isize), (0, self.ny as isize + 1), (0, 1)],
+            kernel(move |c| {
+                let f = 0.25
+                    * dt
+                    * c.r(0, 0, 0)
+                    * (c.r(1, 0, 0) + c.r(1, 1, 0) + c.r(2, 0, 0) + c.r(2, 1, 0));
+                c.w(3, 0, 0, f);
+            }),
+            vec![
+                Arg::dat(self.yarea, self.s_pt, Access::Read),
+                Arg::dat(self.yvel0, self.s_xp1, Access::Read),
+                Arg::dat(self.yvel1, self.s_xp1, Access::Read),
+                Arg::dat(self.vol_flux_y, self.s_pt, Access::Write),
+            ],
+        );
+    }
+
+    /// Cell-centred advection (density + energy), one direction:
+    /// pre/post volumes → limited upwind fluxes → conservative update.
+    pub fn advec_cell(&self, ctx: &mut OpsContext, xdir: bool, first_sweep: bool) {
+        let (vol_flux, mass_flux) = if xdir {
+            (self.vol_flux_x, self.mass_flux_x)
+        } else {
+            (self.vol_flux_y, self.mass_flux_y)
+        };
+
+        // pass 1: pre/post volumes into work1/work2
+        {
+            let fs = first_sweep;
+            let xd = xdir;
+            ctx.par_loop(
+                if xdir { "cl2d_advec_cell_x_pre" } else { "cl2d_advec_cell_y_pre" },
+                self.block,
+                self.cells_h(2),
+                kernel(move |c| {
+                    let vol = c.r(0, 0, 0);
+                    let dfx = c.r(1, 1, 0) - c.r(1, 0, 0);
+                    let dfy = c.r(2, 0, 1) - c.r(2, 0, 0);
+                    let (pre, post) = if fs {
+                        let pre = vol + dfx + dfy;
+                        let post = pre - if xd { dfx } else { dfy };
+                        (pre, post)
+                    } else {
+                        let pre = vol + if xd { dfx } else { dfy };
+                        (pre, vol)
+                    };
+                    c.w(3, 0, 0, pre);
+                    c.w(4, 0, 0, post);
+                }),
+                vec![
+                    Arg::dat(self.volume, self.s_pt, Access::Read),
+                    Arg::dat(self.vol_flux_x, self.s_xp1, Access::Read),
+                    Arg::dat(self.vol_flux_y, self.s_yp1, Access::Read),
+                    Arg::dat(self.work1, self.s_pt, Access::Write),
+                    Arg::dat(self.work2, self.s_pt, Access::Write),
+                ],
+            );
+        }
+
+        // pass 2: donor-cell + van Leer limited mass & energy fluxes
+        {
+            let range = if xdir {
+                [(0, self.nx as isize + 1), (0, self.ny as isize), (0, 1)]
+            } else {
+                [(0, self.nx as isize), (0, self.ny as isize + 1), (0, 1)]
+            };
+            let xd = xdir;
+            let adv_st = if xdir { self.s_adv_x } else { self.s_adv_y };
+            ctx.par_loop(
+                if xdir { "cl2d_advec_cell_x_flux" } else { "cl2d_advec_cell_y_flux" },
+                self.block,
+                range,
+                kernel(move |c| {
+                    let o = |k: isize| if xd { (k, 0) } else { (0, k) };
+                    let vf = c.r(0, 0, 0);
+                    let (upwind, donor, downwind): (isize, isize, isize) = if vf > 0.0 {
+                        (-2, -1, 0)
+                    } else {
+                        (1, 0, -1)
+                    };
+                    let (ux, uy) = o(upwind);
+                    let (dx_, dy_) = o(donor);
+                    let (wx, wy) = o(downwind);
+                    let pre_donor = c.r(1, dx_, dy_).max(G_SMALL);
+                    let sigmat = vf.abs() / pre_donor;
+                    let den_d = c.r(2, dx_, dy_);
+                    let lim_d = limited(den_d - c.r(2, ux, uy), c.r(2, wx, wy) - den_d, sigmat);
+                    let mf = vf * (den_d + lim_d);
+                    c.w(4, 0, 0, mf);
+                    let sigmam = mf.abs() / (den_d * pre_donor).max(G_SMALL);
+                    let en_d = c.r(3, dx_, dy_);
+                    let lim_e = limited(en_d - c.r(3, ux, uy), c.r(3, wx, wy) - en_d, sigmam);
+                    c.w(5, 0, 0, mf * (en_d + lim_e));
+                }),
+                vec![
+                    Arg::dat(vol_flux, self.s_pt, Access::Read),
+                    Arg::dat(self.work1, adv_st, Access::Read),
+                    Arg::dat(self.density1, adv_st, Access::Read),
+                    Arg::dat(self.energy1, adv_st, Access::Read),
+                    Arg::dat(mass_flux, self.s_pt, Access::Write),
+                    Arg::dat(self.work7, self.s_pt, Access::Write),
+                ],
+            );
+        }
+
+        // pass 3: conservative update of density1/energy1
+        {
+            let xd = xdir;
+            let st1 = if xdir { self.s_xp1 } else { self.s_yp1 };
+            ctx.par_loop(
+                if xdir { "cl2d_advec_cell_x_upd" } else { "cl2d_advec_cell_y_upd" },
+                self.block,
+                self.cells(),
+                kernel(move |c| {
+                    let o = |k: isize| if xd { (k, 0) } else { (0, k) };
+                    let (ox, oy) = o(1);
+                    let pre_vol = c.r(0, 0, 0);
+                    let post_vol = c.r(1, 0, 0);
+                    let den = c.r(2, 0, 0);
+                    let en = c.r(3, 0, 0);
+                    let pre_mass = den * pre_vol;
+                    let post_mass = pre_mass + c.r(4, 0, 0) - c.r(4, ox, oy);
+                    let post_en = (en * pre_mass + c.r(5, 0, 0) - c.r(5, ox, oy))
+                        / post_mass.max(G_SMALL);
+                    c.w(2, 0, 0, post_mass / post_vol.max(G_SMALL));
+                    c.w(3, 0, 0, post_en);
+                }),
+                vec![
+                    Arg::dat(self.work1, self.s_pt, Access::Read),
+                    Arg::dat(self.work2, self.s_pt, Access::Read),
+                    Arg::dat(self.density1, self.s_pt, Access::ReadWrite),
+                    Arg::dat(self.energy1, self.s_pt, Access::ReadWrite),
+                    Arg::dat(mass_flux, st1, Access::Read),
+                    Arg::dat(self.work7, st1, Access::Read),
+                ],
+            );
+        }
+    }
+
+    /// Momentum advection for one velocity component along one direction:
+    /// node fluxes → node masses → limited momentum flux → update.
+    pub fn advec_mom(&self, ctx: &mut OpsContext, vel: DatasetId, xdir: bool) {
+        let (mass_flux, st_adv, st_m1, st_nflux) = if xdir {
+            (self.mass_flux_x, self.s_mom_x, self.s_xm1, self.s_nflux_x)
+        } else {
+            (self.mass_flux_y, self.s_mom_y, self.s_ym1, self.s_nflux_y)
+        };
+        let xd = xdir;
+        let (nx, ny) = (self.nx as isize, self.ny as isize);
+        let nodes_h = [(-1, nx + 2), (-1, ny + 2), (0, 1)];
+
+        // node flux (work3) from face mass fluxes
+        ctx.par_loop(
+            if xdir { "cl2d_mom_node_flux_x" } else { "cl2d_mom_node_flux_y" },
+            self.block,
+            nodes_h,
+            kernel(move |c| {
+                let f = if xd {
+                    0.25 * (c.r(0, 0, -1) + c.r(0, 0, 0) + c.r(0, 1, -1) + c.r(0, 1, 0))
+                } else {
+                    0.25 * (c.r(0, -1, 0) + c.r(0, 0, 0) + c.r(0, -1, 1) + c.r(0, 0, 1))
+                };
+                c.w(1, 0, 0, f);
+            }),
+            vec![
+                Arg::dat(mass_flux, st_nflux, Access::Read),
+                Arg::dat(self.work3, self.s_pt, Access::Write),
+            ],
+        );
+
+        // node mass post (work4) / pre (work5) from density1 + node flux
+        ctx.par_loop(
+            if xdir { "cl2d_mom_node_mass_x" } else { "cl2d_mom_node_mass_y" },
+            self.block,
+            nodes_h,
+            kernel(move |c| {
+                let post = 0.25
+                    * (c.r(0, -1, -1) + c.r(0, 0, -1) + c.r(0, 0, 0) + c.r(0, -1, 0));
+                let pre = post
+                    - if xd {
+                        c.r(1, 0, 0) - c.r(1, -1, 0)
+                    } else {
+                        c.r(1, 0, 0) - c.r(1, 0, -1)
+                    };
+                c.w(2, 0, 0, post);
+                c.w(3, 0, 0, pre);
+            }),
+            vec![
+                Arg::dat(self.density1, self.s_cell_to_node, Access::Read),
+                Arg::dat(self.work3, st_m1, Access::Read),
+                Arg::dat(self.work4, self.s_pt, Access::Write),
+                Arg::dat(self.work5, self.s_pt, Access::Write),
+            ],
+        );
+
+        // limited momentum flux (work6)
+        let flux_range = [(-1, nx + 1), (-1, ny + 1), (0, 1)];
+        ctx.par_loop(
+            if xdir { "cl2d_mom_flux_x" } else { "cl2d_mom_flux_y" },
+            self.block,
+            flux_range,
+            kernel(move |c| {
+                let o = |k: isize| if xd { (k, 0) } else { (0, k) };
+                let nf = c.r(0, 0, 0);
+                let (upwind, donor, downwind): (isize, isize, isize) = if nf < 0.0 {
+                    (2, 1, 0)
+                } else {
+                    (-1, 0, 1)
+                };
+                let (ux, uy) = o(upwind);
+                let (dx_, dy_) = o(donor);
+                let (wx, wy) = o(downwind);
+                let v_d = c.r(2, dx_, dy_);
+                let v_u = c.r(2, ux, uy);
+                let v_w = c.r(2, wx, wy);
+                let sigma = nf.abs() / c.r(1, dx_, dy_).max(G_SMALL);
+                let vdiffuw = v_d - v_u;
+                let vdiffdw = v_w - v_d;
+                let limiter = if vdiffuw * vdiffdw > 0.0 {
+                    let auw = vdiffuw.abs();
+                    let adw = vdiffdw.abs();
+                    let wind = if vdiffdw <= 0.0 { -1.0 } else { 1.0 };
+                    wind * (((2.0 - sigma) * adw + (1.0 + sigma) * auw) / 6.0)
+                        .min(auw)
+                        .min(adw)
+                } else {
+                    0.0
+                };
+                c.w(3, 0, 0, nf * (v_d + limiter * (1.0 - sigma)));
+            }),
+            vec![
+                Arg::dat(self.work3, self.s_pt, Access::Read),
+                Arg::dat(self.work5, st_adv, Access::Read),
+                Arg::dat(vel, st_adv, Access::Read),
+                Arg::dat(self.work6, self.s_pt, Access::Write),
+            ],
+        );
+
+        // velocity update
+        ctx.par_loop(
+            if xdir { "cl2d_mom_vel_x" } else { "cl2d_mom_vel_y" },
+            self.block,
+            self.nodes(),
+            kernel(move |c| {
+                let o = |k: isize| if xd { (k, 0) } else { (0, k) };
+                let (mx, my) = o(-1);
+                let v = (c.r(0, 0, 0) * c.r(1, 0, 0) + c.r(2, mx, my) - c.r(2, 0, 0))
+                    / c.r(3, 0, 0).max(G_SMALL);
+                c.w(0, 0, 0, v);
+            }),
+            vec![
+                Arg::dat(vel, self.s_pt, Access::ReadWrite),
+                Arg::dat(self.work5, self.s_pt, Access::Read),
+                Arg::dat(self.work6, st_m1, Access::Read),
+                Arg::dat(self.work4, self.s_pt, Access::Read),
+            ],
+        );
+    }
+
+    /// Copy the advected state back to level 0.
+    pub fn reset_field(&self, ctx: &mut OpsContext) {
+        ctx.par_loop(
+            "cl2d_reset_field",
+            self.block,
+            self.cells(),
+            kernel(|c| {
+                let d = c.r(0, 0, 0);
+                let e = c.r(1, 0, 0);
+                c.w(2, 0, 0, d);
+                c.w(3, 0, 0, e);
+            }),
+            vec![
+                Arg::dat(self.density1, self.s_pt, Access::Read),
+                Arg::dat(self.energy1, self.s_pt, Access::Read),
+                Arg::dat(self.density0, self.s_pt, Access::Write),
+                Arg::dat(self.energy0, self.s_pt, Access::Write),
+            ],
+        );
+        ctx.par_loop(
+            "cl2d_reset_vel",
+            self.block,
+            self.nodes(),
+            kernel(|c| {
+                let xv = c.r(0, 0, 0);
+                let yv = c.r(1, 0, 0);
+                c.w(2, 0, 0, xv);
+                c.w(3, 0, 0, yv);
+            }),
+            vec![
+                Arg::dat(self.xvel1, self.s_pt, Access::Read),
+                Arg::dat(self.yvel1, self.s_pt, Access::Read),
+                Arg::dat(self.xvel0, self.s_pt, Access::Write),
+                Arg::dat(self.yvel0, self.s_pt, Access::Write),
+            ],
+        );
+    }
+
+    fn halo_cell(&self, ctx: &mut OpsContext, name: &str, d: DatasetId) {
+        kernels::halo_strips(
+            ctx,
+            self.block,
+            name,
+            d,
+            self.s_halo_x,
+            self.s_halo_y,
+            self.nx as isize,
+            self.ny as isize,
+            false,
+            false,
+            false,
+            false,
+        );
+    }
+
+    fn halo_vel(&self, ctx: &mut OpsContext, name: &str, d: DatasetId, flip_x: bool, flip_y: bool) {
+        kernels::halo_strips(
+            ctx,
+            self.block,
+            name,
+            d,
+            self.s_halo_x,
+            self.s_halo_y,
+            self.nx as isize + 1,
+            self.ny as isize + 1,
+            true,
+            true,
+            flip_x,
+            flip_y,
+        );
+    }
+
+    fn update_halo_hydro(&self, ctx: &mut OpsContext) {
+        self.halo_cell(ctx, "halo_density1", self.density1);
+        self.halo_cell(ctx, "halo_energy1", self.energy1);
+        self.halo_cell(ctx, "halo_pressure", self.pressure);
+        self.halo_cell(ctx, "halo_viscosity", self.viscosity);
+    }
+
+    fn update_halo_vel(&self, ctx: &mut OpsContext) {
+        self.halo_vel(ctx, "halo_xvel1", self.xvel1, true, false);
+        self.halo_vel(ctx, "halo_yvel1", self.yvel1, false, true);
+    }
+
+    // ------------------------------------------------------------ driver
+
+    /// One full timestep (the paper's per-iteration chain). Returns dt.
+    pub fn step(&mut self, ctx: &mut OpsContext) -> f64 {
+        self.ideal_gas(ctx, false);
+        self.halo_cell(ctx, "halo_pressure", self.pressure);
+        self.viscosity_kernel(ctx);
+        self.halo_cell(ctx, "halo_viscosity", self.viscosity);
+        let dt = self.calc_dt(ctx); // <-- chain trigger (reduction)
+
+        self.pdv(ctx, true);
+        self.ideal_gas(ctx, true);
+        self.update_halo_hydro(ctx);
+        self.revert(ctx);
+        self.accelerate(ctx);
+        self.update_halo_vel(ctx);
+        self.pdv(ctx, false);
+        self.flux_calc(ctx);
+
+        let xfirst = !self.step_parity;
+        self.step_parity = !self.step_parity;
+        if xfirst {
+            self.advec_cell(ctx, true, true);
+            self.halo_cell(ctx, "halo_density1", self.density1);
+            self.halo_cell(ctx, "halo_energy1", self.energy1);
+            self.advec_mom(ctx, self.xvel1, true);
+            self.advec_mom(ctx, self.yvel1, true);
+            self.advec_cell(ctx, false, false);
+            self.advec_mom(ctx, self.xvel1, false);
+            self.advec_mom(ctx, self.yvel1, false);
+        } else {
+            self.advec_cell(ctx, false, true);
+            self.halo_cell(ctx, "halo_density1", self.density1);
+            self.halo_cell(ctx, "halo_energy1", self.energy1);
+            self.advec_mom(ctx, self.xvel1, false);
+            self.advec_mom(ctx, self.yvel1, false);
+            self.advec_cell(ctx, true, false);
+            self.advec_mom(ctx, self.xvel1, true);
+            self.advec_mom(ctx, self.yvel1, true);
+        }
+        self.reset_field(ctx);
+        dt
+    }
+
+    /// Conserved-quantity summary (trigger point; every N steps in the
+    /// paper's runs — the "one long loop chain with poor overlap").
+    pub fn field_summary(&self, ctx: &mut OpsContext) -> FieldSummary {
+        ctx.par_loop(
+            "cl2d_field_summary",
+            self.block,
+            self.cells(),
+            kernel(|c| {
+                let vol = c.r(0, 0, 0);
+                let den = c.r(1, 0, 0);
+                let en = c.r(2, 0, 0);
+                let press = c.r(3, 0, 0);
+                let vsqrd = 0.25
+                    * ((c.r(4, 0, 0) * c.r(4, 0, 0) + c.r(5, 0, 0) * c.r(5, 0, 0))
+                        + (c.r(4, 1, 0) * c.r(4, 1, 0) + c.r(5, 1, 0) * c.r(5, 1, 0))
+                        + (c.r(4, 0, 1) * c.r(4, 0, 1) + c.r(5, 0, 1) * c.r(5, 0, 1))
+                        + (c.r(4, 1, 1) * c.r(4, 1, 1) + c.r(5, 1, 1) * c.r(5, 1, 1)));
+                let mass = den * vol;
+                c.red_sum(0, vol);
+                c.red_sum(1, mass);
+                c.red_sum(2, mass * en);
+                c.red_sum(3, 0.5 * mass * vsqrd);
+                c.red_sum(4, mass * press / den.max(G_SMALL));
+            }),
+            vec![
+                Arg::dat(self.volume, self.s_pt, Access::Read),
+                Arg::dat(self.density0, self.s_pt, Access::Read),
+                Arg::dat(self.energy0, self.s_pt, Access::Read),
+                Arg::dat(self.pressure, self.s_pt, Access::Read),
+                Arg::dat(self.xvel0, self.s_node_to_cell, Access::Read),
+                Arg::dat(self.yvel0, self.s_node_to_cell, Access::Read),
+                Arg::GblRed { red: self.r_vol, op: RedOp::Sum },
+                Arg::GblRed { red: self.r_mass, op: RedOp::Sum },
+                Arg::GblRed { red: self.r_ie, op: RedOp::Sum },
+                Arg::GblRed { red: self.r_ke, op: RedOp::Sum },
+                Arg::GblRed { red: self.r_press, op: RedOp::Sum },
+            ],
+        );
+        let volume = ctx.reduction_result(self.r_vol);
+        let mass = ctx.reduction_result(self.r_mass);
+        let internal_energy = ctx.reduction_result(self.r_ie);
+        let kinetic_energy = ctx.reduction_result(self.r_ke);
+        let pressure = ctx.reduction_result(self.r_press);
+        FieldSummary {
+            volume,
+            mass,
+            internal_energy,
+            kinetic_energy,
+            pressure,
+        }
+    }
+
+    /// Standard benchmark driver: initialise (untimed), then `steps`
+    /// timesteps with a field summary every `summary_every` steps.
+    pub fn run(&mut self, ctx: &mut OpsContext, steps: usize, summary_every: usize) {
+        self.initialise(ctx);
+        ctx.flush();
+        ctx.reset_metrics();
+        ctx.set_cyclic_phase(true);
+        for s in 0..steps {
+            self.step(ctx);
+            if summary_every > 0 && (s + 1) % summary_every == 0 {
+                let _ = self.field_summary(ctx);
+            }
+        }
+        ctx.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Config, Platform};
+    use crate::memory::{AppCalib, Link};
+
+    fn ctx(p: Platform) -> OpsContext {
+        OpsContext::new(Config::new(p, AppCalib::CLOVERLEAF_2D).build_engine())
+    }
+
+    #[test]
+    fn mass_is_conserved() {
+        let mut c = ctx(Platform::KnlFlatDdr4);
+        let mut app = CloverLeaf2D::new(&mut c, 24, 24, 1);
+        app.initialise(&mut c);
+        let s0 = app.field_summary(&mut c);
+        for _ in 0..5 {
+            app.step(&mut c);
+        }
+        let s1 = app.field_summary(&mut c);
+        assert!(
+            ((s1.mass - s0.mass) / s0.mass).abs() < 1e-10,
+            "mass drift: {} -> {}",
+            s0.mass,
+            s1.mass
+        );
+        assert!((s1.volume - s0.volume).abs() < 1e-9 * s0.volume);
+    }
+
+    #[test]
+    fn shock_develops_kinetic_energy() {
+        let mut c = ctx(Platform::KnlFlatDdr4);
+        let mut app = CloverLeaf2D::new(&mut c, 24, 24, 1);
+        app.initialise(&mut c);
+        let s0 = app.field_summary(&mut c);
+        assert!(s0.kinetic_energy.abs() < 1e-12);
+        for _ in 0..10 {
+            app.step(&mut c);
+        }
+        let s1 = app.field_summary(&mut c);
+        assert!(s1.kinetic_energy > 1e-8, "ke = {}", s1.kinetic_energy);
+        let e0 = s0.internal_energy + s0.kinetic_energy;
+        let e1 = s1.internal_energy + s1.kinetic_energy;
+        assert!(((e1 - e0) / e0).abs() < 0.05, "energy drift {e0} -> {e1}");
+    }
+
+    #[test]
+    fn dt_stays_positive_and_bounded() {
+        let mut c = ctx(Platform::KnlFlatDdr4);
+        let mut app = CloverLeaf2D::new(&mut c, 16, 16, 1);
+        app.initialise(&mut c);
+        for _ in 0..8 {
+            let dt = app.step(&mut c);
+            assert!(dt > 0.0 && dt <= app.dtinit + 1e-12, "dt = {dt}");
+        }
+    }
+
+    #[test]
+    fn fields_stay_finite_and_positive() {
+        let mut c = ctx(Platform::KnlFlatDdr4);
+        let mut app = CloverLeaf2D::new(&mut c, 20, 20, 1);
+        app.initialise(&mut c);
+        for _ in 0..10 {
+            app.step(&mut c);
+        }
+        let den = c.fetch(app.density0);
+        let en = c.fetch(app.energy0);
+        assert!(den.iter().all(|v| v.is_finite()));
+        assert!(en.iter().all(|v| v.is_finite()));
+        let ds = c.dataset(app.density0).clone();
+        for y in 0..app.ny as isize {
+            for x in 0..app.nx as isize {
+                let v = den[ds.offset([x, y, 0]) as usize];
+                assert!(v > 0.0, "density must stay positive at ({x},{y}): {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_run_matches_untiled_bitexact() {
+        let run = |p: Platform| {
+            let mut c = ctx(p);
+            let mut app = CloverLeaf2D::new(&mut c, 20, 20, 1);
+            app.run(&mut c, 4, 2);
+            (
+                c.fetch(app.density0),
+                c.fetch(app.energy0),
+                c.fetch(app.xvel0),
+            )
+        };
+        let a = run(Platform::KnlFlatDdr4);
+        let b = run(Platform::KnlCacheTiled);
+        let g = run(Platform::GpuExplicit {
+            link: Link::NvLink,
+            cyclic: true,
+            prefetch: true,
+        });
+        let u = run(Platform::GpuUnified {
+            link: Link::PciE,
+            tiled: true,
+            prefetch: true,
+        });
+        assert_eq!(a.0, b.0, "density0 tiled KNL");
+        assert_eq!(a.1, b.1, "energy0 tiled KNL");
+        assert_eq!(a.2, b.2, "xvel0 tiled KNL");
+        assert_eq!(a.0, g.0, "density0 GPU explicit");
+        assert_eq!(a.0, u.0, "density0 GPU unified");
+    }
+
+    #[test]
+    fn chain_has_paper_scale_loop_count() {
+        let mut c = ctx(Platform::KnlFlatDdr4);
+        let mut app = CloverLeaf2D::new(&mut c, 16, 16, 1);
+        app.initialise(&mut c);
+        c.flush();
+        // one full step, counting loops queued before each flush
+        app.ideal_gas(&mut c, false);
+        app.halo_cell(&mut c, "halo_pressure", app.pressure);
+        app.viscosity_kernel(&mut c);
+        app.halo_cell(&mut c, "halo_viscosity", app.viscosity);
+        let mut n = c.queued_loops() + 1; // + calc_dt
+        let _ = app.calc_dt(&mut c);
+        app.pdv(&mut c, true);
+        app.ideal_gas(&mut c, true);
+        app.update_halo_hydro(&mut c);
+        app.revert(&mut c);
+        app.accelerate(&mut c);
+        app.update_halo_vel(&mut c);
+        app.pdv(&mut c, false);
+        app.flux_calc(&mut c);
+        app.advec_cell(&mut c, true, true);
+        app.advec_mom(&mut c, app.xvel1, true);
+        app.advec_mom(&mut c, app.yvel1, true);
+        app.advec_cell(&mut c, false, false);
+        app.advec_mom(&mut c, app.xvel1, false);
+        app.advec_mom(&mut c, app.yvel1, false);
+        app.reset_field(&mut c);
+        n += c.queued_loops();
+        assert!(n > 60, "chain too short: {n}");
+        c.flush();
+    }
+
+    #[test]
+    fn dataset_count_matches_paper() {
+        let mut c = ctx(Platform::KnlFlatDdr4);
+        let _app = CloverLeaf2D::new(&mut c, 8, 8, 1);
+        assert_eq!(c.datasets().len(), 25, "paper: 25 variables/gridpoint");
+    }
+}

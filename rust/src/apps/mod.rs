@@ -1,0 +1,10 @@
+//! The stencil applications of the paper's evaluation, expressed in the
+//! DSL: CloverLeaf 2D/3D (compressible Euler, explicit hydro) and an
+//! OpenSBLI-style 3D Taylor–Green vortex (compressible Navier–Stokes,
+//! RK3), plus a small diffusion demo used by the quickstart and the PJRT
+//! end-to-end example.
+
+pub mod cloverleaf2d;
+pub mod cloverleaf3d;
+pub mod diffusion;
+pub mod opensbli;

@@ -1,0 +1,704 @@
+//! OpenSBLI-style 3D Taylor–Green vortex: compressible Navier–Stokes in
+//! conservative form, 4th-order central differences, 3-stage Runge–Kutta,
+//! periodic in all directions.
+//!
+//! Matches the paper's structure: **29 datasets** (5 conserved + 5 RK
+//! saves + 5 residuals + 5 primitives + 9 velocity-gradient work arrays),
+//! 9 distinct stencils, ~9 grid loops per RK stage with **no reductions
+//! in the bulk**, so chains can tile across an arbitrary number of
+//! timesteps (`steps_per_chain`, the §5.3 depth study). One kernel — the
+//! RHS/residual evaluation — dominates runtime and is latency-sensitive
+//! (the paper: 60% on KNL, 68% on the P100); its `bw_efficiency` models
+//! that.
+//!
+//! Periodic boundaries use [`crate::OpsContext::exchange_periodic`] at
+//! chain boundaries with halos deep enough for the whole chain (4 cells
+//! of validity consumed per stage → depth `12 × steps_per_chain`), with
+//! redundant halo-deep computation inside the chain — the standard OPS
+//! MPI+tiling execution scheme.
+
+use crate::ops::kernel::kernel;
+use crate::ops::stencil::shapes;
+use crate::ops::{Access, Arg, BlockId, Ctx, DatasetId, OpsContext, RedOp, ReductionId, StencilId};
+use std::f64::consts::PI;
+
+/// Validity consumed per RK stage: the gradient loops eat 2 cells; the
+/// residual reads primitives/conserved at radius 2 from the *same*
+/// validity level (its viscous terms use direct second/mixed derivatives
+/// of the primitives, and the stored gradient tensor only pointwise).
+const SHRINK_PER_STAGE: usize = 2;
+/// RK3 stage coefficients (u = save + dt*c_s*R(u)).
+const RK_C: [f64; 3] = [1.0 / 3.0, 0.5, 1.0];
+
+/// Relative bandwidth-efficiency of the dominant RHS kernel (calibrated
+/// so its runtime share lands at the paper's 60–68%).
+const RESIDUAL_EFF: f64 = 0.30;
+/// Relative efficiency of the light kernels (the paper: "the average
+/// bandwidth of all the other kernels is 450 GB/s" vs a 170 GB/s app
+/// average on the P100).
+const LIGHT_EFF: f64 = 1.6;
+
+pub struct OpenSbli {
+    pub block: BlockId,
+    /// Grid points per dimension (anisotropic resolution of the 2π box:
+    /// benches use tall-z grids so the skewed tiles have room).
+    pub n: [usize; 3],
+    /// Grid spacing per dimension (2π / n).
+    pub h: [f64; 3],
+    pub dt: f64,
+    pub steps_per_chain: usize,
+    pub halo_depth: usize,
+
+    /// Conserved: rho, rhou, rhov, rhow, rhoE.
+    pub q: [DatasetId; 5],
+    /// RK saves.
+    pub qs: [DatasetId; 5],
+    /// Residuals.
+    pub res: [DatasetId; 5],
+    /// Primitives: u, v, w, p, t.
+    pub prim: [DatasetId; 5],
+    /// Velocity-gradient tensor: `wk[3*i+j] = d u_i / d x_j`.
+    pub wk: [DatasetId; 9],
+
+    s_pt: StencilId,
+    s_d1: [StencilId; 3], // 4th-order derivative lines (radius 2)
+    s_full: StencilId,    // radius-2 star (residual kernel)
+
+    pub r_ke: ReductionId,
+
+    pub gamma: f64,
+    pub mach: f64,
+    pub re: f64,
+    pub pr: f64,
+}
+
+impl OpenSbli {
+    /// `steps_per_chain` controls how many timesteps one lazy chain spans
+    /// (the paper tiles over 1–3 timesteps, 5 for unified memory).
+    pub fn new(ctx: &mut OpsContext, n: usize, steps_per_chain: usize, model_scale: u64) -> Self {
+        Self::new_aniso(ctx, [n, n, n], steps_per_chain, model_scale)
+    }
+
+    /// Anisotropic-resolution variant: same 2π-periodic box, different
+    /// point counts per dimension (benches use tall z).
+    pub fn new_aniso(
+        ctx: &mut OpsContext,
+        n: [usize; 3],
+        steps_per_chain: usize,
+        model_scale: u64,
+    ) -> Self {
+        let halo_depth = SHRINK_PER_STAGE * 3 * steps_per_chain;
+        assert!(
+            halo_depth <= n[0].min(n[1]).min(n[2]),
+            "grid {n:?} too small for {steps_per_chain} steps/chain (needs halo {halo_depth})"
+        );
+        ctx.set_model_elem_bytes(8 * model_scale.max(1));
+        let block = ctx.decl_block("tgv", n);
+        let hd = halo_depth as i32;
+        let h3 = [hd, hd, hd];
+        let size = n;
+        let dat = |ctx: &mut OpsContext, nme: &str| ctx.decl_dat(block, nme, size, h3, h3);
+
+        let q = [
+            dat(ctx, "rho"),
+            dat(ctx, "rhou"),
+            dat(ctx, "rhov"),
+            dat(ctx, "rhow"),
+            dat(ctx, "rhoE"),
+        ];
+        let qs = [
+            dat(ctx, "rho_s"),
+            dat(ctx, "rhou_s"),
+            dat(ctx, "rhov_s"),
+            dat(ctx, "rhow_s"),
+            dat(ctx, "rhoE_s"),
+        ];
+        let res = [
+            dat(ctx, "res_rho"),
+            dat(ctx, "res_rhou"),
+            dat(ctx, "res_rhov"),
+            dat(ctx, "res_rhow"),
+            dat(ctx, "res_rhoE"),
+        ];
+        let prim = [
+            dat(ctx, "u"),
+            dat(ctx, "v"),
+            dat(ctx, "w"),
+            dat(ctx, "p"),
+            dat(ctx, "t"),
+        ];
+        let wk = [
+            dat(ctx, "wk0"),
+            dat(ctx, "wk1"),
+            dat(ctx, "wk2"),
+            dat(ctx, "wk3"),
+            dat(ctx, "wk4"),
+            dat(ctx, "wk5"),
+            dat(ctx, "wk6"),
+            dat(ctx, "wk7"),
+            dat(ctx, "wk8"),
+        ];
+
+        let s_pt = ctx.decl_stencil("sbli_000", shapes::point());
+        let mk_line = |ctx: &mut OpsContext, nme: &str, d: usize| {
+            let pts: Vec<[i32; 3]> = (-2..=2)
+                .map(|k| {
+                    let mut p = [0i32; 3];
+                    p[d] = k;
+                    p
+                })
+                .collect();
+            ctx.decl_stencil(nme, pts)
+        };
+        let s_d1 = [
+            mk_line(ctx, "d1_x", 0),
+            mk_line(ctx, "d1_y", 1),
+            mk_line(ctx, "d1_z", 2),
+        ];
+        // residual reads: radius-2 star + the 12 in-plane corners used by
+        // the mixed second derivatives of the viscous terms.
+        let mut full_pts = shapes::star3d(2);
+        for &(a, b) in &[(1, 1), (1, -1), (-1, 1), (-1, -1)] {
+            full_pts.push([a, b, 0]);
+            full_pts.push([a, 0, b]);
+            full_pts.push([0, a, b]);
+        }
+        let s_full = ctx.decl_stencil("star2c_3d", full_pts);
+
+        let r_ke = ctx.decl_reduction("ke", RedOp::Sum);
+
+        let h = [
+            2.0 * PI / n[0] as f64,
+            2.0 * PI / n[1] as f64,
+            2.0 * PI / n[2] as f64,
+        ];
+        OpenSbli {
+            block,
+            n,
+            h,
+            dt: 0.1 * h[0].min(h[1]).min(h[2]), // fixed conservative dt (the
+            // chain-rule convective form aliases on coarse grids; no
+            // reductions in the bulk, as the paper notes)
+            steps_per_chain,
+            halo_depth,
+            q,
+            qs,
+            res,
+            prim,
+            wk,
+            s_pt,
+            s_d1,
+            s_full,
+            r_ke,
+            gamma: 1.4,
+            mach: 0.1,
+            re: 1600.0,
+            pr: 0.71,
+        }
+    }
+
+    fn range(&self, ext: isize) -> crate::ops::Range3 {
+        [
+            (-ext, self.n[0] as isize + ext),
+            (-ext, self.n[1] as isize + ext),
+            (-ext, self.n[2] as isize + ext),
+        ]
+    }
+
+    // ---------------------------------------------------------------- init
+
+    /// Standard TGV initial condition (Mach 0.1 compressible setup).
+    pub fn initialise(&self, ctx: &mut OpsContext) {
+        let h = self.h;
+        let gamma = self.gamma;
+        let mach = self.mach;
+        let ext = self.halo_depth as isize;
+        ctx.par_loop_eff(
+            "sbli_init",
+            self.block,
+            self.range(ext),
+            kernel(move |c| {
+                let [i, j, k] = c.idx();
+                let x = i as f64 * h[0];
+                let y = j as f64 * h[1];
+                let z = k as f64 * h[2];
+                let u = x.sin() * y.cos() * z.cos();
+                let v = -x.cos() * y.sin() * z.cos();
+                let w = 0.0;
+                let p0 = 1.0 / (gamma * mach * mach);
+                let p = p0 + ((2.0 * x).cos() + (2.0 * y).cos()) * ((2.0 * z).cos() + 2.0) / 16.0;
+                let rho = 1.0;
+                let e = p / (gamma - 1.0) + 0.5 * rho * (u * u + v * v + w * w);
+                c.w3(0, 0, 0, 0, rho);
+                c.w3(1, 0, 0, 0, rho * u);
+                c.w3(2, 0, 0, 0, rho * v);
+                c.w3(3, 0, 0, 0, rho * w);
+                c.w3(4, 0, 0, 0, e);
+            }),
+            (0..5)
+                .map(|i| Arg::dat(self.q[i], self.s_pt, Access::Write))
+                .collect(),
+            LIGHT_EFF,
+        );
+    }
+
+    // ------------------------------------------------------------ kernels
+
+    /// 4th-order central first derivative along `d` of argument `a`.
+    #[inline]
+    fn d1(c: &Ctx, a: usize, d: usize, inv12h: f64) -> f64 {
+        let mut p = [0isize; 3];
+        p[d] = 1;
+        let f1 = c.r3(a, p[0], p[1], p[2]);
+        p[d] = -1;
+        let fm1 = c.r3(a, p[0], p[1], p[2]);
+        p[d] = 2;
+        let f2 = c.r3(a, p[0], p[1], p[2]);
+        p[d] = -2;
+        let fm2 = c.r3(a, p[0], p[1], p[2]);
+        (8.0 * (f1 - fm1) - (f2 - fm2)) * inv12h
+    }
+
+    /// 4th-order central second derivative along `d` of argument `a`.
+    #[inline]
+    fn d2(c: &Ctx, a: usize, d: usize, inv12h2: f64) -> f64 {
+        let mut p = [0isize; 3];
+        p[d] = 1;
+        let f1 = c.r3(a, p[0], p[1], p[2]);
+        p[d] = -1;
+        let fm1 = c.r3(a, p[0], p[1], p[2]);
+        p[d] = 2;
+        let f2 = c.r3(a, p[0], p[1], p[2]);
+        p[d] = -2;
+        let fm2 = c.r3(a, p[0], p[1], p[2]);
+        (-(f2 + fm2) + 16.0 * (f1 + fm1) - 30.0 * c.r3(a, 0, 0, 0)) * inv12h2
+    }
+
+    /// Save the conserved state at the start of a timestep.
+    fn rk_save(&self, ctx: &mut OpsContext, ext: isize) {
+        ctx.par_loop_eff(
+            "sbli_rk_save",
+            self.block,
+            self.range(ext),
+            kernel(|c| {
+                for i in 0..5 {
+                    let v = c.r3(i, 0, 0, 0);
+                    c.w3(5 + i, 0, 0, 0, v);
+                }
+            }),
+            (0..5)
+                .map(|i| Arg::dat(self.q[i], self.s_pt, Access::Read))
+                .chain((0..5).map(|i| Arg::dat(self.qs[i], self.s_pt, Access::Write)))
+                .collect(),
+            LIGHT_EFF,
+        );
+    }
+
+    /// Primitives from conserved (pointwise).
+    fn primitives(&self, ctx: &mut OpsContext, ext: isize) {
+        let gamma = self.gamma;
+        ctx.par_loop_eff(
+            "sbli_primitives",
+            self.block,
+            self.range(ext),
+            kernel(move |c| {
+                let rho = c.r3(0, 0, 0, 0).max(1e-12);
+                let u = c.r3(1, 0, 0, 0) / rho;
+                let v = c.r3(2, 0, 0, 0) / rho;
+                let w = c.r3(3, 0, 0, 0) / rho;
+                let e = c.r3(4, 0, 0, 0);
+                let p = (gamma - 1.0) * (e - 0.5 * rho * (u * u + v * v + w * w));
+                let t = gamma * p / rho;
+                c.w3(5, 0, 0, 0, u);
+                c.w3(6, 0, 0, 0, v);
+                c.w3(7, 0, 0, 0, w);
+                c.w3(8, 0, 0, 0, p);
+                c.w3(9, 0, 0, 0, t);
+            }),
+            (0..5)
+                .map(|i| Arg::dat(self.q[i], self.s_pt, Access::Read))
+                .chain((0..5).map(|i| Arg::dat(self.prim[i], self.s_pt, Access::Write)))
+                .collect(),
+            LIGHT_EFF,
+        );
+    }
+
+    /// Velocity-gradient tensor: one loop per velocity component writing
+    /// its three derivatives.
+    fn velocity_gradients(&self, ctx: &mut OpsContext, ext: isize) {
+        let inv12h = [
+            1.0 / (12.0 * self.h[0]),
+            1.0 / (12.0 * self.h[1]),
+            1.0 / (12.0 * self.h[2]),
+        ];
+        for vi in 0..3 {
+            ctx.par_loop_eff(
+                &format!("sbli_grad_u{vi}"),
+                self.block,
+                self.range(ext),
+                kernel(move |c| {
+                    // args 0..3 are the same velocity with per-direction
+                    // derivative stencils
+                    for d in 0..3 {
+                        let g = Self::d1(c, d, d, inv12h[d]);
+                        c.w3(3 + d, 0, 0, 0, g);
+                    }
+                }),
+                vec![
+                    Arg::dat(self.prim[vi], self.s_d1[0], Access::Read),
+                    Arg::dat(self.prim[vi], self.s_d1[1], Access::Read),
+                    Arg::dat(self.prim[vi], self.s_d1[2], Access::Read),
+                    Arg::dat(self.wk[3 * vi], self.s_pt, Access::Write),
+                    Arg::dat(self.wk[3 * vi + 1], self.s_pt, Access::Write),
+                    Arg::dat(self.wk[3 * vi + 2], self.s_pt, Access::Write),
+                ],
+                LIGHT_EFF,
+            );
+        }
+    }
+
+    /// The dominant RHS kernel: convective + viscous + heat-flux terms
+    /// into the residual arrays. Latency-sensitive (paper: 60–68% of
+    /// runtime).
+    ///
+    /// Argument map: 0..5 conserved, 5..10 primitives, 10..19 gradient
+    /// tensor, 19..24 residuals (write).
+    fn residual(&self, ctx: &mut OpsContext, ext: isize) {
+        let inv12h = [
+            1.0 / (12.0 * self.h[0]),
+            1.0 / (12.0 * self.h[1]),
+            1.0 / (12.0 * self.h[2]),
+        ];
+        let inv12h2 = [
+            1.0 / (12.0 * self.h[0] * self.h[0]),
+            1.0 / (12.0 * self.h[1] * self.h[1]),
+            1.0 / (12.0 * self.h[2] * self.h[2]),
+        ];
+        let inv4hh = [
+            [0.0, 0.25 / (self.h[0] * self.h[1]), 0.25 / (self.h[0] * self.h[2])],
+            [0.25 / (self.h[1] * self.h[0]), 0.0, 0.25 / (self.h[1] * self.h[2])],
+            [0.25 / (self.h[2] * self.h[0]), 0.25 / (self.h[2] * self.h[1]), 0.0],
+        ];
+        let mu = 1.0 / self.re;
+        let kappa = mu * self.gamma / (self.pr * (self.gamma - 1.0));
+        let mut args: Vec<Arg> = (0..5)
+            .map(|i| Arg::dat(self.q[i], self.s_full, Access::Read))
+            .collect();
+        args.extend((0..5).map(|i| Arg::dat(self.prim[i], self.s_full, Access::Read)));
+        args.extend((0..9).map(|i| Arg::dat(self.wk[i], self.s_pt, Access::Read)));
+        args.extend((0..5).map(|i| Arg::dat(self.res[i], self.s_pt, Access::Write)));
+
+        ctx.par_loop_eff(
+            "sbli_residual",
+            self.block,
+            self.range(ext),
+            kernel(move |c| {
+                let u = [c.r3(5, 0, 0, 0), c.r3(6, 0, 0, 0), c.r3(7, 0, 0, 0)];
+                let p = c.r3(8, 0, 0, 0);
+                let e = c.r3(4, 0, 0, 0);
+                // stored gradient tensor (pointwise)
+                let g = |i: usize, j: usize| c.r3(10 + 3 * i + j, 0, 0, 0);
+
+                // --- convective terms (chain rule over stored fields) ---
+                let mut div_m = 0.0;
+                let mut conv_mom = [0.0f64; 3];
+                let mut conv_e = 0.0;
+                for j in 0..3 {
+                    div_m += Self::d1(c, 1 + j, j, inv12h[j]);
+                    for (i, cm) in conv_mom.iter_mut().enumerate() {
+                        *cm += u[j] * Self::d1(c, 1 + i, j, inv12h[j])
+                            + c.r3(1 + i, 0, 0, 0) * g(j, j);
+                    }
+                    conv_e += u[j]
+                        * (Self::d1(c, 4, j, inv12h[j]) + Self::d1(c, 8, j, inv12h[j]))
+                        + (e + p) * g(j, j);
+                }
+                let gp = [
+                    Self::d1(c, 8, 0, inv12h[0]),
+                    Self::d1(c, 8, 1, inv12h[1]),
+                    Self::d1(c, 8, 2, inv12h[2]),
+                ];
+
+                // --- viscous terms via direct second/mixed derivatives of
+                // the primitives (radius ≤ 2 reads; no derivative of wk,
+                // which keeps the per-stage halo consumption at 2) ---
+                // mixed second derivative of prim arg a: d2/(dxi dxj)
+                let cross = |c: &Ctx, a: usize, i: usize, j: usize| -> f64 {
+                    let mut pp = [0isize; 3];
+                    pp[i] = 1;
+                    pp[j] += 1;
+                    let fpp = c.r3(a, pp[0], pp[1], pp[2]);
+                    let mut pm = [0isize; 3];
+                    pm[i] = 1;
+                    pm[j] -= 1;
+                    let fpm = c.r3(a, pm[0], pm[1], pm[2]);
+                    let mut mp = [0isize; 3];
+                    mp[i] = -1;
+                    mp[j] += 1;
+                    let fmp = c.r3(a, mp[0], mp[1], mp[2]);
+                    let mut mm = [0isize; 3];
+                    mm[i] = -1;
+                    mm[j] -= 1;
+                    let fmm = c.r3(a, mm[0], mm[1], mm[2]);
+                    (fpp - fpm - fmp + fmm) * inv4hh[i][j]
+                };
+                let divu = g(0, 0) + g(1, 1) + g(2, 2);
+                let mut visc_mom = [0.0f64; 3];
+                for i in 0..3 {
+                    // Σ_j ∂²u_i/∂x_j²
+                    let mut lap_ui = 0.0;
+                    for j in 0..3 {
+                        lap_ui += Self::d2(c, 5 + i, j, inv12h2[j]);
+                    }
+                    // ∂(div u)/∂x_i = Σ_j ∂²u_j/∂x_i∂x_j
+                    let mut ddiv_dxi = 0.0;
+                    for j in 0..3 {
+                        if i == j {
+                            ddiv_dxi += Self::d2(c, 5 + j, i, inv12h2[i]);
+                        } else {
+                            ddiv_dxi += cross(c, 5 + j, i, j);
+                        }
+                    }
+                    visc_mom[i] = mu * (lap_ui + ddiv_dxi / 3.0);
+                }
+                // energy: Σ_ij ∂(u_i τ_ij)/∂x_j = Σ_ij g_ij τ_ij + Σ_i u_i Σ_j ∂τ_ij/∂x_j
+                let mut visc_e = 0.0;
+                for i in 0..3 {
+                    for j in 0..3 {
+                        let tau = mu
+                            * (g(i, j) + g(j, i) - if i == j { 2.0 / 3.0 * divu } else { 0.0 });
+                        visc_e += tau * g(i, j);
+                    }
+                    visc_e += u[i] * visc_mom[i];
+                }
+                let lap_t = Self::d2(c, 9, 0, inv12h2[0])
+                    + Self::d2(c, 9, 1, inv12h2[1])
+                    + Self::d2(c, 9, 2, inv12h2[2]);
+
+                c.w3(19, 0, 0, 0, -div_m);
+                for i in 0..3 {
+                    c.w3(20 + i, 0, 0, 0, -conv_mom[i] - gp[i] + visc_mom[i]);
+                }
+                c.w3(23, 0, 0, 0, -conv_e + visc_e + kappa * lap_t);
+            }),
+            args,
+            RESIDUAL_EFF,
+        );
+    }
+
+    /// RK stage update: q = q_save + dt·c_s·res.
+    fn rk_update(&self, ctx: &mut OpsContext, stage: usize, ext: isize) {
+        let coef = RK_C[stage] * self.dt;
+        let mut args: Vec<Arg> = (0..5)
+            .map(|i| Arg::dat(self.qs[i], self.s_pt, Access::Read))
+            .collect();
+        args.extend((0..5).map(|i| Arg::dat(self.res[i], self.s_pt, Access::Read)));
+        args.extend((0..5).map(|i| Arg::dat(self.q[i], self.s_pt, Access::Write)));
+        ctx.par_loop_eff(
+            &format!("sbli_rk_update{stage}"),
+            self.block,
+            self.range(ext),
+            kernel(move |c| {
+                for i in 0..5 {
+                    let v = c.r3(i, 0, 0, 0) + coef * c.r3(5 + i, 0, 0, 0);
+                    c.w3(10 + i, 0, 0, 0, v);
+                }
+            }),
+            args,
+            LIGHT_EFF,
+        );
+    }
+
+    // ------------------------------------------------------------ driver
+
+    /// Refresh periodic halos of the conserved fields to full depth —
+    /// chain boundary (flushes the queue).
+    pub fn exchange_halos(&self, ctx: &mut OpsContext) {
+        for i in 0..5 {
+            for dim in 0..3 {
+                ctx.exchange_periodic(self.q[i], dim, self.halo_depth);
+            }
+        }
+    }
+
+    /// Queue one timestep's loops. `chain_pos` is the timestep's index
+    /// within the current chain (drives the deep-halo range shrinking).
+    pub fn step(&mut self, ctx: &mut OpsContext, chain_pos: usize) {
+        let mut v = (self.halo_depth - SHRINK_PER_STAGE * 3 * chain_pos) as isize;
+        self.rk_save(ctx, v);
+        for stage in 0..3 {
+            self.primitives(ctx, v);
+            self.velocity_gradients(ctx, v - 2);
+            self.residual(ctx, v - 2);
+            self.rk_update(ctx, stage, v - 2);
+            v -= SHRINK_PER_STAGE as isize;
+        }
+    }
+
+    /// Volume-averaged kinetic energy (trigger point, used between
+    /// chains as the physics monitor).
+    pub fn kinetic_energy(&self, ctx: &mut OpsContext) -> f64 {
+        let n3 = (self.n[0] * self.n[1] * self.n[2]) as f64;
+        ctx.par_loop_eff(
+            "sbli_ke",
+            self.block,
+            self.range(0),
+            kernel(move |c| {
+                let rho = c.r3(0, 0, 0, 0).max(1e-12);
+                let ke = 0.5
+                    * (c.r3(1, 0, 0, 0) * c.r3(1, 0, 0, 0)
+                        + c.r3(2, 0, 0, 0) * c.r3(2, 0, 0, 0)
+                        + c.r3(3, 0, 0, 0) * c.r3(3, 0, 0, 0))
+                    / rho;
+                c.red_sum(0, ke / n3);
+            }),
+            (0..4)
+                .map(|i| Arg::dat(self.q[i], self.s_pt, Access::Read))
+                .chain(std::iter::once(Arg::GblRed {
+                    red: self.r_ke,
+                    op: RedOp::Sum,
+                }))
+                .collect(),
+            LIGHT_EFF,
+        );
+        ctx.reduction_result(self.r_ke)
+    }
+
+    /// Benchmark driver: `chains` chains of `steps_per_chain` timesteps.
+    pub fn run(&mut self, ctx: &mut OpsContext, chains: usize) {
+        self.initialise(ctx);
+        ctx.flush();
+        ctx.reset_metrics();
+        ctx.set_cyclic_phase(true);
+        for _ in 0..chains {
+            self.exchange_halos(ctx); // flushes the previous chain
+            for s in 0..self.steps_per_chain {
+                self.step(ctx, s);
+            }
+        }
+        ctx.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Config, Platform};
+    use crate::memory::{AppCalib, Link};
+
+    fn ctx(p: Platform) -> OpsContext {
+        OpsContext::new(Config::new(p, AppCalib::OPENSBLI).build_engine())
+    }
+
+    #[test]
+    fn dataset_count_matches_paper() {
+        let mut c = ctx(Platform::KnlFlatDdr4);
+        let _app = OpenSbli::new(&mut c, 16, 1, 1);
+        assert_eq!(c.datasets().len(), 29, "paper: 29 datasets");
+    }
+
+    #[test]
+    fn ke_starts_at_tgv_value_and_decays() {
+        let mut c = ctx(Platform::KnlFlatDdr4);
+        let mut app = OpenSbli::new(&mut c, 16, 1, 1);
+        app.initialise(&mut c);
+        let ke0 = app.kinetic_energy(&mut c);
+        // TGV volume-averaged KE = 1/8 (ρ=1)
+        assert!((ke0 - 0.125).abs() < 0.01, "ke0 = {ke0}");
+        for _ in 0..3 {
+            app.exchange_halos(&mut c);
+            app.step(&mut c, 0);
+        }
+        let ke1 = app.kinetic_energy(&mut c);
+        assert!(ke1.is_finite());
+        // 4th-order central differences on a coarse 16^3 grid are not
+        // discretely energy-conservative; allow sub-1% drift over 3 steps.
+        assert!(ke1 > 0.0 && ke1 < ke0 * 1.01, "ke {ke0} -> {ke1}");
+    }
+
+    #[test]
+    fn fields_stay_finite_over_chains() {
+        let mut c = ctx(Platform::KnlFlatDdr4);
+        let mut app = OpenSbli::new(&mut c, 24, 2, 1);
+        app.run(&mut c, 2);
+        for i in 0..5 {
+            let buf = c.fetch(app.q[i]);
+            assert!(buf.iter().all(|v| v.is_finite()), "field {i} has NaN/inf");
+        }
+    }
+
+    #[test]
+    fn multi_step_chain_matches_single_step_chains() {
+        // Tiling across 2 timesteps with deep halos must give the same
+        // interior answer as two 1-step chains.
+        let run = |spc: usize| {
+            let mut c = ctx(Platform::KnlFlatDdr4);
+            let mut app = OpenSbli::new(&mut c, 24, spc, 1);
+            app.initialise(&mut c);
+            c.flush();
+            for _ in 0..(2 / spc) {
+                app.exchange_halos(&mut c);
+                for s in 0..spc {
+                    app.step(&mut c, s);
+                }
+            }
+            c.flush();
+            let ds = c.dataset(app.q[1]).clone();
+            let buf = c.fetch(app.q[1]);
+            let n = app.n[0] as isize;
+            let mut vals = vec![];
+            for z in 0..n {
+                for y in 0..n {
+                    for x in 0..n {
+                        vals.push(buf[ds.offset([x, y, z]) as usize]);
+                    }
+                }
+            }
+            vals
+        };
+        let a = run(1);
+        let b = run(2);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-12 * x.abs().max(1.0),
+                "mismatch at {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_matches_untiled_bitexact() {
+        let run = |p: Platform| {
+            let mut c = ctx(p);
+            let mut app = OpenSbli::new(&mut c, 16, 1, 1);
+            app.run(&mut c, 2);
+            c.fetch(app.q[4])
+        };
+        let a = run(Platform::KnlFlatDdr4);
+        let b = run(Platform::KnlCacheTiled);
+        let g = run(Platform::GpuExplicit {
+            link: Link::NvLink,
+            cyclic: true,
+            prefetch: true,
+        });
+        assert_eq!(a, b);
+        assert_eq!(a, g);
+    }
+
+    #[test]
+    fn residual_dominates_runtime() {
+        // use a bench-shaped grid: the tiny cube of the other tests has a
+        // different halo-to-interior ratio and skews the byte shares
+        let mut c = ctx(Platform::GpuBaseline { link: Link::PciE });
+        let mut app = OpenSbli::new_aniso(&mut c, [16, 16, 256], 1, 1);
+        app.run(&mut c, 3);
+        let m = c.metrics();
+        let hot = &m.per_loop["sbli_residual"];
+        let share = hot.time_s / m.loop_time_s;
+        assert!(
+            share > 0.5 && share < 0.85,
+            "residual share {share} outside the paper's 60-68% band"
+        );
+    }
+}

@@ -1,0 +1,255 @@
+//! Shared machinery for the figure-reproduction benchmarks: problem-size
+//! sweeps and series printing in the format of the paper's figures.
+
+use crate::coordinator::{Config, Platform};
+use crate::exec::Metrics;
+use crate::memory::AppCalib;
+
+/// A point of one figure series.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub problem_gb: f64,
+    pub value: Option<f64>,
+}
+
+/// One line of a figure.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<Point>,
+}
+
+/// A figure: a set of series over problem sizes.
+#[derive(Debug, Clone, Default)]
+pub struct Figure {
+    pub title: String,
+    pub ylabel: String,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn new(title: &str, ylabel: &str) -> Self {
+        Figure {
+            title: title.to_string(),
+            ylabel: ylabel.to_string(),
+            series: vec![],
+        }
+    }
+
+    pub fn add_series(&mut self, label: &str) -> usize {
+        self.series.push(Series {
+            label: label.to_string(),
+            points: vec![],
+        });
+        self.series.len() - 1
+    }
+
+    pub fn push(&mut self, series: usize, problem_gb: f64, value: Option<f64>) {
+        self.series[series].points.push(Point { problem_gb, value });
+    }
+
+    /// Render the figure as an aligned text table (rows = problem sizes,
+    /// columns = series) — the same rows/series the paper plots.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n", self.title));
+        out.push_str(&format!("(values: {})\n", self.ylabel));
+        let mut sizes: Vec<f64> = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().map(|p| p.problem_gb))
+            .collect();
+        sizes.sort_by(|a, b| a.total_cmp(b));
+        sizes.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+
+        out.push_str(&format!("{:>10}", "size(GB)"));
+        for s in &self.series {
+            out.push_str(&format!("  {:>24}", s.label));
+        }
+        out.push('\n');
+        for sz in sizes {
+            out.push_str(&format!("{sz:>10.1}"));
+            for s in &self.series {
+                let v = s
+                    .points
+                    .iter()
+                    .find(|p| (p.problem_gb - sz).abs() < 1e-9)
+                    .and_then(|p| p.value);
+                match v {
+                    Some(v) => out.push_str(&format!("  {v:>24.1}")),
+                    None => out.push_str(&format!("  {:>24}", "-")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Run one (platform, app, size) cell and return the effective bandwidth
+/// (None = OOM, matching the paper's truncated series).
+pub fn run_cell<F>(platform: Platform, app_calib: AppCalib, steps: usize, app: F) -> Option<f64>
+where
+    F: FnOnce(&mut crate::ops::OpsContext, usize),
+{
+    let cfg = Config::new(platform, app_calib);
+    let (m, oom) = crate::coordinator::run_app(&cfg, steps, app);
+    if oom {
+        None
+    } else {
+        Some(m.effective_bandwidth_gbs())
+    }
+}
+
+/// Like [`run_cell`] but returns the full metrics (hit rates etc.).
+pub fn run_cell_metrics<F>(
+    platform: Platform,
+    app_calib: AppCalib,
+    steps: usize,
+    app: F,
+) -> (Metrics, bool)
+where
+    F: FnOnce(&mut crate::ops::OpsContext, usize),
+{
+    let cfg = Config::new(platform, app_calib);
+    crate::coordinator::run_app(&cfg, steps, app)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_renders_missing_points_as_dash() {
+        let mut f = Figure::new("t", "GB/s");
+        let a = f.add_series("a");
+        let b = f.add_series("b");
+        f.push(a, 6.0, Some(100.0));
+        f.push(a, 16.0, Some(90.0));
+        f.push(b, 6.0, Some(50.0));
+        f.push(b, 16.0, None);
+        let r = f.render();
+        assert!(r.contains("100.0"));
+        assert!(r.contains('-'));
+        assert!(r.lines().count() >= 4);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// App cell-runners shared by the figure benches, the smoke tests and the
+// CLI launcher. Each runs one (app, platform, modelled-size) cell: real
+// numerics on a small grid, byte accounting scaled to the paper's sizes.
+
+use crate::apps::cloverleaf2d::CloverLeaf2D;
+use crate::apps::cloverleaf3d::CloverLeaf3D;
+use crate::apps::opensbli::OpenSbli;
+use crate::ops::OpsContext;
+
+/// Modelled bytes of an app at `model_scale = 1`.
+pub fn base_bytes<F>(declare: F) -> u64
+where
+    F: FnOnce(&mut OpsContext),
+{
+    let cfg = Config::new(Platform::KnlFlatDdr4, AppCalib::CLOVERLEAF_2D);
+    let mut ctx = OpsContext::new(cfg.build_engine());
+    declare(&mut ctx);
+    ctx.problem_bytes()
+}
+
+/// Scale factor that makes an app with `base` bytes model `target_gb`.
+pub fn model_scale(base: u64, target_gb: f64) -> u64 {
+    ((target_gb * 1e9 / base as f64).round() as u64).max(1)
+}
+
+/// One CloverLeaf 2D cell. Returns (metrics, oom).
+pub fn run_cl2d(
+    platform: Platform,
+    nx: usize,
+    ny: usize,
+    target_gb: f64,
+    steps: usize,
+    summary_every: usize,
+) -> (Metrics, bool) {
+    let base = base_bytes(|ctx| {
+        CloverLeaf2D::new(ctx, nx, ny, 1);
+    });
+    let scale = model_scale(base, target_gb);
+    let cfg = Config::new(platform, AppCalib::CLOVERLEAF_2D);
+    let mut ctx = OpsContext::new(cfg.build_engine());
+    let mut app = CloverLeaf2D::new(&mut ctx, nx, ny, scale);
+    app.run(&mut ctx, steps, summary_every);
+    (ctx.metrics().clone(), ctx.oom())
+}
+
+/// One CloverLeaf 3D cell.
+pub fn run_cl3d(
+    platform: Platform,
+    n: [usize; 3],
+    target_gb: f64,
+    steps: usize,
+    summary_every: usize,
+) -> (Metrics, bool) {
+    let base = base_bytes(|ctx| {
+        CloverLeaf3D::new(ctx, n[0], n[1], n[2], 1);
+    });
+    let scale = model_scale(base, target_gb);
+    let cfg = Config::new(platform, AppCalib::CLOVERLEAF_3D);
+    let mut ctx = OpsContext::new(cfg.build_engine());
+    let mut app = CloverLeaf3D::new(&mut ctx, n[0], n[1], n[2], scale);
+    app.run(&mut ctx, steps, summary_every);
+    (ctx.metrics().clone(), ctx.oom())
+}
+
+/// One OpenSBLI cell; `steps_per_chain` is the §5.3 tile-depth knob.
+pub fn run_sbli(
+    platform: Platform,
+    n: usize,
+    steps_per_chain: usize,
+    target_gb: f64,
+    chains: usize,
+) -> (Metrics, bool) {
+    let base = base_bytes(|ctx| {
+        OpenSbli::new(ctx, n, steps_per_chain, 1);
+    });
+    let scale = model_scale(base, target_gb);
+    let cfg = Config::new(platform, AppCalib::OPENSBLI);
+    let mut ctx = OpsContext::new(cfg.build_engine());
+    let mut app = OpenSbli::new(&mut ctx, n, steps_per_chain, scale);
+    app.run(&mut ctx, chains);
+    (ctx.metrics().clone(), ctx.oom())
+}
+
+/// Effective-bandwidth value for a figure point (None on OOM — the paper
+/// plots truncated series where flat-MCDRAM/GPU-baseline segfault).
+pub fn bw_point(res: (Metrics, bool)) -> Option<f64> {
+    if res.1 {
+        None
+    } else {
+        Some(res.0.effective_bandwidth_gbs())
+    }
+}
+
+/// The problem sizes (GB) the paper's KNL scaling figures sweep.
+pub const KNL_SIZES_GB: [f64; 8] = [6.0, 12.0, 16.0, 20.0, 24.0, 32.0, 40.0, 48.0];
+/// The GPU scaling sweep.
+pub const GPU_SIZES_GB: [f64; 7] = [6.0, 10.0, 13.0, 16.0, 24.0, 36.0, 47.0];
+
+/// OpenSBLI cell on the tall-z bench grid (24×24×384): z has room for
+/// deep skewed tiles; x/y stay small for runtime.
+pub fn run_sbli_tall(
+    platform: Platform,
+    steps_per_chain: usize,
+    target_gb: f64,
+    chains: usize,
+) -> (Metrics, bool) {
+    let n = [24usize, 24, 1024];
+    let base = base_bytes(|ctx| {
+        OpenSbli::new_aniso(ctx, n, steps_per_chain, 1);
+    });
+    let scale = model_scale(base, target_gb);
+    let cfg = Config::new(platform, AppCalib::OPENSBLI);
+    let mut ctx = OpsContext::new(cfg.build_engine());
+    let mut app = OpenSbli::new_aniso(&mut ctx, n, steps_per_chain, scale);
+    app.run(&mut ctx, chains);
+    (ctx.metrics().clone(), ctx.oom())
+}

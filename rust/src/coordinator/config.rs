@@ -1,0 +1,242 @@
+//! Configuration: which modelled platform to run on, with which
+//! calibrations. Loadable from TOML for the launcher, constructible in
+//! code for benches and tests.
+
+use crate::exec::Engine;
+use crate::memory::{
+    AppCalib, GpuCalib, GpuExplicitEngine, GpuOpts, KnlCalib, KnlEngine, Link, PlainEngine,
+    UnifiedCalib, UnifiedEngine,
+};
+
+/// The execution environments of the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Platform {
+    /// KNL flat mode, DDR4 only (numactl to DDR4).
+    KnlFlatDdr4,
+    /// KNL flat mode, MCDRAM only — refuses problems > 16 GB.
+    KnlFlatMcdram,
+    /// KNL cache mode, untiled.
+    KnlCache,
+    /// KNL cache mode with skewed tiling sized to MCDRAM.
+    KnlCacheTiled,
+    /// P100 with all data resident — refuses problems > 16 GB.
+    GpuBaseline { link: Link },
+    /// P100 with explicit 3-slot streaming (Algorithm 1).
+    GpuExplicit {
+        link: Link,
+        cyclic: bool,
+        prefetch: bool,
+    },
+    /// P100 with unified memory.
+    GpuUnified {
+        link: Link,
+        tiled: bool,
+        prefetch: bool,
+    },
+}
+
+impl Platform {
+    pub fn label(&self) -> String {
+        match self {
+            Platform::KnlFlatDdr4 => "KNL flat DDR4".into(),
+            Platform::KnlFlatMcdram => "KNL flat MCDRAM".into(),
+            Platform::KnlCache => "KNL cache".into(),
+            Platform::KnlCacheTiled => "KNL cache tiled".into(),
+            Platform::GpuBaseline { link } => format!("GPU baseline {}", link.name()),
+            Platform::GpuExplicit {
+                link,
+                cyclic,
+                prefetch,
+            } => format!(
+                "GPU explicit {} {}{}",
+                link.name(),
+                if *cyclic { "Cyclic" } else { "NoCyclic" },
+                if *prefetch { " Prefetch" } else { " NoPrefetch" }
+            ),
+            Platform::GpuUnified {
+                link,
+                tiled,
+                prefetch,
+            } => format!(
+                "GPU unified {}{}{}",
+                link.name(),
+                if *tiled { " tiled" } else { "" },
+                if *prefetch { " prefetch" } else { "" }
+            ),
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub platform: Platform,
+    pub app: AppCalib,
+    pub knl: KnlCalib,
+    pub gpu: GpuCalib,
+    pub um: UnifiedCalib,
+}
+
+impl Config {
+    pub fn new(platform: Platform, app: AppCalib) -> Self {
+        Config {
+            platform,
+            app,
+            knl: KnlCalib::default(),
+            gpu: GpuCalib::default(),
+            um: UnifiedCalib::default(),
+        }
+    }
+
+    /// Parse a compact platform spec string (used by the CLI launcher and
+    /// config files): e.g. `knl-cache-tiled`, `gpu-explicit:nvlink:cyclic:prefetch`,
+    /// `gpu-unified:pcie:tiled`, `gpu-baseline:pcie`.
+    pub fn parse_platform(spec: &str) -> anyhow::Result<Platform> {
+        let mut parts = spec.split(':');
+        let head = parts.next().unwrap_or("");
+        let rest: Vec<&str> = parts.collect();
+        let link = || -> anyhow::Result<Link> {
+            match rest.first().copied() {
+                Some("pcie") | None => Ok(Link::PciE),
+                Some("nvlink") => Ok(Link::NvLink),
+                Some(x) => anyhow::bail!("unknown link {x:?} (pcie|nvlink)"),
+            }
+        };
+        let flag = |name: &str| rest.iter().any(|p| *p == name);
+        Ok(match head {
+            "knl-flat-ddr4" => Platform::KnlFlatDdr4,
+            "knl-flat-mcdram" => Platform::KnlFlatMcdram,
+            "knl-cache" => Platform::KnlCache,
+            "knl-cache-tiled" => Platform::KnlCacheTiled,
+            "gpu-baseline" => Platform::GpuBaseline { link: link()? },
+            "gpu-explicit" => Platform::GpuExplicit {
+                link: link()?,
+                cyclic: flag("cyclic"),
+                prefetch: flag("prefetch"),
+            },
+            "gpu-unified" => Platform::GpuUnified {
+                link: link()?,
+                tiled: flag("tiled"),
+                prefetch: flag("prefetch"),
+            },
+            other => anyhow::bail!("unknown platform {other:?}"),
+        })
+    }
+
+    /// Instantiate the memory engine for this configuration.
+    pub fn build_engine(&self) -> Box<dyn Engine> {
+        match self.platform {
+            Platform::KnlFlatDdr4 => {
+                Box::new(PlainEngine::knl_flat_ddr4(self.app.knl_ddr4))
+            }
+            Platform::KnlFlatMcdram => Box::new(PlainEngine::knl_flat_mcdram(
+                self.app.knl_mcdram,
+                self.knl.mcdram_bytes,
+            )),
+            Platform::KnlCache => {
+                Box::new(KnlEngine::new(self.knl.clone(), self.app, false))
+            }
+            Platform::KnlCacheTiled => {
+                Box::new(KnlEngine::new(self.knl.clone(), self.app, true))
+            }
+            Platform::GpuBaseline { link } => {
+                let boost = if link == Link::NvLink {
+                    self.gpu.nvlink_clock_boost
+                } else {
+                    1.0
+                };
+                Box::new(PlainEngine::gpu_baseline(
+                    self.app.gpu * boost,
+                    self.gpu.hbm_bytes,
+                    self.gpu.launch_s,
+                ))
+            }
+            Platform::GpuExplicit {
+                link,
+                cyclic,
+                prefetch,
+            } => Box::new(GpuExplicitEngine::new(
+                self.gpu.clone(),
+                self.app,
+                link,
+                GpuOpts { cyclic, prefetch, slots: 3 },
+            )),
+            Platform::GpuUnified {
+                link,
+                tiled,
+                prefetch,
+            } => Box::new(UnifiedEngine::new(
+                self.gpu.clone(),
+                self.um.clone(),
+                self.app,
+                link,
+                tiled,
+                prefetch,
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_platform_builds() {
+        let platforms = [
+            Platform::KnlFlatDdr4,
+            Platform::KnlFlatMcdram,
+            Platform::KnlCache,
+            Platform::KnlCacheTiled,
+            Platform::GpuBaseline { link: Link::PciE },
+            Platform::GpuExplicit {
+                link: Link::NvLink,
+                cyclic: true,
+                prefetch: true,
+            },
+            Platform::GpuUnified {
+                link: Link::PciE,
+                tiled: true,
+                prefetch: false,
+            },
+        ];
+        for p in platforms {
+            let cfg = Config::new(p, AppCalib::CLOVERLEAF_2D);
+            let e = cfg.build_engine();
+            assert!(!e.describe().is_empty());
+        }
+    }
+
+    #[test]
+    fn platform_spec_strings_parse() {
+        assert_eq!(
+            Config::parse_platform("knl-cache-tiled").unwrap(),
+            Platform::KnlCacheTiled
+        );
+        assert_eq!(
+            Config::parse_platform("gpu-explicit:nvlink:cyclic:prefetch").unwrap(),
+            Platform::GpuExplicit {
+                link: Link::NvLink,
+                cyclic: true,
+                prefetch: true
+            }
+        );
+        assert_eq!(
+            Config::parse_platform("gpu-unified:pcie:tiled").unwrap(),
+            Platform::GpuUnified {
+                link: Link::PciE,
+                tiled: true,
+                prefetch: false
+            }
+        );
+        assert!(Config::parse_platform("bogus").is_err());
+    }
+
+    #[test]
+    fn flat_mcdram_refuses_oversized() {
+        let cfg = Config::new(Platform::KnlFlatMcdram, AppCalib::CLOVERLEAF_2D);
+        let e = cfg.build_engine();
+        assert!(!e.fits(17 * (1 << 30)));
+        assert!(e.fits(15 * (1 << 30)));
+    }
+}

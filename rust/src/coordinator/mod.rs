@@ -1,0 +1,62 @@
+//! The coordinator: configuration, the run driver, and reporting.
+//!
+//! This is the "leader" layer of the stack: it owns process lifecycle,
+//! builds the [`crate::OpsContext`] for a configured platform, runs the
+//! application's timestep driver, and renders the paper's metrics.
+
+pub mod config;
+pub mod report;
+
+pub use config::{Config, Platform};
+pub use report::{print_summary, Summary};
+
+use crate::exec::Metrics;
+use crate::ops::OpsContext;
+
+/// Run an application closure under a configuration and return the final
+/// metrics. `steps` is forwarded to the app driver.
+///
+/// The app closure receives a fresh context wired to the configured
+/// engine and must: declare its data, run `steps` timesteps, and leave
+/// results queriable. Metrics are reset after initialisation by the app
+/// itself (via [`OpsContext::reset_metrics`]) so the timed region matches
+/// the paper's.
+pub fn run_app<F>(cfg: &Config, steps: usize, app: F) -> (Metrics, bool)
+where
+    F: FnOnce(&mut OpsContext, usize),
+{
+    let mut ctx = OpsContext::new(cfg.build_engine());
+    app(&mut ctx, steps);
+    ctx.flush();
+    (ctx.metrics().clone(), ctx.oom())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::AppCalib;
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::shapes;
+    use crate::ops::{Access, Arg};
+
+    #[test]
+    fn run_app_collects_metrics() {
+        let cfg = Config::new(Platform::KnlFlatDdr4, AppCalib::CLOVERLEAF_2D);
+        let (m, oom) = run_app(&cfg, 3, |ctx, steps| {
+            let b = ctx.decl_block("g", [16, 16, 1]);
+            let d = ctx.decl_dat(b, "d", [16, 16, 1], [1, 1, 0], [1, 1, 0]);
+            let s = ctx.decl_stencil("pt", shapes::point());
+            for _ in 0..steps {
+                ctx.par_loop(
+                    "set",
+                    b,
+                    [(0, 16), (0, 16), (0, 1)],
+                    kernel(|c| c.w(0, 0, 0, 1.0)),
+                    vec![Arg::dat(d, s, Access::Write)],
+                );
+            }
+        });
+        assert!(!oom);
+        assert_eq!(m.per_loop["set"].invocations, 3);
+    }
+}

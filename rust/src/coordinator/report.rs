@@ -1,0 +1,123 @@
+//! Human-readable reporting of the paper's metrics.
+
+use crate::exec::Metrics;
+
+/// A rendered summary of one run.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub label: String,
+    pub problem_gb: f64,
+    pub avg_bw_gbs: f64,
+    pub eff_bw_gbs: f64,
+    pub cache_hit_rate: f64,
+    pub tiles: u64,
+    pub h2d_gb: f64,
+    pub d2h_gb: f64,
+    pub elapsed_s: f64,
+    pub oom: bool,
+}
+
+impl Summary {
+    pub fn from_metrics(label: &str, problem_bytes: u64, m: &Metrics, oom: bool) -> Self {
+        Summary {
+            label: label.to_string(),
+            problem_gb: problem_bytes as f64 / 1e9,
+            avg_bw_gbs: m.average_bandwidth_gbs(),
+            eff_bw_gbs: m.effective_bandwidth_gbs(),
+            cache_hit_rate: m.cache_hit_rate(),
+            tiles: m.tiles,
+            h2d_gb: m.h2d_bytes as f64 / 1e9,
+            d2h_gb: m.d2h_bytes as f64 / 1e9,
+            elapsed_s: m.elapsed_s,
+            oom,
+        }
+    }
+
+    /// One row of the figures' tables.
+    pub fn row(&self) -> String {
+        if self.oom {
+            format!(
+                "{:<38} {:>8.1}  {:>10}  {:>10}",
+                self.label, self.problem_gb, "OOM", "-"
+            )
+        } else {
+            format!(
+                "{:<38} {:>8.1}  {:>10.1}  {:>10.1}",
+                self.label, self.problem_gb, self.avg_bw_gbs, self.eff_bw_gbs
+            )
+        }
+    }
+}
+
+/// Print a full run summary, including the per-kernel hot list.
+pub fn print_summary(label: &str, problem_bytes: u64, m: &Metrics, oom: bool) {
+    let s = Summary::from_metrics(label, problem_bytes, m, oom);
+    println!("== {label} ==");
+    println!("  problem size        : {:.2} GB (modelled)", s.problem_gb);
+    if oom {
+        println!("  RESULT              : OOM (does not fit modelled memory)");
+        return;
+    }
+    println!("  average bandwidth   : {:.1} GB/s (paper §5.1 metric)", s.avg_bw_gbs);
+    println!("  effective bandwidth : {:.1} GB/s (incl. transfers/halos)", s.eff_bw_gbs);
+    println!("  modelled time       : {:.4} s", s.elapsed_s);
+    if m.cache_hits + m.cache_misses > 0 {
+        println!("  MCDRAM hit rate     : {:.1} %", s.cache_hit_rate * 100.0);
+    }
+    if m.tiles > 0 {
+        println!("  tiles executed      : {}", m.tiles);
+    }
+    if m.h2d_bytes + m.d2h_bytes > 0 {
+        println!(
+            "  transfers           : {:.2} GB H2D, {:.2} GB D2H, {:.2} GB D2D",
+            s.h2d_gb,
+            s.d2h_gb,
+            m.d2d_bytes as f64 / 1e9
+        );
+    }
+    if m.page_faults > 0 {
+        println!("  page faults         : {}", m.page_faults);
+    }
+    if m.halo_exchanges > 0 {
+        println!(
+            "  halo exchanges      : {} ({:.4} s)",
+            m.halo_exchanges, m.halo_time_s
+        );
+    }
+    let hot = m.hottest(5);
+    if !hot.is_empty() {
+        println!("  hottest kernels:");
+        for (name, st) in hot {
+            println!(
+                "    {:<28} {:>8} calls  {:>8.1} GB/s  {:>6.1} % time",
+                name,
+                st.invocations,
+                st.bandwidth_gbs(),
+                100.0 * st.time_s / m.loop_time_s.max(1e-30)
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_formats_oom() {
+        let m = Metrics::new();
+        let s = Summary::from_metrics("x", 1 << 30, &m, true);
+        assert!(s.row().contains("OOM"));
+    }
+
+    #[test]
+    fn summary_captures_metrics() {
+        let mut m = Metrics::new();
+        m.record_loop("k", 1_000_000_000, 0.01);
+        m.elapsed_s = 0.02;
+        let s = Summary::from_metrics("x", 2_000_000_000, &m, false);
+        assert!((s.avg_bw_gbs - 100.0).abs() < 1e-9);
+        assert!((s.eff_bw_gbs - 50.0).abs() < 1e-9);
+        assert!((s.problem_gb - 2.0).abs() < 1e-12);
+    }
+}

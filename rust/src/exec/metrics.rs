@@ -1,0 +1,180 @@
+//! Metrics, chief among them the paper's §5.1 **Average Bandwidth**:
+//! per-loop bytes touched (1× for reads or writes, 2× for read+write)
+//! divided by per-loop modelled runtime, weighted-averaged over all loops
+//! — equivalently, total useful bytes over total loop time.
+
+use std::collections::HashMap;
+
+/// Accumulated statistics for one kernel name.
+#[derive(Debug, Clone, Default)]
+pub struct LoopStat {
+    pub invocations: u64,
+    pub bytes: u64,
+    pub time_s: f64,
+}
+
+impl LoopStat {
+    pub fn bandwidth_gbs(&self) -> f64 {
+        if self.time_s > 0.0 {
+            self.bytes as f64 / self.time_s / 1e9
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Simulation-wide metrics sink.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Σ bytes touched by loop bodies (§5.1 accounting).
+    pub loop_bytes: u64,
+    /// Σ modelled loop runtime, seconds.
+    pub loop_time_s: f64,
+    /// Wall-clock of the whole simulated schedule (≥ loop time when
+    /// transfers don't overlap; < Σ component times when they do).
+    pub elapsed_s: f64,
+    /// Host→device bytes moved (explicit/unified GPU engines).
+    pub h2d_bytes: u64,
+    /// Device→host bytes moved.
+    pub d2h_bytes: u64,
+    /// Device→device bytes (tile edge copies).
+    pub d2d_bytes: u64,
+    /// MCDRAM-cache statistics (KNL cache mode).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Unified-memory page faults serviced.
+    pub page_faults: u64,
+    /// Time spent in (modelled) halo exchanges.
+    pub halo_time_s: f64,
+    /// Number of halo exchanges performed.
+    pub halo_exchanges: u64,
+    /// Number of loop chains executed.
+    pub chains: u64,
+    /// Number of tiles executed (0 if untiled).
+    pub tiles: u64,
+    /// Per-kernel-name breakdown.
+    pub per_loop: HashMap<String, LoopStat>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one loop execution (possibly one tile's slice of it).
+    pub fn record_loop(&mut self, name: &str, bytes: u64, time_s: f64) {
+        self.loop_bytes += bytes;
+        self.loop_time_s += time_s;
+        let st = self.per_loop.entry(name.to_string()).or_default();
+        st.invocations += 1;
+        st.bytes += bytes;
+        st.time_s += time_s;
+    }
+
+    /// The headline metric: weighted Average Bandwidth in GB/s.
+    pub fn average_bandwidth_gbs(&self) -> f64 {
+        if self.loop_time_s > 0.0 {
+            self.loop_bytes as f64 / self.loop_time_s / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    /// Average bandwidth against *wall* time (includes non-overlapped
+    /// transfer and halo time) — what problem-scaling figures plot.
+    pub fn effective_bandwidth_gbs(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.loop_bytes as f64 / self.elapsed_s / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    /// MCDRAM cache hit rate in `[0, 1]` (1.0 when no cache modelled).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Merge another metrics block into this one (used by sweep drivers).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.loop_bytes += other.loop_bytes;
+        self.loop_time_s += other.loop_time_s;
+        self.elapsed_s += other.elapsed_s;
+        self.h2d_bytes += other.h2d_bytes;
+        self.d2h_bytes += other.d2h_bytes;
+        self.d2d_bytes += other.d2d_bytes;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.page_faults += other.page_faults;
+        self.halo_time_s += other.halo_time_s;
+        self.halo_exchanges += other.halo_exchanges;
+        self.chains += other.chains;
+        self.tiles += other.tiles;
+        for (k, v) in &other.per_loop {
+            let st = self.per_loop.entry(k.clone()).or_default();
+            st.invocations += v.invocations;
+            st.bytes += v.bytes;
+            st.time_s += v.time_s;
+        }
+    }
+
+    /// Kernel names sorted by time share, descending — profiling report.
+    pub fn hottest(&self, n: usize) -> Vec<(String, LoopStat)> {
+        let mut v: Vec<_> = self
+            .per_loop
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| b.1.time_s.total_cmp(&a.1.time_s));
+        v.truncate(n);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_bandwidth_is_weighted() {
+        let mut m = Metrics::new();
+        // 100 GB in 1 s + 100 GB in 3 s → 200 GB / 4 s = 50 GB/s,
+        // NOT the arithmetic mean of 100 and 33.3.
+        m.record_loop("a", 100_000_000_000, 1.0);
+        m.record_loop("b", 100_000_000_000, 3.0);
+        assert!((m.average_bandwidth_gbs() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hit_rate_defaults_to_one() {
+        let m = Metrics::new();
+        assert_eq!(m.cache_hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Metrics::new();
+        a.record_loop("k", 10, 1.0);
+        let mut b = Metrics::new();
+        b.record_loop("k", 20, 2.0);
+        b.cache_hits = 5;
+        a.merge(&b);
+        assert_eq!(a.loop_bytes, 30);
+        assert_eq!(a.per_loop["k"].invocations, 2);
+        assert_eq!(a.cache_hits, 5);
+    }
+
+    #[test]
+    fn hottest_sorts_by_time() {
+        let mut m = Metrics::new();
+        m.record_loop("cold", 1, 0.1);
+        m.record_loop("hot", 1, 9.0);
+        let h = m.hottest(1);
+        assert_eq!(h[0].0, "hot");
+    }
+}

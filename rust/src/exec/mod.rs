@@ -1,0 +1,67 @@
+//! Execution layer: numeric *executors* (who computes a loop body) and
+//! memory *engines* (in what order tiles run and what the simulated clock
+//! says).
+//!
+//! The split is the heart of the reproduction methodology: **numerics are
+//! real** — executors actually run kernel bodies over iteration ranges so
+//! tiled and untiled schedules can be compared bit-for-bit — while **time
+//! is modelled** by the engines, calibrated against the paper's measured
+//! STREAM/baseline numbers (see [`crate::memory::hierarchy`]).
+
+pub mod metrics;
+pub mod native;
+pub mod pjrt;
+
+pub use metrics::{LoopStat, Metrics};
+pub use native::NativeExecutor;
+pub use pjrt::PjrtExecutor;
+
+use crate::ops::{DataStore, Dataset, LoopInst, Range3, Reduction, Stencil};
+
+/// Everything an engine needs to run a chain: dataset/stencil metadata,
+/// the canonical data store, reduction slots and the metrics sink.
+pub struct World<'a> {
+    pub datasets: &'a [Dataset],
+    pub stencils: &'a [Stencil],
+    pub store: &'a mut DataStore,
+    pub reds: &'a mut [Reduction],
+    pub metrics: &'a mut Metrics,
+    pub exec: &'a mut dyn Executor,
+}
+
+/// A numeric executor: runs one loop body over a (possibly tiled) range.
+pub trait Executor {
+    /// Execute `l`'s kernel over `range` (which may be a tile-restricted
+    /// sub-range of `l.range`).
+    fn run_loop(
+        &mut self,
+        l: &LoopInst,
+        range: Range3,
+        datasets: &[Dataset],
+        store: &mut DataStore,
+        reds: &mut [Reduction],
+    );
+
+    /// Executor name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// A memory engine: executes a full lazily-collected loop chain in some
+/// legal order while advancing the simulated clock and metrics.
+pub trait Engine {
+    /// Run the chain. `cyclic_phase` is the §4.1 flag the application sets
+    /// once its regular cyclic execution pattern begins (enables the
+    /// unsafe skip-download-of-write-first-data optimisation on GPU
+    /// engines).
+    fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, cyclic_phase: bool);
+
+    /// Human-readable configuration string for reports.
+    fn describe(&self) -> String;
+
+    /// Whether the modelled configuration can hold the problem at all
+    /// (flat-MCDRAM and non-oversubscribed GPU baselines refuse problems
+    /// larger than fast memory — the paper reports segfaults/OOM there).
+    fn fits(&self, _problem_bytes: u64) -> bool {
+        true
+    }
+}

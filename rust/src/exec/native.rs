@@ -1,0 +1,297 @@
+//! The native executor: runs kernel bodies point-by-point over iteration
+//! ranges — the role OPS's generated C/CUDA code plays.
+
+use super::Executor;
+use crate::ops::kernel::{ArgView, Ctx};
+use crate::ops::{Arg, DataStore, Dataset, LoopInst, Range3, Reduction};
+
+/// Runs loop bodies directly in Rust.
+#[derive(Debug, Default)]
+pub struct NativeExecutor {
+    /// Loop executions performed (diagnostics).
+    pub loops_run: u64,
+    /// Iteration points executed (diagnostics).
+    pub points_run: u64,
+}
+
+impl NativeExecutor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Executor for NativeExecutor {
+    fn run_loop(
+        &mut self,
+        l: &LoopInst,
+        range: Range3,
+        datasets: &[Dataset],
+        store: &mut DataStore,
+        reds: &mut [Reduction],
+    ) {
+        run_loop_native(l, range, datasets, store, reds);
+        self.loops_run += 1;
+        self.points_run += crate::ops::parloop::range_points(&range);
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Free-function core so other executors (PJRT fallback) can reuse it.
+pub fn run_loop_native(
+    l: &LoopInst,
+    range: Range3,
+    datasets: &[Dataset],
+    store: &mut DataStore,
+    reds: &mut [Reduction],
+) {
+    let (x0, x1) = range[0];
+    let (y0, y1) = range[1];
+    let (z0, z1) = range[2];
+    if x0 >= x1 || y0 >= y1 || z0 >= z1 {
+        return;
+    }
+
+    // Build per-argument views positioned at the range origin, plus the
+    // reduction slot table and the global-constant table for this loop.
+    let mut views: Vec<ArgView> = Vec::with_capacity(l.args.len());
+    let mut red_slots: Vec<usize> = Vec::new(); // slot -> global ReductionId index
+    let mut red_vals: Vec<f64> = Vec::new();
+    let mut consts: Vec<f64> = Vec::new();
+
+    for a in &l.args {
+        match a {
+            Arg::Dat { dat, acc, .. } => {
+                #[cfg(not(debug_assertions))]
+                let _ = acc;
+                let ds = &datasets[dat.0 as usize];
+                let (base, _len) = store.raw(*dat);
+                let strides = ds.strides();
+                let origin = ds.offset([x0, y0, z0]);
+                views.push(ArgView {
+                    ptr: unsafe { base.offset(origin) },
+                    strides,
+                    #[cfg(debug_assertions)]
+                    lo: base as *const f64,
+                    #[cfg(debug_assertions)]
+                    hi: unsafe { base.add(_len) as *const f64 },
+                    #[cfg(debug_assertions)]
+                    acc: *acc,
+                });
+            }
+            Arg::GblRed { red, op } => {
+                red_slots.push(red.0 as usize);
+                red_vals.push(op.identity());
+            }
+            Arg::GblConst { values } => consts.extend_from_slice(values),
+            Arg::Idx => {}
+        }
+    }
+
+    let nviews = views.len();
+    let mut row_views = views.clone();
+    for z in z0..z1 {
+        for y in y0..y1 {
+            // Position row start: origin + (y - y0)*sy + (z - z0)*sz.
+            for v in 0..nviews {
+                let s = views[v].strides;
+                row_views[v].ptr = unsafe {
+                    views[v].ptr.offset((y - y0) * s[1] + (z - z0) * s[2])
+                };
+            }
+            let mut ctx = Ctx {
+                args: &row_views,
+                red: &mut red_vals,
+                consts: &consts,
+                idx: [x0, y, z],
+                xoff: 0,
+            };
+            for x in x0..x1 {
+                ctx.idx[0] = x;
+                ctx.xoff = x - x0;
+                (l.kernel)(&mut ctx);
+            }
+        }
+    }
+
+    // Fold local reduction slots into the global reduction table.
+    for (slot, &rid) in red_slots.iter().enumerate() {
+        let r = &mut reds[rid];
+        r.value = r.op.combine(r.value, red_vals[slot]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::StencilId;
+    use crate::ops::{Access, BlockId, DatasetId, RedOp, ReductionId};
+    use std::sync::Arc;
+
+    fn dataset(id: u32, size: [usize; 3]) -> Dataset {
+        Dataset {
+            id: DatasetId(id),
+            block: BlockId(0),
+            name: format!("d{id}"),
+            size,
+            halo_lo: [2, 2, 0],
+            halo_hi: [2, 2, 0],
+            elem_bytes: 8,
+        }
+    }
+
+    #[test]
+    fn write_then_read_with_stencil() {
+        let d0 = dataset(0, [8, 8, 1]);
+        let d1 = dataset(1, [8, 8, 1]);
+        let mut store = DataStore::new();
+        store.alloc(&d0);
+        store.alloc(&d1);
+        let datasets = vec![d0, d1];
+        let mut reds: Vec<Reduction> = vec![];
+
+        // loop 1: d0[i,j] = i + 10*j over full padded-interior range
+        let l1 = LoopInst {
+            name: "init".into(),
+            block: BlockId(0),
+            range: [(-2, 10), (-2, 10), (0, 1)],
+            args: vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)],
+            kernel: kernel(|c| {
+                let [x, y, _] = c.idx();
+                c.w(0, 0, 0, (x + 10 * y) as f64);
+            }),
+            seq: 0,
+            bw_efficiency: 1.0,
+        };
+        // loop 2: d1 = laplacian-ish sum of d0 neighbours
+        let l2 = LoopInst {
+            name: "stencil".into(),
+            block: BlockId(0),
+            range: [(0, 8), (0, 8), (0, 1)],
+            args: vec![
+                Arg::dat(DatasetId(0), StencilId(1), Access::Read),
+                Arg::dat(DatasetId(1), StencilId(0), Access::Write),
+            ],
+            kernel: kernel(|c| {
+                let v = c.r(0, -1, 0) + c.r(0, 1, 0) + c.r(0, 0, -1) + c.r(0, 0, 1);
+                c.w(1, 0, 0, v);
+            }),
+            seq: 1,
+            bw_efficiency: 1.0,
+        };
+
+        let mut ex = NativeExecutor::new();
+        ex.run_loop(&l1, l1.range, &datasets, &mut store, &mut reds);
+        ex.run_loop(&l2, l2.range, &datasets, &mut store, &mut reds);
+
+        // check one interior point: neighbours of (3,4)
+        let expect = (2 + 40) + (4 + 40) + (3 + 30) + (3 + 50);
+        let off = datasets[1].offset([3, 4, 0]) as usize;
+        assert_eq!(store.buf(DatasetId(1))[off], expect as f64);
+        assert_eq!(ex.loops_run, 2);
+    }
+
+    #[test]
+    fn reduction_min() {
+        let d0 = dataset(0, [4, 4, 1]);
+        let mut store = DataStore::new();
+        store.alloc(&d0);
+        let datasets = vec![d0];
+        let mut reds = vec![Reduction::new(ReductionId(0), "m", RedOp::Min)];
+
+        let init = LoopInst {
+            name: "init".into(),
+            block: BlockId(0),
+            range: [(0, 4), (0, 4), (0, 1)],
+            args: vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)],
+            kernel: kernel(|c| {
+                let [x, y, _] = c.idx();
+                c.w(0, 0, 0, ((x - 1) * (y - 2)) as f64);
+            }),
+            seq: 0,
+            bw_efficiency: 1.0,
+        };
+        let red = LoopInst {
+            name: "minred".into(),
+            block: BlockId(0),
+            range: [(0, 4), (0, 4), (0, 1)],
+            args: vec![
+                Arg::dat(DatasetId(0), StencilId(0), Access::Read),
+                Arg::GblRed {
+                    red: ReductionId(0),
+                    op: RedOp::Min,
+                },
+            ],
+            kernel: kernel(|c| {
+                let v = c.r(0, 0, 0);
+                c.red_min(0, v);
+            }),
+            seq: 1,
+            bw_efficiency: 1.0,
+        };
+        let mut ex = NativeExecutor::new();
+        ex.run_loop(&init, init.range, &datasets, &mut store, &mut reds);
+        ex.run_loop(&red, red.range, &datasets, &mut store, &mut reds);
+        // min over (x-1)(y-2) for x,y in 0..4: min is (3-1)*(0-2) = -4? check:
+        // values: (x-1) in {-1,0,1,2}, (y-2) in {-2,-1,0,1}; min product = 2*(-2) = -4.
+        assert_eq!(reds[0].value, -4.0);
+    }
+
+    #[test]
+    fn gbl_const_passed_through() {
+        let d0 = dataset(0, [2, 2, 1]);
+        let mut store = DataStore::new();
+        store.alloc(&d0);
+        let datasets = vec![d0];
+        let mut reds = vec![];
+        let l = LoopInst {
+            name: "c".into(),
+            block: BlockId(0),
+            range: [(0, 2), (0, 2), (0, 1)],
+            args: vec![
+                Arg::dat(DatasetId(0), StencilId(0), Access::Write),
+                Arg::GblConst {
+                    values: vec![2.5, 4.0],
+                },
+            ],
+            kernel: kernel(|c| {
+                let v = c.gbl(0) * c.gbl(1);
+                c.w(0, 0, 0, v);
+            }),
+            seq: 0,
+            bw_efficiency: 1.0,
+        };
+        let mut ex = NativeExecutor::new();
+        ex.run_loop(&l, l.range, &datasets, &mut store, &mut reds);
+        let off = datasets[0].offset([1, 1, 0]) as usize;
+        assert_eq!(store.buf(DatasetId(0))[off], 10.0);
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        let d0 = dataset(0, [4, 4, 1]);
+        let mut store = DataStore::new();
+        store.alloc(&d0);
+        let datasets = vec![d0];
+        let mut reds = vec![];
+        let called = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let called2 = called.clone();
+        let l = LoopInst {
+            name: "noop".into(),
+            block: BlockId(0),
+            range: [(2, 2), (0, 4), (0, 1)],
+            args: vec![],
+            kernel: kernel(move |_| {
+                called2.store(true, std::sync::atomic::Ordering::SeqCst)
+            }),
+            seq: 0,
+            bw_efficiency: 1.0,
+        };
+        let mut ex = NativeExecutor::new();
+        ex.run_loop(&l, l.range, &datasets, &mut store, &mut reds);
+        assert!(!called.load(std::sync::atomic::Ordering::SeqCst));
+    }
+}

@@ -1,0 +1,167 @@
+//! The PJRT executor backend: loops whose kernels were AOT-compiled from
+//! JAX/Pallas run through XLA; everything else falls back to the native
+//! executor.
+//!
+//! Contract with the artifacts: each program computes a *full sweep* of
+//! its kernel over the whole padded arrays (the same elemental function
+//! the Rust kernel applies), returning updated arrays. The executor then
+//! writes back only the rows inside the requested (possibly
+//! tile-restricted) range, which makes the artifact valid for *any*
+//! sub-range — exactly the property tiled execution needs.
+
+use super::native::run_loop_native;
+use super::Executor;
+use crate::ops::{DataStore, Dataset, DatasetId, LoopInst, Range3, Reduction};
+use crate::runtime::{ArtifactSpec, LoadedArtifact};
+use std::collections::HashMap;
+
+struct Bound {
+    art: LoadedArtifact,
+    inputs: Vec<DatasetId>,
+    outputs: Vec<DatasetId>,
+}
+
+/// Executor that dispatches registered kernels to PJRT.
+pub struct PjrtExecutor {
+    bound: HashMap<String, Bound>,
+    /// Loops executed through XLA.
+    pub pjrt_loops: u64,
+    /// Loops that fell back to the native path.
+    pub native_loops: u64,
+}
+
+impl PjrtExecutor {
+    pub fn new() -> Self {
+        PjrtExecutor {
+            bound: HashMap::new(),
+            pjrt_loops: 0,
+            native_loops: 0,
+        }
+    }
+
+    /// Bind an artifact to a kernel name, resolving dataset names against
+    /// the declared datasets.
+    pub fn register(
+        &mut self,
+        spec: &ArtifactSpec,
+        art: LoadedArtifact,
+        datasets: &[Dataset],
+    ) -> anyhow::Result<()> {
+        let resolve = |name: &str| -> anyhow::Result<DatasetId> {
+            datasets
+                .iter()
+                .find(|d| d.name == name)
+                .map(|d| d.id)
+                .ok_or_else(|| anyhow::anyhow!("artifact {} references unknown dataset {name}", spec.kernel))
+        };
+        let inputs = spec
+            .inputs
+            .iter()
+            .map(|n| resolve(n))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let outputs = spec
+            .outputs
+            .iter()
+            .map(|n| resolve(n))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        // Shape sanity check against the first input dataset.
+        if let Some(d0) = inputs.first() {
+            let ds = &datasets[d0.0 as usize];
+            let padded: Vec<usize> = if ds.padded(2) == 1 {
+                vec![ds.padded(1), ds.padded(0)]
+            } else {
+                vec![ds.padded(2), ds.padded(1), ds.padded(0)]
+            };
+            anyhow::ensure!(
+                padded == spec.shape,
+                "artifact {} compiled for shape {:?} but dataset {} is {:?}",
+                spec.kernel,
+                spec.shape,
+                ds.name,
+                padded
+            );
+        }
+        self.bound.insert(
+            spec.kernel.clone(),
+            Bound {
+                art,
+                inputs,
+                outputs,
+            },
+        );
+        Ok(())
+    }
+
+    pub fn registered(&self) -> usize {
+        self.bound.len()
+    }
+}
+
+impl Default for PjrtExecutor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn run_loop(
+        &mut self,
+        l: &LoopInst,
+        range: Range3,
+        datasets: &[Dataset],
+        store: &mut DataStore,
+        reds: &mut [Reduction],
+    ) {
+        let Some(b) = self.bound.get(&l.name) else {
+            self.native_loops += 1;
+            run_loop_native(l, range, datasets, store, reds);
+            return;
+        };
+        self.pjrt_loops += 1;
+
+        // Gather inputs: full padded buffers as f64 literals.
+        let mut lits = Vec::with_capacity(b.inputs.len());
+        for &d in &b.inputs {
+            let ds = &datasets[d.0 as usize];
+            let buf = store.buf(d);
+            let lit = xla::Literal::vec1(buf);
+            let dims: Vec<i64> = if ds.padded(2) == 1 {
+                vec![ds.padded(1) as i64, ds.padded(0) as i64]
+            } else {
+                vec![ds.padded(2) as i64, ds.padded(1) as i64, ds.padded(0) as i64]
+            };
+            lits.push(lit.reshape(&dims).expect("reshape input literal"));
+        }
+
+        let outs = b
+            .art
+            .run(&lits)
+            .unwrap_or_else(|e| panic!("PJRT execution of {} failed: {e:#}", l.name));
+        assert_eq!(
+            outs.len(),
+            b.outputs.len(),
+            "artifact {} output arity mismatch",
+            l.name
+        );
+
+        // Write back only the requested sub-range.
+        for (lit, &d) in outs.iter().zip(&b.outputs) {
+            let ds = &datasets[d.0 as usize];
+            let v: Vec<f64> = lit.to_vec().expect("output literal to_vec");
+            assert_eq!(v.len(), ds.alloc_len(), "artifact output size mismatch");
+            let buf = store.buf_mut(d);
+            let (x0, x1) = range[0];
+            for z in range[2].0..range[2].1 {
+                for y in range[1].0..range[1].1 {
+                    let off = ds.offset([x0, y, z]) as usize;
+                    let n = (x1 - x0) as usize;
+                    buf[off..off + n].copy_from_slice(&v[off..off + n]);
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,92 @@
+//! Lazy execution: parallel loops are recorded, not run (§3).
+//!
+//! The queue accumulates [`LoopInst`]s until an API call that returns
+//! data to user space (a reduction result, a dataset fetch) forces the
+//! chain to execute. The longer the chain, the more loops the tiling
+//! analysis can fuse over — OPS cannot "see ahead" past a trigger point,
+//! which is exactly why the Cyclic optimisation of §4.1 needs an
+//! application-provided flag.
+
+use crate::ops::LoopInst;
+
+/// The deferred loop queue.
+#[derive(Default)]
+pub struct LoopQueue {
+    pending: Vec<LoopInst>,
+    next_seq: u64,
+    /// Total loops ever enqueued.
+    pub total_enqueued: u64,
+    /// Number of chain executions triggered.
+    pub flushes: u64,
+}
+
+impl LoopQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a loop; assigns its sequence number.
+    pub fn push(&mut self, mut l: LoopInst) {
+        l.seq = self.next_seq;
+        self.next_seq += 1;
+        self.total_enqueued += 1;
+        self.pending.push(l);
+    }
+
+    /// Take the pending chain for execution (trigger point reached).
+    pub fn take_chain(&mut self) -> Vec<LoopInst> {
+        if !self.pending.is_empty() {
+            self.flushes += 1;
+        }
+        std::mem::take(&mut self.pending)
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::kernel::kernel;
+    use crate::ops::BlockId;
+
+    fn lp() -> LoopInst {
+        LoopInst {
+            name: "l".into(),
+            block: BlockId(0),
+            range: [(0, 1), (0, 1), (0, 1)],
+            args: vec![],
+            kernel: kernel(|_| {}),
+            seq: 0,
+            bw_efficiency: 1.0,
+        }
+    }
+
+    #[test]
+    fn sequence_numbers_are_global() {
+        let mut q = LoopQueue::new();
+        q.push(lp());
+        q.push(lp());
+        let c1 = q.take_chain();
+        assert_eq!(c1.len(), 2);
+        assert_eq!(c1[1].seq, 1);
+        q.push(lp());
+        let c2 = q.take_chain();
+        assert_eq!(c2[0].seq, 2, "seq continues across chains");
+        assert_eq!(q.flushes, 2);
+        assert_eq!(q.total_enqueued, 3);
+    }
+
+    #[test]
+    fn empty_flush_not_counted() {
+        let mut q = LoopQueue::new();
+        assert!(q.take_chain().is_empty());
+        assert_eq!(q.flushes, 0);
+    }
+}

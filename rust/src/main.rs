@@ -1,0 +1,143 @@
+//! ops-oc launcher: run any paper application on any modelled platform
+//! and print the §5.1 metrics, or regenerate a figure sweep.
+//!
+//! Usage:
+//!   ops-oc run   --app cloverleaf2d --platform knl-cache-tiled \
+//!                --size-gb 48 --steps 4
+//!   ops-oc sweep --app opensbli --platform gpu-explicit:nvlink:cyclic:prefetch
+//!   ops-oc list
+//!
+//! Platform specs: knl-flat-ddr4 | knl-flat-mcdram | knl-cache |
+//!   knl-cache-tiled | gpu-baseline[:link] |
+//!   gpu-explicit[:link][:cyclic][:prefetch] |
+//!   gpu-unified[:link][:tiled][:prefetch]     (link = pcie | nvlink)
+
+use ops_oc::bench_support::{self, Figure};
+use ops_oc::coordinator::{print_summary, Config, Platform};
+use std::process::exit;
+
+struct Args {
+    cmd: String,
+    app: String,
+    platform: String,
+    size_gb: f64,
+    steps: usize,
+    chain_steps: usize,
+}
+
+fn parse_args() -> Args {
+    let mut a = Args {
+        cmd: String::new(),
+        app: "cloverleaf2d".into(),
+        platform: "knl-cache-tiled".into(),
+        size_gb: 24.0,
+        steps: 4,
+        chain_steps: 1,
+    };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "run" | "sweep" | "list" | "help" | "--help" | "-h" => {
+                a.cmd = argv[i].trim_start_matches('-').to_string()
+            }
+            flag @ ("--app" | "--platform" | "--size-gb" | "--steps" | "--chain-steps") => {
+                i += 1;
+                let Some(v) = argv.get(i) else {
+                    eprintln!("missing value for {flag}");
+                    exit(2);
+                };
+                match flag {
+                    "--app" => a.app = v.clone(),
+                    "--platform" => a.platform = v.clone(),
+                    "--size-gb" => a.size_gb = v.parse().unwrap_or(24.0),
+                    "--steps" => a.steps = v.parse().unwrap_or(4),
+                    _ => a.chain_steps = v.parse().unwrap_or(1),
+                }
+            }
+            other => {
+                eprintln!("unknown argument {other:?} (try `ops-oc help`)");
+                exit(2);
+            }
+        }
+        i += 1;
+    }
+    a
+}
+
+fn run_cell(
+    app: &str,
+    p: Platform,
+    gb: f64,
+    steps: usize,
+    chain_steps: usize,
+) -> (ops_oc::exec::Metrics, bool) {
+    match app {
+        "cloverleaf2d" => bench_support::run_cl2d(p, 8, 6144, gb, steps, 0),
+        "cloverleaf3d" => bench_support::run_cl3d(p, [8, 8, 6144], gb, steps, 0),
+        "opensbli" => bench_support::run_sbli_tall(p, chain_steps, gb, steps.max(1)),
+        other => {
+            eprintln!("unknown app {other:?} (cloverleaf2d|cloverleaf3d|opensbli)");
+            exit(2);
+        }
+    }
+}
+
+fn main() {
+    let a = parse_args();
+    match a.cmd.as_str() {
+        "" | "help" | "h" => {
+            println!("ops-oc — out-of-core stencil computations (paper reproduction)");
+            println!("commands:");
+            println!("  run   --app A --platform P [--size-gb G] [--steps N] [--chain-steps C]");
+            println!("  sweep --app A --platform P              (problem-size sweep)");
+            println!("  list                                    (apps + platform specs)");
+        }
+        "list" => {
+            println!("apps      : cloverleaf2d, cloverleaf3d, opensbli");
+            println!("platforms : knl-flat-ddr4, knl-flat-mcdram, knl-cache, knl-cache-tiled,");
+            println!("            gpu-baseline[:link], gpu-explicit[:link][:cyclic][:prefetch],");
+            println!("            gpu-unified[:link][:tiled][:prefetch]   link=pcie|nvlink");
+        }
+        "run" => {
+            let platform = Config::parse_platform(&a.platform).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                exit(2);
+            });
+            println!(
+                "running {} on {} at {:.0} GB modelled ({} steps)\n",
+                a.app,
+                platform.label(),
+                a.size_gb,
+                a.steps
+            );
+            let (m, oom) = run_cell(&a.app, platform, a.size_gb, a.steps, a.chain_steps);
+            print_summary(
+                &format!("{} / {}", a.app, platform.label()),
+                (a.size_gb * 1e9) as u64,
+                &m,
+                oom,
+            );
+        }
+        "sweep" => {
+            let platform = Config::parse_platform(&a.platform).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                exit(2);
+            });
+            let mut fig = Figure::new(
+                &format!("{} on {}", a.app, platform.label()),
+                "effective GB/s (modelled)",
+            );
+            let s = fig.add_series(&platform.label());
+            for gb in bench_support::KNL_SIZES_GB {
+                let (m, oom) = run_cell(&a.app, platform, gb, a.steps, a.chain_steps);
+                fig.push(s, gb, (!oom).then(|| m.effective_bandwidth_gbs()));
+            }
+            println!("{}", fig.render());
+        }
+        other => {
+            eprintln!("unknown command {other:?}");
+            exit(2);
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! Direct-mapped cache simulator for KNL's MCDRAM cache mode, plus the
+//! virtual address map that places the *modelled* datasets in a flat
+//! address space.
+//!
+//! MCDRAM in cache mode really is a direct-mapped memory-side cache; we
+//! simulate it at a coarse granule (default 4 MiB) because stencil sweeps
+//! stream contiguous slabs, so intra-granule behaviour is uniform. Miss
+//! and writeback traffic feed the DDR4 side of the per-loop time model.
+
+use crate::ops::{Dataset, DatasetId, Range3, Stencil};
+
+/// Assigns each dataset a contiguous region in a virtual (modelled)
+/// address space; regions are granule-aligned so conflict behaviour is
+/// deterministic.
+#[derive(Debug, Clone)]
+pub struct AddressMap {
+    base: Vec<u64>,
+    total: u64,
+    granule: u64,
+}
+
+impl AddressMap {
+    pub fn new(datasets: &[Dataset], granule: u64) -> Self {
+        let mut base = Vec::with_capacity(datasets.len());
+        let mut cursor = 0u64;
+        for ds in datasets {
+            base.push(cursor);
+            let b = ds.bytes();
+            cursor += b.div_ceil(granule) * granule;
+        }
+        AddressMap {
+            base,
+            total: cursor,
+            granule,
+        }
+    }
+
+    pub fn base(&self, d: DatasetId) -> u64 {
+        self.base[d.0 as usize]
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total
+    }
+
+    pub fn granule(&self) -> u64 {
+        self.granule
+    }
+
+    /// The contiguous modelled address range a loop touches in dataset
+    /// `d` when executing `range`: whole tile_dim-planes covering the
+    /// stencil-extended interval.
+    pub fn slab(
+        &self,
+        ds: &Dataset,
+        stencil: &Stencil,
+        range: &Range3,
+        tile_dim: usize,
+    ) -> (u64, u64) {
+        let lo_ext = stencil.min_extent()[tile_dim] as isize;
+        let hi_ext = stencil.max_extent()[tile_dim] as isize;
+        let dlo = -(ds.halo_lo[tile_dim] as isize);
+        let dhi = ds.size[tile_dim] as isize + ds.halo_hi[tile_dim] as isize;
+        let lo = (range[tile_dim].0 + lo_ext).clamp(dlo, dhi);
+        let hi = (range[tile_dim].1 + hi_ext).clamp(dlo, dhi);
+        if hi <= lo {
+            return (self.base(ds.id), 0);
+        }
+        let plane = ds.plane_bytes(tile_dim);
+        let start = self.base(ds.id) + (lo - dlo) as u64 * plane;
+        (start, (hi - lo) as u64 * plane)
+    }
+}
+
+/// Result of streaming a byte range through the cache.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AccessResult {
+    pub hit_bytes: u64,
+    pub miss_bytes: u64,
+    /// Dirty evictions (DDR4 write traffic).
+    pub writeback_bytes: u64,
+    pub hit_granules: u64,
+    pub miss_granules: u64,
+}
+
+impl AccessResult {
+    pub fn merge(&mut self, o: AccessResult) {
+        self.hit_bytes += o.hit_bytes;
+        self.miss_bytes += o.miss_bytes;
+        self.writeback_bytes += o.writeback_bytes;
+        self.hit_granules += o.hit_granules;
+        self.miss_granules += o.miss_granules;
+    }
+
+    /// DDR4-side traffic caused by this access.
+    pub fn ddr_bytes(&self) -> u64 {
+        self.miss_bytes + self.writeback_bytes
+    }
+}
+
+/// Direct-mapped, write-back, write-allocate-on-partial cache of
+/// `capacity` bytes with `granule`-sized lines.
+#[derive(Debug, Clone)]
+pub struct CacheSim {
+    granule: u64,
+    sets: usize,
+    /// tag per set: granule index + 1 (0 = invalid).
+    tags: Vec<u64>,
+    dirty: Vec<bool>,
+}
+
+impl CacheSim {
+    pub fn new(capacity: u64, granule: u64) -> Self {
+        let sets = (capacity / granule).max(1) as usize;
+        CacheSim {
+            granule,
+            sets,
+            tags: vec![0; sets],
+            dirty: vec![false; sets],
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.sets as u64 * self.granule
+    }
+
+    pub fn reset(&mut self) {
+        self.tags.iter_mut().for_each(|t| *t = 0);
+        self.dirty.iter_mut().for_each(|d| *d = false);
+    }
+
+    /// Stream `[addr, addr+len)` through the cache.
+    ///
+    /// `read` controls whether a miss fills from DDR4 (pure streaming
+    /// stores of write-first outputs allocate without a fill); `write`
+    /// marks touched granules dirty so their eviction costs a writeback.
+    pub fn access_range(&mut self, addr: u64, len: u64, read: bool, write: bool) -> AccessResult {
+        let mut res = AccessResult::default();
+        if len == 0 {
+            return res;
+        }
+        let g0 = addr / self.granule;
+        let g1 = (addr + len - 1) / self.granule;
+        for g in g0..=g1 {
+            let set = (g % self.sets as u64) as usize;
+            let tag = g + 1;
+            if self.tags[set] == tag {
+                res.hit_bytes += self.granule;
+                res.hit_granules += 1;
+                if write {
+                    self.dirty[set] = true;
+                }
+            } else {
+                // evict
+                if self.tags[set] != 0 && self.dirty[set] {
+                    res.writeback_bytes += self.granule;
+                }
+                self.tags[set] = tag;
+                self.dirty[set] = write;
+                res.miss_granules += 1;
+                if read {
+                    res.miss_bytes += self.granule;
+                }
+                // else: streaming store, allocate without fill
+            }
+        }
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::BlockId;
+
+    #[test]
+    fn second_pass_hits_when_fitting() {
+        let mut c = CacheSim::new(1024, 64); // 16 sets
+        let first = c.access_range(0, 1024, true, false);
+        assert_eq!(first.miss_granules, 16);
+        assert_eq!(first.hit_granules, 0);
+        let second = c.access_range(0, 1024, true, false);
+        assert_eq!(second.hit_granules, 16);
+        assert_eq!(second.miss_bytes, 0);
+    }
+
+    #[test]
+    fn oversubscribed_stream_thrashes() {
+        let mut c = CacheSim::new(1024, 64);
+        c.access_range(0, 2048, true, false);
+        let again = c.access_range(0, 2048, true, false);
+        // 2× capacity streamed sequentially through a direct-mapped cache:
+        // everything conflicts.
+        assert_eq!(again.hit_granules, 0);
+        assert_eq!(again.miss_granules, 32);
+    }
+
+    #[test]
+    fn dirty_eviction_writes_back() {
+        let mut c = CacheSim::new(1024, 64);
+        c.access_range(0, 1024, false, true); // fill dirty
+        let r = c.access_range(1024, 1024, true, false); // conflict-evict all
+        assert_eq!(r.writeback_bytes, 1024);
+    }
+
+    #[test]
+    fn whole_granule_write_skips_fill() {
+        let mut c = CacheSim::new(1024, 64);
+        let r = c.access_range(0, 256, false, true);
+        assert_eq!(r.miss_bytes, 0);
+        assert_eq!(r.miss_granules, 4);
+    }
+
+    #[test]
+    fn address_map_places_disjoint_aligned() {
+        let ds = |id: u32, ny: usize| Dataset {
+            id: DatasetId(id),
+            block: BlockId(0),
+            name: format!("d{id}"),
+            size: [100, ny, 1],
+            halo_lo: [0; 3],
+            halo_hi: [0; 3],
+            elem_bytes: 8,
+        };
+        let datasets = vec![ds(0, 10), ds(1, 20)];
+        let m = AddressMap::new(&datasets, 4096);
+        assert_eq!(m.base(DatasetId(0)), 0);
+        assert_eq!(m.base(DatasetId(1)) % 4096, 0);
+        assert!(m.base(DatasetId(1)) >= datasets[0].bytes());
+        assert!(m.total_bytes() >= datasets[0].bytes() + datasets[1].bytes());
+    }
+
+    #[test]
+    fn slab_covers_stencil_extension() {
+        let ds = Dataset {
+            id: DatasetId(0),
+            block: BlockId(0),
+            name: "d".into(),
+            size: [10, 10, 1],
+            halo_lo: [2, 2, 0],
+            halo_hi: [2, 2, 0],
+            elem_bytes: 8,
+        };
+        let st = Stencil {
+            id: crate::ops::StencilId(0),
+            name: "s".into(),
+            points: crate::ops::stencil::shapes::star2d(1),
+        };
+        let m = AddressMap::new(std::slice::from_ref(&ds), 4096);
+        let (addr, len) = m.slab(&ds, &st, &[(0, 10), (3, 5), (0, 1)], 1);
+        let plane = ds.plane_bytes(1);
+        // rows 2..6 (stencil extends 3..5 by ±1), offset by halo_lo=2.
+        assert_eq!(addr, m.base(DatasetId(0)) + 4 * plane);
+        assert_eq!(len, 4 * plane);
+    }
+}

@@ -1,0 +1,175 @@
+//! MPI halo-exchange cost model.
+//!
+//! The paper runs KNL benchmarks with 4 MPI processes and notes (§5.2)
+//! that tiling also batches halo exchanges: untiled OPS exchanges halos
+//! per loop, tiled OPS computes the chain's aggregate halo once per
+//! chain — fewer, larger messages. This small model reproduces that
+//! effect (visible at problem sizes that fit in cache).
+
+use crate::ops::{Dataset, LoopInst, Stencil};
+
+#[derive(Debug, Clone)]
+pub struct HaloModel {
+    /// Per-exchange latency, seconds.
+    pub latency_s: f64,
+    /// Exchange bandwidth, GB/s (on-chip MPI between quadrants).
+    pub bw_gbs: f64,
+}
+
+impl HaloModel {
+    pub fn knl() -> Self {
+        HaloModel {
+            latency_s: 8e-6,
+            // on-chip MPI between quadrants of one KNL moves through
+            // shared MCDRAM/DDR; far faster than a NIC
+            bw_gbs: 40.0,
+        }
+    }
+
+    /// Cost of the per-loop halo exchange in untiled execution: every
+    /// dataset argument read through a non-point stencil needs its halo
+    /// refreshed. Returns (time, number-of-exchanges).
+    pub fn per_loop_cost(
+        &self,
+        l: &LoopInst,
+        datasets: &[Dataset],
+        stencils: &[Stencil],
+        _tile_dim: usize,
+    ) -> (f64, u64) {
+        let mut t = 0.0;
+        let mut n = 0u64;
+        for (d, s, acc) in l.dat_args() {
+            if !acc.reads() {
+                continue;
+            }
+            let st = &stencils[s.0 as usize];
+            let r = st.radius(0).max(st.radius(1)).max(st.radius(2)) as u64;
+            if r == 0 {
+                continue;
+            }
+            let ds = &datasets[d.0 as usize];
+            // Two boundary slabs of depth r per partitioned dimension
+            // (4 ranks = 2x2 decomposition -> 2 cut dimensions, but a
+            // single aggregate term is enough for the model).
+            let bytes = 2 * r * ds.repr_plane_bytes();
+            t += self.latency_s + bytes as f64 / (self.bw_gbs * 1e9);
+            n += 1;
+        }
+        (t, n)
+    }
+
+    /// Cost of the per-chain aggregate exchange in tiled execution: one
+    /// exchange per touched dataset, of depth = the chain's skew depth.
+    pub fn per_chain_cost(
+        &self,
+        chain: &[LoopInst],
+        datasets: &[Dataset],
+        stencils: &[Stencil],
+        _tile_dim: usize,
+        max_shift: isize,
+    ) -> (f64, u64) {
+        let mut seen = vec![false; datasets.len()];
+        let mut t = 0.0;
+        let mut n = 0u64;
+        for l in chain {
+            for (d, s, acc) in l.dat_args() {
+                if !acc.reads() || seen[d.0 as usize] {
+                    continue;
+                }
+                let st = &stencils[s.0 as usize];
+                let r = st.radius(0).max(st.radius(1)).max(st.radius(2)) as i64;
+                if r == 0 {
+                    continue;
+                }
+                seen[d.0 as usize] = true;
+                let depth = (r + max_shift as i64).max(1) as u64;
+                let ds = &datasets[d.0 as usize];
+                let bytes = 2 * depth * ds.repr_plane_bytes();
+                t += self.latency_s + bytes as f64 / (self.bw_gbs * 1e9);
+                n += 1;
+            }
+        }
+        (t, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::{shapes, StencilId};
+    use crate::ops::{Access, Arg, BlockId, DatasetId};
+
+    fn fixture() -> (Vec<Dataset>, Vec<Stencil>, Vec<LoopInst>) {
+        let ds = Dataset {
+            id: DatasetId(0),
+            block: BlockId(0),
+            name: "d".into(),
+            size: [100, 100, 1],
+            halo_lo: [2, 2, 0],
+            halo_hi: [2, 2, 0],
+            elem_bytes: 8,
+        };
+        let stencils = vec![
+            Stencil {
+                id: StencilId(0),
+                name: "pt".into(),
+                points: shapes::point(),
+            },
+            Stencil {
+                id: StencilId(1),
+                name: "star".into(),
+                points: shapes::star2d(1),
+            },
+        ];
+        let mk = |st: u32, acc: Access| LoopInst {
+            name: "l".into(),
+            block: BlockId(0),
+            range: [(0, 100), (0, 100), (0, 1)],
+            args: vec![Arg::dat(DatasetId(0), StencilId(st), acc)],
+            kernel: kernel(|_| {}),
+            seq: 0,
+            bw_efficiency: 1.0,
+        };
+        (
+            vec![ds],
+            stencils,
+            vec![mk(1, Access::Read), mk(1, Access::Read), mk(0, Access::Write)],
+        )
+    }
+
+    #[test]
+    fn point_stencils_and_writes_need_no_exchange() {
+        let (datasets, stencils, chain) = fixture();
+        let h = HaloModel::knl();
+        let (_, n) = h.per_loop_cost(&chain[2], &datasets, &stencils, 1);
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn tiled_chain_exchanges_once_per_dataset() {
+        let (datasets, stencils, chain) = fixture();
+        let h = HaloModel::knl();
+        // Untiled: one exchange per reading loop = 2.
+        let untiled: u64 = chain
+            .iter()
+            .map(|l| h.per_loop_cost(l, &datasets, &stencils, 1).1)
+            .sum();
+        assert_eq!(untiled, 2);
+        // Tiled: dataset 0 exchanged once.
+        let (_, n) = h.per_chain_cost(&chain, &datasets, &stencils, 1, 3);
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn fewer_exchanges_but_larger_when_tiled() {
+        let (datasets, stencils, chain) = fixture();
+        let h = HaloModel::knl();
+        let (t_untiled, _) = h.per_loop_cost(&chain[0], &datasets, &stencils, 1);
+        let (t_tiled, _) = h.per_chain_cost(&chain, &datasets, &stencils, 1, 5);
+        // The single tiled exchange moves more bytes than one untiled
+        // exchange (depth includes the skew), but replaces many of them.
+        assert!(t_tiled > t_untiled);
+        assert!(t_tiled < 2.0 * t_untiled + h.latency_s);
+    }
+}

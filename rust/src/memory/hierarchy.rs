@@ -1,0 +1,200 @@
+//! Calibration constants for the modelled memory hierarchies.
+//!
+//! Every number here is taken from the paper's own measurements (§5.2,
+//! §5.3) — the simulator's *inputs* are the paper's microbenchmark /
+//! baseline numbers; its *outputs* (scaling curves, tiling gains,
+//! crossovers) emerge from the modelled system behaviour and are compared
+//! against the paper's figures in EXPERIMENTS.md.
+
+
+pub const GIB: u64 = 1 << 30;
+pub const GB: f64 = 1e9;
+
+/// Knights Landing (Xeon Phi x200 7210) calibration, §5.2.
+#[derive(Debug, Clone)]
+pub struct KnlCalib {
+    /// MCDRAM capacity.
+    pub mcdram_bytes: u64,
+    /// Flat-mode MCDRAM STREAM bandwidth (dynamic allocation), GB/s.
+    pub bw_mcdram_flat: f64,
+    /// Cache-mode STREAM bandwidth, GB/s.
+    pub bw_mcdram_cache: f64,
+    /// DDR4 STREAM bandwidth, GB/s.
+    pub bw_ddr4: f64,
+    /// Granule of the direct-mapped MCDRAM-cache simulator, bytes.
+    /// (Real MCDRAM cache is direct-mapped at 64 B lines; we simulate at
+    /// coarser granules since stencil sweeps stream contiguous slabs.)
+    pub cache_granule: u64,
+    /// Per-exchange MPI halo latency, seconds (4 ranks on one chip).
+    pub halo_latency_s: f64,
+}
+
+impl Default for KnlCalib {
+    fn default() -> Self {
+        KnlCalib {
+            mcdram_bytes: 16 * GIB,
+            bw_mcdram_flat: 314.0,
+            bw_mcdram_cache: 291.0,
+            bw_ddr4: 60.8,
+            cache_granule: 1 << 20,
+            halo_latency_s: 8e-6,
+        }
+    }
+}
+
+/// Interconnect between host and device memory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Link {
+    /// PCIe gen3 x16 — the paper measures ~11 GB/s achieved throughput.
+    PciE,
+    /// NVLink 1.0 to a Power8 — ~30 GB/s achieved.
+    NvLink,
+}
+
+impl Link {
+    /// Achieved bandwidth per direction, GB/s (paper §5.3).
+    pub fn bw_gbs(self) -> f64 {
+        match self {
+            Link::PciE => 11.0,
+            Link::NvLink => 30.0,
+        }
+    }
+
+    /// Per-transfer launch latency, seconds.
+    pub fn latency_s(self) -> f64 {
+        match self {
+            Link::PciE => 10e-6,
+            Link::NvLink => 8e-6,
+        }
+    }
+
+    /// Time to move `bytes` over the link.
+    pub fn time_s(self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            self.latency_s() + bytes as f64 / (self.bw_gbs() * GB)
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Link::PciE => "PCIe",
+            Link::NvLink => "NVLink",
+        }
+    }
+}
+
+/// P100 calibration, §5.3.
+#[derive(Debug, Clone)]
+pub struct GpuCalib {
+    /// HBM2 capacity.
+    pub hbm_bytes: u64,
+    /// Device-to-device streaming copy bandwidth, GB/s (measured 509.7).
+    pub bw_device: f64,
+    /// Kernel launch overhead, seconds.
+    pub launch_s: f64,
+    /// NVLink cards clock slightly higher (§5.3: "NVLink performance is
+    /// slightly higher due to higher graphics clock speeds").
+    pub nvlink_clock_boost: f64,
+}
+
+impl Default for GpuCalib {
+    fn default() -> Self {
+        GpuCalib {
+            hbm_bytes: 16 * GIB,
+            bw_device: 509.7,
+            launch_s: 7e-6,
+            nvlink_clock_boost: 1.03,
+        }
+    }
+}
+
+/// Unified-memory calibration, §5.4.
+#[derive(Debug, Clone)]
+pub struct UnifiedCalib {
+    /// Residency granularity (Pascal tracks 2 MiB VA blocks).
+    pub page_bytes: u64,
+    /// On-demand migration granule: faults move small groups of 4 KiB
+    /// pages (~64 KiB) — this is why fault throughput is latency-bound
+    /// and *identical* on PCIe and NVLink (§5.4).
+    pub fault_chunk_bytes: u64,
+    /// Service latency of one fault-group migration, seconds.
+    pub fault_latency_s: f64,
+    /// Fraction of link bandwidth `cudaMemPrefetchAsync` achieves while
+    /// *not* oversubscribed.
+    pub prefetch_eff: f64,
+    /// Fraction once the resident set exceeds device memory ("the
+    /// performance of prefetches drops significantly once we start
+    /// oversubscribing", §5.4).
+    pub prefetch_eff_oversub: f64,
+    /// Fraction of prefetch time that overlaps compute (driver-side CPU
+    /// work limits overlap, §5.4).
+    pub prefetch_overlap: f64,
+}
+
+impl Default for UnifiedCalib {
+    fn default() -> Self {
+        UnifiedCalib {
+            page_bytes: 2 << 20,
+            fault_chunk_bytes: 64 << 10,
+            fault_latency_s: 25e-6,
+            prefetch_eff: 0.9,
+            prefetch_eff_oversub: 0.45,
+            prefetch_overlap: 0.6,
+        }
+    }
+}
+
+/// Application-level calibrated baselines (GB/s) — the paper's measured
+/// flat-mode / in-memory numbers (§5.2, §5.3). These feed the per-loop
+/// time model; everything *else* (scaling, tiling effects) is emergent.
+#[derive(Debug, Clone, Copy)]
+pub struct AppCalib {
+    /// Average bandwidth in flat-DDR4 mode.
+    pub knl_ddr4: f64,
+    /// Average bandwidth in flat-MCDRAM mode.
+    pub knl_mcdram: f64,
+    /// Average bandwidth on the P100 with data resident.
+    pub gpu: f64,
+}
+
+impl AppCalib {
+    pub const CLOVERLEAF_2D: AppCalib = AppCalib {
+        knl_ddr4: 50.0,
+        knl_mcdram: 240.0,
+        gpu: 470.0,
+    };
+    pub const CLOVERLEAF_3D: AppCalib = AppCalib {
+        knl_ddr4: 50.0,
+        knl_mcdram: 200.0,
+        gpu: 380.0,
+    };
+    pub const OPENSBLI: AppCalib = AppCalib {
+        knl_ddr4: 30.0,
+        knl_mcdram: 83.0,
+        gpu: 170.0,
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_time_includes_latency() {
+        let t = Link::PciE.time_s(11_000_000_000);
+        assert!((t - (1.0 + 10e-6)).abs() < 1e-9);
+        assert_eq!(Link::PciE.time_s(0), 0.0);
+    }
+
+    #[test]
+    fn defaults_match_paper() {
+        let k = KnlCalib::default();
+        assert_eq!(k.mcdram_bytes, 16 * GIB);
+        assert!((k.bw_ddr4 - 60.8).abs() < 1e-12);
+        let g = GpuCalib::default();
+        assert!((g.bw_device - 509.7).abs() < 1e-12);
+        assert!(Link::NvLink.bw_gbs() > Link::PciE.bw_gbs());
+    }
+}

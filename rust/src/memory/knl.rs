@@ -1,0 +1,357 @@
+//! KNL cache-mode engine: MCDRAM as a direct-mapped last-level cache over
+//! DDR4 (§4, §5.2), with optional skewed tiling sized to the cache.
+
+use super::cache_sim::{AccessResult, AddressMap, CacheSim};
+use super::halo::HaloModel;
+use super::hierarchy::{AppCalib, KnlCalib};
+use super::plain::{chain_bw_norm, elem_bytes};
+use crate::exec::{Engine, World};
+use crate::ops::{LoopInst, Range3};
+use crate::tiling::plan::{pick_tile_dim, plan_auto};
+
+/// MCDRAM-as-cache engine.
+pub struct KnlEngine {
+    pub calib: KnlCalib,
+    pub app: AppCalib,
+    /// Tiling on/off (the paper's "cache" vs "cache tiled" series).
+    pub tiled: bool,
+    /// Fraction of MCDRAM a tile footprint may occupy when tiling.
+    pub tile_occupancy: f64,
+    cache: CacheSim,
+    addr: Option<AddressMap>,
+    halo: HaloModel,
+}
+
+impl KnlEngine {
+    pub fn new(calib: KnlCalib, app: AppCalib, tiled: bool) -> Self {
+        let cache = CacheSim::new(calib.mcdram_bytes, calib.cache_granule);
+        KnlEngine {
+            halo: HaloModel {
+                latency_s: calib.halo_latency_s,
+                ..HaloModel::knl()
+            },
+            calib,
+            app,
+            tiled,
+            tile_occupancy: 0.15,
+            cache,
+            addr: None,
+        }
+    }
+
+    /// Time for one loop execution over `range`, driving the cache
+    /// simulator with the loop's actual slab accesses.
+    ///
+    /// MCDRAM-side time is the §5.1 byte count at the app-calibrated
+    /// cache-mode bandwidth; DDR4-side time is miss + writeback traffic at
+    /// STREAM DDR4 bandwidth; the two streams overlap, so the loop takes
+    /// the max.
+    #[allow(clippy::too_many_arguments)]
+    fn loop_time(
+        &mut self,
+        l: &LoopInst,
+        range: &Range3,
+        world: &mut World<'_>,
+        tile_dim: usize,
+        norm: f64,
+    ) -> (f64, AccessResult, f64, f64) {
+        let addr = self.addr.as_ref().expect("address map built per chain");
+        let mut acc = AccessResult::default();
+        for (d, s, a) in l.dat_args() {
+            let ds = &world.datasets[d.0 as usize];
+            let st = &world.stencils[s.0 as usize];
+            let (base, len) = addr.slab(ds, st, range, tile_dim);
+            acc.merge(self.cache.access_range(base, len, a.reads(), a.writes()));
+        }
+        // Fraction of the loop's iteration space inside `range`.
+        let frac = {
+            let full = crate::ops::parloop::range_points(&l.range).max(1);
+            let part = crate::ops::parloop::range_points(range);
+            part as f64 / full as f64
+        };
+        let bytes = (l.bytes_touched(elem_bytes(world, l)) as f64 * frac) as u64;
+        let bw_cache = self.app.knl_mcdram * (self.calib.bw_mcdram_cache / self.calib.bw_mcdram_flat);
+        let mc_time = bytes as f64 / (bw_cache * l.bw_efficiency * norm * 1e9);
+        let ddr_time = acc.ddr_bytes() as f64 / (self.calib.bw_ddr4 * 1e9);
+        (mc_time.max(ddr_time), acc, mc_time, ddr_time)
+    }
+}
+
+impl Engine for KnlEngine {
+    fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, _cyclic_phase: bool) {
+        world.metrics.chains += 1;
+        let tile_dim = pick_tile_dim(chain);
+        if self.addr.is_none() {
+            self.addr = Some(AddressMap::new(world.datasets, self.calib.cache_granule));
+        }
+
+        // The MCDRAM and DDR4 streams overlap *across* loop boundaries on
+        // real hardware (memory-side cache fills are pipelined), so the
+        // chain's wall time is max(Σ mc, Σ ddr), not Σ max per loop.
+        let norm = chain_bw_norm(world, chain);
+        let mut mc_sum = 0.0f64;
+        let mut ddr_sum = 0.0f64;
+        if !self.tiled {
+            for l in chain {
+                world
+                    .exec
+                    .run_loop(l, l.range, world.datasets, world.store, world.reds);
+                let (t, acc, mc, ddr) = self.loop_time(l, &l.range.clone(), world, tile_dim, norm);
+                let bytes = l.bytes_touched(elem_bytes(world, l));
+                world.metrics.record_loop(&l.name, bytes, t);
+                mc_sum += mc;
+                ddr_sum += ddr;
+                world.metrics.cache_hits += acc.hit_granules;
+                world.metrics.cache_misses += acc.miss_granules;
+                let (ht, n) = self
+                    .halo
+                    .per_loop_cost(l, world.datasets, world.stencils, tile_dim);
+                world.metrics.halo_time_s += ht;
+                world.metrics.halo_exchanges += n;
+                world.metrics.elapsed_s += ht;
+            }
+            world.metrics.elapsed_s += mc_sum.max(ddr_sum);
+            return;
+        }
+
+        // Tiled: size tiles to MCDRAM and run the skewed schedule.
+        let target = (self.calib.mcdram_bytes as f64 * self.tile_occupancy) as u64;
+        let plan = plan_auto(chain, world.datasets, world.stencils, target);
+        world.metrics.tiles += plan.num_tiles() as u64;
+        for tile in &plan.tiles {
+            for (li, r) in tile.loop_ranges.iter().enumerate() {
+                let Some(r) = r else { continue };
+                let l = &chain[li];
+                world
+                    .exec
+                    .run_loop(l, *r, world.datasets, world.store, world.reds);
+                let (t, acc, mc, ddr) = self.loop_time(l, r, world, plan.tile_dim, norm);
+                let frac = crate::ops::parloop::range_points(r) as f64
+                    / crate::ops::parloop::range_points(&l.range).max(1) as f64;
+                let bytes = (l.bytes_touched(elem_bytes(world, l)) as f64 * frac) as u64;
+                world.metrics.record_loop(&l.name, bytes, t);
+                mc_sum += mc;
+                ddr_sum += ddr;
+                world.metrics.cache_hits += acc.hit_granules;
+                world.metrics.cache_misses += acc.miss_granules;
+            }
+        }
+        world.metrics.elapsed_s += mc_sum.max(ddr_sum);
+        // One aggregate halo exchange per chain (§5.2).
+        let max_shift = plan.shifts.first().copied().unwrap_or(0);
+        let (ht, n) =
+            self.halo
+                .per_chain_cost(chain, world.datasets, world.stencils, tile_dim, max_shift);
+        world.metrics.halo_time_s += ht;
+        world.metrics.halo_exchanges += n;
+        world.metrics.elapsed_s += ht;
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "KNL cache mode{} (MCDRAM {} GiB, granule {} MiB)",
+            if self.tiled { " + tiling" } else { "" },
+            self.calib.mcdram_bytes >> 30,
+            self.calib.cache_granule >> 20,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{Metrics, NativeExecutor};
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::{shapes, StencilId};
+    use crate::ops::*;
+
+    /// Build a synthetic app: `nds` datasets of `ny` rows, a chain that
+    /// sweeps all of them `reps` times with a radius-1 stencil.
+    fn fixture(
+        nds: u32,
+        ny: usize,
+        reps: usize,
+        elem_bytes: u64,
+    ) -> (Vec<Dataset>, Vec<Stencil>, DataStore, Vec<LoopInst>) {
+        let mut datasets = vec![];
+        let mut store = DataStore::new();
+        for i in 0..nds {
+            let d = Dataset {
+                id: DatasetId(i),
+                block: BlockId(0),
+                name: format!("d{i}"),
+                size: [64, ny, 1],
+                halo_lo: [2, 2, 0],
+                halo_hi: [2, 2, 0],
+                elem_bytes,
+            };
+            store.alloc(&d);
+            datasets.push(d);
+        }
+        let stencils = vec![
+            Stencil {
+                id: StencilId(0),
+                name: "pt".into(),
+                points: shapes::point(),
+            },
+            Stencil {
+                id: StencilId(1),
+                name: "star".into(),
+                points: shapes::star2d(1),
+            },
+        ];
+        let mut chain = vec![];
+        for r in 0..reps {
+            for i in 0..nds {
+                let src = DatasetId(i);
+                let dst = DatasetId((i + 1) % nds);
+                chain.push(LoopInst {
+                    name: format!("sweep{r}_{i}"),
+                    block: BlockId(0),
+                    range: [(0, 64), (0, ny as isize), (0, 1)],
+                    args: vec![
+                        Arg::dat(src, StencilId(1), Access::Read),
+                        Arg::dat(dst, StencilId(0), Access::Write),
+                    ],
+                    kernel: kernel(|c| {
+                        let v = c.r(0, 0, 0) + c.r(0, 1, 0);
+                        c.w(1, 0, 0, v);
+                    }),
+                    seq: (r * nds as usize + i as usize) as u64,
+                    bw_efficiency: 1.0,
+                });
+            }
+        }
+        (datasets, stencils, store, chain)
+    }
+
+    fn run(engine: &mut KnlEngine, fixture_parts: (Vec<Dataset>, Vec<Stencil>, DataStore, Vec<LoopInst>)) -> Metrics {
+        let (datasets, stencils, mut store, chain) = fixture_parts;
+        let mut reds = vec![];
+        let mut metrics = Metrics::new();
+        let mut exec = NativeExecutor::new();
+        let mut world = World {
+            datasets: &datasets,
+            stencils: &stencils,
+            store: &mut store,
+            reds: &mut reds,
+            metrics: &mut metrics,
+            exec: &mut exec,
+        };
+        engine.run_chain(&chain, &mut world, false);
+        metrics
+    }
+
+    /// Tiny calibration so test problems exercise the cache boundaries:
+    /// 1 MiB "MCDRAM", 4 KiB granules.
+    fn small_calib() -> KnlCalib {
+        KnlCalib {
+            mcdram_bytes: 1 << 20,
+            cache_granule: 4 << 10,
+            ..KnlCalib::default()
+        }
+    }
+
+    const APP: AppCalib = AppCalib {
+        knl_ddr4: 50.0,
+        knl_mcdram: 240.0,
+        gpu: 470.0,
+    };
+
+    #[test]
+    fn fitting_problem_hits_after_warmup() {
+        // 4 datasets x 64x64 x 8B ≈ 150 KiB << 1 MiB cache.
+        let mut e = KnlEngine::new(small_calib(), APP, false);
+        let m = run(&mut e, fixture(4, 64, 4, 8));
+        assert!(
+            m.cache_hit_rate() > 0.7,
+            "hit rate {} too low for fitting problem",
+            m.cache_hit_rate()
+        );
+    }
+
+    #[test]
+    fn oversubscribed_untiled_thrashes_but_tiled_recovers() {
+        // 8 datasets x 64x768 x 8B ≈ 3 MiB = 3x the 1 MiB "MCDRAM".
+        let mut e_untiled = KnlEngine::new(small_calib(), APP, false);
+        let m_untiled = run(&mut e_untiled, fixture(8, 768, 3, 8));
+        let mut e_tiled = KnlEngine::new(small_calib(), APP, true);
+        let m_tiled = run(&mut e_tiled, fixture(8, 768, 3, 8));
+
+        assert!(
+            m_tiled.cache_hit_rate() > 0.55,
+            "tiled hit rate {:.2} too low",
+            m_tiled.cache_hit_rate()
+        );
+        assert!(
+            m_tiled.cache_hit_rate() > m_untiled.cache_hit_rate() + 0.1,
+            "tiled hit rate {:.2} should beat untiled {:.2}",
+            m_tiled.cache_hit_rate(),
+            m_untiled.cache_hit_rate()
+        );
+        assert!(
+            m_tiled.effective_bandwidth_gbs() > m_untiled.effective_bandwidth_gbs(),
+            "tiling should improve effective bandwidth"
+        );
+    }
+
+    #[test]
+    fn tiled_and_untiled_numerics_agree() {
+        let fx = fixture(4, 256, 3, 8);
+        let (datasets, stencils, _, chain) = &fx;
+        // untiled
+        let mut store_a = DataStore::new();
+        datasets.iter().for_each(|d| store_a.alloc(d));
+        let mut reds_a: Vec<Reduction> = vec![];
+        let mut metrics_a = Metrics::new();
+        let mut exec_a = NativeExecutor::new();
+        {
+            let mut world = World {
+                datasets,
+                stencils,
+                store: &mut store_a,
+                reds: &mut reds_a,
+                metrics: &mut metrics_a,
+                exec: &mut exec_a,
+            };
+            let mut e = KnlEngine::new(small_calib(), APP, false);
+            e.run_chain(chain, &mut world, false);
+        }
+        // tiled
+        let mut store_b = DataStore::new();
+        datasets.iter().for_each(|d| store_b.alloc(d));
+        let mut reds_b: Vec<Reduction> = vec![];
+        let mut metrics_b = Metrics::new();
+        let mut exec_b = NativeExecutor::new();
+        {
+            let mut world = World {
+                datasets,
+                stencils,
+                store: &mut store_b,
+                reds: &mut reds_b,
+                metrics: &mut metrics_b,
+                exec: &mut exec_b,
+            };
+            let mut e = KnlEngine::new(small_calib(), APP, true);
+            e.run_chain(chain, &mut world, false);
+        }
+        for d in datasets {
+            assert_eq!(
+                store_a.buf(d.id),
+                store_b.buf(d.id),
+                "tiled execution must be bit-identical for {}",
+                d.name
+            );
+        }
+    }
+
+    #[test]
+    fn tiles_created_only_when_tiling() {
+        let mut e = KnlEngine::new(small_calib(), APP, true);
+        let m = run(&mut e, fixture(8, 768, 1, 8));
+        assert!(m.tiles >= 3, "expected >=3 tiles, got {}", m.tiles);
+        let mut e2 = KnlEngine::new(small_calib(), APP, false);
+        let m2 = run(&mut e2, fixture(8, 768, 1, 8));
+        assert_eq!(m2.tiles, 0);
+    }
+}

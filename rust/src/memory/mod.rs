@@ -1,0 +1,30 @@
+//! Memory-hierarchy models and engines.
+//!
+//! Four engines reproduce the paper's four execution environments:
+//!
+//! | Engine | Paper configuration |
+//! |---|---|
+//! | [`PlainEngine`] | KNL flat DDR4 / flat MCDRAM, GPU in-memory baseline |
+//! | [`KnlEngine`] | KNL MCDRAM cache mode, with/without tiling (§5.2) |
+//! | [`GpuExplicitEngine`] | explicit 3-slot streaming, Algorithm 1 (§4, §5.3) |
+//! | [`UnifiedEngine`] | CUDA unified memory ± tiling ± prefetch (§5.4) |
+//!
+//! All are calibrated from the paper's own measured microbenchmarks
+//! ([`hierarchy`]); everything else is emergent behaviour of the
+//! simulated system.
+
+pub mod cache_sim;
+pub mod gpu_explicit;
+pub mod halo;
+pub mod hierarchy;
+pub mod knl;
+pub mod plain;
+pub mod unified;
+
+pub use cache_sim::{AccessResult, AddressMap, CacheSim};
+pub use gpu_explicit::{GpuExplicitEngine, GpuOpts};
+pub use halo::HaloModel;
+pub use hierarchy::{AppCalib, GpuCalib, KnlCalib, Link, UnifiedCalib};
+pub use knl::KnlEngine;
+pub use plain::PlainEngine;
+pub use unified::UnifiedEngine;

@@ -1,0 +1,420 @@
+//! Unified-memory engine (§5.4): GPU memory as a page cache over host
+//! memory. Pages migrate on fault (high latency, no automatic prefetch);
+//! optional bulk `cudaMemPrefetchAsync`-style prefetches move tile
+//! footprints at link bandwidth, degraded under oversubscription.
+
+use super::hierarchy::{AppCalib, GpuCalib, Link, UnifiedCalib, GB};
+use super::cache_sim::AddressMap;
+use super::plain::{chain_bw_norm, elem_bytes};
+use crate::exec::{Engine, World};
+use crate::ops::{LoopInst, Range3};
+use crate::tiling::plan::{pick_tile_dim, plan_auto};
+use std::collections::{BTreeMap, HashMap};
+
+/// Exact LRU set of resident pages: page → last-use tick, plus an order
+/// index (tick → page; ticks are unique because they're monotonic).
+/// touch and evict are both O(log n) — this was the §Perf hot spot of the
+/// unified-memory figure (see EXPERIMENTS.md §Perf: 5.6x on fig11).
+#[derive(Debug, Default)]
+struct ResidentSet {
+    pages: HashMap<u64, u64>,
+    order: BTreeMap<u64, u64>,
+    tick: u64,
+}
+
+impl ResidentSet {
+    /// Touch pages `[p0, p1)`; returns how many were absent (faults).
+    fn touch_range(&mut self, p0: u64, p1: u64, cap_pages: u64) -> u64 {
+        let mut faults = 0;
+        for p in p0..p1 {
+            self.tick += 1;
+            if let Some(old) = self.pages.insert(p, self.tick) {
+                self.order.remove(&old);
+            } else {
+                faults += 1;
+            }
+            self.order.insert(self.tick, p);
+            if self.pages.len() as u64 > cap_pages {
+                if let Some((_, victim)) = self.order.pop_first() {
+                    self.pages.remove(&victim);
+                }
+            }
+        }
+        faults
+    }
+
+    /// Resident page count (diagnostics).
+    #[allow(dead_code)]
+    fn len(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+/// Unified-memory engine.
+pub struct UnifiedEngine {
+    pub gpu: GpuCalib,
+    pub um: UnifiedCalib,
+    pub app: AppCalib,
+    pub link: Link,
+    /// Run the skewed tiling schedule (vs. untiled loop order).
+    pub tiled: bool,
+    /// Issue bulk prefetches per tile instead of relying on faults.
+    pub prefetch: bool,
+    resident: ResidentSet,
+    addr: Option<AddressMap>,
+}
+
+impl UnifiedEngine {
+    pub fn new(
+        gpu: GpuCalib,
+        um: UnifiedCalib,
+        app: AppCalib,
+        link: Link,
+        tiled: bool,
+        prefetch: bool,
+    ) -> Self {
+        UnifiedEngine {
+            gpu,
+            um,
+            app,
+            link,
+            tiled,
+            prefetch,
+            resident: ResidentSet::default(),
+            addr: None,
+        }
+    }
+
+    fn cap_pages(&self) -> u64 {
+        self.gpu.hbm_bytes / self.um.page_bytes
+    }
+
+    /// Cost of faulting one resident-set page in: the page moves as
+    /// small fault groups, each latency-bound — identical on PCIe and
+    /// NVLink (§5.4's observation).
+    fn fault_cost(&self) -> f64 {
+        let chunks = self.um.page_bytes.div_ceil(self.um.fault_chunk_bytes) as f64;
+        let per_chunk = self
+            .um
+            .fault_latency_s
+            .max(self.um.fault_chunk_bytes as f64 / (self.link.bw_gbs() * GB));
+        chunks * per_chunk
+    }
+
+    fn compute_time(&self, l: &LoopInst, bytes: u64, norm: f64) -> f64 {
+        bytes as f64 / (self.app.gpu * l.bw_efficiency * norm * GB) + self.gpu.launch_s
+    }
+
+    /// Touch every page a loop-range accesses; returns fault count.
+    ///
+    /// Pure-`Write` (write-first) arguments populate managed pages on the
+    /// device without a migration (cudaMallocManaged first-touch), so
+    /// they become resident for free; reads and read-modify-writes of
+    /// non-resident pages pay the fault path.
+    fn touch_loop(&mut self, l: &LoopInst, range: &Range3, world: &World<'_>, tile_dim: usize) -> u64 {
+        let addr = self.addr.as_ref().unwrap();
+        let pg = self.um.page_bytes;
+        let cap = self.cap_pages();
+        let mut faults = 0;
+        for (d, s, a) in l.dat_args() {
+            let ds = &world.datasets[d.0 as usize];
+            let st = &world.stencils[s.0 as usize];
+            let (base, len) = addr.slab(ds, st, range, tile_dim);
+            if len == 0 {
+                continue;
+            }
+            let p0 = base / pg;
+            let p1 = (base + len - 1) / pg + 1;
+            let absent = self.resident.touch_range(p0, p1, cap);
+            if a.reads() {
+                faults += absent;
+            }
+        }
+        faults
+    }
+}
+
+impl Engine for UnifiedEngine {
+    fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, _cyclic_phase: bool) {
+        world.metrics.chains += 1;
+        let tile_dim = pick_tile_dim(chain);
+        let norm = chain_bw_norm(world, chain);
+        if self.addr.is_none() {
+            self.addr = Some(AddressMap::new(world.datasets, self.um.page_bytes));
+        }
+
+        if !self.tiled {
+            // Untiled unified memory: loops fault pages in as they sweep.
+            for l in chain {
+                world
+                    .exec
+                    .run_loop(l, l.range, world.datasets, world.store, world.reds);
+                let faults = self.touch_loop(l, &l.range.clone(), world, tile_dim);
+                let bytes = l.bytes_touched(elem_bytes(world, l));
+                let t = self.compute_time(l, bytes, norm) + faults as f64 * self.fault_cost();
+                world.metrics.record_loop(&l.name, bytes, t);
+                world.metrics.elapsed_s += t;
+                world.metrics.page_faults += faults;
+                world.metrics.h2d_bytes += faults * self.um.page_bytes;
+            }
+            return;
+        }
+
+        // Tiled: tiles sized to HBM; with prefetch, each tile's footprint
+        // is bulk-moved while the previous tile computes.
+        let target = (self.gpu.hbm_bytes as f64 * 0.8) as u64;
+        let plan = plan_auto(chain, world.datasets, world.stencils, target);
+        world.metrics.tiles += plan.num_tiles() as u64;
+        let oversub =
+            crate::tiling::plan::chain_bytes(chain, world.datasets) > self.gpu.hbm_bytes;
+        let mut prev_tile_compute = 0.0f64;
+
+        for tile in &plan.tiles {
+            // Count the faults/prefetch traffic for this tile *before*
+            // running it: pages touched by any loop range of the tile.
+            let mut tile_faults = 0u64;
+            for (li, r) in tile.loop_ranges.iter().enumerate() {
+                let Some(r) = r else { continue };
+                tile_faults += self.touch_loop(&chain[li], r, world, plan.tile_dim);
+            }
+
+            let stall;
+            if self.prefetch {
+                // Bulk prefetch at (degraded) link bandwidth, overlapped
+                // with the previous tile's compute.
+                let bytes = tile_faults * self.um.page_bytes;
+                let eff = if oversub {
+                    self.um.prefetch_eff_oversub
+                } else {
+                    self.um.prefetch_eff
+                };
+                let t_pf = bytes as f64 / (self.link.bw_gbs() * eff * GB);
+                let overlap = prev_tile_compute * self.um.prefetch_overlap;
+                stall = (t_pf - overlap).max(0.0);
+            } else {
+                stall = tile_faults as f64 * self.fault_cost();
+            }
+            world.metrics.page_faults += tile_faults;
+            world.metrics.h2d_bytes += tile_faults * self.um.page_bytes;
+
+            let mut tile_compute = 0.0;
+            let mut first_loop_in_tile = true;
+            for (li, r) in tile.loop_ranges.iter().enumerate() {
+                let Some(r) = r else { continue };
+                let l = &chain[li];
+                world
+                    .exec
+                    .run_loop(l, *r, world.datasets, world.store, world.reds);
+                let frac = crate::ops::parloop::range_points(r) as f64
+                    / crate::ops::parloop::range_points(&l.range).max(1) as f64;
+                let bytes = (l.bytes_touched(elem_bytes(world, l)) as f64 * frac) as u64;
+                let mut t = self.compute_time(l, bytes, norm);
+                if first_loop_in_tile {
+                    // The migration stall lands on the tile's first loop.
+                    t += stall;
+                    first_loop_in_tile = false;
+                }
+                world.metrics.record_loop(&l.name, bytes, t);
+                world.metrics.elapsed_s += t;
+                tile_compute += t;
+            }
+            prev_tile_compute = tile_compute;
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "GPU unified memory {}{}{}",
+            self.link.name(),
+            if self.tiled { " + tiling" } else { "" },
+            if self.prefetch { " + prefetch" } else { "" },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{Metrics, NativeExecutor};
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::{shapes, StencilId};
+    use crate::exec::Executor;
+    use crate::ops::*;
+
+    const APP: AppCalib = AppCalib {
+        knl_ddr4: 50.0,
+        knl_mcdram: 240.0,
+        gpu: 470.0,
+    };
+
+    fn fixture(nds: u32, ny: usize) -> (Vec<Dataset>, Vec<Stencil>, DataStore, Vec<LoopInst>) {
+        let mut datasets = vec![];
+        let mut store = DataStore::new();
+        for i in 0..nds {
+            let d = Dataset {
+                id: DatasetId(i),
+                block: BlockId(0),
+                name: format!("d{i}"),
+                size: [64, ny, 1],
+                halo_lo: [2, 2, 0],
+                halo_hi: [2, 2, 0],
+                elem_bytes: 8,
+            };
+            store.alloc(&d);
+            datasets.push(d);
+        }
+        let stencils = vec![
+            Stencil {
+                id: StencilId(0),
+                name: "pt".into(),
+                points: shapes::point(),
+            },
+            Stencil {
+                id: StencilId(1),
+                name: "star".into(),
+                points: shapes::star2d(1),
+            },
+        ];
+        let mut chain = vec![];
+        for i in 0..nds {
+            chain.push(LoopInst {
+                name: format!("sweep{i}"),
+                block: BlockId(0),
+                range: [(0, 64), (0, ny as isize), (0, 1)],
+                args: vec![
+                    Arg::dat(DatasetId(i), StencilId(1), Access::Read),
+                    Arg::dat(DatasetId((i + 1) % nds), StencilId(0), Access::ReadWrite),
+                ],
+                kernel: kernel(|c| {
+                    let v = c.r(0, 0, -1) + c.r(0, 0, 1);
+                    let old = c.r(1, 0, 0);
+                    c.w(1, 0, 0, v + 0.01 * old);
+                }),
+                seq: i as u64,
+                bw_efficiency: 1.0,
+            });
+        }
+        (datasets, stencils, store, chain)
+    }
+
+    fn small_gpu(hbm: u64) -> (GpuCalib, UnifiedCalib) {
+        (
+            GpuCalib {
+                hbm_bytes: hbm,
+                ..GpuCalib::default()
+            },
+            UnifiedCalib {
+                page_bytes: 4 << 10,
+                ..UnifiedCalib::default()
+            },
+        )
+    }
+
+    fn run(e: &mut UnifiedEngine, chains: usize, fx: &(Vec<Dataset>, Vec<Stencil>, DataStore, Vec<LoopInst>)) -> Metrics {
+        let (datasets, stencils, _, chain) = fx;
+        let mut store = DataStore::new();
+        datasets.iter().for_each(|d| store.alloc(d));
+        let mut reds = vec![];
+        let mut metrics = Metrics::new();
+        let mut exec = NativeExecutor::new();
+        for _ in 0..chains {
+            let mut world = World {
+                datasets,
+                stencils,
+                store: &mut store,
+                reds: &mut reds,
+                metrics: &mut metrics,
+                exec: &mut exec,
+            };
+            e.run_chain(chain, &mut world, true);
+        }
+        metrics
+    }
+
+    #[test]
+    fn fitting_problem_faults_only_once() {
+        let fx = fixture(4, 256);
+        let (gpu, um) = small_gpu(16 << 20); // plenty
+        let mut e = UnifiedEngine::new(gpu, um, APP, Link::PciE, false, false);
+        let m = run(&mut e, 3, &fx);
+        // After the first chain everything is resident: fault count equals
+        // the first chain's pages.
+        let total_pages: u64 = fx.0.iter().map(|d| d.bytes().div_ceil(4 << 10) + 1).sum();
+        assert!(m.page_faults <= total_pages, "{} > {}", m.page_faults, total_pages);
+    }
+
+    #[test]
+    fn oversubscribed_untiled_collapses() {
+        let fx = fixture(8, 1024); // ~4.3 MiB total
+        let (gpu, um) = small_gpu(1 << 20); // 1 MiB "HBM"
+        let mut small = UnifiedEngine::new(gpu.clone(), um.clone(), APP, Link::PciE, false, false);
+        let m_small = run(&mut small, 6, &fx);
+        let (gpu_big, um2) = small_gpu(64 << 20);
+        let mut big = UnifiedEngine::new(gpu_big, um2, APP, Link::PciE, false, false);
+        let m_big = run(&mut big, 6, &fx);
+        assert!(
+            m_small.effective_bandwidth_gbs() < m_big.effective_bandwidth_gbs() / 3.0,
+            "oversubscription should collapse performance: {} vs {}",
+            m_small.effective_bandwidth_gbs(),
+            m_big.effective_bandwidth_gbs()
+        );
+    }
+
+    #[test]
+    fn tiling_recovers_some_performance() {
+        let fx = fixture(8, 1024);
+        let (gpu, um) = small_gpu(1 << 20);
+        let mut untiled = UnifiedEngine::new(gpu.clone(), um.clone(), APP, Link::PciE, false, false);
+        let m_untiled = run(&mut untiled, 2, &fx);
+        let mut tiled = UnifiedEngine::new(gpu.clone(), um.clone(), APP, Link::PciE, true, false);
+        let m_tiled = run(&mut tiled, 2, &fx);
+        let mut pf = UnifiedEngine::new(gpu, um, APP, Link::PciE, true, true);
+        let m_pf = run(&mut pf, 2, &fx);
+        assert!(
+            m_tiled.effective_bandwidth_gbs() > m_untiled.effective_bandwidth_gbs(),
+            "tiled {} !> untiled {}",
+            m_tiled.effective_bandwidth_gbs(),
+            m_untiled.effective_bandwidth_gbs()
+        );
+        assert!(
+            m_pf.effective_bandwidth_gbs() > m_tiled.effective_bandwidth_gbs(),
+            "prefetch {} !> tiled {}",
+            m_pf.effective_bandwidth_gbs(),
+            m_tiled.effective_bandwidth_gbs()
+        );
+    }
+
+    #[test]
+    fn numerics_unchanged_by_unified_tiling() {
+        let fx = fixture(4, 512);
+        let (datasets, stencils, _, chain) = &fx;
+        let mut store_ref = DataStore::new();
+        datasets.iter().for_each(|d| store_ref.alloc(d));
+        let mut reds_ref: Vec<Reduction> = vec![];
+        let mut exec_ref = NativeExecutor::new();
+        for l in chain {
+            exec_ref.run_loop(l, l.range, datasets, &mut store_ref, &mut reds_ref);
+        }
+        let (gpu, um) = small_gpu(256 << 10);
+        let mut e = UnifiedEngine::new(gpu, um, APP, Link::NvLink, true, true);
+        let mut store = DataStore::new();
+        datasets.iter().for_each(|d| store.alloc(d));
+        let mut reds = vec![];
+        let mut metrics = Metrics::new();
+        let mut exec = NativeExecutor::new();
+        {
+            let mut world = World {
+                datasets,
+                stencils,
+                store: &mut store,
+                reds: &mut reds,
+                metrics: &mut metrics,
+                exec: &mut exec,
+            };
+            e.run_chain(chain, &mut world, true);
+        }
+        for d in datasets {
+            assert_eq!(store_ref.buf(d.id), store.buf(d.id));
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Dataset access modes, mirroring OPS's `OPS_READ` / `OPS_WRITE` /
+//! `OPS_RW` / `OPS_INC` descriptors.
+
+
+/// How a parallel-loop argument accesses its dataset.
+///
+/// The access mode drives both the dependency analysis (§3) and the
+/// data-movement optimisations of §4.1: `Read` datasets are never copied
+/// back from the device, `Write` (write-first) datasets are never copied
+/// *to* the device, and under the *Cyclic* optimisation write-first
+/// datasets are not copied back either.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Access {
+    /// Read-only access (`OPS_READ`).
+    Read,
+    /// Write-first access (`OPS_WRITE`): every point in the iteration
+    /// range is written before any read, so the previous contents are
+    /// dead on entry.
+    Write,
+    /// Read-modify-write (`OPS_RW`).
+    ReadWrite,
+    /// Increment (`OPS_INC`) — commutative accumulation; treated as
+    /// read-modify-write for dependencies and byte accounting.
+    Inc,
+}
+
+impl Access {
+    /// Does this access observe the previous contents of the dataset?
+    #[inline]
+    pub fn reads(self) -> bool {
+        !matches!(self, Access::Write)
+    }
+
+    /// Does this access modify the dataset?
+    #[inline]
+    pub fn writes(self) -> bool {
+        !matches!(self, Access::Read)
+    }
+
+    /// Byte-traffic multiplier used by the paper's Average Bandwidth
+    /// metric (§5.1): 1× for pure reads or writes, 2× for read+write.
+    #[inline]
+    pub fn traffic_multiplier(self) -> u64 {
+        match self {
+            Access::Read | Access::Write => 1,
+            Access::ReadWrite | Access::Inc => 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_predicates() {
+        assert!(Access::Read.reads() && !Access::Read.writes());
+        assert!(!Access::Write.reads() && Access::Write.writes());
+        assert!(Access::ReadWrite.reads() && Access::ReadWrite.writes());
+        assert!(Access::Inc.reads() && Access::Inc.writes());
+    }
+
+    #[test]
+    fn traffic_multipliers_match_paper_metric() {
+        assert_eq!(Access::Read.traffic_multiplier(), 1);
+        assert_eq!(Access::Write.traffic_multiplier(), 1);
+        assert_eq!(Access::ReadWrite.traffic_multiplier(), 2);
+        assert_eq!(Access::Inc.traffic_multiplier(), 2);
+    }
+}

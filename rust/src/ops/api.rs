@@ -1,0 +1,507 @@
+//! The user-facing OPS-style API: declaration calls, the parallel-loop
+//! construct, and the data-returning calls that trigger chain execution.
+
+use super::block::{Block, BlockId};
+use super::dataset::{DataStore, Dataset, DatasetId};
+use super::kernel::Kernel;
+use super::parloop::{Arg, LoopInst, Range3};
+use super::reduction::{RedOp, Reduction, ReductionId};
+use super::stencil::{Stencil, StencilId};
+use crate::exec::{Engine, Executor, Metrics, NativeExecutor, World};
+use crate::lazy::LoopQueue;
+
+/// The library context: owns all data, the lazy queue, the executor and
+/// the memory engine. The analogue of an OPS instance.
+pub struct OpsContext {
+    blocks: Vec<Block>,
+    datasets: Vec<Dataset>,
+    stencils: Vec<Stencil>,
+    reds: Vec<Reduction>,
+    store: DataStore,
+    queue: LoopQueue,
+    engine: Box<dyn Engine>,
+    exec: Box<dyn Executor>,
+    metrics: Metrics,
+    cyclic_phase: bool,
+    oom: bool,
+    /// Uniform modelled element size for newly declared datasets: 8 bytes
+    /// × the problem-scale factor (see DESIGN.md §5 — numerics run small,
+    /// byte accounting models the paper's sizes).
+    elem_bytes: u64,
+}
+
+impl OpsContext {
+    /// Create a context with an explicit engine; uses the native executor.
+    pub fn new(engine: Box<dyn Engine>) -> Self {
+        OpsContext {
+            blocks: vec![],
+            datasets: vec![],
+            stencils: vec![],
+            reds: vec![],
+            store: DataStore::new(),
+            queue: LoopQueue::new(),
+            engine,
+            exec: Box::new(NativeExecutor::new()),
+            metrics: Metrics::new(),
+            cyclic_phase: false,
+            oom: false,
+            elem_bytes: 8,
+        }
+    }
+
+    /// Swap in a different numeric executor (e.g. the PJRT backend).
+    pub fn set_executor(&mut self, exec: Box<dyn Executor>) {
+        self.exec = exec;
+    }
+
+    /// Set the modelled bytes-per-element scale for subsequently declared
+    /// datasets (`8 * scale`): lets a small actual grid model a paper-
+    /// sized problem byte-for-byte in the simulator.
+    pub fn set_model_elem_bytes(&mut self, elem_bytes: u64) {
+        self.elem_bytes = elem_bytes;
+    }
+
+    // ---- declarations ----------------------------------------------------
+
+    pub fn decl_block(&mut self, name: &str, size: [usize; 3]) -> BlockId {
+        let id = BlockId(self.blocks.len() as u32);
+        let dims = if size[2] > 1 { 3 } else { 2 };
+        self.blocks.push(Block {
+            id,
+            name: name.to_string(),
+            size,
+            dims,
+        });
+        id
+    }
+
+    /// Declare a dataset on `block` with interior `size` and halo depths.
+    pub fn decl_dat(
+        &mut self,
+        block: BlockId,
+        name: &str,
+        size: [usize; 3],
+        halo_lo: [i32; 3],
+        halo_hi: [i32; 3],
+    ) -> DatasetId {
+        let id = DatasetId(self.datasets.len() as u32);
+        let ds = Dataset {
+            id,
+            block,
+            name: name.to_string(),
+            size,
+            halo_lo,
+            halo_hi,
+            elem_bytes: self.elem_bytes,
+        };
+        self.store.alloc(&ds);
+        self.datasets.push(ds);
+        id
+    }
+
+    pub fn decl_stencil(&mut self, name: &str, points: Vec<[i32; 3]>) -> StencilId {
+        let id = StencilId(self.stencils.len() as u32);
+        self.stencils.push(Stencil {
+            id,
+            name: name.to_string(),
+            points,
+        });
+        id
+    }
+
+    pub fn decl_reduction(&mut self, name: &str, op: RedOp) -> ReductionId {
+        let id = ReductionId(self.reds.len() as u32);
+        self.reds.push(Reduction::new(id, name, op));
+        id
+    }
+
+    // ---- the parallel loop -----------------------------------------------
+
+    /// Enqueue a parallel loop (§3, Fig. 1). Execution is deferred until a
+    /// data-returning API call.
+    ///
+    /// Panics if an argument references an undeclared handle, or if a
+    /// dataset is written through one argument while also appearing in
+    /// another (OPS's no-aliasing contract — required for tiling to be a
+    /// pure reordering).
+    pub fn par_loop(
+        &mut self,
+        name: &str,
+        block: BlockId,
+        range: Range3,
+        kernel: Kernel,
+        args: Vec<Arg>,
+    ) {
+        self.par_loop_eff(name, block, range, kernel, args, 1.0)
+    }
+
+    /// [`Self::par_loop`] with an explicit bandwidth-efficiency factor
+    /// (relative to the app baseline; models latency-/compute-bound
+    /// kernels such as OpenSBLI's dominant RHS evaluation).
+    pub fn par_loop_eff(
+        &mut self,
+        name: &str,
+        block: BlockId,
+        range: Range3,
+        kernel: Kernel,
+        args: Vec<Arg>,
+        bw_efficiency: f64,
+    ) {
+        // Validate handles + aliasing.
+        let mut written: Vec<DatasetId> = vec![];
+        let mut seen: Vec<DatasetId> = vec![];
+        for a in &args {
+            if let Arg::Dat { dat, stencil, acc } = a {
+                assert!(
+                    (dat.0 as usize) < self.datasets.len(),
+                    "loop {name}: undeclared dataset {dat:?}"
+                );
+                assert!(
+                    (stencil.0 as usize) < self.stencils.len(),
+                    "loop {name}: undeclared stencil {stencil:?}"
+                );
+                if acc.writes() {
+                    written.push(*dat);
+                }
+                seen.push(*dat);
+            }
+        }
+        for w in &written {
+            assert!(
+                seen.iter().filter(|d| *d == w).count() == 1,
+                "loop {name}: dataset {w:?} written while aliased by another argument"
+            );
+        }
+        let has_red = args.iter().any(|a| matches!(a, Arg::GblRed { .. }));
+
+        self.queue.push(LoopInst {
+            name: name.to_string(),
+            block,
+            range,
+            args,
+            kernel,
+            seq: 0,
+            bw_efficiency,
+        });
+
+        // A reduction returns data to user space only when queried, but it
+        // still ends the analysable chain in OPS once queried; we keep the
+        // loop queued and flush on the query. (No action needed here; the
+        // flag is informative.)
+        let _ = has_red;
+    }
+
+    // ---- trigger points (return data to user space) ------------------------
+
+    /// Execute everything queued. Called internally by the data-returning
+    /// APIs; public for drivers that want chain boundaries at timestep
+    /// granularity.
+    pub fn flush(&mut self) {
+        let chain = self.queue.take_chain();
+        if chain.is_empty() {
+            return;
+        }
+        let problem = crate::tiling::plan::chain_bytes(&chain, &self.datasets);
+        if !self.engine.fits(problem) {
+            self.oom = true;
+        }
+        let mut world = World {
+            datasets: &self.datasets,
+            stencils: &self.stencils,
+            store: &mut self.store,
+            reds: &mut self.reds,
+            metrics: &mut self.metrics,
+            exec: self.exec.as_mut(),
+        };
+        self.engine.run_chain(&chain, &mut world, self.cyclic_phase);
+    }
+
+    /// Get a reduction result — flushes the queue (§3's canonical trigger
+    /// point) and resets the handle for reuse.
+    pub fn reduction_result(&mut self, id: ReductionId) -> f64 {
+        self.flush();
+        let r = &mut self.reds[id.0 as usize];
+        let v = r.value;
+        r.reset();
+        v
+    }
+
+    /// Fetch a copy of a dataset's full padded buffer — flushes the queue.
+    pub fn fetch(&mut self, id: DatasetId) -> Vec<f64> {
+        self.flush();
+        self.store.buf(id).to_vec()
+    }
+
+    /// Read a single value — flushes the queue.
+    pub fn value_at(&mut self, id: DatasetId, idx: [isize; 3]) -> f64 {
+        self.flush();
+        let off = self.datasets[id.0 as usize].offset(idx) as usize;
+        self.store.buf(id)[off]
+    }
+
+    /// Periodic halo exchange along `dim` to depth `depth` — the OPS/MPI
+    /// exchange path, which happens **between** loop chains (this flushes
+    /// first). Modelled cost: one exchange latency + bytes at exchange
+    /// bandwidth, charged to halo time. OpenSBLI's periodic boundaries use
+    /// this with deep halos so chains can tile across multiple timesteps
+    /// (redundant halo-deep computation, as OPS does under MPI+tiling).
+    pub fn exchange_periodic(&mut self, id: DatasetId, dim: usize, depth: usize) {
+        self.flush();
+        let ds = self.datasets[id.0 as usize].clone();
+        let n = ds.size[dim] as isize;
+        assert!(
+            depth as isize <= n,
+            "periodic exchange depth {depth} exceeds extent {n} of {}",
+            ds.name
+        );
+        // Copy plane(-k) = plane(n-k) and plane(n-1+k) = plane(k-1).
+        for k in 1..=depth as isize {
+            self.copy_plane(&ds, dim, n - k, -k);
+            self.copy_plane(&ds, dim, k - 1, n - 1 + k);
+        }
+        // Time model: one exchange of 2*depth representative planes (see
+        // Dataset::repr_plane_bytes on the tall-grid correction).
+        let bytes = 2 * depth as u64 * ds.repr_plane_bytes();
+        let t = 8e-6 + bytes as f64 / 12e9;
+        self.metrics.halo_time_s += t;
+        self.metrics.halo_exchanges += 1;
+        self.metrics.elapsed_s += t;
+    }
+
+    /// Copy one whole plane of `ds` along `dim` (`src` → `dst` logical
+    /// indices), spanning the full padded extent of the other dims.
+    fn copy_plane(&mut self, ds: &Dataset, dim: usize, src: isize, dst: isize) {
+        let s = ds.strides();
+        let lo = [
+            -(ds.halo_lo[0] as isize),
+            -(ds.halo_lo[1] as isize),
+            -(ds.halo_lo[2] as isize),
+        ];
+        let hi = [
+            ds.size[0] as isize + ds.halo_hi[0] as isize,
+            ds.size[1] as isize + ds.halo_hi[1] as isize,
+            ds.size[2] as isize + ds.halo_hi[2] as isize,
+        ];
+        let _ = s;
+        let buf = self.store.buf_mut(ds.id);
+        // Pointwise copy over the plane; src and dst planes are disjoint.
+        let (d0, d1) = match dim {
+            0 => (1, 2),
+            1 => (0, 2),
+            2 => (0, 1),
+            _ => unreachable!(),
+        };
+        for b in lo[d1]..hi[d1] {
+            for a in lo[d0]..hi[d0] {
+                let mut si = [0isize; 3];
+                si[dim] = src;
+                si[d0] = a;
+                si[d1] = b;
+                let mut di = si;
+                di[dim] = dst;
+                let so = ds.offset(si) as usize;
+                let do_ = ds.offset(di) as usize;
+                buf[do_] = buf[so];
+            }
+        }
+    }
+
+    // ---- application signals ----------------------------------------------
+
+    /// §4.1: the application declares that the regular cyclic execution
+    /// pattern has begun (enables the unsafe skip-download-of-temporaries
+    /// optimisation on GPU engines).
+    pub fn set_cyclic_phase(&mut self, on: bool) {
+        self.cyclic_phase = on;
+    }
+
+    // ---- introspection ------------------------------------------------------
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
+    /// Reset metrics (e.g. after a warm-up phase, as the paper's timed
+    /// region excludes initialisation).
+    pub fn reset_metrics(&mut self) {
+        self.metrics = Metrics::new();
+    }
+
+    /// Did any executed chain exceed the engine's memory (the paper's
+    /// flat-MCDRAM/GPU-baseline segfault condition)?
+    pub fn oom(&self) -> bool {
+        self.oom
+    }
+
+    /// Modelled total bytes of all declared datasets.
+    pub fn problem_bytes(&self) -> u64 {
+        self.datasets.iter().map(|d| d.bytes()).sum()
+    }
+
+    pub fn engine_description(&self) -> String {
+        self.engine.describe()
+    }
+
+    pub fn dataset(&self, id: DatasetId) -> &Dataset {
+        &self.datasets[id.0 as usize]
+    }
+
+    pub fn datasets(&self) -> &[Dataset] {
+        &self.datasets
+    }
+
+    pub fn stencils(&self) -> &[Stencil] {
+        &self.stencils
+    }
+
+    pub fn queued_loops(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Direct (untimed) access for initialisation from host files etc.
+    pub fn store_mut(&mut self) -> &mut DataStore {
+        &mut self.store
+    }
+
+    pub fn store(&self) -> &DataStore {
+        &self.store
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::access::Access;
+    use super::*;
+    use crate::memory::PlainEngine;
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::shapes;
+
+    fn ctx() -> OpsContext {
+        OpsContext::new(Box::new(PlainEngine {
+            bw_gbs: 100.0,
+            mem_limit: None,
+            launch_s: 0.0,
+            halo: None,
+            label: "test".into(),
+        }))
+    }
+
+    #[test]
+    fn loops_are_lazy_until_trigger() {
+        let mut c = ctx();
+        let b = c.decl_block("g", [8, 8, 1]);
+        let d = c.decl_dat(b, "d", [8, 8, 1], [0; 3], [0; 3]);
+        let s = c.decl_stencil("pt", shapes::point());
+        c.par_loop(
+            "set",
+            b,
+            [(0, 8), (0, 8), (0, 1)],
+            kernel(|c| c.w(0, 0, 0, 7.0)),
+            vec![Arg::dat(d, s, Access::Write)],
+        );
+        assert_eq!(c.queued_loops(), 1);
+        assert_eq!(c.metrics().loop_bytes, 0, "nothing ran yet");
+        let v = c.value_at(d, [3, 3, 0]);
+        assert_eq!(v, 7.0);
+        assert_eq!(c.queued_loops(), 0);
+        assert!(c.metrics().loop_bytes > 0);
+    }
+
+    #[test]
+    fn reduction_triggers_and_resets() {
+        let mut c = ctx();
+        let b = c.decl_block("g", [4, 4, 1]);
+        let d = c.decl_dat(b, "d", [4, 4, 1], [0; 3], [0; 3]);
+        let s = c.decl_stencil("pt", shapes::point());
+        let r = c.decl_reduction("sum", RedOp::Sum);
+        c.par_loop(
+            "ones",
+            b,
+            [(0, 4), (0, 4), (0, 1)],
+            kernel(|c| c.w(0, 0, 0, 1.0)),
+            vec![Arg::dat(d, s, Access::Write)],
+        );
+        c.par_loop(
+            "sum",
+            b,
+            [(0, 4), (0, 4), (0, 1)],
+            kernel(|c| {
+                let v = c.r(0, 0, 0);
+                c.red_sum(0, v);
+            }),
+            vec![
+                Arg::dat(d, s, Access::Read),
+                Arg::GblRed {
+                    red: r,
+                    op: RedOp::Sum,
+                },
+            ],
+        );
+        assert_eq!(c.reduction_result(r), 16.0);
+        // handle reset: querying again (no new loops) gives identity.
+        assert_eq!(c.reduction_result(r), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "aliased")]
+    fn aliased_write_is_rejected() {
+        let mut c = ctx();
+        let b = c.decl_block("g", [4, 4, 1]);
+        let d = c.decl_dat(b, "d", [4, 4, 1], [0; 3], [0; 3]);
+        let s = c.decl_stencil("pt", shapes::point());
+        c.par_loop(
+            "bad",
+            b,
+            [(0, 4), (0, 4), (0, 1)],
+            kernel(|_| {}),
+            vec![
+                Arg::dat(d, s, Access::Write),
+                Arg::dat(d, s, Access::Read),
+            ],
+        );
+    }
+
+    #[test]
+    fn oom_flag_set_when_engine_refuses() {
+        let mut c = OpsContext::new(Box::new(PlainEngine {
+            bw_gbs: 100.0,
+            mem_limit: Some(16),
+            launch_s: 0.0,
+            halo: None,
+            label: "tiny".into(),
+        }));
+        let b = c.decl_block("g", [8, 8, 1]);
+        let d = c.decl_dat(b, "d", [8, 8, 1], [0; 3], [0; 3]);
+        let s = c.decl_stencil("pt", shapes::point());
+        c.par_loop(
+            "w",
+            b,
+            [(0, 8), (0, 8), (0, 1)],
+            kernel(|c| c.w(0, 0, 0, 1.0)),
+            vec![Arg::dat(d, s, Access::Write)],
+        );
+        c.flush();
+        assert!(c.oom());
+    }
+
+    #[test]
+    fn model_elem_bytes_scales_problem() {
+        let mut c = ctx();
+        let b = c.decl_block("g", [8, 8, 1]);
+        c.set_model_elem_bytes(8 * 1024);
+        let d = c.decl_dat(b, "d", [8, 8, 1], [0; 3], [0; 3]);
+        assert_eq!(c.dataset(d).elem_bytes, 8 * 1024);
+        assert_eq!(c.problem_bytes(), 64 * 8 * 1024);
+    }
+}
+
+impl OpsContext {
+    /// Drain the queue without executing — diagnostics/planning tools.
+    pub fn take_chain_for_debug(&mut self) -> Vec<LoopInst> {
+        self.queue.take_chain()
+    }
+}

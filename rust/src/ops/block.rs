@@ -1,0 +1,41 @@
+//! Structured-mesh blocks: the index spaces datasets are defined on.
+
+
+/// Opaque block handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockId(pub u32);
+
+/// A structured block: a (up to) 3D index space. 2D applications use
+/// `size[2] == 1`.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub id: BlockId,
+    pub name: String,
+    /// Number of *interior* grid points along each dimension.
+    pub size: [usize; 3],
+    /// Spatial dimensionality (2 or 3).
+    pub dims: usize,
+}
+
+impl Block {
+    /// Total interior points.
+    pub fn points(&self) -> usize {
+        self.size[0] * self.size[1] * self.size[2]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn points_product() {
+        let b = Block {
+            id: BlockId(0),
+            name: "g".into(),
+            size: [10, 20, 3],
+            dims: 3,
+        };
+        assert_eq!(b.points(), 600);
+    }
+}

@@ -1,0 +1,202 @@
+//! Datasets: block-attached fields owned by the library and referred to
+//! through opaque handles, plus the backing [`DataStore`].
+
+use super::block::BlockId;
+
+/// Opaque dataset handle — the only thing user code holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DatasetId(pub u32);
+
+/// Metadata for one dataset.
+///
+/// A dataset covers the index range `[-halo_lo[d], size[d] + halo_hi[d])`
+/// along each dimension `d`; staggered-grid fields (e.g. CloverLeaf's
+/// vertex-centred velocities) simply declare a larger `size`. Storage is
+/// row-major with x fastest.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub id: DatasetId,
+    pub block: BlockId,
+    pub name: String,
+    /// Interior extent along each dimension.
+    pub size: [usize; 3],
+    /// Halo depth below index 0 (non-negative).
+    pub halo_lo: [i32; 3],
+    /// Halo depth past `size` (non-negative).
+    pub halo_hi: [i32; 3],
+    /// Bytes per element in the *modelled* problem (the simulator's byte
+    /// accounting is in terms of the paper's double-precision fields).
+    pub elem_bytes: u64,
+}
+
+impl Dataset {
+    /// Padded extent along dimension `d`.
+    #[inline]
+    pub fn padded(&self, d: usize) -> usize {
+        (self.halo_lo[d] + self.size[d] as i32 + self.halo_hi[d]) as usize
+    }
+
+    /// Total allocated elements (including halos).
+    pub fn alloc_len(&self) -> usize {
+        self.padded(0) * self.padded(1) * self.padded(2)
+    }
+
+    /// Strides (in elements) for x, y, z.
+    #[inline]
+    pub fn strides(&self) -> [isize; 3] {
+        let sx = 1isize;
+        let sy = self.padded(0) as isize;
+        let sz = (self.padded(0) * self.padded(1)) as isize;
+        [sx, sy, sz]
+    }
+
+    /// Flat element offset of logical index `(i, j, k)`.
+    ///
+    /// Valid logical indices run `-halo_lo[d] ..= size[d] + halo_hi[d] - 1`.
+    #[inline]
+    pub fn offset(&self, idx: [isize; 3]) -> isize {
+        let s = self.strides();
+        (idx[0] + self.halo_lo[0] as isize) * s[0]
+            + (idx[1] + self.halo_lo[1] as isize) * s[1]
+            + (idx[2] + self.halo_lo[2] as isize) * s[2]
+    }
+
+    /// Total bytes of this dataset in the modelled problem.
+    pub fn bytes(&self) -> u64 {
+        self.alloc_len() as u64 * self.elem_bytes
+    }
+
+    /// Bytes of one boundary plane of the *modelled* problem, assuming
+    /// the paper's (near-isotropic) grids: `total^((d-1)/d)`. Our actual
+    /// grids are deliberately tall along the tiled dimension (so skewed
+    /// tiles have room), which would otherwise exaggerate surface costs
+    /// ~10x; halo-exchange models use this instead of [`Self::plane_bytes`].
+    pub fn repr_plane_bytes(&self) -> u64 {
+        // modelled double-precision points, independent of the actual
+        // grid's aspect ratio or the model-scale factor
+        let points = self.bytes() as f64 / 8.0;
+        let d = if self.padded(2) > 1 { 3.0 } else { 2.0 };
+        (points.powf((d - 1.0) / d) * 8.0) as u64
+    }
+
+    /// Bytes of one x–y plane (the unit moved when streaming tiles along
+    /// the outermost dimension).
+    pub fn plane_bytes(&self, tile_dim: usize) -> u64 {
+        let total = self.alloc_len() as u64;
+        let extent = self.padded(tile_dim) as u64;
+        if extent == 0 {
+            0
+        } else {
+            total / extent * self.elem_bytes
+        }
+    }
+}
+
+/// The backing store for all datasets — plain host memory. The memory
+/// engines treat device placement *virtually* (time is simulated), so a
+/// single canonical copy is enough and tiled execution can be verified
+/// bit-exactly against untiled execution.
+#[derive(Debug, Default)]
+pub struct DataStore {
+    bufs: Vec<Vec<f64>>,
+}
+
+impl DataStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate storage for a new dataset; returns nothing — storage is
+    /// indexed by `DatasetId` order of declaration.
+    pub fn alloc(&mut self, ds: &Dataset) {
+        assert_eq!(
+            ds.id.0 as usize,
+            self.bufs.len(),
+            "datasets must be allocated in declaration order"
+        );
+        self.bufs.push(vec![0.0; ds.alloc_len()]);
+    }
+
+    #[inline]
+    pub fn buf(&self, id: DatasetId) -> &[f64] {
+        &self.bufs[id.0 as usize]
+    }
+
+    #[inline]
+    pub fn buf_mut(&mut self, id: DatasetId) -> &mut [f64] {
+        &mut self.bufs[id.0 as usize]
+    }
+
+    /// Raw pointer to a dataset buffer — used by the kernel executor to
+    /// build per-argument accessors (several arguments may alias distinct
+    /// datasets; aliasing rules are enforced by the loop validator).
+    #[inline]
+    pub(crate) fn raw(&mut self, id: DatasetId) -> (*mut f64, usize) {
+        let b = &mut self.bufs[id.0 as usize];
+        (b.as_mut_ptr(), b.len())
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> Dataset {
+        Dataset {
+            id: DatasetId(0),
+            block: BlockId(0),
+            name: "d".into(),
+            size: [8, 4, 1],
+            halo_lo: [2, 2, 0],
+            halo_hi: [2, 2, 0],
+            elem_bytes: 8,
+        }
+    }
+
+    #[test]
+    fn padded_and_alloc() {
+        let d = ds();
+        assert_eq!(d.padded(0), 12);
+        assert_eq!(d.padded(1), 8);
+        assert_eq!(d.padded(2), 1);
+        assert_eq!(d.alloc_len(), 96);
+        assert_eq!(d.bytes(), 96 * 8);
+    }
+
+    #[test]
+    fn offset_of_origin_skips_halo() {
+        let d = ds();
+        // origin (0,0,0) sits at (2,2,0) in padded space.
+        assert_eq!(d.offset([0, 0, 0]), 2 + 2 * 12);
+        assert_eq!(d.offset([-2, -2, 0]), 0);
+        assert_eq!(
+            d.offset([(d.size[0] + 1) as isize, 0, 0]),
+            2 + 9 + 2 * 12
+        );
+    }
+
+    #[test]
+    fn store_roundtrip() {
+        let d = ds();
+        let mut st = DataStore::new();
+        st.alloc(&d);
+        let off = d.offset([3, 1, 0]) as usize;
+        st.buf_mut(d.id)[off] = 42.0;
+        assert_eq!(st.buf(d.id)[off], 42.0);
+    }
+
+    #[test]
+    fn plane_bytes_along_y() {
+        let d = ds();
+        // padded = 12 x 8 x 1; plane along dim 1 = 12 elements.
+        assert_eq!(d.plane_bytes(1), 12 * 8);
+    }
+}

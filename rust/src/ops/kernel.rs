@@ -1,0 +1,140 @@
+//! Kernel bodies and the per-point access context.
+//!
+//! A kernel is the "elemental function" of an OPS parallel loop. It sees
+//! its arguments only through the [`Ctx`] accessor — the analogue of
+//! OPS's `ACC(...)` macros — which resolves a (argument, stencil-offset)
+//! pair to a concrete memory location. Because kernels never see raw
+//! arrays, the library is free to reorder iterations (tiling!) and to
+//! virtually place data.
+
+#[cfg(debug_assertions)]
+use super::access::Access;
+use std::sync::Arc;
+
+/// Per-argument view used during execution: a raw base pointer positioned
+/// at the *current iteration point*, plus strides.
+#[derive(Clone, Copy)]
+pub(crate) struct ArgView {
+    /// Pointer to the element at the current index.
+    pub ptr: *mut f64,
+    pub strides: [isize; 3],
+    #[cfg(debug_assertions)]
+    pub lo: *const f64,
+    #[cfg(debug_assertions)]
+    pub hi: *const f64, // one past the end
+    #[cfg(debug_assertions)]
+    pub acc: Access,
+}
+
+/// The kernel execution context for one iteration point.
+///
+/// `r`/`w` (and their 3D variants) access dataset arguments by positional
+/// argument index and relative stencil offset; `red` accumulates into
+/// reduction slots; `idx` exposes the current grid index (OPS's
+/// `ops_arg_idx`).
+pub struct Ctx<'a> {
+    pub(crate) args: &'a [ArgView],
+    pub(crate) red: &'a mut [f64],
+    pub(crate) consts: &'a [f64],
+    pub(crate) idx: [isize; 3],
+    /// x distance from the row origin the views are positioned at (the
+    /// executor advances this instead of rewriting every view pointer).
+    pub(crate) xoff: isize,
+}
+
+impl<'a> Ctx<'a> {
+    /// Current iteration index.
+    #[inline(always)]
+    pub fn idx(&self) -> [isize; 3] {
+        self.idx
+    }
+
+    #[inline(always)]
+    fn addr(&self, a: usize, o: [isize; 3]) -> *mut f64 {
+        let v = &self.args[a];
+        let off =
+            (o[0] + self.xoff) * v.strides[0] + o[1] * v.strides[1] + o[2] * v.strides[2];
+        let p = unsafe { v.ptr.offset(off) };
+        #[cfg(debug_assertions)]
+        {
+            assert!(
+                (p as *const f64) >= v.lo && (p as *const f64) < v.hi,
+                "kernel access out of bounds: arg {a} offset {o:?}"
+            );
+        }
+        p
+    }
+
+    /// Read argument `a` at 3D offset `o`.
+    #[inline(always)]
+    pub fn r3(&self, a: usize, ox: isize, oy: isize, oz: isize) -> f64 {
+        #[cfg(debug_assertions)]
+        assert!(self.args[a].acc.reads() || {
+            // write-first datasets may be read back within the same loop
+            // *after* being written (OPS_WRITE semantics).
+            true
+        });
+        unsafe { *self.addr(a, [ox, oy, oz]) }
+    }
+
+    /// Read argument `a` at 2D offset.
+    #[inline(always)]
+    pub fn r(&self, a: usize, ox: isize, oy: isize) -> f64 {
+        self.r3(a, ox, oy, 0)
+    }
+
+    /// Write argument `a` at 3D offset `o`.
+    #[inline(always)]
+    pub fn w3(&mut self, a: usize, ox: isize, oy: isize, oz: isize, v: f64) {
+        #[cfg(debug_assertions)]
+        assert!(
+            self.args[a].acc.writes(),
+            "kernel writes a read-only argument {a}"
+        );
+        unsafe { *self.addr(a, [ox, oy, oz]) = v }
+    }
+
+    /// Write argument `a` at 2D offset.
+    #[inline(always)]
+    pub fn w(&mut self, a: usize, ox: isize, oy: isize, v: f64) {
+        self.w3(a, ox, oy, 0, v)
+    }
+
+    /// Accumulate into reduction slot `slot` (sum).
+    #[inline(always)]
+    pub fn red_sum(&mut self, slot: usize, v: f64) {
+        self.red[slot] += v;
+    }
+
+    /// Min-reduce into reduction slot `slot`.
+    #[inline(always)]
+    pub fn red_min(&mut self, slot: usize, v: f64) {
+        if v < self.red[slot] {
+            self.red[slot] = v;
+        }
+    }
+
+    /// Max-reduce into reduction slot `slot`.
+    #[inline(always)]
+    pub fn red_max(&mut self, slot: usize, v: f64) {
+        if v > self.red[slot] {
+            self.red[slot] = v;
+        }
+    }
+
+    /// Read a global constant passed to the loop (OPS's `ops_arg_gbl` with
+    /// read access).
+    #[inline(always)]
+    pub fn gbl(&self, i: usize) -> f64 {
+        self.consts[i]
+    }
+}
+
+/// A kernel body. Shared (`Arc`) because lazy execution stores loops in a
+/// queue and tiling executes each loop many times (once per tile).
+pub type Kernel = Arc<dyn Fn(&mut Ctx) + Send + Sync>;
+
+/// Convenience constructor so call sites read `kernel(|c| …)`.
+pub fn kernel<F: Fn(&mut Ctx) + Send + Sync + 'static>(f: F) -> Kernel {
+    Arc::new(f)
+}

@@ -1,0 +1,26 @@
+//! The OPS-style structured-mesh DSL core.
+//!
+//! Mirrors the abstraction of the OPS library (§3 of the paper): *blocks*
+//! connect *datasets*, which are accessed through *stencils* from within
+//! *parallel loops*. All user data is owned by the library and referred to
+//! through opaque handles; parallel loops carry complete access
+//! descriptors (dataset, stencil, read/write mode), which is what makes
+//! lazy execution and cross-loop dependency analysis possible.
+
+pub mod access;
+pub mod api;
+pub mod block;
+pub mod dataset;
+pub mod kernel;
+pub mod parloop;
+pub mod reduction;
+pub mod stencil;
+
+pub use access::Access;
+pub use api::OpsContext;
+pub use block::{Block, BlockId};
+pub use dataset::{DataStore, Dataset, DatasetId};
+pub use kernel::{Ctx, Kernel};
+pub use parloop::{Arg, LoopInst, Range3};
+pub use reduction::{RedOp, Reduction, ReductionId};
+pub use stencil::{Stencil, StencilId};

@@ -1,0 +1,138 @@
+//! Parallel-loop descriptors — the unit the lazy queue stores and the
+//! tiling analysis consumes.
+
+use super::access::Access;
+use super::block::BlockId;
+use super::dataset::DatasetId;
+use super::kernel::Kernel;
+use super::reduction::{RedOp, ReductionId};
+use super::stencil::StencilId;
+
+/// An iteration range: half-open `[lo, hi)` per dimension. 2D loops use
+/// `z = (0, 1)`.
+pub type Range3 = [(isize, isize); 3];
+
+/// Number of points in a range.
+pub fn range_points(r: &Range3) -> u64 {
+    r.iter()
+        .map(|&(lo, hi)| (hi - lo).max(0) as u64)
+        .product()
+}
+
+/// One argument of a parallel loop.
+#[derive(Clone)]
+pub enum Arg {
+    /// A dataset accessed through a stencil with a given mode.
+    Dat {
+        dat: DatasetId,
+        stencil: StencilId,
+        acc: Access,
+    },
+    /// A global reduction (sum/min/max into a handle).
+    GblRed { red: ReductionId, op: RedOp },
+    /// Loop-invariant scalars visible to the kernel via [`super::Ctx::gbl`].
+    GblConst { values: Vec<f64> },
+    /// The iteration index (OPS's `ops_arg_idx`); the kernel reads it via
+    /// [`super::Ctx::idx`]. Declared for parity with OPS, carries no data.
+    Idx,
+}
+
+impl Arg {
+    pub fn dat(dat: DatasetId, stencil: StencilId, acc: Access) -> Self {
+        Arg::Dat { dat, stencil, acc }
+    }
+}
+
+/// A recorded parallel loop instance.
+#[derive(Clone)]
+pub struct LoopInst {
+    /// Kernel name (diagnostics, metrics, PJRT artifact lookup).
+    pub name: String,
+    pub block: BlockId,
+    pub range: Range3,
+    pub args: Vec<Arg>,
+    pub kernel: Kernel,
+    /// Monotonically increasing id assigned at enqueue time.
+    pub seq: u64,
+    /// Relative cost factor of this kernel: 1.0 = pure streaming
+    /// (STREAM-like); < 1.0 models latency-/compute-sensitive kernels
+    /// that achieve a fraction of streaming bandwidth (§5.1–§5.3 of the
+    /// paper calibrates e.g. OpenSBLI's dominant kernel this way).
+    pub bw_efficiency: f64,
+}
+
+impl LoopInst {
+    /// Bytes moved by this loop according to the paper's §5.1 metric:
+    /// iteration points × Σ over dataset args of elem-bytes × (1 for R or
+    /// W, 2 for RW/Inc).
+    pub fn bytes_touched(&self, elem_bytes: u64) -> u64 {
+        let pts = range_points(&self.range);
+        let per_point: u64 = self
+            .args
+            .iter()
+            .map(|a| match a {
+                Arg::Dat { acc, .. } => elem_bytes * acc.traffic_multiplier(),
+                _ => 0,
+            })
+            .sum();
+        pts * per_point
+    }
+
+    /// Dataset arguments only, in positional order.
+    pub fn dat_args(&self) -> impl Iterator<Item = (DatasetId, StencilId, Access)> + '_ {
+        self.args.iter().filter_map(|a| match a {
+            Arg::Dat { dat, stencil, acc } => Some((*dat, *stencil, *acc)),
+            _ => None,
+        })
+    }
+
+    /// Does this loop carry a reduction (a chain trigger point)?
+    pub fn has_reduction(&self) -> bool {
+        self.args.iter().any(|a| matches!(a, Arg::GblRed { .. }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::kernel::kernel;
+
+    fn mkloop(args: Vec<Arg>) -> LoopInst {
+        LoopInst {
+            name: "t".into(),
+            block: BlockId(0),
+            range: [(0, 10), (0, 5), (0, 1)],
+            args,
+            kernel: kernel(|_| {}),
+            seq: 0,
+            bw_efficiency: 1.0,
+        }
+    }
+
+    #[test]
+    fn bytes_touched_counts_rw_twice() {
+        let l = mkloop(vec![
+            Arg::dat(DatasetId(0), StencilId(0), Access::Read),
+            Arg::dat(DatasetId(1), StencilId(0), Access::ReadWrite),
+            Arg::GblConst { values: vec![1.0] },
+        ]);
+        // 50 points * (8 + 16) bytes
+        assert_eq!(l.bytes_touched(8), 50 * 24);
+    }
+
+    #[test]
+    fn range_points_empty_is_zero() {
+        assert_eq!(range_points(&[(5, 5), (0, 10), (0, 1)]), 0);
+        assert_eq!(range_points(&[(7, 5), (0, 10), (0, 1)]), 0);
+    }
+
+    #[test]
+    fn reduction_detection() {
+        let l = mkloop(vec![Arg::GblRed {
+            red: ReductionId(0),
+            op: RedOp::Min,
+        }]);
+        assert!(l.has_reduction());
+        assert!(!mkloop(vec![]).has_reduction());
+    }
+}

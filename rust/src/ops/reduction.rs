@@ -1,0 +1,88 @@
+//! Global reductions. Requesting a reduction *result* is one of the API
+//! calls that returns data to user space and therefore terminates the
+//! lazily-queued loop chain (§3 of the paper).
+
+
+/// Opaque reduction handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ReductionId(pub u32);
+
+/// Reduction operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RedOp {
+    Sum,
+    Min,
+    Max,
+}
+
+impl RedOp {
+    /// Identity element.
+    pub fn identity(self) -> f64 {
+        match self {
+            RedOp::Sum => 0.0,
+            RedOp::Min => f64::INFINITY,
+            RedOp::Max => f64::NEG_INFINITY,
+        }
+    }
+
+    /// Combine two partial results.
+    #[inline]
+    pub fn combine(self, a: f64, b: f64) -> f64 {
+        match self {
+            RedOp::Sum => a + b,
+            RedOp::Min => a.min(b),
+            RedOp::Max => a.max(b),
+        }
+    }
+}
+
+/// A named reduction slot.
+#[derive(Debug, Clone)]
+pub struct Reduction {
+    pub id: ReductionId,
+    pub name: String,
+    pub op: RedOp,
+    pub value: f64,
+}
+
+impl Reduction {
+    pub fn new(id: ReductionId, name: &str, op: RedOp) -> Self {
+        Reduction {
+            id,
+            name: name.to_string(),
+            op,
+            value: op.identity(),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.value = self.op.identity();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identities() {
+        assert_eq!(RedOp::Sum.identity(), 0.0);
+        assert_eq!(RedOp::Min.identity(), f64::INFINITY);
+        assert_eq!(RedOp::Max.identity(), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn combine_ops() {
+        assert_eq!(RedOp::Sum.combine(2.0, 3.0), 5.0);
+        assert_eq!(RedOp::Min.combine(2.0, 3.0), 2.0);
+        assert_eq!(RedOp::Max.combine(2.0, 3.0), 3.0);
+    }
+
+    #[test]
+    fn reset_restores_identity() {
+        let mut r = Reduction::new(ReductionId(0), "dt", RedOp::Min);
+        r.value = 0.5;
+        r.reset();
+        assert_eq!(r.value, f64::INFINITY);
+    }
+}

@@ -1,0 +1,165 @@
+//! Stencils: the sets of relative offsets with which a loop argument
+//! accesses its dataset. Stencil extents feed the skewed-tiling slope
+//! computation and the tile footprint calculator.
+
+
+/// Opaque stencil handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StencilId(pub u32);
+
+/// A multi-point stencil: a named list of 3D integer offsets.
+///
+/// 2D applications use offsets with `z == 0`.
+#[derive(Debug, Clone)]
+pub struct Stencil {
+    pub id: StencilId,
+    pub name: String,
+    pub points: Vec<[i32; 3]>,
+}
+
+impl Stencil {
+    /// Minimum offset along each dimension (≤ 0 for typical stencils).
+    pub fn min_extent(&self) -> [i32; 3] {
+        let mut m = [i32::MAX; 3];
+        for p in &self.points {
+            for d in 0..3 {
+                m[d] = m[d].min(p[d]);
+            }
+        }
+        if self.points.is_empty() {
+            [0; 3]
+        } else {
+            m
+        }
+    }
+
+    /// Maximum offset along each dimension (≥ 0 for typical stencils).
+    pub fn max_extent(&self) -> [i32; 3] {
+        let mut m = [i32::MIN; 3];
+        for p in &self.points {
+            for d in 0..3 {
+                m[d] = m[d].max(p[d]);
+            }
+        }
+        if self.points.is_empty() {
+            [0; 3]
+        } else {
+            m
+        }
+    }
+
+    /// Largest absolute offset along dimension `d` — the stencil *radius*
+    /// used for tile skewing along the tiled dimension.
+    pub fn radius(&self, d: usize) -> i32 {
+        self.points
+            .iter()
+            .map(|p| p[d].abs())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Convenience constructors for the stencil families the three
+/// applications use.
+pub mod shapes {
+    /// The single-point stencil `(0,0,0)`.
+    pub fn point() -> Vec<[i32; 3]> {
+        vec![[0, 0, 0]]
+    }
+
+    /// 2D star stencil of radius `r` (e.g. `r = 1` gives the 5-point
+    /// stencil).
+    pub fn star2d(r: i32) -> Vec<[i32; 3]> {
+        let mut pts = vec![[0, 0, 0]];
+        for k in 1..=r {
+            pts.push([k, 0, 0]);
+            pts.push([-k, 0, 0]);
+            pts.push([0, k, 0]);
+            pts.push([0, -k, 0]);
+        }
+        pts
+    }
+
+    /// 3D star stencil of radius `r` (e.g. `r = 1` gives the 7-point
+    /// stencil).
+    pub fn star3d(r: i32) -> Vec<[i32; 3]> {
+        let mut pts = vec![[0, 0, 0]];
+        for k in 1..=r {
+            for d in 0..3 {
+                let mut p = [0i32; 3];
+                p[d] = k;
+                pts.push(p);
+                p[d] = -k;
+                pts.push(p);
+            }
+        }
+        pts
+    }
+
+    /// Full 2D box stencil over `[lo, hi]` in x and y.
+    pub fn box2d(lo: i32, hi: i32) -> Vec<[i32; 3]> {
+        let mut pts = Vec::new();
+        for y in lo..=hi {
+            for x in lo..=hi {
+                pts.push([x, y, 0]);
+            }
+        }
+        pts
+    }
+
+    /// Explicit offset list (helper for staggered-grid stencils).
+    pub fn offsets2d(offs: &[(i32, i32)]) -> Vec<[i32; 3]> {
+        offs.iter().map(|&(x, y)| [x, y, 0]).collect()
+    }
+
+    /// Explicit offset list, 3D.
+    pub fn offsets3d(offs: &[(i32, i32, i32)]) -> Vec<[i32; 3]> {
+        offs.iter().map(|&(x, y, z)| [x, y, z]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st(points: Vec<[i32; 3]>) -> Stencil {
+        Stencil {
+            id: StencilId(0),
+            name: "t".into(),
+            points,
+        }
+    }
+
+    #[test]
+    fn star2d_has_expected_points() {
+        let s = st(shapes::star2d(1));
+        assert_eq!(s.points.len(), 5);
+        assert_eq!(s.min_extent(), [-1, -1, 0]);
+        assert_eq!(s.max_extent(), [1, 1, 0]);
+        assert_eq!(s.radius(0), 1);
+        assert_eq!(s.radius(2), 0);
+    }
+
+    #[test]
+    fn star3d_radius2() {
+        let s = st(shapes::star3d(2));
+        assert_eq!(s.points.len(), 13);
+        assert_eq!(s.radius(2), 2);
+    }
+
+    #[test]
+    fn asymmetric_extents() {
+        let s = st(shapes::offsets2d(&[(0, 0), (1, 0), (0, 2)]));
+        assert_eq!(s.min_extent(), [0, 0, 0]);
+        assert_eq!(s.max_extent(), [1, 2, 0]);
+        assert_eq!(s.radius(1), 2);
+    }
+
+    #[test]
+    fn empty_stencil_is_safe() {
+        let s = st(vec![]);
+        assert_eq!(s.min_extent(), [0; 3]);
+        assert_eq!(s.max_extent(), [0; 3]);
+        assert_eq!(s.radius(0), 0);
+    }
+}

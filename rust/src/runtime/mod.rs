@@ -1,0 +1,198 @@
+//! PJRT runtime: loads AOT-compiled XLA programs (HLO text emitted by
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//!
+//! This is the request-path end of the three-layer architecture: Python
+//! (JAX + Pallas) runs **once** at build time to produce
+//! `artifacts/*.hlo.txt`; the Rust coordinator loads and runs them with
+//! no Python anywhere near the hot path.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled, ready-to-run XLA program.
+pub struct LoadedArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of outputs in the result tuple.
+    pub num_outputs: usize,
+}
+
+impl LoadedArtifact {
+    /// Execute with the given inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let res = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .context("PJRT execution failed")?;
+        let lit = res[0][0]
+            .to_literal_sync()
+            .context("device->host transfer failed")?;
+        // aot.py lowers with return_tuple=True.
+        let parts = lit.to_tuple().context("untupling result failed")?;
+        Ok(parts)
+    }
+}
+
+/// One entry of `artifacts/manifest.txt` (written by aot.py): which HLO
+/// file implements which kernel, and the dataset names it consumes and
+/// produces, in argument order.
+///
+/// Line format (whitespace-separated `key=value`, lists comma-separated):
+/// `kernel=diff_lap file=diff_lap.hlo.txt inputs=u,kappa outputs=lap shape=66,66`
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Kernel (par_loop) name this artifact implements.
+    pub kernel: String,
+    /// HLO text file, relative to the manifest.
+    pub file: String,
+    /// Input dataset names, in argument order.
+    pub inputs: Vec<String>,
+    /// Output dataset names, in tuple order.
+    pub outputs: Vec<String>,
+    /// Padded array shape the program was lowered for ([y,x] or [z,y,x]).
+    pub shape: Vec<usize>,
+}
+
+impl ArtifactSpec {
+    /// Parse one manifest line (empty / `#` lines yield `None`).
+    pub fn parse_line(line: &str) -> Result<Option<Self>> {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return Ok(None);
+        }
+        let mut kernel = None;
+        let mut file = None;
+        let mut inputs = vec![];
+        let mut outputs = vec![];
+        let mut shape = vec![];
+        for tok in line.split_whitespace() {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad manifest token {tok:?}"))?;
+            match k {
+                "kernel" => kernel = Some(v.to_string()),
+                "file" => file = Some(v.to_string()),
+                "inputs" => inputs = v.split(',').map(str::to_string).collect(),
+                "outputs" => outputs = v.split(',').map(str::to_string).collect(),
+                "shape" => {
+                    shape = v
+                        .split(',')
+                        .map(|x| x.parse::<usize>())
+                        .collect::<std::result::Result<Vec<_>, _>>()
+                        .with_context(|| format!("bad shape in {line:?}"))?
+                }
+                other => anyhow::bail!("unknown manifest key {other:?}"),
+            }
+        }
+        Ok(Some(ArtifactSpec {
+            kernel: kernel.ok_or_else(|| anyhow::anyhow!("manifest line missing kernel="))?,
+            file: file.ok_or_else(|| anyhow::anyhow!("manifest line missing file="))?,
+            inputs,
+            outputs,
+            shape,
+        }))
+    }
+}
+
+/// The PJRT runtime: one CPU client, many loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text file.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedArtifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(LoadedArtifact {
+            exe,
+            num_outputs: 0,
+        })
+    }
+
+    /// Load the artifact manifest and compile every listed program.
+    pub fn load_manifest(
+        &self,
+        manifest_path: &Path,
+    ) -> Result<HashMap<String, (ArtifactSpec, LoadedArtifact)>> {
+        let text = std::fs::read_to_string(manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}"))?;
+        let specs: Vec<ArtifactSpec> = text
+            .lines()
+            .map(ArtifactSpec::parse_line)
+            .collect::<Result<Vec<_>>>()?
+            .into_iter()
+            .flatten()
+            .collect();
+        let dir = manifest_path
+            .parent()
+            .map(PathBuf::from)
+            .unwrap_or_default();
+        let mut out = HashMap::new();
+        for spec in specs {
+            let mut art = self.load_hlo_text(&dir.join(&spec.file))?;
+            art.num_outputs = spec.outputs.len();
+            out.insert(spec.kernel.clone(), (spec, art));
+        }
+        Ok(out)
+    }
+}
+
+/// Default artifacts directory (relative to the repo root / CWD).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("OPS_OC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_line_parses() {
+        let s = ArtifactSpec::parse_line(
+            "kernel=diff_lap file=a.hlo.txt inputs=u,kappa outputs=lap shape=66,66",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(s.kernel, "diff_lap");
+        assert_eq!(s.inputs, vec!["u", "kappa"]);
+        assert_eq!(s.outputs, vec!["lap"]);
+        assert_eq!(s.shape, vec![66, 66]);
+    }
+
+    #[test]
+    fn comments_and_blanks_skip() {
+        assert!(ArtifactSpec::parse_line("# hi").unwrap().is_none());
+        assert!(ArtifactSpec::parse_line("   ").unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(ArtifactSpec::parse_line("nonsense").is_err());
+        assert!(ArtifactSpec::parse_line("kernel=x").is_err()); // missing file
+        assert!(ArtifactSpec::parse_line("kernel=x file=y shape=a,b").is_err());
+    }
+}

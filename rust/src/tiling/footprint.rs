@@ -1,0 +1,123 @@
+//! Tile footprints along the tiled dimension (Fig. 2 of the paper).
+//!
+//! For each tile and each dataset we track the *interval* of the tiled
+//! dimension that the tile touches. From consecutive tiles' intervals the
+//! paper's regions follow:
+//!
+//! * **full footprint** — everything the tile accesses;
+//! * **left edge** — overlap with the *previous* tile's footprint;
+//! * **right edge** — overlap with the *next* tile's footprint;
+//! * **left footprint** — full minus right edge (safe to download once
+//!   the tile finished; the overlap belongs to the next tile);
+//! * **right footprint** — full minus left edge (what must be freshly
+//!   uploaded; the overlap arrives via a device-device edge copy).
+
+use crate::ops::Dataset;
+
+/// A half-open interval `[lo, hi)` along the tiled dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: isize,
+    pub hi: isize,
+}
+
+impl Interval {
+    pub fn new(lo: isize, hi: isize) -> Self {
+        Interval { lo, hi }
+    }
+
+    pub fn empty() -> Self {
+        Interval { lo: 0, hi: 0 }
+    }
+
+    #[inline]
+    pub fn len(&self) -> isize {
+        (self.hi - self.lo).max(0)
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.hi <= self.lo
+    }
+
+    /// Union as the convex hull (intervals in a chain overlap heavily, so
+    /// the hull is the right conservative choice for footprints).
+    pub fn hull(&self, other: &Interval) -> Interval {
+        if self.is_empty() {
+            *other
+        } else if other.is_empty() {
+            *self
+        } else {
+            Interval::new(self.lo.min(other.lo), self.hi.max(other.hi))
+        }
+    }
+
+    pub fn intersect(&self, other: &Interval) -> Interval {
+        let lo = self.lo.max(other.lo);
+        let hi = self.hi.min(other.hi);
+        if hi <= lo {
+            Interval::empty()
+        } else {
+            Interval::new(lo, hi)
+        }
+    }
+
+    pub fn clamp_to(&self, lo: isize, hi: isize) -> Interval {
+        self.intersect(&Interval::new(lo, hi))
+    }
+}
+
+/// Per-tile, per-dataset footprint.
+#[derive(Debug, Clone)]
+pub struct DatFootprint {
+    /// Full accessed interval (reads extended by stencil extents).
+    pub full: Interval,
+    /// Interval actually written by the tile.
+    pub written: Interval,
+}
+
+impl DatFootprint {
+    /// Bytes of the full footprint for dataset `ds` when tiling `dim`.
+    pub fn full_bytes(&self, ds: &Dataset, dim: usize) -> u64 {
+        ds.plane_bytes(dim) * self.full.len() as u64
+    }
+
+    /// Bytes written.
+    pub fn written_bytes(&self, ds: &Dataset, dim: usize) -> u64 {
+        ds.plane_bytes(dim) * self.written.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hull_and_intersect() {
+        let a = Interval::new(0, 10);
+        let b = Interval::new(5, 20);
+        assert_eq!(a.hull(&b), Interval::new(0, 20));
+        assert_eq!(a.intersect(&b), Interval::new(5, 10));
+        let c = Interval::new(30, 40);
+        assert!(a.intersect(&c).is_empty());
+    }
+
+    #[test]
+    fn hull_with_empty_is_identity() {
+        let a = Interval::new(3, 7);
+        assert_eq!(a.hull(&Interval::empty()), a);
+        assert_eq!(Interval::empty().hull(&a), a);
+    }
+
+    #[test]
+    fn clamp() {
+        let a = Interval::new(-5, 100);
+        assert_eq!(a.clamp_to(0, 50), Interval::new(0, 50));
+    }
+
+    #[test]
+    fn empty_len_zero() {
+        assert_eq!(Interval::new(7, 3).len(), 0);
+        assert!(Interval::new(7, 3).is_empty());
+    }
+}

@@ -1,0 +1,482 @@
+//! Construction of the skewed tile plan for one loop chain.
+
+use super::dependency::compute_shifts;
+use super::footprint::{DatFootprint, Interval};
+use crate::ops::{DatasetId, Dataset, LoopInst, Range3, Stencil};
+
+/// One tile of the schedule.
+#[derive(Debug, Clone)]
+pub struct Tile {
+    /// Per-loop (chain order) iteration sub-range; `None` when this tile
+    /// contributes no points for that loop.
+    pub loop_ranges: Vec<Option<Range3>>,
+    /// Per-dataset (dense by `DatasetId`) footprint; `None` when the
+    /// dataset is not touched by this tile.
+    pub footprints: Vec<Option<DatFootprint>>,
+}
+
+/// The full skewed tiling schedule for a chain.
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    /// Dimension being tiled (1 for 2D problems, 2 for 3D).
+    pub tile_dim: usize,
+    /// Unshifted tile boundaries `B_0 … B_T` along the tiled dimension.
+    pub boundaries: Vec<isize>,
+    /// Per-loop skew shift.
+    pub shifts: Vec<isize>,
+    pub tiles: Vec<Tile>,
+}
+
+impl TilePlan {
+    pub fn num_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Full footprint of tile `t` in bytes, summed over datasets.
+    pub fn full_footprint_bytes(&self, t: usize, datasets: &[Dataset]) -> u64 {
+        self.tiles[t]
+            .footprints
+            .iter()
+            .enumerate()
+            .filter_map(|(d, fp)| {
+                fp.as_ref()
+                    .map(|f| f.full_bytes(&datasets[d], self.tile_dim))
+            })
+            .sum()
+    }
+
+    /// Largest tile footprint — what must fit in fast memory (per slot).
+    pub fn max_footprint_bytes(&self, datasets: &[Dataset]) -> u64 {
+        (0..self.tiles.len())
+            .map(|t| self.full_footprint_bytes(t, datasets))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// The "left edge" of tile `t` for dataset `d`: overlap with the
+    /// previous tile's footprint (empty for tile 0).
+    pub fn left_edge(&self, t: usize, d: DatasetId) -> Interval {
+        if t == 0 {
+            return Interval::empty();
+        }
+        match (
+            &self.tiles[t].footprints[d.0 as usize],
+            &self.tiles[t - 1].footprints[d.0 as usize],
+        ) {
+            (Some(cur), Some(prev)) => cur.full.intersect(&prev.full),
+            _ => Interval::empty(),
+        }
+    }
+
+    /// The "right edge" of tile `t` for dataset `d`: overlap with the next
+    /// tile's footprint (empty for the last tile).
+    pub fn right_edge(&self, t: usize, d: DatasetId) -> Interval {
+        if t + 1 >= self.tiles.len() {
+            return Interval::empty();
+        }
+        match (
+            &self.tiles[t].footprints[d.0 as usize],
+            &self.tiles[t + 1].footprints[d.0 as usize],
+        ) {
+            (Some(cur), Some(next)) => cur.full.intersect(&next.full),
+            _ => Interval::empty(),
+        }
+    }
+
+    /// "Right footprint" of tile `t` for dataset `d`: full minus the left
+    /// edge — the part that must be freshly uploaded (the left edge is
+    /// satisfied by the device-device edge copy from the previous slot).
+    pub fn right_footprint(&self, t: usize, d: DatasetId) -> Interval {
+        match &self.tiles[t].footprints[d.0 as usize] {
+            Some(f) => {
+                let le = self.left_edge(t, d);
+                if le.is_empty() {
+                    f.full
+                } else {
+                    Interval::new(le.hi, f.full.hi)
+                }
+            }
+            None => Interval::empty(),
+        }
+    }
+
+    /// "Left footprint" of the *written* region of tile `t` for dataset
+    /// `d`: written minus the right edge — safe to download as soon as the
+    /// tile finishes (the overlap will be (re)written by the next tile and
+    /// downloaded there).
+    pub fn left_written_footprint(&self, t: usize, d: DatasetId) -> Interval {
+        match &self.tiles[t].footprints[d.0 as usize] {
+            Some(f) => {
+                if f.written.is_empty() {
+                    return Interval::empty();
+                }
+                let re = self.right_edge(t, d);
+                if re.is_empty() {
+                    f.written
+                } else {
+                    Interval::new(f.written.lo, f.written.hi.min(re.lo))
+                }
+            }
+            None => Interval::empty(),
+        }
+    }
+}
+
+/// Pick the tiled dimension for a chain: the outermost (slowest-varying)
+/// dimension in which the chain actually iterates.
+pub fn pick_tile_dim(chain: &[LoopInst]) -> usize {
+    let extent = |d: usize| {
+        chain
+            .iter()
+            .map(|l| (l.range[d].1 - l.range[d].0).max(0))
+            .max()
+            .unwrap_or(0)
+    };
+    if extent(2) > 1 {
+        2
+    } else {
+        1
+    }
+}
+
+/// Total bytes of all datasets touched by a chain — the "problem size"
+/// used for fits-in-memory decisions and the figures' x axes.
+pub fn chain_bytes(chain: &[LoopInst], datasets: &[Dataset]) -> u64 {
+    let mut seen = vec![false; datasets.len()];
+    let mut total = 0u64;
+    for l in chain {
+        for (d, _, _) in l.dat_args() {
+            if !seen[d.0 as usize] {
+                seen[d.0 as usize] = true;
+                total += datasets[d.0 as usize].bytes();
+            }
+        }
+    }
+    total
+}
+
+/// Build the plan for a fixed number of tiles.
+pub fn plan_chain(
+    chain: &[LoopInst],
+    datasets: &[Dataset],
+    stencils: &[Stencil],
+    num_tiles: usize,
+) -> TilePlan {
+    let tile_dim = pick_tile_dim(chain);
+    let shifts = compute_shifts(chain, stencils, tile_dim);
+
+    // Global extent of the tiled dimension across the chain.
+    let glo = chain
+        .iter()
+        .map(|l| l.range[tile_dim].0)
+        .min()
+        .unwrap_or(0);
+    let ghi = chain
+        .iter()
+        .map(|l| l.range[tile_dim].1)
+        .max()
+        .unwrap_or(1);
+    let extent = (ghi - glo).max(1);
+    let t = (num_tiles.max(1) as isize).min(extent) as usize;
+
+    let mut boundaries = Vec::with_capacity(t + 1);
+    for i in 0..=t {
+        boundaries.push(glo + extent * i as isize / t as isize);
+    }
+
+    let mut tiles = Vec::with_capacity(t);
+    for ti in 0..t {
+        let mut loop_ranges: Vec<Option<Range3>> = Vec::with_capacity(chain.len());
+        let mut footprints: Vec<Option<DatFootprint>> = vec![None; datasets.len()];
+        for (li, l) in chain.iter().enumerate() {
+            let (llo, lhi) = l.range[tile_dim];
+            let start = if ti == 0 {
+                llo
+            } else {
+                (boundaries[ti] + shifts[li]).clamp(llo, lhi)
+            };
+            let end = if ti == t - 1 {
+                lhi
+            } else {
+                (boundaries[ti + 1] + shifts[li]).clamp(llo, lhi)
+            };
+            if start >= end {
+                loop_ranges.push(None);
+                continue;
+            }
+            let mut r = l.range;
+            r[tile_dim] = (start, end);
+            loop_ranges.push(Some(r));
+
+            // Accumulate footprints.
+            for (dat, st, acc) in l.dat_args() {
+                let ds = &datasets[dat.0 as usize];
+                let s = &stencils[st.0 as usize];
+                let lo_ext = s.min_extent()[tile_dim] as isize;
+                let hi_ext = s.max_extent()[tile_dim] as isize;
+                let dlo = -(ds.halo_lo[tile_dim] as isize);
+                let dhi = ds.size[tile_dim] as isize + ds.halo_hi[tile_dim] as isize;
+                let acc_iv = Interval::new(start + lo_ext, end + hi_ext).clamp_to(dlo, dhi);
+                let fp = footprints[dat.0 as usize].get_or_insert(DatFootprint {
+                    full: Interval::empty(),
+                    written: Interval::empty(),
+                });
+                fp.full = fp.full.hull(&acc_iv);
+                if acc.writes() {
+                    let w_iv = Interval::new(start + lo_ext, end + hi_ext).clamp_to(dlo, dhi);
+                    fp.written = fp.written.hull(&w_iv);
+                }
+            }
+        }
+        tiles.push(Tile {
+            loop_ranges,
+            footprints,
+        });
+    }
+
+    TilePlan {
+        tile_dim,
+        boundaries,
+        shifts,
+        tiles,
+    }
+}
+
+/// Build a plan whose largest tile footprint fits `target_bytes`,
+/// increasing the tile count geometrically until it does (or until tiles
+/// are single planes wide — the practical minimum).
+pub fn plan_auto(
+    chain: &[LoopInst],
+    datasets: &[Dataset],
+    stencils: &[Stencil],
+    target_bytes: u64,
+) -> TilePlan {
+    let tile_dim = pick_tile_dim(chain);
+    let glo = chain
+        .iter()
+        .map(|l| l.range[tile_dim].0)
+        .min()
+        .unwrap_or(0);
+    let ghi = chain
+        .iter()
+        .map(|l| l.range[tile_dim].1)
+        .max()
+        .unwrap_or(1);
+    let extent = (ghi - glo).max(1) as u64;
+
+    // First estimate from per-plane bytes of the touched datasets.
+    let mut seen = vec![false; datasets.len()];
+    let mut plane_bytes = 0u64;
+    for l in chain {
+        for (d, _, _) in l.dat_args() {
+            if !seen[d.0 as usize] {
+                seen[d.0 as usize] = true;
+                plane_bytes += datasets[d.0 as usize].plane_bytes(tile_dim);
+            }
+        }
+    }
+    let total = plane_bytes * extent;
+    let mut n = if target_bytes == 0 || total <= target_bytes {
+        1
+    } else {
+        total.div_ceil(target_bytes) as usize
+    };
+
+    loop {
+        let plan = plan_chain(chain, datasets, stencils, n);
+        let maxfp = plan.max_footprint_bytes(datasets);
+        if maxfp <= target_bytes || n as u64 >= extent {
+            return plan;
+        }
+        n = (n * 5 / 4 + 1).min(extent as usize);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::{shapes, StencilId};
+    use crate::ops::{Access, Arg, BlockId};
+
+    fn dataset(id: u32, ny: usize) -> Dataset {
+        Dataset {
+            id: DatasetId(id),
+            block: BlockId(0),
+            name: format!("d{id}"),
+            size: [16, ny, 1],
+            halo_lo: [2, 2, 0],
+            halo_hi: [2, 2, 0],
+            elem_bytes: 8,
+        }
+    }
+
+    fn st(id: u32, pts: Vec<[i32; 3]>) -> Stencil {
+        Stencil {
+            id: StencilId(id),
+            name: format!("s{id}"),
+            points: pts,
+        }
+    }
+
+    fn lp(name: &str, ny: isize, args: Vec<Arg>) -> LoopInst {
+        LoopInst {
+            name: name.into(),
+            block: BlockId(0),
+            range: [(0, 16), (0, ny), (0, 1)],
+            args,
+            kernel: kernel(|_| {}),
+            seq: 0,
+            bw_efficiency: 1.0,
+        }
+    }
+
+    fn two_loop_chain() -> (Vec<LoopInst>, Vec<Dataset>, Vec<Stencil>) {
+        let datasets = vec![dataset(0, 64), dataset(1, 64)];
+        let stencils = vec![st(0, shapes::point()), st(1, shapes::star2d(1))];
+        let chain = vec![
+            lp(
+                "produce",
+                64,
+                vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)],
+            ),
+            lp(
+                "consume",
+                64,
+                vec![
+                    Arg::dat(DatasetId(0), StencilId(1), Access::Read),
+                    Arg::dat(DatasetId(1), StencilId(0), Access::Write),
+                ],
+            ),
+        ];
+        (chain, datasets, stencils)
+    }
+
+    #[test]
+    fn ranges_partition_each_loop() {
+        let (chain, datasets, stencils) = two_loop_chain();
+        let plan = plan_chain(&chain, &datasets, &stencils, 4);
+        assert_eq!(plan.tile_dim, 1);
+        for (li, l) in chain.iter().enumerate() {
+            let mut cursor = l.range[1].0;
+            for tile in &plan.tiles {
+                if let Some(r) = &tile.loop_ranges[li] {
+                    assert_eq!(r[1].0, cursor, "tiles must abut for loop {li}");
+                    cursor = r[1].1;
+                }
+            }
+            assert_eq!(cursor, l.range[1].1, "tiles must cover loop {li}");
+        }
+    }
+
+    #[test]
+    fn earlier_loop_leads_by_shift() {
+        let (chain, datasets, stencils) = two_loop_chain();
+        let plan = plan_chain(&chain, &datasets, &stencils, 4);
+        assert_eq!(plan.shifts, vec![1, 0]);
+        // In every non-final tile, the producer's end must be >= the
+        // consumer's end + 1 (the consumer reads ±1).
+        for t in 0..plan.tiles.len() - 1 {
+            let pr = plan.tiles[t].loop_ranges[0].as_ref().unwrap();
+            let cr = plan.tiles[t].loop_ranges[1].as_ref().unwrap();
+            assert!(pr[1].1 >= cr[1].1 + 1);
+        }
+    }
+
+    #[test]
+    fn footprints_cover_stencil_reach() {
+        let (chain, datasets, stencils) = two_loop_chain();
+        let plan = plan_chain(&chain, &datasets, &stencils, 4);
+        // dataset 0 is read at ±1 around the consumer range.
+        for t in 0..plan.tiles.len() {
+            let cr = match &plan.tiles[t].loop_ranges[1] {
+                Some(r) => r[1],
+                None => continue,
+            };
+            let fp = plan.tiles[t].footprints[0].as_ref().unwrap();
+            assert!(fp.full.lo <= cr.0 - 1);
+            assert!(fp.full.hi >= cr.1 + 1);
+        }
+    }
+
+    #[test]
+    fn edges_are_consistent() {
+        let (chain, datasets, stencils) = two_loop_chain();
+        let plan = plan_chain(&chain, &datasets, &stencils, 4);
+        for t in 1..plan.tiles.len() {
+            let le = plan.left_edge(t, DatasetId(0));
+            let re_prev = plan.right_edge(t - 1, DatasetId(0));
+            assert_eq!(le, re_prev, "left edge of t == right edge of t-1");
+            assert!(!le.is_empty(), "overlapping stencil reads create edges");
+        }
+        assert!(plan.left_edge(0, DatasetId(0)).is_empty());
+        assert!(plan
+            .right_edge(plan.tiles.len() - 1, DatasetId(0))
+            .is_empty());
+    }
+
+    #[test]
+    fn right_footprint_plus_left_edge_covers_full() {
+        let (chain, datasets, stencils) = two_loop_chain();
+        let plan = plan_chain(&chain, &datasets, &stencils, 4);
+        for t in 0..plan.tiles.len() {
+            let full = plan.tiles[t].footprints[0].as_ref().unwrap().full;
+            let le = plan.left_edge(t, DatasetId(0));
+            let rf = plan.right_footprint(t, DatasetId(0));
+            assert_eq!(le.len() + rf.len(), full.len());
+        }
+    }
+
+    #[test]
+    fn auto_plan_respects_target() {
+        let (chain, datasets, stencils) = two_loop_chain();
+        let total = chain_bytes(&chain, &datasets);
+        let plan = plan_auto(&chain, &datasets, &stencils, total / 3);
+        assert!(plan.num_tiles() >= 3);
+        assert!(plan.max_footprint_bytes(&datasets) <= total / 3);
+    }
+
+    #[test]
+    fn single_tile_when_it_fits() {
+        let (chain, datasets, stencils) = two_loop_chain();
+        let plan = plan_auto(&chain, &datasets, &stencils, u64::MAX);
+        assert_eq!(plan.num_tiles(), 1);
+    }
+
+    #[test]
+    fn boundary_strip_loops_land_in_correct_tiles() {
+        // A loop that only touches rows 0..2 must only appear in tile 0
+        // (plus skew).
+        let datasets = vec![dataset(0, 64)];
+        let stencils = vec![st(0, shapes::point())];
+        let chain = vec![
+            lp(
+                "strip",
+                2,
+                vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)],
+            ),
+            lp(
+                "full",
+                64,
+                vec![Arg::dat(DatasetId(0), StencilId(0), Access::ReadWrite)],
+            ),
+        ];
+        let plan = plan_chain(&chain, &datasets, &stencils, 8);
+        let mut strip_points = 0isize;
+        for tile in &plan.tiles {
+            if let Some(r) = &tile.loop_ranges[0] {
+                strip_points += r[1].1 - r[1].0;
+            }
+        }
+        assert_eq!(strip_points, 2);
+        assert!(plan.tiles[0].loop_ranges[0].is_some());
+        assert!(plan.tiles[4].loop_ranges[0].is_none());
+    }
+
+    #[test]
+    fn chain_bytes_counts_unique_datasets() {
+        let (chain, datasets, _) = two_loop_chain();
+        let b = chain_bytes(&chain, &datasets);
+        assert_eq!(b, datasets[0].bytes() + datasets[1].bytes());
+    }
+}

@@ -1,0 +1,197 @@
+//! Edge-case coverage: degenerate chains, tiny grids, single-tile plans,
+//! empty ranges, metrics/report plumbing, and the periodic-exchange API.
+
+use ops_oc::apps::diffusion::Diffusion2D;
+use ops_oc::coordinator::{Config, Platform, Summary};
+use ops_oc::memory::{AppCalib, Link};
+use ops_oc::ops::kernel::kernel;
+use ops_oc::ops::stencil::shapes;
+use ops_oc::ops::{Access, Arg, OpsContext, RedOp};
+
+fn ctx(p: Platform) -> OpsContext {
+    OpsContext::new(Config::new(p, AppCalib::CLOVERLEAF_2D).build_engine())
+}
+
+#[test]
+fn empty_flush_is_harmless() {
+    let mut c = ctx(Platform::KnlCacheTiled);
+    c.flush();
+    c.flush();
+    assert_eq!(c.metrics().chains, 0);
+}
+
+#[test]
+fn empty_range_loop_executes_nothing_but_counts() {
+    let mut c = ctx(Platform::KnlFlatDdr4);
+    let b = c.decl_block("g", [8, 8, 1]);
+    let d = c.decl_dat(b, "d", [8, 8, 1], [0; 3], [0; 3]);
+    let s = c.decl_stencil("pt", shapes::point());
+    c.par_loop(
+        "empty",
+        b,
+        [(4, 4), (0, 8), (0, 1)],
+        kernel(|c| c.w(0, 0, 0, f64::NAN)),
+        vec![Arg::dat(d, s, Access::Write)],
+    );
+    c.flush();
+    let buf = c.fetch(d);
+    assert!(buf.iter().all(|v| *v == 0.0), "no NaN may be written");
+}
+
+#[test]
+fn single_row_grid_tiles_to_one_tile() {
+    // tiled dimension extent 1: plan must degenerate gracefully
+    let mut c = ctx(Platform::KnlCacheTiled);
+    let b = c.decl_block("g", [64, 1, 1]);
+    let d = c.decl_dat(b, "d", [64, 1, 1], [1, 0, 0], [1, 0, 0]);
+    let s = c.decl_stencil("pt", shapes::point());
+    for _ in 0..3 {
+        c.par_loop(
+            "w",
+            b,
+            [(0, 64), (0, 1), (0, 1)],
+            kernel(|c| {
+                let v = c.r(0, 0, 0);
+                c.w(0, 0, 0, v + 1.0);
+            }),
+            vec![Arg::dat(d, s, Access::ReadWrite)],
+        );
+    }
+    c.flush();
+    assert_eq!(c.value_at(d, [10, 0, 0]), 3.0);
+}
+
+#[test]
+fn chain_of_one_loop_everywhere() {
+    for p in [
+        Platform::KnlCacheTiled,
+        Platform::GpuExplicit {
+            link: Link::PciE,
+            cyclic: true,
+            prefetch: true,
+        },
+        Platform::GpuUnified {
+            link: Link::NvLink,
+            tiled: true,
+            prefetch: true,
+        },
+    ] {
+        let mut c = ctx(p);
+        let b = c.decl_block("g", [16, 64, 1]);
+        let d = c.decl_dat(b, "d", [16, 64, 1], [1, 1, 0], [1, 1, 0]);
+        let s = c.decl_stencil("pt", shapes::point());
+        let r = c.decl_reduction("sum", RedOp::Sum);
+        c.par_loop(
+            "ones",
+            b,
+            [(0, 16), (0, 64), (0, 1)],
+            kernel(|c| {
+                c.w(0, 0, 0, 1.0);
+                c.red_sum(0, 1.0);
+            }),
+            vec![
+                Arg::dat(d, s, Access::Write),
+                Arg::GblRed { red: r, op: RedOp::Sum },
+            ],
+        );
+        assert_eq!(c.reduction_result(r), 1024.0, "on {}", p.label());
+    }
+}
+
+#[test]
+fn reductions_sum_correctly_across_tiles() {
+    // sums must be partition-independent (associativity of disjoint tiles)
+    let run = |p: Platform| {
+        let mut c = ctx(p);
+        let app = Diffusion2D::new(&mut c, 16, 512, 1);
+        app.init(&mut c);
+        app.total_heat(&mut c)
+    };
+    let a = run(Platform::KnlFlatDdr4);
+    let b = run(Platform::KnlCacheTiled);
+    assert!((a - b).abs() < 1e-9 * a.abs());
+}
+
+#[test]
+fn exchange_periodic_wraps_correctly() {
+    let mut c = ctx(Platform::KnlFlatDdr4);
+    let b = c.decl_block("g", [8, 8, 1]);
+    let d = c.decl_dat(b, "d", [8, 8, 1], [2, 2, 0], [2, 2, 0]);
+    let s = c.decl_stencil("pt", shapes::point());
+    c.par_loop(
+        "iota",
+        b,
+        [(0, 8), (0, 8), (0, 1)],
+        kernel(|c| {
+            let [x, y, _] = c.idx();
+            c.w(0, 0, 0, (10 * y + x) as f64);
+        }),
+        vec![Arg::dat(d, s, Access::Write)],
+    );
+    c.exchange_periodic(d, 1, 2); // flushes, then wraps y
+    assert_eq!(c.value_at(d, [3, -1, 0]), c.value_at(d, [3, 7, 0]));
+    assert_eq!(c.value_at(d, [3, -2, 0]), c.value_at(d, [3, 6, 0]));
+    assert_eq!(c.value_at(d, [5, 8, 0]), c.value_at(d, [5, 0, 0]));
+    assert_eq!(c.value_at(d, [5, 9, 0]), c.value_at(d, [5, 1, 0]));
+    assert!(c.metrics().halo_exchanges >= 1);
+}
+
+#[test]
+fn summary_row_roundtrip() {
+    let mut c = ctx(Platform::GpuExplicit {
+        link: Link::NvLink,
+        cyclic: true,
+        prefetch: false,
+    });
+    let app = Diffusion2D::new(&mut c, 16, 256, 1 << 12);
+    app.run(&mut c, 4, 2);
+    let s = Summary::from_metrics("t", c.problem_bytes(), c.metrics(), c.oom());
+    assert!(s.avg_bw_gbs > 0.0);
+    assert!(s.row().contains('t'));
+    assert!(!s.oom);
+}
+
+#[test]
+fn metrics_survive_reset_boundaries() {
+    let mut c = ctx(Platform::KnlCacheTiled);
+    let app = Diffusion2D::new(&mut c, 16, 256, 1);
+    app.init(&mut c);
+    c.flush();
+    let warm = c.metrics().loop_bytes;
+    assert!(warm > 0);
+    c.reset_metrics();
+    assert_eq!(c.metrics().loop_bytes, 0);
+    app.step(&mut c);
+    c.flush();
+    assert!(c.metrics().loop_bytes > 0);
+}
+
+#[test]
+fn gbl_const_and_idx_args_are_inert_for_tiling() {
+    let mut c = ctx(Platform::KnlCacheTiled);
+    let b = c.decl_block("g", [8, 128, 1]);
+    let d = c.decl_dat(b, "d", [8, 128, 1], [0; 3], [0; 3]);
+    let s = c.decl_stencil("pt", shapes::point());
+    for _ in 0..4 {
+        c.par_loop(
+            "scale",
+            b,
+            [(0, 8), (0, 128), (0, 1)],
+            kernel(|c| {
+                let [x, _, _] = c.idx();
+                let v = c.r(0, 0, 0);
+                c.w(0, 0, 0, v + c.gbl(0) + x as f64 * c.gbl(1));
+            }),
+            vec![
+                Arg::dat(d, s, Access::ReadWrite),
+                Arg::GblConst {
+                    values: vec![2.0, 0.5],
+                },
+                Arg::Idx,
+            ],
+        );
+    }
+    c.flush();
+    // 4 iterations of +2.0 + x*0.5
+    assert_eq!(c.value_at(d, [2, 64, 0]), 4.0 * (2.0 + 1.0));
+}

@@ -1,0 +1,126 @@
+//! Fast qualitative checks that the modelled system reproduces the
+//! paper's headline *shapes* (who wins, roughly by how much, where the
+//! crossovers are). The full sweeps live in rust/benches/fig*.rs.
+
+use ops_oc::bench_support::{bw_point, run_cl2d, run_cl3d, run_sbli_tall};
+use ops_oc::coordinator::Platform;
+use ops_oc::memory::Link;
+
+#[test]
+fn knl_cl2d_shapes() {
+    let small = 6.0;
+    let large = 48.0;
+    let steps = 4;
+    let ddr_small = bw_point(run_cl2d(Platform::KnlFlatDdr4, 8, 6144, small, steps, 2)).unwrap();
+    let ddr_large = bw_point(run_cl2d(Platform::KnlFlatDdr4, 8, 6144, large, steps, 2)).unwrap();
+    let mc_small = bw_point(run_cl2d(Platform::KnlFlatMcdram, 8, 6144, small, steps, 2)).unwrap();
+    let mc_large = bw_point(run_cl2d(Platform::KnlFlatMcdram, 8, 6144, large, steps, 2));
+    let c_small = bw_point(run_cl2d(Platform::KnlCache, 8, 6144, small, steps, 2)).unwrap();
+    let c_large = bw_point(run_cl2d(Platform::KnlCache, 8, 6144, large, steps, 2)).unwrap();
+    let t_small = bw_point(run_cl2d(Platform::KnlCacheTiled, 8, 6144, small, steps, 2)).unwrap();
+    let t_large = bw_point(run_cl2d(Platform::KnlCacheTiled, 8, 6144, large, steps, 2)).unwrap();
+
+    eprintln!("CL2D KNL  6GB: ddr={ddr_small:.0} mc={mc_small:.0} cache={c_small:.0} tiled={t_small:.0}");
+    eprintln!("CL2D KNL 48GB: ddr={ddr_large:.0} mc={mc_large:?} cache={c_large:.0} tiled={t_large:.0}");
+
+    // paper: flat series are size-independent; MCDRAM OOMs above 16 GB
+    assert!((ddr_small - ddr_large).abs() / ddr_small < 0.1);
+    assert!(mc_large.is_none(), "flat MCDRAM must OOM at 48 GB");
+    assert!(mc_small > 3.0 * ddr_small, "MCDRAM ~4.8x DDR4");
+    // cache mode degrades gracefully; tiling holds within ~15-25%
+    assert!(c_small > 0.75 * mc_small, "cache ~ flat at small sizes");
+    assert!(c_large < 0.6 * c_small, "untiled cache collapses by 48 GB");
+    assert!(t_large > 0.7 * t_small, "tiled keeps most efficiency");
+    assert!(t_large > 1.5 * c_large, "paper: 2.2x tiling gain at 48 GB");
+}
+
+#[test]
+fn gpu_cl2d_shapes() {
+    let steps = 4;
+    let base = bw_point(run_cl2d(
+        Platform::GpuBaseline { link: Link::PciE },
+        8,
+        6144,
+        10.0,
+        steps,
+        2,
+    ))
+    .unwrap();
+    let oom = bw_point(run_cl2d(
+        Platform::GpuBaseline { link: Link::PciE },
+        8,
+        6144,
+        47.0,
+        steps,
+        2,
+    ));
+    let pcie = bw_point(run_cl2d(
+        Platform::GpuExplicit { link: Link::PciE, cyclic: true, prefetch: true },
+        8,
+        6144,
+        47.0,
+        steps,
+        2,
+    ))
+    .unwrap();
+    let nvl = bw_point(run_cl2d(
+        Platform::GpuExplicit { link: Link::NvLink, cyclic: true, prefetch: true },
+        8,
+        6144,
+        47.0,
+        steps,
+        2,
+    ))
+    .unwrap();
+    eprintln!("CL2D GPU: baseline={base:.0} oom47={oom:?} pcie47={pcie:.0} nvlink47={nvl:.0}");
+    assert!(oom.is_none(), "resident baseline must OOM at 47 GB");
+    assert!(base > 400.0, "baseline ~470 GB/s");
+    // paper: NVLink 84% of baseline, PCIe 48%. Our mini-CloverLeaf chain
+    // has ~5 sweeps/dataset/step vs the original's ~20 (63 vs 153 loops),
+    // so the absolute efficiency band sits lower; orderings and the
+    // OOM/crossover structure are what we assert (see EXPERIMENTS.md).
+    assert!(nvl > pcie, "NVLink beats PCIe");
+    assert!(nvl / base > 0.45 && nvl / base < 1.0, "NVLink ratio {:.2}", nvl / base);
+    assert!(pcie / base > 0.15 && pcie / base < 0.8, "PCIe ratio {:.2}", pcie / base);
+}
+
+#[test]
+fn gpu_unified_collapses_and_tiling_recovers() {
+    let steps = 4;
+    let um = |tiled, prefetch, gb| {
+        bw_point(run_cl2d(
+            Platform::GpuUnified { link: Link::PciE, tiled, prefetch },
+            8,
+            6144,
+            gb,
+            steps,
+            2,
+        ))
+        .unwrap()
+    };
+    let plain_small = um(false, false, 10.0);
+    let plain_large = um(false, false, 36.0);
+    let tiled_large = um(true, false, 36.0);
+    let pf_large = um(true, true, 36.0);
+    eprintln!(
+        "CL2D UM: small={plain_small:.0} large={plain_large:.0} tiled={tiled_large:.0} prefetch={pf_large:.0}"
+    );
+    assert!(plain_large < 0.3 * plain_small, "UM collapses beyond 16 GB");
+    assert!(tiled_large > 1.5 * plain_large, "paper: up to 3x from tiling");
+    assert!(pf_large > tiled_large, "prefetch helps further");
+}
+
+#[test]
+fn cl3d_and_sbli_shapes() {
+    let c3_large = bw_point(run_cl3d(Platform::KnlCache, [8, 8, 6144], 48.0, 2, 0)).unwrap();
+    let t3_large = bw_point(run_cl3d(Platform::KnlCacheTiled, [8, 8, 6144], 48.0, 2, 0)).unwrap();
+    eprintln!("CL3D KNL 48GB: cache={c3_large:.0} tiled={t3_large:.0}");
+    assert!(t3_large > 1.3 * c3_large, "paper: 1.7x tiling gain");
+
+    let s_cache = bw_point(run_sbli_tall(Platform::KnlCache, 1, 48.0, 2)).unwrap();
+    let s_tiled = bw_point(run_sbli_tall(Platform::KnlCacheTiled, 1, 48.0, 2)).unwrap();
+    let s_small = bw_point(run_sbli_tall(Platform::KnlCacheTiled, 1, 6.0, 2)).unwrap();
+    eprintln!("SBLI KNL 48GB: cache={s_cache:.0} tiled={s_tiled:.0} (6GB tiled={s_small:.0})");
+    assert!(s_tiled > 1.2 * s_cache, "paper: 1.5x tiling gain");
+    assert!(s_tiled > 0.85 * s_small, "paper: 7% loss at 48 GB");
+}

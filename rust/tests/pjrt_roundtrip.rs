@@ -1,0 +1,126 @@
+//! Integration: the AOT artifacts (JAX/Pallas → HLO text) loaded through
+//! the PJRT runtime must reproduce the native executor bit-for-bit-ish
+//! (≤1 ulp-scale differences from XLA instruction ordering), including
+//! under tiled execution where the executor writes back sub-ranges.
+//!
+//! Requires `make artifacts`; tests skip (with a loud message) when the
+//! artifacts directory is missing so `cargo test` works pre-AOT.
+
+use ops_oc::apps::diffusion::Diffusion2D;
+use ops_oc::coordinator::{Config, Platform};
+use ops_oc::exec::PjrtExecutor;
+use ops_oc::memory::{AppCalib, Link};
+use ops_oc::ops::OpsContext;
+use ops_oc::runtime::{default_artifacts_dir, Runtime};
+
+fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.txt").exists()
+}
+
+/// Build a context whose executor routes the diffusion kernels to PJRT.
+fn pjrt_ctx(platform: Platform, nx: usize, ny: usize) -> (OpsContext, Diffusion2D, usize) {
+    let cfg = Config::new(platform, AppCalib::CLOVERLEAF_2D);
+    let mut ctx = OpsContext::new(cfg.build_engine());
+    let app = Diffusion2D::new(&mut ctx, nx, ny, 1);
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let arts = rt
+        .load_manifest(&default_artifacts_dir().join("manifest.txt"))
+        .expect("manifest loads");
+    let mut exec = PjrtExecutor::new();
+    let mut bound = 0;
+    for (_k, (spec, art)) in arts {
+        // Only diffusion kernels bind to this context's datasets.
+        if spec.kernel.starts_with("diff_") {
+            exec.register(&spec, art, ctx.datasets()).expect("register");
+            bound += 1;
+        }
+    }
+    ctx.set_executor(Box::new(exec));
+    (ctx, app, bound)
+}
+
+#[test]
+fn pjrt_executes_diffusion_like_native() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    // native reference
+    let cfg = Config::new(Platform::KnlFlatDdr4, AppCalib::CLOVERLEAF_2D);
+    let mut nat = OpsContext::new(cfg.build_engine());
+    let app_n = Diffusion2D::new(&mut nat, 64, 64, 1);
+    app_n.run(&mut nat, 5, 1);
+    let want = nat.fetch(app_n.u);
+
+    // PJRT-backed
+    let (mut ctx, app, bound) = pjrt_ctx(Platform::KnlFlatDdr4, 64, 64);
+    assert_eq!(bound, 2, "diff_lap + diff_update must bind");
+    app.run(&mut ctx, 5, 1);
+    let got = ctx.fetch(app.u);
+
+    assert_eq!(want.len(), got.len());
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-12 * a.abs().max(1.0),
+            "mismatch at {i}: native {a} vs pjrt {b}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_under_tiled_streaming_matches_native() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let cfg = Config::new(Platform::KnlFlatDdr4, AppCalib::CLOVERLEAF_2D);
+    let mut nat = OpsContext::new(cfg.build_engine());
+    let app_n = Diffusion2D::new(&mut nat, 64, 64, 1);
+    app_n.run(&mut nat, 4, 2);
+    let want = nat.fetch(app_n.u);
+
+    let (mut ctx, app, _) = pjrt_ctx(
+        Platform::GpuExplicit {
+            link: Link::PciE,
+            cyclic: true,
+            prefetch: true,
+        },
+        64,
+        64,
+    );
+    app.run(&mut ctx, 4, 2);
+    let got = ctx.fetch(app.u);
+    assert!(ctx.metrics().tiles == 0 || ctx.metrics().tiles >= 1);
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-12 * a.abs().max(1.0),
+            "tiled mismatch at {i}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn unbound_kernels_fall_back_to_native() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    // Bind only diff_lap; diff_update and init/sum must fall back.
+    let cfg = Config::new(Platform::KnlFlatDdr4, AppCalib::CLOVERLEAF_2D);
+    let mut ctx = OpsContext::new(cfg.build_engine());
+    let app = Diffusion2D::new(&mut ctx, 64, 64, 1);
+    let rt = Runtime::cpu().unwrap();
+    let arts = rt
+        .load_manifest(&default_artifacts_dir().join("manifest.txt"))
+        .unwrap();
+    let mut exec = PjrtExecutor::new();
+    for (_k, (spec, art)) in arts {
+        if spec.kernel == "diff_lap" {
+            exec.register(&spec, art, ctx.datasets()).unwrap();
+        }
+    }
+    ctx.set_executor(Box::new(exec));
+    app.run(&mut ctx, 2, 1);
+    let heat = app.total_heat(&mut ctx);
+    assert!(heat.is_finite() && heat > 0.0);
+}

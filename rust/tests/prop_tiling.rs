@@ -1,0 +1,267 @@
+//! Property-based tests (in-tree xorshift PRNG — the vendored crate set
+//! has no proptest): random loop chains over random datasets/stencils
+//! must produce identical numerics under every engine's schedule, and
+//! tile plans must satisfy their structural invariants.
+
+use ops_oc::exec::{Engine, Metrics, NativeExecutor, World};
+use ops_oc::memory::{AppCalib, GpuCalib, GpuExplicitEngine, GpuOpts, KnlCalib, KnlEngine, Link};
+use ops_oc::ops::kernel::kernel;
+use ops_oc::ops::stencil::shapes;
+use ops_oc::ops::*;
+use ops_oc::tiling::plan::{plan_auto, plan_chain};
+
+/// Deterministic xorshift64* PRNG.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+    fn f64(&mut self) -> f64 {
+        (self.next() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+const APP: AppCalib = AppCalib::CLOVERLEAF_2D;
+
+struct Fixture {
+    datasets: Vec<Dataset>,
+    stencils: Vec<Stencil>,
+    chain: Vec<LoopInst>,
+}
+
+/// Random fixture: `nds` datasets, a chain of `nloops` loops with random
+/// source/dest datasets, random access modes, random (possibly partial)
+/// ranges. Reads go through a radius-2 star so every kernel read is
+/// covered by the declared stencil.
+fn random_fixture(seed: u64, nds: u32, nloops: usize, ny: usize) -> Fixture {
+    let mut rng = Rng::new(seed);
+    let mut datasets = vec![];
+    for i in 0..nds {
+        datasets.push(Dataset {
+            id: DatasetId(i),
+            block: BlockId(0),
+            name: format!("d{i}"),
+            size: [24, ny, 1],
+            halo_lo: [3, 3, 0],
+            halo_hi: [3, 3, 0],
+            elem_bytes: 8,
+        });
+    }
+    let stencils = vec![
+        Stencil {
+            id: StencilId(0),
+            name: "pt".into(),
+            points: shapes::point(),
+        },
+        Stencil {
+            id: StencilId(1),
+            name: "star2".into(),
+            points: shapes::star2d(2),
+        },
+    ];
+    let mut chain = vec![];
+    for li in 0..nloops {
+        let src = DatasetId(rng.below(nds as u64) as u32);
+        let mut dst = DatasetId(rng.below(nds as u64) as u32);
+        while dst == src {
+            dst = DatasetId(rng.below(nds as u64) as u32);
+        }
+        let acc = match rng.below(3) {
+            1 => Access::ReadWrite,
+            _ => Access::Write,
+        };
+        // random sub-range along y sometimes (boundary-strip loops)
+        let (y0, y1) = if rng.below(4) == 0 {
+            let a = rng.below(ny as u64 - 1) as isize;
+            let len = 1 + rng.below((ny as isize - a) as u64) as isize;
+            (a, (a + len).min(ny as isize))
+        } else {
+            (0, ny as isize)
+        };
+        let coef = 0.25 + 0.5 * rng.f64();
+        chain.push(LoopInst {
+            name: format!("loop{li}"),
+            block: BlockId(0),
+            range: [(0, 24), (y0, y1), (0, 1)],
+            args: vec![
+                Arg::dat(src, StencilId(1), Access::Read),
+                Arg::dat(dst, StencilId(0), acc),
+            ],
+            kernel: kernel(move |c| {
+                let v = c.r(0, 0, 0)
+                    + 0.5 * (c.r(0, 1, 0) + c.r(0, -1, 0) + c.r(0, 0, 1) + c.r(0, 0, -1))
+                    + 0.25 * (c.r(0, 0, 2) + c.r(0, 0, -2) + c.r(0, 2, 0) + c.r(0, -2, 0));
+                let old = c.r(1, 0, 0);
+                c.w(1, 0, 0, coef * v + 0.1 * old);
+            }),
+            seq: li as u64,
+            bw_efficiency: 1.0,
+        });
+    }
+    Fixture {
+        datasets,
+        stencils,
+        chain,
+    }
+}
+
+fn init_store(f: &Fixture, seed: u64) -> DataStore {
+    let mut store = DataStore::new();
+    let mut rng = Rng::new(seed ^ 0xABCD);
+    for d in &f.datasets {
+        store.alloc(d);
+        for v in store.buf_mut(d.id) {
+            *v = rng.f64() * 2.0 - 1.0;
+        }
+    }
+    store
+}
+
+fn run_engine(f: &Fixture, engine: &mut dyn Engine, seed: u64) -> Vec<Vec<f64>> {
+    let mut store = init_store(f, seed);
+    let mut reds: Vec<Reduction> = vec![];
+    let mut metrics = Metrics::new();
+    let mut exec = NativeExecutor::new();
+    {
+        let mut world = World {
+            datasets: &f.datasets,
+            stencils: &f.stencils,
+            store: &mut store,
+            reds: &mut reds,
+            metrics: &mut metrics,
+            exec: &mut exec,
+        };
+        engine.run_chain(&f.chain, &mut world, true);
+    }
+    f.datasets.iter().map(|d| store.buf(d.id).to_vec()).collect()
+}
+
+fn run_sequential(f: &Fixture, seed: u64) -> Vec<Vec<f64>> {
+    let mut store = init_store(f, seed);
+    let mut reds: Vec<Reduction> = vec![];
+    let mut exec = NativeExecutor::new();
+    for l in &f.chain {
+        use ops_oc::exec::Executor;
+        exec.run_loop(l, l.range, &f.datasets, &mut store, &mut reds);
+    }
+    f.datasets.iter().map(|d| store.buf(d.id).to_vec()).collect()
+}
+
+fn small_knl() -> KnlCalib {
+    KnlCalib {
+        mcdram_bytes: 64 << 10,
+        cache_granule: 1 << 10,
+        ..KnlCalib::default()
+    }
+}
+
+fn small_gpu() -> GpuCalib {
+    GpuCalib {
+        hbm_bytes: 48 << 10,
+        ..GpuCalib::default()
+    }
+}
+
+#[test]
+fn prop_random_chains_tile_identically_knl() {
+    for seed in 1..=40u64 {
+        let f = random_fixture(seed, 2 + (seed % 5) as u32, 3 + (seed % 12) as usize, 64);
+        let want = run_sequential(&f, seed);
+        let mut e = KnlEngine::new(small_knl(), APP, true);
+        let got = run_engine(&f, &mut e, seed);
+        assert_eq!(want, got, "KNL tiled mismatch for seed {seed}");
+    }
+}
+
+#[test]
+fn prop_random_chains_tile_identically_gpu() {
+    for seed in 1..=40u64 {
+        let f = random_fixture(
+            seed.wrapping_mul(7919),
+            2 + (seed % 4) as u32,
+            3 + (seed % 10) as usize,
+            96,
+        );
+        let want = run_sequential(&f, seed);
+        let mut e = GpuExplicitEngine::new(small_gpu(), APP, Link::PciE, GpuOpts::default());
+        let got = run_engine(&f, &mut e, seed);
+        assert_eq!(want, got, "GPU explicit mismatch for seed {seed}");
+    }
+}
+
+#[test]
+fn prop_plans_partition_and_footprints_cover() {
+    for seed in 1..=60u64 {
+        let f = random_fixture(seed.wrapping_mul(31), 3, 4 + (seed % 8) as usize, 80);
+        for nt in [2usize, 3, 7] {
+            let plan = plan_chain(&f.chain, &f.datasets, &f.stencils, nt);
+            // (1) per-loop ranges partition the loop's range
+            for (li, l) in f.chain.iter().enumerate() {
+                let mut cursor = l.range[plan.tile_dim].0;
+                for tile in &plan.tiles {
+                    if let Some(r) = &tile.loop_ranges[li] {
+                        assert_eq!(r[plan.tile_dim].0, cursor, "gap/overlap seed {seed}");
+                        cursor = r[plan.tile_dim].1;
+                    }
+                }
+                assert_eq!(cursor, l.range[plan.tile_dim].1, "uncovered seed {seed}");
+            }
+            // (2) footprints cover every stencil-extended access
+            for tile in &plan.tiles {
+                for (li, r) in tile.loop_ranges.iter().enumerate() {
+                    let Some(r) = r else { continue };
+                    for (dat, st, _) in f.chain[li].dat_args() {
+                        let s = &f.stencils[st.0 as usize];
+                        let lo = r[plan.tile_dim].0 + s.min_extent()[plan.tile_dim] as isize;
+                        let hi = r[plan.tile_dim].1 + s.max_extent()[plan.tile_dim] as isize;
+                        let ds = &f.datasets[dat.0 as usize];
+                        let dlo = -(ds.halo_lo[plan.tile_dim] as isize);
+                        let dhi =
+                            ds.size[plan.tile_dim] as isize + ds.halo_hi[plan.tile_dim] as isize;
+                        let fp = tile.footprints[dat.0 as usize]
+                            .as_ref()
+                            .expect("touched dataset must have footprint");
+                        assert!(
+                            fp.full.lo <= lo.max(dlo) && fp.full.hi >= hi.min(dhi),
+                            "footprint misses access: seed {seed}"
+                        );
+                    }
+                }
+            }
+            // (3) the final loop is never shifted
+            assert_eq!(*plan.shifts.last().unwrap(), 0, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_auto_plan_respects_budget() {
+    for seed in 100..=130u64 {
+        let f = random_fixture(seed, 4, 6, 128);
+        let total = ops_oc::tiling::plan::chain_bytes(&f.chain, &f.datasets);
+        for denom in [2u64, 5, 11] {
+            let target = (total / denom).max(1);
+            let plan = plan_auto(&f.chain, &f.datasets, &f.stencils, target);
+            let fp = plan.max_footprint_bytes(&f.datasets);
+            // plan_auto stops when the footprint fits OR tiles are single
+            // planes wide (the practical floor for skewed slabs).
+            assert!(
+                fp <= target || plan.num_tiles() as u64 >= 100,
+                "seed {seed} denom {denom}: footprint {fp} > target {target} with {} tiles",
+                plan.num_tiles()
+            );
+        }
+    }
+}

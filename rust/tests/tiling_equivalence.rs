@@ -1,0 +1,174 @@
+//! Cross-engine application-level equivalence: every memory engine is a
+//! pure re-scheduler — all three paper applications must produce
+//! identical numerics on every platform configuration, and the §4.1
+//! optimisation toggles must change *transfers*, never *results*.
+
+use ops_oc::apps::cloverleaf2d::CloverLeaf2D;
+use ops_oc::apps::cloverleaf3d::CloverLeaf3D;
+use ops_oc::apps::opensbli::OpenSbli;
+use ops_oc::coordinator::{Config, Platform};
+use ops_oc::memory::{AppCalib, Link};
+use ops_oc::ops::OpsContext;
+
+fn all_platforms() -> Vec<Platform> {
+    let mut v = vec![
+        Platform::KnlFlatDdr4,
+        Platform::KnlFlatMcdram,
+        Platform::KnlCache,
+        Platform::KnlCacheTiled,
+    ];
+    for link in [Link::PciE, Link::NvLink] {
+        v.push(Platform::GpuBaseline { link });
+        for cyclic in [false, true] {
+            for prefetch in [false, true] {
+                v.push(Platform::GpuExplicit {
+                    link,
+                    cyclic,
+                    prefetch,
+                });
+            }
+        }
+        for tiled in [false, true] {
+            for pf in [false, true] {
+                v.push(Platform::GpuUnified {
+                    link,
+                    tiled,
+                    prefetch: pf,
+                });
+            }
+        }
+    }
+    v
+}
+
+#[test]
+fn cloverleaf2d_identical_on_all_platforms() {
+    let reference: Option<Vec<f64>> = None;
+    let mut reference = reference;
+    for p in all_platforms() {
+        let mut ctx = OpsContext::new(Config::new(p, AppCalib::CLOVERLEAF_2D).build_engine());
+        let mut app = CloverLeaf2D::new(&mut ctx, 16, 16, 1);
+        app.run(&mut ctx, 3, 2);
+        let d = ctx.fetch(app.density0);
+        match &reference {
+            None => reference = Some(d),
+            Some(r) => assert_eq!(r, &d, "density0 differs on {}", p.label()),
+        }
+    }
+}
+
+#[test]
+fn cloverleaf3d_identical_on_key_platforms() {
+    let platforms = [
+        Platform::KnlFlatDdr4,
+        Platform::KnlCacheTiled,
+        Platform::GpuExplicit {
+            link: Link::PciE,
+            cyclic: true,
+            prefetch: true,
+        },
+        Platform::GpuUnified {
+            link: Link::NvLink,
+            tiled: true,
+            prefetch: true,
+        },
+    ];
+    let mut reference: Option<Vec<f64>> = None;
+    for p in platforms {
+        let mut ctx = OpsContext::new(Config::new(p, AppCalib::CLOVERLEAF_3D).build_engine());
+        let mut app = CloverLeaf3D::new(&mut ctx, 8, 8, 8, 1);
+        app.run(&mut ctx, 2, 0);
+        let d = ctx.fetch(app.energy0);
+        match &reference {
+            None => reference = Some(d),
+            Some(r) => assert_eq!(r, &d, "energy0 differs on {}", p.label()),
+        }
+    }
+}
+
+#[test]
+fn opensbli_identical_on_key_platforms() {
+    let platforms = [
+        Platform::KnlFlatDdr4,
+        Platform::KnlCacheTiled,
+        Platform::GpuExplicit {
+            link: Link::NvLink,
+            cyclic: true,
+            prefetch: false,
+        },
+    ];
+    let mut reference: Option<Vec<f64>> = None;
+    for p in platforms {
+        let mut ctx = OpsContext::new(Config::new(p, AppCalib::OPENSBLI).build_engine());
+        let mut app = OpenSbli::new(&mut ctx, 16, 1, 1);
+        app.run(&mut ctx, 2);
+        let d = ctx.fetch(app.q[1]);
+        match &reference {
+            None => reference = Some(d),
+            Some(r) => assert_eq!(r, &d, "rhou differs on {}", p.label()),
+        }
+    }
+}
+
+#[test]
+fn optimisation_toggles_change_traffic_not_results() {
+    let run = |cyclic: bool, prefetch: bool| {
+        let p = Platform::GpuExplicit {
+            link: Link::PciE,
+            cyclic,
+            prefetch,
+        };
+        let mut ctx = OpsContext::new(Config::new(p, AppCalib::CLOVERLEAF_2D).build_engine());
+        let mut app = CloverLeaf2D::new(&mut ctx, 16, 16, 1 << 14);
+        app.run(&mut ctx, 3, 0);
+        let m = ctx.metrics().clone();
+        (ctx.fetch(app.density0), m)
+    };
+    let (d_base, m_base) = run(false, false);
+    let (d_cyc, m_cyc) = run(true, false);
+    let (d_all, m_all) = run(true, true);
+    assert_eq!(d_base, d_cyc);
+    assert_eq!(d_base, d_all);
+    assert!(
+        m_cyc.d2h_bytes < m_base.d2h_bytes,
+        "Cyclic must cut downloads: {} !< {}",
+        m_cyc.d2h_bytes,
+        m_base.d2h_bytes
+    );
+    assert!(
+        m_all.elapsed_s <= m_cyc.elapsed_s + 1e-12,
+        "Prefetch must not slow things down"
+    );
+}
+
+#[test]
+fn oversubscribed_platforms_report_oom_where_paper_segfaults() {
+    // model scale pushes the 16x16 problem to ~26 GB modelled
+    let scale = 1 << 22;
+    for (p, should_fit) in [
+        (Platform::KnlFlatMcdram, false),
+        (Platform::KnlFlatDdr4, true),
+        (Platform::KnlCacheTiled, true),
+        (Platform::GpuBaseline { link: Link::PciE }, false),
+        (
+            Platform::GpuExplicit {
+                link: Link::PciE,
+                cyclic: true,
+                prefetch: true,
+            },
+            true,
+        ),
+    ] {
+        let mut ctx = OpsContext::new(Config::new(p, AppCalib::CLOVERLEAF_2D).build_engine());
+        let mut app = CloverLeaf2D::new(&mut ctx, 16, 16, scale);
+        app.run(&mut ctx, 1, 0);
+        assert_eq!(
+            !ctx.oom(),
+            should_fit,
+            "{}: oom={} problem={:.1} GB",
+            p.label(),
+            ctx.oom(),
+            ctx.problem_bytes() as f64 / 1e9
+        );
+    }
+}
