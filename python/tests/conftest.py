@@ -1,0 +1,8 @@
+"""Make the `compile` package importable when pytest is invoked from the
+repo root (the tests import `compile.kernels` etc. relative to
+`python/`, which is not automatically on sys.path)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

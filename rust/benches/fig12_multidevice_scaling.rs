@@ -1,0 +1,84 @@
+//! Figure 12 (extension): multi-device strong/weak scaling of CloverLeaf
+//! 2D under sharded execution — 1–8 modelled NVLink P100 ranks, each
+//! running the explicit 3-slot streaming engine, halos exchanged over
+//! NVLink peer links — plus the comm/compute-overlap ablation.
+
+use ops_oc::bench_support::{run_cl2d, Figure};
+use ops_oc::coordinator::{InnerPlatform, Platform};
+use ops_oc::distributed::{DecompKind, Interconnect};
+use ops_oc::memory::Link;
+use std::time::Instant;
+
+fn sharded(ranks: u32, decomp: DecompKind, overlap: bool) -> Platform {
+    Platform::Sharded {
+        ranks,
+        inner: InnerPlatform::GpuExplicit {
+            link: Link::NvLink,
+            cyclic: true,
+            prefetch: true,
+        },
+        link: Interconnect::NvLink,
+        decomp,
+        overlap,
+    }
+}
+
+fn main() {
+    let t0 = Instant::now();
+    let steps = 2;
+    let ranks_sweep = [1u32, 2, 4, 8];
+
+    // ---- strong scaling: fixed 48 GB problem, growing rank counts ------
+    let mut strong = Figure::new(
+        "Fig 12a: CloverLeaf 2D strong scaling, 48 GB (x axis = ranks)",
+        "effective GB/s (modelled)",
+    );
+    let s_1d = strong.add_series("1D decomp");
+    let s_2d = strong.add_series("2D decomp");
+    let s_no = strong.add_series("1D no-overlap");
+    let mut elapsed_1 = 0.0;
+    for &r in &ranks_sweep {
+        let (m, _) = run_cl2d(sharded(r, DecompKind::OneD, true), 8, 6144, 48.0, steps, 0);
+        if r == 1 {
+            elapsed_1 = m.elapsed_s;
+        }
+        strong.push(s_1d, r as f64, Some(m.effective_bandwidth_gbs()));
+        let (m2, _) = run_cl2d(sharded(r, DecompKind::TwoD, true), 8, 6144, 48.0, steps, 0);
+        strong.push(s_2d, r as f64, Some(m2.effective_bandwidth_gbs()));
+        let (mn, _) = run_cl2d(sharded(r, DecompKind::OneD, false), 8, 6144, 48.0, steps, 0);
+        strong.push(s_no, r as f64, Some(mn.effective_bandwidth_gbs()));
+        println!(
+            "strong x{r}: speedup {:.2}x vs 1 rank, overlap gain {:.3}x vs no-overlap",
+            if m.elapsed_s > 0.0 { elapsed_1 / m.elapsed_s } else { 0.0 },
+            if m.elapsed_s > 0.0 { mn.elapsed_s / m.elapsed_s } else { 0.0 },
+        );
+    }
+    println!("{}", strong.render());
+
+    // ---- weak scaling: 12 GB per rank ----------------------------------
+    let mut weak = Figure::new(
+        "Fig 12b: CloverLeaf 2D weak scaling, 12 GB/rank (x axis = ranks)",
+        "effective GB/s (modelled)",
+    );
+    let w_1d = weak.add_series("1D decomp");
+    for &r in &ranks_sweep {
+        let gb = 12.0 * r as f64;
+        let (m, _) = run_cl2d(sharded(r, DecompKind::OneD, true), 8, 6144, gb, steps, 0);
+        weak.push(w_1d, r as f64, Some(m.effective_bandwidth_gbs()));
+    }
+    println!("{}", weak.render());
+
+    // ---- per-rank detail at x4 (what `ops-oc run … x4` reports) --------
+    let (m4, _) = run_cl2d(sharded(4, DecompKind::OneD, true), 8, 6144, 48.0, steps, 0);
+    for (r, rs) in m4.per_rank.iter().enumerate() {
+        println!(
+            "x4 rank {r}: compute {:.4} s, exchange {:.4} s ({:.3} GB), avg bw {:.1} GB/s",
+            rs.compute_s,
+            rs.exchange_s,
+            rs.exchange_bytes as f64 / 1e9,
+            rs.average_bandwidth_gbs()
+        );
+    }
+
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

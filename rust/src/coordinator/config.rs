@@ -1,14 +1,121 @@
 //! Configuration: which modelled platform to run on, with which
-//! calibrations. Loadable from TOML for the launcher, constructible in
-//! code for benches and tests.
+//! calibrations. Loadable from compact spec strings for the CLI
+//! launcher, constructible in code for benches and tests.
+//!
+//! ## Platform spec grammar
+//!
+//! ```text
+//! spec        := head (":" token)*
+//! head        := knl-flat-ddr4 | knl-flat-mcdram | knl-cache |
+//!                knl-cache-tiled | gpu-baseline | gpu-explicit |
+//!                gpu-unified
+//! token       := pcie | nvlink            (host link, GPU heads)
+//!              | cyclic | prefetch        (gpu-explicit)
+//!              | tiled | prefetch         (gpu-unified)
+//!              | x<N>                     (shard across N ranks)
+//! shard token := peer | nvlink | ib       (interconnect, after x<N>)
+//!              | 1d | 2d                  (decomposition, after x<N>)
+//!              | no-overlap               (ablation, after x<N>)
+//! ```
+//!
+//! Tokens before `x<N>` configure the inner (per-rank) platform, tokens
+//! after it the sharding layer. Unknown tokens are **rejected** — e.g.
+//! `gpu-explicit:nvlnk` is an error, not silently PCIe.
 
+use crate::distributed::{DecompKind, Interconnect, ShardedEngine};
 use crate::exec::Engine;
 use crate::memory::{
     AppCalib, GpuCalib, GpuExplicitEngine, GpuOpts, KnlCalib, KnlEngine, Link, PlainEngine,
     UnifiedCalib, UnifiedEngine,
 };
 
-/// The execution environments of the paper's evaluation.
+/// Per-rank platforms a sharded configuration can host (each rank owns a
+/// full out-of-core memory engine).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InnerPlatform {
+    /// KNL cache mode with skewed tiling sized to MCDRAM.
+    KnlCacheTiled,
+    /// P100 with explicit 3-slot streaming (Algorithm 1).
+    GpuExplicit {
+        link: Link,
+        cyclic: bool,
+        prefetch: bool,
+    },
+    /// P100 with unified memory.
+    GpuUnified {
+        link: Link,
+        tiled: bool,
+        prefetch: bool,
+    },
+}
+
+impl InnerPlatform {
+    /// The equivalent single-device platform.
+    pub fn to_platform(self) -> Platform {
+        match self {
+            InnerPlatform::KnlCacheTiled => Platform::KnlCacheTiled,
+            InnerPlatform::GpuExplicit {
+                link,
+                cyclic,
+                prefetch,
+            } => Platform::GpuExplicit {
+                link,
+                cyclic,
+                prefetch,
+            },
+            InnerPlatform::GpuUnified {
+                link,
+                tiled,
+                prefetch,
+            } => Platform::GpuUnified {
+                link,
+                tiled,
+                prefetch,
+            },
+        }
+    }
+
+    /// The shardable view of a single-device platform (`None` for
+    /// platforms that only exist unsharded, e.g. flat MCDRAM).
+    pub fn try_from_platform(p: Platform) -> Option<Self> {
+        match p {
+            Platform::KnlCacheTiled => Some(InnerPlatform::KnlCacheTiled),
+            Platform::GpuExplicit {
+                link,
+                cyclic,
+                prefetch,
+            } => Some(InnerPlatform::GpuExplicit {
+                link,
+                cyclic,
+                prefetch,
+            }),
+            Platform::GpuUnified {
+                link,
+                tiled,
+                prefetch,
+            } => Some(InnerPlatform::GpuUnified {
+                link,
+                tiled,
+                prefetch,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Host link of the inner platform, if it has one (used to pick a
+    /// default inter-rank interconnect).
+    fn host_link(self) -> Option<Link> {
+        match self {
+            InnerPlatform::KnlCacheTiled => None,
+            InnerPlatform::GpuExplicit { link, .. } | InnerPlatform::GpuUnified { link, .. } => {
+                Some(link)
+            }
+        }
+    }
+}
+
+/// The execution environments of the paper's evaluation, plus the
+/// sharded multi-device extension.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Platform {
     /// KNL flat mode, DDR4 only (numactl to DDR4).
@@ -32,6 +139,17 @@ pub enum Platform {
         link: Link,
         tiled: bool,
         prefetch: bool,
+    },
+    /// N modelled ranks, each running `inner`, exchanging halos over
+    /// `link` under a 1D/2D decomposition.
+    Sharded {
+        ranks: u32,
+        inner: InnerPlatform,
+        link: Interconnect,
+        decomp: DecompKind,
+        /// Overlap halo exchange with interior compute (`false` is the
+        /// fig12 ablation).
+        overlap: bool,
     },
 }
 
@@ -63,7 +181,59 @@ impl Platform {
                 if *tiled { " tiled" } else { "" },
                 if *prefetch { " prefetch" } else { "" }
             ),
+            Platform::Sharded {
+                ranks,
+                inner,
+                link,
+                decomp,
+                overlap,
+            } => format!(
+                "{} x{} ({}, {}{})",
+                inner.to_platform().label(),
+                ranks,
+                decomp.label(),
+                link.name(),
+                if *overlap { "" } else { ", no-overlap" }
+            ),
         }
+    }
+
+    /// Number of modelled ranks (1 for single-device platforms).
+    pub fn ranks(&self) -> u32 {
+        match self {
+            Platform::Sharded { ranks, .. } => *ranks,
+            _ => 1,
+        }
+    }
+
+    /// Shard `self` across `ranks` ranks with default sharding settings
+    /// (1D decomposition, overlap on, interconnect matched to the inner
+    /// host link). Errors when the platform cannot be sharded.
+    pub fn sharded(self, ranks: u32) -> crate::Result<Platform> {
+        crate::ensure!(ranks <= 64, "rank count {ranks} out of range (1..=64)");
+        if ranks <= 1 {
+            return Ok(self);
+        }
+        if let Platform::Sharded { ranks: _, inner, link, decomp, overlap } = self {
+            return Ok(Platform::Sharded { ranks, inner, link, decomp, overlap });
+        }
+        let inner = InnerPlatform::try_from_platform(self).ok_or_else(|| {
+            crate::err!(
+                "platform {:?} cannot be sharded (use knl-cache-tiled, gpu-explicit or gpu-unified)",
+                self.label()
+            )
+        })?;
+        let link = match inner.host_link() {
+            Some(Link::NvLink) => Interconnect::NvLink,
+            _ => Interconnect::PciePeer,
+        };
+        Ok(Platform::Sharded {
+            ranks,
+            inner,
+            link,
+            decomp: DecompKind::OneD,
+            overlap: true,
+        })
     }
 }
 
@@ -77,6 +247,13 @@ pub struct Config {
     pub um: UnifiedCalib,
 }
 
+/// A `x<N>` ranks token (`x4` → 4).
+fn parse_ranks_token(tok: &str) -> Option<u32> {
+    tok.strip_prefix('x')
+        .filter(|digits| !digits.is_empty())
+        .and_then(|digits| digits.parse::<u32>().ok())
+}
+
 impl Config {
     pub fn new(platform: Platform, app: AppCalib) -> Self {
         Config {
@@ -88,39 +265,108 @@ impl Config {
         }
     }
 
-    /// Parse a compact platform spec string (used by the CLI launcher and
-    /// config files): e.g. `knl-cache-tiled`, `gpu-explicit:nvlink:cyclic:prefetch`,
-    /// `gpu-unified:pcie:tiled`, `gpu-baseline:pcie`.
-    pub fn parse_platform(spec: &str) -> anyhow::Result<Platform> {
-        let mut parts = spec.split(':');
-        let head = parts.next().unwrap_or("");
-        let rest: Vec<&str> = parts.collect();
-        let link = || -> anyhow::Result<Link> {
-            match rest.first().copied() {
-                Some("pcie") | None => Ok(Link::PciE),
-                Some("nvlink") => Ok(Link::NvLink),
-                Some(x) => anyhow::bail!("unknown link {x:?} (pcie|nvlink)"),
-            }
+    /// Parse one single-device platform from `head` plus its option
+    /// tokens, rejecting anything not in the head's vocabulary.
+    fn parse_single(head: &str, toks: &[&str]) -> crate::Result<Platform> {
+        let allowed: &[&str] = match head {
+            "knl-flat-ddr4" | "knl-flat-mcdram" | "knl-cache" | "knl-cache-tiled" => &[],
+            "gpu-baseline" => &["pcie", "nvlink"],
+            "gpu-explicit" => &["pcie", "nvlink", "cyclic", "prefetch"],
+            "gpu-unified" => &["pcie", "nvlink", "tiled", "prefetch"],
+            other => crate::bail!(
+                "unknown platform {other:?} (knl-flat-ddr4|knl-flat-mcdram|knl-cache|\
+                 knl-cache-tiled|gpu-baseline|gpu-explicit|gpu-unified)"
+            ),
         };
-        let flag = |name: &str| rest.iter().any(|p| *p == name);
+        for t in toks {
+            crate::ensure!(
+                allowed.contains(t),
+                "unknown token {t:?} for platform {head:?} (expected one of {allowed:?})"
+            );
+        }
+        let link = if toks.contains(&"nvlink") {
+            Link::NvLink
+        } else {
+            Link::PciE
+        };
+        let flag = |name: &str| toks.contains(&name);
         Ok(match head {
             "knl-flat-ddr4" => Platform::KnlFlatDdr4,
             "knl-flat-mcdram" => Platform::KnlFlatMcdram,
             "knl-cache" => Platform::KnlCache,
             "knl-cache-tiled" => Platform::KnlCacheTiled,
-            "gpu-baseline" => Platform::GpuBaseline { link: link()? },
+            "gpu-baseline" => Platform::GpuBaseline { link },
             "gpu-explicit" => Platform::GpuExplicit {
-                link: link()?,
+                link,
                 cyclic: flag("cyclic"),
                 prefetch: flag("prefetch"),
             },
-            "gpu-unified" => Platform::GpuUnified {
-                link: link()?,
+            _ => Platform::GpuUnified {
+                link,
                 tiled: flag("tiled"),
                 prefetch: flag("prefetch"),
             },
-            other => anyhow::bail!("unknown platform {other:?}"),
         })
+    }
+
+    /// Parse a compact platform spec string (see the module docs for the
+    /// grammar): e.g. `knl-cache-tiled`, `gpu-explicit:nvlink:cyclic:prefetch`,
+    /// `gpu-unified:pcie:tiled`, `gpu-explicit:nvlink:cyclic:x4:ib:2d`.
+    pub fn parse_platform(spec: &str) -> crate::Result<Platform> {
+        let mut parts = spec.split(':');
+        let head = parts.next().unwrap_or("");
+        let rest: Vec<&str> = parts.collect();
+
+        let xpos = rest.iter().position(|t| parse_ranks_token(t).is_some());
+        let (inner_toks, shard_toks) = match xpos {
+            Some(i) => (&rest[..i], &rest[i + 1..]),
+            None => (&rest[..], &rest[rest.len()..]),
+        };
+        let single = Self::parse_single(head, inner_toks)?;
+        let Some(i) = xpos else { return Ok(single) };
+
+        let ranks = parse_ranks_token(rest[i]).unwrap();
+        crate::ensure!(
+            (1..=64).contains(&ranks),
+            "rank count {ranks} out of range (1..=64)"
+        );
+        // `x1` is accepted for rank-sweep convenience and means "no
+        // sharding": with no shard tokens it works on any platform.
+        if ranks == 1 && shard_toks.is_empty() {
+            return Ok(single);
+        }
+        let mut platform = single.sharded(ranks)?;
+        if ranks == 1 {
+            // shard tokens after `x1` are still validated against a
+            // throwaway sharded form (requires a shardable platform).
+            platform = single.sharded(2)?;
+        }
+        if let Platform::Sharded {
+            ref mut link,
+            ref mut decomp,
+            ref mut overlap,
+            ..
+        } = platform
+        {
+            for t in shard_toks {
+                if let Some(ic) = Interconnect::parse(t) {
+                    *link = ic;
+                } else {
+                    match *t {
+                        "1d" => *decomp = DecompKind::OneD,
+                        "2d" => *decomp = DecompKind::TwoD,
+                        "no-overlap" => *overlap = false,
+                        other => crate::bail!(
+                            "unknown shard token {other:?} (expected peer|nvlink|ib|1d|2d|no-overlap)"
+                        ),
+                    }
+                }
+            }
+        }
+        if ranks == 1 {
+            return Ok(single);
+        }
+        Ok(platform)
     }
 
     /// Instantiate the memory engine for this configuration.
@@ -173,6 +419,23 @@ impl Config {
                 tiled,
                 prefetch,
             )),
+            Platform::Sharded {
+                ranks,
+                inner,
+                link,
+                decomp,
+                overlap,
+            } => {
+                let rank_cfg = Config {
+                    platform: inner.to_platform(),
+                    app: self.app,
+                    knl: self.knl.clone(),
+                    gpu: self.gpu.clone(),
+                    um: self.um.clone(),
+                };
+                let engines = (0..ranks.max(1)).map(|_| rank_cfg.build_engine()).collect();
+                Box::new(ShardedEngine::new(engines, decomp, link, overlap))
+            }
         }
     }
 }
@@ -198,6 +461,17 @@ mod tests {
                 link: Link::PciE,
                 tiled: true,
                 prefetch: false,
+            },
+            Platform::Sharded {
+                ranks: 4,
+                inner: InnerPlatform::GpuExplicit {
+                    link: Link::NvLink,
+                    cyclic: true,
+                    prefetch: true,
+                },
+                link: Interconnect::NvLink,
+                decomp: DecompKind::TwoD,
+                overlap: true,
             },
         ];
         for p in platforms {
@@ -229,7 +503,83 @@ mod tests {
                 prefetch: false
             }
         );
+        // link token is position-independent and optional
+        assert_eq!(
+            Config::parse_platform("gpu-explicit:cyclic").unwrap(),
+            Platform::GpuExplicit {
+                link: Link::PciE,
+                cyclic: true,
+                prefetch: false
+            }
+        );
         assert!(Config::parse_platform("bogus").is_err());
+    }
+
+    #[test]
+    fn sharded_specs_parse() {
+        assert_eq!(
+            Config::parse_platform("gpu-explicit:nvlink:cyclic:x4").unwrap(),
+            Platform::Sharded {
+                ranks: 4,
+                inner: InnerPlatform::GpuExplicit {
+                    link: Link::NvLink,
+                    cyclic: true,
+                    prefetch: false
+                },
+                link: Interconnect::NvLink,
+                decomp: DecompKind::OneD,
+                overlap: true,
+            }
+        );
+        assert_eq!(
+            Config::parse_platform("knl-cache-tiled:x8:ib:2d:no-overlap").unwrap(),
+            Platform::Sharded {
+                ranks: 8,
+                inner: InnerPlatform::KnlCacheTiled,
+                link: Interconnect::InfiniBand,
+                decomp: DecompKind::TwoD,
+                overlap: false,
+            }
+        );
+        // x1 collapses to the single-device platform
+        assert_eq!(
+            Config::parse_platform("gpu-unified:pcie:x1").unwrap(),
+            Platform::GpuUnified {
+                link: Link::PciE,
+                tiled: false,
+                prefetch: false
+            }
+        );
+        // …even for non-shardable platforms (rank-sweep convenience),
+        assert_eq!(
+            Config::parse_platform("gpu-baseline:x1").unwrap(),
+            Platform::GpuBaseline { link: Link::PciE }
+        );
+        // but shard tokens after x1 still require a shardable platform
+        assert_eq!(
+            Config::parse_platform("gpu-unified:x1:ib").unwrap(),
+            Platform::GpuUnified {
+                link: Link::PciE,
+                tiled: false,
+                prefetch: false
+            }
+        );
+        assert!(Config::parse_platform("gpu-baseline:x1:ib").is_err());
+        // non-shardable platforms refuse xN
+        assert!(Config::parse_platform("knl-flat-mcdram:x4").is_err());
+        assert!(Config::parse_platform("gpu-baseline:x2").is_err());
+    }
+
+    #[test]
+    fn unknown_tokens_are_rejected() {
+        // the motivating bug: a typo'd link silently fell back to PCIe
+        assert!(Config::parse_platform("gpu-explicit:nvlnk").is_err());
+        assert!(Config::parse_platform("gpu-explicit:nvlink:cylic").is_err());
+        assert!(Config::parse_platform("gpu-unified:cyclic").is_err());
+        assert!(Config::parse_platform("knl-cache-tiled:prefetch").is_err());
+        assert!(Config::parse_platform("gpu-explicit:x4:ethernet").is_err());
+        assert!(Config::parse_platform("gpu-explicit:x0").is_err());
+        assert!(Config::parse_platform("gpu-explicit:x999").is_err());
     }
 
     #[test]
@@ -238,5 +588,36 @@ mod tests {
         let e = cfg.build_engine();
         assert!(!e.fits(17 * (1 << 30)));
         assert!(e.fits(15 * (1 << 30)));
+    }
+
+    #[test]
+    fn sharded_fits_divides_by_ranks() {
+        let p = Config::parse_platform("gpu-explicit:pcie:x4").unwrap();
+        let cfg = Config::new(p, AppCalib::CLOVERLEAF_2D);
+        let e = cfg.build_engine();
+        // explicit streaming fits anything; the label mentions sharding
+        assert!(e.fits(u64::MAX / 8));
+        assert!(e.describe().contains("Sharded x4"));
+    }
+
+    #[test]
+    fn sharded_method_enforces_rank_bound() {
+        let p = Platform::GpuExplicit {
+            link: Link::PciE,
+            cyclic: true,
+            prefetch: true,
+        };
+        assert!(p.sharded(64).is_ok());
+        assert!(p.sharded(65).is_err(), "--ranks must honour the 1..=64 bound");
+        assert_eq!(p.sharded(1).unwrap(), p, "ranks=1 is a no-op");
+    }
+
+    #[test]
+    fn ranks_helper_and_labels() {
+        let p = Config::parse_platform("gpu-explicit:nvlink:x4:ib").unwrap();
+        assert_eq!(p.ranks(), 4);
+        assert_eq!(Platform::KnlCache.ranks(), 1);
+        let l = p.label();
+        assert!(l.contains("x4") && l.contains("IB"), "label: {l}");
     }
 }

@@ -7,8 +7,8 @@
 pub mod config;
 pub mod report;
 
-pub use config::{Config, Platform};
-pub use report::{print_summary, Summary};
+pub use config::{Config, InnerPlatform, Platform};
+pub use report::{json_record, print_summary, Summary};
 
 use crate::exec::Metrics;
 use crate::ops::OpsContext;

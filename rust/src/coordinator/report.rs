@@ -17,6 +17,37 @@ pub struct Summary {
     pub oom: bool,
 }
 
+/// One machine-readable metrics record (the `--json` output of
+/// `ops-oc run`/`sweep`; BENCH_*.json trajectories collect these).
+/// Hand-rendered: the crate is dependency-free, and the record is flat.
+pub fn json_record(
+    app: &str,
+    platform: &str,
+    ranks: u32,
+    size_gb: f64,
+    m: &Metrics,
+    oom: bool,
+) -> String {
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    format!(
+        concat!(
+            "{{\"app\":\"{}\",\"platform\":\"{}\",\"ranks\":{},\"size_gb\":{:.3},",
+            "\"oom\":{},\"runtime_s\":{:.6},\"avg_bandwidth_gbs\":{:.3},",
+            "\"eff_bandwidth_gbs\":{:.3},\"halo_time_s\":{:.6},\"tiles\":{}}}"
+        ),
+        esc(app),
+        esc(platform),
+        ranks,
+        size_gb,
+        oom,
+        m.elapsed_s,
+        m.average_bandwidth_gbs(),
+        m.effective_bandwidth_gbs(),
+        m.halo_time_s,
+        m.tiles,
+    )
+}
+
 impl Summary {
     pub fn from_metrics(label: &str, problem_bytes: u64, m: &Metrics, oom: bool) -> Self {
         Summary {
@@ -84,6 +115,28 @@ pub fn print_summary(label: &str, problem_bytes: u64, m: &Metrics, oom: bool) {
             m.halo_exchanges, m.halo_time_s
         );
     }
+    if !m.per_rank.is_empty() {
+        println!("  per-rank (sharded):");
+        for (r, rs) in m.per_rank.iter().enumerate() {
+            println!(
+                "    rank {:<3} compute {:>9.4} s  exchange {:>9.4} s ({:>7.3} GB)  avg bw {:>7.1} GB/s",
+                r,
+                rs.compute_s,
+                rs.exchange_s,
+                rs.exchange_bytes as f64 / 1e9,
+                rs.average_bandwidth_gbs(),
+            );
+        }
+        let agg_bytes: u64 = m.per_rank.iter().map(|r| r.loop_bytes).sum();
+        let agg_time: f64 = m.per_rank.iter().map(|r| r.loop_time_s).sum();
+        if agg_time > 0.0 {
+            println!(
+                "    aggregate           : {:.1} GB/s weighted Average Bandwidth over {} ranks",
+                agg_bytes as f64 / agg_time / 1e9,
+                m.per_rank.len()
+            );
+        }
+    }
     let hot = m.hottest(5);
     if !hot.is_empty() {
         println!("  hottest kernels:");
@@ -108,6 +161,20 @@ mod tests {
         let m = Metrics::new();
         let s = Summary::from_metrics("x", 1 << 30, &m, true);
         assert!(s.row().contains("OOM"));
+    }
+
+    #[test]
+    fn json_record_is_flat_and_escaped() {
+        let mut m = Metrics::new();
+        m.record_loop("k", 2_000_000_000, 0.01);
+        m.elapsed_s = 0.04;
+        let j = json_record("cloverleaf\"2d", "GPU explicit", 4, 48.0, &m, false);
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"ranks\":4"));
+        assert!(j.contains("\"size_gb\":48.000"));
+        assert!(j.contains("\\\"2d"));
+        assert!(j.contains("\"avg_bandwidth_gbs\":200.000"));
+        assert!(j.contains("\"oom\":false"));
     }
 
     #[test]

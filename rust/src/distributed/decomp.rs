@@ -1,0 +1,288 @@
+//! Domain decomposition: partitioning a chain's iteration space across
+//! modelled ranks.
+//!
+//! The decomposition is derived from the *chain*, not the block: the
+//! global extent along each partitioned dimension is the union of the
+//! chain's loop ranges (so boundary strip loops that reach into halos are
+//! covered), and per-rank boundaries are computed exactly like
+//! [`crate::tiling::plan::plan_chain`] computes tile boundaries — the
+//! first/last rank absorb anything outside the interior boundaries. A
+//! loop restricted to every rank in turn therefore tiles its iteration
+//! range exactly: no point is dropped, none is computed twice.
+
+use crate::ops::{LoopInst, Range3};
+use crate::tiling::footprint::Interval;
+use crate::tiling::plan::pick_tile_dim;
+
+/// Decomposition shape: slabs along one dimension, or a 2D rank grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecompKind {
+    /// Slabs along the outermost iterated dimension (y for 2D problems,
+    /// z for 3D) — the classic stencil-code decomposition.
+    OneD,
+    /// A 2D rank grid over the two slowest-varying iterated dimensions
+    /// (x×y for 2D problems, y×z for 3D).
+    TwoD,
+}
+
+impl DecompKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            DecompKind::OneD => "1D",
+            DecompKind::TwoD => "2D",
+        }
+    }
+}
+
+/// One rank's share of the domain.
+#[derive(Debug, Clone)]
+pub struct RankDomain {
+    pub rank: usize,
+    /// Coordinate in the rank grid (`coord[1] == 0` for 1D).
+    pub coord: [usize; 2],
+    /// Owned interval per partitioned axis, on the chain's global extent.
+    pub owned: [Interval; 2],
+}
+
+/// A 1D/2D partition of a chain's iteration space across `ranks` ranks.
+#[derive(Debug, Clone)]
+pub struct Decomposition {
+    pub kind: DecompKind,
+    /// The partitioned dimensions (`dims[1]` is meaningful only for 2D).
+    pub dims: [usize; 2],
+    /// Rank-grid shape along `dims` (`grid[1] == 1` for 1D).
+    pub grid: [usize; 2],
+    /// Global chain extent along each partitioned axis.
+    pub extent: [Interval; 2],
+    pub domains: Vec<RankDomain>,
+}
+
+/// Global `[min lo, max hi)` of the chain along dimension `dim`.
+fn chain_extent(chain: &[LoopInst], dim: usize) -> Interval {
+    let lo = chain.iter().map(|l| l.range[dim].0).min().unwrap_or(0);
+    let hi = chain.iter().map(|l| l.range[dim].1).max().unwrap_or(1);
+    Interval::new(lo, hi.max(lo + 1))
+}
+
+/// Near-square factorisation `a * b == ranks` with `a <= b`.
+fn factor2(ranks: usize) -> (usize, usize) {
+    let mut a = (ranks as f64).sqrt() as usize;
+    while a > 1 && ranks % a != 0 {
+        a -= 1;
+    }
+    (a.max(1), ranks / a.max(1))
+}
+
+/// Build the decomposition of `chain` over `ranks` ranks.
+pub fn decompose(chain: &[LoopInst], ranks: usize, kind: DecompKind) -> Decomposition {
+    let ranks = ranks.max(1);
+    let tile_dim = pick_tile_dim(chain);
+    let dims = match kind {
+        DecompKind::OneD => [tile_dim, 0],
+        // 2D problems: split x and y; 3D: split y and z.
+        DecompKind::TwoD => {
+            if tile_dim == 2 {
+                [1, 2]
+            } else {
+                [0, 1]
+            }
+        }
+    };
+    let extent = [chain_extent(chain, dims[0]), chain_extent(chain, dims[1])];
+    let grid = match kind {
+        DecompKind::OneD => [ranks, 1],
+        DecompKind::TwoD => {
+            let (a, b) = factor2(ranks);
+            // Larger factor on the larger extent.
+            if extent[0].len() >= extent[1].len() {
+                [b, a]
+            } else {
+                [a, b]
+            }
+        }
+    };
+
+    let boundary = |axis: usize, i: usize| -> isize {
+        let e = extent[axis];
+        e.lo + e.len() * i as isize / grid[axis] as isize
+    };
+
+    let mut domains = Vec::with_capacity(ranks);
+    for r in 0..ranks {
+        let coord = [r % grid[0], r / grid[0]];
+        let owned = [
+            Interval::new(boundary(0, coord[0]), boundary(0, coord[0] + 1)),
+            Interval::new(boundary(1, coord[1]), boundary(1, coord[1] + 1)),
+        ];
+        domains.push(RankDomain {
+            rank: r,
+            coord,
+            owned,
+        });
+    }
+
+    Decomposition {
+        kind,
+        dims,
+        grid,
+        extent,
+        domains,
+    }
+}
+
+impl Decomposition {
+    pub fn ranks(&self) -> usize {
+        self.domains.len()
+    }
+
+    /// Number of partitioned axes (1 or 2).
+    pub fn axes(&self) -> usize {
+        match self.kind {
+            DecompKind::OneD => 1,
+            DecompKind::TwoD => 2,
+        }
+    }
+
+    /// Ranks perpendicular to `axis` — the divisor that turns a global
+    /// cross-section into one rank's slab cross-section.
+    pub fn perpendicular(&self, axis: usize) -> usize {
+        match self.kind {
+            DecompKind::OneD => 1,
+            DecompKind::TwoD => self.grid[1 - axis].max(1),
+        }
+    }
+
+    /// Restrict a loop range to rank `r`'s domain (`None` when the rank
+    /// contributes no points). First/last ranks along each axis absorb
+    /// the loop's own overhang past the interior boundaries, exactly as
+    /// tile 0 / tile T-1 do in the tiling plan.
+    pub fn restrict(&self, r: usize, range: &Range3) -> Option<Range3> {
+        let d = &self.domains[r];
+        let mut out = *range;
+        for axis in 0..self.axes() {
+            let dim = self.dims[axis];
+            let (llo, lhi) = range[dim];
+            let start = if d.coord[axis] == 0 {
+                llo
+            } else {
+                d.owned[axis].lo.clamp(llo, lhi)
+            };
+            let end = if d.coord[axis] + 1 == self.grid[axis] {
+                lhi
+            } else {
+                d.owned[axis].hi.clamp(llo, lhi)
+            };
+            if start >= end {
+                return None;
+            }
+            out[dim] = (start, end);
+        }
+        Some(out)
+    }
+
+    /// Does rank `r` have a neighbour below / above along `axis`?
+    pub fn neighbours(&self, r: usize, axis: usize) -> (bool, bool) {
+        let c = self.domains[r].coord[axis];
+        (c > 0, c + 1 < self.grid[axis])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::kernel::kernel;
+    use crate::ops::parloop::range_points;
+    use crate::ops::BlockId;
+
+    fn lp(range: Range3) -> LoopInst {
+        LoopInst {
+            name: "l".into(),
+            block: BlockId(0),
+            range,
+            args: vec![],
+            kernel: kernel(|_| {}),
+            seq: 0,
+            bw_efficiency: 1.0,
+        }
+    }
+
+    fn coverage(chain: &[LoopInst], d: &Decomposition) {
+        for l in chain {
+            let total: u64 = (0..d.ranks())
+                .filter_map(|r| d.restrict(r, &l.range))
+                .map(|rr| range_points(&rr))
+                .sum();
+            assert_eq!(total, range_points(&l.range), "points covered exactly");
+            // disjointness along the partitioned dims: slices must abut
+            for axis in 0..d.axes() {
+                let dim = d.dims[axis];
+                let mut ivs: Vec<(isize, isize)> = (0..d.ranks())
+                    .filter_map(|r| d.restrict(r, &l.range))
+                    .map(|rr| rr[dim])
+                    .collect();
+                ivs.sort();
+                ivs.dedup();
+                let mut cursor = l.range[dim].0;
+                for (lo, hi) in ivs {
+                    assert!(lo >= cursor, "overlap along dim {dim}");
+                    cursor = cursor.max(hi);
+                }
+                assert_eq!(cursor, l.range[dim].1);
+            }
+        }
+    }
+
+    #[test]
+    fn one_d_partitions_exactly() {
+        let chain = vec![lp([(0, 16), (-2, 66), (0, 1)]), lp([(0, 16), (0, 64), (0, 1)])];
+        let d = decompose(&chain, 4, DecompKind::OneD);
+        assert_eq!(d.dims[0], 1);
+        assert_eq!(d.grid, [4, 1]);
+        coverage(&chain, &d);
+    }
+
+    #[test]
+    fn two_d_partitions_exactly() {
+        let chain = vec![lp([(-2, 18), (-2, 66), (0, 1)]), lp([(0, 16), (0, 64), (0, 1)])];
+        let d = decompose(&chain, 4, DecompKind::TwoD);
+        assert_eq!(d.dims, [0, 1]);
+        assert_eq!(d.grid[0] * d.grid[1], 4);
+        coverage(&chain, &d);
+    }
+
+    #[test]
+    fn three_d_chains_partition_outer_dims() {
+        let chain = vec![lp([(0, 8), (0, 8), (0, 32)])];
+        let d1 = decompose(&chain, 2, DecompKind::OneD);
+        assert_eq!(d1.dims[0], 2, "1D splits z for 3D problems");
+        let d2 = decompose(&chain, 4, DecompKind::TwoD);
+        assert_eq!(d2.dims, [1, 2]);
+        coverage(&chain, &d1);
+        coverage(&chain, &d2);
+    }
+
+    #[test]
+    fn degenerate_extent_gives_empty_ranks() {
+        // extent 1 along y: only one rank can own the single plane.
+        let chain = vec![lp([(0, 64), (0, 1), (0, 1)])];
+        let d = decompose(&chain, 4, DecompKind::OneD);
+        coverage(&chain, &d);
+        let non_empty = (0..4).filter(|&r| d.restrict(r, &chain[0].range).is_some());
+        assert_eq!(non_empty.count(), 1);
+    }
+
+    #[test]
+    fn single_rank_owns_everything() {
+        let chain = vec![lp([(-1, 17), (-1, 65), (0, 1)])];
+        let d = decompose(&chain, 1, DecompKind::TwoD);
+        assert_eq!(d.restrict(0, &chain[0].range), Some(chain[0].range));
+    }
+
+    #[test]
+    fn factorisation_is_near_square() {
+        assert_eq!(factor2(8), (2, 4));
+        assert_eq!(factor2(4), (2, 2));
+        assert_eq!(factor2(7), (1, 7));
+        assert_eq!(factor2(1), (1, 1));
+    }
+}

@@ -1,0 +1,301 @@
+//! Inter-rank halo-exchange planning.
+//!
+//! The planner reuses the tiler's machinery: per-dataset read radii come
+//! from the chain's stencils, the skew shifts from
+//! [`crate::tiling::dependency::compute_shifts`], and the exchanged
+//! regions are [`Interval`] intersections between a rank's read
+//! footprint (owned slab grown by the exchange depth) and its
+//! neighbours' owned slabs — the same construction the tile planner uses
+//! for left/right edges, lifted to rank granularity.
+//!
+//! One exchange per chain suffices when its depth covers radius + skew
+//! (the companion OPS-MPI-tiling scheme, arXiv 1704.00693): every loop of
+//! the chain can then run rank-locally, with boundary tiles redundantly
+//! deep.
+
+use super::decomp::Decomposition;
+use super::interconnect::Interconnect;
+use crate::ops::{Dataset, DatasetId, LoopInst, Stencil};
+use crate::tiling::dependency::compute_shifts;
+use crate::tiling::footprint::Interval;
+
+/// One dataset's exchange requirement along one partitioned axis.
+#[derive(Debug, Clone)]
+pub struct ExchangeRec {
+    pub dat: DatasetId,
+    /// Index into `decomp.dims`.
+    pub axis: usize,
+    /// Exchange depth in planes (read radius + chain skew).
+    pub depth: u64,
+    /// Bytes of one rank-local plane (global representative cross-section
+    /// divided by the ranks perpendicular to this axis).
+    pub plane_bytes: u64,
+}
+
+/// The per-chain halo-exchange plan.
+#[derive(Debug, Clone, Default)]
+pub struct HaloExchange {
+    pub recs: Vec<ExchangeRec>,
+    /// Largest skew shift folded into the depths (diagnostics).
+    pub max_shift: isize,
+}
+
+/// Cost of one rank's exchanges for a chain.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RankExchange {
+    pub time_s: f64,
+    pub bytes: u64,
+    pub messages: u64,
+}
+
+impl HaloExchange {
+    /// Plan the chain's exchanges under `decomp`.
+    pub fn plan(
+        chain: &[LoopInst],
+        datasets: &[Dataset],
+        stencils: &[Stencil],
+        decomp: &Decomposition,
+    ) -> Self {
+        let mut recs = Vec::new();
+        let mut max_shift_all = 0isize;
+        for axis in 0..decomp.axes() {
+            let dim = decomp.dims[axis];
+            let shifts = compute_shifts(chain, stencils, dim);
+            let max_shift = shifts.iter().copied().max().unwrap_or(0);
+            max_shift_all = max_shift_all.max(max_shift);
+            // Widest read radius per dataset along this dim.
+            let mut radius = vec![0i32; datasets.len()];
+            for l in chain {
+                for (d, s, acc) in l.dat_args() {
+                    if acc.reads() {
+                        let r = stencils[s.0 as usize].radius(dim);
+                        let e = &mut radius[d.0 as usize];
+                        *e = (*e).max(r);
+                    }
+                }
+            }
+            let perp = decomp.perpendicular(axis) as u64;
+            for (di, &r) in radius.iter().enumerate() {
+                if r == 0 {
+                    continue;
+                }
+                let ds = &datasets[di];
+                let depth = (r as isize + max_shift).max(1) as u64;
+                recs.push(ExchangeRec {
+                    dat: ds.id,
+                    axis,
+                    depth,
+                    plane_bytes: (ds.repr_plane_bytes() / perp).max(1),
+                });
+            }
+        }
+        HaloExchange {
+            recs,
+            max_shift: max_shift_all,
+        }
+    }
+
+    /// The interval of planes rank `r` receives from its lower / upper
+    /// neighbour along `axis` for an exchange of depth `depth`: the
+    /// rank's grown read footprint intersected with the neighbour side of
+    /// the global extent.
+    fn faces(&self, decomp: &Decomposition, r: usize, axis: usize, depth: u64) -> (Interval, Interval) {
+        let owned = decomp.domains[r].owned[axis];
+        let global = decomp.extent[axis];
+        let read_fp = Interval::new(owned.lo - depth as isize, owned.hi + depth as isize);
+        let (lo_n, hi_n) = decomp.neighbours(r, axis);
+        let lo_face = if lo_n {
+            read_fp.intersect(&Interval::new(global.lo, owned.lo))
+        } else {
+            Interval::empty()
+        };
+        let hi_face = if hi_n {
+            read_fp.intersect(&Interval::new(owned.hi, global.hi))
+        } else {
+            Interval::empty()
+        };
+        (lo_face, hi_face)
+    }
+
+    /// Exchange cost for rank `r`: one message per (dataset, face) at the
+    /// interconnect's latency + bandwidth.
+    pub fn rank_cost(&self, decomp: &Decomposition, r: usize, link: Interconnect) -> RankExchange {
+        let mut out = RankExchange::default();
+        for rec in &self.recs {
+            let (lo, hi) = self.faces(decomp, r, rec.axis, rec.depth);
+            for face in [lo, hi] {
+                if face.is_empty() {
+                    continue;
+                }
+                let bytes = face.len() as u64 * rec.plane_bytes;
+                out.time_s += link.time_s(bytes);
+                out.bytes += bytes;
+                out.messages += 1;
+            }
+        }
+        out
+    }
+
+    /// Fraction of rank `r`'s compute that touches halo-adjacent strips —
+    /// the part that cannot overlap with the exchange. Per axis:
+    /// exchanged planes over owned extent, summed and capped.
+    pub fn boundary_fraction(&self, decomp: &Decomposition, r: usize) -> f64 {
+        let mut frac = 0.0;
+        for axis in 0..decomp.axes() {
+            let owned = decomp.domains[r].owned[axis].len().max(1) as f64;
+            let depth = self
+                .recs
+                .iter()
+                .filter(|rec| rec.axis == axis)
+                .map(|rec| rec.depth)
+                .max()
+                .unwrap_or(0);
+            let (lo, hi) = {
+                let (l, h) = self.faces(decomp, r, axis, depth);
+                (l.len() as f64, h.len() as f64)
+            };
+            frac += (lo + hi) / owned;
+        }
+        frac.min(0.95)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::decomp::{decompose, DecompKind};
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::{shapes, StencilId};
+    use crate::ops::{Access, Arg, BlockId};
+
+    fn fixture() -> (Vec<Dataset>, Vec<Stencil>, Vec<LoopInst>) {
+        let mk_ds = |i: u32, name: &str| Dataset {
+            id: DatasetId(i),
+            block: BlockId(0),
+            name: name.into(),
+            size: [64, 256, 1],
+            halo_lo: [2, 2, 0],
+            halo_hi: [2, 2, 0],
+            elem_bytes: 8,
+        };
+        let datasets = vec![mk_ds(0, "state"), mk_ds(1, "temp")];
+        let stencils = vec![
+            Stencil {
+                id: StencilId(0),
+                name: "pt".into(),
+                points: shapes::point(),
+            },
+            Stencil {
+                id: StencilId(1),
+                name: "star".into(),
+                points: shapes::star2d(1),
+            },
+        ];
+        let range = [(0, 64), (0, 256), (0, 1)];
+        let chain = vec![
+            LoopInst {
+                name: "mk".into(),
+                block: BlockId(0),
+                range,
+                args: vec![
+                    Arg::dat(DatasetId(0), StencilId(1), Access::Read),
+                    Arg::dat(DatasetId(1), StencilId(0), Access::Write),
+                ],
+                kernel: kernel(|_| {}),
+                seq: 0,
+                bw_efficiency: 1.0,
+            },
+            LoopInst {
+                name: "use".into(),
+                block: BlockId(0),
+                range,
+                args: vec![
+                    Arg::dat(DatasetId(1), StencilId(1), Access::Read),
+                    Arg::dat(DatasetId(0), StencilId(0), Access::Write),
+                ],
+                kernel: kernel(|_| {}),
+                seq: 1,
+                bw_efficiency: 1.0,
+            },
+        ];
+        (datasets, stencils, chain)
+    }
+
+    #[test]
+    fn depth_covers_radius_plus_skew() {
+        let (datasets, stencils, chain) = fixture();
+        let d = decompose(&chain, 4, DecompKind::OneD);
+        let plan = HaloExchange::plan(&chain, &datasets, &stencils, &d);
+        // both datasets are read with radius 1; the chain skew is 1.
+        assert_eq!(plan.recs.len(), 2);
+        for rec in &plan.recs {
+            assert_eq!(rec.depth, 2, "radius 1 + skew 1");
+        }
+    }
+
+    #[test]
+    fn interior_ranks_pay_two_faces_edges_one() {
+        let (datasets, stencils, chain) = fixture();
+        let d = decompose(&chain, 4, DecompKind::OneD);
+        let plan = HaloExchange::plan(&chain, &datasets, &stencils, &d);
+        let edge = plan.rank_cost(&d, 0, Interconnect::InfiniBand);
+        let mid = plan.rank_cost(&d, 1, Interconnect::InfiniBand);
+        assert_eq!(edge.messages, plan.recs.len() as u64);
+        assert_eq!(mid.messages, 2 * plan.recs.len() as u64);
+        assert!(mid.bytes > edge.bytes);
+        assert!(mid.time_s > edge.time_s);
+    }
+
+    #[test]
+    fn point_only_chains_need_no_exchange() {
+        let (datasets, stencils, mut chain) = fixture();
+        // rewrite both loops to point stencils
+        for l in &mut chain {
+            for a in &mut l.args {
+                if let Arg::Dat { stencil, .. } = a {
+                    *stencil = StencilId(0);
+                }
+            }
+        }
+        let d = decompose(&chain, 4, DecompKind::OneD);
+        let plan = HaloExchange::plan(&chain, &datasets, &stencils, &d);
+        assert!(plan.recs.is_empty());
+        let c = plan.rank_cost(&d, 1, Interconnect::NvLink);
+        assert_eq!(c.messages, 0);
+        assert_eq!(c.time_s, 0.0);
+    }
+
+    #[test]
+    fn single_rank_exchanges_nothing() {
+        let (datasets, stencils, chain) = fixture();
+        let d = decompose(&chain, 1, DecompKind::OneD);
+        let plan = HaloExchange::plan(&chain, &datasets, &stencils, &d);
+        let c = plan.rank_cost(&d, 0, Interconnect::PciePeer);
+        assert_eq!(c.messages, 0);
+    }
+
+    #[test]
+    fn two_d_splits_cross_sections() {
+        let (datasets, stencils, chain) = fixture();
+        let d = decompose(&chain, 4, DecompKind::TwoD);
+        let plan = HaloExchange::plan(&chain, &datasets, &stencils, &d);
+        // two axes, two read datasets -> 4 recs; each plane divided by the
+        // perpendicular rank count.
+        assert_eq!(plan.recs.len(), 4);
+        for rec in &plan.recs {
+            let full = datasets[rec.dat.0 as usize].repr_plane_bytes();
+            assert_eq!(rec.plane_bytes, full / d.perpendicular(rec.axis) as u64);
+        }
+    }
+
+    #[test]
+    fn boundary_fraction_bounded_and_positive() {
+        let (datasets, stencils, chain) = fixture();
+        let d = decompose(&chain, 4, DecompKind::OneD);
+        let plan = HaloExchange::plan(&chain, &datasets, &stencils, &d);
+        let f = plan.boundary_fraction(&d, 1);
+        assert!(f > 0.0 && f <= 0.95, "fraction {f}");
+        // edge rank has one face only -> smaller fraction
+        assert!(plan.boundary_fraction(&d, 0) < f);
+    }
+}

@@ -1,0 +1,95 @@
+//! Inter-rank interconnect calibration.
+//!
+//! The same shape as [`crate::memory::Link`] (achieved bandwidth + per
+//! -message latency), but for *rank-to-rank* transfers: PCIe peer-to-peer
+//! between GPUs under one root complex, NVLink peer connections, and
+//! inter-node InfiniBand. Numbers are the commonly measured achieved
+//! figures for the paper's hardware generation (P100 era): PCIe gen3 P2P
+//! ≈ 10 GB/s, NVLink 1.0 peer ≈ 35 GB/s, EDR InfiniBand ≈ 12 GB/s with
+//! the lowest latency of the three.
+
+use crate::memory::hierarchy::GB;
+
+/// Rank-to-rank interconnect between modelled devices/nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Interconnect {
+    /// PCIe gen3 peer-to-peer (GPUs under one switch).
+    PciePeer,
+    /// NVLink 1.0 peer connection.
+    NvLink,
+    /// Inter-node EDR InfiniBand.
+    InfiniBand,
+}
+
+impl Interconnect {
+    /// Achieved bandwidth per direction, GB/s.
+    pub fn bw_gbs(self) -> f64 {
+        match self {
+            Interconnect::PciePeer => 10.0,
+            Interconnect::NvLink => 35.0,
+            Interconnect::InfiniBand => 12.0,
+        }
+    }
+
+    /// Per-message latency, seconds.
+    pub fn latency_s(self) -> f64 {
+        match self {
+            Interconnect::PciePeer => 10e-6,
+            Interconnect::NvLink => 8e-6,
+            Interconnect::InfiniBand => 2e-6,
+        }
+    }
+
+    /// Time to move `bytes` in one message.
+    pub fn time_s(self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            self.latency_s() + bytes as f64 / (self.bw_gbs() * GB)
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Interconnect::PciePeer => "PCIe-peer",
+            Interconnect::NvLink => "NVLink",
+            Interconnect::InfiniBand => "IB",
+        }
+    }
+
+    /// Parse a spec token (`peer` | `nvlink` | `ib`).
+    pub fn parse(tok: &str) -> Option<Self> {
+        match tok {
+            "peer" | "pcie-peer" => Some(Interconnect::PciePeer),
+            "nvlink" => Some(Interconnect::NvLink),
+            "ib" | "infiniband" => Some(Interconnect::InfiniBand),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_includes_latency() {
+        let t = Interconnect::InfiniBand.time_s(12_000_000_000);
+        assert!((t - (1.0 + 2e-6)).abs() < 1e-9);
+        assert_eq!(Interconnect::PciePeer.time_s(0), 0.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Interconnect::parse("peer"), Some(Interconnect::PciePeer));
+        assert_eq!(Interconnect::parse("nvlink"), Some(Interconnect::NvLink));
+        assert_eq!(Interconnect::parse("ib"), Some(Interconnect::InfiniBand));
+        assert_eq!(Interconnect::parse("nvlnk"), None);
+    }
+
+    #[test]
+    fn nvlink_fastest_ib_lowest_latency() {
+        assert!(Interconnect::NvLink.bw_gbs() > Interconnect::PciePeer.bw_gbs());
+        assert!(Interconnect::InfiniBand.latency_s() < Interconnect::PciePeer.latency_s());
+    }
+}

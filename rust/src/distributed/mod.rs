@@ -1,0 +1,31 @@
+//! Sharded multi-device execution.
+//!
+//! This subsystem scales the out-of-core machinery across N modelled
+//! ranks — the natural next axis after the paper's single-device
+//! evaluation, following the companion OPS work on run-time tiling
+//! across MPI ranks (arXiv 1704.00693):
+//!
+//! * [`decomp`] — 1D/2D [`Decomposition`] of a chain's iteration space
+//!   with per-rank owned ranges derived exactly like tile boundaries;
+//! * [`interconnect`] — [`Interconnect`] calibration (PCIe peer, NVLink,
+//!   inter-node InfiniBand) in the style of [`crate::memory::Link`];
+//! * [`halo`] — the [`HaloExchange`] planner: per-dataset exchange depth
+//!   (stencil radius + chain skew) and byte counts from
+//!   [`crate::tiling::footprint::Interval`] intersections;
+//! * [`sharded`] — [`ShardedEngine`], an [`crate::exec::Engine`] that
+//!   runs each rank's tiled sub-chain on its own inner engine, injects
+//!   exchange events into the discrete-event clock and overlaps
+//!   communication with interior-tile compute.
+//!
+//! Select it with `Platform::Sharded` / the `xN` platform-spec suffix
+//! (`gpu-explicit:nvlink:cyclic:x4:ib`) or the CLI `--ranks` flag.
+
+pub mod decomp;
+pub mod halo;
+pub mod interconnect;
+pub mod sharded;
+
+pub use decomp::{decompose, DecompKind, Decomposition, RankDomain};
+pub use halo::{ExchangeRec, HaloExchange, RankExchange};
+pub use interconnect::Interconnect;
+pub use sharded::ShardedEngine;

@@ -1,0 +1,432 @@
+//! The sharded multi-device engine.
+//!
+//! [`ShardedEngine`] implements [`Engine`] over N *inner* engines (one
+//! per modelled rank — each its own KNL, explicitly-streamed GPU or
+//! unified-memory GPU) under a 1D/2D [`Decomposition`]:
+//!
+//! * **Numerics** run in lockstep loop order: for every loop of the
+//!   chain, each rank executes its restricted slice through the shared
+//!   executor. Because a parallel loop never reads what it writes
+//!   (the no-aliasing contract) and the slices tile the iteration range
+//!   exactly, the result is bit-for-bit identical to single-device
+//!   untiled execution — verified in `tests/sharding_equivalence.rs`.
+//!   (Sum reductions fold per-rank partials in rank order, the modelled
+//!   `MPI_Allreduce`; min/max reductions are bitwise order-independent.)
+//!
+//! * **Time** is modelled per rank: each rank's restricted sub-chain is
+//!   replayed through its inner engine with a no-op executor, so the
+//!   inner engine's own discrete-event clock (tiling, 3-slot streaming,
+//!   cache simulation…) prices the rank's compute. The chain's
+//!   [`HaloExchange`] is costed over the configured [`Interconnect`] and
+//!   — when overlap is enabled — hidden under the rank's *interior*
+//!   compute, with only the boundary-strip fraction serialised after it.
+//!   The chain's wall time is the slowest rank (bulk-synchronous steps).
+
+use super::decomp::{decompose, DecompKind, Decomposition};
+use super::halo::HaloExchange;
+use super::interconnect::Interconnect;
+use crate::exec::{Engine, Executor, Metrics, RankStat, World};
+use crate::ops::{DataStore, Dataset, LoopInst, Range3, Reduction};
+
+/// Executor that runs nothing — used for the per-rank timing replay so
+/// loop bodies execute exactly once (in the lockstep numerics pass).
+struct ModelExecutor;
+
+impl Executor for ModelExecutor {
+    fn run_loop(
+        &mut self,
+        _l: &LoopInst,
+        _range: Range3,
+        _datasets: &[Dataset],
+        _store: &mut DataStore,
+        _reds: &mut [Reduction],
+    ) {
+    }
+
+    fn name(&self) -> &'static str {
+        "model"
+    }
+}
+
+/// N modelled ranks, each owning an inner memory engine.
+pub struct ShardedEngine {
+    kind: DecompKind,
+    link: Interconnect,
+    /// Overlap halo exchange with interior compute (the fig12 ablation
+    /// switch: `false` serialises exchange after compute).
+    pub overlap: bool,
+    inner: Vec<Box<dyn Engine>>,
+    inner_label: String,
+}
+
+impl ShardedEngine {
+    pub fn new(
+        inner: Vec<Box<dyn Engine>>,
+        kind: DecompKind,
+        link: Interconnect,
+        overlap: bool,
+    ) -> Self {
+        assert!(!inner.is_empty(), "sharded engine needs at least one rank");
+        let inner_label = inner[0].describe();
+        ShardedEngine {
+            kind,
+            link,
+            overlap,
+            inner,
+            inner_label,
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.inner.len()
+    }
+}
+
+impl Engine for ShardedEngine {
+    fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, cyclic_phase: bool) {
+        if chain.is_empty() {
+            return;
+        }
+        world.metrics.chains += 1;
+        let ranks = self.inner.len();
+        let decomp: Decomposition = decompose(chain, ranks, self.kind);
+
+        // ---- numerics: lockstep loop order, each rank its slice --------
+        for l in chain {
+            for r in 0..ranks {
+                if let Some(slice) = decomp.restrict(r, &l.range) {
+                    world
+                        .exec
+                        .run_loop(l, slice, world.datasets, world.store, world.reds);
+                }
+            }
+        }
+
+        // ---- time: per-rank sub-chain replay + halo exchange -----------
+        let plan = HaloExchange::plan(chain, world.datasets, world.stencils, &decomp);
+        if world.metrics.per_rank.len() < ranks {
+            world.metrics.per_rank.resize(ranks, RankStat::default());
+        }
+        let mut wall = 0.0f64;
+        let mut wall_exchange = 0.0f64;
+        let mut messages = 0u64;
+        for r in 0..ranks {
+            let rank_chain: Vec<LoopInst> = chain
+                .iter()
+                .filter_map(|l| {
+                    decomp.restrict(r, &l.range).map(|slice| {
+                        let mut c = l.clone();
+                        c.range = slice;
+                        c
+                    })
+                })
+                .collect();
+
+            let mut scratch = Metrics::new();
+            if !rank_chain.is_empty() {
+                // Per-rank dataset views: along partitioned axes
+                // perpendicular to the inner engine's tiled dimension, a
+                // rank's slab cross-section is only its owned share of
+                // the global extent. Without this a 2D decomposition
+                // would charge every rank full-width planes for tile
+                // transfers, double-counting bytes across ranks (the
+                // halo planner already divides by the perpendicular
+                // rank count).
+                let tile_dim = crate::tiling::plan::pick_tile_dim(&rank_chain);
+                let mut rank_datasets: Vec<Dataset> = world.datasets.to_vec();
+                for axis in 0..decomp.axes() {
+                    let dim = decomp.dims[axis];
+                    if dim == tile_dim {
+                        continue;
+                    }
+                    let global = decomp.extent[axis].len().max(1) as usize;
+                    let owned = decomp.domains[r].owned[axis].len() as usize;
+                    if owned == 0 || owned >= global {
+                        continue;
+                    }
+                    for ds in &mut rank_datasets {
+                        ds.size[dim] = (ds.size[dim] * owned / global).max(1);
+                    }
+                }
+                let mut model = ModelExecutor;
+                let mut no_reds: Vec<Reduction> = vec![];
+                let mut rank_world = World {
+                    datasets: &rank_datasets,
+                    stencils: world.stencils,
+                    store: &mut *world.store,
+                    reds: &mut no_reds,
+                    metrics: &mut scratch,
+                    exec: &mut model,
+                };
+                self.inner[r].run_chain(&rank_chain, &mut rank_world, cyclic_phase);
+            }
+            let compute = scratch.elapsed_s;
+            let rank_bytes = scratch.loop_bytes;
+            let rank_loop_time = scratch.loop_time_s;
+
+            let ex = plan.rank_cost(&decomp, r, self.link);
+            let rank_time = if self.overlap {
+                let boundary = compute * plan.boundary_fraction(&decomp, r);
+                (compute - boundary).max(ex.time_s) + boundary
+            } else {
+                compute + ex.time_s
+            };
+            wall = wall.max(rank_time);
+            wall_exchange = wall_exchange.max(ex.time_s);
+            messages += ex.messages;
+
+            // Fold the rank's model metrics into the global sink without
+            // double-counting wall time or chains. Per-rank intra-node
+            // halo time is dropped too: summing it across concurrent
+            // ranks would report serialised time (it is already inside
+            // each rank's compute makespan); the global halo_time_s
+            // carries only the sharded layer's wall-clock exchange.
+            scratch.elapsed_s = 0.0;
+            scratch.chains = 0;
+            scratch.halo_time_s = 0.0;
+            world.metrics.merge(&scratch);
+            let rs = &mut world.metrics.per_rank[r];
+            rs.compute_s += compute;
+            rs.exchange_s += ex.time_s;
+            rs.exchange_bytes += ex.bytes;
+            rs.loop_bytes += rank_bytes;
+            rs.loop_time_s += rank_loop_time;
+        }
+        world.metrics.elapsed_s += wall;
+        world.metrics.halo_time_s += wall_exchange;
+        world.metrics.halo_exchanges += messages;
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "Sharded x{} ({}, {}) | per-rank: {}{}",
+            self.inner.len(),
+            self.kind.label(),
+            self.link.name(),
+            self.inner_label,
+            if self.overlap { "" } else { " [no-overlap]" },
+        )
+    }
+
+    /// Each rank holds its share of the (block-decomposed) problem.
+    fn fits(&self, problem_bytes: u64) -> bool {
+        let share = problem_bytes / self.inner.len() as u64;
+        self.inner.iter().all(|e| e.fits(share))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::NativeExecutor;
+    use crate::memory::{AppCalib, GpuCalib, GpuExplicitEngine, GpuOpts, Link, PlainEngine};
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::{shapes, StencilId};
+    use crate::ops::*;
+
+    const APP: AppCalib = AppCalib::CLOVERLEAF_2D;
+
+    fn fixture(ny: usize) -> (Vec<Dataset>, Vec<Stencil>, DataStore, Vec<LoopInst>) {
+        let mut datasets = vec![];
+        let mut store = DataStore::new();
+        for (i, name) in ["state", "temp"].iter().enumerate() {
+            let d = Dataset {
+                id: DatasetId(i as u32),
+                block: BlockId(0),
+                name: name.to_string(),
+                size: [32, ny, 1],
+                halo_lo: [1, 1, 0],
+                halo_hi: [1, 1, 0],
+                elem_bytes: 8,
+            };
+            store.alloc(&d);
+            datasets.push(d);
+        }
+        let stencils = vec![
+            Stencil {
+                id: StencilId(0),
+                name: "pt".into(),
+                points: shapes::point(),
+            },
+            Stencil {
+                id: StencilId(1),
+                name: "star".into(),
+                points: shapes::star2d(1),
+            },
+        ];
+        let range: Range3 = [(0, 32), (0, ny as isize), (0, 1)];
+        let chain = vec![
+            LoopInst {
+                name: "seed".into(),
+                block: BlockId(0),
+                range: [(-1, 33), (-1, ny as isize + 1), (0, 1)],
+                args: vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)],
+                kernel: kernel(|c| {
+                    let [x, y, _] = c.idx();
+                    c.w(0, 0, 0, (x * 3 + y) as f64 * 0.5);
+                }),
+                seq: 0,
+                bw_efficiency: 1.0,
+            },
+            LoopInst {
+                name: "smooth".into(),
+                block: BlockId(0),
+                range,
+                args: vec![
+                    Arg::dat(DatasetId(0), StencilId(1), Access::Read),
+                    Arg::dat(DatasetId(1), StencilId(0), Access::Write),
+                ],
+                kernel: kernel(|c| {
+                    let v = c.r(0, -1, 0) + c.r(0, 1, 0) + c.r(0, 0, -1) + c.r(0, 0, 1);
+                    c.w(1, 0, 0, 0.25 * v);
+                }),
+                seq: 1,
+                bw_efficiency: 1.0,
+            },
+            LoopInst {
+                name: "fold".into(),
+                block: BlockId(0),
+                range,
+                args: vec![
+                    Arg::dat(DatasetId(1), StencilId(1), Access::Read),
+                    Arg::dat(DatasetId(0), StencilId(0), Access::ReadWrite),
+                ],
+                kernel: kernel(|c| {
+                    let v = c.r(0, 0, -1) + c.r(0, 0, 1);
+                    let s = c.r(1, 0, 0);
+                    c.w(1, 0, 0, s + 0.1 * v);
+                }),
+                seq: 2,
+                bw_efficiency: 1.0,
+            },
+        ];
+        (datasets, stencils, store, chain)
+    }
+
+    fn gpu_rank() -> Box<dyn Engine> {
+        Box::new(GpuExplicitEngine::new(
+            GpuCalib {
+                hbm_bytes: 64 << 10,
+                ..GpuCalib::default()
+            },
+            APP,
+            Link::PciE,
+            GpuOpts::default(),
+        ))
+    }
+
+    fn run_sharded(
+        ranks: usize,
+        kind: DecompKind,
+        overlap: bool,
+        chains: usize,
+    ) -> (Vec<Vec<f64>>, Metrics) {
+        let (datasets, stencils, mut store, chain) = fixture(128);
+        let mut reds = vec![];
+        let mut metrics = Metrics::new();
+        let mut exec = NativeExecutor::new();
+        let inner = (0..ranks).map(|_| gpu_rank()).collect();
+        let mut e = ShardedEngine::new(inner, kind, Interconnect::InfiniBand, overlap);
+        for _ in 0..chains {
+            let mut world = World {
+                datasets: &datasets,
+                stencils: &stencils,
+                store: &mut store,
+                reds: &mut reds,
+                metrics: &mut metrics,
+                exec: &mut exec,
+            };
+            e.run_chain(&chain, &mut world, true);
+        }
+        let bufs = datasets.iter().map(|d| store.buf(d.id).to_vec()).collect();
+        (bufs, metrics)
+    }
+
+    fn run_reference(chains: usize) -> Vec<Vec<f64>> {
+        let (datasets, _stencils, mut store, chain) = fixture(128);
+        let mut reds: Vec<Reduction> = vec![];
+        let mut exec = NativeExecutor::new();
+        for _ in 0..chains {
+            for l in &chain {
+                exec.run_loop(l, l.range, &datasets, &mut store, &mut reds);
+            }
+        }
+        datasets.iter().map(|d| store.buf(d.id).to_vec()).collect()
+    }
+
+    #[test]
+    fn sharded_numerics_match_untiled_bitexact() {
+        let want = run_reference(3);
+        for kind in [DecompKind::OneD, DecompKind::TwoD] {
+            for ranks in [1, 2, 4] {
+                let (got, _) = run_sharded(ranks, kind, true, 3);
+                assert_eq!(want, got, "x{ranks} {}", kind.label());
+            }
+        }
+    }
+
+    #[test]
+    fn per_rank_stats_are_populated() {
+        let (_, m) = run_sharded(4, DecompKind::OneD, true, 2);
+        assert_eq!(m.per_rank.len(), 4);
+        for (r, rs) in m.per_rank.iter().enumerate() {
+            assert!(rs.compute_s > 0.0, "rank {r} compute");
+            assert!(rs.loop_bytes > 0, "rank {r} bytes");
+        }
+        // interior ranks exchange on two faces, edges on one
+        assert!(m.per_rank[1].exchange_bytes > m.per_rank[0].exchange_bytes);
+        assert!(m.halo_exchanges > 0);
+    }
+
+    #[test]
+    fn overlap_hides_exchange_time() {
+        let (_, with) = run_sharded(4, DecompKind::OneD, true, 4);
+        let (_, without) = run_sharded(4, DecompKind::OneD, false, 4);
+        assert!(
+            with.elapsed_s < without.elapsed_s,
+            "overlap must shorten the makespan: {} !< {}",
+            with.elapsed_s,
+            without.elapsed_s
+        );
+    }
+
+    #[test]
+    fn strong_scaling_speedup() {
+        let (_, m1) = run_sharded(1, DecompKind::OneD, true, 2);
+        let (_, m4) = run_sharded(4, DecompKind::OneD, true, 2);
+        assert!(
+            m4.elapsed_s < m1.elapsed_s,
+            "4 ranks must beat 1: {} !< {}",
+            m4.elapsed_s,
+            m1.elapsed_s
+        );
+    }
+
+    #[test]
+    fn two_d_planes_are_not_double_counted() {
+        // Under a 2D grid each rank's tile transfers must be charged its
+        // slab cross-section, not full-width planes: summed h2d stays
+        // close to the single-rank total instead of doubling.
+        let (_, m1) = run_sharded(1, DecompKind::OneD, true, 1);
+        let (_, m2) = run_sharded(4, DecompKind::TwoD, true, 1);
+        assert!(
+            m2.h2d_bytes < m1.h2d_bytes * 3 / 2,
+            "2D sharded h2d {} should not double-count vs x1 {}",
+            m2.h2d_bytes,
+            m1.h2d_bytes
+        );
+    }
+
+    #[test]
+    fn fits_divides_across_ranks() {
+        let inner: Vec<Box<dyn Engine>> = (0..4)
+            .map(|_| {
+                Box::new(PlainEngine::knl_flat_mcdram(240.0, 1000)) as Box<dyn Engine>
+            })
+            .collect();
+        let e = ShardedEngine::new(inner, DecompKind::OneD, Interconnect::InfiniBand, true);
+        assert!(e.fits(4000));
+        assert!(!e.fits(4100));
+        assert!(e.describe().contains("Sharded x4"));
+    }
+}

@@ -1,0 +1,140 @@
+//! Minimal error plumbing with an `anyhow`-shaped surface.
+//!
+//! The build environment is hermetic (no crates.io access), so the crate
+//! carries its own string-based error type plus the three macros the code
+//! base actually uses ([`err!`](crate::err), [`bail!`](crate::bail),
+//! [`ensure!`](crate::ensure)) and a [`Context`] extension trait.
+
+use std::fmt;
+
+/// A string-backed error with an optional context chain.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+
+    /// Prepend a context line (the `anyhow` chain rendered flat).
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Crate-wide result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Construct an [`Error`] from a format string (the `anyhow!` analogue).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::errors::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+/// `anyhow::Context`-style extension for results and options.
+pub trait Context<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("bad {}", 7)
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert_eq!(fails().unwrap_err().to_string(), "bad 7");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(-1).unwrap_err().to_string().contains("-1"));
+    }
+
+    #[test]
+    fn context_wraps() {
+        let e: Result<()> = Err(err!("inner")).context("outer");
+        assert_eq!(e.unwrap_err().to_string(), "outer: inner");
+        let o: Result<i32> = None.context("missing");
+        assert_eq!(o.unwrap_err().to_string(), "missing");
+    }
+}

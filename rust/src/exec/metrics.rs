@@ -23,6 +23,32 @@ impl LoopStat {
     }
 }
 
+/// Per-rank statistics of sharded execution (accumulated across chains).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RankStat {
+    /// Modelled compute makespan of this rank's sub-chains, seconds.
+    pub compute_s: f64,
+    /// Modelled inter-rank halo-exchange time, seconds.
+    pub exchange_s: f64,
+    /// Halo bytes this rank received.
+    pub exchange_bytes: u64,
+    /// §5.1 bytes touched by this rank's loop slices.
+    pub loop_bytes: u64,
+    /// Modelled loop time of this rank's slices, seconds.
+    pub loop_time_s: f64,
+}
+
+impl RankStat {
+    /// This rank's weighted Average Bandwidth (§5.1), GB/s.
+    pub fn average_bandwidth_gbs(&self) -> f64 {
+        if self.loop_time_s > 0.0 {
+            self.loop_bytes as f64 / self.loop_time_s / 1e9
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Simulation-wide metrics sink.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
@@ -54,6 +80,8 @@ pub struct Metrics {
     pub tiles: u64,
     /// Per-kernel-name breakdown.
     pub per_loop: HashMap<String, LoopStat>,
+    /// Per-rank breakdown of sharded execution (empty when unsharded).
+    pub per_rank: Vec<RankStat>,
 }
 
 impl Metrics {
@@ -120,6 +148,17 @@ impl Metrics {
             st.invocations += v.invocations;
             st.bytes += v.bytes;
             st.time_s += v.time_s;
+        }
+        if self.per_rank.len() < other.per_rank.len() {
+            self.per_rank.resize(other.per_rank.len(), RankStat::default());
+        }
+        for (r, v) in other.per_rank.iter().enumerate() {
+            let st = &mut self.per_rank[r];
+            st.compute_s += v.compute_s;
+            st.exchange_s += v.exchange_s;
+            st.exchange_bytes += v.exchange_bytes;
+            st.loop_bytes += v.loop_bytes;
+            st.loop_time_s += v.loop_time_s;
         }
     }
 

@@ -12,7 +12,7 @@ pub mod metrics;
 pub mod native;
 pub mod pjrt;
 
-pub use metrics::{LoopStat, Metrics};
+pub use metrics::{LoopStat, Metrics, RankStat};
 pub use native::NativeExecutor;
 pub use pjrt::PjrtExecutor;
 

@@ -15,6 +15,7 @@ use crate::ops::{DataStore, Dataset, DatasetId, LoopInst, Range3, Reduction};
 use crate::runtime::{ArtifactSpec, LoadedArtifact};
 use std::collections::HashMap;
 
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 struct Bound {
     art: LoadedArtifact,
     inputs: Vec<DatasetId>,
@@ -46,24 +47,24 @@ impl PjrtExecutor {
         spec: &ArtifactSpec,
         art: LoadedArtifact,
         datasets: &[Dataset],
-    ) -> anyhow::Result<()> {
-        let resolve = |name: &str| -> anyhow::Result<DatasetId> {
+    ) -> crate::Result<()> {
+        let resolve = |name: &str| -> crate::Result<DatasetId> {
             datasets
                 .iter()
                 .find(|d| d.name == name)
                 .map(|d| d.id)
-                .ok_or_else(|| anyhow::anyhow!("artifact {} references unknown dataset {name}", spec.kernel))
+                .ok_or_else(|| crate::err!("artifact {} references unknown dataset {name}", spec.kernel))
         };
         let inputs = spec
             .inputs
             .iter()
             .map(|n| resolve(n))
-            .collect::<anyhow::Result<Vec<_>>>()?;
+            .collect::<crate::Result<Vec<_>>>()?;
         let outputs = spec
             .outputs
             .iter()
             .map(|n| resolve(n))
-            .collect::<anyhow::Result<Vec<_>>>()?;
+            .collect::<crate::Result<Vec<_>>>()?;
         // Shape sanity check against the first input dataset.
         if let Some(d0) = inputs.first() {
             let ds = &datasets[d0.0 as usize];
@@ -72,7 +73,7 @@ impl PjrtExecutor {
             } else {
                 vec![ds.padded(2), ds.padded(1), ds.padded(0)]
             };
-            anyhow::ensure!(
+            crate::ensure!(
                 padded == spec.shape,
                 "artifact {} compiled for shape {:?} but dataset {} is {:?}",
                 spec.kernel,
@@ -119,43 +120,56 @@ impl Executor for PjrtExecutor {
         };
         self.pjrt_loops += 1;
 
-        // Gather inputs: full padded buffers as f64 literals.
-        let mut lits = Vec::with_capacity(b.inputs.len());
-        for &d in &b.inputs {
-            let ds = &datasets[d.0 as usize];
-            let buf = store.buf(d);
-            let lit = xla::Literal::vec1(buf);
-            let dims: Vec<i64> = if ds.padded(2) == 1 {
-                vec![ds.padded(1) as i64, ds.padded(0) as i64]
-            } else {
-                vec![ds.padded(2) as i64, ds.padded(1) as i64, ds.padded(0) as i64]
-            };
-            lits.push(lit.reshape(&dims).expect("reshape input literal"));
+        #[cfg(not(feature = "xla"))]
+        {
+            let _ = b;
+            panic!(
+                "kernel {} is bound to a PJRT artifact but ops-oc was built \
+                 without the `xla` feature",
+                l.name
+            );
         }
 
-        let outs = b
-            .art
-            .run(&lits)
-            .unwrap_or_else(|e| panic!("PJRT execution of {} failed: {e:#}", l.name));
-        assert_eq!(
-            outs.len(),
-            b.outputs.len(),
-            "artifact {} output arity mismatch",
-            l.name
-        );
+        #[cfg(feature = "xla")]
+        {
+            // Gather inputs: full padded buffers as f64 literals.
+            let mut lits = Vec::with_capacity(b.inputs.len());
+            for &d in &b.inputs {
+                let ds = &datasets[d.0 as usize];
+                let buf = store.buf(d);
+                let lit = xla::Literal::vec1(buf);
+                let dims: Vec<i64> = if ds.padded(2) == 1 {
+                    vec![ds.padded(1) as i64, ds.padded(0) as i64]
+                } else {
+                    vec![ds.padded(2) as i64, ds.padded(1) as i64, ds.padded(0) as i64]
+                };
+                lits.push(lit.reshape(&dims).expect("reshape input literal"));
+            }
 
-        // Write back only the requested sub-range.
-        for (lit, &d) in outs.iter().zip(&b.outputs) {
-            let ds = &datasets[d.0 as usize];
-            let v: Vec<f64> = lit.to_vec().expect("output literal to_vec");
-            assert_eq!(v.len(), ds.alloc_len(), "artifact output size mismatch");
-            let buf = store.buf_mut(d);
-            let (x0, x1) = range[0];
-            for z in range[2].0..range[2].1 {
-                for y in range[1].0..range[1].1 {
-                    let off = ds.offset([x0, y, z]) as usize;
-                    let n = (x1 - x0) as usize;
-                    buf[off..off + n].copy_from_slice(&v[off..off + n]);
+            let outs = b
+                .art
+                .run(&lits)
+                .unwrap_or_else(|e| panic!("PJRT execution of {} failed: {e:#}", l.name));
+            assert_eq!(
+                outs.len(),
+                b.outputs.len(),
+                "artifact {} output arity mismatch",
+                l.name
+            );
+
+            // Write back only the requested sub-range.
+            for (lit, &d) in outs.iter().zip(&b.outputs) {
+                let ds = &datasets[d.0 as usize];
+                let v: Vec<f64> = lit.to_vec().expect("output literal to_vec");
+                assert_eq!(v.len(), ds.alloc_len(), "artifact output size mismatch");
+                let buf = store.buf_mut(d);
+                let (x0, x1) = range[0];
+                for z in range[2].0..range[2].1 {
+                    for y in range[1].0..range[1].1 {
+                        let off = ds.offset([x0, y, z]) as usize;
+                        let n = (x1 - x0) as usize;
+                        buf[off..off + n].copy_from_slice(&v[off..off + n]);
+                    }
                 }
             }
         }

@@ -28,11 +28,29 @@
 //!
 //! The compute hot-spots are also available as AOT-compiled XLA programs
 //! (JAX/Pallas → HLO text → PJRT; see `python/compile` and
-//! [`runtime`]), exercised by the [`exec::PjrtExecutor`] backend.
+//! [`runtime`]), exercised by the [`exec::PjrtExecutor`] backend (gated
+//! behind the `xla` cargo feature — the default build is dependency-free
+//! and the executor falls back to a stub that reports PJRT unavailable).
+//!
+//! ## Multi-device execution
+//!
+//! The [`distributed`] subsystem shards a declared block across N
+//! modelled ranks under a 1D or 2D [`distributed::Decomposition`], each
+//! rank owning its own memory engine (KNL cache-tiled, GPU-explicit or
+//! unified). Inter-rank halos are planned by
+//! [`distributed::HaloExchange`] from the same per-chain access analysis
+//! the tiler uses, costed over a calibrated
+//! [`distributed::Interconnect`] (PCIe peer / NVLink / InfiniBand), and
+//! overlapped with interior compute by
+//! [`distributed::ShardedEngine`]. Select it from the CLI with the `xN`
+//! platform-spec suffix (e.g. `gpu-explicit:nvlink:cyclic:x4:ib`) or the
+//! `--ranks` flag — see `rust/README.md` for the full grammar.
 
 pub mod apps;
 pub mod bench_support;
 pub mod coordinator;
+pub mod distributed;
+pub mod errors;
 pub mod exec;
 pub mod lazy;
 pub mod memory;
@@ -44,4 +62,4 @@ pub use coordinator::config::{Config, Platform};
 pub use ops::api::OpsContext;
 
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = errors::Result<T>;

@@ -4,6 +4,8 @@
 //! Usage:
 //!   ops-oc run   --app cloverleaf2d --platform knl-cache-tiled \
 //!                --size-gb 48 --steps 4
+//!   ops-oc run   --app cloverleaf2d --platform gpu-explicit:nvlink:cyclic x4 \
+//!                --size-gb 48            (sharded across 4 modelled ranks)
 //!   ops-oc sweep --app opensbli --platform gpu-explicit:nvlink:cyclic:prefetch
 //!   ops-oc list
 //!
@@ -11,9 +13,14 @@
 //!   knl-cache-tiled | gpu-baseline[:link] |
 //!   gpu-explicit[:link][:cyclic][:prefetch] |
 //!   gpu-unified[:link][:tiled][:prefetch]     (link = pcie | nvlink)
+//! Sharding: append `:xN` to a shardable spec (knl-cache-tiled,
+//!   gpu-explicit, gpu-unified) followed by optional `peer|nvlink|ib`
+//!   (interconnect), `1d|2d` (decomposition) and `no-overlap`; or pass
+//!   `--ranks N` / a bare `xN` argument. Unknown tokens are rejected.
+//! `--json` emits one machine-readable metrics record per run cell.
 
 use ops_oc::bench_support::{self, Figure};
-use ops_oc::coordinator::{print_summary, Config, Platform};
+use ops_oc::coordinator::{json_record, print_summary, Config, Platform};
 use std::process::exit;
 
 struct Args {
@@ -23,6 +30,8 @@ struct Args {
     size_gb: f64,
     steps: usize,
     chain_steps: usize,
+    ranks: u32,
+    json: bool,
 }
 
 fn parse_args() -> Args {
@@ -33,6 +42,8 @@ fn parse_args() -> Args {
         size_gb: 24.0,
         steps: 4,
         chain_steps: 1,
+        ranks: 1,
+        json: false,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -41,18 +52,46 @@ fn parse_args() -> Args {
             "run" | "sweep" | "list" | "help" | "--help" | "-h" => {
                 a.cmd = argv[i].trim_start_matches('-').to_string()
             }
-            flag @ ("--app" | "--platform" | "--size-gb" | "--steps" | "--chain-steps") => {
+            "--json" => a.json = true,
+            flag @ ("--app" | "--platform" | "--size-gb" | "--steps" | "--chain-steps"
+            | "--ranks") => {
                 i += 1;
                 let Some(v) = argv.get(i) else {
                     eprintln!("missing value for {flag}");
                     exit(2);
                 };
+                // numeric flags are strict: a typo must not silently run
+                // with a default (same policy as the platform-spec parser)
+                fn num<T: std::str::FromStr>(flag: &str, v: &str) -> T {
+                    v.parse().unwrap_or_else(|_| {
+                        eprintln!("bad value {v:?} for {flag}");
+                        exit(2);
+                    })
+                }
                 match flag {
                     "--app" => a.app = v.clone(),
                     "--platform" => a.platform = v.clone(),
-                    "--size-gb" => a.size_gb = v.parse().unwrap_or(24.0),
-                    "--steps" => a.steps = v.parse().unwrap_or(4),
-                    _ => a.chain_steps = v.parse().unwrap_or(1),
+                    "--size-gb" => a.size_gb = num(flag, v),
+                    "--steps" => a.steps = num(flag, v),
+                    "--ranks" => match v.parse::<u32>() {
+                        Ok(n) if n >= 1 => a.ranks = n,
+                        _ => {
+                            eprintln!("bad rank count {v:?} (expected 1..=64)");
+                            exit(2);
+                        }
+                    },
+                    _ => a.chain_steps = num(flag, v),
+                }
+            }
+            // a bare `xN` argument shards the platform (the spec-suffix
+            // form `--platform gpu-explicit:…:xN` composes the same way)
+            other if other.strip_prefix('x').is_some_and(|d| !d.is_empty() && d.chars().all(|c| c.is_ascii_digit())) => {
+                match other[1..].parse::<u32>() {
+                    Ok(n) if n >= 1 => a.ranks = n,
+                    _ => {
+                        eprintln!("bad rank count {other:?} (expected x1..x64)");
+                        exit(2);
+                    }
                 }
             }
             other => {
@@ -63,6 +102,21 @@ fn parse_args() -> Args {
         i += 1;
     }
     a
+}
+
+fn parse_platform_or_exit(a: &Args) -> Platform {
+    let platform = Config::parse_platform(&a.platform).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        exit(2);
+    });
+    if a.ranks > 1 {
+        platform.sharded(a.ranks).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            exit(2);
+        })
+    } else {
+        platform
+    }
 }
 
 fn run_cell(
@@ -90,50 +144,72 @@ fn main() {
             println!("ops-oc — out-of-core stencil computations (paper reproduction)");
             println!("commands:");
             println!("  run   --app A --platform P [--size-gb G] [--steps N] [--chain-steps C]");
-            println!("  sweep --app A --platform P              (problem-size sweep)");
-            println!("  list                                    (apps + platform specs)");
+            println!("        [--ranks R | xR] [--json]");
+            println!("  sweep --app A --platform P [--json]        (problem-size sweep)");
+            println!("  list                                       (apps + platform specs)");
         }
         "list" => {
             println!("apps      : cloverleaf2d, cloverleaf3d, opensbli");
             println!("platforms : knl-flat-ddr4, knl-flat-mcdram, knl-cache, knl-cache-tiled,");
             println!("            gpu-baseline[:link], gpu-explicit[:link][:cyclic][:prefetch],");
             println!("            gpu-unified[:link][:tiled][:prefetch]   link=pcie|nvlink");
+            println!("sharding  : append :xN [:peer|:nvlink|:ib] [:1d|:2d] [:no-overlap]");
+            println!("            to knl-cache-tiled / gpu-explicit / gpu-unified,");
+            println!("            or pass --ranks N (interconnect defaults to the host link)");
         }
         "run" => {
-            let platform = Config::parse_platform(&a.platform).unwrap_or_else(|e| {
-                eprintln!("{e}");
-                exit(2);
-            });
-            println!(
-                "running {} on {} at {:.0} GB modelled ({} steps)\n",
-                a.app,
-                platform.label(),
-                a.size_gb,
-                a.steps
-            );
+            let platform = parse_platform_or_exit(&a);
+            if !a.json {
+                println!(
+                    "running {} on {} at {:.0} GB modelled ({} steps)\n",
+                    a.app,
+                    platform.label(),
+                    a.size_gb,
+                    a.steps
+                );
+            }
             let (m, oom) = run_cell(&a.app, platform, a.size_gb, a.steps, a.chain_steps);
-            print_summary(
-                &format!("{} / {}", a.app, platform.label()),
-                (a.size_gb * 1e9) as u64,
-                &m,
-                oom,
-            );
+            if a.json {
+                println!(
+                    "{}",
+                    json_record(&a.app, &platform.label(), platform.ranks(), a.size_gb, &m, oom)
+                );
+            } else {
+                print_summary(
+                    &format!("{} / {}", a.app, platform.label()),
+                    (a.size_gb * 1e9) as u64,
+                    &m,
+                    oom,
+                );
+            }
         }
         "sweep" => {
-            let platform = Config::parse_platform(&a.platform).unwrap_or_else(|e| {
-                eprintln!("{e}");
-                exit(2);
-            });
+            let platform = parse_platform_or_exit(&a);
             let mut fig = Figure::new(
                 &format!("{} on {}", a.app, platform.label()),
                 "effective GB/s (modelled)",
             );
             let s = fig.add_series(&platform.label());
+            let mut records = Vec::new();
             for gb in bench_support::KNL_SIZES_GB {
                 let (m, oom) = run_cell(&a.app, platform, gb, a.steps, a.chain_steps);
+                if a.json {
+                    records.push(json_record(
+                        &a.app,
+                        &platform.label(),
+                        platform.ranks(),
+                        gb,
+                        &m,
+                        oom,
+                    ));
+                }
                 fig.push(s, gb, (!oom).then(|| m.effective_bandwidth_gbs()));
             }
-            println!("{}", fig.render());
+            if a.json {
+                println!("[{}]", records.join(",\n "));
+            } else {
+                println!("{}", fig.render());
+            }
         }
         other => {
             eprintln!("unknown command {other:?}");

@@ -3,10 +3,15 @@
 
 use ops_oc::apps::diffusion::Diffusion2D;
 use ops_oc::coordinator::{Config, Platform, Summary};
-use ops_oc::memory::{AppCalib, Link};
+use ops_oc::memory::gpu_explicit::tile_traffic;
+use ops_oc::memory::{AppCalib, HaloModel, Link};
 use ops_oc::ops::kernel::kernel;
-use ops_oc::ops::stencil::shapes;
-use ops_oc::ops::{Access, Arg, OpsContext, RedOp};
+use ops_oc::ops::stencil::{shapes, StencilId};
+use ops_oc::ops::{
+    Access, Arg, BlockId, Dataset, DatasetId, LoopInst, OpsContext, RedOp, Stencil,
+};
+use ops_oc::tiling::footprint::Interval;
+use ops_oc::tiling::plan::{plan_auto, plan_chain};
 
 fn ctx(p: Platform) -> OpsContext {
     OpsContext::new(Config::new(p, AppCalib::CLOVERLEAF_2D).build_engine())
@@ -164,6 +169,148 @@ fn metrics_survive_reset_boundaries() {
     app.step(&mut c);
     c.flush();
     assert!(c.metrics().loop_bytes > 0);
+}
+
+// ---------------------------------------------------------------------------
+// Targeted edge cases for memory/halo.rs and tiling/footprint.rs: zero-depth
+// halos, single-tile plans and the write-first skip path.
+
+fn ds(id: u32, halo: i32, ny: usize) -> Dataset {
+    Dataset {
+        id: DatasetId(id),
+        block: BlockId(0),
+        name: format!("d{id}"),
+        size: [32, ny, 1],
+        halo_lo: [halo, halo, 0],
+        halo_hi: [halo, halo, 0],
+        elem_bytes: 8,
+    }
+}
+
+fn st(id: u32, pts: Vec<[i32; 3]>) -> Stencil {
+    Stencil {
+        id: StencilId(id),
+        name: format!("s{id}"),
+        points: pts,
+    }
+}
+
+fn lp(name: &str, ny: isize, args: Vec<Arg>) -> LoopInst {
+    LoopInst {
+        name: name.into(),
+        block: BlockId(0),
+        range: [(0, 32), (0, ny), (0, 1)],
+        args,
+        kernel: kernel(|_| {}),
+        seq: 0,
+        bw_efficiency: 1.0,
+    }
+}
+
+#[test]
+fn zero_depth_halos_cost_no_exchange() {
+    // point-stencil reads over a halo-less dataset: the MPI model must
+    // charge nothing, tiled or untiled.
+    let datasets = vec![ds(0, 0, 64)];
+    let stencils = vec![st(0, shapes::point())];
+    let chain = vec![
+        lp("w", 64, vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)]),
+        lp("r", 64, vec![Arg::dat(DatasetId(0), StencilId(0), Access::Read)]),
+    ];
+    let h = HaloModel::knl();
+    for l in &chain {
+        let (t, n) = h.per_loop_cost(l, &datasets, &stencils, 1);
+        assert_eq!((t, n), (0.0, 0));
+    }
+    let (t, n) = h.per_chain_cost(&chain, &datasets, &stencils, 1, 0);
+    assert_eq!((t, n), (0.0, 0));
+}
+
+#[test]
+fn single_tile_plan_has_no_edges() {
+    let datasets = vec![ds(0, 2, 64)];
+    let stencils = vec![st(0, shapes::star2d(1))];
+    let chain = vec![lp(
+        "r",
+        64,
+        vec![Arg::dat(DatasetId(0), StencilId(0), Access::Read)],
+    )];
+    let plan = plan_chain(&chain, &datasets, &stencils, 1);
+    assert_eq!(plan.num_tiles(), 1);
+    let d = DatasetId(0);
+    assert!(plan.left_edge(0, d).is_empty());
+    assert!(plan.right_edge(0, d).is_empty());
+    // with no left edge, the whole footprint must be freshly uploaded
+    let fp = plan.tiles[0].footprints[0].as_ref().unwrap().full;
+    assert_eq!(plan.right_footprint(0, d), fp);
+    // the footprint covers the stencil reach, clamped to the dataset
+    assert_eq!(fp, Interval::new(-1, 65));
+    // auto-planner agrees when the target is unbounded
+    let auto = plan_auto(&chain, &datasets, &stencils, u64::MAX);
+    assert_eq!(auto.num_tiles(), 1);
+}
+
+#[test]
+fn write_first_dataset_skips_upload_but_keeps_download() {
+    // temp is written (whole range) before being read: §4.1 write-first.
+    let datasets = vec![ds(0, 2, 256), ds(1, 2, 256)];
+    let stencils = vec![st(0, shapes::point()), st(1, shapes::star2d(1))];
+    let chain = vec![
+        lp(
+            "mk_temp",
+            256,
+            vec![
+                Arg::dat(DatasetId(0), StencilId(1), Access::Read),
+                Arg::dat(DatasetId(1), StencilId(0), Access::Write),
+            ],
+        ),
+        lp(
+            "use_temp",
+            256,
+            vec![
+                Arg::dat(DatasetId(1), StencilId(1), Access::Read),
+                Arg::dat(DatasetId(0), StencilId(0), Access::ReadWrite),
+            ],
+        ),
+    ];
+    let summary = ops_oc::tiling::chain_access_summary(&chain);
+    assert!(summary[&DatasetId(1)].write_first);
+    assert!(summary[&DatasetId(1)].skip_upload());
+    assert!(!summary[&DatasetId(1)].skip_download());
+
+    let plan = plan_chain(&chain, &datasets, &stencils, 4);
+    let with_skip = |skip_up: bool| -> (u64, u64) {
+        let skip_upload = vec![false, skip_up];
+        let skip_download = vec![false, false];
+        let mut up = 0;
+        let mut down = 0;
+        for t in 0..plan.num_tiles() {
+            let tr = tile_traffic(&plan, t, &datasets, &skip_upload, &skip_download);
+            up += tr.upload;
+            down += tr.download;
+        }
+        (up, down)
+    };
+    let (up_skip, down_skip) = with_skip(true);
+    let (up_all, down_all) = with_skip(false);
+    assert!(
+        up_skip < up_all,
+        "write-first skip must cut uploads: {up_skip} !< {up_all}"
+    );
+    assert_eq!(down_skip, down_all, "downloads unaffected by upload skip");
+    assert!(down_skip > 0, "written data still comes back");
+}
+
+#[test]
+fn empty_and_degenerate_intervals_behave() {
+    let e = Interval::empty();
+    assert_eq!(e.len(), 0);
+    assert!(e.intersect(&Interval::new(-5, 5)).is_empty());
+    assert_eq!(e.hull(&Interval::new(2, 3)), Interval::new(2, 3));
+    // inverted interval counts as empty everywhere
+    let inv = Interval::new(9, 3);
+    assert!(inv.is_empty());
+    assert!(inv.clamp_to(0, 100).is_empty());
 }
 
 #[test]

@@ -1,0 +1,151 @@
+//! Sharded execution is a pure re-scheduler: running an application
+//! across N modelled ranks (1D and 2D decompositions, any inner engine)
+//! must produce **bit-for-bit** the same numerics as single-device
+//! untiled execution — the same bar the tiling layer is held to.
+//!
+//! Also checks the modelled-time side: per-rank metrics are populated,
+//! halo exchanges are counted, sharding yields strong-scaling speedup,
+//! and comm/compute overlap beats the no-overlap ablation.
+
+use ops_oc::apps::cloverleaf2d::CloverLeaf2D;
+use ops_oc::apps::diffusion::Diffusion2D;
+use ops_oc::coordinator::{Config, InnerPlatform, Platform};
+use ops_oc::distributed::{DecompKind, Interconnect};
+use ops_oc::memory::{AppCalib, Link};
+use ops_oc::ops::OpsContext;
+
+fn sharded(ranks: u32, decomp: DecompKind, overlap: bool) -> Platform {
+    Platform::Sharded {
+        ranks,
+        inner: InnerPlatform::GpuExplicit {
+            link: Link::NvLink,
+            cyclic: true,
+            prefetch: true,
+        },
+        link: Interconnect::NvLink,
+        decomp,
+        overlap,
+    }
+}
+
+fn sharded_knl(ranks: u32, decomp: DecompKind) -> Platform {
+    Platform::Sharded {
+        ranks,
+        inner: InnerPlatform::KnlCacheTiled,
+        link: Interconnect::InfiniBand,
+        decomp,
+        overlap: true,
+    }
+}
+
+fn run_cl2d(p: Platform) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut ctx = OpsContext::new(Config::new(p, AppCalib::CLOVERLEAF_2D).build_engine());
+    let mut app = CloverLeaf2D::new(&mut ctx, 20, 20, 1);
+    app.run(&mut ctx, 3, 0);
+    (
+        ctx.fetch(app.density0),
+        ctx.fetch(app.energy0),
+        ctx.fetch(app.xvel0),
+    )
+}
+
+#[test]
+fn cloverleaf2d_sharded_matches_untiled_bitexact() {
+    let reference = run_cl2d(Platform::KnlFlatDdr4);
+    for decomp in [DecompKind::OneD, DecompKind::TwoD] {
+        for ranks in [2u32, 4] {
+            let got = run_cl2d(sharded(ranks, decomp, true));
+            assert_eq!(reference.0, got.0, "density0 x{ranks} {}", decomp.label());
+            assert_eq!(reference.1, got.1, "energy0 x{ranks} {}", decomp.label());
+            assert_eq!(reference.2, got.2, "xvel0 x{ranks} {}", decomp.label());
+        }
+    }
+    // a different inner engine must not change numerics either
+    let knl = run_cl2d(sharded_knl(4, DecompKind::TwoD));
+    assert_eq!(reference.0, knl.0, "density0 sharded KNL");
+}
+
+fn run_diffusion(p: Platform) -> Vec<f64> {
+    let mut ctx = OpsContext::new(Config::new(p, AppCalib::CLOVERLEAF_2D).build_engine());
+    let app = Diffusion2D::new(&mut ctx, 48, 48, 1);
+    app.run(&mut ctx, 8, 2);
+    ctx.fetch(app.u)
+}
+
+#[test]
+fn diffusion_sharded_matches_untiled_bitexact() {
+    let reference = run_diffusion(Platform::KnlFlatDdr4);
+    for decomp in [DecompKind::OneD, DecompKind::TwoD] {
+        for ranks in [2u32, 4] {
+            let got = run_diffusion(sharded(ranks, decomp, true));
+            assert_eq!(reference, got, "u x{ranks} {}", decomp.label());
+            let knl = run_diffusion(sharded_knl(ranks, decomp));
+            assert_eq!(reference, knl, "u x{ranks} {} (KNL inner)", decomp.label());
+        }
+    }
+}
+
+#[test]
+fn no_overlap_ablation_keeps_numerics() {
+    let with = run_diffusion(sharded(4, DecompKind::OneD, true));
+    let without = run_diffusion(sharded(4, DecompKind::OneD, false));
+    assert_eq!(with, without);
+}
+
+/// The acceptance-criterion cell: CloverLeaf 2D at a modelled 48 GB on
+/// 4 explicitly-streamed NVLink GPUs completes and reports per-rank and
+/// aggregate metrics.
+#[test]
+fn cl2d_48gb_x4_reports_per_rank_metrics() {
+    let p = Config::parse_platform("gpu-explicit:nvlink:cyclic:x4").unwrap();
+    assert_eq!(p.ranks(), 4);
+    let (m, oom) = ops_oc::bench_support::run_cl2d(p, 8, 6144, 48.0, 2, 0);
+    assert!(!oom, "explicit streaming must fit 48 GB sharded");
+    assert_eq!(m.per_rank.len(), 4);
+    for (r, rs) in m.per_rank.iter().enumerate() {
+        assert!(rs.compute_s > 0.0, "rank {r} compute time");
+        assert!(rs.loop_bytes > 0, "rank {r} loop bytes");
+        assert!(rs.average_bandwidth_gbs() > 0.0, "rank {r} avg bw");
+        assert!(rs.exchange_bytes > 0, "rank {r} exchange bytes");
+    }
+    // aggregate weighted Average Bandwidth (§5.1) is well defined…
+    assert!(m.average_bandwidth_gbs() > 0.0);
+    // …and halo exchanges were injected into the clock.
+    assert!(m.halo_exchanges > 0);
+    assert!(m.halo_time_s > 0.0);
+    assert!(m.elapsed_s > 0.0);
+}
+
+#[test]
+fn sharding_shows_strong_scaling_and_overlap_gain() {
+    let run = |p: Platform| ops_oc::bench_support::run_cl2d(p, 8, 6144, 48.0, 2, 0).0;
+    let m1 = run(sharded(1, DecompKind::OneD, true));
+    let m4 = run(sharded(4, DecompKind::OneD, true));
+    let m4_no = run(sharded(4, DecompKind::OneD, false));
+    assert!(
+        m4.elapsed_s < m1.elapsed_s,
+        "strong scaling: x4 {} !< x1 {}",
+        m4.elapsed_s,
+        m1.elapsed_s
+    );
+    assert!(
+        m4.elapsed_s < m4_no.elapsed_s,
+        "overlap must beat the ablation: {} !< {}",
+        m4.elapsed_s,
+        m4_no.elapsed_s
+    );
+}
+
+#[test]
+fn opensbli_and_cl3d_run_sharded() {
+    // the remaining two apps complete under sharding (numerics parity for
+    // OpenSBLI/CL3D is covered by the cross-engine equivalence suite at
+    // rank granularity; here we assert the sharded path executes them)
+    let p = sharded(2, DecompKind::OneD, true);
+    let (m, oom) = ops_oc::bench_support::run_sbli_tall(p, 1, 24.0, 1);
+    assert!(!oom);
+    assert_eq!(m.per_rank.len(), 2);
+    let (m3, oom3) = ops_oc::bench_support::run_cl3d(p, [8, 8, 512], 24.0, 1, 0);
+    assert!(!oom3);
+    assert_eq!(m3.per_rank.len(), 2);
+}
