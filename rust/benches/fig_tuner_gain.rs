@@ -1,0 +1,98 @@
+//! Tuner-gain figure (extension): heuristic vs auto-tuned modelled
+//! performance across all three paper apps × tunable platforms.
+//!
+//! Per cell: run once with the seed `HBM/3`-style heuristic, once with
+//! `--tune`, and report effective bandwidth plus the tuner's own
+//! modelled speedup (Σ heuristic model time / Σ tuned model time). The
+//! never-worse guarantee means every speedup is ≥ 1.0×; the run asserts
+//! that, and that at least one cell is strictly > 1.0×.
+
+use ops_oc::bench_support::{run_cl2d_tuned, run_cl3d_tuned, run_sbli_tall_tuned, Figure};
+use ops_oc::coordinator::Config;
+use ops_oc::exec::Metrics;
+use ops_oc::tuner::TuneOpts;
+use std::time::Instant;
+
+const PLATFORMS: &[&str] = &[
+    "knl-cache-tiled",
+    "gpu-explicit:pcie:cyclic:prefetch",
+    "gpu-explicit:nvlink:cyclic:prefetch",
+    "gpu-unified:pcie:tiled:prefetch",
+    "gpu-explicit:nvlink:cyclic:prefetch:x4",
+];
+
+const APPS: &[&str] = &["cloverleaf2d", "cloverleaf3d", "opensbli"];
+
+fn run_cell(app: &str, spec: &str, tune: Option<TuneOpts>, gb: f64) -> Metrics {
+    let p = Config::parse_platform(spec).expect("bench spec");
+    let steps = 2;
+    let (m, oom) = match app {
+        "cloverleaf2d" => run_cl2d_tuned(p, tune, 8, 6144, gb, steps, 0),
+        "cloverleaf3d" => run_cl3d_tuned(p, tune, [8, 8, 6144], gb, steps, 0),
+        _ => run_sbli_tall_tuned(p, tune, 1, gb, steps),
+    };
+    assert!(!oom, "{app} on {spec} must fit out-of-core");
+    m
+}
+
+fn main() {
+    let t0 = Instant::now();
+    let gb = 48.0;
+    // half the default budget: unified-memory scoring is page-granular,
+    // so full-size sweeps add up
+    let tune = TuneOpts {
+        budget: 24,
+        ..TuneOpts::default()
+    };
+
+    let mut fig = Figure::new(
+        "Tuner gain: effective GB/s at 48 GB, heuristic vs tuned (x = app*platform cell)",
+        "effective GB/s (modelled)",
+    );
+    let s_heur = fig.add_series("heuristic");
+    let s_tuned = fig.add_series("tuned");
+
+    let mut strict_cells = 0usize;
+    let mut cells = 0usize;
+    println!(
+        "{:<14} {:<38} {:>10} {:>10} {:>9} {:>7}",
+        "app", "platform", "heur GB/s", "tuned GB/s", "model x", "evals"
+    );
+    for (ai, app) in APPS.iter().enumerate() {
+        for (pi, spec) in PLATFORMS.iter().enumerate() {
+            let x = (ai * PLATFORMS.len() + pi) as f64;
+            let heur = run_cell(app, spec, None, gb);
+            let tuned = run_cell(app, spec, Some(tune), gb);
+            let speedup = tuned.tune_model_speedup();
+            assert!(
+                speedup >= 1.0 - 1e-12,
+                "never-worse violated on {app}/{spec}: {speedup}"
+            );
+            if speedup > 1.0 + 1e-9 {
+                strict_cells += 1;
+            }
+            cells += 1;
+            println!(
+                "{:<14} {:<38} {:>10.1} {:>10.1} {:>8.3}x {:>7}",
+                app,
+                spec,
+                heur.effective_bandwidth_gbs(),
+                tuned.effective_bandwidth_gbs(),
+                speedup,
+                tuned.tune_evals,
+            );
+            fig.push(s_heur, x, Some(heur.effective_bandwidth_gbs()));
+            fig.push(s_tuned, x, Some(tuned.effective_bandwidth_gbs()));
+        }
+    }
+    println!();
+    println!("{}", fig.render());
+    println!(
+        "strictly improved cells: {strict_cells}/{cells} (all cells >= 1.0x by construction)"
+    );
+    assert!(
+        strict_cells >= 1,
+        "expected the tuner to strictly beat the heuristic somewhere"
+    );
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -161,9 +161,34 @@ pub fn model_scale(base: u64, target_gb: f64) -> u64 {
     ((target_gb * 1e9 / base as f64).round() as u64).max(1)
 }
 
+/// Optionally wrap a cell's config in the auto-tuner. `None` keeps the
+/// heuristic planner. **Panics** when `tune` is `Some` on a platform
+/// with no tile plan — the `run_*_tuned` cell runners inherit this
+/// contract, so callers must pre-validate (the CLI does, via
+/// `Config::parse_spec` / `with_tuning`).
+fn apply_tuning(cfg: Config, tune: Option<crate::tuner::TuneOpts>) -> Config {
+    match tune {
+        Some(t) => cfg.with_tuning(t).expect("platform must be tunable"),
+        None => cfg,
+    }
+}
+
 /// One CloverLeaf 2D cell. Returns (metrics, oom).
 pub fn run_cl2d(
     platform: Platform,
+    nx: usize,
+    ny: usize,
+    target_gb: f64,
+    steps: usize,
+    summary_every: usize,
+) -> (Metrics, bool) {
+    run_cl2d_tuned(platform, None, nx, ny, target_gb, steps, summary_every)
+}
+
+/// [`run_cl2d`] with an optional auto-tuner.
+pub fn run_cl2d_tuned(
+    platform: Platform,
+    tune: Option<crate::tuner::TuneOpts>,
     nx: usize,
     ny: usize,
     target_gb: f64,
@@ -174,7 +199,7 @@ pub fn run_cl2d(
         CloverLeaf2D::new(ctx, nx, ny, 1);
     });
     let scale = model_scale(base, target_gb);
-    let cfg = Config::new(platform, AppCalib::CLOVERLEAF_2D);
+    let cfg = apply_tuning(Config::new(platform, AppCalib::CLOVERLEAF_2D), tune);
     let mut ctx = OpsContext::new(cfg.build_engine());
     let mut app = CloverLeaf2D::new(&mut ctx, nx, ny, scale);
     app.run(&mut ctx, steps, summary_every);
@@ -189,11 +214,23 @@ pub fn run_cl3d(
     steps: usize,
     summary_every: usize,
 ) -> (Metrics, bool) {
+    run_cl3d_tuned(platform, None, n, target_gb, steps, summary_every)
+}
+
+/// [`run_cl3d`] with an optional auto-tuner.
+pub fn run_cl3d_tuned(
+    platform: Platform,
+    tune: Option<crate::tuner::TuneOpts>,
+    n: [usize; 3],
+    target_gb: f64,
+    steps: usize,
+    summary_every: usize,
+) -> (Metrics, bool) {
     let base = base_bytes(|ctx| {
         CloverLeaf3D::new(ctx, n[0], n[1], n[2], 1);
     });
     let scale = model_scale(base, target_gb);
-    let cfg = Config::new(platform, AppCalib::CLOVERLEAF_3D);
+    let cfg = apply_tuning(Config::new(platform, AppCalib::CLOVERLEAF_3D), tune);
     let mut ctx = OpsContext::new(cfg.build_engine());
     let mut app = CloverLeaf3D::new(&mut ctx, n[0], n[1], n[2], scale);
     app.run(&mut ctx, steps, summary_every);
@@ -242,12 +279,23 @@ pub fn run_sbli_tall(
     target_gb: f64,
     chains: usize,
 ) -> (Metrics, bool) {
+    run_sbli_tall_tuned(platform, None, steps_per_chain, target_gb, chains)
+}
+
+/// [`run_sbli_tall`] with an optional auto-tuner.
+pub fn run_sbli_tall_tuned(
+    platform: Platform,
+    tune: Option<crate::tuner::TuneOpts>,
+    steps_per_chain: usize,
+    target_gb: f64,
+    chains: usize,
+) -> (Metrics, bool) {
     let n = [24usize, 24, 1024];
     let base = base_bytes(|ctx| {
         OpenSbli::new_aniso(ctx, n, steps_per_chain, 1);
     });
     let scale = model_scale(base, target_gb);
-    let cfg = Config::new(platform, AppCalib::OPENSBLI);
+    let cfg = apply_tuning(Config::new(platform, AppCalib::OPENSBLI), tune);
     let mut ctx = OpsContext::new(cfg.build_engine());
     let mut app = OpenSbli::new_aniso(&mut ctx, n, steps_per_chain, scale);
     app.run(&mut ctx, chains);

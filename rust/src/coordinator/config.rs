@@ -28,6 +28,7 @@ use crate::memory::{
     AppCalib, GpuCalib, GpuExplicitEngine, GpuOpts, KnlCalib, KnlEngine, Link, PlainEngine,
     UnifiedCalib, UnifiedEngine,
 };
+use crate::tuner::{TuneOpts, TunedEngine, TunerTarget};
 
 /// Per-rank platforms a sharded configuration can host (each rank owns a
 /// full out-of-core memory engine).
@@ -245,6 +246,9 @@ pub struct Config {
     pub knl: KnlCalib,
     pub gpu: GpuCalib,
     pub um: UnifiedCalib,
+    /// When set, wrap the engine in the cost-model auto-tuner
+    /// ([`crate::tuner`]); `None` runs the seed heuristics.
+    pub tune: Option<TuneOpts>,
 }
 
 /// A `x<N>` ranks token (`x4` → 4).
@@ -262,6 +266,75 @@ impl Config {
             knl: KnlCalib::default(),
             gpu: GpuCalib::default(),
             um: UnifiedCalib::default(),
+            tune: None,
+        }
+    }
+
+    /// Enable the auto-tuner. Errors when the platform has no tile plan
+    /// to search (flat modes, resident baselines, untiled cache mode).
+    pub fn with_tuning(mut self, opts: TuneOpts) -> crate::Result<Self> {
+        crate::ensure!(
+            self.tuner_target().is_some(),
+            "platform {:?} is not tunable (tile plans exist on knl-cache-tiled, \
+             gpu-explicit, gpu-unified and their sharded forms)",
+            self.platform.label()
+        );
+        self.tune = Some(opts);
+        Ok(self)
+    }
+
+    /// The tuner's view of this platform, when it is tunable.
+    pub fn tuner_target(&self) -> Option<TunerTarget> {
+        fn inner_target(cfg: &Config, p: Platform) -> Option<TunerTarget> {
+            match p {
+                Platform::KnlCacheTiled => Some(TunerTarget::Knl {
+                    calib: cfg.knl.clone(),
+                    app: cfg.app,
+                }),
+                Platform::GpuExplicit {
+                    link,
+                    cyclic,
+                    prefetch,
+                } => Some(TunerTarget::GpuExplicit {
+                    calib: cfg.gpu.clone(),
+                    app: cfg.app,
+                    link,
+                    opts: GpuOpts {
+                        cyclic,
+                        prefetch,
+                        slots: 3,
+                    },
+                }),
+                Platform::GpuUnified {
+                    link,
+                    tiled,
+                    prefetch,
+                } => Some(TunerTarget::GpuUnified {
+                    gpu: cfg.gpu.clone(),
+                    um: cfg.um.clone(),
+                    app: cfg.app,
+                    link,
+                    tiled,
+                    prefetch,
+                }),
+                _ => None,
+            }
+        }
+        match self.platform {
+            Platform::Sharded {
+                ranks,
+                inner,
+                link,
+                decomp,
+                overlap,
+            } => Some(TunerTarget::Sharded {
+                inner: Box::new(inner_target(self, inner.to_platform())?),
+                ranks,
+                kind: decomp,
+                link,
+                overlap,
+            }),
+            p => inner_target(self, p),
         }
     }
 
@@ -369,8 +442,50 @@ impl Config {
         Ok(platform)
     }
 
-    /// Instantiate the memory engine for this configuration.
+    /// Parse a platform spec that may additionally carry the `tuned`
+    /// token (position-independent): `gpu-explicit:nvlink:tuned`,
+    /// `knl-cache-tiled:tuned:x4:ib`. Returns the platform plus whether
+    /// tuning was requested; `tuned` on a platform with no tile plan to
+    /// search is rejected. [`Config::parse_platform`] itself keeps the
+    /// strict grammar (it rejects `tuned` like any unknown token).
+    pub fn parse_spec(spec: &str) -> crate::Result<(Platform, bool)> {
+        let mut tuned = false;
+        let rest: Vec<&str> = spec
+            .split(':')
+            .filter(|t| {
+                if *t == "tuned" {
+                    tuned = true;
+                    false
+                } else {
+                    true
+                }
+            })
+            .collect();
+        let platform = Self::parse_platform(&rest.join(":"))?;
+        if tuned {
+            // validate tunability with a throwaway default-calib config
+            Config::new(platform, AppCalib::CLOVERLEAF_2D).with_tuning(TuneOpts::default())?;
+        }
+        Ok((platform, tuned))
+    }
+
+    /// Instantiate the memory engine for this configuration. With
+    /// [`Config::tune`] set (and a tunable platform) the engine is
+    /// wrapped in the cost-model auto-tuner.
     pub fn build_engine(&self) -> Box<dyn Engine> {
+        if let Some(opts) = self.tune {
+            if let Some(target) = self.tuner_target() {
+                return Box::new(TunedEngine::new(target, opts));
+            }
+            // `tune` is a pub field, so it can be set without going
+            // through `with_tuning`'s validation; surface the misuse in
+            // debug builds instead of silently running untuned.
+            debug_assert!(
+                false,
+                "Config.tune set on non-tunable platform {:?}",
+                self.platform.label()
+            );
+        }
         match self.platform {
             Platform::KnlFlatDdr4 => {
                 Box::new(PlainEngine::knl_flat_ddr4(self.app.knl_ddr4))
@@ -432,6 +547,7 @@ impl Config {
                     knl: self.knl.clone(),
                     gpu: self.gpu.clone(),
                     um: self.um.clone(),
+                    tune: None,
                 };
                 let engines = (0..ranks.max(1)).map(|_| rank_cfg.build_engine()).collect();
                 Box::new(ShardedEngine::new(engines, decomp, link, overlap))
@@ -580,6 +696,54 @@ mod tests {
         assert!(Config::parse_platform("gpu-explicit:x4:ethernet").is_err());
         assert!(Config::parse_platform("gpu-explicit:x0").is_err());
         assert!(Config::parse_platform("gpu-explicit:x999").is_err());
+    }
+
+    #[test]
+    fn tuned_spec_token_parses_and_validates() {
+        let (p, tuned) = Config::parse_spec("gpu-explicit:nvlink:cyclic:tuned").unwrap();
+        assert!(tuned);
+        assert_eq!(
+            p,
+            Platform::GpuExplicit {
+                link: Link::NvLink,
+                cyclic: true,
+                prefetch: false
+            }
+        );
+        let (p2, t2) = Config::parse_spec("knl-cache-tiled").unwrap();
+        assert!(!t2);
+        assert_eq!(p2, Platform::KnlCacheTiled);
+        // the token composes with sharding, position-independently
+        let (p3, t3) = Config::parse_spec("knl-cache-tiled:tuned:x4:ib").unwrap();
+        assert!(t3);
+        assert_eq!(p3.ranks(), 4);
+        // platforms with no tile plan reject it
+        assert!(Config::parse_spec("gpu-baseline:tuned").is_err());
+        assert!(Config::parse_spec("knl-cache:tuned").is_err());
+        // the strict grammar itself still rejects it as unknown
+        assert!(Config::parse_platform("gpu-explicit:tuned").is_err());
+    }
+
+    #[test]
+    fn tuned_engine_wraps_tunable_platforms() {
+        let cfg = Config::new(Platform::KnlCacheTiled, AppCalib::CLOVERLEAF_2D)
+            .with_tuning(crate::tuner::TuneOpts::default())
+            .unwrap();
+        assert!(
+            cfg.build_engine().describe().starts_with("auto-tuned"),
+            "{}",
+            cfg.build_engine().describe()
+        );
+        let bad = Config::new(Platform::KnlFlatDdr4, AppCalib::CLOVERLEAF_2D)
+            .with_tuning(crate::tuner::TuneOpts::default());
+        assert!(bad.is_err());
+        // sharded platforms tune through to their inner engines
+        let p = Config::parse_platform("gpu-explicit:pcie:x4").unwrap();
+        let cfg = Config::new(p, AppCalib::CLOVERLEAF_2D)
+            .with_tuning(crate::tuner::TuneOpts::default())
+            .unwrap();
+        assert!(cfg.tuner_target().is_some());
+        assert!(cfg.build_engine().describe().starts_with("auto-tuned"));
     }
 
     #[test]

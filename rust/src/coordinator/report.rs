@@ -29,11 +29,15 @@ pub fn json_record(
     oom: bool,
 ) -> String {
     let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let tuned = m.tune_evals + m.tune_cache_hits > 0;
     format!(
         concat!(
             "{{\"app\":\"{}\",\"platform\":\"{}\",\"ranks\":{},\"size_gb\":{:.3},",
             "\"oom\":{},\"runtime_s\":{:.6},\"avg_bandwidth_gbs\":{:.3},",
-            "\"eff_bandwidth_gbs\":{:.3},\"halo_time_s\":{:.6},\"tiles\":{}}}"
+            "\"eff_bandwidth_gbs\":{:.3},\"halo_time_s\":{:.6},\"tiles\":{},",
+            "\"tuned\":{},\"tune_evals\":{},\"tune_cache_hits\":{},",
+            "\"tuned_model_s\":{:.6},\"heuristic_model_s\":{:.6},",
+            "\"tune_model_speedup\":{:.4}}}"
         ),
         esc(app),
         esc(platform),
@@ -45,6 +49,12 @@ pub fn json_record(
         m.effective_bandwidth_gbs(),
         m.halo_time_s,
         m.tiles,
+        tuned,
+        m.tune_evals,
+        m.tune_cache_hits,
+        m.tuned_model_s,
+        m.heuristic_model_s,
+        m.tune_model_speedup(),
     )
 }
 
@@ -108,6 +118,14 @@ pub fn print_summary(label: &str, problem_bytes: u64, m: &Metrics, oom: bool) {
     }
     if m.page_faults > 0 {
         println!("  page faults         : {}", m.page_faults);
+    }
+    if m.tune_evals + m.tune_cache_hits > 0 {
+        println!(
+            "  auto-tuner          : {:.2}x modelled speedup vs heuristic ({} evals, {} cache hits)",
+            m.tune_model_speedup(),
+            m.tune_evals,
+            m.tune_cache_hits
+        );
     }
     if m.halo_exchanges > 0 {
         println!(
@@ -175,6 +193,26 @@ mod tests {
         assert!(j.contains("\\\"2d"));
         assert!(j.contains("\"avg_bandwidth_gbs\":200.000"));
         assert!(j.contains("\"oom\":false"));
+        assert!(j.contains("\"tuned\":false"));
+        assert!(j.contains("\"tune_model_speedup\":1.0000"));
+    }
+
+    #[test]
+    fn json_record_reports_tuner_fields() {
+        let mut m = Metrics::new();
+        m.record_loop("k", 1_000_000_000, 0.01);
+        m.elapsed_s = 0.02;
+        m.tune_evals = 32;
+        m.tune_cache_hits = 3;
+        m.tuned_model_s = 0.018;
+        m.heuristic_model_s = 0.027;
+        let j = json_record("a", "p", 1, 6.0, &m, false);
+        assert!(j.contains("\"tuned\":true"));
+        assert!(j.contains("\"tune_evals\":32"));
+        assert!(j.contains("\"tune_cache_hits\":3"));
+        assert!(j.contains("\"tuned_model_s\":0.018000"));
+        assert!(j.contains("\"heuristic_model_s\":0.027000"));
+        assert!(j.contains("\"tune_model_speedup\":1.5000"));
     }
 
     #[test]

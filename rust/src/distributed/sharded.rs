@@ -25,28 +25,8 @@
 use super::decomp::{decompose, DecompKind, Decomposition};
 use super::halo::HaloExchange;
 use super::interconnect::Interconnect;
-use crate::exec::{Engine, Executor, Metrics, RankStat, World};
-use crate::ops::{DataStore, Dataset, LoopInst, Range3, Reduction};
-
-/// Executor that runs nothing — used for the per-rank timing replay so
-/// loop bodies execute exactly once (in the lockstep numerics pass).
-struct ModelExecutor;
-
-impl Executor for ModelExecutor {
-    fn run_loop(
-        &mut self,
-        _l: &LoopInst,
-        _range: Range3,
-        _datasets: &[Dataset],
-        _store: &mut DataStore,
-        _reds: &mut [Reduction],
-    ) {
-    }
-
-    fn name(&self) -> &'static str {
-        "model"
-    }
-}
+use crate::exec::{Engine, Executor, Metrics, NullExecutor, RankStat, World};
+use crate::ops::{Dataset, LoopInst, Reduction};
 
 /// N modelled ranks, each owning an inner memory engine.
 pub struct ShardedEngine {
@@ -148,7 +128,7 @@ impl Engine for ShardedEngine {
                         ds.size[dim] = (ds.size[dim] * owned / global).max(1);
                     }
                 }
-                let mut model = ModelExecutor;
+                let mut model = NullExecutor;
                 let mut no_reds: Vec<Reduction> = vec![];
                 let mut rank_world = World {
                     datasets: &rank_datasets,

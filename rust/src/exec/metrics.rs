@@ -78,6 +78,16 @@ pub struct Metrics {
     pub chains: u64,
     /// Number of tiles executed (0 if untiled).
     pub tiles: u64,
+    /// Auto-tuner: cost-model evaluations spent (0 when tuning is off).
+    pub tune_evals: u64,
+    /// Auto-tuner: chains whose plan came from the tuned-plan cache.
+    pub tune_cache_hits: u64,
+    /// Auto-tuner: Σ modelled (cold-engine) chain time of the chosen
+    /// plans, seconds.
+    pub tuned_model_s: f64,
+    /// Auto-tuner: Σ modelled chain time of the `HBM/3` heuristic plans
+    /// — per chain, `tuned_model_s` never exceeds this.
+    pub heuristic_model_s: f64,
     /// Per-kernel-name breakdown.
     pub per_loop: HashMap<String, LoopStat>,
     /// Per-rank breakdown of sharded execution (empty when unsharded).
@@ -118,6 +128,18 @@ impl Metrics {
         }
     }
 
+    /// Modelled speedup of tuned plans over the `HBM/3` heuristic:
+    /// Σ heuristic model time / Σ tuned model time. 1.0 when tuning is
+    /// off (or everywhere chose the heuristic); never below 1.0 by the
+    /// tuner's never-worse guarantee.
+    pub fn tune_model_speedup(&self) -> f64 {
+        if self.tuned_model_s > 0.0 {
+            self.heuristic_model_s / self.tuned_model_s
+        } else {
+            1.0
+        }
+    }
+
     /// MCDRAM cache hit rate in `[0, 1]` (1.0 when no cache modelled).
     pub fn cache_hit_rate(&self) -> f64 {
         let total = self.cache_hits + self.cache_misses;
@@ -143,6 +165,10 @@ impl Metrics {
         self.halo_exchanges += other.halo_exchanges;
         self.chains += other.chains;
         self.tiles += other.tiles;
+        self.tune_evals += other.tune_evals;
+        self.tune_cache_hits += other.tune_cache_hits;
+        self.tuned_model_s += other.tuned_model_s;
+        self.heuristic_model_s += other.heuristic_model_s;
         for (k, v) in &other.per_loop {
             let st = self.per_loop.entry(k.clone()).or_default();
             st.invocations += v.invocations;

@@ -46,6 +46,28 @@ pub trait Executor {
     fn name(&self) -> &'static str;
 }
 
+/// Executor that runs nothing. Used wherever a chain must be *priced*
+/// without touching data: the sharded engine's per-rank timing replay
+/// and the auto-tuner's candidate scoring both drive engines through
+/// this so loop bodies execute exactly once, in the real numerics pass.
+pub struct NullExecutor;
+
+impl Executor for NullExecutor {
+    fn run_loop(
+        &mut self,
+        _l: &LoopInst,
+        _range: Range3,
+        _datasets: &[Dataset],
+        _store: &mut DataStore,
+        _reds: &mut [Reduction],
+    ) {
+    }
+
+    fn name(&self) -> &'static str {
+        "null"
+    }
+}
+
 /// A memory engine: executes a full lazily-collected loop chain in some
 /// legal order while advancing the simulated clock and metrics.
 pub trait Engine {

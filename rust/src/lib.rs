@@ -45,6 +45,16 @@
 //! [`distributed::ShardedEngine`]. Select it from the CLI with the `xN`
 //! platform-spec suffix (e.g. `gpu-explicit:nvlink:cyclic:x4:ib`) or the
 //! `--ranks` flag — see `rust/README.md` for the full grammar.
+//!
+//! ## Auto-tuning
+//!
+//! The [`tuner`] subsystem replaces the engines' fixed `HBM/3`-style
+//! tile heuristic with a deterministic, seeded search over tile counts
+//! and the §4.1 toggles, scored on the engines' own discrete-event
+//! clocks and memoised in a process-wide plan cache. Tuned plans are
+//! guaranteed to never *model* slower than the heuristic and leave
+//! numerics bit-exact. Enable with `--tune`, a `tuned` spec token, or
+//! [`coordinator::Config::with_tuning`].
 
 pub mod apps;
 pub mod bench_support;
@@ -57,6 +67,7 @@ pub mod memory;
 pub mod ops;
 pub mod runtime;
 pub mod tiling;
+pub mod tuner;
 
 pub use coordinator::config::{Config, Platform};
 pub use ops::api::OpsContext;

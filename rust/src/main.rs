@@ -18,9 +18,12 @@
 //!   (interconnect), `1d|2d` (decomposition) and `no-overlap`; or pass
 //!   `--ranks N` / a bare `xN` argument. Unknown tokens are rejected.
 //! `--json` emits one machine-readable metrics record per run cell.
+//! `--tune` / `--tune-budget E` (or a `tuned` spec token) enable the
+//!   cost-model tile-plan auto-tuner on platforms with a tile plan.
 
 use ops_oc::bench_support::{self, Figure};
 use ops_oc::coordinator::{json_record, print_summary, Config, Platform};
+use ops_oc::tuner::TuneOpts;
 use std::process::exit;
 
 struct Args {
@@ -32,6 +35,8 @@ struct Args {
     chain_steps: usize,
     ranks: u32,
     json: bool,
+    tune: bool,
+    tune_budget: u32,
 }
 
 fn parse_args() -> Args {
@@ -44,6 +49,8 @@ fn parse_args() -> Args {
         chain_steps: 1,
         ranks: 1,
         json: false,
+        tune: false,
+        tune_budget: TuneOpts::default().budget,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -53,8 +60,9 @@ fn parse_args() -> Args {
                 a.cmd = argv[i].trim_start_matches('-').to_string()
             }
             "--json" => a.json = true,
+            "--tune" => a.tune = true,
             flag @ ("--app" | "--platform" | "--size-gb" | "--steps" | "--chain-steps"
-            | "--ranks") => {
+            | "--ranks" | "--tune-budget") => {
                 i += 1;
                 let Some(v) = argv.get(i) else {
                     eprintln!("missing value for {flag}");
@@ -77,6 +85,18 @@ fn parse_args() -> Args {
                         Ok(n) if n >= 1 => a.ranks = n,
                         _ => {
                             eprintln!("bad rank count {v:?} (expected 1..=64)");
+                            exit(2);
+                        }
+                    },
+                    // a budget implies tuning; 0 is rejected (the
+                    // heuristic always costs one evaluation)
+                    "--tune-budget" => match v.parse::<u32>() {
+                        Ok(n) if n >= 1 => {
+                            a.tune = true;
+                            a.tune_budget = n;
+                        }
+                        _ => {
+                            eprintln!("bad tune budget {v:?} (expected >= 1)");
                             exit(2);
                         }
                     },
@@ -104,32 +124,53 @@ fn parse_args() -> Args {
     a
 }
 
-fn parse_platform_or_exit(a: &Args) -> Platform {
-    let platform = Config::parse_platform(&a.platform).unwrap_or_else(|e| {
+/// Parse the platform spec (including a possible `tuned` token) and
+/// apply `--ranks`. Returns the platform plus the resolved tuning
+/// options (spec token or `--tune`/`--tune-budget`).
+fn parse_platform_or_exit(a: &Args) -> (Platform, Option<TuneOpts>) {
+    let (platform, spec_tuned) = Config::parse_spec(&a.platform).unwrap_or_else(|e| {
         eprintln!("{e}");
         exit(2);
     });
-    if a.ranks > 1 {
+    let platform = if a.ranks > 1 {
         platform.sharded(a.ranks).unwrap_or_else(|e| {
             eprintln!("{e}");
             exit(2);
         })
     } else {
         platform
+    };
+    let tune = (a.tune || spec_tuned).then(|| TuneOpts {
+        budget: a.tune_budget,
+        ..TuneOpts::default()
+    });
+    // `tuned` in the spec was already validated by parse_spec (and
+    // sharding a tunable platform keeps it tunable); only the bare
+    // `--tune`/`--tune-budget` path still needs the typed check here
+    // (e.g. `--tune` on gpu-baseline).
+    if tune.is_some() && !spec_tuned {
+        if let Err(e) = Config::new(platform, ops_oc::memory::AppCalib::CLOVERLEAF_2D)
+            .with_tuning(TuneOpts::default())
+        {
+            eprintln!("{e}");
+            exit(2);
+        }
     }
+    (platform, tune)
 }
 
 fn run_cell(
     app: &str,
     p: Platform,
+    tune: Option<TuneOpts>,
     gb: f64,
     steps: usize,
     chain_steps: usize,
 ) -> (ops_oc::exec::Metrics, bool) {
     match app {
-        "cloverleaf2d" => bench_support::run_cl2d(p, 8, 6144, gb, steps, 0),
-        "cloverleaf3d" => bench_support::run_cl3d(p, [8, 8, 6144], gb, steps, 0),
-        "opensbli" => bench_support::run_sbli_tall(p, chain_steps, gb, steps.max(1)),
+        "cloverleaf2d" => bench_support::run_cl2d_tuned(p, tune, 8, 6144, gb, steps, 0),
+        "cloverleaf3d" => bench_support::run_cl3d_tuned(p, tune, [8, 8, 6144], gb, steps, 0),
+        "opensbli" => bench_support::run_sbli_tall_tuned(p, tune, chain_steps, gb, steps.max(1)),
         other => {
             eprintln!("unknown app {other:?} (cloverleaf2d|cloverleaf3d|opensbli)");
             exit(2);
@@ -144,9 +185,9 @@ fn main() {
             println!("ops-oc — out-of-core stencil computations (paper reproduction)");
             println!("commands:");
             println!("  run   --app A --platform P [--size-gb G] [--steps N] [--chain-steps C]");
-            println!("        [--ranks R | xR] [--json]");
-            println!("  sweep --app A --platform P [--json]        (problem-size sweep)");
-            println!("  list                                       (apps + platform specs)");
+            println!("        [--ranks R | xR] [--tune] [--tune-budget E] [--json]");
+            println!("  sweep --app A --platform P [--tune] [--json]  (problem-size sweep)");
+            println!("  list                                          (apps + platform specs)");
         }
         "list" => {
             println!("apps      : cloverleaf2d, cloverleaf3d, opensbli");
@@ -156,19 +197,23 @@ fn main() {
             println!("sharding  : append :xN [:peer|:nvlink|:ib] [:1d|:2d] [:no-overlap]");
             println!("            to knl-cache-tiled / gpu-explicit / gpu-unified,");
             println!("            or pass --ranks N (interconnect defaults to the host link)");
+            println!("tuning    : append :tuned (or pass --tune / --tune-budget E) on any");
+            println!("            platform with a tile plan; plans never model slower than");
+            println!("            the HBM/3 heuristic and numerics stay bit-exact");
         }
         "run" => {
-            let platform = parse_platform_or_exit(&a);
+            let (platform, tune) = parse_platform_or_exit(&a);
             if !a.json {
                 println!(
-                    "running {} on {} at {:.0} GB modelled ({} steps)\n",
+                    "running {} on {}{} at {:.0} GB modelled ({} steps)\n",
                     a.app,
                     platform.label(),
+                    if tune.is_some() { " [tuned]" } else { "" },
                     a.size_gb,
                     a.steps
                 );
             }
-            let (m, oom) = run_cell(&a.app, platform, a.size_gb, a.steps, a.chain_steps);
+            let (m, oom) = run_cell(&a.app, platform, tune, a.size_gb, a.steps, a.chain_steps);
             if a.json {
                 println!(
                     "{}",
@@ -184,15 +229,20 @@ fn main() {
             }
         }
         "sweep" => {
-            let platform = parse_platform_or_exit(&a);
+            let (platform, tune) = parse_platform_or_exit(&a);
             let mut fig = Figure::new(
-                &format!("{} on {}", a.app, platform.label()),
+                &format!(
+                    "{} on {}{}",
+                    a.app,
+                    platform.label(),
+                    if tune.is_some() { " [tuned]" } else { "" }
+                ),
                 "effective GB/s (modelled)",
             );
             let s = fig.add_series(&platform.label());
             let mut records = Vec::new();
             for gb in bench_support::KNL_SIZES_GB {
-                let (m, oom) = run_cell(&a.app, platform, gb, a.steps, a.chain_steps);
+                let (m, oom) = run_cell(&a.app, platform, tune, gb, a.steps, a.chain_steps);
                 if a.json {
                     records.push(json_record(
                         &a.app,

@@ -18,7 +18,7 @@ use super::hierarchy::{AppCalib, GpuCalib, Link, GB};
 use super::plain::{chain_bw_norm, elem_bytes};
 use crate::exec::{Engine, World};
 use crate::ops::{DatasetId, LoopInst};
-use crate::tiling::plan::{plan_auto, TilePlan};
+use crate::tiling::plan::{PlanSource, TilePlan};
 use crate::tiling::dependency::chain_access_summary;
 
 /// §4.1 optimisation switches (read-only/write-first skipping is always
@@ -52,8 +52,9 @@ pub struct GpuExplicitEngine {
     pub app: AppCalib,
     pub link: Link,
     pub opts: GpuOpts,
-    /// Force a specific tile count (None = auto-size to HBM/3 slots).
-    pub force_tiles: Option<usize>,
+    /// Where tile plans come from (default: auto-size to HBM/3 slots;
+    /// the tuner injects `Fixed` counts here).
+    pub plan: PlanSource,
     /// Prefetch credit carried from the previous chain: overlap window
     /// (seconds) during which the next chain's first upload already ran.
     prefetch_credit: f64,
@@ -68,10 +69,19 @@ impl GpuExplicitEngine {
             app,
             link,
             opts,
-            force_tiles: None,
+            plan: PlanSource::Auto,
             prefetch_credit: 0.0,
             speculative_bytes: 0,
         }
+    }
+
+    /// The heuristic per-slot byte budget tiles are auto-sized to: an
+    /// equal HBM share per slot, with a little headroom for OPS
+    /// bookkeeping. Public so the tuner can seed its search from the
+    /// exact same number the engine uses.
+    pub fn slot_target(&self) -> u64 {
+        let nslots = self.opts.slots.clamp(2, 3) as f64;
+        (self.calib.hbm_bytes as f64 / nslots * 0.92) as u64
     }
 
     fn dev_bw(&self) -> f64 {
@@ -141,12 +151,19 @@ impl Engine for GpuExplicitEngine {
         world.metrics.chains += 1;
         // All slots must fit in HBM: target one slot at just under an
         // equal share (leave a little headroom for OPS bookkeeping).
-        let nslots = self.opts.slots.clamp(2, 3) as f64;
-        let slot_target = (self.calib.hbm_bytes as f64 / nslots * 0.92) as u64;
-        let plan = match self.force_tiles {
-            Some(n) => crate::tiling::plan::plan_chain(chain, world.datasets, world.stencils, n),
-            None => plan_auto(chain, world.datasets, world.stencils, slot_target),
-        };
+        let slot_target = self.slot_target();
+        let mut plan = self
+            .plan
+            .plan(chain, world.datasets, world.stencils, slot_target);
+        if matches!(self.plan, PlanSource::Fixed(_))
+            && plan.max_footprint_bytes(world.datasets) > slot_target
+        {
+            // A fixed tile count must still honour the slot-capacity
+            // contract (all slots resident in HBM). Over-budget requests
+            // fall back to auto sizing, so a tuner candidate can never
+            // score a win by overflowing device memory.
+            plan = PlanSource::Auto.plan(chain, world.datasets, world.stencils, slot_target);
+        }
         let nt = plan.num_tiles();
         world.metrics.tiles += nt as u64;
         let norm = chain_bw_norm(world, chain);
@@ -455,14 +472,51 @@ mod tests {
     }
 
     #[test]
+    fn fixed_plans_fall_back_when_over_capacity() {
+        let (datasets, stencils, _store, chain) = fixture(512);
+        let calib = GpuCalib {
+            hbm_bytes: SMALL_HBM,
+            ..GpuCalib::default()
+        };
+        let run_src = |plan_src: PlanSource| {
+            let mut store = DataStore::new();
+            datasets.iter().for_each(|d| store.alloc(d));
+            let mut reds = vec![];
+            let mut metrics = Metrics::new();
+            let mut exec = NativeExecutor::new();
+            let mut e = GpuExplicitEngine::new(calib.clone(), APP, Link::PciE, GpuOpts::default());
+            e.plan = plan_src;
+            let mut world = World {
+                datasets: &datasets,
+                stencils: &stencils,
+                store: &mut store,
+                reds: &mut reds,
+                metrics: &mut metrics,
+                exec: &mut exec,
+            };
+            e.run_chain(&chain, &mut world, true);
+            metrics
+        };
+        let auto = run_src(PlanSource::Auto);
+        let over = run_src(PlanSource::Fixed(1));
+        assert_eq!(
+            over.tiles, auto.tiles,
+            "an over-capacity fixed count must fall back to auto sizing"
+        );
+        let ok = run_src(PlanSource::Fixed(auto.tiles as usize + 2));
+        assert_eq!(ok.tiles, auto.tiles + 2, "feasible fixed counts are honoured");
+    }
+
+    #[test]
     fn slot_footprints_respect_capacity() {
         let (datasets, stencils, _, chain) = fixture(512);
-        let plan = plan_auto(
+        let plan = crate::tiling::plan::plan_auto(
             &chain,
             &datasets,
             &stencils,
             (SMALL_HBM as f64 / 3.0 * 0.92) as u64,
-        );
+        )
+        .unwrap();
         assert!(
             plan.max_footprint_bytes(&datasets) * 3 <= SMALL_HBM,
             "three slots must fit in HBM"

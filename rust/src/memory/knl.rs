@@ -7,7 +7,7 @@ use super::hierarchy::{AppCalib, KnlCalib};
 use super::plain::{chain_bw_norm, elem_bytes};
 use crate::exec::{Engine, World};
 use crate::ops::{LoopInst, Range3};
-use crate::tiling::plan::{pick_tile_dim, plan_auto};
+use crate::tiling::plan::{pick_tile_dim, PlanSource};
 
 /// MCDRAM-as-cache engine.
 pub struct KnlEngine {
@@ -17,6 +17,9 @@ pub struct KnlEngine {
     pub tiled: bool,
     /// Fraction of MCDRAM a tile footprint may occupy when tiling.
     pub tile_occupancy: f64,
+    /// Where tile plans come from (default: auto-size to the occupancy
+    /// target; the tuner injects `Fixed` counts here).
+    pub plan: PlanSource,
     cache: CacheSim,
     addr: Option<AddressMap>,
     halo: HaloModel,
@@ -34,9 +37,17 @@ impl KnlEngine {
             app,
             tiled,
             tile_occupancy: 0.15,
+            plan: PlanSource::Auto,
             cache,
             addr: None,
         }
+    }
+
+    /// The heuristic tile-footprint byte budget when tiling: a fixed
+    /// occupancy share of MCDRAM (direct-mapped conflicts make full
+    /// occupancy counterproductive). Public for the tuner's search seed.
+    pub fn tile_target(&self) -> u64 {
+        (self.calib.mcdram_bytes as f64 * self.tile_occupancy) as u64
     }
 
     /// Time for one loop execution over `range`, driving the cache
@@ -115,8 +126,9 @@ impl Engine for KnlEngine {
         }
 
         // Tiled: size tiles to MCDRAM and run the skewed schedule.
-        let target = (self.calib.mcdram_bytes as f64 * self.tile_occupancy) as u64;
-        let plan = plan_auto(chain, world.datasets, world.stencils, target);
+        let plan = self
+            .plan
+            .plan(chain, world.datasets, world.stencils, self.tile_target());
         world.metrics.tiles += plan.num_tiles() as u64;
         for tile in &plan.tiles {
             for (li, r) in tile.loop_ranges.iter().enumerate() {

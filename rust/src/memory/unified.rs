@@ -8,7 +8,7 @@ use super::cache_sim::AddressMap;
 use super::plain::{chain_bw_norm, elem_bytes};
 use crate::exec::{Engine, World};
 use crate::ops::{LoopInst, Range3};
-use crate::tiling::plan::{pick_tile_dim, plan_auto};
+use crate::tiling::plan::{pick_tile_dim, PlanSource};
 use std::collections::{BTreeMap, HashMap};
 
 /// Exact LRU set of resident pages: page → last-use tick, plus an order
@@ -60,6 +60,9 @@ pub struct UnifiedEngine {
     pub tiled: bool,
     /// Issue bulk prefetches per tile instead of relying on faults.
     pub prefetch: bool,
+    /// Where tile plans come from when tiled (default: auto-size to the
+    /// HBM occupancy target; the tuner injects `Fixed` counts here).
+    pub plan: PlanSource,
     resident: ResidentSet,
     addr: Option<AddressMap>,
 }
@@ -80,9 +83,17 @@ impl UnifiedEngine {
             link,
             tiled,
             prefetch,
+            plan: PlanSource::Auto,
             resident: ResidentSet::default(),
             addr: None,
         }
+    }
+
+    /// The heuristic tile-footprint byte budget when tiling: most of HBM,
+    /// leaving room for the driver's own residency bookkeeping. Public
+    /// for the tuner's search seed.
+    pub fn tile_target(&self) -> u64 {
+        (self.gpu.hbm_bytes as f64 * 0.8) as u64
     }
 
     fn cap_pages(&self) -> u64 {
@@ -162,8 +173,9 @@ impl Engine for UnifiedEngine {
 
         // Tiled: tiles sized to HBM; with prefetch, each tile's footprint
         // is bulk-moved while the previous tile computes.
-        let target = (self.gpu.hbm_bytes as f64 * 0.8) as u64;
-        let plan = plan_auto(chain, world.datasets, world.stencils, target);
+        let plan = self
+            .plan
+            .plan(chain, world.datasets, world.stencils, self.tile_target());
         world.metrics.tiles += plan.num_tiles() as u64;
         let oversub =
             crate::tiling::plan::chain_bytes(chain, world.datasets) > self.gpu.hbm_bytes;

@@ -18,4 +18,4 @@ pub mod plan;
 
 pub use dependency::{chain_access_summary, compute_shifts, DatChainInfo};
 pub use footprint::{DatFootprint, Interval};
-pub use plan::{plan_auto, plan_chain, Tile, TilePlan};
+pub use plan::{plan_auto, plan_chain, PlanSource, Tile, TilePlan};

@@ -155,7 +155,9 @@ pub fn chain_bytes(chain: &[LoopInst], datasets: &[Dataset]) -> u64 {
     total
 }
 
-/// Build the plan for a fixed number of tiles.
+/// Build the plan for a fixed number of tiles (clamped to `[1, extent]`,
+/// so any requested count — including `usize::MAX` for "single-plane
+/// tiles" — degenerates gracefully).
 pub fn plan_chain(
     chain: &[LoopInst],
     datasets: &[Dataset],
@@ -177,7 +179,7 @@ pub fn plan_chain(
         .max()
         .unwrap_or(1);
     let extent = (ghi - glo).max(1);
-    let t = (num_tiles.max(1) as isize).min(extent) as usize;
+    let t = num_tiles.clamp(1, extent as usize);
 
     let mut boundaries = Vec::with_capacity(t + 1);
     for i in 0..=t {
@@ -243,14 +245,28 @@ pub fn plan_chain(
 }
 
 /// Build a plan whose largest tile footprint fits `target_bytes`,
-/// increasing the tile count geometrically until it does (or until tiles
-/// are single planes wide — the practical minimum).
+/// increasing the tile count geometrically until it does.
+///
+/// Degenerate inputs are typed [`crate::errors`] errors rather than
+/// panics or silently-infeasible plans:
+///
+/// * an **empty chain** cannot be tiled;
+/// * a **zero slot target** leaves no fast-memory budget at all (a chain
+///   that touches no datasets is trivially a single tile and is accepted
+///   before this check);
+/// * a target **smaller than one halo-widened slab** — even single-plane
+///   tiles exceed it, so no legal plan can meet the budget.
+///
+/// Callers that want the seed's old best-effort behaviour on a degenerate
+/// target (stream at the single-plane floor) should go through
+/// [`PlanSource::plan`], which encodes exactly that fallback.
 pub fn plan_auto(
     chain: &[LoopInst],
     datasets: &[Dataset],
     stencils: &[Stencil],
     target_bytes: u64,
-) -> TilePlan {
+) -> crate::Result<TilePlan> {
+    crate::ensure!(!chain.is_empty(), "cannot tile an empty loop chain");
     let tile_dim = pick_tile_dim(chain);
     let glo = chain
         .iter()
@@ -275,8 +291,16 @@ pub fn plan_auto(
             }
         }
     }
+    if plane_bytes == 0 {
+        // The chain touches no datasets: nothing to stream, one tile.
+        return Ok(plan_chain(chain, datasets, stencils, 1));
+    }
+    crate::ensure!(
+        target_bytes > 0,
+        "slot target is zero: no fast-memory budget to size tiles against"
+    );
     let total = plane_bytes * extent;
-    let mut n = if target_bytes == 0 || total <= target_bytes {
+    let mut n = if total <= target_bytes {
         1
     } else {
         total.div_ceil(target_bytes) as usize
@@ -285,10 +309,59 @@ pub fn plan_auto(
     loop {
         let plan = plan_chain(chain, datasets, stencils, n);
         let maxfp = plan.max_footprint_bytes(datasets);
-        if maxfp <= target_bytes || n as u64 >= extent {
-            return plan;
+        if maxfp <= target_bytes {
+            return Ok(plan);
+        }
+        if n as u64 >= extent {
+            let tiles = plan.num_tiles();
+            crate::bail!(
+                "slot target {target_bytes} B is smaller than one halo-widened slab: \
+                 even single-plane tiles ({tiles} of them) need {maxfp} B"
+            );
         }
         n = (n * 5 / 4 + 1).min(extent as usize);
+    }
+}
+
+/// Where an engine gets its tile plan from — the seam the auto-tuner
+/// threads through every memory engine.
+///
+/// The seed hardcoded an `HBM/3`-style `plan_auto` call in each engine;
+/// engines now hold a `PlanSource` instead, so benches can pin tile
+/// counts and [`crate::tuner`] can inject searched plans without
+/// touching engine internals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanSource {
+    /// Auto-size tiles to the engine's heuristic slot target (the seed
+    /// `HBM/3` behaviour).
+    #[default]
+    Auto,
+    /// A fixed tile count chosen externally (benches, the auto-tuner).
+    Fixed(usize),
+}
+
+impl PlanSource {
+    /// Build the plan for a chain. `heuristic_target` is the engine's
+    /// slot budget in bytes (e.g. `HBM/3 · 0.92`), used by [`Auto`].
+    ///
+    /// [`Auto`]: PlanSource::Auto
+    pub fn plan(
+        &self,
+        chain: &[LoopInst],
+        datasets: &[Dataset],
+        stencils: &[Stencil],
+        heuristic_target: u64,
+    ) -> TilePlan {
+        match self {
+            PlanSource::Fixed(n) => plan_chain(chain, datasets, stencils, *n),
+            PlanSource::Auto => plan_auto(chain, datasets, stencils, heuristic_target)
+                .unwrap_or_else(|_| {
+                    // Degenerate target or chain: stream at the
+                    // single-plane floor, exactly the seed's best-effort
+                    // behaviour when the budget can never be met.
+                    plan_chain(chain, datasets, stencils, usize::MAX)
+                }),
+        }
     }
 }
 
@@ -431,7 +504,7 @@ mod tests {
     fn auto_plan_respects_target() {
         let (chain, datasets, stencils) = two_loop_chain();
         let total = chain_bytes(&chain, &datasets);
-        let plan = plan_auto(&chain, &datasets, &stencils, total / 3);
+        let plan = plan_auto(&chain, &datasets, &stencils, total / 3).unwrap();
         assert!(plan.num_tiles() >= 3);
         assert!(plan.max_footprint_bytes(&datasets) <= total / 3);
     }
@@ -439,8 +512,47 @@ mod tests {
     #[test]
     fn single_tile_when_it_fits() {
         let (chain, datasets, stencils) = two_loop_chain();
-        let plan = plan_auto(&chain, &datasets, &stencils, u64::MAX);
+        let plan = plan_auto(&chain, &datasets, &stencils, u64::MAX).unwrap();
         assert_eq!(plan.num_tiles(), 1);
+    }
+
+    #[test]
+    fn degenerate_targets_are_typed_errors() {
+        let (chain, datasets, stencils) = two_loop_chain();
+        // empty chain
+        let e = plan_auto(&[], &datasets, &stencils, u64::MAX).unwrap_err();
+        assert!(e.to_string().contains("empty loop chain"), "{e}");
+        // zero target
+        let e = plan_auto(&chain, &datasets, &stencils, 0).unwrap_err();
+        assert!(e.to_string().contains("slot target is zero"), "{e}");
+        // target below one halo-widened slab
+        let e = plan_auto(&chain, &datasets, &stencils, 1).unwrap_err();
+        assert!(e.to_string().contains("halo-widened slab"), "{e}");
+    }
+
+    #[test]
+    fn zero_dataset_chain_is_a_single_tile() {
+        let stencils = vec![st(0, shapes::point())];
+        let chain = vec![lp("red_only", 64, vec![])];
+        let plan = plan_auto(&chain, &[], &stencils, 0).unwrap();
+        assert_eq!(plan.num_tiles(), 1);
+    }
+
+    #[test]
+    fn plan_source_auto_matches_plan_auto_and_falls_back() {
+        let (chain, datasets, stencils) = two_loop_chain();
+        let total = chain_bytes(&chain, &datasets);
+        let a = PlanSource::Auto.plan(&chain, &datasets, &stencils, total / 3);
+        let b = plan_auto(&chain, &datasets, &stencils, total / 3).unwrap();
+        assert_eq!(a.num_tiles(), b.num_tiles());
+        // infeasible target: the fallback is the single-plane floor
+        let f = PlanSource::Auto.plan(&chain, &datasets, &stencils, 1);
+        assert_eq!(f.num_tiles() as isize, 64);
+        // fixed counts pass through (clamped to the extent)
+        let p = PlanSource::Fixed(5).plan(&chain, &datasets, &stencils, 0);
+        assert_eq!(p.num_tiles(), 5);
+        let p = PlanSource::Fixed(usize::MAX).plan(&chain, &datasets, &stencils, 0);
+        assert_eq!(p.num_tiles() as isize, 64);
     }
 
     #[test]

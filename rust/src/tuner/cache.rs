@@ -1,0 +1,85 @@
+//! The process-wide tuned-plan cache.
+//!
+//! Keyed by `(chain fingerprint, platform+options digest)` so that
+//! repeated chains within a run (a timestepped app re-enqueues the same
+//! chain every step) and repeated cells of a sweep reuse the search
+//! result instead of re-evaluating the cost model. The cache stores the
+//! *choice* — candidate plus its modelled and heuristic times — not the
+//! plan itself; plans are rebuilt deterministically from the candidate.
+//!
+//! The cache is safe to share across unrelated runs in one process: the
+//! key digests every model input (chain structure, dataset geometry,
+//! stencils, calibration constants, budget and seed), and the stored
+//! choice is itself the output of a deterministic search, so a hit
+//! returns exactly what a fresh search would.
+
+use super::candidate::Candidate;
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// A finished tuning decision for one (chain, platform) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct TunedChoice {
+    /// The winning configuration.
+    pub candidate: Candidate,
+    /// Modelled chain time of the winner, seconds (from a cold engine).
+    pub tuned_model_s: f64,
+    /// Modelled chain time of the heuristic plan, seconds. Invariant:
+    /// `tuned_model_s <= heuristic_model_s` — the heuristic is evaluated
+    /// first and displaced only by strictly better candidates.
+    pub heuristic_model_s: f64,
+    /// Cost-model evaluations the search spent.
+    pub evals: u32,
+}
+
+type Key = (u64, u64);
+
+fn cache() -> &'static Mutex<HashMap<Key, TunedChoice>> {
+    static CACHE: OnceLock<Mutex<HashMap<Key, TunedChoice>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Facade over the process-wide cache.
+pub struct TunedPlanCache;
+
+impl TunedPlanCache {
+    pub fn get(key: Key) -> Option<TunedChoice> {
+        cache().lock().unwrap().get(&key).copied()
+    }
+
+    pub fn insert(key: Key, choice: TunedChoice) {
+        cache().lock().unwrap().insert(key, choice);
+    }
+
+    /// Number of cached choices (diagnostics/tests).
+    pub fn len() -> usize {
+        cache().lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let key = (0xDEAD_BEEF_u64, 0xC0FFEE_u64);
+        assert!(TunedPlanCache::get(key).is_none());
+        let c = TunedChoice {
+            candidate: Candidate {
+                tiles: Some(4),
+                slots: 3,
+                cyclic: true,
+                prefetch: true,
+            },
+            tuned_model_s: 1.5,
+            heuristic_model_s: 2.0,
+            evals: 12,
+        };
+        TunedPlanCache::insert(key, c);
+        let got = TunedPlanCache::get(key).expect("cached");
+        assert_eq!(got.candidate, c.candidate);
+        assert_eq!(got.evals, 12);
+        assert!(TunedPlanCache::len() >= 1);
+    }
+}

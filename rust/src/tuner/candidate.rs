@@ -1,0 +1,220 @@
+//! Search-space points, tuning options, and the chain fingerprint that
+//! keys the tuned-plan cache.
+
+use crate::ops::{Dataset, LoopInst, Stencil};
+
+/// One point of the tuner's search space.
+///
+/// Fields that a platform does not expose are normalised to fixed values
+/// by [`super::target::TunerTarget::toggle_variants`] (e.g. `slots: 0`
+/// on KNL), so `Candidate` is usable as a map key without aliasing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Candidate {
+    /// Tile count along the tiled dimension; `None` means the engine's
+    /// own heuristic auto-sizing (the `HBM/3`-style seed behaviour).
+    pub tiles: Option<u32>,
+    /// GPU-explicit buffering depth (2 or 3); 0 where not applicable.
+    pub slots: u8,
+    /// §4.1 Cyclic toggle (GPU-explicit).
+    pub cyclic: bool,
+    /// Prefetch toggle (GPU-explicit and unified memory).
+    pub prefetch: bool,
+}
+
+impl Candidate {
+    /// The same toggles with an explicit tile count.
+    pub fn with_tiles(self, n: u32) -> Candidate {
+        Candidate {
+            tiles: Some(n),
+            ..self
+        }
+    }
+}
+
+/// Tuning options: evaluation budget and search seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TuneOpts {
+    /// Maximum cost-model evaluations per (chain, platform) pair. The
+    /// heuristic always gets the first evaluation, so a budget of 1
+    /// degenerates to the untuned plan.
+    pub budget: u32,
+    /// Seed for the exploration probes. Same seed ⇒ same plan.
+    pub seed: u64,
+}
+
+impl Default for TuneOpts {
+    fn default() -> Self {
+        TuneOpts {
+            budget: 48,
+            seed: 0x0C0FFEE5,
+        }
+    }
+}
+
+/// FNV-1a 64-bit — the crate is dependency-free, and the cache key only
+/// needs a stable, well-mixed digest (collisions are astronomically
+/// unlikely at the handful of chains a run sees).
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for b in bytes {
+            self.0 ^= *b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn write_i64(&mut self, v: i64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write_bytes(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Digest of everything about a chain that the cost models can see:
+/// per-loop iteration ranges, bandwidth efficiencies and dataset
+/// arguments (dataset, stencil, access mode), the geometry of every
+/// dataset, every stencil's points, and the §4.1 cyclic-phase flag.
+/// Loop *names* and kernel bodies are deliberately excluded — they do
+/// not affect modelled time.
+pub fn chain_fingerprint(
+    chain: &[LoopInst],
+    datasets: &[Dataset],
+    stencils: &[Stencil],
+    cyclic_phase: bool,
+) -> u64 {
+    let mut h = Fnv::new();
+    h.write_u64(cyclic_phase as u64);
+    h.write_u64(chain.len() as u64);
+    for l in chain {
+        for (lo, hi) in &l.range {
+            h.write_i64(*lo as i64);
+            h.write_i64(*hi as i64);
+        }
+        h.write_f64(l.bw_efficiency);
+        for (dat, st, acc) in l.dat_args() {
+            h.write_u64(dat.0 as u64);
+            h.write_u64(st.0 as u64);
+            h.write_u64(acc.reads() as u64 | (acc.writes() as u64) << 1);
+        }
+    }
+    h.write_u64(datasets.len() as u64);
+    for ds in datasets {
+        for ((sz, lo), hi) in ds.size.iter().zip(&ds.halo_lo).zip(&ds.halo_hi) {
+            h.write_u64(*sz as u64);
+            h.write_i64(*lo as i64);
+            h.write_i64(*hi as i64);
+        }
+        h.write_u64(ds.elem_bytes);
+    }
+    h.write_u64(stencils.len() as u64);
+    for s in stencils {
+        h.write_u64(s.points.len() as u64);
+        for p in &s.points {
+            for c in p {
+                h.write_i64(*c as i64);
+            }
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::{shapes, StencilId};
+    use crate::ops::{Access, Arg, BlockId, DatasetId};
+
+    fn fixture(ny: usize, eff: f64) -> (Vec<LoopInst>, Vec<Dataset>, Vec<Stencil>) {
+        let datasets = vec![Dataset {
+            id: DatasetId(0),
+            block: BlockId(0),
+            name: "d".into(),
+            size: [16, ny, 1],
+            halo_lo: [1, 1, 0],
+            halo_hi: [1, 1, 0],
+            elem_bytes: 8,
+        }];
+        let stencils = vec![Stencil {
+            id: StencilId(0),
+            name: "pt".into(),
+            points: shapes::point(),
+        }];
+        let chain = vec![LoopInst {
+            name: "w".into(),
+            block: BlockId(0),
+            range: [(0, 16), (0, ny as isize), (0, 1)],
+            args: vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)],
+            kernel: kernel(|_| {}),
+            seq: 0,
+            bw_efficiency: eff,
+        }];
+        (chain, datasets, stencils)
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let (c1, d1, s1) = fixture(64, 1.0);
+        let a = chain_fingerprint(&c1, &d1, &s1, true);
+        let b = chain_fingerprint(&c1, &d1, &s1, true);
+        assert_eq!(a, b, "same inputs must hash identically");
+        // every modelled input perturbs the digest
+        let (c2, d2, s2) = fixture(65, 1.0);
+        assert_ne!(a, chain_fingerprint(&c2, &d2, &s2, true), "range");
+        let (c3, d3, s3) = fixture(64, 0.9);
+        assert_ne!(a, chain_fingerprint(&c3, &d3, &s3, true), "bw eff");
+        assert_ne!(a, chain_fingerprint(&c1, &d1, &s1, false), "cyclic");
+        let (mut c4, d4, s4) = fixture(64, 1.0);
+        c4[0].args = vec![Arg::dat(DatasetId(0), StencilId(0), Access::ReadWrite)];
+        assert_ne!(a, chain_fingerprint(&c4, &d4, &s4, true), "access");
+    }
+
+    #[test]
+    fn loop_names_do_not_perturb_the_digest() {
+        let (mut c, d, s) = fixture(64, 1.0);
+        let a = chain_fingerprint(&c, &d, &s, true);
+        c[0].name = "renamed".into();
+        assert_eq!(a, chain_fingerprint(&c, &d, &s, true));
+    }
+
+    #[test]
+    fn candidate_with_tiles_keeps_toggles() {
+        let c = Candidate {
+            tiles: None,
+            slots: 3,
+            cyclic: true,
+            prefetch: false,
+        };
+        let t = c.with_tiles(7);
+        assert_eq!(t.tiles, Some(7));
+        assert_eq!(t.slots, 3);
+        assert!(t.cyclic && !t.prefetch);
+    }
+}

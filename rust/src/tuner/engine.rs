@@ -1,0 +1,267 @@
+//! [`TunedEngine`] — the auto-tuner as an ordinary memory engine.
+//!
+//! Wraps a [`TunerTarget`]; on every chain it fingerprints the inputs,
+//! consults the process-wide [`TunedPlanCache`] (searching on a miss),
+//! then delegates execution — real numerics included — to an inner
+//! engine configured for the winning candidate. Inner engines are kept
+//! per candidate, so chains that tune to the same choice (the common
+//! case: a timestepped app repeats one chain shape) accumulate
+//! cross-chain model state — prefetch credit, cache warmth, resident
+//! sets — exactly as on an untuned engine. Chains that pick *different*
+//! candidates run on separate engines whose state is independent; the
+//! never-worse guarantee is about per-chain cold-engine model scores,
+//! not the warm cross-chain wall clock.
+
+use super::cache::{TunedChoice, TunedPlanCache};
+use super::candidate::{chain_fingerprint, Candidate, Fnv, TuneOpts};
+use super::search::tune;
+use super::target::TunerTarget;
+use crate::exec::{Engine, World};
+use crate::ops::LoopInst;
+use std::collections::HashMap;
+
+/// Auto-tuning wrapper around a tunable platform.
+pub struct TunedEngine {
+    target: TunerTarget,
+    opts: TuneOpts,
+    /// Platform + options digest: the cache-key half that does not
+    /// depend on the chain.
+    digest: u64,
+    engines: HashMap<Candidate, Box<dyn Engine>>,
+    /// A heuristic-configured instance kept for capacity queries and
+    /// the label — capacity is a platform constant, so one probe engine
+    /// serves every `fits` call.
+    probe: Box<dyn Engine>,
+    label: String,
+}
+
+impl TunedEngine {
+    pub fn new(target: TunerTarget, opts: TuneOpts) -> Self {
+        let mut h = Fnv::new();
+        h.write_u64(target.digest());
+        h.write_u64(opts.budget as u64);
+        h.write_u64(opts.seed);
+        let probe = target.build(target.heuristic());
+        let label = probe.describe();
+        TunedEngine {
+            digest: h.finish(),
+            target,
+            opts,
+            engines: HashMap::new(),
+            probe,
+            label,
+        }
+    }
+
+    /// The most recent decision for a chain (tests/diagnostics).
+    pub fn choice_for(
+        &self,
+        chain: &[LoopInst],
+        datasets: &[crate::ops::Dataset],
+        stencils: &[crate::ops::Stencil],
+        cyclic_phase: bool,
+    ) -> Option<TunedChoice> {
+        let fp = chain_fingerprint(chain, datasets, stencils, cyclic_phase);
+        TunedPlanCache::get((fp, self.digest))
+    }
+}
+
+impl Engine for TunedEngine {
+    fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, cyclic_phase: bool) {
+        if chain.is_empty() {
+            return;
+        }
+        let fp = chain_fingerprint(chain, world.datasets, world.stencils, cyclic_phase);
+        let key = (fp, self.digest);
+        let choice = match TunedPlanCache::get(key) {
+            Some(c) => {
+                world.metrics.tune_cache_hits += 1;
+                c
+            }
+            None => {
+                let c = tune(
+                    &self.target,
+                    &self.opts,
+                    chain,
+                    world.datasets,
+                    world.stencils,
+                    cyclic_phase,
+                );
+                TunedPlanCache::insert(key, c);
+                world.metrics.tune_evals += c.evals as u64;
+                c
+            }
+        };
+        world.metrics.tuned_model_s += choice.tuned_model_s;
+        world.metrics.heuristic_model_s += choice.heuristic_model_s;
+
+        let engine = self
+            .engines
+            .entry(choice.candidate)
+            .or_insert_with(|| self.target.build(choice.candidate));
+        engine.run_chain(chain, world, cyclic_phase);
+    }
+
+    fn describe(&self) -> String {
+        format!("auto-tuned [{}]", self.label)
+    }
+
+    fn fits(&self, problem_bytes: u64) -> bool {
+        // Capacity is a platform property, not a plan property: ask the
+        // cached heuristic-configured instance.
+        self.probe.fits(problem_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{Executor, Metrics, NativeExecutor};
+    use crate::memory::{AppCalib, GpuCalib, GpuOpts, Link};
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::{shapes, StencilId};
+    use crate::ops::*;
+
+    fn fixture(ny: usize) -> (Vec<Dataset>, Vec<Stencil>, Vec<LoopInst>) {
+        let mut datasets = vec![];
+        for i in 0..2u32 {
+            datasets.push(Dataset {
+                id: DatasetId(i),
+                block: BlockId(0),
+                name: format!("d{i}"),
+                size: [32, ny, 1],
+                halo_lo: [2, 2, 0],
+                halo_hi: [2, 2, 0],
+                elem_bytes: 8,
+            });
+        }
+        let stencils = vec![
+            Stencil {
+                id: StencilId(0),
+                name: "pt".into(),
+                points: shapes::point(),
+            },
+            Stencil {
+                id: StencilId(1),
+                name: "star".into(),
+                points: shapes::star2d(1),
+            },
+        ];
+        let range = [(0, 32), (0, ny as isize), (0, 1)];
+        let chain = vec![
+            LoopInst {
+                name: "mk".into(),
+                block: BlockId(0),
+                range,
+                args: vec![
+                    Arg::dat(DatasetId(0), StencilId(1), Access::Read),
+                    Arg::dat(DatasetId(1), StencilId(0), Access::Write),
+                ],
+                kernel: kernel(|c| {
+                    let v = c.r(0, -1, 0) + c.r(0, 1, 0);
+                    c.w(1, 0, 0, 0.5 * v);
+                }),
+                seq: 0,
+                bw_efficiency: 1.0,
+            },
+            LoopInst {
+                name: "fold".into(),
+                block: BlockId(0),
+                range,
+                args: vec![
+                    Arg::dat(DatasetId(1), StencilId(1), Access::Read),
+                    Arg::dat(DatasetId(0), StencilId(0), Access::ReadWrite),
+                ],
+                kernel: kernel(|c| {
+                    let v = c.r(0, 0, -1) + c.r(0, 0, 1);
+                    let s = c.r(1, 0, 0);
+                    c.w(1, 0, 0, s + 0.1 * v);
+                }),
+                seq: 1,
+                bw_efficiency: 1.0,
+            },
+        ];
+        (datasets, stencils, chain)
+    }
+
+    fn tuned_engine(seed: u64) -> TunedEngine {
+        TunedEngine::new(
+            TunerTarget::GpuExplicit {
+                calib: GpuCalib {
+                    hbm_bytes: 256 << 10,
+                    ..GpuCalib::default()
+                },
+                app: AppCalib::CLOVERLEAF_2D,
+                link: Link::PciE,
+                opts: GpuOpts::default(),
+            },
+            TuneOpts {
+                budget: 24,
+                seed,
+            },
+        )
+    }
+
+    fn run(e: &mut dyn Engine, chains: usize, seed_data: u64) -> (Vec<Vec<f64>>, Metrics) {
+        let (datasets, stencils, chain) = fixture(512);
+        let mut store = DataStore::new();
+        for d in &datasets {
+            store.alloc(d);
+            for (i, v) in store.buf_mut(d.id).iter_mut().enumerate() {
+                *v = ((i as u64).wrapping_mul(seed_data) % 1000) as f64 * 1e-3;
+            }
+        }
+        let mut reds: Vec<Reduction> = vec![];
+        let mut metrics = Metrics::new();
+        let mut exec = NativeExecutor::new();
+        for _ in 0..chains {
+            let mut world = World {
+                datasets: &datasets,
+                stencils: &stencils,
+                store: &mut store,
+                reds: &mut reds,
+                metrics: &mut metrics,
+                exec: &mut exec,
+            };
+            e.run_chain(&chain, &mut world, true);
+        }
+        (
+            datasets.iter().map(|d| store.buf(d.id).to_vec()).collect(),
+            metrics,
+        )
+    }
+
+    #[test]
+    fn tuned_numerics_match_untiled_reference() {
+        let (datasets, _, chain) = fixture(512);
+        let mut store_ref = DataStore::new();
+        for d in &datasets {
+            store_ref.alloc(d);
+            for (i, v) in store_ref.buf_mut(d.id).iter_mut().enumerate() {
+                *v = ((i as u64).wrapping_mul(97) % 1000) as f64 * 1e-3;
+            }
+        }
+        let mut reds: Vec<Reduction> = vec![];
+        let mut exec = NativeExecutor::new();
+        for _ in 0..2 {
+            for l in &chain {
+                exec.run_loop(l, l.range, &datasets, &mut store_ref, &mut reds);
+            }
+        }
+        let want: Vec<Vec<f64>> = datasets.iter().map(|d| store_ref.buf(d.id).to_vec()).collect();
+
+        let mut e = tuned_engine(11);
+        let (got, m) = run(&mut e, 2, 97);
+        assert_eq!(want, got, "tuning must not change numerics");
+        assert!(m.tune_evals > 0, "first chain must search");
+        assert!(m.tune_cache_hits >= 1, "second chain must hit the cache");
+        assert!(m.tuned_model_s <= m.heuristic_model_s);
+    }
+
+    #[test]
+    fn describe_and_fits_delegate() {
+        let e = tuned_engine(5);
+        assert!(e.describe().starts_with("auto-tuned ["), "{}", e.describe());
+        assert!(e.fits(u64::MAX / 4), "explicit streaming fits anything");
+    }
+}

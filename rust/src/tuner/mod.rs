@@ -1,0 +1,48 @@
+//! Cost-model-driven tile-plan auto-tuner.
+//!
+//! Every memory engine ships a *heuristic* plan: auto-size tiles so one
+//! slot fits an equal share of fast memory (`HBM/3` for the explicit GPU
+//! engine, an MCDRAM occupancy share on KNL, most of HBM for unified
+//! memory). The heuristic is robust but rarely optimal — tile count
+//! trades per-tile latencies and redundant edge bytes against overlap
+//! granularity, and the §4.1 cyclic/prefetch/slot toggles interact with
+//! it. This module searches that space.
+//!
+//! The design rests on one observation: **the engines already are the
+//! cost models**. Running a chain through an engine with the no-op
+//! [`crate::exec::NullExecutor`] prices a schedule on the engine's own
+//! discrete-event clock without touching data. So the tuner scores a
+//! candidate by building a *fresh* engine configured for it ([`target`])
+//! and replaying the chain model-only ([`search`]). Because the
+//! heuristic itself is just another candidate — evaluated first, and
+//! displaced only by a *strictly* better score — the chosen plan can
+//! **never model slower than the heuristic**, a property enforced by
+//! `tests/prop_tuner.rs` over randomised chains, datasets and platforms.
+//!
+//! The search ([`search::tune`]) is deterministic and seeded: a pruned
+//! exhaustive pass over the platform's toggle space crossed with a
+//! geometric tile-count ladder around the heuristic count, coordinate
+//! descent on the tile count from the incumbent, then seeded xorshift
+//! probes until the evaluation budget is spent. Same inputs + same seed
+//! ⇒ same plan, bit for bit.
+//!
+//! Results are memoised in the process-wide [`cache::TunedPlanCache`],
+//! keyed by (chain fingerprint, platform digest, tuning options), so the
+//! repeated identical chains of a timestepped app — and repeated cells
+//! of a sweep — tune once and reuse the choice. [`engine::TunedEngine`]
+//! wraps any tunable platform behind the ordinary [`crate::exec::Engine`]
+//! trait; numerics are untouched (candidates only re-schedule, so tuned
+//! execution stays bit-exact — `tests/tiling_equivalence.rs` and
+//! `tests/sharding_equivalence.rs` hold it to the same bar as tiling).
+
+pub mod cache;
+pub mod candidate;
+pub mod engine;
+pub mod search;
+pub mod target;
+
+pub use cache::{TunedChoice, TunedPlanCache};
+pub use candidate::{chain_fingerprint, Candidate, TuneOpts};
+pub use engine::TunedEngine;
+pub use search::{model_chain_time, tune};
+pub use target::TunerTarget;

@@ -1,0 +1,340 @@
+//! Tunable platform descriptions.
+//!
+//! A [`TunerTarget`] holds the calibration constants of one tunable
+//! platform and can instantiate a *fresh* engine for any search
+//! [`Candidate`] — the engines themselves are the cost models, so
+//! "build + replay with a null executor" *is* candidate scoring.
+
+use super::candidate::{Candidate, Fnv};
+use crate::distributed::{DecompKind, Interconnect, ShardedEngine};
+use crate::exec::Engine;
+use crate::memory::{
+    AppCalib, GpuCalib, GpuExplicitEngine, GpuOpts, KnlCalib, KnlEngine, Link, UnifiedCalib,
+    UnifiedEngine,
+};
+use crate::ops::{Dataset, LoopInst, Stencil};
+use crate::tiling::plan::PlanSource;
+
+/// One tunable platform with its calibrations.
+#[derive(Debug, Clone)]
+pub enum TunerTarget {
+    /// KNL cache mode with skewed tiling.
+    Knl { calib: KnlCalib, app: AppCalib },
+    /// Explicit 3-slot GPU streaming (Algorithm 1).
+    GpuExplicit {
+        calib: GpuCalib,
+        app: AppCalib,
+        link: Link,
+        /// The *configured* toggles — the heuristic candidate reproduces
+        /// them; the search may deviate.
+        opts: GpuOpts,
+    },
+    /// Unified-memory GPU.
+    GpuUnified {
+        gpu: GpuCalib,
+        um: UnifiedCalib,
+        app: AppCalib,
+        link: Link,
+        tiled: bool,
+        prefetch: bool,
+    },
+    /// N ranks of `inner`, candidates applied uniformly per rank.
+    Sharded {
+        inner: Box<TunerTarget>,
+        ranks: u32,
+        kind: DecompKind,
+        link: Interconnect,
+        overlap: bool,
+    },
+}
+
+impl TunerTarget {
+    /// A fresh engine configured for `cand` (cold clock and caches).
+    pub fn build(&self, cand: Candidate) -> Box<dyn Engine> {
+        match self {
+            TunerTarget::Knl { calib, app } => {
+                let mut e = KnlEngine::new(calib.clone(), *app, true);
+                e.plan = plan_source(cand);
+                Box::new(e)
+            }
+            TunerTarget::GpuExplicit {
+                calib, app, link, ..
+            } => {
+                let opts = GpuOpts {
+                    cyclic: cand.cyclic,
+                    prefetch: cand.prefetch,
+                    slots: cand.slots.clamp(2, 3),
+                };
+                let mut e = GpuExplicitEngine::new(calib.clone(), *app, *link, opts);
+                e.plan = plan_source(cand);
+                Box::new(e)
+            }
+            TunerTarget::GpuUnified {
+                gpu,
+                um,
+                app,
+                link,
+                tiled,
+                ..
+            } => {
+                // An explicit tile count implies the tiled schedule; the
+                // heuristic candidate keeps the configured mode.
+                let tiled = *tiled || cand.tiles.is_some();
+                let mut e =
+                    UnifiedEngine::new(gpu.clone(), um.clone(), *app, *link, tiled, cand.prefetch);
+                e.plan = plan_source(cand);
+                Box::new(e)
+            }
+            TunerTarget::Sharded {
+                inner,
+                ranks,
+                kind,
+                link,
+                overlap,
+            } => {
+                let engines = (0..(*ranks).max(1)).map(|_| inner.build(cand)).collect();
+                Box::new(ShardedEngine::new(engines, *kind, *link, *overlap))
+            }
+        }
+    }
+
+    /// The candidate that reproduces the seed heuristic exactly: `Auto`
+    /// plan sizing plus the platform's configured toggles.
+    pub fn heuristic(&self) -> Candidate {
+        match self {
+            TunerTarget::Knl { .. } => Candidate {
+                tiles: None,
+                slots: 0,
+                cyclic: false,
+                prefetch: false,
+            },
+            TunerTarget::GpuExplicit { opts, .. } => Candidate {
+                tiles: None,
+                slots: opts.slots.clamp(2, 3),
+                cyclic: opts.cyclic,
+                prefetch: opts.prefetch,
+            },
+            TunerTarget::GpuUnified { prefetch, .. } => Candidate {
+                tiles: None,
+                slots: 0,
+                cyclic: false,
+                prefetch: *prefetch,
+            },
+            TunerTarget::Sharded { inner, .. } => inner.heuristic(),
+        }
+    }
+
+    /// The platform's toggle space: candidates differing only in the
+    /// discrete switches, with `tiles` left unset (the search crosses
+    /// each variant with its tile-count ladder). Order is fixed, which
+    /// keeps the search deterministic.
+    pub fn toggle_variants(&self) -> Vec<Candidate> {
+        match self {
+            TunerTarget::Knl { .. } => vec![self.heuristic()],
+            TunerTarget::GpuExplicit { .. } => {
+                let mut v = Vec::with_capacity(8);
+                for slots in [3u8, 2] {
+                    for cyclic in [true, false] {
+                        for prefetch in [true, false] {
+                            v.push(Candidate {
+                                tiles: None,
+                                slots,
+                                cyclic,
+                                prefetch,
+                            });
+                        }
+                    }
+                }
+                v
+            }
+            TunerTarget::GpuUnified { .. } => [true, false]
+                .into_iter()
+                .map(|prefetch| Candidate {
+                    tiles: None,
+                    slots: 0,
+                    cyclic: false,
+                    prefetch,
+                })
+                .collect(),
+            TunerTarget::Sharded { inner, .. } => inner.toggle_variants(),
+        }
+    }
+
+    /// The tile count the heuristic auto-sizing would pick for this
+    /// chain — the centre of the search ladder. For sharded targets the
+    /// per-rank chains are roughly `1/ranks` of the global extent, so
+    /// the inner count is divided accordingly.
+    pub fn heuristic_tiles(
+        &self,
+        chain: &[LoopInst],
+        datasets: &[Dataset],
+        stencils: &[Stencil],
+    ) -> usize {
+        match self {
+            TunerTarget::Knl { calib, app } => {
+                let target = KnlEngine::new(calib.clone(), *app, true).tile_target();
+                PlanSource::Auto
+                    .plan(chain, datasets, stencils, target)
+                    .num_tiles()
+            }
+            TunerTarget::GpuExplicit {
+                calib, app, link, opts,
+            } => {
+                let target =
+                    GpuExplicitEngine::new(calib.clone(), *app, *link, *opts).slot_target();
+                PlanSource::Auto
+                    .plan(chain, datasets, stencils, target)
+                    .num_tiles()
+            }
+            TunerTarget::GpuUnified {
+                gpu,
+                um,
+                app,
+                link,
+                tiled,
+                prefetch,
+            } => {
+                let target =
+                    UnifiedEngine::new(gpu.clone(), um.clone(), *app, *link, *tiled, *prefetch)
+                        .tile_target();
+                PlanSource::Auto
+                    .plan(chain, datasets, stencils, target)
+                    .num_tiles()
+            }
+            TunerTarget::Sharded { inner, .. } => {
+                (inner.heuristic_tiles(chain, datasets, stencils) / self.tile_dim_split(chain))
+                    .max(1)
+            }
+        }
+    }
+
+    /// How many ways the decomposition splits the *tiled* dimension of
+    /// this chain (1 for single-device targets). Derived from the real
+    /// [`crate::distributed::decompose`] grid — not a sqrt estimate —
+    /// so non-square rank counts (x8:2d → a 2×4 grid) are exact.
+    /// Candidate tile counts apply to the per-rank chains, whose extent
+    /// is the global extent over this; the search caps its ladder and
+    /// probes accordingly so it does not waste budget on counts that
+    /// clamp to identical per-rank plans.
+    pub fn tile_dim_split(&self, chain: &[LoopInst]) -> usize {
+        match self {
+            TunerTarget::Sharded { ranks, kind, .. } => {
+                let d = crate::distributed::decompose(chain, (*ranks).max(1) as usize, *kind);
+                let tile_dim = crate::tiling::plan::pick_tile_dim(chain);
+                let mut split = 1usize;
+                for axis in 0..d.axes() {
+                    if d.dims[axis] == tile_dim {
+                        split = d.grid[axis];
+                    }
+                }
+                split.max(1)
+            }
+            _ => 1,
+        }
+    }
+
+    /// Whether `Fixed(heuristic_tiles(..))` with the heuristic toggles
+    /// builds exactly the plan the `Auto` heuristic builds — true for
+    /// unsharded tiled targets (the search can skip that redundant
+    /// evaluation). False for sharded targets (per-rank `Auto` counts
+    /// need not equal the global estimate over the split) and for
+    /// untiled unified memory (an explicit count switches the engine
+    /// into the tiled schedule, a genuinely different candidate).
+    pub fn fixed_heuristic_is_redundant(&self) -> bool {
+        match self {
+            TunerTarget::Knl { .. } | TunerTarget::GpuExplicit { .. } => true,
+            TunerTarget::GpuUnified { tiled, .. } => *tiled,
+            TunerTarget::Sharded { .. } => false,
+        }
+    }
+
+    /// Stable digest of the platform + calibration constants — half of
+    /// the tuned-plan cache key. Uses the `Debug` rendering, which spells
+    /// out every calibration float.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.write_str(&format!("{self:?}"));
+        h.finish()
+    }
+}
+
+fn plan_source(cand: Candidate) -> PlanSource {
+    match cand.tiles {
+        Some(n) => PlanSource::Fixed(n as usize),
+        None => PlanSource::Auto,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu_target(cyclic: bool, prefetch: bool) -> TunerTarget {
+        TunerTarget::GpuExplicit {
+            calib: GpuCalib::default(),
+            app: AppCalib::CLOVERLEAF_2D,
+            link: Link::PciE,
+            opts: GpuOpts {
+                cyclic,
+                prefetch,
+                slots: 3,
+            },
+        }
+    }
+
+    #[test]
+    fn heuristic_reproduces_configured_toggles() {
+        let h = gpu_target(true, false).heuristic();
+        assert_eq!(h.tiles, None);
+        assert_eq!(h.slots, 3);
+        assert!(h.cyclic && !h.prefetch);
+    }
+
+    #[test]
+    fn toggle_spaces_have_expected_sizes() {
+        assert_eq!(gpu_target(true, true).toggle_variants().len(), 8);
+        let knl = TunerTarget::Knl {
+            calib: KnlCalib::default(),
+            app: AppCalib::CLOVERLEAF_2D,
+        };
+        assert_eq!(knl.toggle_variants().len(), 1);
+        let sharded = TunerTarget::Sharded {
+            inner: Box::new(gpu_target(true, true)),
+            ranks: 4,
+            kind: DecompKind::OneD,
+            link: Interconnect::NvLink,
+            overlap: true,
+        };
+        assert_eq!(sharded.toggle_variants().len(), 8);
+    }
+
+    #[test]
+    fn digests_distinguish_platforms_and_calibs() {
+        let a = gpu_target(true, true).digest();
+        let b = gpu_target(true, false).digest();
+        assert_ne!(a, b, "configured toggles are part of the digest");
+        let small = TunerTarget::GpuExplicit {
+            calib: GpuCalib {
+                hbm_bytes: 1 << 20,
+                ..GpuCalib::default()
+            },
+            app: AppCalib::CLOVERLEAF_2D,
+            link: Link::PciE,
+            opts: GpuOpts::default(),
+        };
+        assert_ne!(gpu_target(true, true).digest(), small.digest());
+    }
+
+    #[test]
+    fn build_applies_candidate() {
+        let t = gpu_target(false, false);
+        let e = t.build(Candidate {
+            tiles: Some(7),
+            slots: 2,
+            cyclic: true,
+            prefetch: true,
+        });
+        let d = e.describe();
+        assert!(d.contains("Cyclic") && d.contains("Prefetch"), "{d}");
+    }
+}

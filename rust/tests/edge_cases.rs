@@ -246,8 +246,79 @@ fn single_tile_plan_has_no_edges() {
     // the footprint covers the stencil reach, clamped to the dataset
     assert_eq!(fp, Interval::new(-1, 65));
     // auto-planner agrees when the target is unbounded
-    let auto = plan_auto(&chain, &datasets, &stencils, u64::MAX);
+    let auto = plan_auto(&chain, &datasets, &stencils, u64::MAX).unwrap();
     assert_eq!(auto.num_tiles(), 1);
+}
+
+#[test]
+fn plan_auto_degenerate_targets_error_instead_of_panicking() {
+    let datasets = vec![ds(0, 2, 64)];
+    let stencils = vec![st(0, shapes::star2d(1))];
+    let chain = vec![lp(
+        "r",
+        64,
+        vec![Arg::dat(DatasetId(0), StencilId(0), Access::Read)],
+    )];
+    // a zero slot target is a typed error, not a division-by-zero or an
+    // infinite planning loop
+    let e = plan_auto(&chain, &datasets, &stencils, 0).unwrap_err();
+    assert!(e.to_string().contains("slot target is zero"), "{e}");
+    // a target below one halo-widened slab reports the minimum slab size
+    let e = plan_auto(&chain, &datasets, &stencils, 8).unwrap_err();
+    assert!(e.to_string().contains("halo-widened slab"), "{e}");
+    // an empty chain cannot be planned
+    let e = plan_auto(&[], &datasets, &stencils, 1 << 20).unwrap_err();
+    assert!(e.to_string().contains("empty loop chain"), "{e}");
+    // a chain that touches no datasets is trivially one tile, any target
+    let red_only = vec![lp("red", 64, vec![])];
+    let p = plan_auto(&red_only, &datasets, &stencils, 0).unwrap();
+    assert_eq!(p.num_tiles(), 1);
+}
+
+#[test]
+fn engines_survive_infeasible_slot_targets() {
+    // an HBM so small that even single-plane slabs overflow a slot: the
+    // engine must stream at the single-plane floor, not panic, and stay
+    // bit-exact (the seed's best-effort behaviour, now via PlanSource)
+    use ops_oc::memory::{GpuCalib, GpuExplicitEngine, GpuOpts};
+    let p = Platform::GpuExplicit {
+        link: Link::PciE,
+        cyclic: true,
+        prefetch: true,
+    };
+    let mut c = ctx(p);
+    // 512 B of "HBM": a slot target of ~157 B is below one 272 B plane,
+    // so plan_auto's typed error path (and the floor fallback) is hit
+    let mut tiny = OpsContext::new(Box::new(GpuExplicitEngine::new(
+        GpuCalib {
+            hbm_bytes: 512,
+            ..GpuCalib::default()
+        },
+        AppCalib::CLOVERLEAF_2D,
+        Link::PciE,
+        GpuOpts::default(),
+    )));
+    for c in [&mut c, &mut tiny] {
+        let b = c.decl_block("g", [32, 256, 1]);
+        let d = c.decl_dat(b, "d", [32, 256, 1], [1, 1, 0], [1, 1, 0]);
+        let s = c.decl_stencil("pt", shapes::point());
+        for _ in 0..3 {
+            c.par_loop(
+                "acc",
+                b,
+                [(0, 32), (0, 256), (0, 1)],
+                kernel(|c| {
+                    let v = c.r(0, 0, 0);
+                    c.w(0, 0, 0, v + 1.0);
+                }),
+                vec![Arg::dat(d, s, Access::ReadWrite)],
+            );
+        }
+        c.flush();
+    }
+    let d = DatasetId(0);
+    assert_eq!(c.fetch(d), tiny.fetch(d), "floor plan must stay bit-exact");
+    assert!(tiny.metrics().tiles >= c.metrics().tiles);
 }
 
 #[test]

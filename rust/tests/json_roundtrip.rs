@@ -1,0 +1,200 @@
+//! Schema-stability test for the `--json` metrics record.
+//!
+//! Downstream sweep tooling (BENCH_*.json trajectories, plotting
+//! scripts) parses these records; this test serialises a record, parses
+//! it back with a strict flat-JSON parser (the crate is dependency-free,
+//! so the parser lives here), and pins the exact key set and value
+//! types — including the tuner fields — so the schema cannot drift
+//! silently.
+
+use ops_oc::coordinator::json_record;
+use ops_oc::exec::Metrics;
+use std::collections::BTreeMap;
+
+/// A flat JSON value: the record never nests.
+#[derive(Debug, Clone, PartialEq)]
+enum Val {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+/// Strict parser for one flat JSON object: `{"k":v,...}` with string,
+/// number and boolean values. Panics (failing the test) on anything
+/// malformed — that *is* the assertion.
+fn parse_flat(s: &str) -> BTreeMap<String, Val> {
+    let mut out = BTreeMap::new();
+    let b: Vec<char> = s.chars().collect();
+    let mut i = 0usize;
+    let eat = |b: &[char], i: &mut usize, c: char| {
+        assert_eq!(b.get(*i), Some(&c), "expected {c:?} at {i}: {s}");
+        *i += 1;
+    };
+    let parse_string = |b: &[char], i: &mut usize| -> String {
+        assert_eq!(b[*i], '"');
+        *i += 1;
+        let mut out = String::new();
+        while b[*i] != '"' {
+            if b[*i] == '\\' {
+                *i += 1;
+            }
+            out.push(b[*i]);
+            *i += 1;
+        }
+        *i += 1;
+        out
+    };
+    eat(&b, &mut i, '{');
+    loop {
+        let key = parse_string(&b, &mut i);
+        eat(&b, &mut i, ':');
+        let val = match b[i] {
+            '"' => Val::Str(parse_string(&b, &mut i)),
+            't' => {
+                i += 4;
+                Val::Bool(true)
+            }
+            'f' => {
+                i += 5;
+                Val::Bool(false)
+            }
+            _ => {
+                let start = i;
+                while matches!(b[i], '0'..='9' | '-' | '+' | '.' | 'e' | 'E') {
+                    i += 1;
+                }
+                let txt: String = b[start..i].iter().collect();
+                Val::Num(txt.parse().unwrap_or_else(|_| panic!("bad number {txt:?}")))
+            }
+        };
+        assert!(
+            out.insert(key.clone(), val).is_none(),
+            "duplicate key {key:?}"
+        );
+        match b[i] {
+            ',' => i += 1,
+            '}' => {
+                i += 1;
+                break;
+            }
+            c => panic!("unexpected {c:?} at {i}"),
+        }
+    }
+    assert_eq!(i, b.len(), "trailing garbage");
+    out
+}
+
+/// The pinned schema: every key the record must carry, with its type.
+const SCHEMA: &[(&str, &str)] = &[
+    ("app", "str"),
+    ("platform", "str"),
+    ("ranks", "num"),
+    ("size_gb", "num"),
+    ("oom", "bool"),
+    ("runtime_s", "num"),
+    ("avg_bandwidth_gbs", "num"),
+    ("eff_bandwidth_gbs", "num"),
+    ("halo_time_s", "num"),
+    ("tiles", "num"),
+    ("tuned", "bool"),
+    ("tune_evals", "num"),
+    ("tune_cache_hits", "num"),
+    ("tuned_model_s", "num"),
+    ("heuristic_model_s", "num"),
+    ("tune_model_speedup", "num"),
+];
+
+fn assert_schema(rec: &BTreeMap<String, Val>) {
+    for (key, ty) in SCHEMA {
+        let v = rec
+            .get(*key)
+            .unwrap_or_else(|| panic!("missing key {key:?}"));
+        let got = match v {
+            Val::Str(_) => "str",
+            Val::Num(_) => "num",
+            Val::Bool(_) => "bool",
+        };
+        assert_eq!(&got, ty, "key {key:?}");
+    }
+    assert_eq!(
+        rec.len(),
+        SCHEMA.len(),
+        "unexpected extra keys: {:?}",
+        rec.keys().collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn json_record_roundtrips_and_schema_is_stable() {
+    let mut m = Metrics::new();
+    m.record_loop("k", 2_000_000_000, 0.01);
+    m.elapsed_s = 0.04;
+    m.halo_time_s = 0.001;
+    m.tiles = 12;
+    let rec = parse_flat(&json_record("cloverleaf2d", "KNL cache tiled", 1, 24.0, &m, false));
+    assert_schema(&rec);
+    assert_eq!(rec["app"], Val::Str("cloverleaf2d".into()));
+    assert_eq!(rec["ranks"], Val::Num(1.0));
+    assert_eq!(rec["oom"], Val::Bool(false));
+    assert_eq!(rec["tiles"], Val::Num(12.0));
+    assert_eq!(rec["tuned"], Val::Bool(false));
+    assert_eq!(rec["tune_model_speedup"], Val::Num(1.0));
+    match &rec["avg_bandwidth_gbs"] {
+        Val::Num(v) => assert!((v - 200.0).abs() < 1e-9),
+        v => panic!("{v:?}"),
+    }
+}
+
+#[test]
+fn json_record_tuner_fields_roundtrip() {
+    let mut m = Metrics::new();
+    m.record_loop("k", 1_000_000_000, 0.01);
+    m.elapsed_s = 0.02;
+    m.tune_evals = 48;
+    m.tune_cache_hits = 7;
+    m.tuned_model_s = 0.5;
+    m.heuristic_model_s = 0.75;
+    let rec = parse_flat(&json_record("opensbli", "auto-tuned [GPU explicit]", 4, 48.0, &m, false));
+    assert_schema(&rec);
+    assert_eq!(rec["tuned"], Val::Bool(true));
+    assert_eq!(rec["tune_evals"], Val::Num(48.0));
+    assert_eq!(rec["tune_cache_hits"], Val::Num(7.0));
+    assert_eq!(rec["tune_model_speedup"], Val::Num(1.5));
+    assert_eq!(rec["ranks"], Val::Num(4.0));
+}
+
+#[test]
+fn json_record_escaping_survives_the_roundtrip() {
+    let m = Metrics::new();
+    let rec = parse_flat(&json_record("we\"ird\\app", "p", 1, 6.0, &m, true));
+    assert_eq!(rec["app"], Val::Str("we\"ird\\app".into()));
+    assert_eq!(rec["oom"], Val::Bool(true));
+}
+
+#[test]
+fn real_run_produces_a_parseable_record() {
+    use ops_oc::bench_support::run_cl2d_tuned;
+    use ops_oc::coordinator::Config;
+    use ops_oc::tuner::TuneOpts;
+    let (p, tuned) = Config::parse_spec("gpu-explicit:pcie:cyclic:tuned").unwrap();
+    assert!(tuned);
+    let (m, oom) = run_cl2d_tuned(
+        p,
+        Some(TuneOpts {
+            budget: 8,
+            seed: 0x10,
+        }),
+        8,
+        256,
+        0.01,
+        1,
+        0,
+    );
+    let rec = parse_flat(&json_record("cloverleaf2d", &p.label(), p.ranks(), 0.01, &m, oom));
+    assert_schema(&rec);
+    assert_eq!(rec["tuned"], Val::Bool(true));
+    match &rec["tune_model_speedup"] {
+        Val::Num(v) => assert!(*v >= 1.0 - 1e-12, "never-worse guarantee: {v}"),
+        v => panic!("{v:?}"),
+    }
+}

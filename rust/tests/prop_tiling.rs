@@ -253,15 +253,48 @@ fn prop_auto_plan_respects_budget() {
         let total = ops_oc::tiling::plan::chain_bytes(&f.chain, &f.datasets);
         for denom in [2u64, 5, 11] {
             let target = (total / denom).max(1);
-            let plan = plan_auto(&f.chain, &f.datasets, &f.stencils, target);
-            let fp = plan.max_footprint_bytes(&f.datasets);
-            // plan_auto stops when the footprint fits OR tiles are single
-            // planes wide (the practical floor for skewed slabs).
-            assert!(
-                fp <= target || plan.num_tiles() as u64 >= 100,
-                "seed {seed} denom {denom}: footprint {fp} > target {target} with {} tiles",
-                plan.num_tiles()
+            match plan_auto(&f.chain, &f.datasets, &f.stencils, target) {
+                // success now *guarantees* the footprint fits the target
+                Ok(plan) => {
+                    let fp = plan.max_footprint_bytes(&f.datasets);
+                    assert!(
+                        fp <= target,
+                        "seed {seed} denom {denom}: footprint {fp} > target {target} \
+                         with {} tiles",
+                        plan.num_tiles()
+                    );
+                }
+                // failure is typed and only legal when even single-plane
+                // tiles (the practical floor for skewed slabs) overflow
+                Err(e) => {
+                    let floor = ops_oc::tiling::plan::plan_chain(
+                        &f.chain,
+                        &f.datasets,
+                        &f.stencils,
+                        usize::MAX,
+                    );
+                    assert!(
+                        floor.max_footprint_bytes(&f.datasets) > target,
+                        "seed {seed} denom {denom}: error {e} but the floor plan fits"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_plan_source_auto_never_panics_on_degenerate_targets() {
+    for seed in 200..=220u64 {
+        let f = random_fixture(seed, 3, 5, 96);
+        for target in [0u64, 1, 64, u64::MAX] {
+            let plan = ops_oc::tiling::plan::PlanSource::Auto.plan(
+                &f.chain,
+                &f.datasets,
+                &f.stencils,
+                target,
             );
+            assert!(plan.num_tiles() >= 1, "seed {seed} target {target}");
         }
     }
 }

@@ -92,6 +92,47 @@ fn no_overlap_ablation_keeps_numerics() {
     assert_eq!(with, without);
 }
 
+/// Auto-tuned sharded execution stays bit-exact too: whatever per-rank
+/// candidate the tuner picks, the decomposed numerics must equal the
+/// single-device untiled reference.
+#[test]
+fn tuned_sharded_matches_untiled_bitexact() {
+    use ops_oc::tuner::TuneOpts;
+    let tune = TuneOpts {
+        budget: 10,
+        seed: 0x5A,
+    };
+    let run_tuned = |p: Platform| {
+        let cfg = Config::new(p, AppCalib::CLOVERLEAF_2D)
+            .with_tuning(tune)
+            .unwrap();
+        let mut ctx = OpsContext::new(cfg.build_engine());
+        let mut app = CloverLeaf2D::new(&mut ctx, 20, 20, 1);
+        app.run(&mut ctx, 3, 0);
+        let out = (
+            ctx.fetch(app.density0),
+            ctx.fetch(app.energy0),
+            ctx.fetch(app.xvel0),
+        );
+        (out, ctx.metrics().clone())
+    };
+    let reference = run_cl2d(Platform::KnlFlatDdr4);
+    for decomp in [DecompKind::OneD, DecompKind::TwoD] {
+        for ranks in [2u32, 4] {
+            let (got, m) = run_tuned(sharded(ranks, decomp, true));
+            assert_eq!(reference.0, got.0, "density0 tuned x{ranks} {}", decomp.label());
+            assert_eq!(reference.1, got.1, "energy0 tuned x{ranks} {}", decomp.label());
+            assert_eq!(reference.2, got.2, "xvel0 tuned x{ranks} {}", decomp.label());
+            assert!(
+                m.tuned_model_s <= m.heuristic_model_s,
+                "never-worse must hold under sharding"
+            );
+        }
+    }
+    let (knl, _) = run_tuned(sharded_knl(4, DecompKind::TwoD));
+    assert_eq!(reference.0, knl.0, "density0 tuned sharded KNL");
+}
+
 /// The acceptance-criterion cell: CloverLeaf 2D at a modelled 48 GB on
 /// 4 explicitly-streamed NVLink GPUs completes and reports per-rank and
 /// aggregate metrics.

@@ -110,6 +110,91 @@ fn opensbli_identical_on_key_platforms() {
     }
 }
 
+/// Auto-tuned plans are re-schedules too: on every tunable platform the
+/// three apps must stay bit-exact against untiled execution, whatever
+/// candidate the search picks.
+#[test]
+fn tuned_plans_stay_bitexact_on_all_apps() {
+    use ops_oc::tuner::TuneOpts;
+    let tune = TuneOpts {
+        budget: 12,
+        seed: 0xE0,
+    };
+    let tuned_specs = [
+        "knl-cache-tiled:tuned",
+        "gpu-explicit:pcie:cyclic:prefetch:tuned",
+        "gpu-explicit:nvlink:tuned",
+        "gpu-unified:pcie:tiled:prefetch:tuned",
+    ];
+    // CloverLeaf 2D
+    let reference = {
+        let mut ctx = OpsContext::new(
+            Config::new(Platform::KnlFlatDdr4, AppCalib::CLOVERLEAF_2D).build_engine(),
+        );
+        let mut app = CloverLeaf2D::new(&mut ctx, 16, 16, 1);
+        app.run(&mut ctx, 3, 2);
+        ctx.fetch(app.density0)
+    };
+    for spec in tuned_specs {
+        let (p, tuned) = Config::parse_spec(spec).unwrap();
+        assert!(tuned, "{spec}");
+        let cfg = Config::new(p, AppCalib::CLOVERLEAF_2D)
+            .with_tuning(tune)
+            .unwrap();
+        let mut ctx = OpsContext::new(cfg.build_engine());
+        let mut app = CloverLeaf2D::new(&mut ctx, 16, 16, 1);
+        app.run(&mut ctx, 3, 2);
+        assert_eq!(
+            reference,
+            ctx.fetch(app.density0),
+            "cl2d density0 differs on tuned {spec}"
+        );
+    }
+    // CloverLeaf 3D
+    let reference = {
+        let mut ctx = OpsContext::new(
+            Config::new(Platform::KnlFlatDdr4, AppCalib::CLOVERLEAF_3D).build_engine(),
+        );
+        let mut app = CloverLeaf3D::new(&mut ctx, 8, 8, 8, 1);
+        app.run(&mut ctx, 2, 0);
+        ctx.fetch(app.energy0)
+    };
+    for spec in ["knl-cache-tiled:tuned", "gpu-explicit:pcie:cyclic:tuned"] {
+        let (p, _) = Config::parse_spec(spec).unwrap();
+        let cfg = Config::new(p, AppCalib::CLOVERLEAF_3D)
+            .with_tuning(tune)
+            .unwrap();
+        let mut ctx = OpsContext::new(cfg.build_engine());
+        let mut app = CloverLeaf3D::new(&mut ctx, 8, 8, 8, 1);
+        app.run(&mut ctx, 2, 0);
+        assert_eq!(
+            reference,
+            ctx.fetch(app.energy0),
+            "cl3d energy0 differs on tuned {spec}"
+        );
+    }
+    // OpenSBLI
+    let reference = {
+        let mut ctx =
+            OpsContext::new(Config::new(Platform::KnlFlatDdr4, AppCalib::OPENSBLI).build_engine());
+        let mut app = OpenSbli::new(&mut ctx, 16, 1, 1);
+        app.run(&mut ctx, 2);
+        ctx.fetch(app.q[1])
+    };
+    for spec in ["knl-cache-tiled:tuned", "gpu-explicit:nvlink:cyclic:tuned"] {
+        let (p, _) = Config::parse_spec(spec).unwrap();
+        let cfg = Config::new(p, AppCalib::OPENSBLI).with_tuning(tune).unwrap();
+        let mut ctx = OpsContext::new(cfg.build_engine());
+        let mut app = OpenSbli::new(&mut ctx, 16, 1, 1);
+        app.run(&mut ctx, 2);
+        assert_eq!(
+            reference,
+            ctx.fetch(app.q[1]),
+            "opensbli rhou differs on tuned {spec}"
+        );
+    }
+}
+
 #[test]
 fn optimisation_toggles_change_traffic_not_results() {
     let run = |cyclic: bool, prefetch: bool| {
