@@ -9,6 +9,8 @@
 //! 3. **Skew necessity** — plans built with dependency-derived shifts vs
 //!    a (wrong) zero-shift schedule: counts how many tiles would read
 //!    not-yet-computed data (correctness, not time).
+#![allow(deprecated)] // exercises the legacy OpsContext shim on purpose
+
 use ops_oc::apps::cloverleaf2d::CloverLeaf2D;
 use ops_oc::bench_support::{base_bytes, model_scale, Figure};
 use ops_oc::coordinator::{Config, Platform};

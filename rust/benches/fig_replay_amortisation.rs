@@ -1,0 +1,107 @@
+//! Replay amortisation: per-step chain-analysis cost → ~0 after the
+//! first replay.
+//!
+//! The legacy eager `OpsContext` re-runs the `O(L²·A²)` dependency/
+//! footprint analysis at every flush; a frozen `Program` pays it once at
+//! freeze time and every `Session::replay` reuses it (the run-time
+//! tiling amortisation of Reguly et al., 1704.00693). This bench runs
+//! the same diffusion and CloverLeaf 2D workloads both ways and reports
+//! host-side wall time plus the `analysis_builds`/`analysis_reuse_hits`
+//! counters; the counters are asserted, the timings are informative.
+
+#![allow(deprecated)] // measures the legacy OpsContext shim on purpose
+
+use ops_oc::apps::cloverleaf2d::CloverLeaf2D;
+use ops_oc::apps::diffusion::Diffusion2D;
+use ops_oc::coordinator::{Config, Platform};
+use ops_oc::memory::AppCalib;
+use ops_oc::ops::{Drive, OpsContext};
+use ops_oc::program::{ProgramBuilder, Session};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let steps = 200;
+    let p = Platform::KnlCacheTiled;
+
+    println!("### Replay amortisation: per-step analysis cost (host wall clock)");
+    println!("(numerics are identical on both paths; only analysis work differs)\n");
+
+    // ---- diffusion, record-once vs eager --------------------------------
+    let cfg = Config::new(p, AppCalib::CLOVERLEAF_2D);
+
+    let t0 = Instant::now();
+    let mut c = OpsContext::new(cfg.build_engine());
+    let app = Diffusion2D::new(&mut c, 128, 128, 1);
+    app.run(&mut c, steps, 1);
+    let legacy_wall = t0.elapsed().as_secs_f64();
+    let legacy_builds = c.metrics().analysis_builds;
+
+    let t0 = Instant::now();
+    let mut b = ProgramBuilder::new();
+    let app = Diffusion2D::new(&mut b, 128, 128, 1);
+    let chains = app.record_chains(&mut b, 1);
+    let prog = Arc::new(b.freeze().expect("diffusion freezes"));
+    let mut s = Session::new(prog, &cfg);
+    s.run_chain(chains.init);
+    s.reset_metrics();
+    s.set_cyclic_phase(true);
+    s.replay(chains.step, steps);
+    let replay_wall = t0.elapsed().as_secs_f64();
+    let m = s.metrics().clone();
+
+    println!("diffusion 128x128, {steps} steps on {}:", p.label());
+    println!(
+        "  eager OpsContext : {legacy_wall:>8.3} s wall, {legacy_builds} analyses \
+         ({:.1} us analysis-adjacent budget/step)",
+        legacy_wall / steps as f64 * 1e6
+    );
+    println!(
+        "  Program/Session  : {replay_wall:>8.3} s wall, {} analysis + {} reuse hits, \
+         freeze {:.6} s (amortised {:.3} us/step)",
+        m.analysis_builds,
+        m.analysis_reuse_hits,
+        m.program_freeze_s,
+        m.program_freeze_s / steps as f64 * 1e6
+    );
+    assert_eq!(legacy_builds as usize, steps, "eager path analyses every step");
+    assert_eq!(m.analysis_builds, 1, "replay path analyses once");
+    assert_eq!(m.analysis_reuse_hits as usize, steps - 1);
+
+    // ---- CloverLeaf 2D (long chains): session memo vs eager -------------
+    let steps = 8;
+    let t0 = Instant::now();
+    let mut c = OpsContext::new(cfg.build_engine());
+    let mut app = CloverLeaf2D::new(&mut c, 8, 1024, 1);
+    app.run(&mut c, steps, 0);
+    let legacy_wall = t0.elapsed().as_secs_f64();
+    let legacy_builds = c.metrics().analysis_builds;
+    let legacy_chains = c.metrics().chains;
+
+    let t0 = Instant::now();
+    let mut b = ProgramBuilder::new();
+    let mut app = CloverLeaf2D::new(&mut b, 8, 1024, 1);
+    let prog = Arc::new(b.freeze().expect("cloverleaf2d freezes"));
+    let mut s = Session::new(prog, &cfg);
+    app.run(&mut s, steps, 0);
+    let session_wall = t0.elapsed().as_secs_f64();
+    let m = s.metrics().clone();
+
+    println!("\ncloverleaf2d 8x1024, {steps} steps (dt re-recorded per step):");
+    println!(
+        "  eager OpsContext : {legacy_wall:>8.3} s wall, {legacy_builds} analyses over {legacy_chains} chains"
+    );
+    println!(
+        "  Session (memo)   : {session_wall:>8.3} s wall, {} analyses + {} reuse hits over {} chains",
+        m.analysis_builds, m.analysis_reuse_hits, m.chains
+    );
+    assert_eq!(legacy_builds, legacy_chains, "eager path analyses every chain");
+    assert!(
+        m.analysis_builds < m.chains,
+        "session memo must amortise: {} builds for {} chains",
+        m.analysis_builds,
+        m.chains
+    );
+    assert!(m.analysis_reuse_hits > 0);
+    println!("\nper-step modelled analysis cost after the first replay: ~0 (cache hit)");
+}

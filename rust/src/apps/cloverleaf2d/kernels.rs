@@ -9,7 +9,7 @@
 //! loops (they land in the first/last tiles only).
 
 use crate::ops::kernel::kernel;
-use crate::ops::{Access, Arg, BlockId, Ctx, DatasetId, OpsContext, StencilId};
+use crate::ops::{Access, Arg, BlockId, Ctx, DatasetId, Record, StencilId};
 
 /// Mirror offset for the low-side halo at logical index `i` (< 0):
 /// cell-centred fields reflect about the face at −½ (`i' = −1−i`),
@@ -40,7 +40,7 @@ fn mirror_hi(i: isize, size: isize, node: bool) -> isize {
 /// their own direction only — keeping the strips out of the *other*
 /// direction's skew computation.
 pub fn halo_strips(
-    ctx: &mut OpsContext,
+    ctx: &mut impl Record,
     block: BlockId,
     name: &str,
     d: DatasetId,

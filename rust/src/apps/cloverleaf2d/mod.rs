@@ -16,7 +16,9 @@ pub mod kernels;
 
 use crate::ops::kernel::kernel;
 use crate::ops::stencil::shapes;
-use crate::ops::{Access, Arg, BlockId, DatasetId, OpsContext, RedOp, ReductionId, StencilId};
+use crate::ops::{
+    Access, Arg, BlockId, DatasetId, Declare, Drive, RedOp, Record, ReductionId, StencilId,
+};
 
 const G_SMALL: f64 = 1.0e-16;
 const G_BIG: f64 = 1.0e21;
@@ -125,7 +127,7 @@ impl CloverLeaf2D {
     /// Declare all datasets/stencils. `model_scale` multiplies modelled
     /// bytes per element so a small grid can stand in for a paper-sized
     /// problem inside the memory simulators.
-    pub fn new(ctx: &mut OpsContext, nx: usize, ny: usize, model_scale: u64) -> Self {
+    pub fn new<D: Declare>(ctx: &mut D, nx: usize, ny: usize, model_scale: u64) -> Self {
         ctx.set_model_elem_bytes(8 * model_scale.max(1));
         let block = ctx.decl_block("clover", [nx, ny, 1]);
         let h = [2, 2, 0];
@@ -134,8 +136,7 @@ impl CloverLeaf2D {
         let xface = [nx + 1, ny, 1];
         let yface = [nx, ny + 1, 1];
 
-        let dat =
-            |ctx: &mut OpsContext, n: &str, s: [usize; 3]| ctx.decl_dat(block, n, s, h, h);
+        let dat = |ctx: &mut D, n: &str, s: [usize; 3]| ctx.decl_dat(block, n, s, h, h);
 
         let density0 = dat(ctx, "density0", cell);
         let density1 = dat(ctx, "density1", cell);
@@ -290,7 +291,7 @@ impl CloverLeaf2D {
     /// Two-state shock problem (the standard clover.in setup): ambient
     /// (ρ=0.2, e=1.0) with a dense energetic box in the lower-left corner
     /// (ρ=1.0, e=2.5). Also fills the geometry fields.
-    pub fn initialise(&self, ctx: &mut OpsContext) {
+    pub fn initialise(&self, ctx: &mut impl Record) {
         let (dx, dy) = (self.dx, self.dy);
         let (nx, ny) = (self.nx as isize, self.ny as isize);
         ctx.par_loop(
@@ -355,7 +356,7 @@ impl CloverLeaf2D {
     // ------------------------------------------------------------ kernels
 
     /// Equation of state: pressure + soundspeed from density/energy.
-    pub fn ideal_gas(&self, ctx: &mut OpsContext, predict: bool) {
+    pub fn ideal_gas(&self, ctx: &mut impl Record, predict: bool) {
         let gamma = self.gamma;
         let (den, ener) = if predict {
             (self.density1, self.energy1)
@@ -387,7 +388,7 @@ impl CloverLeaf2D {
     }
 
     /// Tensor artificial viscosity (Wilkins-style, as in CloverLeaf).
-    pub fn viscosity_kernel(&self, ctx: &mut OpsContext) {
+    pub fn viscosity_kernel(&self, ctx: &mut impl Record) {
         let (dx, dy) = (self.dx, self.dy);
         ctx.par_loop(
             "cl2d_viscosity",
@@ -433,7 +434,7 @@ impl CloverLeaf2D {
 
     /// CFL timestep: min over cells of sound/viscous/velocity limits.
     /// Returns the chosen dt — the chain trigger point.
-    pub fn calc_dt(&mut self, ctx: &mut OpsContext) -> f64 {
+    pub fn calc_dt(&mut self, ctx: &mut impl Drive) -> f64 {
         let (dx, dy) = (self.dx, self.dy);
         ctx.par_loop(
             "cl2d_calc_dt",
@@ -477,7 +478,7 @@ impl CloverLeaf2D {
     /// PdV: volume-change update of energy and density. The predictor
     /// uses `xvel0` only with dt/2; the corrector the vel0+vel1 average
     /// with the full dt — exactly the original's two branches.
-    pub fn pdv(&self, ctx: &mut OpsContext, predict: bool) {
+    pub fn pdv(&self, ctx: &mut impl Record, predict: bool) {
         let dt = self.dt;
         ctx.par_loop(
             if predict { "cl2d_pdv_predict" } else { "cl2d_pdv" },
@@ -537,7 +538,7 @@ impl CloverLeaf2D {
     }
 
     /// Revert: discard the predictor state.
-    pub fn revert(&self, ctx: &mut OpsContext) {
+    pub fn revert(&self, ctx: &mut impl Record) {
         ctx.par_loop(
             "cl2d_revert",
             self.block,
@@ -559,7 +560,7 @@ impl CloverLeaf2D {
 
     /// Accelerate: nodal momentum update from pressure + viscosity
     /// gradients.
-    pub fn accelerate(&self, ctx: &mut OpsContext) {
+    pub fn accelerate(&self, ctx: &mut impl Record) {
         let dt = self.dt;
         let (dx, dy) = (self.dx, self.dy);
         ctx.par_loop(
@@ -594,7 +595,7 @@ impl CloverLeaf2D {
     }
 
     /// Face volume fluxes from the time-averaged velocities.
-    pub fn flux_calc(&self, ctx: &mut OpsContext) {
+    pub fn flux_calc(&self, ctx: &mut impl Record) {
         let dt = self.dt;
         ctx.par_loop(
             "cl2d_flux_calc_x",
@@ -636,7 +637,7 @@ impl CloverLeaf2D {
 
     /// Cell-centred advection (density + energy), one direction:
     /// pre/post volumes → limited upwind fluxes → conservative update.
-    pub fn advec_cell(&self, ctx: &mut OpsContext, xdir: bool, first_sweep: bool) {
+    pub fn advec_cell(&self, ctx: &mut impl Record, xdir: bool, first_sweep: bool) {
         let (vol_flux, mass_flux) = if xdir {
             (self.vol_flux_x, self.mass_flux_x)
         } else {
@@ -758,7 +759,7 @@ impl CloverLeaf2D {
 
     /// Momentum advection for one velocity component along one direction:
     /// node fluxes → node masses → limited momentum flux → update.
-    pub fn advec_mom(&self, ctx: &mut OpsContext, vel: DatasetId, xdir: bool) {
+    pub fn advec_mom(&self, ctx: &mut impl Record, vel: DatasetId, xdir: bool) {
         let (mass_flux, st_adv, st_m1, st_nflux) = if xdir {
             (self.mass_flux_x, self.s_mom_x, self.s_xm1, self.s_nflux_x)
         } else {
@@ -877,7 +878,7 @@ impl CloverLeaf2D {
     }
 
     /// Copy the advected state back to level 0.
-    pub fn reset_field(&self, ctx: &mut OpsContext) {
+    pub fn reset_field(&self, ctx: &mut impl Record) {
         ctx.par_loop(
             "cl2d_reset_field",
             self.block,
@@ -914,7 +915,7 @@ impl CloverLeaf2D {
         );
     }
 
-    fn halo_cell(&self, ctx: &mut OpsContext, name: &str, d: DatasetId) {
+    fn halo_cell(&self, ctx: &mut impl Record, name: &str, d: DatasetId) {
         kernels::halo_strips(
             ctx,
             self.block,
@@ -931,7 +932,7 @@ impl CloverLeaf2D {
         );
     }
 
-    fn halo_vel(&self, ctx: &mut OpsContext, name: &str, d: DatasetId, flip_x: bool, flip_y: bool) {
+    fn halo_vel(&self, ctx: &mut impl Record, name: &str, d: DatasetId, flip_x: bool, flip_y: bool) {
         kernels::halo_strips(
             ctx,
             self.block,
@@ -948,14 +949,14 @@ impl CloverLeaf2D {
         );
     }
 
-    fn update_halo_hydro(&self, ctx: &mut OpsContext) {
+    fn update_halo_hydro(&self, ctx: &mut impl Record) {
         self.halo_cell(ctx, "halo_density1", self.density1);
         self.halo_cell(ctx, "halo_energy1", self.energy1);
         self.halo_cell(ctx, "halo_pressure", self.pressure);
         self.halo_cell(ctx, "halo_viscosity", self.viscosity);
     }
 
-    fn update_halo_vel(&self, ctx: &mut OpsContext) {
+    fn update_halo_vel(&self, ctx: &mut impl Record) {
         self.halo_vel(ctx, "halo_xvel1", self.xvel1, true, false);
         self.halo_vel(ctx, "halo_yvel1", self.yvel1, false, true);
     }
@@ -963,7 +964,7 @@ impl CloverLeaf2D {
     // ------------------------------------------------------------ driver
 
     /// One full timestep (the paper's per-iteration chain). Returns dt.
-    pub fn step(&mut self, ctx: &mut OpsContext) -> f64 {
+    pub fn step(&mut self, ctx: &mut impl Drive) -> f64 {
         self.ideal_gas(ctx, false);
         self.halo_cell(ctx, "halo_pressure", self.pressure);
         self.viscosity_kernel(ctx);
@@ -1006,7 +1007,7 @@ impl CloverLeaf2D {
 
     /// Conserved-quantity summary (trigger point; every N steps in the
     /// paper's runs — the "one long loop chain with poor overlap").
-    pub fn field_summary(&self, ctx: &mut OpsContext) -> FieldSummary {
+    pub fn field_summary(&self, ctx: &mut impl Drive) -> FieldSummary {
         ctx.par_loop(
             "cl2d_field_summary",
             self.block,
@@ -1058,7 +1059,7 @@ impl CloverLeaf2D {
 
     /// Standard benchmark driver: initialise (untimed), then `steps`
     /// timesteps with a field summary every `summary_every` steps.
-    pub fn run(&mut self, ctx: &mut OpsContext, steps: usize, summary_every: usize) {
+    pub fn run(&mut self, ctx: &mut impl Drive, steps: usize, summary_every: usize) {
         self.initialise(ctx);
         ctx.flush();
         ctx.reset_metrics();
@@ -1074,10 +1075,12 @@ impl CloverLeaf2D {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::coordinator::{Config, Platform};
     use crate::memory::{AppCalib, Link};
+    use crate::ops::OpsContext;
 
     fn ctx(p: Platform) -> OpsContext {
         OpsContext::new(Config::new(p, AppCalib::CLOVERLEAF_2D).build_engine())

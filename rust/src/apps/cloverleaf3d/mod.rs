@@ -14,7 +14,9 @@
 
 use crate::ops::kernel::kernel;
 use crate::ops::stencil::shapes;
-use crate::ops::{Access, Arg, BlockId, Ctx, DatasetId, OpsContext, RedOp, ReductionId, StencilId};
+use crate::ops::{
+    Access, Arg, BlockId, Ctx, DatasetId, Declare, Drive, RedOp, Record, ReductionId, StencilId,
+};
 
 const G_SMALL: f64 = 1.0e-16;
 const G_BIG: f64 = 1.0e21;
@@ -159,7 +161,7 @@ pub struct FieldSummary3D {
 }
 
 impl CloverLeaf3D {
-    pub fn new(ctx: &mut OpsContext, nx: usize, ny: usize, nz: usize, model_scale: u64) -> Self {
+    pub fn new<D: Declare>(ctx: &mut D, nx: usize, ny: usize, nz: usize, model_scale: u64) -> Self {
         ctx.set_model_elem_bytes(8 * model_scale.max(1));
         let block = ctx.decl_block("clover3d", [nx, ny, nz]);
         let h = [2, 2, 2];
@@ -171,8 +173,7 @@ impl CloverLeaf3D {
             Dir::Z => [nx, ny, nz + 1],
         };
 
-        let dat =
-            |ctx: &mut OpsContext, nme: &str, s: [usize; 3]| ctx.decl_dat(block, nme, s, h, h);
+        let dat = |ctx: &mut D, nme: &str, s: [usize; 3]| ctx.decl_dat(block, nme, s, h, h);
 
         let density0 = dat(ctx, "density0", cell);
         let density1 = dat(ctx, "density1", cell);
@@ -218,7 +219,7 @@ impl CloverLeaf3D {
         let s_pt = ctx.decl_stencil("s3d_000", shapes::point());
         let s_c2n = ctx.decl_stencil("c2n", CELL_TO_NODE.map(|o| [o[0] as i32, o[1] as i32, o[2] as i32]).to_vec());
         let s_n2c = ctx.decl_stencil("n2c", NODE_TO_CELL.map(|o| [o[0] as i32, o[1] as i32, o[2] as i32]).to_vec());
-        let mk_line = |ctx: &mut OpsContext, nme: &str, d: Dir, ks: &[i32]| {
+        let mk_line = |ctx: &mut D, nme: &str, d: Dir, ks: &[i32]| {
             let pts: Vec<[i32; 3]> = ks
                 .iter()
                 .map(|&k| {
@@ -250,7 +251,7 @@ impl CloverLeaf3D {
         ];
         // node flux: the 4 dir-faces adjacent to a node: dir offsets {0,1},
         // transverse offsets {-1,0} in both transverse dims.
-        let mk_nflux = |ctx: &mut OpsContext, nme: &str, d: Dir| {
+        let mk_nflux = |ctx: &mut D, nme: &str, d: Dir| {
             let mut pts = vec![];
             for kd in 0..2isize {
                 for t1 in -1..1isize {
@@ -272,7 +273,7 @@ impl CloverLeaf3D {
             mk_nflux(ctx, "nflux_z", Dir::Z),
         ];
         // face stencil for PdV / flux_calc: node corners of a dir-face
-        let mk_face = |ctx: &mut OpsContext, nme: &str, d: Dir| {
+        let mk_face = |ctx: &mut D, nme: &str, d: Dir| {
             let pts: Vec<[i32; 3]> = match d {
                 Dir::X => vec![[0, 0, 0], [0, 1, 0], [0, 0, 1], [0, 1, 1], [1, 0, 0], [1, 1, 0], [1, 0, 1], [1, 1, 1]],
                 Dir::Y => vec![[0, 0, 0], [1, 0, 0], [0, 0, 1], [1, 0, 1], [0, 1, 0], [1, 1, 0], [0, 1, 1], [1, 1, 1]],
@@ -287,7 +288,7 @@ impl CloverLeaf3D {
         ];
         let s_star = ctx.decl_stencil("star3d", shapes::star3d(1));
         // halo mirror reads reach ±4 along their own dimension only
-        let mk_halo = |ctx: &mut OpsContext, nme: &str, d: usize| {
+        let mk_halo = |ctx: &mut D, nme: &str, d: usize| {
             let pts: Vec<[i32; 3]> = (-4..=4)
                 .map(|k| {
                     let mut p = [0i32; 3];
@@ -391,7 +392,7 @@ impl CloverLeaf3D {
 
     // ---------------------------------------------------------------- init
 
-    pub fn initialise(&self, ctx: &mut OpsContext) {
+    pub fn initialise(&self, ctx: &mut impl Record) {
         let dd = self.d;
         let (nx, ny, nz) = (
             self.n[0] as isize,
@@ -458,7 +459,7 @@ impl CloverLeaf3D {
 
     // ------------------------------------------------------------ kernels
 
-    pub fn ideal_gas(&self, ctx: &mut OpsContext, predict: bool) {
+    pub fn ideal_gas(&self, ctx: &mut impl Record, predict: bool) {
         let gamma = self.gamma;
         let (den, ener) = if predict {
             (self.density1, self.energy1)
@@ -490,7 +491,7 @@ impl CloverLeaf3D {
     }
 
     /// 3D artificial viscosity (per-direction compression limiter).
-    pub fn viscosity_kernel(&self, ctx: &mut OpsContext) {
+    pub fn viscosity_kernel(&self, ctx: &mut impl Record) {
         let dd = self.d;
         ctx.par_loop(
             "cl3d_viscosity",
@@ -559,7 +560,7 @@ impl CloverLeaf3D {
         );
     }
 
-    pub fn calc_dt(&mut self, ctx: &mut OpsContext) -> f64 {
+    pub fn calc_dt(&mut self, ctx: &mut impl Drive) -> f64 {
         let dd = self.d;
         ctx.par_loop(
             "cl3d_calc_dt",
@@ -600,7 +601,7 @@ impl CloverLeaf3D {
     }
 
     /// PdV with 6 face fluxes; predictor uses vel0 with dt/2.
-    pub fn pdv(&self, ctx: &mut OpsContext, predict: bool) {
+    pub fn pdv(&self, ctx: &mut impl Record, predict: bool) {
         let dt = self.dt;
         // args: 0 density0, 1..=3 vel0, 4..=6 vel1, 7..=9 areas, 10 volume,
         // 11 energy0, 12 pressure, 13 viscosity, 14 energy1 W, 15 density1 W
@@ -669,7 +670,7 @@ impl CloverLeaf3D {
         );
     }
 
-    pub fn revert(&self, ctx: &mut OpsContext) {
+    pub fn revert(&self, ctx: &mut impl Record) {
         ctx.par_loop(
             "cl3d_revert",
             self.block,
@@ -689,7 +690,7 @@ impl CloverLeaf3D {
         );
     }
 
-    pub fn accelerate(&self, ctx: &mut OpsContext) {
+    pub fn accelerate(&self, ctx: &mut impl Record) {
         let dt = self.dt;
         let dd = self.d;
         ctx.par_loop(
@@ -735,7 +736,7 @@ impl CloverLeaf3D {
         );
     }
 
-    pub fn flux_calc(&self, ctx: &mut OpsContext) {
+    pub fn flux_calc(&self, ctx: &mut impl Record) {
         let dt = self.dt;
         for dir in Dir::all() {
             let i = dir as usize;
@@ -766,7 +767,7 @@ impl CloverLeaf3D {
     /// Cell advection along `dir`; `remaining` = bitmask of sweep dirs not
     /// yet done (incl. this one) — controls the telescoping pre/post
     /// volumes of the split scheme.
-    pub fn advec_cell(&self, ctx: &mut OpsContext, dir: Dir, remaining: [bool; 3]) {
+    pub fn advec_cell(&self, ctx: &mut impl Record, dir: Dir, remaining: [bool; 3]) {
         let i = dir as usize;
         let dn = dir.name();
 
@@ -870,7 +871,7 @@ impl CloverLeaf3D {
     }
 
     /// Momentum advection for one velocity component along one direction.
-    pub fn advec_mom(&self, ctx: &mut OpsContext, vc: usize, dir: Dir) {
+    pub fn advec_mom(&self, ctx: &mut impl Record, vc: usize, dir: Dir) {
         let i = dir as usize;
         let vel = self.vel1[vc];
         let dn = dir.name();
@@ -992,7 +993,7 @@ impl CloverLeaf3D {
         );
     }
 
-    pub fn reset_field(&self, ctx: &mut OpsContext) {
+    pub fn reset_field(&self, ctx: &mut impl Record) {
         ctx.par_loop(
             "cl3d_reset_field",
             self.block,
@@ -1032,7 +1033,7 @@ impl CloverLeaf3D {
     #[allow(clippy::too_many_arguments)]
     fn halo_faces(
         &self,
-        ctx: &mut OpsContext,
+        ctx: &mut impl Record,
         name: &str,
         d: DatasetId,
         sizes: [isize; 3],
@@ -1086,7 +1087,7 @@ impl CloverLeaf3D {
         }
     }
 
-    fn halo_cell(&self, ctx: &mut OpsContext, name: &str, d: DatasetId) {
+    fn halo_cell(&self, ctx: &mut impl Record, name: &str, d: DatasetId) {
         let s = [
             self.n[0] as isize,
             self.n[1] as isize,
@@ -1095,7 +1096,7 @@ impl CloverLeaf3D {
         self.halo_faces(ctx, name, d, s, false, None);
     }
 
-    fn halo_vel(&self, ctx: &mut OpsContext, name: &str, d: DatasetId, flip_dir: usize) {
+    fn halo_vel(&self, ctx: &mut impl Record, name: &str, d: DatasetId, flip_dir: usize) {
         let s = [
             self.n[0] as isize + 1,
             self.n[1] as isize + 1,
@@ -1104,14 +1105,14 @@ impl CloverLeaf3D {
         self.halo_faces(ctx, name, d, s, true, Some(flip_dir));
     }
 
-    fn update_halo_hydro(&self, ctx: &mut OpsContext) {
+    fn update_halo_hydro(&self, ctx: &mut impl Record) {
         self.halo_cell(ctx, "halo_density1", self.density1);
         self.halo_cell(ctx, "halo_energy1", self.energy1);
         self.halo_cell(ctx, "halo_pressure", self.pressure);
         self.halo_cell(ctx, "halo_viscosity", self.viscosity);
     }
 
-    fn update_halo_vel(&self, ctx: &mut OpsContext) {
+    fn update_halo_vel(&self, ctx: &mut impl Record) {
         self.halo_vel(ctx, "halo_xvel1", self.vel1[0], 0);
         self.halo_vel(ctx, "halo_yvel1", self.vel1[1], 1);
         self.halo_vel(ctx, "halo_zvel1", self.vel1[2], 2);
@@ -1121,7 +1122,7 @@ impl CloverLeaf3D {
 
     /// One timestep: Lagrangian step + x/y/z split advection (sweep order
     /// rotates with step parity, as in the original).
-    pub fn step(&mut self, ctx: &mut OpsContext) -> f64 {
+    pub fn step(&mut self, ctx: &mut impl Drive) -> f64 {
         self.ideal_gas(ctx, false);
         self.halo_cell(ctx, "halo_pressure", self.pressure);
         self.viscosity_kernel(ctx);
@@ -1157,7 +1158,7 @@ impl CloverLeaf3D {
         dt
     }
 
-    pub fn field_summary(&self, ctx: &mut OpsContext) -> FieldSummary3D {
+    pub fn field_summary(&self, ctx: &mut impl Drive) -> FieldSummary3D {
         ctx.par_loop(
             "cl3d_field_summary",
             self.block,
@@ -1205,7 +1206,7 @@ impl CloverLeaf3D {
         }
     }
 
-    pub fn run(&mut self, ctx: &mut OpsContext, steps: usize, summary_every: usize) {
+    pub fn run(&mut self, ctx: &mut impl Drive, steps: usize, summary_every: usize) {
         self.initialise(ctx);
         ctx.flush();
         ctx.reset_metrics();
@@ -1221,10 +1222,12 @@ impl CloverLeaf3D {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::coordinator::{Config, Platform};
     use crate::memory::{AppCalib, Link};
+    use crate::ops::OpsContext;
 
     fn ctx(p: Platform) -> OpsContext {
         OpsContext::new(Config::new(p, AppCalib::CLOVERLEAF_3D).build_engine())

@@ -9,7 +9,10 @@
 
 use crate::ops::kernel::kernel;
 use crate::ops::stencil::shapes;
-use crate::ops::{Access, Arg, BlockId, DatasetId, OpsContext, RedOp, ReductionId, StencilId};
+use crate::ops::{
+    Access, Arg, BlockId, DatasetId, Declare, Drive, RedOp, Record, ReductionId, StencilId,
+};
+use crate::program::{ChainId, ProgramBuilder};
 
 /// Handles for the diffusion problem.
 pub struct Diffusion2D {
@@ -29,9 +32,10 @@ pub struct Diffusion2D {
 }
 
 impl Diffusion2D {
-    /// Declare data on `ctx`. `model_scale` multiplies the modelled bytes
-    /// per element (1 = actual size).
-    pub fn new(ctx: &mut OpsContext, nx: usize, ny: usize, model_scale: u64) -> Self {
+    /// Declare data on `ctx` (an [`OpsContext`](crate::ops::OpsContext)
+    /// or a [`ProgramBuilder`]). `model_scale` multiplies the modelled
+    /// bytes per element (1 = actual size).
+    pub fn new<D: Declare>(ctx: &mut D, nx: usize, ny: usize, model_scale: u64) -> Self {
         ctx.set_model_elem_bytes(8 * model_scale.max(1));
         let block = ctx.decl_block("grid", [nx, ny, 1]);
         let size = [nx, ny, 1];
@@ -58,7 +62,7 @@ impl Diffusion2D {
 
     /// Initial condition: a hot square in the centre over uniform
     /// conductivity; zero halos (Dirichlet walls).
-    pub fn init(&self, ctx: &mut OpsContext) {
+    pub fn init(&self, ctx: &mut impl Record) {
         let (nx, ny) = (self.nx as isize, self.ny as isize);
         let full = [(-1, nx + 1), (-1, ny + 1), (0, 1)];
         let (cx0, cx1) = (nx / 4, 3 * nx / 4);
@@ -81,7 +85,7 @@ impl Diffusion2D {
     }
 
     /// One timestep: Laplacian into the temp, then the explicit update.
-    pub fn step(&self, ctx: &mut OpsContext) {
+    pub fn step(&self, ctx: &mut impl Record) {
         let interior = [
             (0, self.nx as isize),
             (0, self.ny as isize),
@@ -122,7 +126,46 @@ impl Diffusion2D {
 
     /// Total heat (a conserved quantity away from the walls) — a chain
     /// trigger point.
-    pub fn total_heat(&self, ctx: &mut OpsContext) -> f64 {
+    pub fn total_heat(&self, ctx: &mut impl Drive) -> f64 {
+        self.record_total_heat(ctx);
+        ctx.reduction_result(self.sum)
+    }
+
+    /// Standard driver: init, mark cyclic, run `steps` steps with a chain
+    /// boundary per `chain_steps` steps.
+    pub fn run(&self, ctx: &mut impl Drive, steps: usize, chain_steps: usize) {
+        self.init(ctx);
+        ctx.flush();
+        ctx.reset_metrics();
+        ctx.set_cyclic_phase(true);
+        for s in 0..steps {
+            self.step(ctx);
+            if (s + 1) % chain_steps.max(1) == 0 {
+                ctx.flush();
+            }
+        }
+        ctx.flush();
+    }
+
+    /// Record the init and step chains **once** into `b` (the
+    /// record-once API): replay them with
+    /// [`crate::program::Session::replay`]. `chain_steps` timesteps are
+    /// recorded into the step chain, so one replay is one chain boundary
+    /// — the exact analogue of the legacy driver's flush cadence.
+    pub fn record_chains(&self, b: &mut ProgramBuilder, chain_steps: usize) -> DiffusionChains {
+        let init = b.record_chain("diff_init", |r| self.init(r));
+        let step = b.record_chain("diff_step", |r| {
+            for _ in 0..chain_steps.max(1) {
+                self.step(r);
+            }
+        });
+        let sum = b.record_chain("diff_sum", |r| self.record_total_heat(r));
+        DiffusionChains { init, step, sum }
+    }
+
+    /// Record the total-heat reduction loop (without triggering); pair
+    /// with [`crate::ops::Drive::reduction_result`] on [`Self::sum`].
+    fn record_total_heat(&self, ctx: &mut impl Record) {
         let interior = [
             (0, self.nx as isize),
             (0, self.ny as isize),
@@ -144,31 +187,24 @@ impl Diffusion2D {
                 },
             ],
         );
-        ctx.reduction_result(self.sum)
-    }
-
-    /// Standard driver: init, mark cyclic, run `steps` steps with a chain
-    /// boundary per `chain_steps` steps.
-    pub fn run(&self, ctx: &mut OpsContext, steps: usize, chain_steps: usize) {
-        self.init(ctx);
-        ctx.flush();
-        ctx.reset_metrics();
-        ctx.set_cyclic_phase(true);
-        for s in 0..steps {
-            self.step(ctx);
-            if (s + 1) % chain_steps.max(1) == 0 {
-                ctx.flush();
-            }
-        }
-        ctx.flush();
     }
 }
 
+/// Replay handles of a frozen diffusion program
+/// ([`Diffusion2D::record_chains`]).
+pub struct DiffusionChains {
+    pub init: ChainId,
+    pub step: ChainId,
+    pub sum: ChainId,
+}
+
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::coordinator::{Config, Platform};
     use crate::memory::{AppCalib, Link};
+    use crate::ops::OpsContext;
 
     fn ctx(platform: Platform) -> OpsContext {
         OpsContext::new(Config::new(platform, AppCalib::CLOVERLEAF_2D).build_engine())

@@ -11,7 +11,7 @@
 //! (the paper: 60% on KNL, 68% on the P100); its `bw_efficiency` models
 //! that.
 //!
-//! Periodic boundaries use [`crate::OpsContext::exchange_periodic`] at
+//! Periodic boundaries use [`crate::ops::Drive::exchange_periodic`] at
 //! chain boundaries with halos deep enough for the whole chain (4 cells
 //! of validity consumed per stage → depth `12 × steps_per_chain`), with
 //! redundant halo-deep computation inside the chain — the standard OPS
@@ -19,7 +19,9 @@
 
 use crate::ops::kernel::kernel;
 use crate::ops::stencil::shapes;
-use crate::ops::{Access, Arg, BlockId, Ctx, DatasetId, OpsContext, RedOp, ReductionId, StencilId};
+use crate::ops::{
+    Access, Arg, BlockId, Ctx, DatasetId, Declare, Drive, RedOp, Record, ReductionId, StencilId,
+};
 use std::f64::consts::PI;
 
 /// Validity consumed per RK stage: the gradient loops eat 2 cells; the
@@ -75,14 +77,14 @@ pub struct OpenSbli {
 impl OpenSbli {
     /// `steps_per_chain` controls how many timesteps one lazy chain spans
     /// (the paper tiles over 1–3 timesteps, 5 for unified memory).
-    pub fn new(ctx: &mut OpsContext, n: usize, steps_per_chain: usize, model_scale: u64) -> Self {
+    pub fn new<D: Declare>(ctx: &mut D, n: usize, steps_per_chain: usize, model_scale: u64) -> Self {
         Self::new_aniso(ctx, [n, n, n], steps_per_chain, model_scale)
     }
 
     /// Anisotropic-resolution variant: same 2π-periodic box, different
     /// point counts per dimension (benches use tall z).
-    pub fn new_aniso(
-        ctx: &mut OpsContext,
+    pub fn new_aniso<D: Declare>(
+        ctx: &mut D,
         n: [usize; 3],
         steps_per_chain: usize,
         model_scale: u64,
@@ -97,7 +99,7 @@ impl OpenSbli {
         let hd = halo_depth as i32;
         let h3 = [hd, hd, hd];
         let size = n;
-        let dat = |ctx: &mut OpsContext, nme: &str| ctx.decl_dat(block, nme, size, h3, h3);
+        let dat = |ctx: &mut D, nme: &str| ctx.decl_dat(block, nme, size, h3, h3);
 
         let q = [
             dat(ctx, "rho"),
@@ -140,7 +142,7 @@ impl OpenSbli {
         ];
 
         let s_pt = ctx.decl_stencil("sbli_000", shapes::point());
-        let mk_line = |ctx: &mut OpsContext, nme: &str, d: usize| {
+        let mk_line = |ctx: &mut D, nme: &str, d: usize| {
             let pts: Vec<[i32; 3]> = (-2..=2)
                 .map(|k| {
                     let mut p = [0i32; 3];
@@ -208,7 +210,7 @@ impl OpenSbli {
     // ---------------------------------------------------------------- init
 
     /// Standard TGV initial condition (Mach 0.1 compressible setup).
-    pub fn initialise(&self, ctx: &mut OpsContext) {
+    pub fn initialise(&self, ctx: &mut impl Record) {
         let h = self.h;
         let gamma = self.gamma;
         let mach = self.mach;
@@ -275,7 +277,7 @@ impl OpenSbli {
     }
 
     /// Save the conserved state at the start of a timestep.
-    fn rk_save(&self, ctx: &mut OpsContext, ext: isize) {
+    fn rk_save(&self, ctx: &mut impl Record, ext: isize) {
         ctx.par_loop_eff(
             "sbli_rk_save",
             self.block,
@@ -295,7 +297,7 @@ impl OpenSbli {
     }
 
     /// Primitives from conserved (pointwise).
-    fn primitives(&self, ctx: &mut OpsContext, ext: isize) {
+    fn primitives(&self, ctx: &mut impl Record, ext: isize) {
         let gamma = self.gamma;
         ctx.par_loop_eff(
             "sbli_primitives",
@@ -325,7 +327,7 @@ impl OpenSbli {
 
     /// Velocity-gradient tensor: one loop per velocity component writing
     /// its three derivatives.
-    fn velocity_gradients(&self, ctx: &mut OpsContext, ext: isize) {
+    fn velocity_gradients(&self, ctx: &mut impl Record, ext: isize) {
         let inv12h = [
             1.0 / (12.0 * self.h[0]),
             1.0 / (12.0 * self.h[1]),
@@ -363,7 +365,7 @@ impl OpenSbli {
     ///
     /// Argument map: 0..5 conserved, 5..10 primitives, 10..19 gradient
     /// tensor, 19..24 residuals (write).
-    fn residual(&self, ctx: &mut OpsContext, ext: isize) {
+    fn residual(&self, ctx: &mut impl Record, ext: isize) {
         let inv12h = [
             1.0 / (12.0 * self.h[0]),
             1.0 / (12.0 * self.h[1]),
@@ -487,7 +489,7 @@ impl OpenSbli {
     }
 
     /// RK stage update: q = q_save + dt·c_s·res.
-    fn rk_update(&self, ctx: &mut OpsContext, stage: usize, ext: isize) {
+    fn rk_update(&self, ctx: &mut impl Record, stage: usize, ext: isize) {
         let coef = RK_C[stage] * self.dt;
         let mut args: Vec<Arg> = (0..5)
             .map(|i| Arg::dat(self.qs[i], self.s_pt, Access::Read))
@@ -513,7 +515,7 @@ impl OpenSbli {
 
     /// Refresh periodic halos of the conserved fields to full depth —
     /// chain boundary (flushes the queue).
-    pub fn exchange_halos(&self, ctx: &mut OpsContext) {
+    pub fn exchange_halos(&self, ctx: &mut impl Drive) {
         for i in 0..5 {
             for dim in 0..3 {
                 ctx.exchange_periodic(self.q[i], dim, self.halo_depth);
@@ -523,7 +525,7 @@ impl OpenSbli {
 
     /// Queue one timestep's loops. `chain_pos` is the timestep's index
     /// within the current chain (drives the deep-halo range shrinking).
-    pub fn step(&mut self, ctx: &mut OpsContext, chain_pos: usize) {
+    pub fn step(&mut self, ctx: &mut impl Record, chain_pos: usize) {
         let mut v = (self.halo_depth - SHRINK_PER_STAGE * 3 * chain_pos) as isize;
         self.rk_save(ctx, v);
         for stage in 0..3 {
@@ -537,7 +539,7 @@ impl OpenSbli {
 
     /// Volume-averaged kinetic energy (trigger point, used between
     /// chains as the physics monitor).
-    pub fn kinetic_energy(&self, ctx: &mut OpsContext) -> f64 {
+    pub fn kinetic_energy(&self, ctx: &mut impl Drive) -> f64 {
         let n3 = (self.n[0] * self.n[1] * self.n[2]) as f64;
         ctx.par_loop_eff(
             "sbli_ke",
@@ -564,8 +566,24 @@ impl OpenSbli {
         ctx.reduction_result(self.r_ke)
     }
 
+    /// Record one whole chain of `steps_per_chain` timesteps **once**
+    /// (the record-once API): replay it with
+    /// [`crate::program::Session::replay`], calling
+    /// [`Self::exchange_halos`] between replays exactly as the legacy
+    /// driver does between chains. OpenSBLI has no data-dependent
+    /// control flow (fixed `dt`, no reductions in the bulk), so the
+    /// whole multi-step chain freezes cleanly.
+    pub fn record_step_chain(&mut self, b: &mut crate::program::ProgramBuilder) -> crate::program::ChainId {
+        let spc = self.steps_per_chain;
+        b.record_chain("sbli_steps", |r| {
+            for s in 0..spc {
+                self.step(r, s);
+            }
+        })
+    }
+
     /// Benchmark driver: `chains` chains of `steps_per_chain` timesteps.
-    pub fn run(&mut self, ctx: &mut OpsContext, chains: usize) {
+    pub fn run(&mut self, ctx: &mut impl Drive, chains: usize) {
         self.initialise(ctx);
         ctx.flush();
         ctx.reset_metrics();
@@ -581,10 +599,12 @@ impl OpenSbli {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::coordinator::{Config, Platform};
     use crate::memory::{AppCalib, Link};
+    use crate::ops::OpsContext;
 
     fn ctx(p: Platform) -> OpsContext {
         OpsContext::new(Config::new(p, AppCalib::OPENSBLI).build_engine())

@@ -86,8 +86,15 @@ impl Figure {
     }
 }
 
-/// Run one (platform, app, size) cell and return the effective bandwidth
-/// (None = OOM, matching the paper's truncated series).
+/// Run one (platform, app, size) cell through the legacy eager context
+/// and return the effective bandwidth (None = OOM, matching the paper's
+/// truncated series).
+#[deprecated(
+    since = "0.3.0",
+    note = "drives the deprecated OpsContext shim; the cell runners below use the \
+            Program/Session API"
+)]
+#[allow(deprecated)]
 pub fn run_cell<F>(platform: Platform, app_calib: AppCalib, steps: usize, app: F) -> Option<f64>
 where
     F: FnOnce(&mut crate::ops::OpsContext, usize),
@@ -102,6 +109,12 @@ where
 }
 
 /// Like [`run_cell`] but returns the full metrics (hit rates etc.).
+#[deprecated(
+    since = "0.3.0",
+    note = "drives the deprecated OpsContext shim; the cell runners below use the \
+            Program/Session API"
+)]
+#[allow(deprecated)]
 pub fn run_cell_metrics<F>(
     platform: Platform,
     app_calib: AppCalib,
@@ -137,23 +150,31 @@ mod tests {
 
 // ---------------------------------------------------------------------------
 // App cell-runners shared by the figure benches, the smoke tests and the
-// CLI launcher. Each runs one (app, platform, modelled-size) cell: real
-// numerics on a small grid, byte accounting scaled to the paper's sizes.
+// CLI launcher. Each runs one (app, platform, modelled-size) cell
+// through the Program/Session API: real numerics on a small grid, byte
+// accounting scaled to the paper's sizes, chain analysis amortised
+// across the run (visible as `analysis_builds`/`analysis_reuse_hits`).
 
 use crate::apps::cloverleaf2d::CloverLeaf2D;
 use crate::apps::cloverleaf3d::CloverLeaf3D;
 use crate::apps::opensbli::OpenSbli;
-use crate::ops::OpsContext;
+use crate::program::{ProgramBuilder, Session};
+use std::sync::Arc;
 
 /// Modelled bytes of an app at `model_scale = 1`.
 pub fn base_bytes<F>(declare: F) -> u64
 where
-    F: FnOnce(&mut OpsContext),
+    F: FnOnce(&mut ProgramBuilder),
 {
-    let cfg = Config::new(Platform::KnlFlatDdr4, AppCalib::CLOVERLEAF_2D);
-    let mut ctx = OpsContext::new(cfg.build_engine());
-    declare(&mut ctx);
-    ctx.problem_bytes()
+    let mut b = ProgramBuilder::new();
+    declare(&mut b);
+    b.problem_bytes()
+}
+
+/// Freeze a declared builder and bind it to the configured engine.
+fn freeze_session(b: ProgramBuilder, cfg: &Config) -> Session {
+    let program = Arc::new(b.freeze().expect("app program must freeze"));
+    Session::new(program, cfg)
 }
 
 /// Scale factor that makes an app with `base` bytes model `target_gb`.
@@ -195,15 +216,16 @@ pub fn run_cl2d_tuned(
     steps: usize,
     summary_every: usize,
 ) -> (Metrics, bool) {
-    let base = base_bytes(|ctx| {
-        CloverLeaf2D::new(ctx, nx, ny, 1);
+    let base = base_bytes(|b| {
+        CloverLeaf2D::new(b, nx, ny, 1);
     });
     let scale = model_scale(base, target_gb);
     let cfg = apply_tuning(Config::new(platform, AppCalib::CLOVERLEAF_2D), tune);
-    let mut ctx = OpsContext::new(cfg.build_engine());
-    let mut app = CloverLeaf2D::new(&mut ctx, nx, ny, scale);
-    app.run(&mut ctx, steps, summary_every);
-    (ctx.metrics().clone(), ctx.oom())
+    let mut b = ProgramBuilder::new();
+    let mut app = CloverLeaf2D::new(&mut b, nx, ny, scale);
+    let mut sess = freeze_session(b, &cfg);
+    app.run(&mut sess, steps, summary_every);
+    (sess.metrics().clone(), sess.oom())
 }
 
 /// One CloverLeaf 3D cell.
@@ -226,15 +248,16 @@ pub fn run_cl3d_tuned(
     steps: usize,
     summary_every: usize,
 ) -> (Metrics, bool) {
-    let base = base_bytes(|ctx| {
-        CloverLeaf3D::new(ctx, n[0], n[1], n[2], 1);
+    let base = base_bytes(|b| {
+        CloverLeaf3D::new(b, n[0], n[1], n[2], 1);
     });
     let scale = model_scale(base, target_gb);
     let cfg = apply_tuning(Config::new(platform, AppCalib::CLOVERLEAF_3D), tune);
-    let mut ctx = OpsContext::new(cfg.build_engine());
-    let mut app = CloverLeaf3D::new(&mut ctx, n[0], n[1], n[2], scale);
-    app.run(&mut ctx, steps, summary_every);
-    (ctx.metrics().clone(), ctx.oom())
+    let mut b = ProgramBuilder::new();
+    let mut app = CloverLeaf3D::new(&mut b, n[0], n[1], n[2], scale);
+    let mut sess = freeze_session(b, &cfg);
+    app.run(&mut sess, steps, summary_every);
+    (sess.metrics().clone(), sess.oom())
 }
 
 /// One OpenSBLI cell; `steps_per_chain` is the §5.3 tile-depth knob.
@@ -245,15 +268,16 @@ pub fn run_sbli(
     target_gb: f64,
     chains: usize,
 ) -> (Metrics, bool) {
-    let base = base_bytes(|ctx| {
-        OpenSbli::new(ctx, n, steps_per_chain, 1);
+    let base = base_bytes(|b| {
+        OpenSbli::new(b, n, steps_per_chain, 1);
     });
     let scale = model_scale(base, target_gb);
     let cfg = Config::new(platform, AppCalib::OPENSBLI);
-    let mut ctx = OpsContext::new(cfg.build_engine());
-    let mut app = OpenSbli::new(&mut ctx, n, steps_per_chain, scale);
-    app.run(&mut ctx, chains);
-    (ctx.metrics().clone(), ctx.oom())
+    let mut b = ProgramBuilder::new();
+    let mut app = OpenSbli::new(&mut b, n, steps_per_chain, scale);
+    let mut sess = freeze_session(b, &cfg);
+    app.run(&mut sess, chains);
+    (sess.metrics().clone(), sess.oom())
 }
 
 /// Effective-bandwidth value for a figure point (None on OOM — the paper
@@ -291,13 +315,14 @@ pub fn run_sbli_tall_tuned(
     chains: usize,
 ) -> (Metrics, bool) {
     let n = [24usize, 24, 1024];
-    let base = base_bytes(|ctx| {
-        OpenSbli::new_aniso(ctx, n, steps_per_chain, 1);
+    let base = base_bytes(|b| {
+        OpenSbli::new_aniso(b, n, steps_per_chain, 1);
     });
     let scale = model_scale(base, target_gb);
     let cfg = apply_tuning(Config::new(platform, AppCalib::OPENSBLI), tune);
-    let mut ctx = OpsContext::new(cfg.build_engine());
-    let mut app = OpenSbli::new_aniso(&mut ctx, n, steps_per_chain, scale);
-    app.run(&mut ctx, chains);
-    (ctx.metrics().clone(), ctx.oom())
+    let mut b = ProgramBuilder::new();
+    let mut app = OpenSbli::new_aniso(&mut b, n, steps_per_chain, scale);
+    let mut sess = freeze_session(b, &cfg);
+    app.run(&mut sess, chains);
+    (sess.metrics().clone(), sess.oom())
 }

@@ -199,6 +199,68 @@ impl Platform {
         }
     }
 
+    /// The canonical spec string of this platform: parseable by
+    /// [`Config::parse_platform`], round-tripping to `self` for every
+    /// constructible platform (sharded forms need `ranks >= 2`; `x1`
+    /// collapses to the single-device platform by design). Property-
+    /// tested in `tests/program_equivalence.rs`.
+    pub fn spec(&self) -> String {
+        fn link_tok(l: Link) -> &'static str {
+            match l {
+                Link::PciE => "pcie",
+                Link::NvLink => "nvlink",
+            }
+        }
+        match self {
+            Platform::KnlFlatDdr4 => "knl-flat-ddr4".into(),
+            Platform::KnlFlatMcdram => "knl-flat-mcdram".into(),
+            Platform::KnlCache => "knl-cache".into(),
+            Platform::KnlCacheTiled => "knl-cache-tiled".into(),
+            Platform::GpuBaseline { link } => format!("gpu-baseline:{}", link_tok(*link)),
+            Platform::GpuExplicit {
+                link,
+                cyclic,
+                prefetch,
+            } => format!(
+                "gpu-explicit:{}{}{}",
+                link_tok(*link),
+                if *cyclic { ":cyclic" } else { "" },
+                if *prefetch { ":prefetch" } else { "" }
+            ),
+            Platform::GpuUnified {
+                link,
+                tiled,
+                prefetch,
+            } => format!(
+                "gpu-unified:{}{}{}",
+                link_tok(*link),
+                if *tiled { ":tiled" } else { "" },
+                if *prefetch { ":prefetch" } else { "" }
+            ),
+            Platform::Sharded {
+                ranks,
+                inner,
+                link,
+                decomp,
+                overlap,
+            } => format!(
+                "{}:x{}:{}:{}{}",
+                inner.to_platform().spec(),
+                ranks,
+                match link {
+                    Interconnect::PciePeer => "peer",
+                    Interconnect::NvLink => "nvlink",
+                    Interconnect::InfiniBand => "ib",
+                },
+                match decomp {
+                    DecompKind::OneD => "1d",
+                    DecompKind::TwoD => "2d",
+                },
+                if *overlap { "" } else { ":no-overlap" }
+            ),
+        }
+    }
+
     /// Number of modelled ranks (1 for single-device platforms).
     pub fn ranks(&self) -> u32 {
         match self {
@@ -774,6 +836,38 @@ mod tests {
         assert!(p.sharded(64).is_ok());
         assert!(p.sharded(65).is_err(), "--ranks must honour the 1..=64 bound");
         assert_eq!(p.sharded(1).unwrap(), p, "ranks=1 is a no-op");
+    }
+
+    #[test]
+    fn spec_round_trips_through_the_parser() {
+        let cases = [
+            Platform::KnlFlatMcdram,
+            Platform::GpuBaseline { link: Link::NvLink },
+            Platform::GpuExplicit {
+                link: Link::PciE,
+                cyclic: false,
+                prefetch: true,
+            },
+            Platform::GpuUnified {
+                link: Link::NvLink,
+                tiled: true,
+                prefetch: false,
+            },
+            Platform::Sharded {
+                ranks: 8,
+                inner: InnerPlatform::GpuUnified {
+                    link: Link::PciE,
+                    tiled: true,
+                    prefetch: true,
+                },
+                link: Interconnect::PciePeer,
+                decomp: DecompKind::TwoD,
+                overlap: false,
+            },
+        ];
+        for p in cases {
+            assert_eq!(Config::parse_platform(&p.spec()).unwrap(), p, "{}", p.spec());
+        }
     }
 
     #[test]

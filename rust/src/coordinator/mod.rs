@@ -1,8 +1,10 @@
 //! The coordinator: configuration, the run driver, and reporting.
 //!
 //! This is the "leader" layer of the stack: it owns process lifecycle,
-//! builds the [`crate::OpsContext`] for a configured platform, runs the
-//! application's timestep driver, and renders the paper's metrics.
+//! builds a [`crate::program::Program`] + [`crate::program::Session`]
+//! for a configured platform (or the deprecated [`crate::OpsContext`]
+//! shim), runs the application's timestep driver, and renders the
+//! paper's metrics.
 
 pub mod config;
 pub mod report;
@@ -11,16 +13,49 @@ pub use config::{Config, InnerPlatform, Platform};
 pub use report::{json_record, print_summary, Summary};
 
 use crate::exec::Metrics;
+use crate::ops::surface::Drive;
+#[allow(deprecated)]
 use crate::ops::OpsContext;
+use crate::program::{ProgramBuilder, Session};
+use std::sync::Arc;
+
+/// Run an application under a configuration through the Program/Session
+/// API and return the final metrics.
+///
+/// `build` declares the application's data on a fresh
+/// [`ProgramBuilder`] (returning its handles); the builder is then
+/// frozen — surfacing declaration/stencil errors as typed
+/// [`crate::errors`] errors — and `drive` runs `steps` timesteps on a
+/// [`Session`] bound to the configured engine. Metrics are reset after
+/// initialisation by the app itself (via
+/// [`crate::ops::Drive::reset_metrics`]) so the timed region matches
+/// the paper's.
+pub fn run_program<T, B, F>(cfg: &Config, steps: usize, build: B, drive: F) -> crate::Result<(Metrics, bool)>
+where
+    B: FnOnce(&mut ProgramBuilder) -> T,
+    F: FnOnce(&mut Session, T, usize),
+{
+    let mut b = ProgramBuilder::new();
+    let handles = build(&mut b);
+    let program = Arc::new(b.freeze()?);
+    let mut session = Session::new(program, cfg);
+    drive(&mut session, handles, steps);
+    session.flush();
+    Ok((session.metrics().clone(), session.oom()))
+}
 
 /// Run an application closure under a configuration and return the final
 /// metrics. `steps` is forwarded to the app driver.
 ///
-/// The app closure receives a fresh context wired to the configured
-/// engine and must: declare its data, run `steps` timesteps, and leave
-/// results queriable. Metrics are reset after initialisation by the app
-/// itself (via [`OpsContext::reset_metrics`]) so the timed region matches
-/// the paper's.
+/// Deprecated alongside [`OpsContext`]: this drives the legacy eager
+/// context, which re-analyses every chain at every flush. Use
+/// [`run_program`].
+#[deprecated(
+    since = "0.3.0",
+    note = "use run_program (ProgramBuilder/Session) — the eager OpsContext path \
+            re-analyses every chain at every flush"
+)]
+#[allow(deprecated)]
 pub fn run_app<F>(cfg: &Config, steps: usize, app: F) -> (Metrics, bool)
 where
     F: FnOnce(&mut OpsContext, usize),
@@ -32,12 +67,60 @@ where
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::memory::AppCalib;
     use crate::ops::kernel::kernel;
     use crate::ops::stencil::shapes;
-    use crate::ops::{Access, Arg};
+    use crate::ops::{Access, Arg, Declare, Drive as _, Record};
+
+    #[test]
+    fn run_program_collects_metrics_and_reuses_analysis() {
+        let cfg = Config::new(Platform::KnlFlatDdr4, AppCalib::CLOVERLEAF_2D);
+        let (m, oom) = run_program(
+            &cfg,
+            3,
+            |b| {
+                let blk = b.decl_block("g", [16, 16, 1]);
+                let d = b.decl_dat(blk, "d", [16, 16, 1], [1, 1, 0], [1, 1, 0]);
+                let s = b.decl_stencil("pt", shapes::point());
+                (blk, d, s)
+            },
+            |sess, (blk, d, s), steps| {
+                for _ in 0..steps {
+                    sess.par_loop(
+                        "set",
+                        blk,
+                        [(0, 16), (0, 16), (0, 1)],
+                        kernel(|c| c.w(0, 0, 0, 1.0)),
+                        vec![Arg::dat(d, s, Access::Write)],
+                    );
+                    sess.flush();
+                }
+            },
+        )
+        .unwrap();
+        assert!(!oom);
+        assert_eq!(m.per_loop["set"].invocations, 3);
+        assert_eq!(m.analysis_builds, 1, "one shape, analysed once");
+        assert_eq!(m.analysis_reuse_hits, 2);
+    }
+
+    #[test]
+    fn run_program_surfaces_freeze_errors() {
+        let cfg = Config::new(Platform::KnlFlatDdr4, AppCalib::CLOVERLEAF_2D);
+        let r = run_program(
+            &cfg,
+            1,
+            |b| {
+                let blk = b.decl_block("g", [0, 16, 1]);
+                let _ = blk;
+            },
+            |_sess, _h, _steps| {},
+        );
+        assert!(r.unwrap_err().to_string().contains("zero-sized"));
+    }
 
     #[test]
     fn run_app_collects_metrics() {

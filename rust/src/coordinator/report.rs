@@ -37,7 +37,9 @@ pub fn json_record(
             "\"eff_bandwidth_gbs\":{:.3},\"halo_time_s\":{:.6},\"tiles\":{},",
             "\"tuned\":{},\"tune_evals\":{},\"tune_cache_hits\":{},",
             "\"tuned_model_s\":{:.6},\"heuristic_model_s\":{:.6},",
-            "\"tune_model_speedup\":{:.4}}}"
+            "\"tune_model_speedup\":{:.4},",
+            "\"analysis_builds\":{},\"analysis_reuse_hits\":{},",
+            "\"program_freeze_s\":{:.6}}}"
         ),
         esc(app),
         esc(platform),
@@ -55,6 +57,9 @@ pub fn json_record(
         m.tuned_model_s,
         m.heuristic_model_s,
         m.tune_model_speedup(),
+        m.analysis_builds,
+        m.analysis_reuse_hits,
+        m.program_freeze_s,
     )
 }
 
@@ -131,6 +136,12 @@ pub fn print_summary(label: &str, problem_bytes: u64, m: &Metrics, oom: bool) {
         println!(
             "  halo exchanges      : {} ({:.4} s)",
             m.halo_exchanges, m.halo_time_s
+        );
+    }
+    if m.analysis_builds + m.analysis_reuse_hits > 0 {
+        println!(
+            "  chain analysis      : {} built, {} reused (freeze {:.6} s)",
+            m.analysis_builds, m.analysis_reuse_hits, m.program_freeze_s
         );
     }
     if !m.per_rank.is_empty() {

@@ -27,6 +27,9 @@ use super::halo::HaloExchange;
 use super::interconnect::Interconnect;
 use crate::exec::{Engine, Executor, Metrics, NullExecutor, RankStat, World};
 use crate::ops::{Dataset, LoopInst, Reduction};
+use crate::tiling::analysis::{chain_structure_fingerprint, ChainAnalysis};
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// N modelled ranks, each owning an inner memory engine.
 pub struct ShardedEngine {
@@ -37,6 +40,12 @@ pub struct ShardedEngine {
     pub overlap: bool,
     inner: Vec<Box<dyn Engine>>,
     inner_label: String,
+    /// Per-rank memo of restricted-sub-chain analyses, keyed by the
+    /// structural fingerprint of (rank chain, rank dataset views) — the
+    /// per-rank half of the record-once/replay-many amortisation: a
+    /// timestepped app re-shards the same chain every step, and each
+    /// rank's `O(L²)` dependency analysis runs once instead of per step.
+    rank_analysis: Vec<HashMap<u64, Arc<ChainAnalysis>>>,
 }
 
 impl ShardedEngine {
@@ -48,12 +57,14 @@ impl ShardedEngine {
     ) -> Self {
         assert!(!inner.is_empty(), "sharded engine needs at least one rank");
         let inner_label = inner[0].describe();
+        let rank_analysis = (0..inner.len()).map(|_| HashMap::new()).collect();
         ShardedEngine {
             kind,
             link,
             overlap,
             inner,
             inner_label,
+            rank_analysis,
         }
     }
 
@@ -64,6 +75,20 @@ impl ShardedEngine {
 
 impl Engine for ShardedEngine {
     fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, cyclic_phase: bool) {
+        self.run_chain_analyzed(chain, None, world, cyclic_phase);
+    }
+
+    // The whole-chain analysis is not directly applicable here — each
+    // rank prices a *restricted* sub-chain over resized dataset views —
+    // so the sharded layer keeps its own per-rank analysis memo instead
+    // (see `rank_analysis`).
+    fn run_chain_analyzed(
+        &mut self,
+        chain: &[LoopInst],
+        _analysis: Option<&ChainAnalysis>,
+        world: &mut World<'_>,
+        cyclic_phase: bool,
+    ) {
         if chain.is_empty() {
             return;
         }
@@ -128,6 +153,20 @@ impl Engine for ShardedEngine {
                         ds.size[dim] = (ds.size[dim] * owned / global).max(1);
                     }
                 }
+                // Per-rank cached analysis (one shared Program, N rank
+                // "sessions"): identical re-sharded chains hit the memo.
+                let fp =
+                    chain_structure_fingerprint(&rank_chain, &rank_datasets, world.stencils);
+                let rank_a = self.rank_analysis[r]
+                    .entry(fp)
+                    .or_insert_with(|| {
+                        Arc::new(ChainAnalysis::build(
+                            &rank_chain,
+                            &rank_datasets,
+                            world.stencils,
+                        ))
+                    })
+                    .clone();
                 let mut model = NullExecutor;
                 let mut no_reds: Vec<Reduction> = vec![];
                 let mut rank_world = World {
@@ -138,7 +177,12 @@ impl Engine for ShardedEngine {
                     metrics: &mut scratch,
                     exec: &mut model,
                 };
-                self.inner[r].run_chain(&rank_chain, &mut rank_world, cyclic_phase);
+                self.inner[r].run_chain_analyzed(
+                    &rank_chain,
+                    Some(&rank_a),
+                    &mut rank_world,
+                    cyclic_phase,
+                );
             }
             let compute = scratch.elapsed_s;
             let rank_bytes = scratch.loop_bytes;

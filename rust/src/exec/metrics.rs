@@ -88,6 +88,17 @@ pub struct Metrics {
     /// Auto-tuner: Σ modelled chain time of the `HBM/3` heuristic plans
     /// — per chain, `tuned_model_s` never exceeds this.
     pub heuristic_model_s: f64,
+    /// Chain analyses computed (or adopted from a frozen Program) by
+    /// this run. The legacy eager path re-analyses at every flush, so it
+    /// counts one per non-empty chain; a replayed Session counts one per
+    /// *distinct* chain shape.
+    pub analysis_builds: u64,
+    /// Chain executions that reused a cached analysis instead of
+    /// re-running the dependency/footprint/skew computation.
+    pub analysis_reuse_hits: u64,
+    /// Host seconds spent freezing the Program (declaration validation +
+    /// per-chain analysis), charged once per Session.
+    pub program_freeze_s: f64,
     /// Per-kernel-name breakdown.
     pub per_loop: HashMap<String, LoopStat>,
     /// Per-rank breakdown of sharded execution (empty when unsharded).
@@ -169,6 +180,9 @@ impl Metrics {
         self.tune_cache_hits += other.tune_cache_hits;
         self.tuned_model_s += other.tuned_model_s;
         self.heuristic_model_s += other.heuristic_model_s;
+        self.analysis_builds += other.analysis_builds;
+        self.analysis_reuse_hits += other.analysis_reuse_hits;
+        self.program_freeze_s += other.program_freeze_s;
         for (k, v) in &other.per_loop {
             let st = self.per_loop.entry(k.clone()).or_default();
             st.invocations += v.invocations;

@@ -77,6 +77,28 @@ pub trait Engine {
     /// engines).
     fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, cyclic_phase: bool);
 
+    /// Run the chain with a precomputed
+    /// [`ChainAnalysis`](crate::tiling::analysis::ChainAnalysis) (the
+    /// record-once/replay-many path: a frozen
+    /// [`crate::program::Program`] chain, or a
+    /// [`crate::program::Session`]'s memoised dynamic analysis).
+    ///
+    /// The default ignores the analysis and falls back to
+    /// [`Engine::run_chain`] — correct for engines that don't analyse
+    /// chains (flat memory). Tiling engines override it to skip the
+    /// per-flush dependency/footprint recomputation; either way the
+    /// schedule, and therefore the numerics, are identical.
+    fn run_chain_analyzed(
+        &mut self,
+        chain: &[LoopInst],
+        analysis: Option<&crate::tiling::analysis::ChainAnalysis>,
+        world: &mut World<'_>,
+        cyclic_phase: bool,
+    ) {
+        let _ = analysis;
+        self.run_chain(chain, world, cyclic_phase);
+    }
+
     /// Human-readable configuration string for reports.
     fn describe(&self) -> String;
 

@@ -5,13 +5,17 @@
 //! Pallas stack.
 //!
 //! The crate implements an OPS-style structured-mesh DSL: users declare
-//! [`ops::Block`]s, [`ops::Dataset`]s, [`ops::Stencil`]s and enqueue
-//! *parallel loops* ([`OpsContext::par_loop`]). Loop execution is **lazy**:
-//! loops accumulate in a queue until an API call returns data to the user
-//! (a reduction result, a dataset fetch), at which point the queued *chain*
-//! is analysed, a skewed tiling schedule is computed
-//! ([`tiling::TilePlan`]) and the chain is executed through one of the
-//! memory engines:
+//! [`ops::Block`]s, [`ops::Dataset`]s, [`ops::Stencil`]s through a
+//! [`ProgramBuilder`], record *parallel loops* into named frozen chains
+//! ([`ProgramBuilder::record_chain`]) or dynamically into a lazy queue,
+//! freeze an immutable [`Program`] (whose per-chain dependency/footprint
+//! analysis is computed exactly once), and execute through [`Session`]s
+//! — `session.replay(chain, n)` replays a recorded step `n` times, and
+//! many sessions can share one program. When a trigger point returns
+//! data to the user (a reduction result, a dataset fetch), the pending
+//! *chain* is analysed (or its cached analysis reused), a skewed tiling
+//! schedule is computed ([`tiling::TilePlan`]) and the chain is executed
+//! through one of the memory engines:
 //!
 //! * [`memory::KnlEngine`] — KNL MCDRAM in flat/cache mode (direct-mapped
 //!   cache simulator),
@@ -65,12 +69,15 @@ pub mod exec;
 pub mod lazy;
 pub mod memory;
 pub mod ops;
+pub mod program;
 pub mod runtime;
 pub mod tiling;
 pub mod tuner;
 
 pub use coordinator::config::{Config, Platform};
+#[allow(deprecated)]
 pub use ops::api::OpsContext;
+pub use program::{Program, ProgramBuilder, Session};
 
 /// Crate-wide result type.
 pub type Result<T> = errors::Result<T>;

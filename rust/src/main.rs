@@ -17,7 +17,11 @@
 //!   gpu-explicit, gpu-unified) followed by optional `peer|nvlink|ib`
 //!   (interconnect), `1d|2d` (decomposition) and `no-overlap`; or pass
 //!   `--ranks N` / a bare `xN` argument. Unknown tokens are rejected.
-//! `--json` emits one machine-readable metrics record per run cell.
+//! `--json` emits one machine-readable metrics record per run cell,
+//!   including the Program/Session analysis-reuse counters
+//!   (`analysis_builds`, `analysis_reuse_hits`, `program_freeze_s`):
+//!   apps run through a frozen `Program` whose chain analysis is
+//!   computed once and replayed, not redone per flush.
 //! `--tune` / `--tune-budget E` (or a `tuned` spec token) enable the
 //!   cost-model tile-plan auto-tuner on platforms with a tile plan.
 
@@ -200,6 +204,9 @@ fn main() {
             println!("tuning    : append :tuned (or pass --tune / --tune-budget E) on any");
             println!("            platform with a tile plan; plans never model slower than");
             println!("            the HBM/3 heuristic and numerics stay bit-exact");
+            println!("execution : apps run on the record-once/replay-many Program/Session");
+            println!("            API — chain analysis is computed once per shape and");
+            println!("            reused (--json: analysis_builds / analysis_reuse_hits)");
         }
         "run" => {
             let (platform, tune) = parse_platform_or_exit(&a);

@@ -18,8 +18,8 @@ use super::hierarchy::{AppCalib, GpuCalib, Link, GB};
 use super::plain::{chain_bw_norm, elem_bytes};
 use crate::exec::{Engine, World};
 use crate::ops::{DatasetId, LoopInst};
+use crate::tiling::analysis::ChainAnalysis;
 use crate::tiling::plan::{PlanSource, TilePlan};
-use crate::tiling::dependency::chain_access_summary;
 
 /// §4.1 optimisation switches (read-only/write-first skipping is always
 /// on, as in the paper's evaluation).
@@ -148,13 +148,27 @@ pub fn tile_traffic(
 
 impl Engine for GpuExplicitEngine {
     fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, cyclic_phase: bool) {
+        self.run_chain_analyzed(chain, None, world, cyclic_phase);
+    }
+
+    fn run_chain_analyzed(
+        &mut self,
+        chain: &[LoopInst],
+        analysis: Option<&ChainAnalysis>,
+        world: &mut World<'_>,
+        cyclic_phase: bool,
+    ) {
         world.metrics.chains += 1;
+        // Legacy eager path: no cached analysis, rebuild it per flush.
+        let mut local = None;
+        let analysis =
+            ChainAnalysis::resolve(analysis, &mut local, chain, world.datasets, world.stencils);
         // All slots must fit in HBM: target one slot at just under an
         // equal share (leave a little headroom for OPS bookkeeping).
         let slot_target = self.slot_target();
         let mut plan = self
             .plan
-            .plan(chain, world.datasets, world.stencils, slot_target);
+            .plan_analyzed(chain, world.datasets, world.stencils, slot_target, analysis);
         if matches!(self.plan, PlanSource::Fixed(_))
             && plan.max_footprint_bytes(world.datasets) > slot_target
         {
@@ -162,18 +176,23 @@ impl Engine for GpuExplicitEngine {
             // contract (all slots resident in HBM). Over-budget requests
             // fall back to auto sizing, so a tuner candidate can never
             // score a win by overflowing device memory.
-            plan = PlanSource::Auto.plan(chain, world.datasets, world.stencils, slot_target);
+            plan = PlanSource::Auto.plan_analyzed(
+                chain,
+                world.datasets,
+                world.stencils,
+                slot_target,
+                analysis,
+            );
         }
         let nt = plan.num_tiles();
         world.metrics.tiles += nt as u64;
         let norm = chain_bw_norm(world, chain);
 
-        // §4.1 data-movement classification.
-        let summary = chain_access_summary(chain);
+        // §4.1 data-movement classification (from the cached analysis).
         let nd = world.datasets.len();
         let mut skip_upload = vec![false; nd];
         let mut skip_download = vec![false; nd];
-        for (id, info) in &summary {
+        for (id, info) in &analysis.summary {
             let d = id.0 as usize;
             skip_upload[d] = info.skip_upload();
             skip_download[d] = info.skip_download()

@@ -7,6 +7,7 @@ use super::hierarchy::{AppCalib, KnlCalib};
 use super::plain::{chain_bw_norm, elem_bytes};
 use crate::exec::{Engine, World};
 use crate::ops::{LoopInst, Range3};
+use crate::tiling::analysis::ChainAnalysis;
 use crate::tiling::plan::{pick_tile_dim, PlanSource};
 
 /// MCDRAM-as-cache engine.
@@ -89,9 +90,19 @@ impl KnlEngine {
 }
 
 impl Engine for KnlEngine {
-    fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, _cyclic_phase: bool) {
+    fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, cyclic_phase: bool) {
+        self.run_chain_analyzed(chain, None, world, cyclic_phase);
+    }
+
+    fn run_chain_analyzed(
+        &mut self,
+        chain: &[LoopInst],
+        analysis: Option<&ChainAnalysis>,
+        world: &mut World<'_>,
+        _cyclic_phase: bool,
+    ) {
         world.metrics.chains += 1;
-        let tile_dim = pick_tile_dim(chain);
+        let tile_dim = analysis.map_or_else(|| pick_tile_dim(chain), |a| a.tile_dim);
         if self.addr.is_none() {
             self.addr = Some(AddressMap::new(world.datasets, self.calib.cache_granule));
         }
@@ -125,10 +136,19 @@ impl Engine for KnlEngine {
             return;
         }
 
-        // Tiled: size tiles to MCDRAM and run the skewed schedule.
-        let plan = self
-            .plan
-            .plan(chain, world.datasets, world.stencils, self.tile_target());
+        // Tiled: size tiles to MCDRAM and run the skewed schedule. The
+        // dependency analysis comes cached when a Session replays the
+        // chain; the legacy path rebuilds it here per flush.
+        let mut local = None;
+        let analysis =
+            ChainAnalysis::resolve(analysis, &mut local, chain, world.datasets, world.stencils);
+        let plan = self.plan.plan_analyzed(
+            chain,
+            world.datasets,
+            world.stencils,
+            self.tile_target(),
+            analysis,
+        );
         world.metrics.tiles += plan.num_tiles() as u64;
         for tile in &plan.tiles {
             for (li, r) in tile.loop_ranges.iter().enumerate() {

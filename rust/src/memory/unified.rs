@@ -8,6 +8,7 @@ use super::cache_sim::AddressMap;
 use super::plain::{chain_bw_norm, elem_bytes};
 use crate::exec::{Engine, World};
 use crate::ops::{LoopInst, Range3};
+use crate::tiling::analysis::ChainAnalysis;
 use crate::tiling::plan::{pick_tile_dim, PlanSource};
 use std::collections::{BTreeMap, HashMap};
 
@@ -146,9 +147,19 @@ impl UnifiedEngine {
 }
 
 impl Engine for UnifiedEngine {
-    fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, _cyclic_phase: bool) {
+    fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, cyclic_phase: bool) {
+        self.run_chain_analyzed(chain, None, world, cyclic_phase);
+    }
+
+    fn run_chain_analyzed(
+        &mut self,
+        chain: &[LoopInst],
+        analysis: Option<&ChainAnalysis>,
+        world: &mut World<'_>,
+        _cyclic_phase: bool,
+    ) {
         world.metrics.chains += 1;
-        let tile_dim = pick_tile_dim(chain);
+        let tile_dim = analysis.map_or_else(|| pick_tile_dim(chain), |a| a.tile_dim);
         let norm = chain_bw_norm(world, chain);
         if self.addr.is_none() {
             self.addr = Some(AddressMap::new(world.datasets, self.um.page_bytes));
@@ -172,13 +183,21 @@ impl Engine for UnifiedEngine {
         }
 
         // Tiled: tiles sized to HBM; with prefetch, each tile's footprint
-        // is bulk-moved while the previous tile computes.
-        let plan = self
-            .plan
-            .plan(chain, world.datasets, world.stencils, self.tile_target());
+        // is bulk-moved while the previous tile computes. The dependency
+        // analysis comes cached when a Session replays the chain; the
+        // legacy path rebuilds it here per flush.
+        let mut local = None;
+        let analysis =
+            ChainAnalysis::resolve(analysis, &mut local, chain, world.datasets, world.stencils);
+        let plan = self.plan.plan_analyzed(
+            chain,
+            world.datasets,
+            world.stencils,
+            self.tile_target(),
+            analysis,
+        );
         world.metrics.tiles += plan.num_tiles() as u64;
-        let oversub =
-            crate::tiling::plan::chain_bytes(chain, world.datasets) > self.gpu.hbm_bytes;
+        let oversub = analysis.chain_bytes > self.gpu.hbm_bytes;
         let mut prev_tile_compute = 0.0f64;
 
         for tile in &plan.tiles {

@@ -12,6 +12,20 @@ use crate::lazy::LoopQueue;
 
 /// The library context: owns all data, the lazy queue, the executor and
 /// the memory engine. The analogue of an OPS instance.
+///
+/// Deprecated: `OpsContext` is the legacy *eager* surface — it re-runs
+/// the chain dependency/footprint analysis at every flush, exactly what
+/// the Program/Session split amortises away. It is kept as a thin,
+/// fully-working shim so out-of-tree snippets keep compiling; new code
+/// should declare through [`crate::program::ProgramBuilder`], freeze a
+/// [`crate::program::Program`] and execute through
+/// [`crate::program::Session`] (see `rust/README.md` for the migration
+/// table).
+#[deprecated(
+    since = "0.3.0",
+    note = "use ProgramBuilder/Session (crate::program): OpsContext re-analyses every \
+            chain at every flush instead of reusing the frozen Program analysis"
+)]
 pub struct OpsContext {
     blocks: Vec<Block>,
     datasets: Vec<Dataset>,
@@ -30,6 +44,7 @@ pub struct OpsContext {
     elem_bytes: u64,
 }
 
+#[allow(deprecated)]
 impl OpsContext {
     /// Create a context with an explicit engine; uses the native executor.
     pub fn new(engine: Box<dyn Engine>) -> Self {
@@ -147,31 +162,9 @@ impl OpsContext {
         args: Vec<Arg>,
         bw_efficiency: f64,
     ) {
-        // Validate handles + aliasing.
-        let mut written: Vec<DatasetId> = vec![];
-        let mut seen: Vec<DatasetId> = vec![];
-        for a in &args {
-            if let Arg::Dat { dat, stencil, acc } = a {
-                assert!(
-                    (dat.0 as usize) < self.datasets.len(),
-                    "loop {name}: undeclared dataset {dat:?}"
-                );
-                assert!(
-                    (stencil.0 as usize) < self.stencils.len(),
-                    "loop {name}: undeclared stencil {stencil:?}"
-                );
-                if acc.writes() {
-                    written.push(*dat);
-                }
-                seen.push(*dat);
-            }
-        }
-        for w in &written {
-            assert!(
-                seen.iter().filter(|d| *d == w).count() == 1,
-                "loop {name}: dataset {w:?} written while aliased by another argument"
-            );
-        }
+        // Validate handles + aliasing (the one shared contract — the
+        // frozen recorder and the Session queue use the same helper).
+        crate::program::builder::validate_loop("ops", name, &args, &self.datasets, &self.stencils);
         let has_red = args.iter().any(|a| matches!(a, Arg::GblRed { .. }));
 
         self.queue.push(LoopInst {
@@ -201,6 +194,10 @@ impl OpsContext {
         if chain.is_empty() {
             return;
         }
+        // The eager path hands the engine no cached analysis, so the
+        // chain is re-analysed on every flush — the cost the
+        // Program/Session split amortises away.
+        self.metrics.analysis_builds += 1;
         let problem = crate::tiling::plan::chain_bytes(&chain, &self.datasets);
         if !self.engine.fits(problem) {
             self.oom = true;
@@ -248,62 +245,10 @@ impl OpsContext {
     pub fn exchange_periodic(&mut self, id: DatasetId, dim: usize, depth: usize) {
         self.flush();
         let ds = self.datasets[id.0 as usize].clone();
-        let n = ds.size[dim] as isize;
-        assert!(
-            depth as isize <= n,
-            "periodic exchange depth {depth} exceeds extent {n} of {}",
-            ds.name
-        );
-        // Copy plane(-k) = plane(n-k) and plane(n-1+k) = plane(k-1).
-        for k in 1..=depth as isize {
-            self.copy_plane(&ds, dim, n - k, -k);
-            self.copy_plane(&ds, dim, k - 1, n - 1 + k);
-        }
-        // Time model: one exchange of 2*depth representative planes (see
-        // Dataset::repr_plane_bytes on the tall-grid correction).
-        let bytes = 2 * depth as u64 * ds.repr_plane_bytes();
-        let t = 8e-6 + bytes as f64 / 12e9;
+        let t = periodic_exchange(&ds, &mut self.store, dim, depth);
         self.metrics.halo_time_s += t;
         self.metrics.halo_exchanges += 1;
         self.metrics.elapsed_s += t;
-    }
-
-    /// Copy one whole plane of `ds` along `dim` (`src` → `dst` logical
-    /// indices), spanning the full padded extent of the other dims.
-    fn copy_plane(&mut self, ds: &Dataset, dim: usize, src: isize, dst: isize) {
-        let s = ds.strides();
-        let lo = [
-            -(ds.halo_lo[0] as isize),
-            -(ds.halo_lo[1] as isize),
-            -(ds.halo_lo[2] as isize),
-        ];
-        let hi = [
-            ds.size[0] as isize + ds.halo_hi[0] as isize,
-            ds.size[1] as isize + ds.halo_hi[1] as isize,
-            ds.size[2] as isize + ds.halo_hi[2] as isize,
-        ];
-        let _ = s;
-        let buf = self.store.buf_mut(ds.id);
-        // Pointwise copy over the plane; src and dst planes are disjoint.
-        let (d0, d1) = match dim {
-            0 => (1, 2),
-            1 => (0, 2),
-            2 => (0, 1),
-            _ => unreachable!(),
-        };
-        for b in lo[d1]..hi[d1] {
-            for a in lo[d0]..hi[d0] {
-                let mut si = [0isize; 3];
-                si[dim] = src;
-                si[d0] = a;
-                si[d1] = b;
-                let mut di = si;
-                di[dim] = dst;
-                let so = ds.offset(si) as usize;
-                let do_ = ds.offset(di) as usize;
-                buf[do_] = buf[so];
-            }
-        }
     }
 
     // ---- application signals ----------------------------------------------
@@ -373,6 +318,7 @@ impl OpsContext {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::super::access::Access;
     use super::*;
@@ -499,9 +445,158 @@ mod tests {
     }
 }
 
+#[allow(deprecated)]
 impl OpsContext {
     /// Drain the queue without executing — diagnostics/planning tools.
     pub fn take_chain_for_debug(&mut self) -> Vec<LoopInst> {
         self.queue.take_chain()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared periodic-exchange data movement (used by both OpsContext and
+// crate::program::Session).
+
+/// Apply the periodic copies of an `exchange_periodic` call along `dim`
+/// to depth `depth` and return the modelled exchange time in seconds
+/// (one exchange latency + bytes at exchange bandwidth). Metrics are the
+/// caller's responsibility.
+pub(crate) fn periodic_exchange(
+    ds: &Dataset,
+    store: &mut DataStore,
+    dim: usize,
+    depth: usize,
+) -> f64 {
+    let n = ds.size[dim] as isize;
+    assert!(
+        depth as isize <= n,
+        "periodic exchange depth {depth} exceeds extent {n} of {}",
+        ds.name
+    );
+    // Copy plane(-k) = plane(n-k) and plane(n-1+k) = plane(k-1).
+    for k in 1..=depth as isize {
+        copy_plane(ds, store, dim, n - k, -k);
+        copy_plane(ds, store, dim, k - 1, n - 1 + k);
+    }
+    // Time model: one exchange of 2*depth representative planes (see
+    // Dataset::repr_plane_bytes on the tall-grid correction).
+    let bytes = 2 * depth as u64 * ds.repr_plane_bytes();
+    8e-6 + bytes as f64 / 12e9
+}
+
+/// Copy one whole plane of `ds` along `dim` (`src` → `dst` logical
+/// indices), spanning the full padded extent of the other dims.
+fn copy_plane(ds: &Dataset, store: &mut DataStore, dim: usize, src: isize, dst: isize) {
+    let lo = [
+        -(ds.halo_lo[0] as isize),
+        -(ds.halo_lo[1] as isize),
+        -(ds.halo_lo[2] as isize),
+    ];
+    let hi = [
+        ds.size[0] as isize + ds.halo_hi[0] as isize,
+        ds.size[1] as isize + ds.halo_hi[1] as isize,
+        ds.size[2] as isize + ds.halo_hi[2] as isize,
+    ];
+    let buf = store.buf_mut(ds.id);
+    // Pointwise copy over the plane; src and dst planes are disjoint.
+    let (d0, d1) = match dim {
+        0 => (1, 2),
+        1 => (0, 2),
+        2 => (0, 1),
+        _ => unreachable!(),
+    };
+    for b in lo[d1]..hi[d1] {
+        for a in lo[d0]..hi[d0] {
+            let mut si = [0isize; 3];
+            si[dim] = src;
+            si[d0] = a;
+            si[d1] = b;
+            let mut di = si;
+            di[dim] = dst;
+            let so = ds.offset(si) as usize;
+            let do_ = ds.offset(di) as usize;
+            buf[do_] = buf[so];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Capability-trait implementations: the legacy shim speaks the same
+// Declare/Record/Drive surface the Program/Session API does, so every
+// application runs unchanged on either.
+
+#[allow(deprecated)]
+impl crate::ops::surface::Declare for OpsContext {
+    fn set_model_elem_bytes(&mut self, elem_bytes: u64) {
+        OpsContext::set_model_elem_bytes(self, elem_bytes)
+    }
+
+    fn decl_block(&mut self, name: &str, size: [usize; 3]) -> BlockId {
+        OpsContext::decl_block(self, name, size)
+    }
+
+    fn decl_dat(
+        &mut self,
+        block: BlockId,
+        name: &str,
+        size: [usize; 3],
+        halo_lo: [i32; 3],
+        halo_hi: [i32; 3],
+    ) -> DatasetId {
+        OpsContext::decl_dat(self, block, name, size, halo_lo, halo_hi)
+    }
+
+    fn decl_stencil(&mut self, name: &str, points: Vec<[i32; 3]>) -> StencilId {
+        OpsContext::decl_stencil(self, name, points)
+    }
+
+    fn decl_reduction(&mut self, name: &str, op: RedOp) -> ReductionId {
+        OpsContext::decl_reduction(self, name, op)
+    }
+}
+
+#[allow(deprecated)]
+impl crate::ops::surface::Record for OpsContext {
+    fn par_loop_eff(
+        &mut self,
+        name: &str,
+        block: BlockId,
+        range: Range3,
+        kernel: Kernel,
+        args: Vec<Arg>,
+        bw_efficiency: f64,
+    ) {
+        OpsContext::par_loop_eff(self, name, block, range, kernel, args, bw_efficiency)
+    }
+}
+
+#[allow(deprecated)]
+impl crate::ops::surface::Drive for OpsContext {
+    fn flush(&mut self) {
+        OpsContext::flush(self)
+    }
+
+    fn reduction_result(&mut self, id: ReductionId) -> f64 {
+        OpsContext::reduction_result(self, id)
+    }
+
+    fn fetch(&mut self, id: DatasetId) -> Vec<f64> {
+        OpsContext::fetch(self, id)
+    }
+
+    fn value_at(&mut self, id: DatasetId, idx: [isize; 3]) -> f64 {
+        OpsContext::value_at(self, id, idx)
+    }
+
+    fn exchange_periodic(&mut self, id: DatasetId, dim: usize, depth: usize) {
+        OpsContext::exchange_periodic(self, id, dim, depth)
+    }
+
+    fn set_cyclic_phase(&mut self, on: bool) {
+        OpsContext::set_cyclic_phase(self, on)
+    }
+
+    fn reset_metrics(&mut self) {
+        OpsContext::reset_metrics(self)
     }
 }

@@ -15,9 +15,12 @@ pub mod kernel;
 pub mod parloop;
 pub mod reduction;
 pub mod stencil;
+pub mod surface;
 
 pub use access::Access;
+#[allow(deprecated)]
 pub use api::OpsContext;
+pub use surface::{Declare, Drive, Record};
 pub use block::{Block, BlockId};
 pub use dataset::{DataStore, Dataset, DatasetId};
 pub use kernel::{Ctx, Kernel};

@@ -1,0 +1,106 @@
+//! The declaration/recording/driving surface the applications program
+//! against, shared by the legacy [`crate::ops::OpsContext`] shim and the
+//! Program/Session API ([`crate::program`]).
+//!
+//! Splitting the old god-object surface into three capability traits is
+//! what lets one app implementation serve every execution style:
+//!
+//! * [`Declare`] — handle declarations. Implemented by `OpsContext`
+//!   (mutable, interleaved with execution) and
+//!   [`crate::program::ProgramBuilder`] (frozen at
+//!   [`crate::program::ProgramBuilder::freeze`]).
+//! * [`Record`] — enqueue parallel loops. Implemented by `OpsContext`
+//!   (lazy queue), [`crate::program::Session`] (dynamic recording with
+//!   memoised chain analysis) and
+//!   [`crate::program::ChainRecorder`] (record-once frozen chains).
+//! * [`Drive`] — trigger points and run-lifecycle calls. Implemented by
+//!   `OpsContext` and [`crate::program::Session`].
+
+use super::block::BlockId;
+use super::dataset::DatasetId;
+use super::kernel::Kernel;
+use super::parloop::{Arg, Range3};
+use super::reduction::{RedOp, ReductionId};
+use super::stencil::StencilId;
+
+/// Declaration surface: blocks, datasets, stencils, reductions.
+pub trait Declare {
+    /// Set the modelled bytes-per-element for *subsequently* declared
+    /// datasets (`8 × scale`). On [`crate::program::ProgramBuilder`]
+    /// this is the builder-level default that
+    /// `decl_dat_elem` overrides per dataset.
+    fn set_model_elem_bytes(&mut self, elem_bytes: u64);
+
+    fn decl_block(&mut self, name: &str, size: [usize; 3]) -> BlockId;
+
+    /// Declare a dataset on `block` with interior `size` and halo depths.
+    fn decl_dat(
+        &mut self,
+        block: BlockId,
+        name: &str,
+        size: [usize; 3],
+        halo_lo: [i32; 3],
+        halo_hi: [i32; 3],
+    ) -> DatasetId;
+
+    fn decl_stencil(&mut self, name: &str, points: Vec<[i32; 3]>) -> StencilId;
+
+    fn decl_reduction(&mut self, name: &str, op: RedOp) -> ReductionId;
+}
+
+/// Loop-recording surface: the parallel-loop construct (§3, Fig. 1).
+pub trait Record {
+    /// [`Record::par_loop`] with an explicit bandwidth-efficiency factor
+    /// (relative to the app baseline; models latency-/compute-bound
+    /// kernels such as OpenSBLI's dominant RHS evaluation).
+    fn par_loop_eff(
+        &mut self,
+        name: &str,
+        block: BlockId,
+        range: Range3,
+        kernel: Kernel,
+        args: Vec<Arg>,
+        bw_efficiency: f64,
+    );
+
+    /// Record a parallel loop. Execution is deferred until a
+    /// data-returning call (lazy queues) or until the chain is replayed
+    /// (frozen chains).
+    fn par_loop(
+        &mut self,
+        name: &str,
+        block: BlockId,
+        range: Range3,
+        kernel: Kernel,
+        args: Vec<Arg>,
+    ) {
+        self.par_loop_eff(name, block, range, kernel, args, 1.0)
+    }
+}
+
+/// Driving surface: trigger points (data returned to user space) and
+/// run-lifecycle signals.
+pub trait Drive: Record {
+    /// Execute everything queued (a chain boundary).
+    fn flush(&mut self);
+
+    /// Get a reduction result — flushes, then resets the handle.
+    fn reduction_result(&mut self, id: ReductionId) -> f64;
+
+    /// Fetch a copy of a dataset's full padded buffer — flushes.
+    fn fetch(&mut self, id: DatasetId) -> Vec<f64>;
+
+    /// Read a single value — flushes.
+    fn value_at(&mut self, id: DatasetId, idx: [isize; 3]) -> f64;
+
+    /// Periodic halo exchange along `dim` to depth `depth`, between
+    /// chains (flushes first).
+    fn exchange_periodic(&mut self, id: DatasetId, dim: usize, depth: usize);
+
+    /// §4.1: the application declares that the regular cyclic execution
+    /// pattern has begun.
+    fn set_cyclic_phase(&mut self, on: bool);
+
+    /// Reset metrics (the paper's timed region excludes initialisation).
+    fn reset_metrics(&mut self);
+}

@@ -1,0 +1,572 @@
+//! [`ProgramBuilder`] — declarations plus record-once chain capture —
+//! and the frozen, immutable [`Program`] artifact it produces.
+
+use crate::ops::surface::{Declare, Record};
+use crate::ops::{
+    Arg, Block, BlockId, Dataset, DatasetId, Kernel, LoopInst, Range3, RedOp, Reduction,
+    ReductionId, Stencil, StencilId,
+};
+use crate::tiling::analysis::{chain_structure_fingerprint, ChainAnalysis, Fnv};
+use std::sync::Arc;
+
+/// Handle to one named, frozen chain of a [`Program`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ChainId(pub u32);
+
+/// A named, frozen loop chain: the unit [`crate::program::Session::replay`]
+/// executes. Recorded **once** (kernels close over their captured
+/// arguments), then replayed any number of times.
+pub struct ChainSpec {
+    pub name: String,
+    pub loops: Vec<LoopInst>,
+}
+
+/// Records loops into one [`ChainSpec`] during
+/// [`ProgramBuilder::record_chain`]. Implements [`Record`], so any
+/// app method that records loops can target a frozen chain unchanged.
+pub struct ChainRecorder<'a> {
+    datasets: &'a [Dataset],
+    stencils: &'a [Stencil],
+    name: String,
+    loops: Vec<LoopInst>,
+}
+
+impl ChainRecorder<'_> {
+    /// Loops recorded so far.
+    pub fn len(&self) -> usize {
+        self.loops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.loops.is_empty()
+    }
+}
+
+impl Record for ChainRecorder<'_> {
+    fn par_loop_eff(
+        &mut self,
+        name: &str,
+        block: BlockId,
+        range: Range3,
+        kernel: Kernel,
+        args: Vec<Arg>,
+        bw_efficiency: f64,
+    ) {
+        validate_loop(&self.name, name, &args, self.datasets, self.stencils);
+        let seq = self.loops.len() as u64;
+        self.loops.push(LoopInst {
+            name: name.to_string(),
+            block,
+            range,
+            args,
+            kernel,
+            seq,
+            bw_efficiency,
+        });
+    }
+}
+
+/// Validate handles + the no-aliasing contract of one recorded loop
+/// (shared by the frozen recorder and the session's dynamic queue; same
+/// panics as the legacy `OpsContext::par_loop`).
+pub(crate) fn validate_loop(
+    chain: &str,
+    name: &str,
+    args: &[Arg],
+    datasets: &[Dataset],
+    stencils: &[Stencil],
+) {
+    let mut written: Vec<DatasetId> = vec![];
+    let mut seen: Vec<DatasetId> = vec![];
+    for a in args {
+        if let Arg::Dat { dat, stencil, acc } = a {
+            assert!(
+                (dat.0 as usize) < datasets.len(),
+                "{chain}: loop {name}: undeclared dataset {dat:?}"
+            );
+            assert!(
+                (stencil.0 as usize) < stencils.len(),
+                "{chain}: loop {name}: undeclared stencil {stencil:?}"
+            );
+            if acc.writes() {
+                written.push(*dat);
+            }
+            seen.push(*dat);
+        }
+    }
+    for w in &written {
+        assert!(
+            seen.iter().filter(|d| *d == w).count() == 1,
+            "{chain}: loop {name}: dataset {w:?} written while aliased by another argument"
+        );
+    }
+}
+
+/// Builds a [`Program`]: owns the declarations, records named frozen
+/// chains, and validates everything at [`ProgramBuilder::freeze`].
+///
+/// Declaration errors (zero-sized blocks/datasets, zero element size,
+/// negative halos) are *deferred*: the offending call still returns a
+/// handle so declaration code stays linear, and `freeze` reports the
+/// first problem as a typed [`crate::errors`] error — nothing is ever
+/// silently planned over.
+#[derive(Default)]
+pub struct ProgramBuilder {
+    blocks: Vec<Block>,
+    datasets: Vec<Dataset>,
+    stencils: Vec<Stencil>,
+    reds: Vec<Reduction>,
+    chains: Vec<ChainSpec>,
+    /// Builder-level default for [`Declare::set_model_elem_bytes`];
+    /// overridable per dataset via [`ProgramBuilder::decl_dat_elem`].
+    elem_bytes: u64,
+    errors: Vec<String>,
+}
+
+impl ProgramBuilder {
+    pub fn new() -> Self {
+        ProgramBuilder {
+            elem_bytes: 8,
+            ..Default::default()
+        }
+    }
+
+    /// Declare a dataset with an explicit per-dataset element size,
+    /// bypassing the builder default — the fix for the legacy
+    /// `set_model_elem_bytes` footgun (which silently applied only to
+    /// *subsequently* declared datasets).
+    pub fn decl_dat_elem(
+        &mut self,
+        block: BlockId,
+        name: &str,
+        size: [usize; 3],
+        halo_lo: [i32; 3],
+        halo_hi: [i32; 3],
+        elem_bytes: u64,
+    ) -> DatasetId {
+        let id = DatasetId(self.datasets.len() as u32);
+        if size.iter().any(|&s| s == 0) {
+            self.errors.push(format!(
+                "dataset {name:?}: zero-sized interior {size:?} (every dimension must be >= 1)"
+            ));
+        }
+        if elem_bytes == 0 {
+            self.errors
+                .push(format!("dataset {name:?}: element size must be >= 1 byte"));
+        }
+        if halo_lo.iter().chain(&halo_hi).any(|&h| h < 0) {
+            self.errors.push(format!(
+                "dataset {name:?}: negative halo depth ({halo_lo:?}/{halo_hi:?})"
+            ));
+        }
+        if (block.0 as usize) >= self.blocks.len() {
+            self.errors
+                .push(format!("dataset {name:?}: undeclared block {block:?}"));
+        }
+        self.datasets.push(Dataset {
+            id,
+            block,
+            name: name.to_string(),
+            size,
+            halo_lo,
+            halo_hi,
+            elem_bytes,
+        });
+        id
+    }
+
+    /// Record the loops `f` emits as the named frozen chain; returns its
+    /// replay handle. The chain's dependency/footprint/skew analysis is
+    /// computed once, at [`ProgramBuilder::freeze`] — never at replay.
+    pub fn record_chain<F>(&mut self, name: &str, f: F) -> ChainId
+    where
+        F: FnOnce(&mut ChainRecorder<'_>),
+    {
+        let mut rec = ChainRecorder {
+            datasets: &self.datasets,
+            stencils: &self.stencils,
+            name: name.to_string(),
+            loops: Vec::new(),
+        };
+        f(&mut rec);
+        let loops = rec.loops;
+        let id = ChainId(self.chains.len() as u32);
+        self.chains.push(ChainSpec {
+            name: name.to_string(),
+            loops,
+        });
+        id
+    }
+
+    /// Modelled total bytes of all declared datasets (used to size the
+    /// model-scale factor before freezing).
+    pub fn problem_bytes(&self) -> u64 {
+        self.datasets.iter().map(|d| d.bytes()).sum()
+    }
+
+    pub fn datasets(&self) -> &[Dataset] {
+        &self.datasets
+    }
+
+    pub fn stencils(&self) -> &[Stencil] {
+        &self.stencils
+    }
+
+    /// Validate and freeze into an immutable [`Program`]:
+    ///
+    /// * deferred declaration errors surface first;
+    /// * every recorded loop's stencil reach is checked against the
+    ///   declared halo depths (typed error naming the dataset and the
+    ///   offending offset — replacing the planner's silent out-of-bounds
+    ///   clamp for frozen chains);
+    /// * each chain's [`ChainAnalysis`] is computed and stored, and the
+    ///   whole artifact is fingerprinted.
+    pub fn freeze(self) -> crate::Result<Program> {
+        let t0 = std::time::Instant::now();
+        if let Some(e) = self.errors.first() {
+            crate::bail!("program declaration error: {e}");
+        }
+        for spec in &self.chains {
+            for l in &spec.loops {
+                validate_stencil_reach(&spec.name, l, &self.datasets, &self.stencils)?;
+            }
+        }
+        let analyses: Vec<Arc<ChainAnalysis>> = self
+            .chains
+            .iter()
+            .map(|c| Arc::new(ChainAnalysis::build(&c.loops, &self.datasets, &self.stencils)))
+            .collect();
+        let mut h = Fnv::new();
+        h.write_u64(chain_structure_fingerprint(&[], &self.datasets, &self.stencils));
+        h.write_u64(self.chains.len() as u64);
+        for a in &analyses {
+            h.write_u64(a.fingerprint);
+        }
+        Ok(Program {
+            blocks: self.blocks,
+            datasets: self.datasets,
+            stencils: self.stencils,
+            reds: self.reds,
+            chains: self.chains,
+            analyses,
+            fingerprint: h.finish(),
+            freeze_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Freeze-time stencil validation: every declared access of every
+/// recorded loop must stay inside the dataset's halo-padded extent.
+fn validate_stencil_reach(
+    chain: &str,
+    l: &LoopInst,
+    datasets: &[Dataset],
+    stencils: &[Stencil],
+) -> crate::Result<()> {
+    for (dat, st, _) in l.dat_args() {
+        let ds = &datasets[dat.0 as usize];
+        let s = &stencils[st.0 as usize];
+        for d in 0..3 {
+            let (lo, hi) = l.range[d];
+            if hi <= lo {
+                continue;
+            }
+            let dlo = -(ds.halo_lo[d] as isize);
+            let dhi = ds.size[d] as isize + ds.halo_hi[d] as isize - 1;
+            for p in &s.points {
+                let reach_lo = lo + p[d] as isize;
+                let reach_hi = hi - 1 + p[d] as isize;
+                crate::ensure!(
+                    reach_lo >= dlo && reach_hi <= dhi,
+                    "chain {chain:?}: loop {:?}: stencil {:?} offset {p:?} reaches \
+                     index {} of dataset {:?} along dim {d} (valid {dlo}..={dhi} \
+                     for halo depths {:?}/{:?})",
+                    l.name,
+                    s.name,
+                    if reach_lo < dlo { reach_lo } else { reach_hi },
+                    ds.name,
+                    ds.halo_lo,
+                    ds.halo_hi,
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+impl Declare for ProgramBuilder {
+    fn set_model_elem_bytes(&mut self, elem_bytes: u64) {
+        if elem_bytes == 0 {
+            self.errors
+                .push("model element size must be >= 1 byte".to_string());
+        }
+        self.elem_bytes = elem_bytes.max(1);
+    }
+
+    fn decl_block(&mut self, name: &str, size: [usize; 3]) -> BlockId {
+        let id = BlockId(self.blocks.len() as u32);
+        if size[0] == 0 || size[1] == 0 {
+            self.errors.push(format!(
+                "block {name:?}: zero-sized extent {size:?} (x and y must be >= 1)"
+            ));
+        }
+        let dims = if size[2] > 1 { 3 } else { 2 };
+        self.blocks.push(Block {
+            id,
+            name: name.to_string(),
+            size,
+            dims,
+        });
+        id
+    }
+
+    fn decl_dat(
+        &mut self,
+        block: BlockId,
+        name: &str,
+        size: [usize; 3],
+        halo_lo: [i32; 3],
+        halo_hi: [i32; 3],
+    ) -> DatasetId {
+        let elem = self.elem_bytes;
+        self.decl_dat_elem(block, name, size, halo_lo, halo_hi, elem)
+    }
+
+    fn decl_stencil(&mut self, name: &str, points: Vec<[i32; 3]>) -> StencilId {
+        let id = StencilId(self.stencils.len() as u32);
+        self.stencils.push(Stencil {
+            id,
+            name: name.to_string(),
+            points,
+        });
+        id
+    }
+
+    fn decl_reduction(&mut self, name: &str, op: RedOp) -> ReductionId {
+        let id = ReductionId(self.reds.len() as u32);
+        self.reds.push(Reduction::new(id, name, op));
+        id
+    }
+}
+
+/// An immutable, fingerprintable execution artifact: declarations,
+/// named frozen chains, and their once-computed analyses. Share one
+/// `Arc<Program>` across any number of [`crate::program::Session`]s —
+/// different platforms, modelled ranks, or tuner candidates.
+pub struct Program {
+    blocks: Vec<Block>,
+    datasets: Vec<Dataset>,
+    stencils: Vec<Stencil>,
+    reds: Vec<Reduction>,
+    chains: Vec<ChainSpec>,
+    analyses: Vec<Arc<ChainAnalysis>>,
+    fingerprint: u64,
+    freeze_s: f64,
+}
+
+impl Program {
+    pub fn blocks(&self) -> &[Block] {
+        &self.blocks
+    }
+
+    pub fn datasets(&self) -> &[Dataset] {
+        &self.datasets
+    }
+
+    pub fn dataset(&self, id: DatasetId) -> &Dataset {
+        &self.datasets[id.0 as usize]
+    }
+
+    pub fn stencils(&self) -> &[Stencil] {
+        &self.stencils
+    }
+
+    /// The reduction-slot template; each Session clones its own copy.
+    pub fn reductions(&self) -> &[Reduction] {
+        &self.reds
+    }
+
+    pub fn chains(&self) -> &[ChainSpec] {
+        &self.chains
+    }
+
+    pub fn chain(&self, id: ChainId) -> &ChainSpec {
+        &self.chains[id.0 as usize]
+    }
+
+    pub fn chain_by_name(&self, name: &str) -> Option<ChainId> {
+        self.chains
+            .iter()
+            .position(|c| c.name == name)
+            .map(|i| ChainId(i as u32))
+    }
+
+    /// The frozen analysis of one chain (computed at freeze time).
+    pub fn analysis(&self, id: ChainId) -> &Arc<ChainAnalysis> {
+        &self.analyses[id.0 as usize]
+    }
+
+    /// Structural digest of the whole artifact (declarations + every
+    /// chain) — what the auto-tuner keys its cache on instead of
+    /// re-hashing raw chains.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Host seconds the freeze (validation + per-chain analysis) took.
+    pub fn freeze_s(&self) -> f64 {
+        self.freeze_s
+    }
+
+    /// Modelled total bytes of all declared datasets.
+    pub fn problem_bytes(&self) -> u64 {
+        self.datasets.iter().map(|d| d.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::shapes;
+    use crate::ops::Access;
+
+    fn small_builder() -> (ProgramBuilder, BlockId, DatasetId, StencilId) {
+        let mut b = ProgramBuilder::new();
+        let blk = b.decl_block("g", [8, 8, 1]);
+        let d = b.decl_dat(blk, "d", [8, 8, 1], [1, 1, 0], [1, 1, 0]);
+        let s = b.decl_stencil("pt", shapes::point());
+        (b, blk, d, s)
+    }
+
+    #[test]
+    fn record_freeze_and_lookup() {
+        let (mut b, blk, d, s) = small_builder();
+        let id = b.record_chain("step", |r| {
+            r.par_loop(
+                "w",
+                blk,
+                [(0, 8), (0, 8), (0, 1)],
+                kernel(|c| c.w(0, 0, 0, 1.0)),
+                vec![Arg::dat(d, s, Access::Write)],
+            );
+        });
+        let p = b.freeze().unwrap();
+        assert_eq!(p.chain(id).loops.len(), 1);
+        assert_eq!(p.chain_by_name("step"), Some(id));
+        assert_eq!(p.chain_by_name("nope"), None);
+        assert_eq!(p.analysis(id).shifts.len(), 1);
+        assert!(p.fingerprint() != 0);
+        assert!(p.freeze_s() >= 0.0);
+        assert_eq!(p.problem_bytes(), 10 * 10 * 8);
+    }
+
+    #[test]
+    fn fingerprint_is_shape_sensitive() {
+        let mk = |ny: isize| {
+            let (mut b, blk, d, s) = small_builder();
+            b.record_chain("step", |r| {
+                r.par_loop(
+                    "w",
+                    blk,
+                    [(0, 8), (0, ny), (0, 1)],
+                    kernel(|c| c.w(0, 0, 0, 1.0)),
+                    vec![Arg::dat(d, s, Access::Write)],
+                );
+            });
+            b.freeze().unwrap().fingerprint()
+        };
+        assert_eq!(mk(8), mk(8));
+        assert_ne!(mk(8), mk(4));
+    }
+
+    #[test]
+    fn zero_sized_declarations_are_typed_errors() {
+        let mut b = ProgramBuilder::new();
+        let blk = b.decl_block("g", [0, 8, 1]);
+        let _ = blk;
+        let e = b.freeze().unwrap_err().to_string();
+        assert!(e.contains("zero-sized"), "{e}");
+
+        let mut b = ProgramBuilder::new();
+        let blk = b.decl_block("g", [8, 8, 1]);
+        b.decl_dat(blk, "empty", [8, 0, 1], [0; 3], [0; 3]);
+        let e = b.freeze().unwrap_err().to_string();
+        assert!(e.contains("empty") && e.contains("zero-sized"), "{e}");
+    }
+
+    #[test]
+    fn zero_elem_bytes_is_a_typed_error() {
+        let mut b = ProgramBuilder::new();
+        let blk = b.decl_block("g", [8, 8, 1]);
+        b.decl_dat_elem(blk, "d", [8, 8, 1], [0; 3], [0; 3], 0);
+        let e = b.freeze().unwrap_err().to_string();
+        assert!(e.contains("element size"), "{e}");
+    }
+
+    #[test]
+    fn per_dataset_elem_bytes_overrides_builder_default() {
+        let mut b = ProgramBuilder::new();
+        let blk = b.decl_block("g", [8, 8, 1]);
+        b.set_model_elem_bytes(8 * 1024);
+        let scaled = b.decl_dat(blk, "scaled", [8, 8, 1], [0; 3], [0; 3]);
+        let exact = b.decl_dat_elem(blk, "exact", [8, 8, 1], [0; 3], [0; 3], 8);
+        let p = b.freeze().unwrap();
+        assert_eq!(p.dataset(scaled).elem_bytes, 8 * 1024);
+        assert_eq!(p.dataset(exact).elem_bytes, 8);
+    }
+
+    #[test]
+    fn stencil_reach_beyond_halo_fails_freeze_with_named_offset() {
+        let (mut b, blk, d, _) = small_builder();
+        let wide = b.decl_stencil("star2", shapes::star2d(2)); // halo is 1
+        b.record_chain("bad", |r| {
+            r.par_loop(
+                "read_wide",
+                blk,
+                [(0, 8), (0, 8), (0, 1)],
+                kernel(|_| {}),
+                vec![Arg::dat(d, wide, Access::Read)],
+            );
+        });
+        let e = b.freeze().unwrap_err().to_string();
+        assert!(e.contains("\"d\""), "names the dataset: {e}");
+        assert!(e.contains("star2"), "names the stencil: {e}");
+        assert!(e.contains("bad"), "names the chain: {e}");
+        assert!(e.contains('['), "names the offending offset: {e}");
+    }
+
+    #[test]
+    fn stencil_within_halo_freezes_fine() {
+        let (mut b, blk, d, _) = small_builder();
+        let star = b.decl_stencil("star1", shapes::star2d(1));
+        b.record_chain("ok", |r| {
+            r.par_loop(
+                "read",
+                blk,
+                [(0, 8), (0, 8), (0, 1)],
+                kernel(|_| {}),
+                vec![Arg::dat(d, star, Access::Read)],
+            );
+        });
+        assert!(b.freeze().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "aliased")]
+    fn recorder_rejects_aliased_writes() {
+        let (mut b, blk, d, s) = small_builder();
+        b.record_chain("bad", |r| {
+            r.par_loop(
+                "alias",
+                blk,
+                [(0, 8), (0, 8), (0, 1)],
+                kernel(|_| {}),
+                vec![
+                    Arg::dat(d, s, Access::Write),
+                    Arg::dat(d, s, Access::Read),
+                ],
+            );
+        });
+    }
+}

@@ -1,0 +1,37 @@
+//! The record-once / replay-many execution API.
+//!
+//! The legacy [`crate::ops::OpsContext`] is a god object: declarations,
+//! lazy queue, engine, executor and metrics in one struct, with the
+//! chain dependency/footprint analysis re-run at **every** flush even
+//! though a time-stepped stencil code replays the same chain thousands
+//! of times. This module splits it into three layers:
+//!
+//! 1. [`ProgramBuilder`] — owns blocks/datasets/stencils/reductions and
+//!    records loops into named, frozen [`ChainSpec`]s via
+//!    [`ProgramBuilder::record_chain`]. A step is recorded **once**,
+//!    closing over its handle arguments, not re-issued per iteration.
+//!    Declaration errors (zero-sized blocks/datasets, zero element
+//!    sizes) and stencil reach beyond declared halos are typed
+//!    [`crate::errors`] errors at [`ProgramBuilder::freeze`].
+//! 2. [`Program`] — an immutable, fingerprintable artifact whose
+//!    per-chain footprint/dependency/skew analysis
+//!    ([`crate::tiling::analysis::ChainAnalysis`]) is computed once at
+//!    freeze time and stored with it.
+//! 3. [`Session`] — binds a `Arc<Program>` to an engine + executor +
+//!    data store + metrics; [`Session::replay`] drives execution, and
+//!    multiple independent sessions share one program (different
+//!    platforms, modelled ranks, or tuner candidates).
+//!
+//! Sessions also accept dynamically recorded loops (apps whose chains
+//! depend on data, e.g. CloverLeaf's `dt`): the recorded chain's
+//! analysis is memoised by structural fingerprint, so identical shapes
+//! re-recorded every step still amortise the analysis — the run-time
+//! tiling result of Reguly et al. (1704.00693). Reuse is visible as
+//! `analysis_builds` / `analysis_reuse_hits` / `program_freeze_s` in
+//! [`crate::exec::Metrics`] and the `--json` record.
+
+pub mod builder;
+pub mod session;
+
+pub use builder::{ChainId, ChainRecorder, ChainSpec, Program, ProgramBuilder};
+pub use session::Session;

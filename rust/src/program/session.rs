@@ -1,0 +1,482 @@
+//! [`Session`] — binds one shared, frozen [`Program`] to an engine,
+//! an executor, a data store and a metrics sink, and executes chains:
+//! frozen chains via [`Session::replay`] (record once, replay many,
+//! analysis from freeze time), or dynamically recorded loops whose
+//! analyses are memoised by structural fingerprint (so even re-recorded
+//! chains — e.g. a new `dt` baked into kernels each step — reuse the
+//! expensive dependency/footprint/skew computation).
+
+use super::builder::{validate_loop, ChainId, Program};
+use crate::coordinator::Config;
+use crate::exec::{Engine, Executor, Metrics, NativeExecutor, World};
+use crate::lazy::LoopQueue;
+use crate::ops::surface::{Drive, Record};
+use crate::ops::{
+    Arg, BlockId, DataStore, Dataset, Kernel, LoopInst, Range3, Reduction, ReductionId, Stencil,
+};
+use crate::tiling::analysis::{chain_structure_fingerprint, ChainAnalysis};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One execution of a [`Program`]: engine + executor + data + metrics.
+/// Many sessions can share one `Arc<Program>` — different platforms,
+/// modelled ranks, or tuner candidates — each with independent data,
+/// reduction slots and clocks.
+pub struct Session {
+    program: Arc<Program>,
+    store: DataStore,
+    reds: Vec<Reduction>,
+    queue: LoopQueue,
+    engine: Box<dyn Engine>,
+    exec: Box<dyn Executor>,
+    metrics: Metrics,
+    cyclic_phase: bool,
+    oom: bool,
+    /// Memoised analyses of dynamically recorded chains, keyed by
+    /// structural fingerprint.
+    dyn_analysis: HashMap<u64, Arc<ChainAnalysis>>,
+    /// Which frozen chains this session has replayed at least once
+    /// (drives the `analysis_builds` / `analysis_reuse_hits` counters).
+    frozen_used: Vec<bool>,
+}
+
+impl Session {
+    /// Bind `program` to the engine `cfg` describes (tuned engines
+    /// included), with the native executor.
+    pub fn new(program: Arc<Program>, cfg: &Config) -> Self {
+        Self::with_engine(program, cfg.build_engine())
+    }
+
+    /// Bind `program` to an explicit engine.
+    pub fn with_engine(program: Arc<Program>, engine: Box<dyn Engine>) -> Self {
+        let mut store = DataStore::new();
+        for d in program.datasets() {
+            store.alloc(d);
+        }
+        let reds = program.reductions().to_vec();
+        let mut metrics = Metrics::new();
+        metrics.program_freeze_s = program.freeze_s();
+        let frozen_used = vec![false; program.chains().len()];
+        Session {
+            store,
+            reds,
+            queue: LoopQueue::new(),
+            engine,
+            exec: Box::new(NativeExecutor::new()),
+            metrics,
+            cyclic_phase: false,
+            oom: false,
+            dyn_analysis: HashMap::new(),
+            frozen_used,
+            program,
+        }
+    }
+
+    /// Swap in a different numeric executor (e.g. the PJRT backend).
+    pub fn set_executor(&mut self, exec: Box<dyn Executor>) {
+        self.exec = exec;
+    }
+
+    /// The shared program this session executes.
+    pub fn program(&self) -> &Arc<Program> {
+        &self.program
+    }
+
+    // ---- frozen-chain execution -----------------------------------------
+
+    /// Replay a frozen chain `steps` times — each replay is one chain
+    /// boundary (one engine `run_chain`), and every replay after the
+    /// first reuses the freeze-time analysis (`analysis_reuse_hits`).
+    /// Any dynamically queued loops are flushed first to preserve
+    /// program order.
+    pub fn replay(&mut self, chain: ChainId, steps: usize) {
+        self.flush();
+        let program = self.program.clone();
+        let spec = program.chain(chain);
+        if spec.loops.is_empty() {
+            return;
+        }
+        let analysis = program.analysis(chain).clone();
+        for _ in 0..steps {
+            if self.frozen_used[chain.0 as usize] {
+                self.metrics.analysis_reuse_hits += 1;
+            } else {
+                self.frozen_used[chain.0 as usize] = true;
+                self.metrics.analysis_builds += 1;
+            }
+            self.run_now(&spec.loops, program.datasets(), program.stencils(), &analysis);
+        }
+    }
+
+    /// Replay a frozen chain once.
+    pub fn run_chain(&mut self, chain: ChainId) {
+        self.replay(chain, 1);
+    }
+
+    // ---- dynamic recording ----------------------------------------------
+
+    /// Loops currently queued (dynamic recording path).
+    pub fn queued_loops(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn flush_dynamic(&mut self) {
+        let chain = self.queue.take_chain();
+        if chain.is_empty() {
+            return;
+        }
+        let program = self.program.clone();
+        let fp = chain_structure_fingerprint(&chain, program.datasets(), program.stencils());
+        let analysis = match self.dyn_analysis.get(&fp) {
+            Some(a) => {
+                self.metrics.analysis_reuse_hits += 1;
+                a.clone()
+            }
+            None => {
+                let a = Arc::new(ChainAnalysis::build(
+                    &chain,
+                    program.datasets(),
+                    program.stencils(),
+                ));
+                self.dyn_analysis.insert(fp, a.clone());
+                self.metrics.analysis_builds += 1;
+                a
+            }
+        };
+        self.run_now(&chain, program.datasets(), program.stencils(), &analysis);
+    }
+
+    /// Run one analysed chain through the engine.
+    fn run_now(
+        &mut self,
+        chain: &[LoopInst],
+        datasets: &[Dataset],
+        stencils: &[Stencil],
+        analysis: &ChainAnalysis,
+    ) {
+        if !self.engine.fits(analysis.chain_bytes) {
+            self.oom = true;
+        }
+        let mut world = World {
+            datasets,
+            stencils,
+            store: &mut self.store,
+            reds: &mut self.reds,
+            metrics: &mut self.metrics,
+            exec: self.exec.as_mut(),
+        };
+        self.engine
+            .run_chain_analyzed(chain, Some(analysis), &mut world, self.cyclic_phase);
+    }
+
+    // ---- introspection ---------------------------------------------------
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
+    /// Did any executed chain exceed the engine's memory?
+    pub fn oom(&self) -> bool {
+        self.oom
+    }
+
+    pub fn problem_bytes(&self) -> u64 {
+        self.program.problem_bytes()
+    }
+
+    pub fn engine_description(&self) -> String {
+        self.engine.describe()
+    }
+
+    pub fn dataset(&self, id: crate::ops::DatasetId) -> &Dataset {
+        self.program.dataset(id)
+    }
+
+    pub fn datasets(&self) -> &[Dataset] {
+        self.program.datasets()
+    }
+
+    pub fn stencils(&self) -> &[Stencil] {
+        self.program.stencils()
+    }
+
+    /// Direct (untimed) access for initialisation from host files etc.
+    pub fn store_mut(&mut self) -> &mut DataStore {
+        &mut self.store
+    }
+
+    pub fn store(&self) -> &DataStore {
+        &self.store
+    }
+}
+
+impl Record for Session {
+    fn par_loop_eff(
+        &mut self,
+        name: &str,
+        block: BlockId,
+        range: Range3,
+        kernel: Kernel,
+        args: Vec<Arg>,
+        bw_efficiency: f64,
+    ) {
+        validate_loop(
+            "session",
+            name,
+            &args,
+            self.program.datasets(),
+            self.program.stencils(),
+        );
+        self.queue.push(LoopInst {
+            name: name.to_string(),
+            block,
+            range,
+            args,
+            kernel,
+            seq: 0,
+            bw_efficiency,
+        });
+    }
+}
+
+impl Drive for Session {
+    fn flush(&mut self) {
+        self.flush_dynamic();
+    }
+
+    fn reduction_result(&mut self, id: ReductionId) -> f64 {
+        self.flush_dynamic();
+        let r = &mut self.reds[id.0 as usize];
+        let v = r.value;
+        r.reset();
+        v
+    }
+
+    fn fetch(&mut self, id: crate::ops::DatasetId) -> Vec<f64> {
+        self.flush_dynamic();
+        self.store.buf(id).to_vec()
+    }
+
+    fn value_at(&mut self, id: crate::ops::DatasetId, idx: [isize; 3]) -> f64 {
+        self.flush_dynamic();
+        let off = self.program.dataset(id).offset(idx) as usize;
+        self.store.buf(id)[off]
+    }
+
+    fn exchange_periodic(&mut self, id: crate::ops::DatasetId, dim: usize, depth: usize) {
+        self.flush_dynamic();
+        let ds = self.program.dataset(id).clone();
+        let t = crate::ops::api::periodic_exchange(&ds, &mut self.store, dim, depth);
+        self.metrics.halo_time_s += t;
+        self.metrics.halo_exchanges += 1;
+        self.metrics.elapsed_s += t;
+    }
+
+    fn set_cyclic_phase(&mut self, on: bool) {
+        self.cyclic_phase = on;
+    }
+
+    fn reset_metrics(&mut self) {
+        let freeze = self.metrics.program_freeze_s;
+        self.metrics = Metrics::new();
+        // The freeze cost is a per-Session constant, not part of any
+        // timed region — keep reporting it after warm-up resets.
+        self.metrics.program_freeze_s = freeze;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Platform;
+    use crate::memory::{AppCalib, Link};
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::shapes;
+    use crate::ops::surface::Declare;
+    use crate::ops::{Access, RedOp};
+    use crate::program::ProgramBuilder;
+
+    /// A two-loop diffusion-shaped program with one frozen step chain.
+    fn fixture() -> (Arc<Program>, ChainId, crate::ops::DatasetId) {
+        let mut b = ProgramBuilder::new();
+        let blk = b.decl_block("g", [16, 16, 1]);
+        let u = b.decl_dat(blk, "u", [16, 16, 1], [1, 1, 0], [1, 1, 0]);
+        let tmp = b.decl_dat(blk, "tmp", [16, 16, 1], [1, 1, 0], [1, 1, 0]);
+        let pt = b.decl_stencil("pt", shapes::point());
+        let star = b.decl_stencil("star", shapes::star2d(1));
+        let interior = [(0isize, 16isize), (0isize, 16isize), (0isize, 1isize)];
+        let step = b.record_chain("step", |r| {
+            r.par_loop(
+                "lap",
+                blk,
+                interior,
+                kernel(|c| {
+                    let l = c.r(0, -1, 0) + c.r(0, 1, 0) + c.r(0, 0, -1) + c.r(0, 0, 1)
+                        - 4.0 * c.r(0, 0, 0);
+                    c.w(1, 0, 0, l);
+                }),
+                vec![
+                    Arg::dat(u, star, Access::Read),
+                    Arg::dat(tmp, pt, Access::Write),
+                ],
+            );
+            r.par_loop(
+                "upd",
+                blk,
+                interior,
+                kernel(|c| {
+                    let v = c.r(0, 0, 0) + 0.1 * c.r(1, 0, 0);
+                    c.w(0, 0, 0, v);
+                }),
+                vec![
+                    Arg::dat(u, pt, Access::ReadWrite),
+                    Arg::dat(tmp, pt, Access::Read),
+                ],
+            );
+        });
+        (Arc::new(b.freeze().unwrap()), step, u)
+    }
+
+    fn cfg(p: Platform) -> Config {
+        Config::new(p, AppCalib::CLOVERLEAF_2D)
+    }
+
+    #[test]
+    fn replay_counts_one_build_then_reuse_hits() {
+        let (prog, step, _) = fixture();
+        let mut s = Session::new(prog, &cfg(Platform::KnlCacheTiled));
+        s.replay(step, 10);
+        assert_eq!(s.metrics().analysis_builds, 1);
+        assert_eq!(s.metrics().analysis_reuse_hits, 9);
+        assert_eq!(s.metrics().chains, 10);
+        // replaying again keeps reusing
+        s.replay(step, 5);
+        assert_eq!(s.metrics().analysis_builds, 1);
+        assert_eq!(s.metrics().analysis_reuse_hits, 14);
+    }
+
+    #[test]
+    fn replay_is_bit_exact_with_dynamic_recording() {
+        let (prog, step, u) = fixture();
+        let p = Platform::GpuExplicit {
+            link: Link::PciE,
+            cyclic: true,
+            prefetch: true,
+        };
+        let mut frozen = Session::new(prog.clone(), &cfg(p));
+        frozen.set_cyclic_phase(true);
+        frozen.replay(step, 4);
+        let a = frozen.fetch(u);
+
+        // the same loops re-recorded dynamically per step
+        let mut dynamic = Session::new(prog.clone(), &cfg(p));
+        dynamic.set_cyclic_phase(true);
+        for _ in 0..4 {
+            for l in &prog.chain(step).loops {
+                dynamic.par_loop_eff(
+                    &l.name,
+                    l.block,
+                    l.range,
+                    l.kernel.clone(),
+                    l.args.clone(),
+                    l.bw_efficiency,
+                );
+            }
+            dynamic.flush();
+        }
+        let b = dynamic.fetch(u);
+        assert_eq!(a, b);
+        // the dynamic path memoises too: one build, three hits
+        assert_eq!(dynamic.metrics().analysis_builds, 1);
+        assert_eq!(dynamic.metrics().analysis_reuse_hits, 3);
+        // and both modelled the same schedule
+        assert_eq!(frozen.metrics().elapsed_s, dynamic.metrics().elapsed_s);
+        assert_eq!(frozen.metrics().tiles, dynamic.metrics().tiles);
+    }
+
+    #[test]
+    fn sessions_share_one_program_independently() {
+        let (prog, step, u) = fixture();
+        let mut knl = Session::new(prog.clone(), &cfg(Platform::KnlCacheTiled));
+        let mut gpu = Session::new(
+            prog.clone(),
+            &cfg(Platform::GpuExplicit {
+                link: Link::NvLink,
+                cyclic: false,
+                prefetch: false,
+            }),
+        );
+        knl.replay(step, 3);
+        gpu.replay(step, 3);
+        assert_eq!(knl.fetch(u), gpu.fetch(u), "numerics engine-independent");
+        assert!(knl.metrics().elapsed_s != gpu.metrics().elapsed_s);
+        assert_eq!(Arc::strong_count(knl.program()), 3);
+    }
+
+    #[test]
+    fn reductions_and_reset_metrics_work() {
+        let mut b = ProgramBuilder::new();
+        let blk = b.decl_block("g", [4, 4, 1]);
+        let d = b.decl_dat(blk, "d", [4, 4, 1], [0; 3], [0; 3]);
+        let pt = b.decl_stencil("pt", shapes::point());
+        let sum = b.decl_reduction("sum", RedOp::Sum);
+        let fill = b.record_chain("fill", |r| {
+            r.par_loop(
+                "ones",
+                blk,
+                [(0, 4), (0, 4), (0, 1)],
+                kernel(|c| c.w(0, 0, 0, 1.0)),
+                vec![Arg::dat(d, pt, Access::Write)],
+            );
+        });
+        let reduce = b.record_chain("reduce", |r| {
+            r.par_loop(
+                "sum",
+                blk,
+                [(0, 4), (0, 4), (0, 1)],
+                kernel(|c| {
+                    let v = c.r(0, 0, 0);
+                    c.red_sum(0, v);
+                }),
+                vec![
+                    Arg::dat(d, pt, Access::Read),
+                    Arg::GblRed {
+                        red: sum,
+                        op: RedOp::Sum,
+                    },
+                ],
+            );
+        });
+        let prog = Arc::new(b.freeze().unwrap());
+        let mut s = Session::new(prog, &cfg(Platform::KnlFlatDdr4));
+        s.run_chain(fill);
+        s.run_chain(reduce);
+        assert_eq!(s.reduction_result(sum), 16.0);
+        assert_eq!(s.reduction_result(sum), 0.0, "handle resets");
+        let freeze = s.metrics().program_freeze_s;
+        s.reset_metrics();
+        assert_eq!(s.metrics().analysis_builds, 0);
+        assert_eq!(s.metrics().program_freeze_s, freeze);
+    }
+
+    #[test]
+    fn oom_flag_mirrors_engine_capacity() {
+        let (prog, step, _) = fixture();
+        let mut s = Session::with_engine(
+            prog,
+            Box::new(crate::memory::PlainEngine {
+                bw_gbs: 100.0,
+                mem_limit: Some(16),
+                launch_s: 0.0,
+                halo: None,
+                label: "tiny".into(),
+            }),
+        );
+        s.replay(step, 1);
+        assert!(s.oom());
+    }
+}

@@ -1,0 +1,391 @@
+//! Cached per-chain analysis: everything the tiler and the §4.1
+//! data-movement optimisations derive from a loop chain, computed once
+//! and reusable across flushes, engines and sessions.
+//!
+//! The paper's run-time tiling companion (Reguly et al., 1704.00693)
+//! observes that time-stepped stencil codes replay the *same* loop chain
+//! thousands of times, so the dependency/footprint analysis — `O(L²·A²)`
+//! over loops and arguments — should be paid once and amortised. A
+//! [`ChainAnalysis`] packages that result:
+//!
+//! * the structural **fingerprint** that identifies the chain shape,
+//! * the tiled dimension and per-loop **skew shifts**
+//!   ([`super::dependency::compute_shifts`]),
+//! * the per-dataset **access summary** (read-only / write-first
+//!   classification driving upload/download skipping),
+//! * the chain's total **bytes** (fits-in-memory decisions),
+//! * a memo of **tile plans** keyed by plan source and slot target, so
+//!   even the per-tile footprint construction is reused when the same
+//!   chain meets the same engine budget again.
+//!
+//! Engines accept an `Option<&ChainAnalysis>` through
+//! [`crate::exec::Engine::run_chain_analyzed`]; `None` (the legacy eager
+//! path) rebuilds the analysis per flush, exactly as the seed did.
+
+use super::dependency::{chain_access_summary, compute_shifts, DatChainInfo};
+use super::footprint::Interval;
+use super::plan::{self, pick_tile_dim, PlanSource, TilePlan};
+use crate::ops::{Dataset, DatasetId, LoopInst, Stencil};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// FNV-1a 64-bit — the crate is dependency-free, and the caches only
+/// need a stable, well-mixed digest (collisions are astronomically
+/// unlikely at the handful of chain shapes a run sees).
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for b in bytes {
+            self.0 ^= *b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn write_i64(&mut self, v: i64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write_bytes(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Digest of everything about a chain that the cost models can see,
+/// *excluding* the §4.1 cyclic-phase flag: per-loop iteration ranges,
+/// bandwidth efficiencies and dataset arguments (dataset, stencil,
+/// access mode), the geometry of every dataset, and every stencil's
+/// points. Loop *names* and kernel bodies are deliberately excluded —
+/// they do not affect modelled time, which is what lets a re-recorded
+/// chain with a fresh `dt` baked into its kernels still hit the
+/// analysis cache.
+pub fn chain_structure_fingerprint(
+    chain: &[LoopInst],
+    datasets: &[Dataset],
+    stencils: &[Stencil],
+) -> u64 {
+    let mut h = Fnv::new();
+    h.write_u64(chain.len() as u64);
+    for l in chain {
+        for (lo, hi) in &l.range {
+            h.write_i64(*lo as i64);
+            h.write_i64(*hi as i64);
+        }
+        h.write_f64(l.bw_efficiency);
+        for (dat, st, acc) in l.dat_args() {
+            h.write_u64(dat.0 as u64);
+            h.write_u64(st.0 as u64);
+            h.write_u64(acc.reads() as u64 | (acc.writes() as u64) << 1);
+        }
+    }
+    h.write_u64(datasets.len() as u64);
+    for ds in datasets {
+        for ((sz, lo), hi) in ds.size.iter().zip(&ds.halo_lo).zip(&ds.halo_hi) {
+            h.write_u64(*sz as u64);
+            h.write_i64(*lo as i64);
+            h.write_i64(*hi as i64);
+        }
+        h.write_u64(ds.elem_bytes);
+    }
+    h.write_u64(stencils.len() as u64);
+    for s in stencils {
+        h.write_u64(s.points.len() as u64);
+        for p in &s.points {
+            for c in p {
+                h.write_i64(*c as i64);
+            }
+        }
+    }
+    h.finish()
+}
+
+/// Mix the cyclic-phase flag into a structural fingerprint — the full
+/// cache key the tuner uses (the cyclic flag changes modelled transfer
+/// traffic, so tuned choices must not alias across it).
+pub fn with_cyclic(structural: u64, cyclic_phase: bool) -> u64 {
+    let mut h = Fnv::new();
+    h.write_u64(cyclic_phase as u64);
+    h.write_u64(structural);
+    h.finish()
+}
+
+/// Full chain digest including the cyclic flag — see
+/// [`chain_structure_fingerprint`] for what is (and is not) hashed.
+pub fn chain_fingerprint(
+    chain: &[LoopInst],
+    datasets: &[Dataset],
+    stencils: &[Stencil],
+    cyclic_phase: bool,
+) -> u64 {
+    with_cyclic(
+        chain_structure_fingerprint(chain, datasets, stencils),
+        cyclic_phase,
+    )
+}
+
+/// Plan-memo key: the plan source discriminant plus its parameter
+/// (`Auto` → the heuristic slot target, `Fixed` → the tile count).
+type PlanKey = (u8, u64);
+
+/// The once-per-chain analysis record (see the module docs).
+#[derive(Debug)]
+pub struct ChainAnalysis {
+    /// Structural fingerprint ([`chain_structure_fingerprint`]).
+    pub fingerprint: u64,
+    /// The dimension tiling happens along ([`pick_tile_dim`]).
+    pub tile_dim: usize,
+    /// Per-loop skew shifts ([`compute_shifts`]).
+    pub shifts: Vec<isize>,
+    /// Per-dataset chain-level access classification
+    /// ([`chain_access_summary`]).
+    pub summary: HashMap<DatasetId, DatChainInfo>,
+    /// Total bytes of all datasets the chain touches
+    /// ([`plan::chain_bytes`]).
+    pub chain_bytes: u64,
+    /// Memoised tile plans per (source, target) — shared across the
+    /// sessions holding this analysis.
+    plans: Mutex<HashMap<PlanKey, Arc<TilePlan>>>,
+}
+
+impl ChainAnalysis {
+    /// The engines' shared eager-path fallback: hand back the supplied
+    /// cached analysis, or build a fresh one into `slot` (the caller's
+    /// stack slot) exactly as every flush did before the Program/Session
+    /// split.
+    pub fn resolve<'a>(
+        analysis: Option<&'a ChainAnalysis>,
+        slot: &'a mut Option<ChainAnalysis>,
+        chain: &[LoopInst],
+        datasets: &[Dataset],
+        stencils: &[Stencil],
+    ) -> &'a ChainAnalysis {
+        match analysis {
+            Some(a) => a,
+            None => slot.insert(ChainAnalysis::build(chain, datasets, stencils)),
+        }
+    }
+
+    /// Run the full dependency/footprint/skew analysis for one chain.
+    pub fn build(chain: &[LoopInst], datasets: &[Dataset], stencils: &[Stencil]) -> Self {
+        let tile_dim = pick_tile_dim(chain);
+        ChainAnalysis {
+            fingerprint: chain_structure_fingerprint(chain, datasets, stencils),
+            tile_dim,
+            shifts: compute_shifts(chain, stencils, tile_dim),
+            summary: chain_access_summary(chain),
+            chain_bytes: plan::chain_bytes(chain, datasets),
+            plans: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Build (or fetch the memoised) tile plan for this chain under
+    /// `source`, reusing the precomputed shifts. Matches
+    /// [`PlanSource::plan`] exactly, including the single-plane-floor
+    /// fallback on degenerate `Auto` targets.
+    pub fn plan(
+        &self,
+        source: PlanSource,
+        chain: &[LoopInst],
+        datasets: &[Dataset],
+        stencils: &[Stencil],
+        heuristic_target: u64,
+    ) -> Arc<TilePlan> {
+        let key: PlanKey = match source {
+            PlanSource::Auto => (0, heuristic_target),
+            PlanSource::Fixed(n) => (1, n as u64),
+        };
+        if let Some(p) = self.plans.lock().unwrap().get(&key) {
+            return p.clone();
+        }
+        let built = Arc::new(match source {
+            PlanSource::Fixed(n) => {
+                plan::plan_chain_with(chain, datasets, stencils, n, self.tile_dim, &self.shifts)
+            }
+            PlanSource::Auto => plan::plan_auto_with(
+                chain,
+                datasets,
+                stencils,
+                heuristic_target,
+                self.tile_dim,
+                &self.shifts,
+            )
+            .unwrap_or_else(|_| {
+                plan::plan_chain_with(
+                    chain,
+                    datasets,
+                    stencils,
+                    usize::MAX,
+                    self.tile_dim,
+                    &self.shifts,
+                )
+            }),
+        });
+        self.plans
+            .lock()
+            .unwrap()
+            .insert(key, built.clone());
+        built
+    }
+
+    /// Number of memoised plans (tests/diagnostics).
+    pub fn cached_plans(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    /// Union of the chain's footprint intervals for one dataset across
+    /// all tiles of a memoised plan — diagnostics helper.
+    pub fn full_interval(&self, plan: &TilePlan, d: DatasetId) -> Interval {
+        let mut iv = Interval::empty();
+        for t in &plan.tiles {
+            if let Some(fp) = &t.footprints[d.0 as usize] {
+                iv = iv.hull(&fp.full);
+            }
+        }
+        iv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::{shapes, StencilId};
+    use crate::ops::{Access, Arg, BlockId};
+
+    fn fixture() -> (Vec<LoopInst>, Vec<Dataset>, Vec<Stencil>) {
+        let datasets = vec![
+            Dataset {
+                id: DatasetId(0),
+                block: BlockId(0),
+                name: "a".into(),
+                size: [16, 64, 1],
+                halo_lo: [1, 1, 0],
+                halo_hi: [1, 1, 0],
+                elem_bytes: 8,
+            },
+            Dataset {
+                id: DatasetId(1),
+                block: BlockId(0),
+                name: "b".into(),
+                size: [16, 64, 1],
+                halo_lo: [1, 1, 0],
+                halo_hi: [1, 1, 0],
+                elem_bytes: 8,
+            },
+        ];
+        let stencils = vec![
+            Stencil {
+                id: StencilId(0),
+                name: "pt".into(),
+                points: shapes::point(),
+            },
+            Stencil {
+                id: StencilId(1),
+                name: "star".into(),
+                points: shapes::star2d(1),
+            },
+        ];
+        let range = [(0, 16), (0, 64), (0, 1)];
+        let chain = vec![
+            LoopInst {
+                name: "produce".into(),
+                block: BlockId(0),
+                range,
+                args: vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)],
+                kernel: kernel(|_| {}),
+                seq: 0,
+                bw_efficiency: 1.0,
+            },
+            LoopInst {
+                name: "consume".into(),
+                block: BlockId(0),
+                range,
+                args: vec![
+                    Arg::dat(DatasetId(0), StencilId(1), Access::Read),
+                    Arg::dat(DatasetId(1), StencilId(0), Access::Write),
+                ],
+                kernel: kernel(|_| {}),
+                seq: 1,
+                bw_efficiency: 1.0,
+            },
+        ];
+        (chain, datasets, stencils)
+    }
+
+    #[test]
+    fn analysis_matches_direct_computation() {
+        let (chain, datasets, stencils) = fixture();
+        let a = ChainAnalysis::build(&chain, &datasets, &stencils);
+        assert_eq!(a.tile_dim, pick_tile_dim(&chain));
+        assert_eq!(a.shifts, compute_shifts(&chain, &stencils, a.tile_dim));
+        assert_eq!(a.chain_bytes, plan::chain_bytes(&chain, &datasets));
+        assert!(a.summary[&DatasetId(0)].write_first);
+        assert!(a.summary[&DatasetId(1)].skip_upload());
+    }
+
+    #[test]
+    fn memoised_plans_match_plan_source() {
+        let (chain, datasets, stencils) = fixture();
+        let a = ChainAnalysis::build(&chain, &datasets, &stencils);
+        let target = a.chain_bytes / 3;
+        let p1 = a.plan(PlanSource::Auto, &chain, &datasets, &stencils, target);
+        let direct = PlanSource::Auto.plan(&chain, &datasets, &stencils, target);
+        assert_eq!(p1.num_tiles(), direct.num_tiles());
+        assert_eq!(p1.shifts, direct.shifts);
+        // second request is memoised (same Arc)
+        let p2 = a.plan(PlanSource::Auto, &chain, &datasets, &stencils, target);
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(a.cached_plans(), 1);
+        // a fixed source gets its own entry
+        let f = a.plan(PlanSource::Fixed(4), &chain, &datasets, &stencils, target);
+        assert_eq!(f.num_tiles(), 4);
+        assert_eq!(a.cached_plans(), 2);
+    }
+
+    #[test]
+    fn degenerate_auto_target_falls_back_to_single_plane_floor() {
+        let (chain, datasets, stencils) = fixture();
+        let a = ChainAnalysis::build(&chain, &datasets, &stencils);
+        let p = a.plan(PlanSource::Auto, &chain, &datasets, &stencils, 1);
+        let direct = PlanSource::Auto.plan(&chain, &datasets, &stencils, 1);
+        assert_eq!(p.num_tiles(), direct.num_tiles());
+    }
+
+    #[test]
+    fn structure_fingerprint_ignores_cyclic_but_full_does_not() {
+        let (chain, datasets, stencils) = fixture();
+        let s = chain_structure_fingerprint(&chain, &datasets, &stencils);
+        assert_eq!(
+            with_cyclic(s, true),
+            chain_fingerprint(&chain, &datasets, &stencils, true)
+        );
+        assert_ne!(
+            chain_fingerprint(&chain, &datasets, &stencils, true),
+            chain_fingerprint(&chain, &datasets, &stencils, false)
+        );
+    }
+}

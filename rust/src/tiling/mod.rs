@@ -12,10 +12,12 @@
 //! what the untiled chain computes. Integration and property tests verify
 //! this bit-for-bit.
 
+pub mod analysis;
 pub mod dependency;
 pub mod footprint;
 pub mod plan;
 
+pub use analysis::{chain_fingerprint, chain_structure_fingerprint, ChainAnalysis, Fnv};
 pub use dependency::{chain_access_summary, compute_shifts, DatChainInfo};
 pub use footprint::{DatFootprint, Interval};
 pub use plan::{plan_auto, plan_chain, PlanSource, Tile, TilePlan};

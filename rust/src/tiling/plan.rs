@@ -166,7 +166,23 @@ pub fn plan_chain(
 ) -> TilePlan {
     let tile_dim = pick_tile_dim(chain);
     let shifts = compute_shifts(chain, stencils, tile_dim);
+    plan_chain_with(chain, datasets, stencils, num_tiles, tile_dim, &shifts)
+}
 
+/// [`plan_chain`] with the dependency analysis supplied: the tiled
+/// dimension and per-loop skew shifts come from a precomputed
+/// [`crate::tiling::analysis::ChainAnalysis`] instead of being rerun —
+/// the record-once/replay-many seam. `shifts` must have one entry per
+/// chain loop and match `tile_dim` (both are what [`compute_shifts`]
+/// would produce; anything else voids the reordering guarantee).
+pub fn plan_chain_with(
+    chain: &[LoopInst],
+    datasets: &[Dataset],
+    stencils: &[Stencil],
+    num_tiles: usize,
+    tile_dim: usize,
+    shifts: &[isize],
+) -> TilePlan {
     // Global extent of the tiled dimension across the chain.
     let glo = chain
         .iter()
@@ -239,7 +255,7 @@ pub fn plan_chain(
     TilePlan {
         tile_dim,
         boundaries,
-        shifts,
+        shifts: shifts.to_vec(),
         tiles,
     }
 }
@@ -268,6 +284,22 @@ pub fn plan_auto(
 ) -> crate::Result<TilePlan> {
     crate::ensure!(!chain.is_empty(), "cannot tile an empty loop chain");
     let tile_dim = pick_tile_dim(chain);
+    let shifts = compute_shifts(chain, stencils, tile_dim);
+    plan_auto_with(chain, datasets, stencils, target_bytes, tile_dim, &shifts)
+}
+
+/// [`plan_auto`] with the dependency analysis supplied (see
+/// [`plan_chain_with`]): the growth loop re-sizes tiles without ever
+/// re-running the `O(L²·A²)` shift computation.
+pub fn plan_auto_with(
+    chain: &[LoopInst],
+    datasets: &[Dataset],
+    stencils: &[Stencil],
+    target_bytes: u64,
+    tile_dim: usize,
+    shifts: &[isize],
+) -> crate::Result<TilePlan> {
+    crate::ensure!(!chain.is_empty(), "cannot tile an empty loop chain");
     let glo = chain
         .iter()
         .map(|l| l.range[tile_dim].0)
@@ -293,7 +325,7 @@ pub fn plan_auto(
     }
     if plane_bytes == 0 {
         // The chain touches no datasets: nothing to stream, one tile.
-        return Ok(plan_chain(chain, datasets, stencils, 1));
+        return Ok(plan_chain_with(chain, datasets, stencils, 1, tile_dim, shifts));
     }
     crate::ensure!(
         target_bytes > 0,
@@ -307,7 +339,7 @@ pub fn plan_auto(
     };
 
     loop {
-        let plan = plan_chain(chain, datasets, stencils, n);
+        let plan = plan_chain_with(chain, datasets, stencils, n, tile_dim, shifts);
         let maxfp = plan.max_footprint_bytes(datasets);
         if maxfp <= target_bytes {
             return Ok(plan);
@@ -362,6 +394,23 @@ impl PlanSource {
                     plan_chain(chain, datasets, stencils, usize::MAX)
                 }),
         }
+    }
+
+    /// [`Self::plan`] against a precomputed [`ChainAnalysis`]: the skew
+    /// shifts come from the analysis, and the resulting plan is memoised
+    /// inside it, so a replayed chain re-plans in O(1) after its first
+    /// execution on a given engine budget.
+    ///
+    /// [`ChainAnalysis`]: crate::tiling::analysis::ChainAnalysis
+    pub fn plan_analyzed(
+        &self,
+        chain: &[LoopInst],
+        datasets: &[Dataset],
+        stencils: &[Stencil],
+        heuristic_target: u64,
+        analysis: &crate::tiling::analysis::ChainAnalysis,
+    ) -> std::sync::Arc<TilePlan> {
+        analysis.plan(*self, chain, datasets, stencils, heuristic_target)
     }
 }
 

@@ -1,8 +1,6 @@
 //! Search-space points, tuning options, and the chain fingerprint that
 //! keys the tuned-plan cache.
 
-use crate::ops::{Dataset, LoopInst, Stencil};
-
 /// One point of the tuner's search space.
 ///
 /// Fields that a platform does not expose are normalised to fixed values
@@ -51,106 +49,17 @@ impl Default for TuneOpts {
     }
 }
 
-/// FNV-1a 64-bit — the crate is dependency-free, and the cache key only
-/// needs a stable, well-mixed digest (collisions are astronomically
-/// unlikely at the handful of chains a run sees).
-#[derive(Debug, Clone, Copy)]
-pub struct Fnv(u64);
-
-impl Fnv {
-    pub fn new() -> Self {
-        Fnv(0xcbf29ce484222325)
-    }
-
-    pub fn write_bytes(&mut self, bytes: &[u8]) {
-        for b in bytes {
-            self.0 ^= *b as u64;
-            self.0 = self.0.wrapping_mul(0x100000001b3);
-        }
-    }
-
-    pub fn write_u64(&mut self, v: u64) {
-        self.write_bytes(&v.to_le_bytes());
-    }
-
-    pub fn write_i64(&mut self, v: i64) {
-        self.write_bytes(&v.to_le_bytes());
-    }
-
-    pub fn write_f64(&mut self, v: f64) {
-        self.write_u64(v.to_bits());
-    }
-
-    pub fn write_str(&mut self, s: &str) {
-        self.write_u64(s.len() as u64);
-        self.write_bytes(s.as_bytes());
-    }
-
-    pub fn finish(&self) -> u64 {
-        self.0
-    }
-}
-
-impl Default for Fnv {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-/// Digest of everything about a chain that the cost models can see:
-/// per-loop iteration ranges, bandwidth efficiencies and dataset
-/// arguments (dataset, stencil, access mode), the geometry of every
-/// dataset, every stencil's points, and the §4.1 cyclic-phase flag.
-/// Loop *names* and kernel bodies are deliberately excluded — they do
-/// not affect modelled time.
-pub fn chain_fingerprint(
-    chain: &[LoopInst],
-    datasets: &[Dataset],
-    stencils: &[Stencil],
-    cyclic_phase: bool,
-) -> u64 {
-    let mut h = Fnv::new();
-    h.write_u64(cyclic_phase as u64);
-    h.write_u64(chain.len() as u64);
-    for l in chain {
-        for (lo, hi) in &l.range {
-            h.write_i64(*lo as i64);
-            h.write_i64(*hi as i64);
-        }
-        h.write_f64(l.bw_efficiency);
-        for (dat, st, acc) in l.dat_args() {
-            h.write_u64(dat.0 as u64);
-            h.write_u64(st.0 as u64);
-            h.write_u64(acc.reads() as u64 | (acc.writes() as u64) << 1);
-        }
-    }
-    h.write_u64(datasets.len() as u64);
-    for ds in datasets {
-        for ((sz, lo), hi) in ds.size.iter().zip(&ds.halo_lo).zip(&ds.halo_hi) {
-            h.write_u64(*sz as u64);
-            h.write_i64(*lo as i64);
-            h.write_i64(*hi as i64);
-        }
-        h.write_u64(ds.elem_bytes);
-    }
-    h.write_u64(stencils.len() as u64);
-    for s in stencils {
-        h.write_u64(s.points.len() as u64);
-        for p in &s.points {
-            for c in p {
-                h.write_i64(*c as i64);
-            }
-        }
-    }
-    h.finish()
-}
+/// The chain digest and FNV hasher now live with the cached-analysis
+/// machinery in [`crate::tiling::analysis`] (the Program/Session layer
+/// reuses them); re-exported here so tuner call sites keep compiling.
+pub use crate::tiling::analysis::{chain_fingerprint, Fnv};
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::ops::kernel::kernel;
     use crate::ops::stencil::{shapes, StencilId};
-    use crate::ops::{Access, Arg, BlockId, DatasetId};
+    use crate::ops::{Access, Arg, BlockId, Dataset, DatasetId, LoopInst, Stencil};
 
     fn fixture(ny: usize, eff: f64) -> (Vec<LoopInst>, Vec<Dataset>, Vec<Stencil>) {
         let datasets = vec![Dataset {

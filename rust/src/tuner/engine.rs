@@ -18,6 +18,7 @@ use super::search::tune;
 use super::target::TunerTarget;
 use crate::exec::{Engine, World};
 use crate::ops::LoopInst;
+use crate::tiling::analysis::{self, ChainAnalysis};
 use std::collections::HashMap;
 
 /// Auto-tuning wrapper around a tunable platform.
@@ -68,10 +69,26 @@ impl TunedEngine {
 
 impl Engine for TunedEngine {
     fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, cyclic_phase: bool) {
+        self.run_chain_analyzed(chain, None, world, cyclic_phase);
+    }
+
+    fn run_chain_analyzed(
+        &mut self,
+        chain: &[LoopInst],
+        analysis: Option<&ChainAnalysis>,
+        world: &mut World<'_>,
+        cyclic_phase: bool,
+    ) {
         if chain.is_empty() {
             return;
         }
-        let fp = chain_fingerprint(chain, world.datasets, world.stencils, cyclic_phase);
+        // With a frozen Program the chain's structural digest is already
+        // computed — the cache key costs one hash mix instead of an
+        // O(chain) FNV pass.
+        let fp = match analysis {
+            Some(a) => analysis::with_cyclic(a.fingerprint, cyclic_phase),
+            None => chain_fingerprint(chain, world.datasets, world.stencils, cyclic_phase),
+        };
         let key = (fp, self.digest);
         let choice = match TunedPlanCache::get(key) {
             Some(c) => {
@@ -99,7 +116,7 @@ impl Engine for TunedEngine {
             .engines
             .entry(choice.candidate)
             .or_insert_with(|| self.target.build(choice.candidate));
-        engine.run_chain(chain, world, cyclic_phase);
+        engine.run_chain_analyzed(chain, analysis, world, cyclic_phase);
     }
 
     fn describe(&self) -> String {

@@ -1,6 +1,8 @@
 //! Edge-case coverage: degenerate chains, tiny grids, single-tile plans,
 //! empty ranges, metrics/report plumbing, and the periodic-exchange API.
 
+#![allow(deprecated)] // exercises the legacy OpsContext shim on purpose
+
 use ops_oc::apps::diffusion::Diffusion2D;
 use ops_oc::coordinator::{Config, Platform, Summary};
 use ops_oc::memory::gpu_explicit::tile_traffic;

@@ -102,6 +102,9 @@ const SCHEMA: &[(&str, &str)] = &[
     ("tuned_model_s", "num"),
     ("heuristic_model_s", "num"),
     ("tune_model_speedup", "num"),
+    ("analysis_builds", "num"),
+    ("analysis_reuse_hits", "num"),
+    ("program_freeze_s", "num"),
 ];
 
 fn assert_schema(rec: &BTreeMap<String, Val>) {
@@ -139,6 +142,8 @@ fn json_record_roundtrips_and_schema_is_stable() {
     assert_eq!(rec["tiles"], Val::Num(12.0));
     assert_eq!(rec["tuned"], Val::Bool(false));
     assert_eq!(rec["tune_model_speedup"], Val::Num(1.0));
+    assert_eq!(rec["analysis_builds"], Val::Num(0.0));
+    assert_eq!(rec["analysis_reuse_hits"], Val::Num(0.0));
     match &rec["avg_bandwidth_gbs"] {
         Val::Num(v) => assert!((v - 200.0).abs() < 1e-9),
         v => panic!("{v:?}"),
@@ -195,6 +200,19 @@ fn real_run_produces_a_parseable_record() {
     assert_eq!(rec["tuned"], Val::Bool(true));
     match &rec["tune_model_speedup"] {
         Val::Num(v) => assert!(*v >= 1.0 - 1e-12, "never-worse guarantee: {v}"),
+        v => panic!("{v:?}"),
+    }
+    // the cell ran on the Program/Session path: chain analyses were
+    // built once per shape and reused thereafter
+    match (&rec["analysis_builds"], &rec["analysis_reuse_hits"]) {
+        (Val::Num(b), Val::Num(h)) => {
+            assert!(*b >= 1.0, "at least one analysis built: {b}");
+            assert!(*h + *b >= *b, "counters parse: {b}/{h}");
+        }
+        v => panic!("{v:?}"),
+    }
+    match &rec["program_freeze_s"] {
+        Val::Num(v) => assert!(*v >= 0.0),
         v => panic!("{v:?}"),
     }
 }

@@ -6,6 +6,8 @@
 //! Requires `make artifacts`; tests skip (with a loud message) when the
 //! artifacts directory is missing so `cargo test` works pre-AOT.
 
+#![allow(deprecated)] // exercises the legacy OpsContext shim on purpose
+
 use ops_oc::apps::diffusion::Diffusion2D;
 use ops_oc::coordinator::{Config, Platform};
 use ops_oc::exec::PjrtExecutor;

@@ -1,0 +1,306 @@
+//! Record-once / replay-many equivalence: a [`Session`] driving a frozen
+//! (or dynamically re-recorded) chain must be **bit-exact** with the
+//! legacy per-step `OpsContext` path for all three apps across
+//! {plain, KNL cache tiled, GPU explicit, sharded ×2 (two variants)} —
+//! while analysing each chain shape exactly once.
+//!
+//! Also home of the Platform::spec ↔ Config::parse_platform round-trip
+//! property test over every constructible platform.
+
+#![allow(deprecated)] // compares against the legacy OpsContext shim on purpose
+
+use ops_oc::apps::cloverleaf2d::CloverLeaf2D;
+use ops_oc::apps::cloverleaf3d::CloverLeaf3D;
+use ops_oc::apps::diffusion::Diffusion2D;
+use ops_oc::apps::opensbli::OpenSbli;
+use ops_oc::coordinator::{json_record, Config, InnerPlatform, Platform};
+use ops_oc::distributed::{DecompKind, Interconnect};
+use ops_oc::memory::{AppCalib, Link};
+use ops_oc::ops::{Drive, OpsContext};
+use ops_oc::program::{ProgramBuilder, Session};
+use std::sync::Arc;
+
+/// The platform matrix of the equivalence sweep: plain, KNL tiled, GPU
+/// explicit, and two sharded-×2 variants (1D over GPU ranks, 2D over
+/// KNL ranks).
+fn platforms() -> Vec<Platform> {
+    vec![
+        Platform::KnlFlatDdr4,
+        Platform::KnlCacheTiled,
+        Platform::GpuExplicit {
+            link: Link::PciE,
+            cyclic: true,
+            prefetch: true,
+        },
+        Config::parse_platform("gpu-explicit:pcie:cyclic:prefetch:x2:1d").unwrap(),
+        Config::parse_platform("knl-cache-tiled:x2:2d:ib").unwrap(),
+    ]
+}
+
+// ---------------------------------------------------------------- diffusion
+
+fn diffusion_legacy(p: Platform, steps: usize) -> (Vec<f64>, f64) {
+    let cfg = Config::new(p, AppCalib::CLOVERLEAF_2D);
+    let mut c = OpsContext::new(cfg.build_engine());
+    let app = Diffusion2D::new(&mut c, 48, 48, 1);
+    app.run(&mut c, steps, 1);
+    (c.fetch(app.u), c.metrics().elapsed_s)
+}
+
+fn diffusion_session(p: Platform, steps: usize) -> (Vec<f64>, ops_oc::exec::Metrics) {
+    let cfg = Config::new(p, AppCalib::CLOVERLEAF_2D);
+    let mut b = ProgramBuilder::new();
+    let app = Diffusion2D::new(&mut b, 48, 48, 1);
+    let chains = app.record_chains(&mut b, 1);
+    let prog = Arc::new(b.freeze().expect("diffusion freezes"));
+    let mut s = Session::new(prog, &cfg);
+    // mirror the legacy driver exactly: init chain, reset, cyclic, steps
+    s.run_chain(chains.init);
+    s.reset_metrics();
+    s.set_cyclic_phase(true);
+    s.replay(chains.step, steps);
+    (s.fetch(app.u), s.metrics().clone())
+}
+
+#[test]
+fn diffusion_replay_is_bit_exact_with_legacy_on_all_platforms() {
+    for p in platforms() {
+        let (want, elapsed) = diffusion_legacy(p, 12);
+        let (got, m) = diffusion_session(p, 12);
+        assert_eq!(want, got, "numerics differ on {}", p.label());
+        assert_eq!(
+            elapsed, m.elapsed_s,
+            "modelled clock differs on {}",
+            p.label()
+        );
+    }
+}
+
+/// The acceptance criterion: for a 100-step diffusion run the chain
+/// analysis runs exactly once — `analysis_builds == 1`,
+/// `analysis_reuse_hits == 99` — and the `--json` record carries it.
+#[test]
+fn hundred_step_diffusion_analyses_once() {
+    for p in platforms() {
+        let (got, m) = diffusion_session(p, 100);
+        assert!(got.iter().all(|v| v.is_finite()));
+        assert_eq!(m.analysis_builds, 1, "builds on {}", p.label());
+        assert_eq!(m.analysis_reuse_hits, 99, "reuse on {}", p.label());
+        let rec = json_record("diffusion", &p.label(), p.ranks(), 0.001, &m, false);
+        assert!(rec.contains("\"analysis_builds\":1"), "{rec}");
+        assert!(rec.contains("\"analysis_reuse_hits\":99"), "{rec}");
+        // the legacy path, by contrast, re-analyses every flush
+        let cfg = Config::new(p, AppCalib::CLOVERLEAF_2D);
+        let mut c = OpsContext::new(cfg.build_engine());
+        let app = Diffusion2D::new(&mut c, 48, 48, 1);
+        app.run(&mut c, 100, 1);
+        assert_eq!(c.metrics().analysis_builds, 100, "legacy on {}", p.label());
+        assert_eq!(c.metrics().analysis_reuse_hits, 0);
+    }
+}
+
+// -------------------------------------------------------------- cloverleaf2d
+
+fn cl2d_legacy(p: Platform) -> (Vec<f64>, Vec<f64>, f64) {
+    let cfg = Config::new(p, AppCalib::CLOVERLEAF_2D);
+    let mut c = OpsContext::new(cfg.build_engine());
+    let mut app = CloverLeaf2D::new(&mut c, 16, 16, 1);
+    app.run(&mut c, 3, 2);
+    (
+        c.fetch(app.density0),
+        c.fetch(app.xvel0),
+        c.metrics().elapsed_s,
+    )
+}
+
+fn cl2d_session(p: Platform) -> (Vec<f64>, Vec<f64>, ops_oc::exec::Metrics) {
+    let cfg = Config::new(p, AppCalib::CLOVERLEAF_2D);
+    let mut b = ProgramBuilder::new();
+    let mut app = CloverLeaf2D::new(&mut b, 16, 16, 1);
+    let prog = Arc::new(b.freeze().expect("cloverleaf2d freezes"));
+    let mut s = Session::new(prog, &cfg);
+    app.run(&mut s, 3, 2);
+    (
+        s.fetch(app.density0),
+        s.fetch(app.xvel0),
+        s.metrics().clone(),
+    )
+}
+
+#[test]
+fn cloverleaf2d_session_is_bit_exact_with_legacy_on_all_platforms() {
+    for p in platforms() {
+        let (d_want, v_want, elapsed) = cl2d_legacy(p);
+        let (d_got, v_got, m) = cl2d_session(p);
+        assert_eq!(d_want, d_got, "density0 differs on {}", p.label());
+        assert_eq!(v_want, v_got, "xvel0 differs on {}", p.label());
+        assert_eq!(elapsed, m.elapsed_s, "clock differs on {}", p.label());
+        // dt is data-dependent so chains are re-recorded per step, but
+        // identical shapes hit the session's analysis memo: far fewer
+        // builds than chain executions.
+        assert!(
+            m.analysis_builds < m.chains,
+            "{}: {} builds for {} chains",
+            p.label(),
+            m.analysis_builds,
+            m.chains
+        );
+        assert!(m.analysis_reuse_hits > 0, "{}", p.label());
+    }
+}
+
+// -------------------------------------------------------------- cloverleaf3d
+
+#[test]
+fn cloverleaf3d_session_is_bit_exact_with_legacy_on_all_platforms() {
+    for p in platforms() {
+        let cfg = Config::new(p, AppCalib::CLOVERLEAF_3D);
+        let (want, w_elapsed) = {
+            let mut c = OpsContext::new(cfg.build_engine());
+            let mut app = CloverLeaf3D::new(&mut c, 8, 8, 8, 1);
+            app.run(&mut c, 2, 0);
+            (c.fetch(app.density0), c.metrics().elapsed_s)
+        };
+        let mut b = ProgramBuilder::new();
+        let mut app = CloverLeaf3D::new(&mut b, 8, 8, 8, 1);
+        let prog = Arc::new(b.freeze().expect("cloverleaf3d freezes"));
+        let mut s = Session::new(prog, &cfg);
+        app.run(&mut s, 2, 0);
+        assert_eq!(want, s.fetch(app.density0), "density0 differs on {}", p.label());
+        assert_eq!(w_elapsed, s.metrics().elapsed_s, "clock differs on {}", p.label());
+    }
+}
+
+// ------------------------------------------------------------------ opensbli
+
+#[test]
+fn opensbli_session_is_bit_exact_with_legacy_on_all_platforms() {
+    for p in platforms() {
+        let cfg = Config::new(p, AppCalib::OPENSBLI);
+        let (want, w_elapsed) = {
+            let mut c = OpsContext::new(cfg.build_engine());
+            let mut app = OpenSbli::new(&mut c, 16, 1, 1);
+            app.run(&mut c, 2);
+            (c.fetch(app.q[4]), c.metrics().elapsed_s)
+        };
+        let mut b = ProgramBuilder::new();
+        let mut app = OpenSbli::new(&mut b, 16, 1, 1);
+        let prog = Arc::new(b.freeze().expect("opensbli freezes"));
+        let mut s = Session::new(prog, &cfg);
+        app.run(&mut s, 2);
+        assert_eq!(want, s.fetch(app.q[4]), "rhoE differs on {}", p.label());
+        assert_eq!(w_elapsed, s.metrics().elapsed_s, "clock differs on {}", p.label());
+    }
+}
+
+/// OpenSBLI has no data-dependent control flow, so its whole multi-step
+/// chain freezes: record once, replay per chain, bit-exact with the
+/// dynamic driver.
+#[test]
+fn opensbli_frozen_chain_matches_dynamic_driver() {
+    let p = Platform::KnlCacheTiled;
+    let cfg = Config::new(p, AppCalib::OPENSBLI);
+
+    // dynamic session (re-records the chain every iteration)
+    let mut b = ProgramBuilder::new();
+    let mut app = OpenSbli::new(&mut b, 16, 1, 1);
+    let prog = Arc::new(b.freeze().unwrap());
+    let mut dynamic = Session::new(prog, &cfg);
+    app.run(&mut dynamic, 3);
+    let want = dynamic.fetch(app.q[1]);
+
+    // frozen chain, replayed with halo exchanges between replays
+    let mut b = ProgramBuilder::new();
+    let mut app = OpenSbli::new(&mut b, 16, 1, 1);
+    let step_chain = app.record_step_chain(&mut b);
+    let init_chain = b.record_chain("sbli_init", |r| app.initialise(r));
+    let prog = Arc::new(b.freeze().expect("frozen opensbli validates"));
+    let mut s = Session::new(prog, &cfg);
+    s.run_chain(init_chain);
+    s.reset_metrics();
+    s.set_cyclic_phase(true);
+    for _ in 0..3 {
+        app.exchange_halos(&mut s);
+        s.run_chain(step_chain);
+    }
+    assert_eq!(want, s.fetch(app.q[1]));
+    assert_eq!(s.metrics().analysis_builds, 1);
+    assert_eq!(s.metrics().analysis_reuse_hits, 2);
+}
+
+// ------------------------------------------------- platform spec round-trip
+
+/// Property: `Platform::spec()` → `Config::parse_platform` round-trips
+/// for every constructible platform (sharded forms need ranks ≥ 2; `x1`
+/// collapses by design).
+#[test]
+fn platform_spec_round_trips_for_every_constructible_platform() {
+    let links = [Link::PciE, Link::NvLink];
+    let bools = [false, true];
+    let mut all: Vec<Platform> = vec![
+        Platform::KnlFlatDdr4,
+        Platform::KnlFlatMcdram,
+        Platform::KnlCache,
+        Platform::KnlCacheTiled,
+    ];
+    for link in links {
+        all.push(Platform::GpuBaseline { link });
+        for a in bools {
+            for b in bools {
+                all.push(Platform::GpuExplicit {
+                    link,
+                    cyclic: a,
+                    prefetch: b,
+                });
+                all.push(Platform::GpuUnified {
+                    link,
+                    tiled: a,
+                    prefetch: b,
+                });
+            }
+        }
+    }
+    let inners: Vec<InnerPlatform> = all
+        .iter()
+        .filter_map(|p| InnerPlatform::try_from_platform(*p))
+        .collect();
+    let base = all.clone();
+    for inner in &inners {
+        for ranks in [2u32, 3, 5, 8, 64] {
+            for ic in [
+                Interconnect::PciePeer,
+                Interconnect::NvLink,
+                Interconnect::InfiniBand,
+            ] {
+                for decomp in [DecompKind::OneD, DecompKind::TwoD] {
+                    for overlap in bools {
+                        all.push(Platform::Sharded {
+                            ranks,
+                            inner: *inner,
+                            link: ic,
+                            decomp,
+                            overlap,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    // plus every rank count for one representative inner platform
+    for ranks in 2..=64u32 {
+        all.push(Platform::Sharded {
+            ranks,
+            inner: inners[0],
+            link: Interconnect::InfiniBand,
+            decomp: DecompKind::OneD,
+            overlap: true,
+        });
+    }
+    assert!(all.len() > base.len() + 100, "sweep is non-trivial");
+    for p in all {
+        let spec = p.spec();
+        let parsed = Config::parse_platform(&spec)
+            .unwrap_or_else(|e| panic!("spec {spec:?} failed to parse: {e}"));
+        assert_eq!(parsed, p, "round trip failed for {spec:?}");
+    }
+}

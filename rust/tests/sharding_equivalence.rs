@@ -7,6 +7,8 @@
 //! halo exchanges are counted, sharding yields strong-scaling speedup,
 //! and comm/compute overlap beats the no-overlap ablation.
 
+#![allow(deprecated)] // exercises the legacy OpsContext shim on purpose
+
 use ops_oc::apps::cloverleaf2d::CloverLeaf2D;
 use ops_oc::apps::diffusion::Diffusion2D;
 use ops_oc::coordinator::{Config, InnerPlatform, Platform};

@@ -3,6 +3,8 @@
 //! identical numerics on every platform configuration, and the §4.1
 //! optimisation toggles must change *transfers*, never *results*.
 
+#![allow(deprecated)] // exercises the legacy OpsContext shim on purpose
+
 use ops_oc::apps::cloverleaf2d::CloverLeaf2D;
 use ops_oc::apps::cloverleaf3d::CloverLeaf3D;
 use ops_oc::apps::opensbli::OpenSbli;
