@@ -63,7 +63,8 @@ fn main() {
                         prefetch: true,
                         slots,
                     },
-                );
+                )
+                .unwrap();
                 let m = run_engine(Box::new(e), scale, 4);
                 fig.push(s, gb, Some(m.effective_bandwidth_gbs()));
             }

@@ -216,6 +216,24 @@ pub fn run_cl2d_tuned(
     steps: usize,
     summary_every: usize,
 ) -> (Metrics, bool) {
+    run_cl2d_cell(platform, tune, false, nx, ny, target_gb, steps, summary_every)
+}
+
+/// Full-option CloverLeaf 2D cell: auto-tuner and timeline tracing
+/// (`trace: true` collects every engine event for the `--trace`
+/// Chrome-trace export; the returned metrics carry them in
+/// `trace_events()`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_cl2d_cell(
+    platform: Platform,
+    tune: Option<crate::tuner::TuneOpts>,
+    trace: bool,
+    nx: usize,
+    ny: usize,
+    target_gb: f64,
+    steps: usize,
+    summary_every: usize,
+) -> (Metrics, bool) {
     let base = base_bytes(|b| {
         CloverLeaf2D::new(b, nx, ny, 1);
     });
@@ -224,6 +242,9 @@ pub fn run_cl2d_tuned(
     let mut b = ProgramBuilder::new();
     let mut app = CloverLeaf2D::new(&mut b, nx, ny, scale);
     let mut sess = freeze_session(b, &cfg);
+    if trace {
+        sess.metrics_mut().enable_trace();
+    }
     app.run(&mut sess, steps, summary_every);
     (sess.metrics().clone(), sess.oom())
 }
@@ -248,6 +269,20 @@ pub fn run_cl3d_tuned(
     steps: usize,
     summary_every: usize,
 ) -> (Metrics, bool) {
+    run_cl3d_cell(platform, tune, false, n, target_gb, steps, summary_every)
+}
+
+/// Full-option CloverLeaf 3D cell (see [`run_cl2d_cell`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_cl3d_cell(
+    platform: Platform,
+    tune: Option<crate::tuner::TuneOpts>,
+    trace: bool,
+    n: [usize; 3],
+    target_gb: f64,
+    steps: usize,
+    summary_every: usize,
+) -> (Metrics, bool) {
     let base = base_bytes(|b| {
         CloverLeaf3D::new(b, n[0], n[1], n[2], 1);
     });
@@ -256,6 +291,9 @@ pub fn run_cl3d_tuned(
     let mut b = ProgramBuilder::new();
     let mut app = CloverLeaf3D::new(&mut b, n[0], n[1], n[2], scale);
     let mut sess = freeze_session(b, &cfg);
+    if trace {
+        sess.metrics_mut().enable_trace();
+    }
     app.run(&mut sess, steps, summary_every);
     (sess.metrics().clone(), sess.oom())
 }
@@ -314,6 +352,18 @@ pub fn run_sbli_tall_tuned(
     target_gb: f64,
     chains: usize,
 ) -> (Metrics, bool) {
+    run_sbli_tall_cell(platform, tune, false, steps_per_chain, target_gb, chains)
+}
+
+/// Full-option tall-z OpenSBLI cell (see [`run_cl2d_cell`]).
+pub fn run_sbli_tall_cell(
+    platform: Platform,
+    tune: Option<crate::tuner::TuneOpts>,
+    trace: bool,
+    steps_per_chain: usize,
+    target_gb: f64,
+    chains: usize,
+) -> (Metrics, bool) {
     let n = [24usize, 24, 1024];
     let base = base_bytes(|b| {
         OpenSbli::new_aniso(b, n, steps_per_chain, 1);
@@ -323,6 +373,9 @@ pub fn run_sbli_tall_tuned(
     let mut b = ProgramBuilder::new();
     let mut app = OpenSbli::new_aniso(&mut b, n, steps_per_chain, scale);
     let mut sess = freeze_session(b, &cfg);
+    if trace {
+        sess.metrics_mut().enable_trace();
+    }
     app.run(&mut sess, chains);
     (sess.metrics().clone(), sess.oom())
 }

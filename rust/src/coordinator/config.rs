@@ -578,12 +578,15 @@ impl Config {
                 link,
                 cyclic,
                 prefetch,
-            } => Box::new(GpuExplicitEngine::new(
-                self.gpu.clone(),
-                self.app,
-                link,
-                GpuOpts { cyclic, prefetch, slots: 3 },
-            )),
+            } => Box::new(
+                GpuExplicitEngine::new(
+                    self.gpu.clone(),
+                    self.app,
+                    link,
+                    GpuOpts { cyclic, prefetch, slots: 3 },
+                )
+                .expect("slots: 3 is always valid"),
+            ),
             Platform::GpuUnified {
                 link,
                 tiled,

@@ -1,5 +1,6 @@
 //! Human-readable reporting of the paper's metrics.
 
+use crate::exec::timeline::StreamClass;
 use crate::exec::Metrics;
 
 /// A rendered summary of one run.
@@ -35,6 +36,8 @@ pub fn json_record(
             "{{\"app\":\"{}\",\"platform\":\"{}\",\"ranks\":{},\"size_gb\":{:.3},",
             "\"oom\":{},\"runtime_s\":{:.6},\"avg_bandwidth_gbs\":{:.3},",
             "\"eff_bandwidth_gbs\":{:.3},\"halo_time_s\":{:.6},\"tiles\":{},",
+            "\"bound\":\"{}\",\"util_compute\":{:.4},\"util_upload\":{:.4},",
+            "\"util_download\":{:.4},\"util_exchange\":{:.4},",
             "\"tuned\":{},\"tune_evals\":{},\"tune_cache_hits\":{},",
             "\"tuned_model_s\":{:.6},\"heuristic_model_s\":{:.6},",
             "\"tune_model_speedup\":{:.4},",
@@ -51,6 +54,11 @@ pub fn json_record(
         m.effective_bandwidth_gbs(),
         m.halo_time_s,
         m.tiles,
+        m.bound(),
+        m.stream_util(StreamClass::Compute),
+        m.stream_util(StreamClass::Upload),
+        m.stream_util(StreamClass::Download),
+        m.stream_util(StreamClass::Exchange),
         tuned,
         m.tune_evals,
         m.tune_cache_hits,
@@ -138,6 +146,17 @@ pub fn print_summary(label: &str, problem_bytes: u64, m: &Metrics, oom: bool) {
             m.halo_exchanges, m.halo_time_s
         );
     }
+    if !m.per_resource.is_empty() {
+        println!("  bound by            : {} stream", m.bound());
+        print!("  stream utilisation  :");
+        for class in StreamClass::ALL {
+            let u = m.stream_util(class);
+            if u > 0.0 {
+                print!(" {} {:.0}%", class.name(), u * 100.0);
+            }
+        }
+        println!();
+    }
     if m.analysis_builds + m.analysis_reuse_hits > 0 {
         println!(
             "  chain analysis      : {} built, {} reused (freeze {:.6} s)",
@@ -206,6 +225,23 @@ mod tests {
         assert!(j.contains("\"oom\":false"));
         assert!(j.contains("\"tuned\":false"));
         assert!(j.contains("\"tune_model_speedup\":1.0000"));
+        assert!(j.contains("\"bound\":\"none\""));
+        assert!(j.contains("\"util_compute\":0.0000"));
+    }
+
+    #[test]
+    fn json_record_reports_bottleneck_attribution() {
+        use crate::exec::timeline::StreamClass;
+        let mut m = Metrics::new();
+        m.record_loop("k", 1_000_000_000, 0.01);
+        m.elapsed_s = 0.02;
+        m.record_stream("compute", StreamClass::Compute, 0.005, 0, 3);
+        m.record_stream("upload", StreamClass::Upload, 0.018, 1 << 20, 3);
+        let j = json_record("a", "p", 1, 6.0, &m, false);
+        assert!(j.contains("\"bound\":\"upload\""), "{j}");
+        assert!(j.contains("\"util_upload\":0.9000"), "{j}");
+        assert!(j.contains("\"util_compute\":0.2500"), "{j}");
+        assert!(j.contains("\"util_download\":0.0000"), "{j}");
     }
 
     #[test]

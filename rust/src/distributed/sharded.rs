@@ -25,6 +25,7 @@
 use super::decomp::{decompose, DecompKind, Decomposition};
 use super::halo::HaloExchange;
 use super::interconnect::Interconnect;
+use crate::exec::timeline::{EventKind, StreamClass, Timeline, TraceEvent};
 use crate::exec::{Engine, Executor, Metrics, NullExecutor, RankStat, World};
 use crate::ops::{Dataset, LoopInst, Reduction};
 use crate::tiling::analysis::{chain_structure_fingerprint, ChainAnalysis};
@@ -108,11 +109,21 @@ impl Engine for ShardedEngine {
         }
 
         // ---- time: per-rank sub-chain replay + halo exchange -----------
+        // Every rank's schedule goes into one event graph: a compute
+        // span (interior + boundary, from the inner engine's own
+        // timeline-built clock) and an exchange event on the rank's
+        // interconnect link. With overlap on, the exchange posts at the
+        // chain start and only the boundary strip waits on it; with
+        // overlap off it serialises after the rank's compute. The
+        // chain's wall clock is the graph's makespan (bulk-synchronous
+        // steps: the slowest rank).
         let plan = HaloExchange::plan(chain, world.datasets, world.stencils, &decomp);
         if world.metrics.per_rank.len() < ranks {
             world.metrics.per_rank.resize(ranks, RankStat::default());
         }
-        let mut wall = 0.0f64;
+        let chain_t0 = world.metrics.elapsed_s;
+        let tracing = world.metrics.trace_enabled();
+        let mut tl = Timeline::new(false); // the solver; traces are forwarded below
         let mut wall_exchange = 0.0f64;
         let mut messages = 0u64;
         for r in 0..ranks {
@@ -128,6 +139,9 @@ impl Engine for ShardedEngine {
                 .collect();
 
             let mut scratch = Metrics::new();
+            if tracing {
+                scratch.enable_trace();
+            }
             if !rank_chain.is_empty() {
                 // Per-rank dataset views: along partitioned axes
                 // perpendicular to the inner engine's tiled dimension, a
@@ -189,15 +203,76 @@ impl Engine for ShardedEngine {
             let rank_loop_time = scratch.loop_time_s;
 
             let ex = plan.rank_cost(&decomp, r, self.link);
-            let rank_time = if self.overlap {
+            // The rank's event sub-graph. Both compute spans ride one
+            // `r{r}:compute` solver resource; the exchange gets the
+            // rank's `r{r}:link`. (These solver events are *not* traced:
+            // the trace shows the inner engine's real per-stream events,
+            // forwarded below, plus the link event.)
+            let rc = tl.resource(&format!("r{r}:compute"), StreamClass::Compute);
+            let rl = tl.resource(&format!("r{r}:link"), StreamClass::Exchange);
+            let ex_start = if self.overlap {
+                // Exchange posts at chain start; interior compute runs
+                // under it; the boundary strip waits on both.
                 let boundary = compute * plan.boundary_fraction(&decomp, r);
-                (compute - boundary).max(ex.time_s) + boundary
+                tl.push(rc, EventKind::Compute, "", compute - boundary, 0);
+                let ex_end = tl.push(rl, EventKind::Exchange, "", ex.time_s, ex.bytes);
+                tl.wait_until(rc, ex_end);
+                tl.push(rc, EventKind::Compute, "", boundary, 0);
+                0.0
             } else {
-                compute + ex.time_s
+                // Ablation: exchange strictly after the rank's compute.
+                let c_end = tl.push(rc, EventKind::Compute, "", compute, 0);
+                tl.wait_until(rl, c_end);
+                tl.push(rl, EventKind::Exchange, "", ex.time_s, ex.bytes);
+                compute
             };
-            wall = wall.max(rank_time);
             wall_exchange = wall_exchange.max(ex.time_s);
             messages += ex.messages;
+
+            // Attribution: the rank's inner streams, re-namespaced per
+            // rank (concurrent ranks must not pool one "compute" row),
+            // plus the link exchange.
+            for (name, st) in scratch.take_per_resource() {
+                world.metrics.record_stream(
+                    &format!("r{r}:{name}"),
+                    st.class,
+                    st.busy_s,
+                    st.bytes,
+                    st.events,
+                );
+            }
+            if ex.messages > 0 {
+                world.metrics.record_stream(
+                    &format!("r{r}:link"),
+                    StreamClass::Exchange,
+                    ex.time_s,
+                    ex.bytes,
+                    ex.messages,
+                );
+            }
+            if tracing {
+                // Forward the inner engine's events onto the global
+                // clock under the rank's namespace (ranks run
+                // concurrently from the chain start), and add the link
+                // exchange event.
+                for mut ev in scratch.take_trace_events() {
+                    ev.resource = format!("r{r}:{}", ev.resource);
+                    ev.start_s += chain_t0;
+                    ev.end_s += chain_t0;
+                    world.metrics.push_trace_event(ev);
+                }
+                if ex.messages > 0 {
+                    world.metrics.push_trace_event(TraceEvent {
+                        resource: format!("r{r}:link"),
+                        class: StreamClass::Exchange,
+                        kind: EventKind::Exchange,
+                        label: "halo exchange".into(),
+                        start_s: chain_t0 + ex_start,
+                        end_s: chain_t0 + ex_start + ex.time_s,
+                        bytes: ex.bytes,
+                    });
+                }
+            }
 
             // Fold the rank's model metrics into the global sink without
             // double-counting wall time or chains. Per-rank intra-node
@@ -216,9 +291,17 @@ impl Engine for ShardedEngine {
             rs.loop_bytes += rank_bytes;
             rs.loop_time_s += rank_loop_time;
         }
-        world.metrics.elapsed_s += wall;
+        // Wall clock = the event graph's makespan (slowest rank).
+        world.metrics.elapsed_s += tl.makespan();
         world.metrics.halo_time_s += wall_exchange;
         world.metrics.halo_exchanges += messages;
+    }
+
+    /// Forward to every rank's inner engine.
+    fn reset_transient(&mut self) {
+        for e in &mut self.inner {
+            e.reset_transient();
+        }
     }
 
     fn describe(&self) -> String {
@@ -328,15 +411,18 @@ mod tests {
     }
 
     fn gpu_rank() -> Box<dyn Engine> {
-        Box::new(GpuExplicitEngine::new(
-            GpuCalib {
-                hbm_bytes: 64 << 10,
-                ..GpuCalib::default()
-            },
-            APP,
-            Link::PciE,
-            GpuOpts::default(),
-        ))
+        Box::new(
+            GpuExplicitEngine::new(
+                GpuCalib {
+                    hbm_bytes: 64 << 10,
+                    ..GpuCalib::default()
+                },
+                APP,
+                Link::PciE,
+                GpuOpts::default(),
+            )
+            .unwrap(),
+        )
     }
 
     fn run_sharded(
@@ -439,6 +525,53 @@ mod tests {
             m2.h2d_bytes,
             m1.h2d_bytes
         );
+    }
+
+    #[test]
+    fn rank_streams_are_namespaced_and_traced() {
+        let (datasets, stencils, mut store, chain) = fixture(128);
+        let mut reds = vec![];
+        let mut metrics = Metrics::new();
+        metrics.enable_trace();
+        let mut exec = NativeExecutor::new();
+        let inner = (0..2).map(|_| gpu_rank()).collect();
+        let mut e = ShardedEngine::new(inner, DecompKind::OneD, Interconnect::InfiniBand, true);
+        {
+            let mut world = World {
+                datasets: &datasets,
+                stencils: &stencils,
+                store: &mut store,
+                reds: &mut reds,
+                metrics: &mut metrics,
+                exec: &mut exec,
+            };
+            e.run_chain(&chain, &mut world, true);
+        }
+        // inner streams are re-namespaced per rank; links appear too
+        for r in 0..2 {
+            for s in ["compute", "upload", "link"] {
+                let key = format!("r{r}:{s}");
+                assert!(metrics.per_resource.contains_key(&key), "missing {key}");
+            }
+        }
+        assert!(
+            !metrics.per_resource.contains_key("compute"),
+            "un-namespaced inner stream leaked into the global ledger"
+        );
+        // forwarded trace events carry the rank prefix and an exchange
+        use crate::exec::timeline::EventKind;
+        assert!(metrics
+            .trace_events()
+            .iter()
+            .all(|ev| ev.resource.starts_with("r0:") || ev.resource.starts_with("r1:")));
+        assert!(metrics
+            .trace_events()
+            .iter()
+            .any(|ev| ev.kind == EventKind::Exchange));
+        assert!(metrics
+            .trace_events()
+            .iter()
+            .any(|ev| ev.kind == EventKind::Compute));
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! divided by per-loop modelled runtime, weighted-averaged over all loops
 //! — equivalently, total useful bytes over total loop time.
 
-use std::collections::HashMap;
+use super::timeline::{StreamClass, Timeline, TraceEvent};
+use std::collections::{BTreeMap, HashMap};
 
 /// Accumulated statistics for one kernel name.
 #[derive(Debug, Clone, Default)]
@@ -21,6 +22,21 @@ impl LoopStat {
             0.0
         }
     }
+}
+
+/// Accumulated busy/byte accounting for one timeline resource (stream)
+/// — the bottleneck-attribution ledger behind [`Metrics::bound`] and the
+/// `--json` `util_*` fields.
+#[derive(Debug, Clone)]
+pub struct ResourceStat {
+    /// Stream class of the resource (fixed at first sight).
+    pub class: StreamClass,
+    /// Σ event durations on this resource, seconds.
+    pub busy_s: f64,
+    /// Σ bytes the resource's events moved/touched.
+    pub bytes: u64,
+    /// Number of events.
+    pub events: u64,
 }
 
 /// Per-rank statistics of sharded execution (accumulated across chains).
@@ -103,6 +119,12 @@ pub struct Metrics {
     pub per_loop: HashMap<String, LoopStat>,
     /// Per-rank breakdown of sharded execution (empty when unsharded).
     pub per_rank: Vec<RankStat>,
+    /// Per-timeline-resource busy/byte accounting (bottleneck
+    /// attribution). BTreeMap for deterministic report ordering.
+    pub per_resource: BTreeMap<String, ResourceStat>,
+    /// Recorded timeline events (`Some` once tracing is enabled; the
+    /// `--trace` Chrome-trace export renders these).
+    trace: Option<Vec<TraceEvent>>,
 }
 
 impl Metrics {
@@ -118,6 +140,143 @@ impl Metrics {
         st.invocations += 1;
         st.bytes += bytes;
         st.time_s += time_s;
+    }
+
+    // ---- timeline absorption / bottleneck attribution -------------------
+
+    /// Start collecting timeline events for trace export. Idempotent.
+    pub fn enable_trace(&mut self) {
+        if self.trace.is_none() {
+            self.trace = Some(Vec::new());
+        }
+    }
+
+    /// Whether engines should log individual events (beyond the always-on
+    /// per-resource busy accounting).
+    pub fn trace_enabled(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// The collected events (empty when tracing is off).
+    pub fn trace_events(&self) -> &[TraceEvent] {
+        self.trace.as_deref().unwrap_or(&[])
+    }
+
+    /// Drain the collected events, keeping tracing enabled.
+    pub fn take_trace_events(&mut self) -> Vec<TraceEvent> {
+        match &mut self.trace {
+            Some(evs) => std::mem::take(evs),
+            None => Vec::new(),
+        }
+    }
+
+    /// Append one event on the run's global clock (callers rebase chain-
+    /// local times themselves; [`Metrics::absorb_timeline`] does this for
+    /// whole timelines). No-op when tracing is off.
+    pub fn push_trace_event(&mut self, ev: TraceEvent) {
+        if let Some(evs) = &mut self.trace {
+            evs.push(ev);
+        }
+    }
+
+    /// Fold one resource's accounting into the attribution ledger (the
+    /// class of the first sighting of a name sticks).
+    pub fn record_stream(
+        &mut self,
+        name: &str,
+        class: StreamClass,
+        busy_s: f64,
+        bytes: u64,
+        events: u64,
+    ) {
+        let st = self
+            .per_resource
+            .entry(name.to_string())
+            .or_insert(ResourceStat {
+                class,
+                busy_s: 0.0,
+                bytes: 0,
+                events: 0,
+            });
+        st.busy_s += busy_s;
+        st.bytes += bytes;
+        st.events += events;
+    }
+
+    /// Take the per-resource ledger (the sharded engine re-namespaces
+    /// its ranks' inner streams through this).
+    pub fn take_per_resource(&mut self) -> BTreeMap<String, ResourceStat> {
+        std::mem::take(&mut self.per_resource)
+    }
+
+    /// Fold a finished chain timeline into this sink: advance the wall
+    /// clock by its makespan, accumulate per-resource busy time, and —
+    /// when tracing — rebase and collect its events onto the run clock.
+    pub fn absorb_timeline(&mut self, mut tl: Timeline) {
+        let t0 = self.elapsed_s;
+        for (name, class, busy_s, bytes, events) in tl.resource_stats() {
+            if events == 0 && busy_s == 0.0 {
+                continue;
+            }
+            let st = self
+                .per_resource
+                .entry(name.to_string())
+                .or_insert(ResourceStat {
+                    class,
+                    busy_s: 0.0,
+                    bytes: 0,
+                    events: 0,
+                });
+            st.busy_s += busy_s;
+            st.bytes += bytes;
+            st.events += events;
+        }
+        if let Some(sink) = &mut self.trace {
+            for mut ev in tl.take_events() {
+                ev.start_s += t0;
+                ev.end_s += t0;
+                sink.push(ev);
+            }
+        }
+        self.elapsed_s += tl.makespan();
+    }
+
+    /// Utilisation of one stream class over the whole run, in `[0, 1]`:
+    /// the busiest single resource of that class, as a fraction of wall
+    /// time. The *max*, not the sum — concurrent per-rank streams of one
+    /// class would otherwise report >1; the bottleneck question is "did
+    /// any instance of this stream run out of headroom". Internally-
+    /// pipelined streams (the unified engine's bulk-prefetch migration
+    /// stream schedules overlapping events) can accumulate busy time
+    /// beyond their wall share; they saturate at 1.0 — fully
+    /// oversubscribed — keeping the documented fraction contract.
+    pub fn stream_util(&self, class: StreamClass) -> f64 {
+        if self.elapsed_s <= 0.0 {
+            return 0.0;
+        }
+        self.per_resource
+            .values()
+            .filter(|st| st.class == class)
+            .fold(0.0f64, |m, st| m.max(st.busy_s / self.elapsed_s))
+            .min(1.0)
+    }
+
+    /// Bottleneck attribution: the stream class with the highest
+    /// utilisation (`"none"` when nothing ran). A compute-bound run
+    /// reports `compute`; a PCIe-upload-bound streaming run `upload`.
+    pub fn bound(&self) -> &'static str {
+        let mut name = "none";
+        let mut top = 0.0f64;
+        for class in StreamClass::ALL {
+            let u = self.stream_util(class);
+            // strictly greater: ties keep the earlier (compute-first)
+            // class, and a bound requires some utilisation at all
+            if u > top {
+                top = u;
+                name = class.name();
+            }
+        }
+        name
     }
 
     /// The headline metric: weighted Average Bandwidth in GB/s.
@@ -200,6 +359,17 @@ impl Metrics {
             st.loop_bytes += v.loop_bytes;
             st.loop_time_s += v.loop_time_s;
         }
+        for (name, st) in &other.per_resource {
+            self.record_stream(name, st.class, st.busy_s, st.bytes, st.events);
+        }
+        if let Some(theirs) = &other.trace {
+            // Event times stay on each source's own clock — sweep cells
+            // are independent runs, so a merged trace is per-cell.
+            self.enable_trace();
+            if let Some(ours) = &mut self.trace {
+                ours.extend(theirs.iter().cloned());
+            }
+        }
     }
 
     /// Kernel names sorted by time share, descending — profiling report.
@@ -246,6 +416,69 @@ mod tests {
         assert_eq!(a.loop_bytes, 30);
         assert_eq!(a.per_loop["k"].invocations, 2);
         assert_eq!(a.cache_hits, 5);
+    }
+
+    #[test]
+    fn absorb_timeline_attributes_and_advances_clock() {
+        use crate::exec::timeline::{EventKind, Timeline};
+        let mut m = Metrics::new();
+        m.enable_trace();
+        m.elapsed_s = 1.0;
+        let mut tl = Timeline::new(m.trace_enabled());
+        let c = tl.resource("compute", StreamClass::Compute);
+        let u = tl.resource("upload", StreamClass::Upload);
+        tl.push(u, EventKind::Upload, "t0", 0.5, 100);
+        tl.wait(c, u);
+        tl.push(c, EventKind::Compute, "k", 2.0, 400);
+        m.absorb_timeline(tl);
+        assert_eq!(m.elapsed_s, 3.5);
+        assert_eq!(m.per_resource["compute"].busy_s, 2.0);
+        assert_eq!(m.per_resource["upload"].bytes, 100);
+        // events rebased onto the run clock (chain started at 1.0)
+        let evs = m.trace_events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].start_s, 1.0);
+        assert_eq!(evs[1].start_s, 1.5);
+        // attribution: compute is the busiest stream
+        assert_eq!(m.bound(), "compute");
+        assert!((m.stream_util(StreamClass::Compute) - 2.0 / 3.5).abs() < 1e-12);
+        assert!((m.stream_util(StreamClass::Upload) - 0.5 / 3.5).abs() < 1e-12);
+        assert_eq!(m.stream_util(StreamClass::Download), 0.0);
+    }
+
+    #[test]
+    fn bound_is_none_when_nothing_ran() {
+        let m = Metrics::new();
+        assert_eq!(m.bound(), "none");
+        assert!(!m.trace_enabled());
+        assert!(m.trace_events().is_empty());
+    }
+
+    #[test]
+    fn merge_folds_resources_and_traces() {
+        use crate::exec::timeline::{EventKind, Timeline};
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        b.enable_trace();
+        let mut tl = Timeline::new(true);
+        let c = tl.resource("compute", StreamClass::Compute);
+        tl.push(c, EventKind::Compute, "k", 1.0, 8);
+        b.absorb_timeline(tl);
+        a.record_stream("compute", StreamClass::Compute, 0.5, 4, 1);
+        a.merge(&b);
+        assert_eq!(a.per_resource["compute"].busy_s, 1.5);
+        assert_eq!(a.per_resource["compute"].events, 2);
+        assert_eq!(a.trace_events().len(), 1);
+    }
+
+    #[test]
+    fn stream_util_takes_the_busiest_instance_per_class() {
+        let mut m = Metrics::new();
+        m.elapsed_s = 10.0;
+        m.record_stream("r0:compute", StreamClass::Compute, 9.0, 0, 1);
+        m.record_stream("r1:compute", StreamClass::Compute, 4.0, 0, 1);
+        assert!((m.stream_util(StreamClass::Compute) - 0.9).abs() < 1e-12);
+        assert_eq!(m.bound(), "compute");
     }
 
     #[test]

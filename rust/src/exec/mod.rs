@@ -11,10 +11,12 @@
 pub mod metrics;
 pub mod native;
 pub mod pjrt;
+pub mod timeline;
 
-pub use metrics::{LoopStat, Metrics, RankStat};
+pub use metrics::{LoopStat, Metrics, RankStat, ResourceStat};
 pub use native::NativeExecutor;
 pub use pjrt::PjrtExecutor;
+pub use timeline::{chrome_trace_json, EventKind, StreamClass, Timeline, TraceEvent};
 
 use crate::ops::{DataStore, Dataset, LoopInst, Range3, Reduction, Stencil};
 
@@ -98,6 +100,15 @@ pub trait Engine {
         let _ = analysis;
         self.run_chain(chain, world, cyclic_phase);
     }
+
+    /// Reset transient *schedule-position* state carried across chains —
+    /// e.g. the GPU streaming engine's speculative prefetch credit.
+    /// Called when a [`crate::program::Session`] rebinds an engine, so a
+    /// pre-used engine cannot smuggle overlap credit from chains the new
+    /// session never ran. Deliberately does **not** touch modelled
+    /// hardware warmth (KNL cache contents, unified-memory residency):
+    /// those model device state, not schedule position. Default: no-op.
+    fn reset_transient(&mut self) {}
 
     /// Human-readable configuration string for reports.
     fn describe(&self) -> String;

@@ -1,0 +1,505 @@
+//! Deterministic discrete-event timeline — the shared scheduling
+//! substrate under every memory engine.
+//!
+//! Before this subsystem existed each engine modelled its clock with
+//! bespoke closed-form float arithmetic (`gpu_explicit` hand-threaded
+//! three stream cursors, `sharded` approximated comm/compute overlap
+//! independently). A [`Timeline`] replaces that per-engine clock math
+//! with one event graph:
+//!
+//! * **Resources** are named execution streams (`compute`, `upload`,
+//!   `download`, `mcdram`, `ddr4`, `migration`, `halo`, per-rank
+//!   `r3:link`, …). Each carries a monotone *cursor* — the time at
+//!   which it next becomes free — plus busy/byte/event accounting.
+//! * **Events** occupy one resource for a duration, starting no earlier
+//!   than the resource's cursor and any explicit dependency
+//!   ([`Timeline::push_at`]). Cross-stream waits (`cudaStreamWaitEvent`,
+//!   a loop waiting on a halo exchange) are [`Timeline::wait`] /
+//!   [`Timeline::wait_until`] edges.
+//! * The **makespan** ([`Timeline::makespan`]) is the latest cursor —
+//!   the modelled wall clock of the chain. Engines fold a finished
+//!   timeline into the metrics sink with
+//!   [`crate::exec::Metrics::absorb_timeline`], which advances
+//!   `elapsed_s`, accumulates per-resource busy time (the bottleneck
+//!   attribution behind the `--json` `bound`/`util_*` fields) and, when
+//!   tracing is enabled, collects every event for the `--trace`
+//!   Chrome-trace export ([`chrome_trace_json`]).
+//!
+//! The cursor arithmetic is intentionally the *same* float operations
+//! the old closed forms performed (`push` adds, `wait` maxes), so
+//! rebuilding an engine on the timeline reproduces its legacy modelled
+//! clock exactly; the equivalence suites (`program_equivalence`,
+//! `tiling_equivalence`, `sharding_equivalence`) pin that.
+//!
+//! Determinism: a timeline is a pure fold over the sequence of calls —
+//! no host clocks, no hashing iteration order — so identical call
+//! sequences give bit-identical makespans (property-tested in
+//! `tests/prop_timeline.rs`).
+
+/// Coarse stream classification for bottleneck attribution. Every
+/// resource belongs to one class; the `--json` record reports one
+/// utilisation figure per class and names the busiest class as `bound`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum StreamClass {
+    /// Kernel execution (and device-side copies that ride the compute
+    /// stream): GPU stream 0, KNL MCDRAM-side time.
+    Compute,
+    /// Traffic *into* fast memory: H2D uploads, unified-memory faults
+    /// and prefetches, KNL DDR4 cache-fill traffic.
+    Upload,
+    /// Traffic *out of* fast memory: D2H downloads.
+    Download,
+    /// Inter-rank / inter-process communication: MPI halo exchanges,
+    /// the sharded engine's interconnect links.
+    Exchange,
+}
+
+impl StreamClass {
+    pub const ALL: [StreamClass; 4] = [
+        StreamClass::Compute,
+        StreamClass::Upload,
+        StreamClass::Download,
+        StreamClass::Exchange,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StreamClass::Compute => "compute",
+            StreamClass::Upload => "upload",
+            StreamClass::Download => "download",
+            StreamClass::Exchange => "exchange",
+        }
+    }
+}
+
+/// What one event did — the Chrome-trace category.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Kernel execution over a tile / loop range.
+    Compute,
+    /// Device-device edge copy between tile slots.
+    EdgeCopy,
+    /// Host→device tile upload (explicit streaming).
+    Upload,
+    /// Device→host tile download.
+    Download,
+    /// Unified-memory on-demand fault migration.
+    Fault,
+    /// Unified-memory bulk prefetch.
+    Prefetch,
+    /// MCDRAM-cache fill / writeback traffic on the DDR4 side.
+    CacheFill,
+    /// Intra-node MPI halo exchange.
+    Halo,
+    /// Inter-rank halo exchange over the modelled interconnect.
+    Exchange,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Compute => "compute",
+            EventKind::EdgeCopy => "edge-copy",
+            EventKind::Upload => "upload",
+            EventKind::Download => "download",
+            EventKind::Fault => "fault",
+            EventKind::Prefetch => "prefetch",
+            EventKind::CacheFill => "cache-fill",
+            EventKind::Halo => "halo",
+            EventKind::Exchange => "exchange",
+        }
+    }
+}
+
+/// Handle to one timeline resource.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResourceId(usize);
+
+#[derive(Debug, Clone)]
+struct Resource {
+    name: String,
+    class: StreamClass,
+    /// Time at which the resource next becomes free (monotone).
+    cursor: f64,
+    /// Σ event durations (never exceeds the cursor: events on one
+    /// resource cannot overlap).
+    busy_s: f64,
+    bytes: u64,
+    events: u64,
+}
+
+/// One recorded event, in seconds from the timeline origin (the chain
+/// start; [`crate::exec::Metrics::absorb_timeline`] rebases onto the
+/// run's global clock).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Resource (stream) name the event ran on.
+    pub resource: String,
+    pub class: StreamClass,
+    pub kind: EventKind,
+    /// Human label (kernel name, `tile 7`, …); may be empty.
+    pub label: String,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub bytes: u64,
+}
+
+/// A deterministic discrete-event timeline for one chain execution.
+#[derive(Debug)]
+pub struct Timeline {
+    resources: Vec<Resource>,
+    /// Event log, kept only when tracing (the busy accounting above is
+    /// always on and does not need the log).
+    events: Option<Vec<TraceEvent>>,
+}
+
+impl Timeline {
+    /// A fresh timeline at t = 0. `tracing` controls whether individual
+    /// events are logged (per-resource busy accounting always is).
+    pub fn new(tracing: bool) -> Self {
+        Timeline {
+            resources: Vec::new(),
+            events: tracing.then(Vec::new),
+        }
+    }
+
+    /// A timeline whose tracing mirrors the world's metrics sink — the
+    /// engines' standard entry point.
+    pub fn for_world(world: &crate::exec::World<'_>) -> Self {
+        Self::new(world.metrics.trace_enabled())
+    }
+
+    pub fn tracing(&self) -> bool {
+        self.events.is_some()
+    }
+
+    /// Get or create the resource named `name`. A second call with the
+    /// same name returns the same resource (the class of the first call
+    /// sticks).
+    pub fn resource(&mut self, name: &str, class: StreamClass) -> ResourceId {
+        if let Some(i) = self.resources.iter().position(|r| r.name == name) {
+            return ResourceId(i);
+        }
+        self.resources.push(Resource {
+            name: name.to_string(),
+            class,
+            cursor: 0.0,
+            busy_s: 0.0,
+            bytes: 0,
+            events: 0,
+        });
+        ResourceId(self.resources.len() - 1)
+    }
+
+    /// The time at which `r` next becomes free.
+    pub fn cursor(&self, r: ResourceId) -> f64 {
+        self.resources[r.0].cursor
+    }
+
+    /// Synchronise two resources: both cursors move to their max (a
+    /// bidirectional stream wait, e.g. Algorithm 1's `wait streams 0&1`).
+    pub fn wait(&mut self, a: ResourceId, b: ResourceId) {
+        let m = self.resources[a.0].cursor.max(self.resources[b.0].cursor);
+        self.resources[a.0].cursor = m;
+        self.resources[b.0].cursor = m;
+    }
+
+    /// One-directional wait: `r` may not proceed before `t` (an event's
+    /// end time — the dependency edge of the graph).
+    pub fn wait_until(&mut self, r: ResourceId, t: f64) {
+        let res = &mut self.resources[r.0];
+        res.cursor = res.cursor.max(t);
+    }
+
+    /// Schedule an event on `r` starting at its cursor; returns the
+    /// event's end time (= the new cursor).
+    pub fn push(
+        &mut self,
+        r: ResourceId,
+        kind: EventKind,
+        label: &str,
+        dur_s: f64,
+        bytes: u64,
+    ) -> f64 {
+        let at = self.resources[r.0].cursor;
+        self.push_at(r, kind, label, at, dur_s, bytes)
+    }
+
+    /// Schedule an event on `r` starting at `max(cursor, not_before)`
+    /// (the dependency edge: pass another event's end time, or a
+    /// point *before* the cursor to model work that began while the
+    /// resource was still busy elsewhere — e.g. a prefetch overlapping
+    /// the previous tile). Returns the event's end time.
+    pub fn push_at(
+        &mut self,
+        r: ResourceId,
+        kind: EventKind,
+        label: &str,
+        not_before: f64,
+        dur_s: f64,
+        bytes: u64,
+    ) -> f64 {
+        let res = &mut self.resources[r.0];
+        let start = res.cursor.max(not_before);
+        let end = start + dur_s;
+        res.cursor = end;
+        res.busy_s += dur_s;
+        res.bytes += bytes;
+        res.events += 1;
+        if let Some(evs) = &mut self.events {
+            evs.push(TraceEvent {
+                resource: res.name.clone(),
+                class: res.class,
+                kind,
+                label: label.to_string(),
+                start_s: start,
+                end_s: end,
+                bytes,
+            });
+        }
+        end
+    }
+
+    /// Schedule an event at exactly `start_s`, *without* serialising
+    /// against the resource's cursor (the cursor still advances to the
+    /// latest end seen). For streams that pipeline internally — the
+    /// unified-memory bulk-prefetch model charges each tile's transfer
+    /// against its own overlap window, with contention already folded
+    /// into the degraded-efficiency calibration — so events on such a
+    /// stream may overlap and its busy time may legitimately exceed its
+    /// wall share ([`crate::exec::Metrics::stream_util`] saturates such
+    /// a stream at 1.0: fully oversubscribed).
+    pub fn push_overlapping(
+        &mut self,
+        r: ResourceId,
+        kind: EventKind,
+        label: &str,
+        start_s: f64,
+        dur_s: f64,
+        bytes: u64,
+    ) -> f64 {
+        let res = &mut self.resources[r.0];
+        let end = start_s + dur_s;
+        res.cursor = res.cursor.max(end);
+        res.busy_s += dur_s;
+        res.bytes += bytes;
+        res.events += 1;
+        if let Some(evs) = &mut self.events {
+            evs.push(TraceEvent {
+                resource: res.name.clone(),
+                class: res.class,
+                kind,
+                label: label.to_string(),
+                start_s,
+                end_s: end,
+                bytes,
+            });
+        }
+        end
+    }
+
+    /// The modelled wall clock: the latest cursor over all resources
+    /// (0 for an empty timeline).
+    pub fn makespan(&self) -> f64 {
+        self.resources.iter().fold(0.0, |m, r| m.max(r.cursor))
+    }
+
+    /// Σ event durations on `r`.
+    pub fn busy(&self, r: ResourceId) -> f64 {
+        self.resources[r.0].busy_s
+    }
+
+    /// Iterate (name, class, busy_s, bytes, events) per resource — what
+    /// [`crate::exec::Metrics::absorb_timeline`] folds in.
+    pub(crate) fn resource_stats(
+        &self,
+    ) -> impl Iterator<Item = (&str, StreamClass, f64, u64, u64)> {
+        self.resources
+            .iter()
+            .map(|r| (r.name.as_str(), r.class, r.busy_s, r.bytes, r.events))
+    }
+
+    /// Take the event log (empty when tracing was off).
+    pub(crate) fn take_events(&mut self) -> Vec<TraceEvent> {
+        self.events.take().unwrap_or_default()
+    }
+}
+
+fn esc(s: &str) -> String {
+    // Labels come from user-supplied loop/dataset names: escape control
+    // characters too, or one newline in a kernel name invalidates the
+    // whole trace file.
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render recorded events as Chrome-trace JSON (the "Trace Event
+/// Format"): load the file in `chrome://tracing` or Perfetto to see the
+/// modelled streams as horizontal tracks. One `tid` per resource in
+/// order of first appearance, complete (`"ph":"X"`) events with
+/// microsecond timestamps, byte counts and stream class in `args`.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let mut tids: Vec<&str> = Vec::new();
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    let mut push = |s: String, first: &mut bool, out: &mut String| {
+        if !*first {
+            out.push(',');
+            out.push('\n');
+        }
+        *first = false;
+        out.push_str(&s);
+    };
+    for ev in events {
+        let tid = match tids.iter().position(|n| *n == ev.resource) {
+            Some(i) => i,
+            None => {
+                tids.push(ev.resource.as_str());
+                let i = tids.len() - 1;
+                push(
+                    format!(
+                        "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{i},\
+                         \"args\":{{\"name\":\"{}\"}}}}",
+                        esc(&ev.resource)
+                    ),
+                    &mut first,
+                    &mut out,
+                );
+                i
+            }
+        };
+        let name = if ev.label.is_empty() {
+            ev.kind.name()
+        } else {
+            ev.label.as_str()
+        };
+        push(
+            format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":0,\"tid\":{tid},\
+                 \"ts\":{:.3},\"dur\":{:.3},\
+                 \"args\":{{\"bytes\":{},\"stream\":\"{}\"}}}}",
+                esc(name),
+                ev.kind.name(),
+                ev.start_s * 1e6,
+                (ev.end_s - ev.start_s) * 1e6,
+                ev.bytes,
+                ev.class.name(),
+            ),
+            &mut first,
+            &mut out,
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cursors_advance_and_makespan_is_latest() {
+        let mut tl = Timeline::new(false);
+        let a = tl.resource("a", StreamClass::Compute);
+        let b = tl.resource("b", StreamClass::Upload);
+        assert_eq!(tl.makespan(), 0.0);
+        let e1 = tl.push(a, EventKind::Compute, "", 2.0, 10);
+        assert_eq!(e1, 2.0);
+        tl.push(b, EventKind::Upload, "", 0.5, 5);
+        assert_eq!(tl.makespan(), 2.0);
+        // b waits on a's event, then runs 1s: ends at 3.
+        tl.wait_until(b, e1);
+        tl.push(b, EventKind::Upload, "", 1.0, 5);
+        assert_eq!(tl.makespan(), 3.0);
+        assert_eq!(tl.busy(b), 1.5);
+        assert_eq!(tl.busy(a), 2.0);
+    }
+
+    #[test]
+    fn wait_joins_both_cursors() {
+        let mut tl = Timeline::new(false);
+        let a = tl.resource("a", StreamClass::Compute);
+        let b = tl.resource("b", StreamClass::Download);
+        tl.push(a, EventKind::Compute, "", 4.0, 0);
+        tl.wait(a, b);
+        assert_eq!(tl.cursor(b), 4.0);
+        assert_eq!(tl.cursor(a), 4.0);
+        // busy unchanged by waits
+        assert_eq!(tl.busy(b), 0.0);
+    }
+
+    #[test]
+    fn push_at_models_early_start_but_never_overlaps_resource() {
+        let mut tl = Timeline::new(true);
+        let m = tl.resource("mig", StreamClass::Upload);
+        tl.push(m, EventKind::Prefetch, "p0", 1.0, 1);
+        // requested start before the cursor: clamped to the cursor
+        let end = tl.push_at(m, EventKind::Prefetch, "p1", 0.2, 1.0, 1);
+        assert_eq!(end, 2.0);
+        // requested start after the cursor: honoured
+        let end = tl.push_at(m, EventKind::Prefetch, "p2", 5.0, 1.0, 1);
+        assert_eq!(end, 6.0);
+        let evs = tl.take_events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[1].start_s, 1.0);
+        assert_eq!(evs[2].start_s, 5.0);
+    }
+
+    #[test]
+    fn resource_lookup_is_by_name() {
+        let mut tl = Timeline::new(false);
+        let a = tl.resource("x", StreamClass::Compute);
+        let b = tl.resource("x", StreamClass::Upload); // class of first call sticks
+        assert_eq!(a, b);
+        tl.push(a, EventKind::Compute, "", 1.0, 0);
+        let stats: Vec<_> = tl.resource_stats().collect();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].1, StreamClass::Compute);
+    }
+
+    #[test]
+    fn events_logged_only_when_tracing() {
+        let mut quiet = Timeline::new(false);
+        let r = quiet.resource("c", StreamClass::Compute);
+        quiet.push(r, EventKind::Compute, "k", 1.0, 8);
+        assert!(quiet.take_events().is_empty());
+        assert_eq!(quiet.busy(r), 1.0, "busy accounting still on");
+
+        let mut loud = Timeline::new(true);
+        let r = loud.resource("c", StreamClass::Compute);
+        loud.push(r, EventKind::Compute, "k", 1.0, 8);
+        let evs = loud.take_events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].label, "k");
+        assert_eq!(evs[0].bytes, 8);
+    }
+
+    #[test]
+    fn chrome_trace_renders_metadata_and_events() {
+        let mut tl = Timeline::new(true);
+        let c = tl.resource("compute", StreamClass::Compute);
+        let u = tl.resource("upload", StreamClass::Upload);
+        tl.push(u, EventKind::Upload, "tile 0", 1e-3, 4096);
+        tl.push(c, EventKind::Compute, "kern\"el", 2e-3, 8192);
+        let j = chrome_trace_json(&tl.take_events());
+        assert!(j.starts_with("{\"traceEvents\":["));
+        assert!(j.ends_with("]}"));
+        assert!(j.contains("\"thread_name\""));
+        assert!(j.contains("\"tile 0\""));
+        assert!(j.contains("kern\\\"el"));
+        assert!(j.contains("\"ph\":\"X\""));
+        assert!(j.contains("\"dur\":1000.000"));
+        assert!(j.contains("\"stream\":\"upload\""));
+    }
+}

@@ -59,6 +59,19 @@
 //! guaranteed to never *model* slower than the heuristic and leave
 //! numerics bit-exact. Enable with `--tune`, a `tuned` spec token, or
 //! [`coordinator::Config::with_tuning`].
+//!
+//! ## Timelines, tracing & bottleneck attribution
+//!
+//! Every engine schedules on one shared substrate: the
+//! [`exec::timeline`] discrete-event simulator. Named resources model
+//! the platform's concurrent streams (compute/upload/download for
+//! Algorithm 1, MCDRAM/DDR4 for cache mode, per-rank interconnect
+//! links when sharded); waits and overlaps are edges in one event
+//! graph, and the chain's modelled wall clock is its makespan. The
+//! recorded events feed per-stream busy/idle **bottleneck attribution**
+//! (`bound` + `util_*` in the `--json` record and the run summary) and
+//! the `--trace <path>` Chrome-trace export (`chrome://tracing` /
+//! Perfetto).
 
 pub mod apps;
 pub mod bench_support;

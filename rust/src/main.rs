@@ -24,9 +24,15 @@
 //!   computed once and replayed, not redone per flush.
 //! `--tune` / `--tune-budget E` (or a `tuned` spec token) enable the
 //!   cost-model tile-plan auto-tuner on platforms with a tile plan.
+//! `--trace <path>` (run only) writes the engine's discrete-event
+//!   timeline — every compute/upload/download/exchange event of the
+//!   timed region — as Chrome-trace JSON for `chrome://tracing` or
+//!   Perfetto; the `--json` record carries the matching aggregate
+//!   attribution (`bound`, `util_*`).
 
 use ops_oc::bench_support::{self, Figure};
 use ops_oc::coordinator::{json_record, print_summary, Config, Platform};
+use ops_oc::exec::chrome_trace_json;
 use ops_oc::tuner::TuneOpts;
 use std::process::exit;
 
@@ -41,6 +47,7 @@ struct Args {
     json: bool,
     tune: bool,
     tune_budget: u32,
+    trace: Option<String>,
 }
 
 fn parse_args() -> Args {
@@ -55,6 +62,7 @@ fn parse_args() -> Args {
         json: false,
         tune: false,
         tune_budget: TuneOpts::default().budget,
+        trace: None,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -65,6 +73,14 @@ fn parse_args() -> Args {
             }
             "--json" => a.json = true,
             "--tune" => a.tune = true,
+            "--trace" => {
+                i += 1;
+                let Some(v) = argv.get(i) else {
+                    eprintln!("missing path for --trace");
+                    exit(2);
+                };
+                a.trace = Some(v.clone());
+            }
             flag @ ("--app" | "--platform" | "--size-gb" | "--steps" | "--chain-steps"
             | "--ranks" | "--tune-budget") => {
                 i += 1;
@@ -167,14 +183,19 @@ fn run_cell(
     app: &str,
     p: Platform,
     tune: Option<TuneOpts>,
+    trace: bool,
     gb: f64,
     steps: usize,
     chain_steps: usize,
 ) -> (ops_oc::exec::Metrics, bool) {
     match app {
-        "cloverleaf2d" => bench_support::run_cl2d_tuned(p, tune, 8, 6144, gb, steps, 0),
-        "cloverleaf3d" => bench_support::run_cl3d_tuned(p, tune, [8, 8, 6144], gb, steps, 0),
-        "opensbli" => bench_support::run_sbli_tall_tuned(p, tune, chain_steps, gb, steps.max(1)),
+        "cloverleaf2d" => bench_support::run_cl2d_cell(p, tune, trace, 8, 6144, gb, steps, 0),
+        "cloverleaf3d" => {
+            bench_support::run_cl3d_cell(p, tune, trace, [8, 8, 6144], gb, steps, 0)
+        }
+        "opensbli" => {
+            bench_support::run_sbli_tall_cell(p, tune, trace, chain_steps, gb, steps.max(1))
+        }
         other => {
             eprintln!("unknown app {other:?} (cloverleaf2d|cloverleaf3d|opensbli)");
             exit(2);
@@ -190,6 +211,7 @@ fn main() {
             println!("commands:");
             println!("  run   --app A --platform P [--size-gb G] [--steps N] [--chain-steps C]");
             println!("        [--ranks R | xR] [--tune] [--tune-budget E] [--json]");
+            println!("        [--trace PATH]   (Chrome-trace JSON of the engine timeline)");
             println!("  sweep --app A --platform P [--tune] [--json]  (problem-size sweep)");
             println!("  list                                          (apps + platform specs)");
         }
@@ -207,6 +229,9 @@ fn main() {
             println!("execution : apps run on the record-once/replay-many Program/Session");
             println!("            API — chain analysis is computed once per shape and");
             println!("            reused (--json: analysis_builds / analysis_reuse_hits)");
+            println!("timelines : every engine schedules on the exec::timeline event");
+            println!("            graph; --json reports bound/util_* attribution and");
+            println!("            `run --trace t.json` exports the full event timeline");
         }
         "run" => {
             let (platform, tune) = parse_platform_or_exit(&a);
@@ -220,7 +245,26 @@ fn main() {
                     a.steps
                 );
             }
-            let (m, oom) = run_cell(&a.app, platform, tune, a.size_gb, a.steps, a.chain_steps);
+            let (m, oom) = run_cell(
+                &a.app,
+                platform,
+                tune,
+                a.trace.is_some(),
+                a.size_gb,
+                a.steps,
+                a.chain_steps,
+            );
+            if let Some(path) = &a.trace {
+                let json = chrome_trace_json(m.trace_events());
+                if let Err(e) = std::fs::write(path, &json) {
+                    eprintln!("cannot write trace {path:?}: {e}");
+                    exit(1);
+                }
+                eprintln!(
+                    "wrote {} timeline events to {path} (open in chrome://tracing or Perfetto)",
+                    m.trace_events().len()
+                );
+            }
             if a.json {
                 println!(
                     "{}",
@@ -236,6 +280,10 @@ fn main() {
             }
         }
         "sweep" => {
+            if a.trace.is_some() {
+                eprintln!("--trace applies to `run` (one cell, one trace file)");
+                exit(2);
+            }
             let (platform, tune) = parse_platform_or_exit(&a);
             let mut fig = Figure::new(
                 &format!(
@@ -249,7 +297,8 @@ fn main() {
             let s = fig.add_series(&platform.label());
             let mut records = Vec::new();
             for gb in bench_support::KNL_SIZES_GB {
-                let (m, oom) = run_cell(&a.app, platform, tune, gb, a.steps, a.chain_steps);
+                let (m, oom) =
+                    run_cell(&a.app, platform, tune, false, gb, a.steps, a.chain_steps);
                 if a.json {
                     records.push(json_record(
                         &a.app,

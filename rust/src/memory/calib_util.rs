@@ -1,0 +1,38 @@
+//! Calibration helpers shared by every memory engine.
+//!
+//! These used to live in [`super::plain`], which made the flat engine a
+//! dependency of every other engine; they are chain-level properties of
+//! the calibration methodology, not of any one engine, so they live in
+//! their own home.
+
+use crate::exec::World;
+use crate::ops::LoopInst;
+
+/// Normalisation that pins a chain's byte-weighted average bandwidth to
+/// the engine's app-calibrated baseline: `Σ B / Σ (B/e)`. Relative
+/// per-kernel efficiencies still differentiate kernels (e.g. OpenSBLI's
+/// hot RHS), but the *average* matches the paper's measured number —
+/// which is exactly the calibration methodology of DESIGN.md §2.
+pub(crate) fn chain_bw_norm(world: &World<'_>, chain: &[LoopInst]) -> f64 {
+    let mut b = 0.0f64;
+    let mut be = 0.0f64;
+    for l in chain {
+        let bytes = l.bytes_touched(elem_bytes(world, l)) as f64;
+        b += bytes;
+        be += bytes / l.bw_efficiency;
+    }
+    if b > 0.0 {
+        be / b
+    } else {
+        1.0
+    }
+}
+
+/// All our modelled fields share one element size per chain; take it from
+/// the first dataset argument (datasets are uniformly scaled).
+pub(crate) fn elem_bytes(world: &World<'_>, l: &LoopInst) -> u64 {
+    l.dat_args()
+        .next()
+        .map(|(d, _, _)| world.datasets[d.0 as usize].elem_bytes)
+        .unwrap_or(8)
+}

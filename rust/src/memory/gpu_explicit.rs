@@ -14,8 +14,9 @@
 //! * **Prefetch** — the upload of the *next chain's* first tile is
 //!   speculatively overlapped with the last tile of the current chain.
 
+use super::calib_util::{chain_bw_norm, elem_bytes};
 use super::hierarchy::{AppCalib, GpuCalib, Link, GB};
-use super::plain::{chain_bw_norm, elem_bytes};
+use crate::exec::timeline::{EventKind, StreamClass, Timeline};
 use crate::exec::{Engine, World};
 use crate::ops::{DatasetId, LoopInst};
 use crate::tiling::analysis::ChainAnalysis;
@@ -46,6 +47,22 @@ impl Default for GpuOpts {
     }
 }
 
+impl GpuOpts {
+    /// Validate the option set. `slots` must be 2 (double buffering) or
+    /// 3 (the paper's triple buffering): 0/1 slots cannot overlap
+    /// anything and the old code silently modelled them as double
+    /// buffering, >3 as triple — both now rejected with a typed error
+    /// instead of modelling nonsense.
+    pub fn validate(&self) -> crate::Result<()> {
+        crate::ensure!(
+            (2..=3).contains(&self.slots),
+            "GpuOpts::slots must be 2 (double buffering) or 3 (triple buffering), got {}",
+            self.slots
+        );
+        Ok(())
+    }
+}
+
 /// The explicit-management streaming engine.
 pub struct GpuExplicitEngine {
     pub calib: GpuCalib,
@@ -63,8 +80,11 @@ pub struct GpuExplicitEngine {
 }
 
 impl GpuExplicitEngine {
-    pub fn new(calib: GpuCalib, app: AppCalib, link: Link, opts: GpuOpts) -> Self {
-        GpuExplicitEngine {
+    /// Build the engine; rejects invalid buffering depths with a typed
+    /// error ([`GpuOpts::validate`]).
+    pub fn new(calib: GpuCalib, app: AppCalib, link: Link, opts: GpuOpts) -> crate::Result<Self> {
+        opts.validate()?;
+        Ok(GpuExplicitEngine {
             calib,
             app,
             link,
@@ -72,7 +92,7 @@ impl GpuExplicitEngine {
             plan: PlanSource::Auto,
             prefetch_credit: 0.0,
             speculative_bytes: 0,
-        }
+        })
     }
 
     /// The heuristic per-slot byte budget tiles are auto-sized to: an
@@ -80,6 +100,9 @@ impl GpuExplicitEngine {
     /// bookkeeping. Public so the tuner can seed its search from the
     /// exact same number the engine uses.
     pub fn slot_target(&self) -> u64 {
+        // `opts` is a pub field, so the constructor's validation can be
+        // bypassed after the fact — clamp as defense-in-depth (slots: 0
+        // would otherwise divide to +inf).
         let nslots = self.opts.slots.clamp(2, 3) as f64;
         (self.calib.hbm_bytes as f64 / nslots * 0.92) as u64
     }
@@ -199,10 +222,16 @@ impl Engine for GpuExplicitEngine {
                 || (self.opts.cyclic && cyclic_phase && info.write_first);
         }
 
-        // Discrete-event timelines (seconds from chain start).
-        let mut t0 = 0.0f64; // compute + edge copies
-        let mut t1 = 0.0f64; // uploads
-        let mut t2 = 0.0f64; // downloads
+        // Algorithm 1's three CUDA streams as timeline resources:
+        // stream 0 executes tiles + edge copies, stream 1 uploads the
+        // next tile's right footprint, stream 2 downloads the previous
+        // tile's written left footprint. The Algorithm-1 waits are
+        // `wait` edges; the makespan is the chain's modelled wall clock.
+        let mut tl = Timeline::for_world(world);
+        let s0 = tl.resource("compute", StreamClass::Compute);
+        let s1 = tl.resource("upload", StreamClass::Upload);
+        let s2 = tl.resource("download", StreamClass::Download);
+        let tracing = tl.tracing();
         let mut last_tile_compute = 0.0f64;
 
         // Tile 0's upload, minus any speculative prefetch from the
@@ -214,28 +243,41 @@ impl Engine for GpuExplicitEngine {
             up_time -= credit;
         }
         world.metrics.h2d_bytes += tr0.upload;
-        t0 += up_time;
+        if tr0.upload > 0 || up_time > 0.0 {
+            tl.push(s1, EventKind::Upload, "tile 0", up_time, tr0.upload);
+        }
 
         for t in 0..nt {
+            let label = |what: &str| -> String {
+                if tracing {
+                    format!("{what} {t}")
+                } else {
+                    String::new()
+                }
+            };
             // ---- preparation: wait streams 0 & 1, then upload next tile.
             // With 2 slots the upload stream is also the download stream:
             // the shared staging slot serialises the two directions.
             if self.opts.slots < 3 {
-                let m = t1.max(t2);
-                t1 = m;
-                t2 = m;
+                tl.wait(s1, s2);
             }
-            let m = t0.max(t1);
-            t0 = m;
-            t1 = m;
+            tl.wait(s0, s1);
             if t + 1 < nt {
                 let trn = tile_traffic(&plan, t + 1, world.datasets, &skip_upload, &skip_download);
-                t1 += self.link.time_s(trn.upload);
+                if trn.upload > 0 {
+                    let lbl = if tracing {
+                        format!("tile {}", t + 1)
+                    } else {
+                        String::new()
+                    };
+                    tl.push(s1, EventKind::Upload, &lbl, self.link.time_s(trn.upload), trn.upload);
+                }
                 world.metrics.h2d_bytes += trn.upload;
             }
 
             // ---- execution phase: run all loops of this tile (stream 0).
             let mut tile_compute = 0.0;
+            let mut tile_bytes_sum = 0u64;
             for (li, r) in plan.tiles[t].loop_ranges.iter().enumerate() {
                 let Some(r) = r else { continue };
                 let l = &chain[li];
@@ -248,23 +290,39 @@ impl Engine for GpuExplicitEngine {
                 let ct = self.compute_time(l, bytes, norm);
                 world.metrics.record_loop(&l.name, bytes, ct);
                 tile_compute += ct;
+                tile_bytes_sum += bytes;
             }
-            t0 += tile_compute;
+            // One compute event per executed tile (the per-loop split is
+            // in `per_loop`; the stream sees the fused tile execution).
+            tl.push(s0, EventKind::Compute, &label("tile"), tile_compute, tile_bytes_sum);
             last_tile_compute = tile_compute;
 
             // ---- finishing: wait streams 0 & 2; edge copy; download.
-            let m = t0.max(t2);
-            t0 = m;
-            t2 = m;
+            tl.wait(s0, s2);
             let tr = tile_traffic(&plan, t, world.datasets, &skip_upload, &skip_download);
-            t0 += tr.edge as f64 / (self.calib.bw_device * GB);
+            if tr.edge > 0 {
+                tl.push(
+                    s0,
+                    EventKind::EdgeCopy,
+                    &label("edge"),
+                    tr.edge as f64 / (self.calib.bw_device * GB),
+                    tr.edge,
+                );
+            }
             world.metrics.d2d_bytes += tr.edge;
-            t2 += self.link.time_s(tr.download);
+            if tr.download > 0 {
+                tl.push(
+                    s2,
+                    EventKind::Download,
+                    &label("tile"),
+                    self.link.time_s(tr.download),
+                    tr.download,
+                );
+            }
             world.metrics.d2h_bytes += tr.download;
         }
 
-        let makespan = t0.max(t1).max(t2);
-        world.metrics.elapsed_s += makespan;
+        world.metrics.absorb_timeline(tl);
 
         // Speculative prefetch for the next chain overlaps the last tile's
         // execution (§4.1). Our chains are cyclic, so the speculation is
@@ -275,6 +333,13 @@ impl Engine for GpuExplicitEngine {
         } else {
             self.prefetch_credit = 0.0;
         }
+    }
+
+    /// Forget cross-chain speculation: a rebound engine must not apply
+    /// prefetch credit earned under a different session's chains.
+    fn reset_transient(&mut self) {
+        self.prefetch_credit = 0.0;
+        self.speculative_bytes = 0;
     }
 
     fn describe(&self) -> String {
@@ -385,7 +450,7 @@ mod tests {
             hbm_bytes: hbm,
             ..GpuCalib::default()
         };
-        let mut e = GpuExplicitEngine::new(calib, APP, link, opts);
+        let mut e = GpuExplicitEngine::new(calib, APP, link, opts).unwrap();
         for _ in 0..chains {
             let mut world = World {
                 datasets: &datasets,
@@ -472,7 +537,7 @@ mod tests {
             hbm_bytes: SMALL_HBM,
             ..GpuCalib::default()
         };
-        let mut e = GpuExplicitEngine::new(calib, APP, Link::PciE, GpuOpts::default());
+        let mut e = GpuExplicitEngine::new(calib, APP, Link::PciE, GpuOpts::default()).unwrap();
         {
             let mut world = World {
                 datasets: &datasets,
@@ -503,7 +568,8 @@ mod tests {
             let mut reds = vec![];
             let mut metrics = Metrics::new();
             let mut exec = NativeExecutor::new();
-            let mut e = GpuExplicitEngine::new(calib.clone(), APP, Link::PciE, GpuOpts::default());
+            let mut e =
+                GpuExplicitEngine::new(calib.clone(), APP, Link::PciE, GpuOpts::default()).unwrap();
             e.plan = plan_src;
             let mut world = World {
                 datasets: &datasets,
@@ -524,6 +590,88 @@ mod tests {
         );
         let ok = run_src(PlanSource::Fixed(auto.tiles as usize + 2));
         assert_eq!(ok.tiles, auto.tiles + 2, "feasible fixed counts are honoured");
+    }
+
+    #[test]
+    fn invalid_slot_counts_are_typed_errors() {
+        for slots in [0u8, 1, 4, 255] {
+            let opts = GpuOpts {
+                slots,
+                ..GpuOpts::default()
+            };
+            let e = GpuExplicitEngine::new(GpuCalib::default(), APP, Link::PciE, opts)
+                .map(|_| ())
+                .unwrap_err();
+            let msg = e.to_string();
+            assert!(
+                msg.contains("GpuOpts::slots") && msg.contains(&slots.to_string()),
+                "slots {slots}: {msg}"
+            );
+        }
+        for slots in [2u8, 3] {
+            assert!(GpuOpts {
+                slots,
+                ..GpuOpts::default()
+            }
+            .validate()
+            .is_ok());
+        }
+    }
+
+    #[test]
+    fn reset_transient_clears_prefetch_credit() {
+        // Two chains with prefetch: the second normally starts with
+        // upload credit. Resetting between chains must reproduce the
+        // no-credit (cold) second chain exactly.
+        let run_pair = |reset: bool| -> f64 {
+            let (datasets, stencils, mut store, chain) = fixture(512);
+            let mut reds = vec![];
+            let mut metrics = Metrics::new();
+            let mut exec = NativeExecutor::new();
+            let calib = GpuCalib {
+                hbm_bytes: SMALL_HBM,
+                ..GpuCalib::default()
+            };
+            let mut e =
+                GpuExplicitEngine::new(calib, APP, Link::PciE, GpuOpts::default()).unwrap();
+            for i in 0..2 {
+                if reset && i == 1 {
+                    e.reset_transient();
+                }
+                let mut world = World {
+                    datasets: &datasets,
+                    stencils: &stencils,
+                    store: &mut store,
+                    reds: &mut reds,
+                    metrics: &mut metrics,
+                    exec: &mut exec,
+                };
+                e.run_chain(&chain, &mut world, true);
+            }
+            metrics.elapsed_s
+        };
+        let warm = run_pair(false);
+        let cold = run_pair(true);
+        assert!(
+            cold > warm,
+            "resetting the credit must lose the prefetch overlap: {cold} !> {warm}"
+        );
+    }
+
+    #[test]
+    fn streams_are_attributed_and_bound_is_reported() {
+        let m = run_with(GpuOpts::default(), Link::PciE, true, SMALL_HBM, 2);
+        for s in ["compute", "upload", "download"] {
+            assert!(m.per_resource.contains_key(s), "missing stream {s}");
+            assert!(m.per_resource[s].busy_s > 0.0, "stream {s} idle");
+        }
+        assert_eq!(m.per_resource["upload"].bytes, m.h2d_bytes);
+        assert_eq!(m.per_resource["download"].bytes, m.d2h_bytes);
+        // a small-HBM PCIe streaming run is transfer-bound
+        assert_eq!(m.bound(), "upload");
+        use crate::exec::timeline::StreamClass;
+        assert!(m.stream_util(StreamClass::Upload) > m.stream_util(StreamClass::Compute));
+        assert!(m.stream_util(StreamClass::Upload) <= 1.0 + 1e-12);
     }
 
     #[test]

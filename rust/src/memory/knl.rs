@@ -2,9 +2,10 @@
 //! DDR4 (§4, §5.2), with optional skewed tiling sized to the cache.
 
 use super::cache_sim::{AccessResult, AddressMap, CacheSim};
+use super::calib_util::{chain_bw_norm, elem_bytes};
 use super::halo::HaloModel;
 use super::hierarchy::{AppCalib, KnlCalib};
-use super::plain::{chain_bw_norm, elem_bytes};
+use crate::exec::timeline::{EventKind, StreamClass, Timeline};
 use crate::exec::{Engine, World};
 use crate::ops::{LoopInst, Range3};
 use crate::tiling::analysis::ChainAnalysis;
@@ -107,12 +108,20 @@ impl Engine for KnlEngine {
             self.addr = Some(AddressMap::new(world.datasets, self.calib.cache_granule));
         }
 
-        // The MCDRAM and DDR4 streams overlap *across* loop boundaries on
-        // real hardware (memory-side cache fills are pipelined), so the
-        // chain's wall time is max(Σ mc, Σ ddr), not Σ max per loop.
+        // Two overlapping memory streams: MCDRAM-side time and DDR4-side
+        // cache-fill traffic pipeline *across* loop boundaries on real
+        // hardware, so each loop stacks an event on both resources with
+        // no cross edges — the chain's wall time is max(Σ mc, Σ ddr),
+        // not Σ max per loop. MPI halo exchanges serialise after the
+        // memory streams drain (bulk-synchronous steps), which keeps the
+        // makespan at max(Σ mc, Σ ddr) + Σ halo.
         let norm = chain_bw_norm(world, chain);
-        let mut mc_sum = 0.0f64;
-        let mut ddr_sum = 0.0f64;
+        let mut tl = Timeline::for_world(world);
+        let rm = tl.resource("mcdram", StreamClass::Compute);
+        let rd = tl.resource("ddr4", StreamClass::Upload);
+        let rh = tl.resource("halo", StreamClass::Exchange);
+        // Deferred (label, time) halo events, pushed after the join.
+        let mut halos: Vec<(&str, f64)> = Vec::new();
         if !self.tiled {
             for l in chain {
                 world
@@ -121,8 +130,10 @@ impl Engine for KnlEngine {
                 let (t, acc, mc, ddr) = self.loop_time(l, &l.range.clone(), world, tile_dim, norm);
                 let bytes = l.bytes_touched(elem_bytes(world, l));
                 world.metrics.record_loop(&l.name, bytes, t);
-                mc_sum += mc;
-                ddr_sum += ddr;
+                tl.push(rm, EventKind::Compute, &l.name, mc, bytes);
+                if ddr > 0.0 || acc.ddr_bytes() > 0 {
+                    tl.push(rd, EventKind::CacheFill, &l.name, ddr, acc.ddr_bytes());
+                }
                 world.metrics.cache_hits += acc.hit_granules;
                 world.metrics.cache_misses += acc.miss_granules;
                 let (ht, n) = self
@@ -130,9 +141,16 @@ impl Engine for KnlEngine {
                     .per_loop_cost(l, world.datasets, world.stencils, tile_dim);
                 world.metrics.halo_time_s += ht;
                 world.metrics.halo_exchanges += n;
-                world.metrics.elapsed_s += ht;
+                if n > 0 {
+                    halos.push((&l.name, ht));
+                }
             }
-            world.metrics.elapsed_s += mc_sum.max(ddr_sum);
+            let drained = tl.cursor(rm).max(tl.cursor(rd));
+            tl.wait_until(rh, drained);
+            for (name, ht) in halos {
+                tl.push(rh, EventKind::Halo, name, ht, 0);
+            }
+            world.metrics.absorb_timeline(tl);
             return;
         }
 
@@ -150,7 +168,7 @@ impl Engine for KnlEngine {
             analysis,
         );
         world.metrics.tiles += plan.num_tiles() as u64;
-        for tile in &plan.tiles {
+        for (ti, tile) in plan.tiles.iter().enumerate() {
             for (li, r) in tile.loop_ranges.iter().enumerate() {
                 let Some(r) = r else { continue };
                 let l = &chain[li];
@@ -162,21 +180,33 @@ impl Engine for KnlEngine {
                     / crate::ops::parloop::range_points(&l.range).max(1) as f64;
                 let bytes = (l.bytes_touched(elem_bytes(world, l)) as f64 * frac) as u64;
                 world.metrics.record_loop(&l.name, bytes, t);
-                mc_sum += mc;
-                ddr_sum += ddr;
+                let label = if tl.tracing() {
+                    format!("{} t{ti}", l.name)
+                } else {
+                    String::new()
+                };
+                tl.push(rm, EventKind::Compute, &label, mc, bytes);
+                if ddr > 0.0 || acc.ddr_bytes() > 0 {
+                    tl.push(rd, EventKind::CacheFill, &label, ddr, acc.ddr_bytes());
+                }
                 world.metrics.cache_hits += acc.hit_granules;
                 world.metrics.cache_misses += acc.miss_granules;
             }
         }
-        world.metrics.elapsed_s += mc_sum.max(ddr_sum);
-        // One aggregate halo exchange per chain (§5.2).
+        // One aggregate halo exchange per chain (§5.2), after the memory
+        // streams drain.
         let max_shift = plan.shifts.first().copied().unwrap_or(0);
         let (ht, n) =
             self.halo
                 .per_chain_cost(chain, world.datasets, world.stencils, tile_dim, max_shift);
         world.metrics.halo_time_s += ht;
         world.metrics.halo_exchanges += n;
-        world.metrics.elapsed_s += ht;
+        let drained = tl.cursor(rm).max(tl.cursor(rd));
+        tl.wait_until(rh, drained);
+        if n > 0 {
+            tl.push(rh, EventKind::Halo, "chain halo", ht, 0);
+        }
+        world.metrics.absorb_timeline(tl);
     }
 
     fn describe(&self) -> String {

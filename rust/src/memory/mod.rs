@@ -14,6 +14,7 @@
 //! simulated system.
 
 pub mod cache_sim;
+pub(crate) mod calib_util;
 pub mod gpu_explicit;
 pub mod halo;
 pub mod hierarchy;

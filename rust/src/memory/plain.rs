@@ -2,7 +2,9 @@
 //! chain order at a calibrated bandwidth. Models flat-DDR4 and
 //! flat-MCDRAM on the KNL and the in-memory GPU baseline (≤ 16 GB).
 
+use super::calib_util::{chain_bw_norm, elem_bytes};
 use super::halo::HaloModel;
+use crate::exec::timeline::{EventKind, StreamClass, Timeline};
 use crate::exec::{Engine, World};
 use crate::ops::LoopInst;
 
@@ -64,6 +66,15 @@ impl Engine for PlainEngine {
         world.metrics.chains += 1;
         let tile_dim = crate::tiling::plan::pick_tile_dim(chain);
         let norm = chain_bw_norm(world, chain);
+        // One compute stream; per-loop MPI halo exchanges (§5.2) run on a
+        // `halo` resource that serialises against it (flat execution has
+        // no overlap to model — the event graph is a single chain).
+        let mut tl = Timeline::for_world(world);
+        let rc = tl.resource("compute", StreamClass::Compute);
+        let rh = self
+            .halo
+            .as_ref()
+            .map(|_| tl.resource("halo", StreamClass::Exchange));
         for l in chain {
             world
                 .exec
@@ -71,15 +82,20 @@ impl Engine for PlainEngine {
             let bytes = l.bytes_touched(elem_bytes(world, l));
             let t = self.loop_time(l, bytes, norm);
             world.metrics.record_loop(&l.name, bytes, t);
-            world.metrics.elapsed_s += t;
-            if let Some(h) = &self.halo {
+            tl.push(rc, EventKind::Compute, &l.name, t, bytes);
+            if let (Some(h), Some(rh)) = (&self.halo, rh) {
                 // Untiled execution exchanges halos per loop (§5.2).
                 let (ht, n) = h.per_loop_cost(l, world.datasets, world.stencils, tile_dim);
                 world.metrics.halo_time_s += ht;
                 world.metrics.halo_exchanges += n;
-                world.metrics.elapsed_s += ht;
+                if n > 0 {
+                    let at = tl.cursor(rc);
+                    let end = tl.push_at(rh, EventKind::Halo, &l.name, at, ht, 0);
+                    tl.wait_until(rc, end);
+                }
             }
         }
+        world.metrics.absorb_timeline(tl);
     }
 
     fn describe(&self) -> String {
@@ -89,35 +105,6 @@ impl Engine for PlainEngine {
     fn fits(&self, problem_bytes: u64) -> bool {
         self.mem_limit.map_or(true, |m| problem_bytes <= m)
     }
-}
-
-/// Normalisation that pins a chain's byte-weighted average bandwidth to
-/// the engine's app-calibrated baseline: `Σ B / Σ (B/e)`. Relative
-/// per-kernel efficiencies still differentiate kernels (e.g. OpenSBLI's
-/// hot RHS), but the *average* matches the paper's measured number —
-/// which is exactly the calibration methodology of DESIGN.md §2.
-pub(crate) fn chain_bw_norm(world: &World<'_>, chain: &[LoopInst]) -> f64 {
-    let mut b = 0.0f64;
-    let mut be = 0.0f64;
-    for l in chain {
-        let bytes = l.bytes_touched(elem_bytes(world, l)) as f64;
-        b += bytes;
-        be += bytes / l.bw_efficiency;
-    }
-    if b > 0.0 {
-        be / b
-    } else {
-        1.0
-    }
-}
-
-/// All our modelled fields share one element size per chain; take it from
-/// the first dataset argument (datasets are uniformly scaled).
-pub(crate) fn elem_bytes(world: &World<'_>, l: &LoopInst) -> u64 {
-    l.dat_args()
-        .next()
-        .map(|(d, _, _)| world.datasets[d.0 as usize].elem_bytes)
-        .unwrap_or(8)
 }
 
 #[cfg(test)]

@@ -3,9 +3,10 @@
 //! optional bulk `cudaMemPrefetchAsync`-style prefetches move tile
 //! footprints at link bandwidth, degraded under oversubscription.
 
-use super::hierarchy::{AppCalib, GpuCalib, Link, UnifiedCalib, GB};
 use super::cache_sim::AddressMap;
-use super::plain::{chain_bw_norm, elem_bytes};
+use super::calib_util::{chain_bw_norm, elem_bytes};
+use super::hierarchy::{AppCalib, GpuCalib, Link, UnifiedCalib, GB};
+use crate::exec::timeline::{EventKind, StreamClass, Timeline};
 use crate::exec::{Engine, World};
 use crate::ops::{LoopInst, Range3};
 use crate::tiling::analysis::ChainAnalysis;
@@ -165,6 +166,16 @@ impl Engine for UnifiedEngine {
             self.addr = Some(AddressMap::new(world.datasets, self.um.page_bytes));
         }
 
+        // Two streams: the compute stream and a `migration` stream for
+        // page traffic. On-demand faults *stall* compute (the faulting
+        // kernel cannot proceed), so fault events carry a dependency
+        // edge back into the compute stream; bulk prefetches overlap
+        // the previous tile's compute and only their uncovered tail
+        // stalls.
+        let mut tl = Timeline::for_world(world);
+        let rc = tl.resource("compute", StreamClass::Compute);
+        let rm = tl.resource("migration", StreamClass::Upload);
+
         if !self.tiled {
             // Untiled unified memory: loops fault pages in as they sweep.
             for l in chain {
@@ -173,12 +184,27 @@ impl Engine for UnifiedEngine {
                     .run_loop(l, l.range, world.datasets, world.store, world.reds);
                 let faults = self.touch_loop(l, &l.range.clone(), world, tile_dim);
                 let bytes = l.bytes_touched(elem_bytes(world, l));
-                let t = self.compute_time(l, bytes, norm) + faults as f64 * self.fault_cost();
+                let fault_t = faults as f64 * self.fault_cost();
+                let ct = self.compute_time(l, bytes, norm);
+                let t = ct + fault_t;
                 world.metrics.record_loop(&l.name, bytes, t);
-                world.metrics.elapsed_s += t;
+                if faults > 0 {
+                    let at = tl.cursor(rc);
+                    let end = tl.push_at(
+                        rm,
+                        EventKind::Fault,
+                        &l.name,
+                        at,
+                        fault_t,
+                        faults * self.um.page_bytes,
+                    );
+                    tl.wait_until(rc, end);
+                }
+                tl.push(rc, EventKind::Compute, &l.name, ct, bytes);
                 world.metrics.page_faults += faults;
                 world.metrics.h2d_bytes += faults * self.um.page_bytes;
             }
+            world.metrics.absorb_timeline(tl);
             return;
         }
 
@@ -200,7 +226,7 @@ impl Engine for UnifiedEngine {
         let oversub = analysis.chain_bytes > self.gpu.hbm_bytes;
         let mut prev_tile_compute = 0.0f64;
 
-        for tile in &plan.tiles {
+        for (ti, tile) in plan.tiles.iter().enumerate() {
             // Count the faults/prefetch traffic for this tile *before*
             // running it: pages touched by any loop range of the tile.
             let mut tile_faults = 0u64;
@@ -209,25 +235,51 @@ impl Engine for UnifiedEngine {
                 tile_faults += self.touch_loop(&chain[li], r, world, plan.tile_dim);
             }
 
+            let mig_bytes = tile_faults * self.um.page_bytes;
+            let label = if tl.tracing() {
+                format!("tile {ti}")
+            } else {
+                String::new()
+            };
             let stall;
             if self.prefetch {
-                // Bulk prefetch at (degraded) link bandwidth, overlapped
-                // with the previous tile's compute.
-                let bytes = tile_faults * self.um.page_bytes;
+                // Bulk prefetch at (degraded) link bandwidth: the event
+                // starts `overlap` seconds before the previous tile's
+                // compute ends, so only its uncovered tail stalls the
+                // compute stream.
                 let eff = if oversub {
                     self.um.prefetch_eff_oversub
                 } else {
                     self.um.prefetch_eff
                 };
-                let t_pf = bytes as f64 / (self.link.bw_gbs() * eff * GB);
+                let t_pf = mig_bytes as f64 / (self.link.bw_gbs() * eff * GB);
                 let overlap = prev_tile_compute * self.um.prefetch_overlap;
                 stall = (t_pf - overlap).max(0.0);
+                if tile_faults > 0 {
+                    // Overlapping push: prefetches pipeline (contention
+                    // lives in `eff`), so this tile's transfer starts in
+                    // its own overlap window regardless of the previous
+                    // tile's prefetch — exactly the closed-form model.
+                    let at = tl.cursor(rc) - overlap;
+                    let end =
+                        tl.push_overlapping(rm, EventKind::Prefetch, &label, at, t_pf, mig_bytes);
+                    tl.wait_until(rc, end);
+                }
             } else {
                 stall = tile_faults as f64 * self.fault_cost();
+                if tile_faults > 0 {
+                    let at = tl.cursor(rc);
+                    let end = tl.push_at(rm, EventKind::Fault, &label, at, stall, mig_bytes);
+                    tl.wait_until(rc, end);
+                }
             }
             world.metrics.page_faults += tile_faults;
-            world.metrics.h2d_bytes += tile_faults * self.um.page_bytes;
+            world.metrics.h2d_bytes += mig_bytes;
 
+            // `tile_compute` keeps the legacy stall-inclusive accounting:
+            // the §5.1 per-loop times (and the next tile's overlap
+            // window) charge the stall to the tile's first loop, while
+            // the timeline models it as the dependency edge above.
             let mut tile_compute = 0.0;
             let mut first_loop_in_tile = true;
             for (li, r) in tile.loop_ranges.iter().enumerate() {
@@ -239,18 +291,20 @@ impl Engine for UnifiedEngine {
                 let frac = crate::ops::parloop::range_points(r) as f64
                     / crate::ops::parloop::range_points(&l.range).max(1) as f64;
                 let bytes = (l.bytes_touched(elem_bytes(world, l)) as f64 * frac) as u64;
-                let mut t = self.compute_time(l, bytes, norm);
+                let ct = self.compute_time(l, bytes, norm);
+                tl.push(rc, EventKind::Compute, &l.name, ct, bytes);
+                let mut t = ct;
                 if first_loop_in_tile {
                     // The migration stall lands on the tile's first loop.
                     t += stall;
                     first_loop_in_tile = false;
                 }
                 world.metrics.record_loop(&l.name, bytes, t);
-                world.metrics.elapsed_s += t;
                 tile_compute += t;
             }
             prev_tile_compute = tile_compute;
         }
+        world.metrics.absorb_timeline(tl);
     }
 
     fn describe(&self) -> String {

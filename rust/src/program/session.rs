@@ -47,8 +47,13 @@ impl Session {
         Self::with_engine(program, cfg.build_engine())
     }
 
-    /// Bind `program` to an explicit engine.
-    pub fn with_engine(program: Arc<Program>, engine: Box<dyn Engine>) -> Self {
+    /// Bind `program` to an explicit engine. Like
+    /// [`Session::rebind_engine`], the engine's transient cross-chain
+    /// state is reset: a session must not inherit prefetch credit from
+    /// chains it never ran, whether the engine arrives at construction
+    /// or mid-session.
+    pub fn with_engine(program: Arc<Program>, mut engine: Box<dyn Engine>) -> Self {
+        engine.reset_transient();
         let mut store = DataStore::new();
         for d in program.datasets() {
             store.alloc(d);
@@ -75,6 +80,19 @@ impl Session {
     /// Swap in a different numeric executor (e.g. the PJRT backend).
     pub fn set_executor(&mut self, exec: Box<dyn Executor>) {
         self.exec = exec;
+    }
+
+    /// Rebind this session to a different memory engine. Pending
+    /// dynamically recorded loops are flushed through the old engine
+    /// first (they were priced under its clock), and the incoming
+    /// engine's transient cross-chain state is reset
+    /// ([`Engine::reset_transient`]): a pre-used GPU streaming engine
+    /// must not apply prefetch credit earned under chains this session
+    /// never ran.
+    pub fn rebind_engine(&mut self, mut engine: Box<dyn Engine>) {
+        self.flush_dynamic();
+        engine.reset_transient();
+        self.engine = engine;
     }
 
     /// The shared program this session executes.
@@ -270,10 +288,27 @@ impl Drive for Session {
     fn exchange_periodic(&mut self, id: crate::ops::DatasetId, dim: usize, depth: usize) {
         self.flush_dynamic();
         let ds = self.program.dataset(id).clone();
+        let t0 = self.metrics.elapsed_s;
         let t = crate::ops::api::periodic_exchange(&ds, &mut self.store, dim, depth);
         self.metrics.halo_time_s += t;
         self.metrics.halo_exchanges += 1;
         self.metrics.elapsed_s += t;
+        // Periodic boundary wraps run outside any engine chain; attribute
+        // them to an exchange stream so the bottleneck ledger sees them.
+        use crate::exec::timeline::{EventKind, StreamClass, TraceEvent};
+        self.metrics
+            .record_stream("periodic", StreamClass::Exchange, t, 0, 1);
+        if self.metrics.trace_enabled() {
+            self.metrics.push_trace_event(TraceEvent {
+                resource: "periodic".into(),
+                class: StreamClass::Exchange,
+                kind: EventKind::Halo,
+                label: format!("periodic {}", ds.name),
+                start_s: t0,
+                end_s: t0 + t,
+                bytes: 0,
+            });
+        }
     }
 
     fn set_cyclic_phase(&mut self, on: bool) {
@@ -282,10 +317,17 @@ impl Drive for Session {
 
     fn reset_metrics(&mut self) {
         let freeze = self.metrics.program_freeze_s;
+        let tracing = self.metrics.trace_enabled();
         self.metrics = Metrics::new();
         // The freeze cost is a per-Session constant, not part of any
         // timed region — keep reporting it after warm-up resets.
         self.metrics.program_freeze_s = freeze;
+        // Tracing is a session-level switch: a warm-up reset drops the
+        // initialisation events but keeps collecting — the exported
+        // trace covers exactly the timed region.
+        if tracing {
+            self.metrics.enable_trace();
+        }
     }
 }
 
@@ -461,6 +503,90 @@ mod tests {
         s.reset_metrics();
         assert_eq!(s.metrics().analysis_builds, 0);
         assert_eq!(s.metrics().program_freeze_s, freeze);
+    }
+
+    #[test]
+    fn rebind_engine_resets_prefetch_credit() {
+        use crate::exec::{Engine, Metrics, NativeExecutor, World};
+        use crate::memory::{GpuCalib, GpuExplicitEngine, GpuOpts};
+
+        let (prog, step, _) = fixture();
+        let mk_engine = || {
+            GpuExplicitEngine::new(
+                GpuCalib {
+                    hbm_bytes: 4 << 10, // force several tiles on the 16x16 grid
+                    ..GpuCalib::default()
+                },
+                AppCalib::CLOVERLEAF_2D,
+                Link::PciE,
+                GpuOpts::default(),
+            )
+            .unwrap()
+        };
+
+        // Price one chain on an engine directly (no Session): returns
+        // the chain's modelled wall clock, leaving any earned prefetch
+        // credit on the engine.
+        let run_once = |e: &mut GpuExplicitEngine| -> f64 {
+            let (wprog, wstep, _) = fixture();
+            let spec = wprog.chain(wstep);
+            let mut store = crate::ops::DataStore::new();
+            wprog.datasets().iter().for_each(|d| store.alloc(d));
+            let mut reds: Vec<crate::ops::Reduction> = vec![];
+            let mut metrics = Metrics::new();
+            let mut exec = NativeExecutor::new();
+            let mut world = World {
+                datasets: wprog.datasets(),
+                stencils: wprog.stencils(),
+                store: &mut store,
+                reds: &mut reds,
+                metrics: &mut metrics,
+                exec: &mut exec,
+            };
+            e.run_chain(&spec.loops, &mut world, true);
+            metrics.elapsed_s
+        };
+
+        // Control: the credit is real — on a bare engine, a second chain
+        // models faster than the first (tile 0's upload is shortened).
+        let mut warmed = mk_engine();
+        let cold_direct = run_once(&mut warmed);
+        let warm_direct = run_once(&mut warmed);
+        assert!(
+            warm_direct < cold_direct,
+            "fixture must actually exercise the credit: {warm_direct} !< {cold_direct}"
+        );
+
+        // Baseline: a session on a cold engine.
+        let mut cold = Session::with_engine(prog.clone(), Box::new(mk_engine()));
+        cold.set_cyclic_phase(true);
+        cold.replay(step, 1);
+        let cold_t = cold.metrics().elapsed_s;
+
+        // Rebinding the warmed engine (which now carries credit from two
+        // chains this session never ran) must reproduce the cold clock:
+        // the stale credit is reset at the rebind boundary.
+        let mut s = Session::with_engine(prog.clone(), Box::new(mk_engine()));
+        s.set_cyclic_phase(true);
+        s.rebind_engine(Box::new(warmed));
+        s.replay(step, 1);
+        assert_eq!(
+            s.metrics().elapsed_s,
+            cold_t,
+            "rebound engine must not carry prefetch credit"
+        );
+
+        // Binding a warmed engine at construction resets it too.
+        let mut warmed2 = mk_engine();
+        let _ = run_once(&mut warmed2);
+        let mut fresh = Session::with_engine(prog, Box::new(warmed2));
+        fresh.set_cyclic_phase(true);
+        fresh.replay(step, 1);
+        assert_eq!(
+            fresh.metrics().elapsed_s,
+            cold_t,
+            "with_engine must not inherit prefetch credit either"
+        );
     }
 
     #[test]

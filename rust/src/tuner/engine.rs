@@ -119,6 +119,15 @@ impl Engine for TunedEngine {
         engine.run_chain_analyzed(chain, analysis, world, cyclic_phase);
     }
 
+    /// Forward to every candidate-configured inner engine (and the
+    /// capacity probe, for symmetry).
+    fn reset_transient(&mut self) {
+        for e in self.engines.values_mut() {
+            e.reset_transient();
+        }
+        self.probe.reset_transient();
+    }
+
     fn describe(&self) -> String {
         format!("auto-tuned [{}]", self.label)
     }

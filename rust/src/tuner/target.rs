@@ -65,7 +65,8 @@ impl TunerTarget {
                     prefetch: cand.prefetch,
                     slots: cand.slots.clamp(2, 3),
                 };
-                let mut e = GpuExplicitEngine::new(calib.clone(), *app, *link, opts);
+                let mut e = GpuExplicitEngine::new(calib.clone(), *app, *link, opts)
+                    .expect("clamped slots are always valid");
                 e.plan = plan_source(cand);
                 Box::new(e)
             }
@@ -180,8 +181,16 @@ impl TunerTarget {
             TunerTarget::GpuExplicit {
                 calib, app, link, opts,
             } => {
-                let target =
-                    GpuExplicitEngine::new(calib.clone(), *app, *link, *opts).slot_target();
+                // Tolerate out-of-range slots the same way `build` does
+                // (TunerTarget fields are public, so nothing upstream is
+                // guaranteed to have validated them): clamp, don't panic.
+                let opts = GpuOpts {
+                    slots: opts.slots.clamp(2, 3),
+                    ..*opts
+                };
+                let target = GpuExplicitEngine::new(calib.clone(), *app, *link, opts)
+                    .expect("clamped slots are always valid")
+                    .slot_target();
                 PlanSource::Auto
                     .plan(chain, datasets, stencils, target)
                     .num_tiles()

@@ -291,15 +291,18 @@ fn engines_survive_infeasible_slot_targets() {
     let mut c = ctx(p);
     // 512 B of "HBM": a slot target of ~157 B is below one 272 B plane,
     // so plan_auto's typed error path (and the floor fallback) is hit
-    let mut tiny = OpsContext::new(Box::new(GpuExplicitEngine::new(
-        GpuCalib {
-            hbm_bytes: 512,
-            ..GpuCalib::default()
-        },
-        AppCalib::CLOVERLEAF_2D,
-        Link::PciE,
-        GpuOpts::default(),
-    )));
+    let mut tiny = OpsContext::new(Box::new(
+        GpuExplicitEngine::new(
+            GpuCalib {
+                hbm_bytes: 512,
+                ..GpuCalib::default()
+            },
+            AppCalib::CLOVERLEAF_2D,
+            Link::PciE,
+            GpuOpts::default(),
+        )
+        .unwrap(),
+    ));
     for c in [&mut c, &mut tiny] {
         let b = c.decl_block("g", [32, 256, 1]);
         let d = c.decl_dat(b, "d", [32, 256, 1], [1, 1, 0], [1, 1, 0]);

@@ -96,6 +96,11 @@ const SCHEMA: &[(&str, &str)] = &[
     ("eff_bandwidth_gbs", "num"),
     ("halo_time_s", "num"),
     ("tiles", "num"),
+    ("bound", "str"),
+    ("util_compute", "num"),
+    ("util_upload", "num"),
+    ("util_download", "num"),
+    ("util_exchange", "num"),
     ("tuned", "bool"),
     ("tune_evals", "num"),
     ("tune_cache_hits", "num"),
@@ -136,6 +141,8 @@ fn json_record_roundtrips_and_schema_is_stable() {
     m.tiles = 12;
     let rec = parse_flat(&json_record("cloverleaf2d", "KNL cache tiled", 1, 24.0, &m, false));
     assert_schema(&rec);
+    assert_eq!(rec["bound"], Val::Str("none".into()));
+    assert_eq!(rec["util_compute"], Val::Num(0.0));
     assert_eq!(rec["app"], Val::Str("cloverleaf2d".into()));
     assert_eq!(rec["ranks"], Val::Num(1.0));
     assert_eq!(rec["oom"], Val::Bool(false));
@@ -200,6 +207,26 @@ fn real_run_produces_a_parseable_record() {
     assert_eq!(rec["tuned"], Val::Bool(true));
     match &rec["tune_model_speedup"] {
         Val::Num(v) => assert!(*v >= 1.0 - 1e-12, "never-worse guarantee: {v}"),
+        v => panic!("{v:?}"),
+    }
+    // the cell ran through the timeline scheduler: attribution names a
+    // real stream and utilisations are sane fractions of wall time
+    match &rec["bound"] {
+        Val::Str(b) => assert!(
+            ["compute", "upload", "download", "exchange"].contains(&b.as_str()),
+            "bound {b:?}"
+        ),
+        v => panic!("{v:?}"),
+    }
+    for key in ["util_compute", "util_upload", "util_download", "util_exchange"] {
+        match &rec[key] {
+            Val::Num(u) => assert!((0.0..=1.0 + 1e-9).contains(u), "{key} = {u}"),
+            v => panic!("{v:?}"),
+        }
+    }
+    match &rec["util_upload"] {
+        // an explicit-streaming cell at this size moves real traffic
+        Val::Num(u) => assert!(*u > 0.0, "upload stream must be attributed"),
         v => panic!("{v:?}"),
     }
     // the cell ran on the Program/Session path: chain analyses were

@@ -195,7 +195,8 @@ fn prop_random_chains_tile_identically_gpu() {
             96,
         );
         let want = run_sequential(&f, seed);
-        let mut e = GpuExplicitEngine::new(small_gpu(), APP, Link::PciE, GpuOpts::default());
+        let mut e =
+            GpuExplicitEngine::new(small_gpu(), APP, Link::PciE, GpuOpts::default()).unwrap();
         let got = run_engine(&f, &mut e, seed);
         assert_eq!(want, got, "GPU explicit mismatch for seed {seed}");
     }
