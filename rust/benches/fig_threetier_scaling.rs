@@ -1,0 +1,101 @@
+//! Three-tier scaling: "beyond 16 GB", extended to "beyond DRAM".
+//!
+//! The paper's P100 result streams HBM-oversized problems from host
+//! memory. A declarative three-tier stack keeps going past *host*
+//! capacity: HBM (16 GiB) → host DRAM (modelled at 64 GiB here) → NVMe
+//! (unbounded, ~6 GB/s). This figure sweeps the problem size across
+//! BOTH boundaries and compares
+//!
+//! * the legacy two-tier `gpu-explicit:pcie` engine (host unbounded),
+//! * the same stack routed through the generic `TieredEngine`
+//!   (bit-exact with the legacy engine — the first two series must
+//!   agree everywhere), and
+//! * the three-tier stack, which pays nothing extra while the problem
+//!   fits host and degrades to the NVMe stream past 64 GiB instead of
+//!   dying.
+
+use ops_oc::bench_support::{run_cl2d, run_cl2d_cfg, Figure};
+use ops_oc::coordinator::{Config, Platform};
+use ops_oc::memory::{AppCalib, Link};
+use std::time::Instant;
+
+const HOST_GB: f64 = 64.0;
+
+fn main() {
+    let t0 = Instant::now();
+    let legacy = Platform::GpuExplicit {
+        link: Link::PciE,
+        cyclic: true,
+        prefetch: true,
+    };
+    let (two, _) = Config::parse_spec("tiers:gpu-explicit-pcie:cyclic:prefetch").unwrap();
+    let two = Config::for_target(two, AppCalib::CLOVERLEAF_2D);
+    let (three, _) = Config::parse_spec(
+        "tiers:hbm=16g@509.7+host=64g@11~0.00001+nvme=inf@6~0.00002:cyclic:prefetch",
+    )
+    .unwrap();
+    let three = Config::for_target(three, AppCalib::CLOVERLEAF_2D);
+
+    let mut fig = Figure::new(
+        "Three-tier scaling: CloverLeaf 2D past HBM (16 GB) and host DRAM (64 GB)",
+        "effective GB/s (modelled)",
+    );
+    let s_legacy = fig.add_series("gpu-explicit (legacy)");
+    let s_two = fig.add_series("tiers: hbm+host");
+    let s_three = fig.add_series("tiers: hbm+host+nvme");
+
+    // sweep across both capacity boundaries
+    let sizes = [6.0, 12.0, 16.0, 24.0, 48.0, 64.0, 96.0, 128.0, 192.0];
+    let mut in_host: Option<f64> = None; // three-tier bw below the host boundary
+    let mut past_host: Option<f64> = None;
+    for gb in sizes {
+        let (ml, oom_l) = run_cl2d(legacy, 8, 6144, gb, 2, 0);
+        let (m2, oom_2) = run_cl2d_cfg(&two, false, 8, 6144, gb, 2, 0);
+        let (m3, oom_3) = run_cl2d_cfg(&three, false, 8, 6144, gb, 2, 0);
+        assert!(!oom_l && !oom_2 && !oom_3, "streaming never OOMs at {gb} GB");
+        assert_eq!(
+            ml.elapsed_s, m2.elapsed_s,
+            "two-tier TieredEngine must match the legacy engine bit-exactly at {gb} GB"
+        );
+        let (b2, b3) = (m2.effective_bandwidth_gbs(), m3.effective_bandwidth_gbs());
+        assert!(
+            b3 <= b2 + 1e-9,
+            "a third tier can only cost bandwidth: {b3} > {b2} at {gb} GB"
+        );
+        if gb <= 48.0 {
+            // every chain fits host DRAM: the nvme boundary is silent
+            // and the three-tier stack models the two-tier clock exactly
+            assert_eq!(
+                m2.elapsed_s, m3.elapsed_s,
+                "in-host three-tier must be free at {gb} GB"
+            );
+            in_host = Some(b3);
+        }
+        if gb >= 2.0 * HOST_GB && past_host.is_none() {
+            past_host = Some(b3);
+        }
+        fig.push(s_legacy, gb, Some(ml.effective_bandwidth_gbs()));
+        fig.push(s_two, gb, Some(b2));
+        fig.push(s_three, gb, Some(b3));
+        // past the host boundary the NVMe stream dominates the model
+        if gb >= 2.0 * HOST_GB {
+            assert_eq!(m3.bound(), "upload", "past host DRAM the run is stream-bound");
+            assert!(
+                b3 < b2,
+                "the nvme stream must cost bandwidth past host DRAM: {b3} !< {b2}"
+            );
+        }
+    }
+    let small3 = in_host.expect("swept below the host boundary");
+    let big3 = past_host.expect("swept past the host boundary");
+    assert!(
+        big3 < small3,
+        "crossing the host boundary must cost bandwidth: {big3} !< {small3}"
+    );
+    println!("{}", fig.render());
+    println!(
+        "three-tier keeps computing at {:.1} GB/s past host DRAM (in-host: {:.1} GB/s)",
+        big3, small3
+    );
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

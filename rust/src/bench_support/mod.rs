@@ -234,11 +234,30 @@ pub fn run_cl2d_cell(
     steps: usize,
     summary_every: usize,
 ) -> (Metrics, bool) {
+    let cfg = apply_tuning(Config::new(platform, AppCalib::CLOVERLEAF_2D), tune);
+    run_cl2d_cfg(&cfg, trace, nx, ny, target_gb, steps, summary_every)
+}
+
+/// CloverLeaf 2D cell driven by a full [`Config`] — the new-API entry
+/// point the CLI uses: the config's target may be a legacy platform or
+/// any declarative `tiers:` stack (sharded or not). The app calibration
+/// is set to CloverLeaf 2D's regardless of what the config carried.
+#[allow(clippy::too_many_arguments)]
+pub fn run_cl2d_cfg(
+    cfg: &Config,
+    trace: bool,
+    nx: usize,
+    ny: usize,
+    target_gb: f64,
+    steps: usize,
+    summary_every: usize,
+) -> (Metrics, bool) {
+    let mut cfg = cfg.clone();
+    cfg.app = AppCalib::CLOVERLEAF_2D;
     let base = base_bytes(|b| {
         CloverLeaf2D::new(b, nx, ny, 1);
     });
     let scale = model_scale(base, target_gb);
-    let cfg = apply_tuning(Config::new(platform, AppCalib::CLOVERLEAF_2D), tune);
     let mut b = ProgramBuilder::new();
     let mut app = CloverLeaf2D::new(&mut b, nx, ny, scale);
     let mut sess = freeze_session(b, &cfg);
@@ -283,11 +302,26 @@ pub fn run_cl3d_cell(
     steps: usize,
     summary_every: usize,
 ) -> (Metrics, bool) {
+    let cfg = apply_tuning(Config::new(platform, AppCalib::CLOVERLEAF_3D), tune);
+    run_cl3d_cfg(&cfg, trace, n, target_gb, steps, summary_every)
+}
+
+/// CloverLeaf 3D cell driven by a full [`Config`] (see
+/// [`run_cl2d_cfg`]).
+pub fn run_cl3d_cfg(
+    cfg: &Config,
+    trace: bool,
+    n: [usize; 3],
+    target_gb: f64,
+    steps: usize,
+    summary_every: usize,
+) -> (Metrics, bool) {
+    let mut cfg = cfg.clone();
+    cfg.app = AppCalib::CLOVERLEAF_3D;
     let base = base_bytes(|b| {
         CloverLeaf3D::new(b, n[0], n[1], n[2], 1);
     });
     let scale = model_scale(base, target_gb);
-    let cfg = apply_tuning(Config::new(platform, AppCalib::CLOVERLEAF_3D), tune);
     let mut b = ProgramBuilder::new();
     let mut app = CloverLeaf3D::new(&mut b, n[0], n[1], n[2], scale);
     let mut sess = freeze_session(b, &cfg);
@@ -364,12 +398,26 @@ pub fn run_sbli_tall_cell(
     target_gb: f64,
     chains: usize,
 ) -> (Metrics, bool) {
+    let cfg = apply_tuning(Config::new(platform, AppCalib::OPENSBLI), tune);
+    run_sbli_tall_cfg(&cfg, trace, steps_per_chain, target_gb, chains)
+}
+
+/// Tall-z OpenSBLI cell driven by a full [`Config`] (see
+/// [`run_cl2d_cfg`]).
+pub fn run_sbli_tall_cfg(
+    cfg: &Config,
+    trace: bool,
+    steps_per_chain: usize,
+    target_gb: f64,
+    chains: usize,
+) -> (Metrics, bool) {
     let n = [24usize, 24, 1024];
+    let mut cfg = cfg.clone();
+    cfg.app = AppCalib::OPENSBLI;
     let base = base_bytes(|b| {
         OpenSbli::new_aniso(b, n, steps_per_chain, 1);
     });
     let scale = model_scale(base, target_gb);
-    let cfg = apply_tuning(Config::new(platform, AppCalib::OPENSBLI), tune);
     let mut b = ProgramBuilder::new();
     let mut app = OpenSbli::new_aniso(&mut b, n, steps_per_chain, scale);
     let mut sess = freeze_session(b, &cfg);

@@ -9,8 +9,11 @@
 //! head        := knl-flat-ddr4 | knl-flat-mcdram | knl-cache |
 //!                knl-cache-tiled | gpu-baseline | gpu-explicit |
 //!                gpu-unified
+//!              | tiers:<stack>            (declarative tier topology)
+//! stack       := <preset-name> | name=cap@bw[~lat] ("+" …)+
+//!                                         (see crate::topology::spec)
 //! token       := pcie | nvlink            (host link, GPU heads)
-//!              | cyclic | prefetch        (gpu-explicit)
+//!              | cyclic | prefetch        (gpu-explicit, tiers)
 //!              | tiled | prefetch         (gpu-unified)
 //!              | x<N>                     (shard across N ranks)
 //! shard token := peer | nvlink | ib       (interconnect, after x<N>)
@@ -21,13 +24,21 @@
 //! Tokens before `x<N>` configure the inner (per-rank) platform, tokens
 //! after it the sharding layer. Unknown tokens are **rejected** — e.g.
 //! `gpu-explicit:nvlnk` is an error, not silently PCIe.
+//!
+//! The closed [`Platform`] enum survives as a thin compatibility layer:
+//! each variant maps to a preset [`Topology`]
+//! ([`Platform::topology`]), while the open half of the space — custom
+//! tier stacks on the generic [`TieredEngine`] — parses from the
+//! `tiers:` head into a [`Target::Tiered`] and rides the same
+//! [`Config`].
 
 use crate::distributed::{DecompKind, Interconnect, ShardedEngine};
 use crate::exec::Engine;
 use crate::memory::{
     AppCalib, GpuCalib, GpuExplicitEngine, GpuOpts, KnlCalib, KnlEngine, Link, PlainEngine,
-    UnifiedCalib, UnifiedEngine,
+    TieredEngine, UnifiedCalib, UnifiedEngine,
 };
+use crate::topology::{self, LinkSpec, Topology};
 use crate::tuner::{TuneOpts, TunedEngine, TunerTarget};
 
 /// Per-rank platforms a sharded configuration can host (each rank owns a
@@ -269,6 +280,28 @@ impl Platform {
         }
     }
 
+    /// The declarative [`Topology`] this legacy variant stands for —
+    /// the compatibility mapping from the closed enum into the open
+    /// tier-stack space, built from the supplied calibrations so custom
+    /// `KnlCalib`/`GpuCalib` numbers flow through. Sharded platforms
+    /// map to their per-rank inner topology.
+    pub fn topology(&self, knl: &KnlCalib, gpu: &GpuCalib) -> Topology {
+        use crate::topology::presets;
+        match self {
+            Platform::KnlFlatDdr4 => presets::flat("ddr4", None, knl.bw_ddr4),
+            Platform::KnlFlatMcdram => {
+                presets::flat("mcdram", Some(knl.mcdram_bytes), knl.bw_mcdram_flat)
+            }
+            Platform::KnlCache | Platform::KnlCacheTiled => presets::knl_cache(knl),
+            Platform::GpuBaseline { .. } => {
+                presets::flat("hbm", Some(gpu.hbm_bytes), gpu.bw_device)
+            }
+            Platform::GpuExplicit { link, .. } => presets::gpu_explicit(gpu, *link),
+            Platform::GpuUnified { link, .. } => presets::gpu_unified(gpu, *link),
+            Platform::Sharded { inner, .. } => inner.to_platform().topology(knl, gpu),
+        }
+    }
+
     /// Shard `self` across `ranks` ranks with default sharding settings
     /// (1D decomposition, overlap on, interconnect matched to the inner
     /// host link). Errors when the platform cannot be sharded.
@@ -300,10 +333,180 @@ impl Platform {
     }
 }
 
+/// A declarative execution target: a custom tier stack on the generic
+/// [`TieredEngine`], optionally sharded across modelled ranks (each
+/// rank owning its own copy of the inner topology).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TieredTarget {
+    /// The memory stack every (rank-local) engine schedules against.
+    pub topology: Topology,
+    /// §4.1 optimisation switches (`cyclic`/`prefetch` spec tokens;
+    /// slots fixed at the paper's triple buffering).
+    pub opts: GpuOpts,
+    /// Modelled ranks; 1 = unsharded.
+    pub ranks: u32,
+    /// Inter-rank interconnect (when `ranks > 1`).
+    pub link: Interconnect,
+    pub decomp: DecompKind,
+    /// Overlap halo exchange with interior compute.
+    pub overlap: bool,
+}
+
+/// Whether a stack's innermost link is the calibrated NVLink host link
+/// — the data-driven predicate behind both the default inter-rank
+/// interconnect and the §5.3 clock boost.
+fn nvlink_host_stack(topology: &Topology) -> bool {
+    topology.num_tiers() >= 2 && topology.link(0) == LinkSpec::NVLINK_HOST
+}
+
+impl TieredTarget {
+    /// An unsharded target with the §4.1 toggles off — the state the
+    /// bare `tiers:<stack>` spec parses to. The default inter-rank
+    /// interconnect mirrors [`Platform::sharded`]'s inference: an
+    /// NVLink-host stack gets NVLink peer links, everything else PCIe
+    /// peer (override with a `peer|nvlink|ib` shard token).
+    pub fn new(topology: Topology) -> Self {
+        let link = if nvlink_host_stack(&topology) {
+            Interconnect::NvLink
+        } else {
+            Interconnect::PciePeer
+        };
+        TieredTarget {
+            topology,
+            opts: GpuOpts {
+                cyclic: false,
+                prefetch: false,
+                slots: 3,
+            },
+            ranks: 1,
+            link,
+            decomp: DecompKind::OneD,
+            overlap: true,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        let mut s = format!("Tiered {}", self.topology.label());
+        if self.opts.cyclic {
+            s.push_str(" Cyclic");
+        }
+        if self.opts.prefetch {
+            s.push_str(" Prefetch");
+        }
+        if self.ranks > 1 {
+            s.push_str(&format!(
+                " x{} ({}, {}{})",
+                self.ranks,
+                self.decomp.label(),
+                self.link.name(),
+                if self.overlap { "" } else { ", no-overlap" }
+            ));
+        }
+        s
+    }
+
+    /// Canonical spec string, round-tripping through
+    /// [`Config::parse_spec`].
+    pub fn spec(&self) -> String {
+        let mut s = self.topology.spec();
+        if self.opts.cyclic {
+            s.push_str(":cyclic");
+        }
+        if self.opts.prefetch {
+            s.push_str(":prefetch");
+        }
+        if self.ranks > 1 {
+            s.push_str(&format!(":x{}", self.ranks));
+            s.push_str(match self.link {
+                Interconnect::PciePeer => ":peer",
+                Interconnect::NvLink => ":nvlink",
+                Interconnect::InfiniBand => ":ib",
+            });
+            s.push_str(match self.decomp {
+                DecompKind::OneD => ":1d",
+                DecompKind::TwoD => ":2d",
+            });
+            if !self.overlap {
+                s.push_str(":no-overlap");
+            }
+        }
+        s
+    }
+}
+
+/// What a platform spec resolves to: a legacy [`Platform`] variant or a
+/// declarative tier stack. The common operations (label, rank count,
+/// canonical spec, sharding) are uniform across both.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Target {
+    Platform(Platform),
+    Tiered(TieredTarget),
+}
+
+impl Target {
+    pub fn label(&self) -> String {
+        match self {
+            Target::Platform(p) => p.label(),
+            Target::Tiered(t) => t.label(),
+        }
+    }
+
+    pub fn ranks(&self) -> u32 {
+        match self {
+            Target::Platform(p) => p.ranks(),
+            Target::Tiered(t) => t.ranks,
+        }
+    }
+
+    /// Canonical spec string (parseable by [`Config::parse_spec`]).
+    pub fn spec(&self) -> String {
+        match self {
+            Target::Platform(p) => p.spec(),
+            Target::Tiered(t) => t.spec(),
+        }
+    }
+
+    /// The legacy platform, when this is one.
+    pub fn platform(&self) -> Option<Platform> {
+        match self {
+            Target::Platform(p) => Some(*p),
+            Target::Tiered(_) => None,
+        }
+    }
+
+    /// The tiered target, when this is one.
+    pub fn tiered(&self) -> Option<&TieredTarget> {
+        match self {
+            Target::Platform(_) => None,
+            Target::Tiered(t) => Some(t),
+        }
+    }
+
+    /// Shard across `ranks` with default sharding settings (mirrors
+    /// [`Platform::sharded`]; tiered targets are always shardable).
+    pub fn sharded(self, ranks: u32) -> crate::Result<Target> {
+        match self {
+            Target::Platform(p) => Ok(Target::Platform(p.sharded(ranks)?)),
+            Target::Tiered(mut t) => {
+                crate::ensure!(ranks <= 64, "rank count {ranks} out of range (1..=64)");
+                t.ranks = ranks.max(1);
+                Ok(Target::Tiered(t))
+            }
+        }
+    }
+}
+
 /// Full run configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// The legacy platform view. When [`Config::tiered`] is set this is
+    /// a placeholder — every consumer should go through
+    /// [`Config::target`], [`Config::label`], [`Config::ranks`] and
+    /// [`Config::topology`], which resolve the active side.
     pub platform: Platform,
+    /// The declarative tier-stack target; overrides `platform` when
+    /// set.
+    pub tiered: Option<TieredTarget>,
     pub app: AppCalib,
     pub knl: KnlCalib,
     pub gpu: GpuCalib,
@@ -324,6 +527,7 @@ impl Config {
     pub fn new(platform: Platform, app: AppCalib) -> Self {
         Config {
             platform,
+            tiered: None,
             app,
             knl: KnlCalib::default(),
             gpu: GpuCalib::default(),
@@ -332,14 +536,71 @@ impl Config {
         }
     }
 
+    /// Build a configuration for any parse target — the uniform
+    /// constructor the CLI and spec-driven tests use.
+    pub fn for_target(target: Target, app: AppCalib) -> Self {
+        match target {
+            Target::Platform(p) => Config::new(p, app),
+            Target::Tiered(t) => {
+                let mut cfg = Config::new(Platform::KnlFlatDdr4, app);
+                cfg.tiered = Some(t);
+                cfg
+            }
+        }
+    }
+
+    /// The active target (tiered when set, the legacy platform
+    /// otherwise).
+    pub fn target(&self) -> Target {
+        match &self.tiered {
+            Some(t) => Target::Tiered(t.clone()),
+            None => Target::Platform(self.platform),
+        }
+    }
+
+    /// Label of the active target.
+    pub fn label(&self) -> String {
+        self.target().label()
+    }
+
+    /// Rank count of the active target.
+    pub fn ranks(&self) -> u32 {
+        self.target().ranks()
+    }
+
+    /// The declarative topology of the active target: the tiered stack
+    /// itself, or the preset the legacy platform maps to
+    /// ([`Platform::topology`]) — what the `--json` record reports.
+    pub fn topology(&self) -> Topology {
+        match &self.tiered {
+            Some(t) => t.topology.clone(),
+            None => self.platform.topology(&self.knl, &self.gpu),
+        }
+    }
+
+    /// The §5.3 graphics-clock boost: NVLink-attached P100s clock
+    /// slightly higher, so any stack whose innermost link is the
+    /// calibrated NVLink host link models it — keyed on the topology
+    /// *data*, not the preset name, so a hand-spelled
+    /// `host=inf@30~0.000008` stack behaves identically to
+    /// `tiers:gpu-explicit-nvlink`.
+    fn tiered_boost(&self, t: &TieredTarget) -> f64 {
+        if nvlink_host_stack(&t.topology) {
+            self.gpu.nvlink_clock_boost
+        } else {
+            1.0
+        }
+    }
+
     /// Enable the auto-tuner. Errors when the platform has no tile plan
     /// to search (flat modes, resident baselines, untiled cache mode).
+    /// Tiered targets always have one.
     pub fn with_tuning(mut self, opts: TuneOpts) -> crate::Result<Self> {
         crate::ensure!(
             self.tuner_target().is_some(),
             "platform {:?} is not tunable (tile plans exist on knl-cache-tiled, \
-             gpu-explicit, gpu-unified and their sharded forms)",
-            self.platform.label()
+             gpu-explicit, gpu-unified, tiers: stacks and their sharded forms)",
+            self.label()
         );
         self.tune = Some(opts);
         Ok(self)
@@ -347,6 +608,35 @@ impl Config {
 
     /// The tuner's view of this platform, when it is tunable.
     pub fn tuner_target(&self) -> Option<TunerTarget> {
+        if let Some(t) = &self.tiered {
+            if t.topology.num_tiers() < 2 {
+                // A flat single tier has no tile plan to search — the
+                // same rejection the legacy grammar gives gpu-baseline.
+                return None;
+            }
+            let inner = TunerTarget::Tiered {
+                topo: t.topology.clone(),
+                compute_bw: self.app.gpu * self.tiered_boost(t),
+                launch_s: self.gpu.launch_s,
+                opts: t.opts,
+            };
+            return Some(if t.ranks > 1 {
+                TunerTarget::Sharded {
+                    inner: Box::new(inner),
+                    ranks: t.ranks,
+                    kind: t.decomp,
+                    link: t.link,
+                    overlap: t.overlap,
+                }
+            } else {
+                inner
+            });
+        }
+        self.platform_tuner_target()
+    }
+
+    /// The legacy-platform half of [`Config::tuner_target`].
+    fn platform_tuner_target(&self) -> Option<TunerTarget> {
         fn inner_target(cfg: &Config, p: Platform) -> Option<TunerTarget> {
             match p {
                 Platform::KnlCacheTiled => Some(TunerTarget::Knl {
@@ -410,7 +700,8 @@ impl Config {
             "gpu-unified" => &["pcie", "nvlink", "tiled", "prefetch"],
             other => crate::bail!(
                 "unknown platform {other:?} (knl-flat-ddr4|knl-flat-mcdram|knl-cache|\
-                 knl-cache-tiled|gpu-baseline|gpu-explicit|gpu-unified)"
+                 knl-cache-tiled|gpu-baseline|gpu-explicit|gpu-unified|tiers:<stack> — \
+                 see --list-platforms)"
             ),
         };
         for t in toks {
@@ -504,13 +795,78 @@ impl Config {
         Ok(platform)
     }
 
-    /// Parse a platform spec that may additionally carry the `tuned`
+    /// Parse any execution-target spec: the legacy platform heads
+    /// ([`Config::parse_platform`]) or the declarative `tiers:` head —
+    /// a preset name or tier stack ([`crate::topology::spec`]),
+    /// followed by optional `cyclic`/`prefetch` toggles and the same
+    /// `x<N>` sharding suffix the legacy grammar uses:
+    /// `tiers:hbm=16g@509.7+host=inf@11:cyclic:x4:ib:2d`.
+    pub fn parse_target(spec: &str) -> crate::Result<Target> {
+        let Some(body) = spec.strip_prefix("tiers:") else {
+            return Ok(Target::Platform(Self::parse_platform(spec)?));
+        };
+        let mut parts = body.split(':');
+        let stack = parts.next().unwrap_or("");
+        let topo = topology::spec::parse_stack(stack)?;
+        let toks: Vec<&str> = parts.collect();
+        let xpos = toks.iter().position(|t| parse_ranks_token(t).is_some());
+        let (inner_toks, shard_toks) = match xpos {
+            Some(i) => (&toks[..i], &toks[i + 1..]),
+            None => (&toks[..], &toks[toks.len()..]),
+        };
+        let mut tt = TieredTarget::new(topo);
+        for t in inner_toks {
+            match *t {
+                "cyclic" => tt.opts.cyclic = true,
+                "prefetch" => tt.opts.prefetch = true,
+                other => crate::bail!(
+                    "unknown token {other:?} for tiers: platform (expected cyclic|prefetch|x<N>)"
+                ),
+            }
+        }
+        if let Some(i) = xpos {
+            let ranks = parse_ranks_token(toks[i]).unwrap();
+            crate::ensure!(
+                (1..=64).contains(&ranks),
+                "rank count {ranks} out of range (1..=64)"
+            );
+            // Stage the shard tokens, then apply only when actually
+            // sharding: `x1` means "no sharding" — its tokens are
+            // validated but discarded, exactly like the legacy grammar,
+            // so `TieredTarget::spec()` round-trips.
+            let (mut link, mut decomp, mut overlap) = (tt.link, tt.decomp, tt.overlap);
+            for t in shard_toks {
+                if let Some(ic) = Interconnect::parse(t) {
+                    link = ic;
+                } else {
+                    match *t {
+                        "1d" => decomp = DecompKind::OneD,
+                        "2d" => decomp = DecompKind::TwoD,
+                        "no-overlap" => overlap = false,
+                        other => crate::bail!(
+                            "unknown shard token {other:?} (expected peer|nvlink|ib|1d|2d|no-overlap)"
+                        ),
+                    }
+                }
+            }
+            if ranks > 1 {
+                tt.ranks = ranks;
+                tt.link = link;
+                tt.decomp = decomp;
+                tt.overlap = overlap;
+            }
+        }
+        Ok(Target::Tiered(tt))
+    }
+
+    /// Parse a target spec that may additionally carry the `tuned`
     /// token (position-independent): `gpu-explicit:nvlink:tuned`,
-    /// `knl-cache-tiled:tuned:x4:ib`. Returns the platform plus whether
-    /// tuning was requested; `tuned` on a platform with no tile plan to
-    /// search is rejected. [`Config::parse_platform`] itself keeps the
-    /// strict grammar (it rejects `tuned` like any unknown token).
-    pub fn parse_spec(spec: &str) -> crate::Result<(Platform, bool)> {
+    /// `knl-cache-tiled:tuned:x4:ib`, `tiers:gpu-explicit-pcie:tuned`.
+    /// Returns the target plus whether tuning was requested; `tuned` on
+    /// a platform with no tile plan to search is rejected.
+    /// [`Config::parse_platform`] itself keeps the strict grammar (it
+    /// rejects `tuned` like any unknown token).
+    pub fn parse_spec(spec: &str) -> crate::Result<(Target, bool)> {
         let mut tuned = false;
         let rest: Vec<&str> = spec
             .split(':')
@@ -523,12 +879,13 @@ impl Config {
                 }
             })
             .collect();
-        let platform = Self::parse_platform(&rest.join(":"))?;
+        let target = Self::parse_target(&rest.join(":"))?;
         if tuned {
             // validate tunability with a throwaway default-calib config
-            Config::new(platform, AppCalib::CLOVERLEAF_2D).with_tuning(TuneOpts::default())?;
+            Config::for_target(target.clone(), AppCalib::CLOVERLEAF_2D)
+                .with_tuning(TuneOpts::default())?;
         }
-        Ok((platform, tuned))
+        Ok((target, tuned))
     }
 
     /// Instantiate the memory engine for this configuration. With
@@ -545,8 +902,11 @@ impl Config {
             debug_assert!(
                 false,
                 "Config.tune set on non-tunable platform {:?}",
-                self.platform.label()
+                self.label()
             );
+        }
+        if let Some(t) = &self.tiered {
+            return self.build_tiered_engine(t);
         }
         match self.platform {
             Platform::KnlFlatDdr4 => {
@@ -608,6 +968,7 @@ impl Config {
             } => {
                 let rank_cfg = Config {
                     platform: inner.to_platform(),
+                    tiered: None,
                     app: self.app,
                     knl: self.knl.clone(),
                     gpu: self.gpu.clone(),
@@ -617,6 +978,31 @@ impl Config {
                 let engines = (0..ranks.max(1)).map(|_| rank_cfg.build_engine()).collect();
                 Box::new(ShardedEngine::new(engines, decomp, link, overlap))
             }
+        }
+    }
+
+    /// Instantiate the generic [`TieredEngine`] (per rank, when
+    /// sharded) for a tiered target. Compute bandwidth is the app's
+    /// calibrated GPU baseline — the tier stack describes *memory*, the
+    /// app calibration describes the *device* doing the computing —
+    /// with the NVLink presets' clock boost folded in.
+    fn build_tiered_engine(&self, t: &TieredTarget) -> Box<dyn Engine> {
+        let mk = || -> Box<dyn Engine> {
+            Box::new(
+                TieredEngine::new(
+                    t.topology.clone(),
+                    self.app.gpu * self.tiered_boost(t),
+                    self.gpu.launch_s,
+                    t.opts,
+                )
+                .expect("parse/TieredTarget::new produce valid GpuOpts"),
+            )
+        };
+        if t.ranks > 1 {
+            let engines = (0..t.ranks).map(|_| mk()).collect();
+            Box::new(ShardedEngine::new(engines, t.decomp, t.link, t.overlap))
+        } else {
+            mk()
         }
     }
 }
@@ -768,7 +1154,7 @@ mod tests {
         let (p, tuned) = Config::parse_spec("gpu-explicit:nvlink:cyclic:tuned").unwrap();
         assert!(tuned);
         assert_eq!(
-            p,
+            p.platform().unwrap(),
             Platform::GpuExplicit {
                 link: Link::NvLink,
                 cyclic: true,
@@ -777,7 +1163,7 @@ mod tests {
         );
         let (p2, t2) = Config::parse_spec("knl-cache-tiled").unwrap();
         assert!(!t2);
-        assert_eq!(p2, Platform::KnlCacheTiled);
+        assert_eq!(p2.platform().unwrap(), Platform::KnlCacheTiled);
         // the token composes with sharding, position-independently
         let (p3, t3) = Config::parse_spec("knl-cache-tiled:tuned:x4:ib").unwrap();
         assert!(t3);
@@ -785,8 +1171,141 @@ mod tests {
         // platforms with no tile plan reject it
         assert!(Config::parse_spec("gpu-baseline:tuned").is_err());
         assert!(Config::parse_spec("knl-cache:tuned").is_err());
+        // multi-tier stacks are tunable; a flat single tier is not
+        let (t4, tuned4) = Config::parse_spec("tiers:gpu-explicit-pcie:tuned").unwrap();
+        assert!(tuned4);
+        assert!(t4.tiered().is_some());
+        assert!(Config::parse_spec("tiers:plain:tuned").is_err());
         // the strict grammar itself still rejects it as unknown
         assert!(Config::parse_platform("gpu-explicit:tuned").is_err());
+    }
+
+    #[test]
+    fn tiers_specs_parse_into_tiered_targets() {
+        let (t, tuned) =
+            Config::parse_spec("tiers:hbm=16g@509.7+host=48g@11~0.00001+nvme=inf@6~0.00002")
+                .unwrap();
+        assert!(!tuned);
+        let tt = t.tiered().unwrap();
+        assert_eq!(tt.topology.num_tiers(), 3);
+        assert_eq!(tt.ranks, 1);
+        assert!(!tt.opts.cyclic && !tt.opts.prefetch);
+
+        // toggles + sharding compose like the legacy grammar
+        let (t, _) =
+            Config::parse_spec("tiers:gpu-explicit-nvlink:cyclic:prefetch:x4:ib:2d").unwrap();
+        let tt = t.tiered().unwrap();
+        assert!(tt.opts.cyclic && tt.opts.prefetch);
+        assert_eq!(tt.ranks, 4);
+        assert_eq!(tt.link, Interconnect::InfiniBand);
+        assert_eq!(tt.decomp, DecompKind::TwoD);
+        assert_eq!(t.ranks(), 4);
+        assert!(t.label().contains("x4"), "{}", t.label());
+
+        // x1 collapses to unsharded — shard tokens are validated but
+        // discarded (so the canonical spec round-trips), like legacy x1
+        let (t, _) = Config::parse_spec("tiers:gpu-explicit-pcie:x1").unwrap();
+        assert_eq!(t.ranks(), 1);
+        let (t, _) = Config::parse_spec("tiers:gpu-explicit-pcie:x1:ib").unwrap();
+        assert_eq!(t.ranks(), 1);
+        assert_eq!(t.tiered().unwrap().link, Interconnect::PciePeer);
+        let (t2, _) = Config::parse_spec(&t.spec()).unwrap();
+        assert_eq!(t, t2);
+        assert!(Config::parse_spec("tiers:gpu-explicit-pcie:x1:ethernet").is_err());
+
+        // unknown tokens are rejected at both positions
+        assert!(Config::parse_spec("tiers:gpu-explicit-pcie:tiled").is_err());
+        assert!(Config::parse_spec("tiers:gpu-explicit-pcie:x4:ethernet").is_err());
+        // malformed stacks surface the topology parser's typed errors
+        assert!(Config::parse_spec("tiers:hbm=0g@550+host=inf@11").is_err());
+        assert!(Config::parse_spec("tiers:hbm=16g@550").is_err());
+    }
+
+    #[test]
+    fn tiered_target_specs_round_trip() {
+        for spec in [
+            "tiers:gpu-explicit-pcie",
+            "tiers:knl",
+            "tiers:hbm=16g@509.7+host=48g@11~0.00001+nvme=inf@6~0.00002",
+            "tiers:gpu-explicit-nvlink:cyclic:prefetch:x4:ib:2d:no-overlap",
+            "tiers:hbm=16g@509.7+host=inf@11~0.00001:prefetch:x2:peer:1d",
+        ] {
+            let (t, _) = Config::parse_spec(spec).unwrap();
+            let (t2, _) = Config::parse_spec(&t.spec()).unwrap();
+            assert_eq!(t, t2, "{spec} → {}", t.spec());
+        }
+    }
+
+    #[test]
+    fn tiered_configs_build_tiered_engines() {
+        let (t, _) = Config::parse_spec("tiers:gpu-explicit-pcie").unwrap();
+        let cfg = Config::for_target(t, AppCalib::CLOVERLEAF_2D);
+        assert!(cfg.build_engine().describe().starts_with("Tiered"), "{}", cfg.label());
+        assert!(cfg.tuner_target().is_some(), "tiered stacks are tunable");
+
+        // sharded tiered: per-rank inner topologies under the sharding layer
+        let (t, _) = Config::parse_spec("tiers:gpu-explicit-pcie:x4:ib").unwrap();
+        let cfg = Config::for_target(t, AppCalib::CLOVERLEAF_2D);
+        let d = cfg.build_engine().describe();
+        assert!(d.contains("Sharded x4") && d.contains("Tiered"), "{d}");
+        assert_eq!(cfg.ranks(), 4);
+
+        // a bounded home tier bounds the problem
+        let (t, _) = Config::parse_spec("tiers:hbm=1m@500+nvme=1g@6~0.00002").unwrap();
+        let cfg = Config::for_target(t, AppCalib::CLOVERLEAF_2D);
+        let e = cfg.build_engine();
+        assert!(e.fits(1 << 30));
+        assert!(!e.fits((1 << 30) + 1));
+    }
+
+    #[test]
+    fn platform_topology_maps_every_variant() {
+        let knl = KnlCalib::default();
+        let gpu = GpuCalib::default();
+        let cases: [(Platform, usize, Option<&str>); 6] = [
+            (Platform::KnlFlatDdr4, 1, None),
+            (Platform::KnlFlatMcdram, 1, None),
+            (Platform::KnlCacheTiled, 2, Some("knl")),
+            (Platform::GpuBaseline { link: Link::PciE }, 1, None),
+            (
+                Platform::GpuExplicit {
+                    link: Link::NvLink,
+                    cyclic: true,
+                    prefetch: true,
+                },
+                2,
+                Some("gpu-explicit-nvlink"),
+            ),
+            (
+                Platform::GpuUnified {
+                    link: Link::PciE,
+                    tiled: false,
+                    prefetch: false,
+                },
+                2,
+                Some("unified-pcie"),
+            ),
+        ];
+        for (p, tiers, name) in cases {
+            let topo = p.topology(&knl, &gpu);
+            assert_eq!(topo.num_tiers(), tiers, "{}", p.label());
+            assert_eq!(topo.name.as_deref(), name, "{}", p.label());
+        }
+        // custom calibrations flow through the mapping
+        let small = GpuCalib {
+            hbm_bytes: 1 << 20,
+            ..GpuCalib::default()
+        };
+        let topo = Platform::GpuExplicit {
+            link: Link::PciE,
+            cyclic: false,
+            prefetch: false,
+        }
+        .topology(&knl, &small);
+        assert_eq!(topo.tier(0).capacity_bytes, Some(1 << 20));
+        // sharded platforms map to their inner topology
+        let p = Config::parse_platform("gpu-explicit:pcie:x4").unwrap();
+        assert_eq!(p.topology(&knl, &gpu).name.as_deref(), Some("gpu-explicit-pcie"));
     }
 
     #[test]

@@ -9,7 +9,7 @@
 pub mod config;
 pub mod report;
 
-pub use config::{Config, InnerPlatform, Platform};
+pub use config::{Config, InnerPlatform, Platform, Target, TieredTarget};
 pub use report::{json_record, print_summary, Summary};
 
 use crate::exec::Metrics;

@@ -2,6 +2,7 @@
 
 use crate::exec::timeline::StreamClass;
 use crate::exec::Metrics;
+use crate::topology::Topology;
 
 /// A rendered summary of one run.
 #[derive(Debug, Clone)]
@@ -21,23 +22,59 @@ pub struct Summary {
 /// One machine-readable metrics record (the `--json` output of
 /// `ops-oc run`/`sweep`; BENCH_*.json trajectories collect these).
 /// Hand-rendered: the crate is dependency-free, and the record is flat.
+///
+/// `topology` is the run's declarative memory stack
+/// ([`crate::coordinator::Config::topology`]) — reported as its
+/// canonical spec string plus, on multi-tier stacks, one
+/// `util_tier_<tier>_<upload|download>` utilisation field per per-tier
+/// stream the engine actually ran.
 pub fn json_record(
     app: &str,
     platform: &str,
     ranks: u32,
     size_gb: f64,
+    topology: &Topology,
     m: &Metrics,
     oom: bool,
 ) -> String {
     let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
     let tuned = m.tune_evals + m.tune_cache_hits > 0;
+    // Per-tier stream attribution: the tiered engine names its per-
+    // boundary streams `{tier}:upload` / `{tier}:download`; under
+    // sharding each rank's copy is re-namespaced `r{r}:{tier}:{dir}`,
+    // so — like `Metrics::stream_util` — the field reports the busiest
+    // instance across ranks.
+    let tier_util = |tier: &str, dir: &str| -> Option<f64> {
+        if m.elapsed_s <= 0.0 {
+            return None;
+        }
+        let plain = format!("{tier}:{dir}");
+        let ranked = format!(":{plain}");
+        m.per_resource
+            .iter()
+            .filter(|(name, _)| name.as_str() == plain || name.ends_with(&ranked))
+            .map(|(_, st)| (st.busy_s / m.elapsed_s).min(1.0))
+            .reduce(f64::max)
+    };
+    let mut tier_utils = String::new();
+    for tier in topology.tiers() {
+        for dir in ["upload", "download"] {
+            if let Some(u) = tier_util(&tier.name, dir) {
+                tier_utils.push_str(&format!(
+                    ",\"util_tier_{}_{dir}\":{u:.4}",
+                    esc(&tier.name)
+                ));
+            }
+        }
+    }
     format!(
         concat!(
-            "{{\"app\":\"{}\",\"platform\":\"{}\",\"ranks\":{},\"size_gb\":{:.3},",
+            "{{\"app\":\"{}\",\"platform\":\"{}\",\"topology\":\"{}\",",
+            "\"ranks\":{},\"size_gb\":{:.3},",
             "\"oom\":{},\"runtime_s\":{:.6},\"avg_bandwidth_gbs\":{:.3},",
             "\"eff_bandwidth_gbs\":{:.3},\"halo_time_s\":{:.6},\"tiles\":{},",
             "\"bound\":\"{}\",\"util_compute\":{:.4},\"util_upload\":{:.4},",
-            "\"util_download\":{:.4},\"util_exchange\":{:.4},",
+            "\"util_download\":{:.4},\"util_exchange\":{:.4}{},",
             "\"tuned\":{},\"tune_evals\":{},\"tune_cache_hits\":{},",
             "\"tuned_model_s\":{:.6},\"heuristic_model_s\":{:.6},",
             "\"tune_model_speedup\":{:.4},",
@@ -46,6 +83,7 @@ pub fn json_record(
         ),
         esc(app),
         esc(platform),
+        esc(&topology.spec()),
         ranks,
         size_gb,
         oom,
@@ -59,6 +97,7 @@ pub fn json_record(
         m.stream_util(StreamClass::Upload),
         m.stream_util(StreamClass::Download),
         m.stream_util(StreamClass::Exchange),
+        tier_utils,
         tuned,
         m.tune_evals,
         m.tune_cache_hits,
@@ -148,6 +187,9 @@ pub fn print_summary(label: &str, problem_bytes: u64, m: &Metrics, oom: bool) {
     }
     if !m.per_resource.is_empty() {
         println!("  bound by            : {} stream", m.bound());
+        if let Some((name, u)) = m.bound_resource() {
+            println!("  busiest stream      : {} ({:.0}%)", name, u * 100.0);
+        }
         print!("  stream utilisation  :");
         for class in StreamClass::ALL {
             let u = m.stream_util(class);
@@ -156,6 +198,28 @@ pub fn print_summary(label: &str, problem_bytes: u64, m: &Metrics, oom: bool) {
             }
         }
         println!();
+        // Namespaced transfer streams — a multi-tier stack's per-tier
+        // pairs and/or a sharded run's per-rank copies — by name.
+        let detailed: Vec<_> = m
+            .per_resource
+            .iter()
+            .filter(|(k, st)| {
+                k.contains(':')
+                    && matches!(st.class, StreamClass::Upload | StreamClass::Download)
+            })
+            .collect();
+        if !detailed.is_empty() && m.elapsed_s > 0.0 {
+            print!("  stream detail       :");
+            for (k, st) in detailed {
+                print!(
+                    " {} {:.0}% ({:.2} GB)",
+                    k,
+                    (st.busy_s / m.elapsed_s).min(1.0) * 100.0,
+                    st.bytes as f64 / 1e9
+                );
+            }
+            println!();
+        }
     }
     if m.analysis_builds + m.analysis_reuse_hits > 0 {
         println!(
@@ -211,22 +275,28 @@ mod tests {
         assert!(s.row().contains("OOM"));
     }
 
+    fn topo() -> Topology {
+        crate::topology::preset("gpu-explicit-pcie").unwrap()
+    }
+
     #[test]
     fn json_record_is_flat_and_escaped() {
         let mut m = Metrics::new();
         m.record_loop("k", 2_000_000_000, 0.01);
         m.elapsed_s = 0.04;
-        let j = json_record("cloverleaf\"2d", "GPU explicit", 4, 48.0, &m, false);
+        let j = json_record("cloverleaf\"2d", "GPU explicit", 4, 48.0, &topo(), &m, false);
         assert!(j.starts_with('{') && j.ends_with('}'));
         assert!(j.contains("\"ranks\":4"));
         assert!(j.contains("\"size_gb\":48.000"));
         assert!(j.contains("\\\"2d"));
+        assert!(j.contains("\"topology\":\"tiers:gpu-explicit-pcie\""));
         assert!(j.contains("\"avg_bandwidth_gbs\":200.000"));
         assert!(j.contains("\"oom\":false"));
         assert!(j.contains("\"tuned\":false"));
         assert!(j.contains("\"tune_model_speedup\":1.0000"));
         assert!(j.contains("\"bound\":\"none\""));
         assert!(j.contains("\"util_compute\":0.0000"));
+        assert!(!j.contains("util_tier_"), "no per-tier streams ran: {j}");
     }
 
     #[test]
@@ -237,11 +307,53 @@ mod tests {
         m.elapsed_s = 0.02;
         m.record_stream("compute", StreamClass::Compute, 0.005, 0, 3);
         m.record_stream("upload", StreamClass::Upload, 0.018, 1 << 20, 3);
-        let j = json_record("a", "p", 1, 6.0, &m, false);
+        let j = json_record("a", "p", 1, 6.0, &topo(), &m, false);
         assert!(j.contains("\"bound\":\"upload\""), "{j}");
         assert!(j.contains("\"util_upload\":0.9000"), "{j}");
         assert!(j.contains("\"util_compute\":0.2500"), "{j}");
         assert!(j.contains("\"util_download\":0.0000"), "{j}");
+    }
+
+    #[test]
+    fn json_record_reports_per_tier_utilisation() {
+        use crate::exec::timeline::StreamClass;
+        let t = crate::topology::spec::parse_stack(
+            "hbm=16g@509.7+host=48g@11~0.00001+nvme=inf@6~0.00002",
+        )
+        .unwrap();
+        let mut m = Metrics::new();
+        m.record_loop("k", 1_000_000_000, 0.01);
+        m.elapsed_s = 0.02;
+        m.record_stream("hbm:upload", StreamClass::Upload, 0.01, 1 << 20, 4);
+        m.record_stream("hbm:download", StreamClass::Download, 0.002, 1 << 18, 4);
+        m.record_stream("host:upload", StreamClass::Upload, 0.016, 1 << 21, 2);
+        let j = json_record("a", "p", 1, 6.0, &t, &m, false);
+        assert!(j.contains("\"topology\":\"tiers:hbm=16g@509.7"), "{j}");
+        assert!(j.contains("\"util_tier_hbm_upload\":0.5000"), "{j}");
+        assert!(j.contains("\"util_tier_hbm_download\":0.1000"), "{j}");
+        assert!(j.contains("\"util_tier_host_upload\":0.8000"), "{j}");
+        assert!(!j.contains("util_tier_host_download"), "stream never ran: {j}");
+        assert!(!j.contains("util_tier_nvme"), "home tier has no streams: {j}");
+    }
+
+    #[test]
+    fn per_tier_utilisation_sees_rank_namespaced_streams() {
+        use crate::exec::timeline::StreamClass;
+        let t = crate::topology::spec::parse_stack(
+            "hbm=16g@509.7+host=48g@11~0.00001+nvme=inf@6~0.00002",
+        )
+        .unwrap();
+        let mut m = Metrics::new();
+        m.elapsed_s = 0.02;
+        // a sharded tiered run re-namespaces each rank's tier streams
+        m.record_stream("r0:hbm:upload", StreamClass::Upload, 0.01, 1 << 20, 4);
+        m.record_stream("r1:hbm:upload", StreamClass::Upload, 0.016, 1 << 20, 4);
+        m.record_stream("r0:host:download", StreamClass::Download, 0.004, 1 << 18, 2);
+        let j = json_record("a", "p", 2, 6.0, &t, &m, false);
+        // busiest instance across ranks, like stream_util
+        assert!(j.contains("\"util_tier_hbm_upload\":0.8000"), "{j}");
+        assert!(j.contains("\"util_tier_host_download\":0.2000"), "{j}");
+        assert!(!j.contains("util_tier_host_upload"), "{j}");
     }
 
     #[test]
@@ -253,7 +365,7 @@ mod tests {
         m.tune_cache_hits = 3;
         m.tuned_model_s = 0.018;
         m.heuristic_model_s = 0.027;
-        let j = json_record("a", "p", 1, 6.0, &m, false);
+        let j = json_record("a", "p", 1, 6.0, &topo(), &m, false);
         assert!(j.contains("\"tuned\":true"));
         assert!(j.contains("\"tune_evals\":32"));
         assert!(j.contains("\"tune_cache_hits\":3"));

@@ -128,7 +128,7 @@ impl HaloExchange {
                     continue;
                 }
                 let bytes = face.len() as u64 * rec.plane_bytes;
-                out.time_s += link.time_s(bytes);
+                out.time_s += link.spec().time_s(bytes);
                 out.bytes += bytes;
                 out.messages += 1;
             }

@@ -1,14 +1,21 @@
 //! Inter-rank interconnect calibration.
 //!
-//! The same shape as [`crate::memory::Link`] (achieved bandwidth + per
-//! -message latency), but for *rank-to-rank* transfers: PCIe peer-to-peer
-//! between GPUs under one root complex, NVLink peer connections, and
-//! inter-node InfiniBand. Numbers are the commonly measured achieved
-//! figures for the paper's hardware generation (P100 era): PCIe gen3 P2P
-//! ≈ 10 GB/s, NVLink 1.0 peer ≈ 35 GB/s, EDR InfiniBand ≈ 12 GB/s with
-//! the lowest latency of the three.
+//! A thin shim over [`crate::topology::LinkSpec`] — the unified
+//! bandwidth/latency edge description that also models the host↔device
+//! [`crate::memory::Link`] and every tier boundary of a
+//! [`crate::topology::Topology`]. The three calibrated rank-to-rank
+//! links are [`LinkSpec::PCIE_PEER`], [`LinkSpec::NVLINK_PEER`] and
+//! [`LinkSpec::INFINIBAND`] (commonly measured achieved figures for the
+//! paper's hardware generation: PCIe gen3 P2P ≈ 10 GB/s, NVLink 1.0
+//! peer ≈ 35 GB/s, EDR InfiniBand ≈ 12 GB/s with the lowest latency of
+//! the three); this enum survives as the compact spec-token form
+//! (`peer` / `nvlink` / `ib`).
+//!
+//! [`LinkSpec::PCIE_PEER`]: crate::topology::LinkSpec::PCIE_PEER
+//! [`LinkSpec::NVLINK_PEER`]: crate::topology::LinkSpec::NVLINK_PEER
+//! [`LinkSpec::INFINIBAND`]: crate::topology::LinkSpec::INFINIBAND
 
-use crate::memory::hierarchy::GB;
+use crate::topology::LinkSpec;
 
 /// Rank-to-rank interconnect between modelled devices/nodes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,31 +29,40 @@ pub enum Interconnect {
 }
 
 impl Interconnect {
-    /// Achieved bandwidth per direction, GB/s.
-    pub fn bw_gbs(self) -> f64 {
+    /// The unified link description this variant stands for.
+    pub fn spec(self) -> LinkSpec {
         match self {
-            Interconnect::PciePeer => 10.0,
-            Interconnect::NvLink => 35.0,
-            Interconnect::InfiniBand => 12.0,
+            Interconnect::PciePeer => LinkSpec::PCIE_PEER,
+            Interconnect::NvLink => LinkSpec::NVLINK_PEER,
+            Interconnect::InfiniBand => LinkSpec::INFINIBAND,
         }
+    }
+
+    /// Achieved bandwidth per direction, GB/s.
+    #[deprecated(
+        since = "0.4.0",
+        note = "use Interconnect::spec().bw_gbs (topology::LinkSpec)"
+    )]
+    pub fn bw_gbs(self) -> f64 {
+        self.spec().bw_gbs
     }
 
     /// Per-message latency, seconds.
+    #[deprecated(
+        since = "0.4.0",
+        note = "use Interconnect::spec().latency_s (topology::LinkSpec)"
+    )]
     pub fn latency_s(self) -> f64 {
-        match self {
-            Interconnect::PciePeer => 10e-6,
-            Interconnect::NvLink => 8e-6,
-            Interconnect::InfiniBand => 2e-6,
-        }
+        self.spec().latency_s
     }
 
     /// Time to move `bytes` in one message.
+    #[deprecated(
+        since = "0.4.0",
+        note = "use Interconnect::spec().time_s (topology::LinkSpec)"
+    )]
     pub fn time_s(self, bytes: u64) -> f64 {
-        if bytes == 0 {
-            0.0
-        } else {
-            self.latency_s() + bytes as f64 / (self.bw_gbs() * GB)
-        }
+        self.spec().time_s(bytes)
     }
 
     pub fn name(self) -> &'static str {
@@ -74,9 +90,23 @@ mod tests {
 
     #[test]
     fn time_includes_latency() {
-        let t = Interconnect::InfiniBand.time_s(12_000_000_000);
+        let t = Interconnect::InfiniBand.spec().time_s(12_000_000_000);
         assert!((t - (1.0 + 2e-6)).abs() < 1e-9);
-        assert_eq!(Interconnect::PciePeer.time_s(0), 0.0);
+        assert_eq!(Interconnect::PciePeer.spec().time_s(0), 0.0);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_delegate_to_linkspec() {
+        for ic in [
+            Interconnect::PciePeer,
+            Interconnect::NvLink,
+            Interconnect::InfiniBand,
+        ] {
+            assert_eq!(ic.bw_gbs(), ic.spec().bw_gbs);
+            assert_eq!(ic.latency_s(), ic.spec().latency_s);
+            assert_eq!(ic.time_s(1 << 22), ic.spec().time_s(1 << 22));
+        }
     }
 
     #[test]
@@ -89,7 +119,9 @@ mod tests {
 
     #[test]
     fn nvlink_fastest_ib_lowest_latency() {
-        assert!(Interconnect::NvLink.bw_gbs() > Interconnect::PciePeer.bw_gbs());
-        assert!(Interconnect::InfiniBand.latency_s() < Interconnect::PciePeer.latency_s());
+        assert!(Interconnect::NvLink.spec().bw_gbs > Interconnect::PciePeer.spec().bw_gbs);
+        assert!(
+            Interconnect::InfiniBand.spec().latency_s < Interconnect::PciePeer.spec().latency_s
+        );
     }
 }

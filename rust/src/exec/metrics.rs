@@ -261,6 +261,34 @@ impl Metrics {
             .min(1.0)
     }
 
+    /// Utilisation of one named resource over the whole run, in
+    /// `[0, 1]` (saturating like [`Metrics::stream_util`]); `None` when
+    /// the resource never ran or no wall time elapsed. Useful for
+    /// reading the tiered engine's `{tier}:upload` / `{tier}:download`
+    /// streams individually.
+    pub fn resource_util(&self, name: &str) -> Option<f64> {
+        if self.elapsed_s <= 0.0 {
+            return None;
+        }
+        self.per_resource
+            .get(name)
+            .map(|st| (st.busy_s / self.elapsed_s).min(1.0))
+    }
+
+    /// The single busiest resource (name, utilisation) — the
+    /// finer-grained sibling of [`Metrics::bound`], naming the exact
+    /// stream (e.g. `host:upload` on a three-tier run, `r3:link` when
+    /// sharded) instead of its class.
+    pub fn bound_resource(&self) -> Option<(&str, f64)> {
+        if self.elapsed_s <= 0.0 {
+            return None;
+        }
+        self.per_resource
+            .iter()
+            .map(|(k, st)| (k.as_str(), (st.busy_s / self.elapsed_s).min(1.0)))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+    }
+
     /// Bottleneck attribution: the stream class with the highest
     /// utilisation (`"none"` when nothing ran). A compute-bound run
     /// reports `compute`; a PCIe-upload-bound streaming run `upload`.

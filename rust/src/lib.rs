@@ -72,6 +72,23 @@
 //! (`bound` + `util_*` in the `--json` record and the run summary) and
 //! the `--trace <path>` Chrome-trace export (`chrome://tracing` /
 //! Perfetto).
+//!
+//! ## Declarative memory topologies
+//!
+//! The paper's two-level pairings generalise: a [`topology::Topology`]
+//! describes any ordered stack of memory tiers (name, capacity,
+//! bandwidth) with [`topology::LinkSpec`] edges, parsed from a compact
+//! grammar (`--platform tiers:hbm=16g@509.7+host=48g@11~0.00001+nvme=inf@6`)
+//! or picked from named presets that reproduce the paper's calibrations
+//! (`tiers:knl`, `tiers:gpu-explicit-pcie`, … — `ops-oc list-platforms`
+//! prints the table). The generic [`memory::TieredEngine`] lowers any
+//! N-tier stack onto the timeline by applying Algorithm 1 recursively
+//! at every capacity boundary — a three-tier HBM→host→NVMe run models
+//! problems larger than host DRAM with per-tier stream attribution.
+//! Two-tier GPU stacks reproduce [`memory::GpuExplicitEngine`]'s
+//! modelled clocks bit-exactly; the legacy [`Platform`] enum survives
+//! as a thin compatibility layer over the presets
+//! ([`Platform::topology`]).
 
 pub mod apps;
 pub mod bench_support;
@@ -85,9 +102,10 @@ pub mod ops;
 pub mod program;
 pub mod runtime;
 pub mod tiling;
+pub mod topology;
 pub mod tuner;
 
-pub use coordinator::config::{Config, Platform};
+pub use coordinator::config::{Config, Platform, Target, TieredTarget};
 #[allow(deprecated)]
 pub use ops::api::OpsContext;
 pub use program::{Program, ProgramBuilder, Session};

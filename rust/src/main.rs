@@ -6,33 +6,41 @@
 //!                --size-gb 48 --steps 4
 //!   ops-oc run   --app cloverleaf2d --platform gpu-explicit:nvlink:cyclic x4 \
 //!                --size-gb 48            (sharded across 4 modelled ranks)
+//!   ops-oc run   --app opensbli --size-gb 800 \
+//!                --platform "tiers:hbm=16g@509.7+host=512g@11~0.00001+nvme=4t@6~0.00002"
 //!   ops-oc sweep --app opensbli --platform gpu-explicit:nvlink:cyclic:prefetch
 //!   ops-oc list
+//!   ops-oc list-platforms                 (preset topology table + grammar)
 //!
 //! Platform specs: knl-flat-ddr4 | knl-flat-mcdram | knl-cache |
 //!   knl-cache-tiled | gpu-baseline[:link] |
 //!   gpu-explicit[:link][:cyclic][:prefetch] |
 //!   gpu-unified[:link][:tiled][:prefetch]     (link = pcie | nvlink)
+//!   | tiers:<preset|stack>[:cyclic][:prefetch]
+//!     — a declarative memory topology on the generic N-tier engine:
+//!     a preset name (`tiers:knl`, `tiers:gpu-explicit-pcie`, …) or a
+//!     `name=cap@bw[~lat]+…` stack, fastest tier first (run
+//!     `list-platforms` for the table and grammar).
 //! Sharding: append `:xN` to a shardable spec (knl-cache-tiled,
-//!   gpu-explicit, gpu-unified) followed by optional `peer|nvlink|ib`
-//!   (interconnect), `1d|2d` (decomposition) and `no-overlap`; or pass
-//!   `--ranks N` / a bare `xN` argument. Unknown tokens are rejected.
+//!   gpu-explicit, gpu-unified, any tiers: stack) followed by optional
+//!   `peer|nvlink|ib` (interconnect), `1d|2d` (decomposition) and
+//!   `no-overlap`; or pass `--ranks N` / a bare `xN` argument. Unknown
+//!   tokens are rejected.
 //! `--json` emits one machine-readable metrics record per run cell,
-//!   including the Program/Session analysis-reuse counters
-//!   (`analysis_builds`, `analysis_reuse_hits`, `program_freeze_s`):
-//!   apps run through a frozen `Program` whose chain analysis is
-//!   computed once and replayed, not redone per flush.
+//!   including the run's declarative `topology` spec, per-tier
+//!   `util_tier_*` stream utilisation on multi-tier stacks, and the
+//!   Program/Session analysis-reuse counters.
 //! `--tune` / `--tune-budget E` (or a `tuned` spec token) enable the
 //!   cost-model tile-plan auto-tuner on platforms with a tile plan.
 //! `--trace <path>` (run only) writes the engine's discrete-event
 //!   timeline — every compute/upload/download/exchange event of the
-//!   timed region — as Chrome-trace JSON for `chrome://tracing` or
-//!   Perfetto; the `--json` record carries the matching aggregate
-//!   attribution (`bound`, `util_*`).
+//!   timed region, per tier when the stack is deeper than two — as
+//!   Chrome-trace JSON for `chrome://tracing` or Perfetto.
 
 use ops_oc::bench_support::{self, Figure};
-use ops_oc::coordinator::{json_record, print_summary, Config, Platform};
+use ops_oc::coordinator::{json_record, print_summary, Config};
 use ops_oc::exec::chrome_trace_json;
+use ops_oc::memory::AppCalib;
 use ops_oc::tuner::TuneOpts;
 use std::process::exit;
 
@@ -68,9 +76,10 @@ fn parse_args() -> Args {
     let mut i = 0;
     while i < argv.len() {
         match argv[i].as_str() {
-            "run" | "sweep" | "list" | "help" | "--help" | "-h" => {
+            "run" | "sweep" | "list" | "list-platforms" | "help" | "--help" | "-h" => {
                 a.cmd = argv[i].trim_start_matches('-').to_string()
             }
+            "--list-platforms" => a.cmd = "list-platforms".into(),
             "--json" => a.json = true,
             "--tune" => a.tune = true,
             "--trace" => {
@@ -144,63 +153,97 @@ fn parse_args() -> Args {
     a
 }
 
-/// Parse the platform spec (including a possible `tuned` token) and
-/// apply `--ranks`. Returns the platform plus the resolved tuning
-/// options (spec token or `--tune`/`--tune-budget`).
-fn parse_platform_or_exit(a: &Args) -> (Platform, Option<TuneOpts>) {
-    let (platform, spec_tuned) = Config::parse_spec(&a.platform).unwrap_or_else(|e| {
+/// Parse the platform spec (legacy heads and `tiers:` stacks, including
+/// a possible `tuned` token), apply `--ranks`, and build the run
+/// configuration. The app calibration is a placeholder — the per-app
+/// cell runners set the right one.
+fn config_or_exit(a: &Args) -> Config {
+    let (target, spec_tuned) = Config::parse_spec(&a.platform).unwrap_or_else(|e| {
         eprintln!("{e}");
         exit(2);
     });
-    let platform = if a.ranks > 1 {
-        platform.sharded(a.ranks).unwrap_or_else(|e| {
+    let target = if a.ranks > 1 {
+        target.sharded(a.ranks).unwrap_or_else(|e| {
             eprintln!("{e}");
             exit(2);
         })
     } else {
-        platform
+        target
     };
-    let tune = (a.tune || spec_tuned).then(|| TuneOpts {
-        budget: a.tune_budget,
-        ..TuneOpts::default()
-    });
-    // `tuned` in the spec was already validated by parse_spec (and
-    // sharding a tunable platform keeps it tunable); only the bare
-    // `--tune`/`--tune-budget` path still needs the typed check here
-    // (e.g. `--tune` on gpu-baseline).
-    if tune.is_some() && !spec_tuned {
-        if let Err(e) = Config::new(platform, ops_oc::memory::AppCalib::CLOVERLEAF_2D)
-            .with_tuning(TuneOpts::default())
-        {
-            eprintln!("{e}");
-            exit(2);
-        }
+    let mut cfg = Config::for_target(target, AppCalib::CLOVERLEAF_2D);
+    if a.tune || spec_tuned {
+        cfg = cfg
+            .with_tuning(TuneOpts {
+                budget: a.tune_budget,
+                ..TuneOpts::default()
+            })
+            .unwrap_or_else(|e| {
+                eprintln!("{e}");
+                exit(2);
+            });
     }
-    (platform, tune)
+    cfg
 }
 
 fn run_cell(
     app: &str,
-    p: Platform,
-    tune: Option<TuneOpts>,
+    cfg: &Config,
     trace: bool,
     gb: f64,
     steps: usize,
     chain_steps: usize,
 ) -> (ops_oc::exec::Metrics, bool) {
     match app {
-        "cloverleaf2d" => bench_support::run_cl2d_cell(p, tune, trace, 8, 6144, gb, steps, 0),
-        "cloverleaf3d" => {
-            bench_support::run_cl3d_cell(p, tune, trace, [8, 8, 6144], gb, steps, 0)
-        }
-        "opensbli" => {
-            bench_support::run_sbli_tall_cell(p, tune, trace, chain_steps, gb, steps.max(1))
-        }
+        "cloverleaf2d" => bench_support::run_cl2d_cfg(cfg, trace, 8, 6144, gb, steps, 0),
+        "cloverleaf3d" => bench_support::run_cl3d_cfg(cfg, trace, [8, 8, 6144], gb, steps, 0),
+        "opensbli" => bench_support::run_sbli_tall_cfg(cfg, trace, chain_steps, gb, steps.max(1)),
         other => {
             eprintln!("unknown app {other:?} (cloverleaf2d|cloverleaf3d|opensbli)");
             exit(2);
         }
     }
+}
+
+fn list_platforms() {
+    println!("preset memory topologies (run with --platform tiers:<name>):");
+    println!();
+    for t in ops_oc::topology::presets() {
+        let name = t.name.clone().unwrap_or_default();
+        println!("  {name}");
+        for (i, tier) in t.tiers().iter().enumerate() {
+            let cap = match tier.capacity_bytes {
+                None => "unbounded".to_string(),
+                Some(c) => format!("{:.1} GiB", c as f64 / (1u64 << 30) as f64),
+            };
+            let link = if i > 0 {
+                let l = t.link(i - 1);
+                format!("   link: {} GB/s, {} s latency", l.bw_gbs, l.latency_s)
+            } else {
+                String::new()
+            };
+            println!(
+                "    tier {i}: {:<8} {:>12}  {:>7.1} GB/s{link}",
+                tier.name, cap, tier.bw_gbs
+            );
+        }
+        println!("    spec : {}", t.spec_full());
+        println!();
+    }
+    println!("custom stacks: tiers:name=cap@bw[~lat]+name=cap@bw[~lat]+…");
+    println!("  fastest tier first; cap = integer with k|m|g|t (binary) or inf");
+    println!("  (last tier only); bw in GB/s; ~lat in seconds for the link");
+    println!("  into the tier above (default 0.00001). Example:");
+    println!("    tiers:hbm=16g@509.7+host=512g@11~0.00001+nvme=4t@6~0.00002");
+    println!("  Options: append :cyclic, :prefetch, :tuned and/or the");
+    println!("  :xN[:peer|:nvlink|:ib][:1d|:2d][:no-overlap] sharding suffix.");
+    println!();
+    println!("legacy platform heads map onto these preset *stacks* (Platform::topology):");
+    println!("  knl-cache[-tiled] -> knl     gpu-explicit:pcie  -> gpu-explicit-pcie");
+    println!("  gpu-unified:link  -> unified-<link>   gpu-explicit:nvlink -> gpu-explicit-nvlink");
+    println!("  NOTE: running tiers:gpu-explicit-* is bit-exact with the legacy engine;");
+    println!("  tiers:knl / tiers:unified-* describe those stacks but execute on the");
+    println!("  generic explicit-streaming engine (no MCDRAM cache / page-fault model)");
+    println!("  with the app's GPU compute calibration — use the legacy heads for those.");
 }
 
 fn main() {
@@ -214,14 +257,19 @@ fn main() {
             println!("        [--trace PATH]   (Chrome-trace JSON of the engine timeline)");
             println!("  sweep --app A --platform P [--tune] [--json]  (problem-size sweep)");
             println!("  list                                          (apps + platform specs)");
+            println!("  list-platforms        (preset topology table + tiers: grammar)");
         }
         "list" => {
             println!("apps      : cloverleaf2d, cloverleaf3d, opensbli");
             println!("platforms : knl-flat-ddr4, knl-flat-mcdram, knl-cache, knl-cache-tiled,");
             println!("            gpu-baseline[:link], gpu-explicit[:link][:cyclic][:prefetch],");
             println!("            gpu-unified[:link][:tiled][:prefetch]   link=pcie|nvlink");
+            println!("topologies: tiers:<preset|stack>[:cyclic][:prefetch] — declarative");
+            println!("            N-tier stacks on the generic engine; a three-tier");
+            println!("            hbm+host+nvme stack streams problems larger than host");
+            println!("            DRAM (`list-platforms` prints presets and grammar)");
             println!("sharding  : append :xN [:peer|:nvlink|:ib] [:1d|:2d] [:no-overlap]");
-            println!("            to knl-cache-tiled / gpu-explicit / gpu-unified,");
+            println!("            to knl-cache-tiled / gpu-explicit / gpu-unified / tiers:,");
             println!("            or pass --ranks N (interconnect defaults to the host link)");
             println!("tuning    : append :tuned (or pass --tune / --tune-budget E) on any");
             println!("            platform with a tile plan; plans never model slower than");
@@ -230,25 +278,26 @@ fn main() {
             println!("            API — chain analysis is computed once per shape and");
             println!("            reused (--json: analysis_builds / analysis_reuse_hits)");
             println!("timelines : every engine schedules on the exec::timeline event");
-            println!("            graph; --json reports bound/util_* attribution and");
-            println!("            `run --trace t.json` exports the full event timeline");
+            println!("            graph; --json reports bound/util_* attribution (plus");
+            println!("            util_tier_* per tier) and `run --trace t.json` exports");
+            println!("            the full event timeline");
         }
+        "list-platforms" => list_platforms(),
         "run" => {
-            let (platform, tune) = parse_platform_or_exit(&a);
+            let cfg = config_or_exit(&a);
             if !a.json {
                 println!(
                     "running {} on {}{} at {:.0} GB modelled ({} steps)\n",
                     a.app,
-                    platform.label(),
-                    if tune.is_some() { " [tuned]" } else { "" },
+                    cfg.label(),
+                    if cfg.tune.is_some() { " [tuned]" } else { "" },
                     a.size_gb,
                     a.steps
                 );
             }
             let (m, oom) = run_cell(
                 &a.app,
-                platform,
-                tune,
+                &cfg,
                 a.trace.is_some(),
                 a.size_gb,
                 a.steps,
@@ -268,11 +317,19 @@ fn main() {
             if a.json {
                 println!(
                     "{}",
-                    json_record(&a.app, &platform.label(), platform.ranks(), a.size_gb, &m, oom)
+                    json_record(
+                        &a.app,
+                        &cfg.label(),
+                        cfg.ranks(),
+                        a.size_gb,
+                        &cfg.topology(),
+                        &m,
+                        oom
+                    )
                 );
             } else {
                 print_summary(
-                    &format!("{} / {}", a.app, platform.label()),
+                    &format!("{} / {}", a.app, cfg.label()),
                     (a.size_gb * 1e9) as u64,
                     &m,
                     oom,
@@ -284,30 +341,23 @@ fn main() {
                 eprintln!("--trace applies to `run` (one cell, one trace file)");
                 exit(2);
             }
-            let (platform, tune) = parse_platform_or_exit(&a);
+            let cfg = config_or_exit(&a);
             let mut fig = Figure::new(
                 &format!(
                     "{} on {}{}",
                     a.app,
-                    platform.label(),
-                    if tune.is_some() { " [tuned]" } else { "" }
+                    cfg.label(),
+                    if cfg.tune.is_some() { " [tuned]" } else { "" }
                 ),
                 "effective GB/s (modelled)",
             );
-            let s = fig.add_series(&platform.label());
+            let s = fig.add_series(&cfg.label());
             let mut records = Vec::new();
+            let (label, ranks, topo) = (cfg.label(), cfg.ranks(), cfg.topology());
             for gb in bench_support::KNL_SIZES_GB {
-                let (m, oom) =
-                    run_cell(&a.app, platform, tune, false, gb, a.steps, a.chain_steps);
+                let (m, oom) = run_cell(&a.app, &cfg, false, gb, a.steps, a.chain_steps);
                 if a.json {
-                    records.push(json_record(
-                        &a.app,
-                        &platform.label(),
-                        platform.ranks(),
-                        gb,
-                        &m,
-                        oom,
-                    ));
+                    records.push(json_record(&a.app, &label, ranks, gb, &topo, &m, oom));
                 }
                 fig.push(s, gb, (!oom).then(|| m.effective_bandwidth_gbs()));
             }

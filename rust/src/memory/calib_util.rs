@@ -8,6 +8,12 @@
 use crate::exec::World;
 use crate::ops::LoopInst;
 
+/// One binary gibibyte — the unit the paper's capacity figures use
+/// ("16 GB" MCDRAM/HBM are 16 GiB parts).
+pub const GIB: u64 = 1 << 30;
+/// One decimal gigabyte — the unit of every bandwidth figure (GB/s).
+pub const GB: f64 = 1e9;
+
 /// Normalisation that pins a chain's byte-weighted average bandwidth to
 /// the engine's app-calibrated baseline: `Σ B / Σ (B/e)`. Relative
 /// per-kernel efficiencies still differentiate kernels (e.g. OpenSBLI's

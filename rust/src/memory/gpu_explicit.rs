@@ -24,7 +24,7 @@ use crate::tiling::plan::{PlanSource, TilePlan};
 
 /// §4.1 optimisation switches (read-only/write-first skipping is always
 /// on, as in the paper's evaluation).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GpuOpts {
     /// Skip downloading write-first (temporary) data during cyclic phases.
     pub cyclic: bool,
@@ -237,7 +237,7 @@ impl Engine for GpuExplicitEngine {
         // Tile 0's upload, minus any speculative prefetch from the
         // previous chain.
         let tr0 = tile_traffic(&plan, 0, world.datasets, &skip_upload, &skip_download);
-        let mut up_time = self.link.time_s(tr0.upload);
+        let mut up_time = self.link.spec().time_s(tr0.upload);
         if self.opts.prefetch && self.prefetch_credit > 0.0 {
             let credit = self.prefetch_credit.min(up_time);
             up_time -= credit;
@@ -270,7 +270,13 @@ impl Engine for GpuExplicitEngine {
                     } else {
                         String::new()
                     };
-                    tl.push(s1, EventKind::Upload, &lbl, self.link.time_s(trn.upload), trn.upload);
+                    tl.push(
+                        s1,
+                        EventKind::Upload,
+                        &lbl,
+                        self.link.spec().time_s(trn.upload),
+                        trn.upload,
+                    );
                 }
                 world.metrics.h2d_bytes += trn.upload;
             }
@@ -315,7 +321,7 @@ impl Engine for GpuExplicitEngine {
                     s2,
                     EventKind::Download,
                     &label("tile"),
-                    self.link.time_s(tr.download),
+                    self.link.spec().time_s(tr.download),
                     tr.download,
                 );
             }
@@ -329,7 +335,8 @@ impl Engine for GpuExplicitEngine {
         // exact; the paper uploads any missing pieces on chain start.
         if self.opts.prefetch {
             self.prefetch_credit = last_tile_compute;
-            self.speculative_bytes += tr0.upload.min((last_tile_compute * self.link.bw_gbs() * GB) as u64);
+            self.speculative_bytes +=
+                tr0.upload.min((last_tile_compute * self.link.spec().bw_gbs * GB) as u64);
         } else {
             self.prefetch_credit = 0.0;
         }

@@ -7,8 +7,9 @@
 //! against the paper's figures in EXPERIMENTS.md.
 
 
-pub const GIB: u64 = 1 << 30;
-pub const GB: f64 = 1e9;
+// The shared unit constants live with the other calibration helpers in
+// [`super::calib_util`]; re-exported here for compatibility.
+pub use super::calib_util::{GB, GIB};
 
 /// Knights Landing (Xeon Phi x200 7210) calibration, §5.2.
 #[derive(Debug, Clone)]
@@ -43,6 +44,14 @@ impl Default for KnlCalib {
 }
 
 /// Interconnect between host and device memory.
+///
+/// A thin shim over [`crate::topology::LinkSpec`]: the two calibrated
+/// host links are [`LinkSpec::PCIE_HOST`] and [`LinkSpec::NVLINK_HOST`]
+/// — this enum survives as the compact spec-token form (`pcie` /
+/// `nvlink`) the legacy `Platform` variants carry.
+///
+/// [`LinkSpec::PCIE_HOST`]: crate::topology::LinkSpec::PCIE_HOST
+/// [`LinkSpec::NVLINK_HOST`]: crate::topology::LinkSpec::NVLINK_HOST
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Link {
     /// PCIe gen3 x16 — the paper measures ~11 GB/s achieved throughput.
@@ -52,29 +61,30 @@ pub enum Link {
 }
 
 impl Link {
-    /// Achieved bandwidth per direction, GB/s (paper §5.3).
-    pub fn bw_gbs(self) -> f64 {
+    /// The unified link description this variant stands for.
+    pub fn spec(self) -> crate::topology::LinkSpec {
         match self {
-            Link::PciE => 11.0,
-            Link::NvLink => 30.0,
+            Link::PciE => crate::topology::LinkSpec::PCIE_HOST,
+            Link::NvLink => crate::topology::LinkSpec::NVLINK_HOST,
         }
+    }
+
+    /// Achieved bandwidth per direction, GB/s (paper §5.3).
+    #[deprecated(since = "0.4.0", note = "use Link::spec().bw_gbs (topology::LinkSpec)")]
+    pub fn bw_gbs(self) -> f64 {
+        self.spec().bw_gbs
     }
 
     /// Per-transfer launch latency, seconds.
+    #[deprecated(since = "0.4.0", note = "use Link::spec().latency_s (topology::LinkSpec)")]
     pub fn latency_s(self) -> f64 {
-        match self {
-            Link::PciE => 10e-6,
-            Link::NvLink => 8e-6,
-        }
+        self.spec().latency_s
     }
 
     /// Time to move `bytes` over the link.
+    #[deprecated(since = "0.4.0", note = "use Link::spec().time_s (topology::LinkSpec)")]
     pub fn time_s(self, bytes: u64) -> f64 {
-        if bytes == 0 {
-            0.0
-        } else {
-            self.latency_s() + bytes as f64 / (self.bw_gbs() * GB)
-        }
+        self.spec().time_s(bytes)
     }
 
     pub fn name(self) -> &'static str {
@@ -183,9 +193,17 @@ mod tests {
 
     #[test]
     fn link_time_includes_latency() {
-        let t = Link::PciE.time_s(11_000_000_000);
+        let t = Link::PciE.spec().time_s(11_000_000_000);
         assert!((t - (1.0 + 10e-6)).abs() < 1e-9);
-        assert_eq!(Link::PciE.time_s(0), 0.0);
+        assert_eq!(Link::PciE.spec().time_s(0), 0.0);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_link_shims_delegate_to_linkspec() {
+        assert_eq!(Link::PciE.bw_gbs(), Link::PciE.spec().bw_gbs);
+        assert_eq!(Link::NvLink.latency_s(), Link::NvLink.spec().latency_s);
+        assert_eq!(Link::NvLink.time_s(1 << 20), Link::NvLink.spec().time_s(1 << 20));
     }
 
     #[test]
@@ -195,6 +213,6 @@ mod tests {
         assert!((k.bw_ddr4 - 60.8).abs() < 1e-12);
         let g = GpuCalib::default();
         assert!((g.bw_device - 509.7).abs() < 1e-12);
-        assert!(Link::NvLink.bw_gbs() > Link::PciE.bw_gbs());
+        assert!(Link::NvLink.spec().bw_gbs > Link::PciE.spec().bw_gbs);
     }
 }

@@ -8,18 +8,20 @@
 //! | [`KnlEngine`] | KNL MCDRAM cache mode, with/without tiling (§5.2) |
 //! | [`GpuExplicitEngine`] | explicit 3-slot streaming, Algorithm 1 (§4, §5.3) |
 //! | [`UnifiedEngine`] | CUDA unified memory ± tiling ± prefetch (§5.4) |
+//! | [`TieredEngine`] | Algorithm 1 recursively over any declarative [`crate::topology::Topology`] — two-tier GPU stacks reproduce [`GpuExplicitEngine`] bit-exactly, deeper stacks stream past host DRAM |
 //!
 //! All are calibrated from the paper's own measured microbenchmarks
 //! ([`hierarchy`]); everything else is emergent behaviour of the
 //! simulated system.
 
 pub mod cache_sim;
-pub(crate) mod calib_util;
+pub mod calib_util;
 pub mod gpu_explicit;
 pub mod halo;
 pub mod hierarchy;
 pub mod knl;
 pub mod plain;
+pub mod tiered;
 pub mod unified;
 
 pub use cache_sim::{AccessResult, AddressMap, CacheSim};
@@ -28,4 +30,5 @@ pub use halo::HaloModel;
 pub use hierarchy::{AppCalib, GpuCalib, KnlCalib, Link, UnifiedCalib};
 pub use knl::KnlEngine;
 pub use plain::PlainEngine;
+pub use tiered::TieredEngine;
 pub use unified::UnifiedEngine;

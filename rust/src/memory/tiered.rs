@@ -1,0 +1,832 @@
+//! The generic N-tier out-of-core streaming engine.
+//!
+//! [`TieredEngine`] lowers *any* [`Topology`] onto the discrete-event
+//! timeline by applying the paper's Algorithm-1 tiling **recursively at
+//! every capacity boundary**: the chain is tiled to fit slots of the
+//! outermost bounded tier and streamed over that tier's link; inside
+//! each outer tile the restricted sub-chain is tiled again to the next
+//! tier down, and so on until the fastest tier, where the tiles
+//! actually execute. Each boundary gets its own upload/download stream
+//! pair, its own [`PlanSource`] (the auto-tuner injects searched tile
+//! counts at the innermost level), and the §4.1 skip-list data-movement
+//! elision — read-only datasets are never downloaded, write-first never
+//! uploaded, at *every* level.
+//!
+//! For a two-tier topology the recursion degenerates to exactly the
+//! schedule [`super::GpuExplicitEngine`] builds — the same plan, the
+//! same events in the same order, the same float arithmetic — so the
+//! `gpu-explicit-*` presets routed through this engine reproduce the
+//! legacy engine's modelled clocks bit-for-bit
+//! (`tests/tiling_equivalence.rs` pins this). A three-tier
+//! HBM→host→NVMe stack models problems larger than *host* DRAM: the
+//! paper's "beyond 16 GB", extended to "beyond DRAM".
+//!
+//! Data lives in the **fastest tier that holds the whole chain** —
+//! never faster than tier 1, matching the two-tier engines where data
+//! always starts on the host side. Boundaries below the home tier are
+//! inactive: a three-tier HBM→host→NVMe stack behaves *exactly* like
+//! the two-tier machine while the problem fits host DRAM, and only
+//! starts paying the NVMe stream once it no longer does. Every chain
+//! streams its working set down through the active boundaries and
+//! writes results back up, minus whatever the skip lists and
+//! cross-chain prefetch credit elide.
+
+use super::calib_util::{chain_bw_norm, elem_bytes, GB};
+use super::gpu_explicit::{tile_traffic, GpuOpts};
+use crate::exec::timeline::{EventKind, ResourceId, StreamClass, Timeline};
+use crate::exec::{Engine, World};
+use crate::ops::LoopInst;
+use crate::tiling::analysis::ChainAnalysis;
+use crate::tiling::plan::{plan_auto_with, plan_chain_with, PlanSource, TilePlan};
+use crate::topology::Topology;
+use std::sync::Arc;
+
+/// The generic tiered streaming engine.
+pub struct TieredEngine {
+    /// The memory stack this engine schedules against.
+    pub topo: Topology,
+    /// Calibrated achieved compute bandwidth of the modelled device,
+    /// GB/s (the per-app §5.1 baseline; NVLink presets arrive with the
+    /// §5.3 clock boost already folded in).
+    pub compute_bw_gbs: f64,
+    /// Kernel launch overhead, seconds.
+    pub launch_s: f64,
+    /// §4.1 optimisation switches, applied at every level.
+    pub opts: GpuOpts,
+    /// Per-boundary tile-plan sources, innermost (fastest boundary)
+    /// first. `plans[0]` is where the auto-tuner injects fixed counts;
+    /// everything defaults to [`PlanSource::Auto`].
+    pub plans: Vec<PlanSource>,
+    /// Prefetch credit carried from the previous chain (innermost
+    /// level, as in Algorithm 1).
+    prefetch_credit: f64,
+    /// Bytes speculatively uploaded for the next chain (diagnostics).
+    pub speculative_bytes: u64,
+}
+
+/// Per-chain scheduling state threaded through the level recursion.
+struct SchedState {
+    /// Unspent prefetch credit (applies to the chain's very first
+    /// innermost upload only).
+    credit: f64,
+    /// Whether that first innermost upload happened yet.
+    first_seen: bool,
+    /// Bytes of the chain's first innermost tile upload — what the next
+    /// chain's speculation can cover.
+    first_upload_bytes: u64,
+    /// Duration of the last executed tile's compute (the prefetch
+    /// overlap window for the next chain).
+    last_tile_compute: f64,
+}
+
+/// Per-chain constants shared by every recursion level.
+struct Ctx<'a> {
+    norm: f64,
+    skip_upload: &'a [bool],
+    skip_download: &'a [bool],
+    tile_dim: usize,
+    tracing: bool,
+    s0: ResourceId,
+    ups: Vec<ResourceId>,
+    downs: Vec<ResourceId>,
+    /// Tracing label prefix per level (empty for two-tier stacks, which
+    /// keep the legacy `tile N` labels).
+    prefix: Vec<String>,
+}
+
+impl TieredEngine {
+    /// Build the engine for a topology. `compute_bw_gbs` is the
+    /// app-calibrated achieved bandwidth, `launch_s` the kernel launch
+    /// overhead; `opts` validates like the legacy GPU engine's.
+    pub fn new(
+        topo: Topology,
+        compute_bw_gbs: f64,
+        launch_s: f64,
+        opts: GpuOpts,
+    ) -> crate::Result<Self> {
+        opts.validate()?;
+        crate::ensure!(
+            compute_bw_gbs.is_finite() && compute_bw_gbs > 0.0,
+            "compute bandwidth must be a positive finite GB/s figure, got {compute_bw_gbs}"
+        );
+        let plans = vec![PlanSource::Auto; topo.num_tiers().saturating_sub(1)];
+        Ok(TieredEngine {
+            topo,
+            compute_bw_gbs,
+            launch_s,
+            opts,
+            plans,
+            prefetch_credit: 0.0,
+            speculative_bytes: 0,
+        })
+    }
+
+    /// Number of capacity boundaries (= streaming levels).
+    pub fn levels(&self) -> usize {
+        self.topo.num_tiers() - 1
+    }
+
+    /// The per-slot byte budget at boundary `level` — an equal share of
+    /// the level's (fast-side) tier with the same headroom the legacy
+    /// engine leaves for OPS bookkeeping. Every tier above the home
+    /// tier is validated finite, so this never falls back in practice.
+    pub fn slot_target(&self, level: usize) -> u64 {
+        slot_target_for(&self.topo, self.opts.slots, level)
+    }
+
+    fn compute_time(&self, l: &LoopInst, bytes: u64, norm: f64) -> f64 {
+        bytes as f64 / (self.compute_bw_gbs * l.bw_efficiency * norm * GB) + self.launch_s
+    }
+}
+
+/// [`TieredEngine::slot_target`] as a free function, so callers that
+/// only need the budget arithmetic (the tuner's heuristic seeding)
+/// don't have to construct a throwaway engine.
+pub fn slot_target_for(topo: &Topology, slots: u8, level: usize) -> u64 {
+    let nslots = slots.clamp(2, 3) as f64;
+    match topo.tier(level).capacity_bytes {
+        Some(cap) => (cap as f64 / nslots * 0.92) as u64,
+        None => u64::MAX,
+    }
+}
+
+impl TieredEngine {
+    /// Build the tile plan for one level. The outermost level (the only
+    /// one whose chain is the full analysed chain) goes through the
+    /// analysis' memoised [`PlanSource::plan_analyzed`] — the exact
+    /// call, fallback included, the legacy engine makes — while inner
+    /// levels plan their restricted sub-chains directly, reusing the
+    /// parent analysis' tiled dimension and skew shifts.
+    #[allow(clippy::too_many_arguments)]
+    fn level_plan(
+        &self,
+        level: usize,
+        chain: &[LoopInst],
+        shifts: &[isize],
+        tile_dim: usize,
+        analysis: Option<&ChainAnalysis>,
+        world: &World<'_>,
+    ) -> Arc<TilePlan> {
+        let src = self.plans.get(level).copied().unwrap_or(PlanSource::Auto);
+        let target = self.slot_target(level);
+        match analysis {
+            Some(a) => {
+                let mut plan =
+                    src.plan_analyzed(chain, world.datasets, world.stencils, target, a);
+                if matches!(src, PlanSource::Fixed(_))
+                    && plan.max_footprint_bytes(world.datasets) > target
+                {
+                    // A fixed count must honour the slot-capacity
+                    // contract; over-budget requests fall back to auto
+                    // sizing (the tuner can never win by overflowing).
+                    plan = PlanSource::Auto.plan_analyzed(
+                        chain,
+                        world.datasets,
+                        world.stencils,
+                        target,
+                        a,
+                    );
+                }
+                plan
+            }
+            None => {
+                let auto = || {
+                    plan_auto_with(chain, world.datasets, world.stencils, target, tile_dim, shifts)
+                        .unwrap_or_else(|_| {
+                            plan_chain_with(
+                                chain,
+                                world.datasets,
+                                world.stencils,
+                                usize::MAX,
+                                tile_dim,
+                                shifts,
+                            )
+                        })
+                };
+                let built = match src {
+                    PlanSource::Fixed(n) => {
+                        let p = plan_chain_with(
+                            chain,
+                            world.datasets,
+                            world.stencils,
+                            n,
+                            tile_dim,
+                            shifts,
+                        );
+                        if p.max_footprint_bytes(world.datasets) > target {
+                            auto()
+                        } else {
+                            p
+                        }
+                    }
+                    PlanSource::Auto => auto(),
+                };
+                Arc::new(built)
+            }
+        }
+    }
+
+    /// Schedule `chain` at `level`: stream tiles over this boundary's
+    /// link, executing (level 0) or recursing (level > 0) inside each.
+    #[allow(clippy::too_many_arguments)]
+    fn run_level(
+        &self,
+        level: usize,
+        chain: &[LoopInst],
+        shifts: &[isize],
+        analysis: Option<&ChainAnalysis>,
+        world: &mut World<'_>,
+        tl: &mut Timeline,
+        ctx: &Ctx<'_>,
+        st: &mut SchedState,
+    ) {
+        let plan = self.level_plan(level, chain, shifts, ctx.tile_dim, analysis, world);
+        let nt = plan.num_tiles();
+        if level == 0 {
+            world.metrics.tiles += nt as u64;
+        }
+        let su = ctx.ups[level];
+        let sd = ctx.downs[level];
+        let link = self.topo.link(level);
+        let pre = &ctx.prefix[level];
+
+        // ---- stage in the first tile of this (sub-)chain.
+        let tr0 = tile_traffic(&plan, 0, world.datasets, ctx.skip_upload, ctx.skip_download);
+        let mut up_time = link.time_s(tr0.upload);
+        if level == 0 && !st.first_seen {
+            st.first_seen = true;
+            st.first_upload_bytes = tr0.upload;
+            if self.opts.prefetch && st.credit > 0.0 {
+                let credit = st.credit.min(up_time);
+                up_time -= credit;
+                st.credit = 0.0;
+            }
+        }
+        if level == 0 {
+            world.metrics.h2d_bytes += tr0.upload;
+        }
+        if tr0.upload > 0 || up_time > 0.0 {
+            let lbl = if ctx.tracing {
+                format!("{pre}tile 0")
+            } else {
+                String::new()
+            };
+            tl.push(su, EventKind::Upload, &lbl, up_time, tr0.upload);
+        }
+
+        for t in 0..nt {
+            let label = |what: &str| -> String {
+                if ctx.tracing {
+                    format!("{pre}{what} {t}")
+                } else {
+                    String::new()
+                }
+            };
+            // ---- preparation: with 2 slots the upload stream doubles as
+            // the download stream (shared staging slot); then the
+            // consumer of this boundary waits for the staged tile, and
+            // the next tile's upload is issued.
+            if self.opts.slots < 3 {
+                tl.wait(su, sd);
+            }
+            let consumer = if level == 0 { ctx.s0 } else { ctx.ups[level - 1] };
+            tl.wait(consumer, su);
+            if t + 1 < nt {
+                let trn =
+                    tile_traffic(&plan, t + 1, world.datasets, ctx.skip_upload, ctx.skip_download);
+                if trn.upload > 0 {
+                    let lbl = if ctx.tracing {
+                        format!("{pre}tile {}", t + 1)
+                    } else {
+                        String::new()
+                    };
+                    tl.push(su, EventKind::Upload, &lbl, link.time_s(trn.upload), trn.upload);
+                }
+                if level == 0 {
+                    world.metrics.h2d_bytes += trn.upload;
+                }
+            }
+
+            // ---- body: execute on the fastest tier, or recurse one
+            // boundary down with the chain restricted to this tile.
+            if level == 0 {
+                let mut tile_compute = 0.0;
+                let mut tile_bytes_sum = 0u64;
+                for (li, r) in plan.tiles[t].loop_ranges.iter().enumerate() {
+                    let Some(r) = r else { continue };
+                    let l = &chain[li];
+                    world
+                        .exec
+                        .run_loop(l, *r, world.datasets, world.store, world.reds);
+                    let frac = crate::ops::parloop::range_points(r) as f64
+                        / crate::ops::parloop::range_points(&l.range).max(1) as f64;
+                    let bytes = (l.bytes_touched(elem_bytes(world, l)) as f64 * frac) as u64;
+                    let ct = self.compute_time(l, bytes, ctx.norm);
+                    world.metrics.record_loop(&l.name, bytes, ct);
+                    tile_compute += ct;
+                    tile_bytes_sum += bytes;
+                }
+                tl.push(ctx.s0, EventKind::Compute, &label("tile"), tile_compute, tile_bytes_sum);
+                st.last_tile_compute = tile_compute;
+            } else {
+                let mut sub_chain: Vec<LoopInst> = Vec::new();
+                let mut sub_shifts: Vec<isize> = Vec::new();
+                for (li, r) in plan.tiles[t].loop_ranges.iter().enumerate() {
+                    let Some(r) = r else { continue };
+                    let mut l = chain[li].clone();
+                    l.range = *r;
+                    sub_chain.push(l);
+                    sub_shifts.push(shifts[li]);
+                }
+                if !sub_chain.is_empty() {
+                    self.run_level(level - 1, &sub_chain, &sub_shifts, None, world, tl, ctx, st);
+                }
+            }
+
+            // ---- finishing: edge-copy the overlap forward within this
+            // tier, then stream the finished writes back over the link.
+            let finisher = if level == 0 { ctx.s0 } else { ctx.downs[level - 1] };
+            tl.wait(finisher, sd);
+            let tr = tile_traffic(&plan, t, world.datasets, ctx.skip_upload, ctx.skip_download);
+            if tr.edge > 0 {
+                let edge_stream = if level == 0 { ctx.s0 } else { su };
+                tl.push(
+                    edge_stream,
+                    EventKind::EdgeCopy,
+                    &label("edge"),
+                    tr.edge as f64 / (self.topo.tier(level).bw_gbs * GB),
+                    tr.edge,
+                );
+            }
+            if level == 0 {
+                world.metrics.d2d_bytes += tr.edge;
+            }
+            if tr.download > 0 {
+                tl.push(sd, EventKind::Download, &label("tile"), link.time_s(tr.download), tr.download);
+            }
+            if level == 0 {
+                world.metrics.d2h_bytes += tr.download;
+            }
+        }
+    }
+}
+
+impl Engine for TieredEngine {
+    fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, cyclic_phase: bool) {
+        self.run_chain_analyzed(chain, None, world, cyclic_phase);
+    }
+
+    fn run_chain_analyzed(
+        &mut self,
+        chain: &[LoopInst],
+        analysis: Option<&ChainAnalysis>,
+        world: &mut World<'_>,
+        cyclic_phase: bool,
+    ) {
+        world.metrics.chains += 1;
+        let mut local = None;
+        let analysis =
+            ChainAnalysis::resolve(analysis, &mut local, chain, world.datasets, world.stencils);
+        let norm = chain_bw_norm(world, chain);
+        // The chain's home tier: the fastest tier that holds its whole
+        // working set, but never tier 0 (chains always stage into the
+        // fastest tier, as in the two-tier engines). Boundaries at and
+        // below the home tier stay silent, so a three-tier stack is
+        // bit-identical to its two-tier prefix while the problem fits
+        // host DRAM.
+        let mut levels = self.levels().min(1);
+        while levels < self.levels() {
+            match self.topo.tier(levels).capacity_bytes {
+                Some(cap) if analysis.chain_bytes > cap => levels += 1,
+                _ => break,
+            }
+        }
+        let mut tl = Timeline::for_world(world);
+
+        if levels == 0 {
+            // Flat single tier: nothing to stream, one compute event per
+            // loop at the calibrated bandwidth.
+            let s0 = tl.resource("compute", StreamClass::Compute);
+            for l in chain {
+                world
+                    .exec
+                    .run_loop(l, l.range, world.datasets, world.store, world.reds);
+                let bytes = l.bytes_touched(elem_bytes(world, l));
+                let ct = self.compute_time(l, bytes, norm);
+                world.metrics.record_loop(&l.name, bytes, ct);
+                let lbl = if tl.tracing() { l.name.clone() } else { String::new() };
+                tl.push(s0, EventKind::Compute, &lbl, ct, bytes);
+            }
+            world.metrics.absorb_timeline(tl);
+            self.prefetch_credit = 0.0;
+            return;
+        }
+
+        // §4.1 data-movement classification, applied at every level.
+        let nd = world.datasets.len();
+        let mut skip_upload = vec![false; nd];
+        let mut skip_download = vec![false; nd];
+        for (id, info) in &analysis.summary {
+            let d = id.0 as usize;
+            skip_upload[d] = info.skip_upload();
+            skip_download[d] =
+                info.skip_download() || (self.opts.cyclic && cyclic_phase && info.write_first);
+        }
+
+        // Streams: one compute resource plus an upload/download pair per
+        // active boundary. Two-tier stacks keep the legacy
+        // `upload`/`download` names (and therefore the legacy
+        // attribution rows); deeper stacks name streams after the
+        // receiving tier, whether or not every boundary is active for
+        // this chain.
+        let two_tier = self.topo.num_tiers() == 2;
+        let s0 = tl.resource("compute", StreamClass::Compute);
+        let mut ups = Vec::with_capacity(levels);
+        let mut downs = Vec::with_capacity(levels);
+        let mut prefix = Vec::with_capacity(levels);
+        for l in 0..levels {
+            let (un, dn, pre) = if two_tier {
+                ("upload".to_string(), "download".to_string(), String::new())
+            } else {
+                let tn = &self.topo.tier(l).name;
+                (
+                    format!("{tn}:upload"),
+                    format!("{tn}:download"),
+                    format!("{tn} "),
+                )
+            };
+            ups.push(tl.resource(&un, StreamClass::Upload));
+            downs.push(tl.resource(&dn, StreamClass::Download));
+            prefix.push(pre);
+        }
+        let ctx = Ctx {
+            norm,
+            skip_upload: &skip_upload,
+            skip_download: &skip_download,
+            tile_dim: analysis.tile_dim,
+            tracing: tl.tracing(),
+            s0,
+            ups,
+            downs,
+            prefix,
+        };
+        let mut st = SchedState {
+            credit: self.prefetch_credit,
+            first_seen: false,
+            first_upload_bytes: 0,
+            last_tile_compute: 0.0,
+        };
+        self.run_level(
+            levels - 1,
+            chain,
+            &analysis.shifts,
+            Some(analysis),
+            world,
+            &mut tl,
+            &ctx,
+            &mut st,
+        );
+        world.metrics.absorb_timeline(tl);
+
+        // Cross-chain speculation: the next chain's first innermost
+        // upload overlaps this chain's last tile execution (§4.1).
+        if self.opts.prefetch {
+            self.prefetch_credit = st.last_tile_compute;
+            self.speculative_bytes += st
+                .first_upload_bytes
+                .min((st.last_tile_compute * self.topo.link(0).bw_gbs * GB) as u64);
+        } else {
+            self.prefetch_credit = 0.0;
+        }
+    }
+
+    fn reset_transient(&mut self) {
+        self.prefetch_credit = 0.0;
+        self.speculative_bytes = 0;
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "Tiered {} [{} tiers] {}{}",
+            self.topo.label(),
+            self.topo.num_tiers(),
+            if self.opts.cyclic { "Cyclic" } else { "NoCyclic" },
+            if self.opts.prefetch { " Prefetch" } else { " NoPrefetch" },
+        )
+    }
+
+    /// The problem must fit the home (slowest) tier — everything above
+    /// it is streamed through.
+    fn fits(&self, problem_bytes: u64) -> bool {
+        self.topo.fits(problem_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{Executor, Metrics, NativeExecutor};
+    use crate::memory::hierarchy::{AppCalib, GpuCalib, Link};
+    use crate::memory::GpuExplicitEngine;
+    use crate::ops::kernel::kernel;
+    use crate::ops::stencil::{shapes, StencilId};
+    use crate::ops::*;
+    use crate::topology::{LinkSpec, Tier};
+
+    const APP: AppCalib = AppCalib::CLOVERLEAF_2D;
+
+    /// Chain: temp = f(state); state' = g(temp, state) — a read-only
+    /// coords field, a write-first temp and a read-write state (the
+    /// same shape the GPU-explicit engine tests use).
+    fn fixture(ny: usize) -> (Vec<Dataset>, Vec<Stencil>, DataStore, Vec<LoopInst>) {
+        let mut datasets = vec![];
+        let mut store = DataStore::new();
+        for (i, name) in ["state", "temp", "coords"].iter().enumerate() {
+            let d = Dataset {
+                id: DatasetId(i as u32),
+                block: BlockId(0),
+                name: name.to_string(),
+                size: [64, ny, 1],
+                halo_lo: [2, 2, 0],
+                halo_hi: [2, 2, 0],
+                elem_bytes: 8,
+            };
+            store.alloc(&d);
+            datasets.push(d);
+        }
+        let stencils = vec![
+            Stencil {
+                id: StencilId(0),
+                name: "pt".into(),
+                points: shapes::point(),
+            },
+            Stencil {
+                id: StencilId(1),
+                name: "star".into(),
+                points: shapes::star2d(1),
+            },
+        ];
+        let range: Range3 = [(0, 64), (0, ny as isize), (0, 1)];
+        let chain = vec![
+            LoopInst {
+                name: "mk_temp".into(),
+                block: BlockId(0),
+                range,
+                args: vec![
+                    Arg::dat(DatasetId(0), StencilId(1), Access::Read),
+                    Arg::dat(DatasetId(2), StencilId(0), Access::Read),
+                    Arg::dat(DatasetId(1), StencilId(0), Access::Write),
+                ],
+                kernel: kernel(|c| {
+                    let v = c.r(0, -1, 0) + c.r(0, 1, 0) + c.r(1, 0, 0);
+                    c.w(2, 0, 0, v * 0.25);
+                }),
+                seq: 0,
+                bw_efficiency: 1.0,
+            },
+            LoopInst {
+                name: "update".into(),
+                block: BlockId(0),
+                range,
+                args: vec![
+                    Arg::dat(DatasetId(1), StencilId(1), Access::Read),
+                    Arg::dat(DatasetId(0), StencilId(0), Access::ReadWrite),
+                ],
+                kernel: kernel(|c| {
+                    let v = c.r(0, 0, -1) + c.r(0, 0, 1);
+                    let s = c.r(1, 0, 0);
+                    c.w(1, 0, 0, s + 0.1 * v);
+                }),
+                seq: 1,
+                bw_efficiency: 1.0,
+            },
+        ];
+        (datasets, stencils, store, chain)
+    }
+
+    const SMALL_HBM: u64 = 256 << 10;
+
+    fn gpu_two_tier(hbm: u64, link: Link) -> Topology {
+        let g = GpuCalib::default();
+        Topology::new(
+            None,
+            vec![
+                Tier::new("hbm", Some(hbm), g.bw_device),
+                Tier::new("host", None, link.spec().bw_gbs),
+            ],
+            vec![link.spec()],
+        )
+        .unwrap()
+    }
+
+    fn run_engine(e: &mut dyn Engine, chains: usize, cyclic: bool) -> (Metrics, Vec<Vec<f64>>) {
+        let (datasets, stencils, mut store, chain) = fixture(512);
+        let mut reds = vec![];
+        let mut metrics = Metrics::new();
+        let mut exec = NativeExecutor::new();
+        for _ in 0..chains {
+            let mut world = World {
+                datasets: &datasets,
+                stencils: &stencils,
+                store: &mut store,
+                reds: &mut reds,
+                metrics: &mut metrics,
+                exec: &mut exec,
+            };
+            e.run_chain(&chain, &mut world, cyclic);
+        }
+        let bufs = datasets.iter().map(|d| store.buf(d.id).to_vec()).collect();
+        (metrics, bufs)
+    }
+
+    #[test]
+    fn two_tier_is_bitexact_with_gpu_explicit() {
+        for link in [Link::PciE, Link::NvLink] {
+            for cyclic in [false, true] {
+                for prefetch in [false, true] {
+                    for slots in [2u8, 3] {
+                        let opts = GpuOpts {
+                            cyclic,
+                            prefetch,
+                            slots,
+                        };
+                        let calib = GpuCalib {
+                            hbm_bytes: SMALL_HBM,
+                            ..GpuCalib::default()
+                        };
+                        let boost = if link == Link::NvLink {
+                            calib.nvlink_clock_boost
+                        } else {
+                            1.0
+                        };
+                        let mut legacy =
+                            GpuExplicitEngine::new(calib.clone(), APP, link, opts).unwrap();
+                        let mut tiered = TieredEngine::new(
+                            gpu_two_tier(SMALL_HBM, link),
+                            APP.gpu * boost,
+                            calib.launch_s,
+                            opts,
+                        )
+                        .unwrap();
+                        let (ml, dl) = run_engine(&mut legacy, 3, true);
+                        let (mt, dt) = run_engine(&mut tiered, 3, true);
+                        let tag = format!("{link:?} cyclic={cyclic} prefetch={prefetch} slots={slots}");
+                        assert_eq!(dl, dt, "numerics differ: {tag}");
+                        assert_eq!(ml.elapsed_s, mt.elapsed_s, "clock differs: {tag}");
+                        assert_eq!(ml.tiles, mt.tiles, "{tag}");
+                        assert_eq!(ml.h2d_bytes, mt.h2d_bytes, "{tag}");
+                        assert_eq!(ml.d2h_bytes, mt.d2h_bytes, "{tag}");
+                        assert_eq!(ml.d2d_bytes, mt.d2d_bytes, "{tag}");
+                        assert_eq!(ml.loop_time_s, mt.loop_time_s, "{tag}");
+                        // the attribution ledger matches row for row
+                        for (k, v) in &ml.per_resource {
+                            let w = &mt.per_resource[k];
+                            assert_eq!(v.busy_s, w.busy_s, "{tag} stream {k}");
+                            assert_eq!(v.bytes, w.bytes, "{tag} stream {k}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn three_tier(hbm: u64, host: u64) -> Topology {
+        Topology::new(
+            None,
+            vec![
+                Tier::new("hbm", Some(hbm), 509.7),
+                Tier::new("host", Some(host), 11.0),
+                Tier::new("nvme", None, 6.0),
+            ],
+            vec![LinkSpec::PCIE_HOST, LinkSpec::new(6.0, 20e-6)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn three_tier_numerics_match_untiled_reference() {
+        let (datasets, stencils, _, chain) = fixture(512);
+        let mut store_ref = DataStore::new();
+        datasets.iter().for_each(|d| store_ref.alloc(d));
+        let mut reds_ref: Vec<Reduction> = vec![];
+        let mut exec_ref = NativeExecutor::new();
+        for l in &chain {
+            exec_ref.run_loop(l, l.range, &datasets, &mut store_ref, &mut reds_ref);
+        }
+        let mut e =
+            TieredEngine::new(three_tier(64 << 10, 512 << 10), APP.gpu, 7e-6, GpuOpts::default())
+                .unwrap();
+        let (m, bufs) = run_engine(&mut e, 1, true);
+        for (d, buf) in datasets.iter().zip(&bufs) {
+            assert_eq!(store_ref.buf(d.id), &buf[..], "dataset {}", d.name);
+        }
+        assert!(m.tiles >= 3, "expected several innermost tiles, got {}", m.tiles);
+        // every boundary has its own named streams with real traffic
+        for s in ["hbm:upload", "hbm:download", "host:upload", "host:download"] {
+            assert!(m.per_resource.contains_key(s), "missing stream {s}");
+        }
+        assert!(m.per_resource["hbm:upload"].bytes > 0);
+        assert!(m.per_resource["host:upload"].bytes > 0);
+        assert_eq!(m.per_resource["hbm:upload"].bytes, m.h2d_bytes);
+    }
+
+    #[test]
+    fn third_tier_costs_wall_clock() {
+        let opts = GpuOpts {
+            cyclic: true,
+            prefetch: false,
+            slots: 3,
+        };
+        let mut two =
+            TieredEngine::new(gpu_two_tier(64 << 10, Link::PciE), APP.gpu, 7e-6, opts).unwrap();
+        let mut three =
+            TieredEngine::new(three_tier(64 << 10, 512 << 10), APP.gpu, 7e-6, opts).unwrap();
+        let (m2, d2) = run_engine(&mut two, 2, true);
+        let (m3, d3) = run_engine(&mut three, 2, true);
+        assert_eq!(d2, d3, "an extra tier must not change numerics");
+        assert!(
+            m3.elapsed_s > m2.elapsed_s,
+            "streaming through a third tier must cost time: {} !> {}",
+            m3.elapsed_s,
+            m2.elapsed_s
+        );
+    }
+
+    #[test]
+    fn single_tier_topology_computes_without_streaming() {
+        let topo = Topology::new(None, vec![Tier::new("dram", None, 60.8)], vec![]).unwrap();
+        let mut e = TieredEngine::new(topo, 50.0, 0.0, GpuOpts::default()).unwrap();
+        let (m, _) = run_engine(&mut e, 1, false);
+        assert_eq!(m.h2d_bytes + m.d2h_bytes + m.d2d_bytes, 0);
+        assert!(m.elapsed_s > 0.0);
+        assert_eq!(m.bound(), "compute");
+        assert!(e.fits(u64::MAX));
+    }
+
+    #[test]
+    fn fits_honours_the_home_tier() {
+        let topo = Topology::new(
+            None,
+            vec![
+                Tier::new("hbm", Some(1 << 20), 500.0),
+                Tier::new("nvme", Some(1 << 30), 6.0),
+            ],
+            vec![LinkSpec::new(6.0, 20e-6)],
+        )
+        .unwrap();
+        let e = TieredEngine::new(topo, APP.gpu, 7e-6, GpuOpts::default()).unwrap();
+        assert!(e.fits(1 << 30));
+        assert!(!e.fits((1 << 30) + 1));
+    }
+
+    #[test]
+    fn reset_transient_clears_prefetch_credit() {
+        let opts = GpuOpts::default();
+        let run_pair = |reset: bool| -> f64 {
+            let (datasets, stencils, mut store, chain) = fixture(512);
+            let mut reds = vec![];
+            let mut metrics = Metrics::new();
+            let mut exec = NativeExecutor::new();
+            let mut e =
+                TieredEngine::new(gpu_two_tier(SMALL_HBM, Link::PciE), APP.gpu, 7e-6, opts)
+                    .unwrap();
+            for i in 0..2 {
+                if reset && i == 1 {
+                    e.reset_transient();
+                }
+                let mut world = World {
+                    datasets: &datasets,
+                    stencils: &stencils,
+                    store: &mut store,
+                    reds: &mut reds,
+                    metrics: &mut metrics,
+                    exec: &mut exec,
+                };
+                e.run_chain(&chain, &mut world, true);
+            }
+            metrics.elapsed_s
+        };
+        let warm = run_pair(false);
+        let cold = run_pair(true);
+        assert!(cold > warm, "reset must lose the prefetch overlap: {cold} !> {warm}");
+    }
+
+    #[test]
+    fn tuner_plan_seam_works_at_the_innermost_level() {
+        let run_src = |src: PlanSource| {
+            let mut e =
+                TieredEngine::new(gpu_two_tier(SMALL_HBM, Link::PciE), APP.gpu, 7e-6, GpuOpts::default())
+                    .unwrap();
+            e.plans[0] = src;
+            run_engine(&mut e, 1, true).0
+        };
+        let auto = run_src(PlanSource::Auto);
+        let over = run_src(PlanSource::Fixed(1));
+        assert_eq!(
+            over.tiles, auto.tiles,
+            "an over-capacity fixed count must fall back to auto sizing"
+        );
+        let ok = run_src(PlanSource::Fixed(auto.tiles as usize + 2));
+        assert_eq!(ok.tiles, auto.tiles + 2, "feasible fixed counts are honoured");
+    }
+}

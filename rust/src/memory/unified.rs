@@ -110,7 +110,7 @@ impl UnifiedEngine {
         let per_chunk = self
             .um
             .fault_latency_s
-            .max(self.um.fault_chunk_bytes as f64 / (self.link.bw_gbs() * GB));
+            .max(self.um.fault_chunk_bytes as f64 / (self.link.spec().bw_gbs * GB));
         chunks * per_chunk
     }
 
@@ -252,7 +252,7 @@ impl Engine for UnifiedEngine {
                 } else {
                     self.um.prefetch_eff
                 };
-                let t_pf = mig_bytes as f64 / (self.link.bw_gbs() * eff * GB);
+                let t_pf = mig_bytes as f64 / (self.link.spec().bw_gbs * eff * GB);
                 let overlap = prev_tile_compute * self.um.prefetch_overlap;
                 stall = (t_pf - overlap).max(0.0);
                 if tile_faults > 0 {

@@ -89,9 +89,18 @@ impl Session {
     /// ([`Engine::reset_transient`]): a pre-used GPU streaming engine
     /// must not apply prefetch credit earned under chains this session
     /// never ran.
+    ///
+    /// The metrics' per-resource attribution ledger is keyed by the
+    /// outgoing engine's stream names; carrying it across the rebind
+    /// would keep reporting the *old* engine's `util_*` classes (e.g. a
+    /// stale `upload` row after a streaming→plain rebind, or the
+    /// reverse: a plain→tiered rebind diluting the new per-tier rows).
+    /// The ledger restarts empty at the rebind boundary, so `bound()` /
+    /// `stream_util` describe the engine that is actually bound.
     pub fn rebind_engine(&mut self, mut engine: Box<dyn Engine>) {
         self.flush_dynamic();
         engine.reset_transient();
+        let _ = self.metrics.take_per_resource();
         self.engine = engine;
     }
 
@@ -587,6 +596,53 @@ mod tests {
             cold_t,
             "with_engine must not inherit prefetch credit either"
         );
+    }
+
+    #[test]
+    fn rebind_engine_restarts_the_stream_ledger() {
+        use crate::exec::Engine;
+        use crate::memory::{GpuCalib, GpuExplicitEngine, GpuOpts, PlainEngine};
+
+        let (prog, step, _) = fixture();
+        let gpu = || -> Box<dyn Engine> {
+            Box::new(
+                GpuExplicitEngine::new(
+                    GpuCalib {
+                        hbm_bytes: 4 << 10, // force streaming on the 16x16 grid
+                        ..GpuCalib::default()
+                    },
+                    AppCalib::CLOVERLEAF_2D,
+                    Link::PciE,
+                    GpuOpts::default(),
+                )
+                .unwrap(),
+            )
+        };
+        let plain = || -> Box<dyn Engine> { Box::new(PlainEngine::knl_flat_ddr4(50.0)) };
+
+        // Cold reference: the plain engine from the start.
+        let mut cold = Session::with_engine(prog.clone(), plain());
+        cold.replay(step, 2);
+        let cold_keys: Vec<String> = cold.metrics().per_resource.keys().cloned().collect();
+
+        // Streaming first, then rebind to plain: the ledger must not
+        // keep reporting the streaming engine's upload/download rows.
+        let mut s = Session::with_engine(prog.clone(), gpu());
+        s.set_cyclic_phase(true);
+        s.replay(step, 2);
+        assert!(
+            s.metrics().per_resource.contains_key("upload"),
+            "precondition: the streaming engine attributed transfers"
+        );
+        s.rebind_engine(plain());
+        s.replay(step, 2);
+        let keys: Vec<String> = s.metrics().per_resource.keys().cloned().collect();
+        assert_eq!(
+            keys, cold_keys,
+            "rebound session's stream ledger must match a cold session's"
+        );
+        assert!(!s.metrics().per_resource.contains_key("upload"));
+        assert_eq!(s.metrics().bound(), cold.metrics().bound());
     }
 
     #[test]

@@ -1,0 +1,440 @@
+//! Declarative memory-topology descriptions.
+//!
+//! The paper's evaluation hardcodes two-level memory pairings —
+//! MCDRAM/DDR4 on KNL, HBM/host over PCIe or NVLink on the P100 — and
+//! the reproduction's `Platform` enum mirrored that closure: every new
+//! machine needed a new enum variant and a new engine. This module
+//! opens the space up by making the platform *data*:
+//!
+//! * a [`Tier`] is one level of the memory hierarchy — a name, a
+//!   capacity and a streaming bandwidth;
+//! * a [`LinkSpec`] is the edge between two adjacent tiers (achieved
+//!   bandwidth + per-transfer launch latency). It subsumes the two
+//!   previously duplicated interconnect notions,
+//!   [`crate::memory::Link`] (host↔device) and
+//!   [`crate::distributed::Interconnect`] (rank↔rank), both of which
+//!   are now thin shims over the constants here;
+//! * a [`Topology`] is an ordered stack of tiers, fastest first, with
+//!   one link per adjacent pair.
+//!
+//! Topologies come from three places: the [`presets`] that reproduce
+//! the paper's calibrated machines exactly (`knl`,
+//! `gpu-explicit-pcie`, `gpu-explicit-nvlink`, `unified-pcie`,
+//! `unified-nvlink`, `plain`), the compact [`spec`] grammar for custom
+//! stacks (`tiers:hbm=16g@509.7+host=48g@11~0.00001+nvme=inf@6~0.00002`),
+//! and code ([`Topology::new`]). [`Topology::spec`] renders the
+//! canonical spec string, which round-trips through
+//! [`crate::coordinator::Config::parse_spec`].
+//!
+//! The generic [`crate::memory::TieredEngine`] lowers *any* valid
+//! topology onto the discrete-event timeline by applying the paper's
+//! Algorithm-1 tiling recursively at every capacity boundary — so a
+//! three-tier HBM→host→NVMe stack models problems larger than host
+//! DRAM, extending the paper's "beyond 16 GB" to "beyond DRAM".
+
+pub mod presets;
+pub mod spec;
+
+pub use presets::{preset, presets};
+
+use crate::memory::calib_util::GB;
+
+/// Default per-transfer launch latency of a link the spec grammar
+/// leaves unannotated (the paper's measured PCIe launch cost).
+pub const DEFAULT_LINK_LATENCY_S: f64 = 10e-6;
+
+/// One memory tier: a named level of the hierarchy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tier {
+    /// Short identifier (`hbm`, `host`, `nvme`, …). Must be unique
+    /// within a topology and stick to `[A-Za-z0-9_-]` so it survives
+    /// the spec grammar.
+    pub name: String,
+    /// Capacity in bytes; `None` = unbounded. Only the last (slowest)
+    /// tier of a topology may be unbounded — every other tier is a
+    /// capacity boundary the tiler must respect.
+    pub capacity_bytes: Option<u64>,
+    /// Achieved streaming bandwidth, GB/s. For the fastest tier this is
+    /// the device-local copy bandwidth (tile edge copies); for lower
+    /// tiers it is the achieved bandwidth of the link into the tier
+    /// above (the spec grammar derives [`LinkSpec`] edges from it).
+    pub bw_gbs: f64,
+}
+
+impl Tier {
+    pub fn new(name: &str, capacity_bytes: Option<u64>, bw_gbs: f64) -> Self {
+        Tier {
+            name: name.to_string(),
+            capacity_bytes,
+            bw_gbs,
+        }
+    }
+}
+
+/// One interconnect edge: achieved bandwidth plus per-transfer launch
+/// latency. The unified replacement for the duplicated
+/// `memory::hierarchy::Link` / `distributed::interconnect::Interconnect`
+/// calibrations — both enums now delegate here (see the constants).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Achieved bandwidth per direction, GB/s.
+    pub bw_gbs: f64,
+    /// Per-transfer launch latency, seconds.
+    pub latency_s: f64,
+}
+
+impl LinkSpec {
+    pub const fn new(bw_gbs: f64, latency_s: f64) -> Self {
+        LinkSpec { bw_gbs, latency_s }
+    }
+
+    /// PCIe gen3 x16 host link — the paper measures ~11 GB/s achieved.
+    pub const PCIE_HOST: LinkSpec = LinkSpec::new(11.0, 10e-6);
+    /// NVLink 1.0 to a Power8 host — ~30 GB/s achieved.
+    pub const NVLINK_HOST: LinkSpec = LinkSpec::new(30.0, 8e-6);
+    /// PCIe gen3 peer-to-peer between GPUs under one switch.
+    pub const PCIE_PEER: LinkSpec = LinkSpec::new(10.0, 10e-6);
+    /// NVLink 1.0 peer connection.
+    pub const NVLINK_PEER: LinkSpec = LinkSpec::new(35.0, 8e-6);
+    /// Inter-node EDR InfiniBand.
+    pub const INFINIBAND: LinkSpec = LinkSpec::new(12.0, 2e-6);
+
+    /// Time to move `bytes` in one transfer (0 for no bytes — the same
+    /// contract the legacy `Link::time_s` had).
+    pub fn time_s(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            self.latency_s + bytes as f64 / (self.bw_gbs * GB)
+        }
+    }
+}
+
+/// An ordered memory-tier stack, fastest tier first, with one
+/// [`LinkSpec`] per adjacent pair (`links()[i]` connects tier `i` to
+/// tier `i + 1`). Construction validates the stack, so every held
+/// `Topology` is well-formed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    /// Preset name when this topology is one of [`presets`]; `None`
+    /// for custom stacks. Cosmetic — equality of stacks is what
+    /// [`Topology::same_stack`] compares.
+    pub name: Option<String>,
+    tiers: Vec<Tier>,
+    links: Vec<LinkSpec>,
+}
+
+/// Upper bound on tier count — enough for any plausible machine while
+/// keeping degenerate specs (and the recursion depth under
+/// `TieredEngine`) bounded.
+pub const MAX_TIERS: usize = 8;
+
+impl Topology {
+    /// Validate and build a topology. Typed [`crate::errors`] errors
+    /// name the offending tier:
+    ///
+    /// * 1..=[`MAX_TIERS`] tiers, names unique, non-empty and limited
+    ///   to `[A-Za-z0-9_-]`;
+    /// * capacities non-zero; only the last tier may be unbounded;
+    /// * bandwidths finite and positive; link latencies finite, ≥ 0;
+    /// * exactly one link per adjacent tier pair.
+    pub fn new(name: Option<&str>, tiers: Vec<Tier>, links: Vec<LinkSpec>) -> crate::Result<Self> {
+        crate::ensure!(!tiers.is_empty(), "a topology needs at least one tier");
+        crate::ensure!(
+            tiers.len() <= MAX_TIERS,
+            "too many tiers: {} (max {MAX_TIERS})",
+            tiers.len()
+        );
+        crate::ensure!(
+            links.len() + 1 == tiers.len(),
+            "a {}-tier stack needs {} link(s), got {}",
+            tiers.len(),
+            tiers.len() - 1,
+            links.len()
+        );
+        for (i, t) in tiers.iter().enumerate() {
+            crate::ensure!(!t.name.is_empty(), "tier {i} has an empty name");
+            crate::ensure!(
+                t.name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+                "tier name {:?} has characters outside [A-Za-z0-9_-]",
+                t.name
+            );
+            crate::ensure!(
+                tiers[..i].iter().all(|p| p.name != t.name),
+                "duplicate tier name {:?}",
+                t.name
+            );
+            crate::ensure!(
+                t.capacity_bytes != Some(0),
+                "tier {:?}: zero capacity",
+                t.name
+            );
+            crate::ensure!(
+                t.capacity_bytes.is_some() || i + 1 == tiers.len(),
+                "tier {:?} is unbounded but not the last tier (every boundary above \
+                 the home tier must be a finite capacity)",
+                t.name
+            );
+            crate::ensure!(
+                t.bw_gbs.is_finite() && t.bw_gbs > 0.0,
+                "tier {:?}: bandwidth must be a positive finite GB/s figure, got {}",
+                t.name,
+                t.bw_gbs
+            );
+        }
+        for (i, l) in links.iter().enumerate() {
+            crate::ensure!(
+                l.bw_gbs.is_finite() && l.bw_gbs > 0.0,
+                "link {}→{}: bandwidth must be a positive finite GB/s figure, got {}",
+                tiers[i + 1].name,
+                tiers[i].name,
+                l.bw_gbs
+            );
+            crate::ensure!(
+                l.latency_s.is_finite() && l.latency_s >= 0.0,
+                "link {}→{}: latency must be finite and non-negative, got {}",
+                tiers[i + 1].name,
+                tiers[i].name,
+                l.latency_s
+            );
+            // The spec grammar derives a link's bandwidth from the
+            // lower tier's `@bw`; enforcing the same identity here
+            // keeps `Topology::spec()` a faithful description of every
+            // constructible topology (render→parse is exact).
+            crate::ensure!(
+                l.bw_gbs == tiers[i + 1].bw_gbs,
+                "link {}→{}: bandwidth {} must equal tier {:?}'s bandwidth {} (the \
+                 grammar derives links from the lower tier's @bw — set it there)",
+                tiers[i + 1].name,
+                tiers[i].name,
+                l.bw_gbs,
+                tiers[i + 1].name,
+                tiers[i + 1].bw_gbs
+            );
+        }
+        Ok(Topology {
+            name: name.map(str::to_string),
+            tiers,
+            links,
+        })
+    }
+
+    /// Build a stack whose links are derived from the lower tiers'
+    /// bandwidths (the spec-grammar convention): `links[i]` gets
+    /// `tiers[i + 1].bw_gbs` and `latencies[i]` (one entry per link).
+    pub fn from_tiers(
+        name: Option<&str>,
+        tiers: Vec<Tier>,
+        latencies: &[f64],
+    ) -> crate::Result<Self> {
+        crate::ensure!(
+            !tiers.is_empty() && latencies.len() + 1 == tiers.len(),
+            "a {}-tier stack needs {} link latencies, got {}",
+            tiers.len(),
+            tiers.len().max(1) - 1,
+            latencies.len()
+        );
+        let links = tiers
+            .iter()
+            .skip(1)
+            .zip(latencies)
+            .map(|(t, lat)| LinkSpec::new(t.bw_gbs, *lat))
+            .collect();
+        Self::new(name, tiers, links)
+    }
+
+    pub fn num_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    pub fn tiers(&self) -> &[Tier] {
+        &self.tiers
+    }
+
+    pub fn links(&self) -> &[LinkSpec] {
+        &self.links
+    }
+
+    pub fn tier(&self, i: usize) -> &Tier {
+        &self.tiers[i]
+    }
+
+    /// The link between tier `i` (faster) and tier `i + 1` (slower).
+    pub fn link(&self, i: usize) -> LinkSpec {
+        self.links[i]
+    }
+
+    /// The fastest (compute-adjacent) tier.
+    pub fn fastest(&self) -> &Tier {
+        &self.tiers[0]
+    }
+
+    /// The slowest tier — where data lives at rest.
+    pub fn home(&self) -> &Tier {
+        self.tiers.last().expect("validated: at least one tier")
+    }
+
+    /// Whether a problem of `bytes` fits the home tier at all.
+    pub fn fits(&self, bytes: u64) -> bool {
+        match self.home().capacity_bytes {
+            None => true,
+            Some(cap) => bytes <= cap,
+        }
+    }
+
+    /// Human label: the tier names joined fastest→slowest
+    /// (`hbm+host+nvme`).
+    pub fn label(&self) -> String {
+        self.tiers
+            .iter()
+            .map(|t| t.name.as_str())
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// The canonical spec string: `tiers:<preset-name>` when this is an
+    /// unmodified preset, the full tier grammar otherwise. Round-trips
+    /// through [`crate::coordinator::Config::parse_spec`] either way.
+    pub fn spec(&self) -> String {
+        if let Some(n) = &self.name {
+            if presets::preset(n).as_ref() == Some(self) {
+                return format!("tiers:{n}");
+            }
+        }
+        self.spec_full()
+    }
+
+    /// The full tier grammar, numbers spelled out (what
+    /// `--list-platforms` shows so users can copy and edit a preset).
+    pub fn spec_full(&self) -> String {
+        spec::render(self)
+    }
+
+    /// Structural equality: same tiers and links, names-of-the-stack
+    /// included but the cosmetic preset [`Topology::name`] ignored.
+    pub fn same_stack(&self, other: &Topology) -> bool {
+        self.tiers == other.tiers && self.links == other.links
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hbm_host() -> Topology {
+        Topology::new(
+            None,
+            vec![
+                Tier::new("hbm", Some(16 << 30), 509.7),
+                Tier::new("host", None, 11.0),
+            ],
+            vec![LinkSpec::PCIE_HOST],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn linkspec_time_matches_legacy_formula() {
+        let t = LinkSpec::PCIE_HOST.time_s(11_000_000_000);
+        assert!((t - (1.0 + 10e-6)).abs() < 1e-9);
+        assert_eq!(LinkSpec::PCIE_HOST.time_s(0), 0.0);
+        assert!(LinkSpec::NVLINK_HOST.bw_gbs > LinkSpec::PCIE_HOST.bw_gbs);
+        assert!(LinkSpec::INFINIBAND.latency_s < LinkSpec::PCIE_PEER.latency_s);
+    }
+
+    #[test]
+    fn validation_rejects_malformed_stacks() {
+        // zero capacity
+        let e = Topology::new(
+            None,
+            vec![Tier::new("a", Some(0), 10.0), Tier::new("b", None, 1.0)],
+            vec![LinkSpec::new(1.0, 0.0)],
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("zero capacity"), "{e}");
+        // duplicate names
+        let e = Topology::new(
+            None,
+            vec![
+                Tier::new("x", Some(1), 10.0),
+                Tier::new("x", None, 1.0),
+            ],
+            vec![LinkSpec::new(1.0, 0.0)],
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("duplicate tier name"), "{e}");
+        // unbounded middle tier
+        let e = Topology::new(
+            None,
+            vec![
+                Tier::new("a", Some(1), 10.0),
+                Tier::new("b", None, 5.0),
+                Tier::new("c", None, 1.0),
+            ],
+            vec![LinkSpec::new(5.0, 0.0), LinkSpec::new(1.0, 0.0)],
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("unbounded"), "{e}");
+        // wrong link count
+        assert!(Topology::new(None, vec![Tier::new("a", None, 1.0)], vec![LinkSpec::PCIE_HOST])
+            .is_err());
+        // bad bandwidth
+        let e = Topology::new(
+            None,
+            vec![Tier::new("a", Some(1), 0.0), Tier::new("b", None, 1.0)],
+            vec![LinkSpec::new(1.0, 0.0)],
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("bandwidth"), "{e}");
+        // bad name characters
+        assert!(Topology::new(
+            None,
+            vec![Tier::new("a=b", Some(1), 1.0), Tier::new("c", None, 1.0)],
+            vec![LinkSpec::new(1.0, 0.0)],
+        )
+        .is_err());
+        // link bandwidth must be the lower tier's bandwidth, or the
+        // rendered spec would misdescribe the modelled machine
+        let e = Topology::new(
+            None,
+            vec![Tier::new("a", Some(1), 10.0), Tier::new("b", None, 5.0)],
+            vec![LinkSpec::new(3.0, 0.0)],
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("must equal tier"), "{e}");
+    }
+
+    #[test]
+    fn accessors_and_fits() {
+        let t = hbm_host();
+        assert_eq!(t.num_tiers(), 2);
+        assert_eq!(t.fastest().name, "hbm");
+        assert_eq!(t.home().name, "host");
+        assert!(t.fits(u64::MAX), "unbounded home tier fits anything");
+        assert_eq!(t.label(), "hbm+host");
+        assert_eq!(t.link(0), LinkSpec::PCIE_HOST);
+
+        let bounded = Topology::new(
+            None,
+            vec![
+                Tier::new("hbm", Some(16 << 30), 509.7),
+                Tier::new("nvme", Some(1 << 40), 6.0),
+            ],
+            vec![LinkSpec::new(6.0, 20e-6)],
+        )
+        .unwrap();
+        assert!(bounded.fits(1 << 40));
+        assert!(!bounded.fits((1 << 40) + 1));
+    }
+
+    #[test]
+    fn same_stack_ignores_cosmetic_name() {
+        let a = hbm_host();
+        let mut b = a.clone();
+        b.name = Some("custom".into());
+        assert!(a.same_stack(&b));
+        assert_ne!(a, b, "full equality still sees the name");
+    }
+}

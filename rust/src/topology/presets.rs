@@ -1,0 +1,148 @@
+//! Named preset topologies — the paper's calibrated machines as data.
+//!
+//! Every preset's *stack* reproduces the corresponding calibration
+//! numbers exactly (they come from the same
+//! [`crate::memory::hierarchy`] defaults the engines use).
+//! **Execution** equivalence holds for the explicit-streaming stacks:
+//! `tiers:gpu-explicit-{pcie,nvlink}` on the generic
+//! [`crate::memory::TieredEngine`] model the same clocks as the legacy
+//! `gpu-explicit:*` platforms — pinned bit-exactly in
+//! `tests/tiling_equivalence.rs`. The `knl` and `unified-*` presets
+//! *describe* those machines' memory stacks; running them through the
+//! generic engine models explicit streaming over that stack with the
+//! app's GPU compute calibration — it does **not** reproduce the
+//! MCDRAM cache simulator or the page-fault model (use the legacy
+//! `knl-cache*` / `gpu-unified` heads for those). `--list-platforms`
+//! prints this table with each preset's canonical spec string.
+
+use super::{LinkSpec, Tier, Topology};
+use crate::memory::hierarchy::{GpuCalib, KnlCalib, Link};
+
+/// All named presets, in display order.
+pub fn presets() -> Vec<Topology> {
+    let k = KnlCalib::default();
+    let g = GpuCalib::default();
+    vec![
+        knl_cache(&k),
+        gpu_explicit(&g, Link::PciE),
+        gpu_explicit(&g, Link::NvLink),
+        gpu_unified(&g, Link::PciE),
+        gpu_unified(&g, Link::NvLink),
+        plain(&k),
+    ]
+}
+
+/// Look a preset up by name.
+pub fn preset(name: &str) -> Option<Topology> {
+    presets().into_iter().find(|t| t.name.as_deref() == Some(name))
+}
+
+/// KNL cache mode: MCDRAM (§5.2 cache-mode STREAM bandwidth) backed by
+/// unbounded DDR4. The MCDRAM↔DDR4 path has no per-transfer launch
+/// latency — cache fills are hardware, not API calls.
+pub fn knl_cache(k: &KnlCalib) -> Topology {
+    Topology::new(
+        Some("knl"),
+        vec![
+            Tier::new("mcdram", Some(k.mcdram_bytes), k.bw_mcdram_cache),
+            Tier::new("ddr4", None, k.bw_ddr4),
+        ],
+        vec![LinkSpec::new(k.bw_ddr4, 0.0)],
+    )
+    .expect("preset topologies are well-formed")
+}
+
+/// P100 explicit streaming (§5.3): HBM2 at the measured device-copy
+/// bandwidth over the host link. Stacks whose innermost link is the
+/// calibrated NVLink host link (this preset's `-nvlink` variant, or
+/// any hand-spelled equivalent) additionally model the §5.3
+/// graphics-clock boost when built into an engine.
+pub fn gpu_explicit(g: &GpuCalib, link: Link) -> Topology {
+    gpu_stack("gpu-explicit", g, link)
+}
+
+/// P100 unified memory (§5.4): the same physical stack as
+/// [`gpu_explicit`] — the page-migration behaviour is the engine's, not
+/// the topology's.
+pub fn gpu_unified(g: &GpuCalib, link: Link) -> Topology {
+    gpu_stack("unified", g, link)
+}
+
+fn gpu_stack(kind: &str, g: &GpuCalib, link: Link) -> Topology {
+    let (suffix, spec) = match link {
+        Link::PciE => ("pcie", LinkSpec::PCIE_HOST),
+        Link::NvLink => ("nvlink", LinkSpec::NVLINK_HOST),
+    };
+    let name = format!("{kind}-{suffix}");
+    Topology::new(
+        Some(name.as_str()),
+        vec![
+            Tier::new("hbm", Some(g.hbm_bytes), g.bw_device),
+            Tier::new("host", None, spec.bw_gbs),
+        ],
+        vec![spec],
+    )
+    .expect("preset topologies are well-formed")
+}
+
+/// A single flat tier: unbounded DRAM at the paper's DDR4 STREAM
+/// bandwidth (§5.2). The degenerate one-tier topology — no streaming,
+/// no boundaries.
+pub fn plain(k: &KnlCalib) -> Topology {
+    Topology::new(
+        Some("plain"),
+        vec![Tier::new("dram", None, k.bw_ddr4)],
+        vec![],
+    )
+    .expect("preset topologies are well-formed")
+}
+
+/// A single flat tier with explicit numbers — the compat mapping for
+/// the flat `Platform` variants (flat MCDRAM, GPU baseline, …).
+pub fn flat(tier_name: &str, capacity_bytes: Option<u64>, bw_gbs: f64) -> Topology {
+    Topology::new(None, vec![Tier::new(tier_name, capacity_bytes, bw_gbs)], vec![])
+        .expect("flat topologies are well-formed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_reproduce_paper_calibrations() {
+        let knl = preset("knl").unwrap();
+        assert_eq!(knl.tier(0).capacity_bytes, Some(16 << 30));
+        assert!((knl.tier(0).bw_gbs - 291.0).abs() < 1e-12);
+        assert!((knl.tier(1).bw_gbs - 60.8).abs() < 1e-12);
+        assert_eq!(knl.link(0).latency_s, 0.0);
+
+        let gpu = preset("gpu-explicit-pcie").unwrap();
+        assert_eq!(gpu.tier(0).capacity_bytes, Some(16 << 30));
+        assert!((gpu.tier(0).bw_gbs - 509.7).abs() < 1e-12);
+        assert_eq!(gpu.link(0), LinkSpec::PCIE_HOST);
+
+        let nv = preset("gpu-explicit-nvlink").unwrap();
+        assert_eq!(nv.link(0), LinkSpec::NVLINK_HOST);
+
+        assert_eq!(preset("plain").unwrap().num_tiers(), 1);
+        assert!(preset("bogus").is_none());
+    }
+
+    #[test]
+    fn preset_specs_use_their_names() {
+        for p in presets() {
+            let name = p.name.clone().unwrap();
+            assert_eq!(p.spec(), format!("tiers:{name}"));
+            // the full grammar is still printable for every preset
+            assert!(p.spec_full().starts_with("tiers:"), "{}", p.spec_full());
+        }
+    }
+
+    #[test]
+    fn unified_shares_the_gpu_stack() {
+        let a = preset("gpu-explicit-nvlink").unwrap();
+        let b = preset("unified-nvlink").unwrap();
+        assert!(a.same_stack(&b));
+        assert_ne!(a, b);
+    }
+}

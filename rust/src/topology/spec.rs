@@ -1,0 +1,249 @@
+//! The compact tier-stack spec grammar.
+//!
+//! ```text
+//! stack    := <preset-name> | tier ( "+" tier )+
+//! tier     := name "=" capacity "@" bw [ "~" latency ]
+//! capacity := <integer>[k|m|g|t]        (binary suffixes: k=2^10 … t=2^40)
+//!           | inf                       (unbounded; last tier only)
+//! bw       := <float>                   (achieved GB/s)
+//! latency  := <float>                   (seconds; the link INTO the tier
+//!                                        above — not allowed on the first
+//!                                        tier, defaults to 10e-6)
+//! ```
+//!
+//! Examples (all as the `:`-separated platform-spec token after the
+//! `tiers` head, e.g. `--platform tiers:knl`):
+//!
+//! * `tiers:knl` — a [`super::presets`] name;
+//! * `tiers:hbm=16g@509.7+host=inf@11` — today's P100/PCIe machine;
+//! * `tiers:hbm=16g@509.7+host=48g@11~0.00001+nvme=inf@6~0.00002` — a
+//!   three-tier stack that keeps computing past host DRAM.
+//!
+//! [`render`] is the exact inverse: capacities print with the largest
+//! exact binary suffix, floats with Rust's shortest round-trip
+//! formatting, and every non-first tier carries its `~latency`, so
+//! `parse_stack(render(t))` reproduces `t` tier-for-tier.
+
+use super::{presets, Tier, Topology, DEFAULT_LINK_LATENCY_S};
+
+/// Parse one `tiers:` stack body (the part after the `tiers:` head):
+/// either a preset name or a `+`-separated tier list. Malformed tier
+/// tokens produce typed [`crate::errors`] errors naming the token.
+pub fn parse_stack(stack: &str) -> crate::Result<Topology> {
+    if let Some(p) = presets::preset(stack) {
+        return Ok(p);
+    }
+    crate::ensure!(
+        !stack.is_empty(),
+        "empty tiers: spec (expected a preset name or name=cap@bw+… stack; \
+         see --list-platforms)"
+    );
+    let toks: Vec<&str> = stack.split('+').collect();
+    crate::ensure!(
+        toks.len() >= 2,
+        "single-tier spec {stack:?}: a tier stack needs at least 2 tiers \
+         (fastest first; use a preset or a legacy platform head for flat memory)"
+    );
+    let mut tiers = Vec::with_capacity(toks.len());
+    let mut latencies = Vec::with_capacity(toks.len().saturating_sub(1));
+    for (i, tok) in toks.iter().enumerate() {
+        let (tier, latency) = parse_tier(tok)?;
+        match latency {
+            Some(lat) => {
+                crate::ensure!(
+                    i > 0,
+                    "tier token {tok:?}: a ~latency annotates the link into the \
+                     tier above — the first (fastest) tier has none"
+                );
+                latencies.push(lat);
+            }
+            None => {
+                if i > 0 {
+                    latencies.push(DEFAULT_LINK_LATENCY_S);
+                }
+            }
+        }
+        // Name collisions get the dedicated message before Topology::new
+        // so the error names the offending *token*.
+        crate::ensure!(
+            tiers.iter().all(|t: &Tier| t.name != tier.name),
+            "tier token {tok:?}: duplicate tier name {:?}",
+            tier.name
+        );
+        crate::ensure!(
+            tier.capacity_bytes != Some(0),
+            "tier token {tok:?}: zero capacity"
+        );
+        tiers.push(tier);
+    }
+    Topology::from_tiers(None, tiers, &latencies)
+}
+
+/// Parse one `name=capacity@bw[~latency]` token.
+fn parse_tier(tok: &str) -> crate::Result<(Tier, Option<f64>)> {
+    let (name, rest) = tok
+        .split_once('=')
+        .ok_or_else(|| crate::err!("tier token {tok:?}: expected name=capacity@bw[~latency]"))?;
+    crate::ensure!(!name.is_empty(), "tier token {tok:?}: empty tier name");
+    let (cap_str, rest) = rest
+        .split_once('@')
+        .ok_or_else(|| crate::err!("tier token {tok:?}: missing @bandwidth"))?;
+    let (bw_str, lat_str) = match rest.split_once('~') {
+        Some((b, l)) => (b, Some(l)),
+        None => (rest, None),
+    };
+    let capacity = parse_capacity(tok, cap_str)?;
+    let bw: f64 = bw_str
+        .parse()
+        .map_err(|_| crate::err!("tier token {tok:?}: bad bandwidth {bw_str:?} (GB/s float)"))?;
+    let latency = match lat_str {
+        Some(l) => Some(l.parse::<f64>().map_err(|_| {
+            crate::err!("tier token {tok:?}: bad link latency {l:?} (seconds, e.g. 0.00001)")
+        })?),
+        None => None,
+    };
+    Ok((Tier::new(name, capacity, bw), latency))
+}
+
+/// Parse a capacity: decimal integer with an optional binary suffix, or
+/// `inf` for unbounded.
+fn parse_capacity(tok: &str, s: &str) -> crate::Result<Option<u64>> {
+    if s == "inf" {
+        return Ok(None);
+    }
+    crate::ensure!(!s.is_empty(), "tier token {tok:?}: empty capacity");
+    let (digits, mult) = match s.chars().last() {
+        Some(c) if c.is_ascii_digit() => (s, 1u64),
+        Some('k') => (&s[..s.len() - 1], 1u64 << 10),
+        Some('m') => (&s[..s.len() - 1], 1u64 << 20),
+        Some('g') => (&s[..s.len() - 1], 1u64 << 30),
+        Some('t') => (&s[..s.len() - 1], 1u64 << 40),
+        Some(c) => crate::bail!(
+            "tier token {tok:?}: unknown capacity suffix {c:?} (expected k|m|g|t|inf)"
+        ),
+        None => unreachable!("guarded by the emptiness check"),
+    };
+    let n: u64 = digits.parse().map_err(|_| {
+        crate::err!("tier token {tok:?}: bad capacity {s:?} (integer with optional k|m|g|t)")
+    })?;
+    let bytes = n
+        .checked_mul(mult)
+        .ok_or_else(|| crate::err!("tier token {tok:?}: capacity {s:?} overflows u64 bytes"))?;
+    Ok(Some(bytes))
+}
+
+/// Render a capacity with the largest exact binary suffix.
+fn render_capacity(cap: Option<u64>) -> String {
+    match cap {
+        None => "inf".into(),
+        Some(c) if c > 0 && c % (1 << 40) == 0 => format!("{}t", c >> 40),
+        Some(c) if c > 0 && c % (1 << 30) == 0 => format!("{}g", c >> 30),
+        Some(c) if c > 0 && c % (1 << 20) == 0 => format!("{}m", c >> 20),
+        Some(c) if c > 0 && c % (1 << 10) == 0 => format!("{}k", c >> 10),
+        Some(c) => format!("{c}"),
+    }
+}
+
+/// Render the full canonical spec string (`tiers:` head included) —
+/// the exact inverse of [`parse_stack`] modulo the cosmetic preset
+/// name.
+pub fn render(topo: &Topology) -> String {
+    let mut out = String::from("tiers:");
+    for (i, t) in topo.tiers().iter().enumerate() {
+        if i > 0 {
+            out.push('+');
+        }
+        out.push_str(&t.name);
+        out.push('=');
+        out.push_str(&render_capacity(t.capacity_bytes));
+        out.push('@');
+        out.push_str(&format!("{}", t.bw_gbs));
+        if i > 0 {
+            out.push('~');
+            out.push_str(&format!("{}", topo.link(i - 1).latency_s));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::LinkSpec;
+
+    #[test]
+    fn three_tier_example_parses() {
+        let t = parse_stack("hbm=16g@509.7+host=48g@11~0.00001+nvme=inf@6~0.00002").unwrap();
+        assert_eq!(t.num_tiers(), 3);
+        assert_eq!(t.tier(0).name, "hbm");
+        assert_eq!(t.tier(0).capacity_bytes, Some(16 << 30));
+        assert_eq!(t.tier(1).capacity_bytes, Some(48 << 30));
+        assert_eq!(t.tier(2).capacity_bytes, None);
+        assert_eq!(t.link(0), LinkSpec::new(11.0, 1e-5));
+        assert_eq!(t.link(1), LinkSpec::new(6.0, 2e-5));
+        assert_eq!(t.label(), "hbm+host+nvme");
+    }
+
+    #[test]
+    fn default_latency_applies_when_unannotated() {
+        let t = parse_stack("hbm=16g@509.7+host=inf@11").unwrap();
+        assert_eq!(t.link(0).latency_s, super::DEFAULT_LINK_LATENCY_S);
+        assert_eq!(t.link(0).bw_gbs, 11.0);
+    }
+
+    #[test]
+    fn render_round_trips() {
+        for s in [
+            "hbm=16g@509.7+host=inf@11",
+            "hbm=16g@509.7+host=48g@11~0.00001+nvme=inf@6~0.00002",
+            "a=1023@3.5+b=1k@2+c=inf@0.25~0.5",
+        ] {
+            let t = parse_stack(s).unwrap();
+            let r = render(&t);
+            let t2 = parse_stack(r.strip_prefix("tiers:").unwrap()).unwrap();
+            assert_eq!(t, t2, "{s} → {r}");
+        }
+    }
+
+    #[test]
+    fn capacity_suffixes_are_binary_and_render_largest() {
+        assert_eq!(parse_capacity("x", "16g").unwrap(), Some(16u64 << 30));
+        assert_eq!(parse_capacity("x", "4t").unwrap(), Some(4u64 << 40));
+        assert_eq!(parse_capacity("x", "3k").unwrap(), Some(3u64 << 10));
+        assert_eq!(parse_capacity("x", "777").unwrap(), Some(777));
+        assert_eq!(parse_capacity("x", "inf").unwrap(), None);
+        assert_eq!(render_capacity(Some(16 << 30)), "16g");
+        assert_eq!(render_capacity(Some(1 << 40)), "1t");
+        assert_eq!(render_capacity(Some(777)), "777");
+        assert_eq!(render_capacity(None), "inf");
+    }
+
+    #[test]
+    fn malformed_tokens_name_the_token() {
+        let cases = [
+            ("hbm=0g@550+host=inf@11", "zero capacity"),
+            ("hbm=16q@550+host=inf@11", "unknown capacity suffix"),
+            ("hbm=16g@550+hbm=inf@11", "duplicate tier name"),
+            ("hbm=16g@550", "single-tier"),
+            ("hbm=16g+host=inf@11", "missing @bandwidth"),
+            ("hbm=16g@fast+host=inf@11", "bad bandwidth"),
+            ("hbm=16g@550~1e-5+host=inf@11", "first (fastest) tier"),
+            ("=16g@550+host=inf@11", "empty tier name"),
+            ("bogus", "single-tier"),
+            ("hbm=16g@550+host=inf@11~slow", "bad link latency"),
+        ];
+        for (spec, needle) in cases {
+            let e = parse_stack(spec).unwrap_err().to_string();
+            assert!(e.contains(needle), "{spec}: {e}");
+        }
+        // overflow
+        assert!(parse_stack("a=99999999999t@1+b=inf@1").is_err());
+    }
+
+    #[test]
+    fn preset_names_resolve() {
+        let t = parse_stack("gpu-explicit-pcie").unwrap();
+        assert_eq!(t.name.as_deref(), Some("gpu-explicit-pcie"));
+        assert_eq!(t.tier(0).name, "hbm");
+    }
+}

@@ -9,11 +9,12 @@ use super::candidate::{Candidate, Fnv};
 use crate::distributed::{DecompKind, Interconnect, ShardedEngine};
 use crate::exec::Engine;
 use crate::memory::{
-    AppCalib, GpuCalib, GpuExplicitEngine, GpuOpts, KnlCalib, KnlEngine, Link, UnifiedCalib,
-    UnifiedEngine,
+    AppCalib, GpuCalib, GpuExplicitEngine, GpuOpts, KnlCalib, KnlEngine, Link, TieredEngine,
+    UnifiedCalib, UnifiedEngine,
 };
 use crate::ops::{Dataset, LoopInst, Stencil};
 use crate::tiling::plan::PlanSource;
+use crate::topology::Topology;
 
 /// One tunable platform with its calibrations.
 #[derive(Debug, Clone)]
@@ -37,6 +38,19 @@ pub enum TunerTarget {
         link: Link,
         tiled: bool,
         prefetch: bool,
+    },
+    /// The generic N-tier engine on a declarative [`Topology`]; the
+    /// candidate's tile count applies to the innermost (fastest)
+    /// boundary, where the §4.1 toggles also live.
+    Tiered {
+        topo: Topology,
+        /// App-calibrated achieved compute bandwidth, GB/s (NVLink
+        /// presets arrive pre-boosted).
+        compute_bw: f64,
+        launch_s: f64,
+        /// Configured toggles — the heuristic candidate reproduces
+        /// them; the search may deviate.
+        opts: GpuOpts,
     },
     /// N ranks of `inner`, candidates applied uniformly per rank.
     Sharded {
@@ -86,6 +100,24 @@ impl TunerTarget {
                 e.plan = plan_source(cand);
                 Box::new(e)
             }
+            TunerTarget::Tiered {
+                topo,
+                compute_bw,
+                launch_s,
+                ..
+            } => {
+                let cand_opts = GpuOpts {
+                    cyclic: cand.cyclic,
+                    prefetch: cand.prefetch,
+                    slots: cand.slots.clamp(2, 3),
+                };
+                let mut e = TieredEngine::new(topo.clone(), *compute_bw, *launch_s, cand_opts)
+                    .expect("clamped slots are always valid");
+                if !e.plans.is_empty() {
+                    e.plans[0] = plan_source(cand);
+                }
+                Box::new(e)
+            }
             TunerTarget::Sharded {
                 inner,
                 ranks,
@@ -121,6 +153,12 @@ impl TunerTarget {
                 cyclic: false,
                 prefetch: *prefetch,
             },
+            TunerTarget::Tiered { opts, .. } => Candidate {
+                tiles: None,
+                slots: opts.slots.clamp(2, 3),
+                cyclic: opts.cyclic,
+                prefetch: opts.prefetch,
+            },
             TunerTarget::Sharded { inner, .. } => inner.heuristic(),
         }
     }
@@ -132,7 +170,7 @@ impl TunerTarget {
     pub fn toggle_variants(&self) -> Vec<Candidate> {
         match self {
             TunerTarget::Knl { .. } => vec![self.heuristic()],
-            TunerTarget::GpuExplicit { .. } => {
+            TunerTarget::GpuExplicit { .. } | TunerTarget::Tiered { .. } => {
                 let mut v = Vec::with_capacity(8);
                 for slots in [3u8, 2] {
                     for cyclic in [true, false] {
@@ -210,6 +248,12 @@ impl TunerTarget {
                     .plan(chain, datasets, stencils, target)
                     .num_tiles()
             }
+            TunerTarget::Tiered { topo, opts, .. } => {
+                let target = crate::memory::tiered::slot_target_for(topo, opts.slots, 0);
+                PlanSource::Auto
+                    .plan(chain, datasets, stencils, target)
+                    .num_tiles()
+            }
             TunerTarget::Sharded { inner, .. } => {
                 (inner.heuristic_tiles(chain, datasets, stencils) / self.tile_dim_split(chain))
                     .max(1)
@@ -252,6 +296,10 @@ impl TunerTarget {
     pub fn fixed_heuristic_is_redundant(&self) -> bool {
         match self {
             TunerTarget::Knl { .. } | TunerTarget::GpuExplicit { .. } => true,
+            // Two-tier stacks plan exactly like the GPU engine; deeper
+            // stacks re-plan the innermost level per outer tile, so a
+            // fixed global count is a genuinely different candidate.
+            TunerTarget::Tiered { topo, .. } => topo.num_tiers() <= 2,
             TunerTarget::GpuUnified { tiled, .. } => *tiled,
             TunerTarget::Sharded { .. } => false,
         }

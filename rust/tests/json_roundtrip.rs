@@ -9,7 +9,13 @@
 
 use ops_oc::coordinator::json_record;
 use ops_oc::exec::Metrics;
+use ops_oc::topology::Topology;
 use std::collections::BTreeMap;
+
+/// The topology most records in this suite report against.
+fn topo() -> Topology {
+    ops_oc::topology::preset("knl").unwrap()
+}
 
 /// A flat JSON value: the record never nests.
 #[derive(Debug, Clone, PartialEq)]
@@ -88,6 +94,7 @@ fn parse_flat(s: &str) -> BTreeMap<String, Val> {
 const SCHEMA: &[(&str, &str)] = &[
     ("app", "str"),
     ("platform", "str"),
+    ("topology", "str"),
     ("ranks", "num"),
     ("size_gb", "num"),
     ("oom", "bool"),
@@ -124,12 +131,23 @@ fn assert_schema(rec: &BTreeMap<String, Val>) {
         };
         assert_eq!(&got, ty, "key {key:?}");
     }
-    assert_eq!(
-        rec.len(),
-        SCHEMA.len(),
-        "unexpected extra keys: {:?}",
-        rec.keys().collect::<Vec<_>>()
-    );
+    // Beyond the fixed keys, only the dynamic per-tier utilisation
+    // fields of multi-tier topologies are allowed — numeric, prefixed
+    // `util_tier_`, in [0, 1].
+    for (key, v) in rec {
+        if SCHEMA.iter().any(|(k, _)| k == key) {
+            continue;
+        }
+        assert!(
+            key.starts_with("util_tier_"),
+            "unexpected extra key {key:?}: {:?}",
+            rec.keys().collect::<Vec<_>>()
+        );
+        match v {
+            Val::Num(u) => assert!((0.0..=1.0 + 1e-9).contains(u), "{key} = {u}"),
+            v => panic!("{key}: {v:?}"),
+        }
+    }
 }
 
 #[test]
@@ -139,8 +157,17 @@ fn json_record_roundtrips_and_schema_is_stable() {
     m.elapsed_s = 0.04;
     m.halo_time_s = 0.001;
     m.tiles = 12;
-    let rec = parse_flat(&json_record("cloverleaf2d", "KNL cache tiled", 1, 24.0, &m, false));
+    let rec = parse_flat(&json_record(
+        "cloverleaf2d",
+        "KNL cache tiled",
+        1,
+        24.0,
+        &topo(),
+        &m,
+        false,
+    ));
     assert_schema(&rec);
+    assert_eq!(rec["topology"], Val::Str("tiers:knl".into()));
     assert_eq!(rec["bound"], Val::Str("none".into()));
     assert_eq!(rec["util_compute"], Val::Num(0.0));
     assert_eq!(rec["app"], Val::Str("cloverleaf2d".into()));
@@ -166,7 +193,15 @@ fn json_record_tuner_fields_roundtrip() {
     m.tune_cache_hits = 7;
     m.tuned_model_s = 0.5;
     m.heuristic_model_s = 0.75;
-    let rec = parse_flat(&json_record("opensbli", "auto-tuned [GPU explicit]", 4, 48.0, &m, false));
+    let rec = parse_flat(&json_record(
+        "opensbli",
+        "auto-tuned [GPU explicit]",
+        4,
+        48.0,
+        &topo(),
+        &m,
+        false,
+    ));
     assert_schema(&rec);
     assert_eq!(rec["tuned"], Val::Bool(true));
     assert_eq!(rec["tune_evals"], Val::Num(48.0));
@@ -178,7 +213,7 @@ fn json_record_tuner_fields_roundtrip() {
 #[test]
 fn json_record_escaping_survives_the_roundtrip() {
     let m = Metrics::new();
-    let rec = parse_flat(&json_record("we\"ird\\app", "p", 1, 6.0, &m, true));
+    let rec = parse_flat(&json_record("we\"ird\\app", "p", 1, 6.0, &topo(), &m, true));
     assert_eq!(rec["app"], Val::Str("we\"ird\\app".into()));
     assert_eq!(rec["oom"], Val::Bool(true));
 }
@@ -188,8 +223,9 @@ fn real_run_produces_a_parseable_record() {
     use ops_oc::bench_support::run_cl2d_tuned;
     use ops_oc::coordinator::Config;
     use ops_oc::tuner::TuneOpts;
-    let (p, tuned) = Config::parse_spec("gpu-explicit:pcie:cyclic:tuned").unwrap();
+    let (t, tuned) = Config::parse_spec("gpu-explicit:pcie:cyclic:tuned").unwrap();
     assert!(tuned);
+    let p = t.platform().unwrap();
     let (m, oom) = run_cl2d_tuned(
         p,
         Some(TuneOpts {
@@ -202,8 +238,22 @@ fn real_run_produces_a_parseable_record() {
         1,
         0,
     );
-    let rec = parse_flat(&json_record("cloverleaf2d", &p.label(), p.ranks(), 0.01, &m, oom));
+    let cfg = Config::new(p, ops_oc::memory::AppCalib::CLOVERLEAF_2D);
+    let rec = parse_flat(&json_record(
+        "cloverleaf2d",
+        &p.label(),
+        p.ranks(),
+        0.01,
+        &cfg.topology(),
+        &m,
+        oom,
+    ));
     assert_schema(&rec);
+    assert_eq!(
+        rec["topology"],
+        Val::Str("tiers:gpu-explicit-pcie".into()),
+        "legacy platforms report their preset topology"
+    );
     assert_eq!(rec["tuned"], Val::Bool(true));
     match &rec["tune_model_speedup"] {
         Val::Num(v) => assert!(*v >= 1.0 - 1e-12, "never-worse guarantee: {v}"),
@@ -241,5 +291,44 @@ fn real_run_produces_a_parseable_record() {
     match &rec["program_freeze_s"] {
         Val::Num(v) => assert!(*v >= 0.0),
         v => panic!("{v:?}"),
+    }
+}
+
+#[test]
+fn three_tier_run_reports_topology_and_per_tier_utilisation() {
+    use ops_oc::bench_support::run_cl2d_cfg;
+    use ops_oc::coordinator::Config;
+    use ops_oc::memory::AppCalib;
+
+    // hbm and host both far smaller than the 0.01 GB modelled problem:
+    // the run streams through BOTH boundaries and must not OOM (the
+    // unbounded nvme home tier holds the data).
+    let (t, _) = Config::parse_spec(
+        "tiers:hbm=64k@509.7+host=256k@11~0.00001+nvme=inf@6~0.00002:cyclic",
+    )
+    .unwrap();
+    let cfg = Config::for_target(t, AppCalib::CLOVERLEAF_2D);
+    let (m, oom) = run_cl2d_cfg(&cfg, false, 8, 256, 0.01, 1, 0);
+    assert!(!oom, "three-tier streaming must model past the host tier");
+    let rec = parse_flat(&json_record(
+        "cloverleaf2d",
+        &cfg.label(),
+        cfg.ranks(),
+        0.01,
+        &cfg.topology(),
+        &m,
+        oom,
+    ));
+    assert_schema(&rec);
+    match &rec["topology"] {
+        Val::Str(s) => assert!(s.starts_with("tiers:hbm=64k@509.7"), "{s}"),
+        v => panic!("{v:?}"),
+    }
+    // per-tier utilisation fields for both streamed boundaries
+    for key in ["util_tier_hbm_upload", "util_tier_host_upload"] {
+        match rec.get(key) {
+            Some(Val::Num(u)) => assert!(*u > 0.0, "{key} must show traffic"),
+            v => panic!("{key}: {v:?} (keys: {:?})", rec.keys().collect::<Vec<_>>()),
+        }
     }
 }

@@ -86,7 +86,8 @@ fn hundred_step_diffusion_analyses_once() {
         assert!(got.iter().all(|v| v.is_finite()));
         assert_eq!(m.analysis_builds, 1, "builds on {}", p.label());
         assert_eq!(m.analysis_reuse_hits, 99, "reuse on {}", p.label());
-        let rec = json_record("diffusion", &p.label(), p.ranks(), 0.001, &m, false);
+        let topo = Config::new(p, AppCalib::CLOVERLEAF_2D).topology();
+        let rec = json_record("diffusion", &p.label(), p.ranks(), 0.001, &topo, &m, false);
         assert!(rec.contains("\"analysis_builds\":1"), "{rec}");
         assert!(rec.contains("\"analysis_reuse_hits\":99"), "{rec}");
         // the legacy path, by contrast, re-analyses every flush

@@ -8,8 +8,8 @@
 use ops_oc::apps::cloverleaf2d::CloverLeaf2D;
 use ops_oc::apps::cloverleaf3d::CloverLeaf3D;
 use ops_oc::apps::opensbli::OpenSbli;
-use ops_oc::coordinator::{Config, Platform};
-use ops_oc::memory::{AppCalib, Link};
+use ops_oc::coordinator::{Config, Platform, TieredTarget};
+use ops_oc::memory::{AppCalib, GpuOpts, Link};
 use ops_oc::ops::OpsContext;
 
 fn all_platforms() -> Vec<Platform> {
@@ -127,6 +127,8 @@ fn tuned_plans_stay_bitexact_on_all_apps() {
         "gpu-explicit:pcie:cyclic:prefetch:tuned",
         "gpu-explicit:nvlink:tuned",
         "gpu-unified:pcie:tiled:prefetch:tuned",
+        "tiers:gpu-explicit-pcie:cyclic:prefetch:tuned",
+        "tiers:hbm=16g@509.7+host=48g@11~0.00001+nvme=inf@6~0.00002:tuned",
     ];
     // CloverLeaf 2D
     let reference = {
@@ -140,7 +142,7 @@ fn tuned_plans_stay_bitexact_on_all_apps() {
     for spec in tuned_specs {
         let (p, tuned) = Config::parse_spec(spec).unwrap();
         assert!(tuned, "{spec}");
-        let cfg = Config::new(p, AppCalib::CLOVERLEAF_2D)
+        let cfg = Config::for_target(p, AppCalib::CLOVERLEAF_2D)
             .with_tuning(tune)
             .unwrap();
         let mut ctx = OpsContext::new(cfg.build_engine());
@@ -163,7 +165,7 @@ fn tuned_plans_stay_bitexact_on_all_apps() {
     };
     for spec in ["knl-cache-tiled:tuned", "gpu-explicit:pcie:cyclic:tuned"] {
         let (p, _) = Config::parse_spec(spec).unwrap();
-        let cfg = Config::new(p, AppCalib::CLOVERLEAF_3D)
+        let cfg = Config::for_target(p, AppCalib::CLOVERLEAF_3D)
             .with_tuning(tune)
             .unwrap();
         let mut ctx = OpsContext::new(cfg.build_engine());
@@ -185,7 +187,7 @@ fn tuned_plans_stay_bitexact_on_all_apps() {
     };
     for spec in ["knl-cache-tiled:tuned", "gpu-explicit:nvlink:cyclic:tuned"] {
         let (p, _) = Config::parse_spec(spec).unwrap();
-        let cfg = Config::new(p, AppCalib::OPENSBLI).with_tuning(tune).unwrap();
+        let cfg = Config::for_target(p, AppCalib::OPENSBLI).with_tuning(tune).unwrap();
         let mut ctx = OpsContext::new(cfg.build_engine());
         let mut app = OpenSbli::new(&mut ctx, 16, 1, 1);
         app.run(&mut ctx, 2);
@@ -195,6 +197,176 @@ fn tuned_plans_stay_bitexact_on_all_apps() {
             "opensbli rhou differs on tuned {spec}"
         );
     }
+}
+
+/// Build the legacy `gpu-explicit` config and its tiered twin: the same
+/// (shrunken) HBM, the same link and §4.1 toggles, the topology coming
+/// from the compatibility mapping [`Platform::topology`] so the preset
+/// name (and therefore the NVLink clock boost) rides along.
+fn gpu_explicit_pair(link: Link, cyclic: bool, prefetch: bool, hbm: u64, app: AppCalib) -> (Config, Config) {
+    let p = Platform::GpuExplicit {
+        link,
+        cyclic,
+        prefetch,
+    };
+    let mut legacy = Config::new(p, app);
+    legacy.gpu.hbm_bytes = hbm;
+    let mut tiered = legacy.clone();
+    let mut tt = TieredTarget::new(p.topology(&legacy.knl, &legacy.gpu));
+    tt.opts = GpuOpts {
+        cyclic,
+        prefetch,
+        slots: 3,
+    };
+    tiered.tiered = Some(tt);
+    (legacy, tiered)
+}
+
+/// The acceptance pin: the `gpu-explicit` preset executed through the
+/// generic `TieredEngine` is bit-exact — numerics *and* modelled clocks
+/// — against the legacy engine, across links and §4.1 toggles, at the
+/// application level.
+#[test]
+fn tiered_gpu_preset_matches_legacy_engine_bitexact_cl2d() {
+    for link in [Link::PciE, Link::NvLink] {
+        for cyclic in [false, true] {
+            for prefetch in [false, true] {
+                let (lc, tc) =
+                    gpu_explicit_pair(link, cyclic, prefetch, 8 << 10, AppCalib::CLOVERLEAF_2D);
+                let run = |cfg: &Config| {
+                    let mut ctx = OpsContext::new(cfg.build_engine());
+                    let mut app = CloverLeaf2D::new(&mut ctx, 16, 16, 1);
+                    app.run(&mut ctx, 3, 2);
+                    let m = ctx.metrics().clone();
+                    (ctx.fetch(app.density0), m)
+                };
+                let (dl, ml) = run(&lc);
+                let (dt, mt) = run(&tc);
+                let tag = format!("{link:?} cyclic={cyclic} prefetch={prefetch}");
+                assert_eq!(dl, dt, "numerics differ: {tag}");
+                assert_eq!(ml.elapsed_s, mt.elapsed_s, "modelled clock differs: {tag}");
+                assert_eq!(ml.tiles, mt.tiles, "{tag}");
+                assert_eq!(ml.h2d_bytes, mt.h2d_bytes, "{tag}");
+                assert_eq!(ml.d2h_bytes, mt.d2h_bytes, "{tag}");
+                assert_eq!(ml.loop_time_s, mt.loop_time_s, "{tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn tiered_gpu_preset_matches_legacy_engine_bitexact_cl3d_and_sbli() {
+    let (lc, tc) = gpu_explicit_pair(Link::NvLink, true, true, 16 << 10, AppCalib::CLOVERLEAF_3D);
+    let run3d = |cfg: &Config| {
+        let mut ctx = OpsContext::new(cfg.build_engine());
+        let mut app = CloverLeaf3D::new(&mut ctx, 8, 8, 8, 1);
+        app.run(&mut ctx, 2, 0);
+        let m = ctx.metrics().clone();
+        (ctx.fetch(app.energy0), m)
+    };
+    let (dl, ml) = run3d(&lc);
+    let (dt, mt) = run3d(&tc);
+    assert_eq!(dl, dt, "cl3d numerics");
+    assert_eq!(ml.elapsed_s, mt.elapsed_s, "cl3d clock");
+    assert_eq!(ml.tiles, mt.tiles);
+
+    let (lc, tc) = gpu_explicit_pair(Link::PciE, true, false, 8 << 10, AppCalib::OPENSBLI);
+    let run_sbli = |cfg: &Config| {
+        let mut ctx = OpsContext::new(cfg.build_engine());
+        let mut app = OpenSbli::new(&mut ctx, 16, 1, 1);
+        app.run(&mut ctx, 2);
+        let m = ctx.metrics().clone();
+        (ctx.fetch(app.q[1]), m)
+    };
+    let (dl, ml) = run_sbli(&lc);
+    let (dt, mt) = run_sbli(&tc);
+    assert_eq!(dl, dt, "opensbli numerics");
+    assert_eq!(ml.elapsed_s, mt.elapsed_s, "opensbli clock");
+    assert_eq!(ml.h2d_bytes, mt.h2d_bytes);
+}
+
+/// A three-tier stack is still a pure re-scheduler: all three apps stay
+/// bit-exact against the flat reference while streaming through two
+/// capacity boundaries.
+#[test]
+fn three_tier_stack_preserves_numerics_on_all_apps() {
+    // host small enough that the apps' main chains overflow it, so the
+    // nvme boundary genuinely streams
+    let (three, _) =
+        Config::parse_spec("tiers:hbm=8k@509.7+host=16k@11~0.00001+nvme=inf@6~0.00002").unwrap();
+    let three = Config::for_target(three, AppCalib::CLOVERLEAF_2D);
+    // CloverLeaf 2D
+    let reference = {
+        let mut ctx = OpsContext::new(
+            Config::new(Platform::KnlFlatDdr4, AppCalib::CLOVERLEAF_2D).build_engine(),
+        );
+        let mut app = CloverLeaf2D::new(&mut ctx, 16, 16, 1);
+        app.run(&mut ctx, 3, 2);
+        ctx.fetch(app.density0)
+    };
+    {
+        let mut ctx = OpsContext::new(three.build_engine());
+        let mut app = CloverLeaf2D::new(&mut ctx, 16, 16, 1);
+        app.run(&mut ctx, 3, 2);
+        assert_eq!(reference, ctx.fetch(app.density0), "cl2d on three tiers");
+        let m = ctx.metrics().clone();
+        assert!(m.tiles > 0);
+        assert!(
+            m.per_resource.contains_key("hbm:upload")
+                && m.per_resource.contains_key("host:upload"),
+            "per-tier streams must be attributed: {:?}",
+            m.per_resource.keys().collect::<Vec<_>>()
+        );
+    }
+    // CloverLeaf 3D
+    let reference = {
+        let mut ctx = OpsContext::new(
+            Config::new(Platform::KnlFlatDdr4, AppCalib::CLOVERLEAF_3D).build_engine(),
+        );
+        let mut app = CloverLeaf3D::new(&mut ctx, 8, 8, 8, 1);
+        app.run(&mut ctx, 2, 0);
+        ctx.fetch(app.energy0)
+    };
+    {
+        let mut ctx = OpsContext::new(three.build_engine());
+        let mut app = CloverLeaf3D::new(&mut ctx, 8, 8, 8, 1);
+        app.run(&mut ctx, 2, 0);
+        assert_eq!(reference, ctx.fetch(app.energy0), "cl3d on three tiers");
+    }
+    // OpenSBLI
+    let reference = {
+        let mut ctx =
+            OpsContext::new(Config::new(Platform::KnlFlatDdr4, AppCalib::OPENSBLI).build_engine());
+        let mut app = OpenSbli::new(&mut ctx, 16, 1, 1);
+        app.run(&mut ctx, 2);
+        ctx.fetch(app.q[1])
+    };
+    {
+        let mut ctx = OpsContext::new(three.build_engine());
+        let mut app = OpenSbli::new(&mut ctx, 16, 1, 1);
+        app.run(&mut ctx, 2);
+        assert_eq!(reference, ctx.fetch(app.q[1]), "opensbli on three tiers");
+    }
+}
+
+/// Sharded tiered targets (per-rank inner topologies) re-schedule too.
+#[test]
+fn sharded_tiered_stack_preserves_numerics() {
+    let reference = {
+        let mut ctx = OpsContext::new(
+            Config::new(Platform::KnlFlatDdr4, AppCalib::CLOVERLEAF_2D).build_engine(),
+        );
+        let mut app = CloverLeaf2D::new(&mut ctx, 16, 16, 1);
+        app.run(&mut ctx, 2, 0);
+        ctx.fetch(app.density0)
+    };
+    let (t, _) = Config::parse_spec("tiers:hbm=8k@509.7+host=inf@11~0.00001:x2:ib").unwrap();
+    let cfg = Config::for_target(t, AppCalib::CLOVERLEAF_2D);
+    let mut ctx = OpsContext::new(cfg.build_engine());
+    let mut app = CloverLeaf2D::new(&mut ctx, 16, 16, 1);
+    app.run(&mut ctx, 2, 0);
+    assert_eq!(reference, ctx.fetch(app.density0), "sharded tiered numerics");
+    assert!(ctx.metrics().per_rank.len() == 2);
 }
 
 #[test]

@@ -1,0 +1,229 @@
+//! Declarative memory-topology tests: spec round-trips (presets and
+//! randomized stacks), typed errors for malformed tier tokens, and the
+//! three-tier end-to-end runs the `tiers:` grammar exists for.
+
+use ops_oc::coordinator::{Config, Target};
+use ops_oc::memory::AppCalib;
+use ops_oc::topology::{self, spec, LinkSpec, Tier, Topology};
+
+// ---------------------------------------------------------------------------
+// Round-trips
+
+/// Property (satellite): `Topology::spec()` → `Config::parse_spec`
+/// round-trips for every preset.
+#[test]
+fn preset_specs_round_trip_through_the_config_parser() {
+    for p in topology::presets() {
+        let s = p.spec();
+        let (target, tuned) = Config::parse_spec(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
+        assert!(!tuned);
+        let Target::Tiered(tt) = target else {
+            panic!("{s} must parse as a tiered target");
+        };
+        assert_eq!(tt.topology, p, "{s}");
+        // the full grammar rendering reproduces the same stack too
+        // (modulo the cosmetic preset name), for every multi-tier preset
+        if p.num_tiers() >= 2 {
+            let full = p.spec_full();
+            let (t2, _) = Config::parse_spec(&full).unwrap_or_else(|e| panic!("{full}: {e}"));
+            let tt2 = t2.tiered().unwrap().topology.clone();
+            assert!(tt2.same_stack(&p), "{full}");
+        }
+    }
+}
+
+/// A tiny deterministic xorshift so the randomized stacks are
+/// reproducible without any rng dependency.
+struct XorShift(u64);
+
+impl XorShift {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+/// Property (satellite): randomized valid tier stacks round-trip
+/// through render → parse exactly.
+#[test]
+fn randomized_stacks_round_trip() {
+    let mut rng = XorShift(0x5EED_CAFE_F00D_0001);
+    for case in 0..200 {
+        let n = 2 + rng.below(4) as usize; // 2..=5 tiers
+        let mut tiers = Vec::new();
+        let mut lats = Vec::new();
+        for i in 0..n {
+            let cap = if i + 1 == n && rng.below(2) == 0 {
+                None // unbounded home tier half the time
+            } else {
+                // mix raw byte counts with suffix-aligned capacities
+                Some(match rng.below(4) {
+                    0 => 1 + rng.below(1 << 20),
+                    1 => (1 + rng.below(1000)) << 10,
+                    2 => (1 + rng.below(1000)) << 20,
+                    _ => (1 + rng.below(64)) << 30,
+                })
+            };
+            // bandwidths/latencies from raw bits of a bounded range so
+            // arbitrary f64 Display round-tripping is exercised
+            let bw = 0.25 + (rng.below(10_000) as f64) / 7.0;
+            tiers.push(Tier::new(&format!("t{i}"), cap, bw));
+            if i > 0 {
+                lats.push((rng.below(100_000) as f64) * 1e-9);
+            }
+        }
+        let topo = Topology::from_tiers(None, tiers, &lats)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let s = topo.spec();
+        let parsed = spec::parse_stack(s.strip_prefix("tiers:").unwrap())
+            .unwrap_or_else(|e| panic!("case {case} {s}: {e}"));
+        assert_eq!(parsed, topo, "case {case}: {s}");
+        // and through the full Config grammar
+        let (t, _) = Config::parse_spec(&s).unwrap();
+        assert_eq!(&t.tiered().unwrap().topology, &topo, "case {case}: {s}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Malformed specs → typed errors naming the offending token
+
+#[test]
+fn malformed_tier_tokens_are_typed_errors_naming_the_token() {
+    let cases = [
+        // (spec, must-mention)
+        ("tiers:hbm=0g@550+host=inf@11", "hbm=0g@550"),
+        ("tiers:hbm=0g@550+host=inf@11", "zero capacity"),
+        ("tiers:hbm=16q@550+host=inf@11", "unknown capacity suffix"),
+        ("tiers:hbm=16q@550+host=inf@11", "hbm=16q@550"),
+        ("tiers:hbm=16g@550+hbm=inf@11", "duplicate tier name"),
+        ("tiers:hbm=16g@550", "single-tier"),
+        ("tiers:", "empty tiers: spec"),
+        ("tiers:hbm=16g@550+host=inf@oops", "bad bandwidth"),
+        ("tiers:hbm=16g@550~1e-5+host=inf@11", "first (fastest) tier"),
+    ];
+    for (s, needle) in cases {
+        let e = Config::parse_spec(s).unwrap_err().to_string();
+        assert!(e.contains(needle), "{s}: expected {needle:?} in {e:?}");
+    }
+    // unbounded non-home tier is rejected at validation
+    let e = Config::parse_spec("tiers:hbm=16g@550+host=inf@11+nvme=4t@6")
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("unbounded"), "{e}");
+}
+
+// ---------------------------------------------------------------------------
+// Three-tier end-to-end: the acceptance scenario
+
+fn three_tier_cfg() -> Config {
+    // hbm and host both far below the modelled problem size: both
+    // boundaries stream, data lives on the unbounded nvme tier.
+    let (t, _) = Config::parse_spec(
+        "tiers:hbm=64k@509.7+host=256k@11~0.00001+nvme=inf@6~0.00002:cyclic:prefetch",
+    )
+    .unwrap();
+    Config::for_target(t, AppCalib::CLOVERLEAF_2D)
+}
+
+#[test]
+fn three_tier_runs_all_apps_past_the_host_tier() {
+    let cfg = three_tier_cfg();
+    // 0.01 GB modelled ≫ the 256 KiB host tier
+    let (m, oom) = ops_oc::bench_support::run_cl2d_cfg(&cfg, false, 8, 256, 0.01, 1, 0);
+    assert!(!oom, "cl2d three-tier must not OOM past host DRAM");
+    assert!(m.tiles > 1, "must stream in tiles, got {}", m.tiles);
+    for s in ["hbm:upload", "host:upload", "hbm:download", "host:download"] {
+        assert!(m.per_resource.contains_key(s), "cl2d missing stream {s}");
+    }
+    assert!(m.resource_util("host:upload").unwrap() > 0.0);
+    assert!(m.effective_bandwidth_gbs() > 0.0);
+
+    let (m, oom) = ops_oc::bench_support::run_cl3d_cfg(&cfg, false, [8, 8, 128], 0.01, 1, 0);
+    assert!(!oom, "cl3d three-tier must not OOM");
+    assert!(m.per_resource.contains_key("host:upload"), "cl3d host stream");
+
+    let (m, oom) = ops_oc::bench_support::run_sbli_tall_cfg(&cfg, false, 1, 0.01, 1);
+    assert!(!oom, "opensbli three-tier must not OOM");
+    assert!(m.per_resource.contains_key("host:upload"), "sbli host stream");
+}
+
+#[test]
+fn three_tier_traces_per_tier_events() {
+    let cfg = three_tier_cfg();
+    let (m, oom) = ops_oc::bench_support::run_cl2d_cfg(&cfg, true, 8, 256, 0.01, 1, 0);
+    assert!(!oom);
+    let evs = m.trace_events();
+    assert!(!evs.is_empty(), "tracing must collect events");
+    for stream in ["compute", "hbm:upload", "host:upload"] {
+        assert!(
+            evs.iter().any(|e| e.resource == stream),
+            "no events on {stream}"
+        );
+    }
+    // the export renders them
+    let json = ops_oc::exec::chrome_trace_json(evs);
+    assert!(json.contains("host:upload"), "trace export names tier streams");
+}
+
+#[test]
+fn bounded_home_tier_reports_oom() {
+    // nvme big enough for nothing: the problem must refuse to fit
+    let (t, _) =
+        Config::parse_spec("tiers:hbm=64k@509.7+host=256k@11~0.00001+nvme=1m@6~0.00002").unwrap();
+    let cfg = Config::for_target(t, AppCalib::CLOVERLEAF_2D);
+    let (_, oom) = ops_oc::bench_support::run_cl2d_cfg(&cfg, false, 8, 256, 0.01, 1, 0);
+    assert!(oom, "a 10 MB problem cannot fit a 1 MiB home tier");
+}
+
+#[test]
+fn deeper_stacks_model_slower_never_different() {
+    // same fastest tier; adding a slow boundary must cost wall clock
+    let (two, _) = Config::parse_spec("tiers:hbm=64k@509.7+host=inf@11~0.00001").unwrap();
+    let (three, _) = Config::parse_spec(
+        "tiers:hbm=64k@509.7+host=256k@11~0.00001+nvme=inf@6~0.00002",
+    )
+    .unwrap();
+    let two = Config::for_target(two, AppCalib::CLOVERLEAF_2D);
+    let three = Config::for_target(three, AppCalib::CLOVERLEAF_2D);
+    let (m2, _) = ops_oc::bench_support::run_cl2d_cfg(&two, false, 8, 256, 0.01, 1, 0);
+    let (m3, _) = ops_oc::bench_support::run_cl2d_cfg(&three, false, 8, 256, 0.01, 1, 0);
+    assert!(
+        m3.elapsed_s > m2.elapsed_s,
+        "the nvme boundary must cost time: {} !> {}",
+        m3.elapsed_s,
+        m2.elapsed_s
+    );
+    // §5.1 byte accounting is schedule-independent up to the per-tile
+    // u64 truncation of fractional slices.
+    let (a, b) = (m2.loop_bytes as f64, m3.loop_bytes as f64);
+    assert!(
+        (a - b).abs() / a.max(1.0) < 1e-6,
+        "loop bytes must agree across schedules: {a} vs {b}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// LinkSpec unification
+
+#[test]
+fn legacy_link_enums_are_linkspec_shims() {
+    use ops_oc::distributed::Interconnect;
+    use ops_oc::memory::Link;
+    assert_eq!(Link::PciE.spec(), LinkSpec::PCIE_HOST);
+    assert_eq!(Link::NvLink.spec(), LinkSpec::NVLINK_HOST);
+    assert_eq!(Interconnect::PciePeer.spec(), LinkSpec::PCIE_PEER);
+    assert_eq!(Interconnect::NvLink.spec(), LinkSpec::NVLINK_PEER);
+    assert_eq!(Interconnect::InfiniBand.spec(), LinkSpec::INFINIBAND);
+    // and the moved unit constants are re-exported where they were
+    assert_eq!(ops_oc::memory::calib_util::GIB, 1u64 << 30);
+    assert_eq!(ops_oc::memory::hierarchy::GIB, ops_oc::memory::calib_util::GIB);
+    assert_eq!(ops_oc::memory::hierarchy::GB, 1e9);
+}
