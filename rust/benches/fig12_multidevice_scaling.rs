@@ -3,7 +3,7 @@
 //! running the explicit 3-slot streaming engine, halos exchanged over
 //! NVLink peer links — plus the comm/compute-overlap ablation.
 
-use ops_oc::bench_support::{run_cl2d, Figure};
+use ops_oc::bench_support::{run_cl2d, telemetry::BenchRecorder, Figure};
 use ops_oc::coordinator::{InnerPlatform, Platform};
 use ops_oc::distributed::{DecompKind, Interconnect};
 use ops_oc::memory::Link;
@@ -36,14 +36,31 @@ fn main() {
     let s_1d = strong.add_series("1D decomp");
     let s_2d = strong.add_series("2D decomp");
     let s_no = strong.add_series("1D no-overlap");
+    let mut rec = BenchRecorder::new("fig12_multidevice_scaling");
     let mut elapsed_1 = 0.0;
     for &r in &ranks_sweep {
         let (m, _) = run_cl2d(sharded(r, DecompKind::OneD, true), 8, 6144, 48.0, steps, 0);
         if r == 1 {
             elapsed_1 = m.elapsed_s;
         }
+        rec.point(
+            &format!("cloverleaf2d|sharded-1d-x{r}|48"),
+            "cloverleaf2d",
+            &format!("sharded-1d-x{r}"),
+            48.0,
+            &m,
+            false,
+        );
         strong.push(s_1d, r as f64, Some(m.effective_bandwidth_gbs()));
         let (m2, _) = run_cl2d(sharded(r, DecompKind::TwoD, true), 8, 6144, 48.0, steps, 0);
+        rec.point(
+            &format!("cloverleaf2d|sharded-2d-x{r}|48"),
+            "cloverleaf2d",
+            &format!("sharded-2d-x{r}"),
+            48.0,
+            &m2,
+            false,
+        );
         strong.push(s_2d, r as f64, Some(m2.effective_bandwidth_gbs()));
         let (mn, _) = run_cl2d(sharded(r, DecompKind::OneD, false), 8, 6144, 48.0, steps, 0);
         strong.push(s_no, r as f64, Some(mn.effective_bandwidth_gbs()));
@@ -80,5 +97,9 @@ fn main() {
         );
     }
 
+    match rec.write() {
+        Ok(p) => println!("trajectory: {}", p.display()),
+        Err(e) => eprintln!("cannot write trajectory: {e}"),
+    }
     println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
 }

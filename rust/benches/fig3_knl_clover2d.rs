@@ -1,6 +1,6 @@
 //! Figure 3: CloverLeaf 2D problem scaling on the KNL — flat DDR4, flat
 //! MCDRAM (OOM > 16 GB), cache mode, cache mode + tiling.
-use ops_oc::bench_support::{bw_point, run_cl2d, Figure, KNL_SIZES_GB};
+use ops_oc::bench_support::{bw_point, run_cl2d, telemetry::BenchRecorder, Figure, KNL_SIZES_GB};
 use ops_oc::coordinator::Platform;
 use std::time::Instant;
 
@@ -10,6 +10,7 @@ fn main() {
         "Fig 3: CloverLeaf 2D problem scaling on the KNL",
         "effective GB/s (modelled)",
     );
+    let mut rec = BenchRecorder::new("fig3_knl_clover2d");
     let series = [
         ("flat DDR4", Platform::KnlFlatDdr4),
         ("flat MCDRAM", Platform::KnlFlatMcdram),
@@ -19,9 +20,22 @@ fn main() {
     for (name, p) in series {
         let s = fig.add_series(name);
         for gb in KNL_SIZES_GB {
-            fig.push(s, gb, bw_point(run_cl2d(p, 8, 6144, gb, 4, 2)));
+            let (m, oom) = run_cl2d(p, 8, 6144, gb, 4, 2);
+            rec.point(
+                &format!("cloverleaf2d|{name}|{gb:.0}"),
+                "cloverleaf2d",
+                name,
+                gb,
+                &m,
+                oom,
+            );
+            fig.push(s, gb, bw_point((m, oom)));
         }
     }
     println!("{}", fig.render());
+    match rec.write() {
+        Ok(p) => println!("trajectory: {}", p.display()),
+        Err(e) => eprintln!("cannot write trajectory: {e}"),
+    }
     println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
 }

@@ -1,7 +1,9 @@
 //! Figure 7: problem scaling on the P100 — in-memory baseline (OOM past
 //! 16 GB) vs explicit tiled streaming over PCIe and NVLink, for all
 //! three applications.
-use ops_oc::bench_support::{bw_point, run_cl2d, run_cl3d, run_sbli_tall, Figure, GPU_SIZES_GB};
+use ops_oc::bench_support::{
+    bw_point, run_cl2d, run_cl3d, run_sbli_tall, telemetry::BenchRecorder, Figure, GPU_SIZES_GB,
+};
 use ops_oc::coordinator::Platform;
 use ops_oc::memory::Link;
 use std::time::Instant;
@@ -9,6 +11,7 @@ use std::time::Instant;
 fn main() {
     let t0 = Instant::now();
     let platforms = |link| Platform::GpuExplicit { link, cyclic: true, prefetch: true };
+    let mut rec = BenchRecorder::new("fig7_gpu_scaling");
     for app in ["CloverLeaf 2D", "CloverLeaf 3D", "OpenSBLI"] {
         let mut fig = Figure::new(
             &format!("Fig 7: {app} problem scaling on the P100"),
@@ -23,11 +26,19 @@ fn main() {
                 "CloverLeaf 3D" => run_cl3d(p, [8, 8, 6144], gb, 2, 0),
                 _ => run_sbli_tall(p, 2, gb, 1),
             };
-            fig.push(base, gb, bw_point(run(Platform::GpuBaseline { link: Link::NvLink })));
-            fig.push(pcie, gb, bw_point(run(platforms(Link::PciE))));
-            fig.push(nvl, gb, bw_point(run(platforms(Link::NvLink))));
+            let mut cell = |series: usize, plat: &str, res: (ops_oc::exec::Metrics, bool)| {
+                rec.point(&format!("{app}|{plat}|{gb:.0}"), app, plat, gb, &res.0, res.1);
+                fig.push(series, gb, bw_point(res));
+            };
+            cell(base, "baseline", run(Platform::GpuBaseline { link: Link::NvLink }));
+            cell(pcie, "tiled-pcie", run(platforms(Link::PciE)));
+            cell(nvl, "tiled-nvlink", run(platforms(Link::NvLink)));
         }
         println!("{}", fig.render());
+    }
+    match rec.write() {
+        Ok(p) => println!("trajectory: {}", p.display()),
+        Err(e) => eprintln!("cannot write trajectory: {e}"),
     }
     println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
 }

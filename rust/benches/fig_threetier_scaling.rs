@@ -14,7 +14,7 @@
 //!   fits host and degrades to the NVMe stream past 64 GiB instead of
 //!   dying.
 
-use ops_oc::bench_support::{run_cl2d, run_cl2d_cfg, Figure};
+use ops_oc::bench_support::{run_cl2d, run_cl2d_cfg, telemetry::BenchRecorder, Figure};
 use ops_oc::coordinator::{Config, Platform};
 use ops_oc::memory::{AppCalib, Link};
 use std::time::Instant;
@@ -46,6 +46,7 @@ fn main() {
 
     // sweep across both capacity boundaries
     let sizes = [6.0, 12.0, 16.0, 24.0, 48.0, 64.0, 96.0, 128.0, 192.0];
+    let mut rec = BenchRecorder::new("fig_threetier_scaling");
     let mut in_host: Option<f64> = None; // three-tier bw below the host boundary
     let mut past_host: Option<f64> = None;
     for gb in sizes {
@@ -53,6 +54,22 @@ fn main() {
         let (m2, oom_2) = run_cl2d_cfg(&two, false, 8, 6144, gb, 2, 0);
         let (m3, oom_3) = run_cl2d_cfg(&three, false, 8, 6144, gb, 2, 0);
         assert!(!oom_l && !oom_2 && !oom_3, "streaming never OOMs at {gb} GB");
+        rec.point(
+            &format!("cloverleaf2d|hbm+host|{gb:.0}"),
+            "cloverleaf2d",
+            "tiers:hbm+host",
+            gb,
+            &m2,
+            oom_2,
+        );
+        rec.point(
+            &format!("cloverleaf2d|hbm+host+nvme|{gb:.0}"),
+            "cloverleaf2d",
+            "tiers:hbm+host+nvme",
+            gb,
+            &m3,
+            oom_3,
+        );
         assert_eq!(
             ml.elapsed_s, m2.elapsed_s,
             "two-tier TieredEngine must match the legacy engine bit-exactly at {gb} GB"
@@ -79,7 +96,11 @@ fn main() {
         fig.push(s_three, gb, Some(b3));
         // past the host boundary the NVMe stream dominates the model
         if gb >= 2.0 * HOST_GB {
-            assert_eq!(m3.bound(), "upload", "past host DRAM the run is stream-bound");
+            assert_eq!(
+                m3.bound().name(),
+                "upload",
+                "past host DRAM the run is stream-bound"
+            );
             assert!(
                 b3 < b2,
                 "the nvme stream must cost bandwidth past host DRAM: {b3} !< {b2}"
@@ -97,5 +118,9 @@ fn main() {
         "three-tier keeps computing at {:.1} GB/s past host DRAM (in-host: {:.1} GB/s)",
         big3, small3
     );
+    match rec.write() {
+        Ok(p) => println!("trajectory: {}", p.display()),
+        Err(e) => eprintln!("cannot write trajectory: {e}"),
+    }
     println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
 }

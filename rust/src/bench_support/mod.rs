@@ -5,6 +5,25 @@ use crate::coordinator::{Config, Platform};
 use crate::exec::Metrics;
 use crate::memory::AppCalib;
 
+pub mod telemetry;
+
+/// Reset the span tracer for a fresh cell and, after the run, fold the
+/// tracer's totals into the cell's metrics so `--json` /
+/// `BENCH_*.json` report them. Every cell runner goes through this —
+/// instrumentation is always-on and must not perturb the modelled
+/// numbers (spans are host-time only).
+fn with_span_capture<F>(run: F) -> (Metrics, bool)
+where
+    F: FnOnce() -> (Metrics, bool),
+{
+    crate::obs::reset();
+    let (mut m, oom) = run();
+    let st = crate::obs::span_stats();
+    m.spans_recorded = st.total;
+    m.span_max_depth = st.max_depth;
+    (m, oom)
+}
+
 /// A point of one figure series.
 #[derive(Debug, Clone)]
 pub struct Point {
@@ -254,18 +273,20 @@ pub fn run_cl2d_cfg(
 ) -> (Metrics, bool) {
     let mut cfg = cfg.clone();
     cfg.app = AppCalib::CLOVERLEAF_2D;
-    let base = base_bytes(|b| {
-        CloverLeaf2D::new(b, nx, ny, 1);
-    });
-    let scale = model_scale(base, target_gb);
-    let mut b = ProgramBuilder::new();
-    let mut app = CloverLeaf2D::new(&mut b, nx, ny, scale);
-    let mut sess = freeze_session(b, &cfg);
-    if trace {
-        sess.metrics_mut().enable_trace();
-    }
-    app.run(&mut sess, steps, summary_every);
-    (sess.metrics().clone(), sess.oom())
+    with_span_capture(|| {
+        let base = base_bytes(|b| {
+            CloverLeaf2D::new(b, nx, ny, 1);
+        });
+        let scale = model_scale(base, target_gb);
+        let mut b = ProgramBuilder::new();
+        let mut app = CloverLeaf2D::new(&mut b, nx, ny, scale);
+        let mut sess = freeze_session(b, &cfg);
+        if trace {
+            sess.metrics_mut().enable_trace();
+        }
+        app.run(&mut sess, steps, summary_every);
+        (sess.metrics().clone(), sess.oom())
+    })
 }
 
 /// One CloverLeaf 3D cell.
@@ -318,18 +339,20 @@ pub fn run_cl3d_cfg(
 ) -> (Metrics, bool) {
     let mut cfg = cfg.clone();
     cfg.app = AppCalib::CLOVERLEAF_3D;
-    let base = base_bytes(|b| {
-        CloverLeaf3D::new(b, n[0], n[1], n[2], 1);
-    });
-    let scale = model_scale(base, target_gb);
-    let mut b = ProgramBuilder::new();
-    let mut app = CloverLeaf3D::new(&mut b, n[0], n[1], n[2], scale);
-    let mut sess = freeze_session(b, &cfg);
-    if trace {
-        sess.metrics_mut().enable_trace();
-    }
-    app.run(&mut sess, steps, summary_every);
-    (sess.metrics().clone(), sess.oom())
+    with_span_capture(|| {
+        let base = base_bytes(|b| {
+            CloverLeaf3D::new(b, n[0], n[1], n[2], 1);
+        });
+        let scale = model_scale(base, target_gb);
+        let mut b = ProgramBuilder::new();
+        let mut app = CloverLeaf3D::new(&mut b, n[0], n[1], n[2], scale);
+        let mut sess = freeze_session(b, &cfg);
+        if trace {
+            sess.metrics_mut().enable_trace();
+        }
+        app.run(&mut sess, steps, summary_every);
+        (sess.metrics().clone(), sess.oom())
+    })
 }
 
 /// One OpenSBLI cell; `steps_per_chain` is the §5.3 tile-depth knob.
@@ -340,16 +363,18 @@ pub fn run_sbli(
     target_gb: f64,
     chains: usize,
 ) -> (Metrics, bool) {
-    let base = base_bytes(|b| {
-        OpenSbli::new(b, n, steps_per_chain, 1);
-    });
-    let scale = model_scale(base, target_gb);
-    let cfg = Config::new(platform, AppCalib::OPENSBLI);
-    let mut b = ProgramBuilder::new();
-    let mut app = OpenSbli::new(&mut b, n, steps_per_chain, scale);
-    let mut sess = freeze_session(b, &cfg);
-    app.run(&mut sess, chains);
-    (sess.metrics().clone(), sess.oom())
+    with_span_capture(|| {
+        let base = base_bytes(|b| {
+            OpenSbli::new(b, n, steps_per_chain, 1);
+        });
+        let scale = model_scale(base, target_gb);
+        let cfg = Config::new(platform, AppCalib::OPENSBLI);
+        let mut b = ProgramBuilder::new();
+        let mut app = OpenSbli::new(&mut b, n, steps_per_chain, scale);
+        let mut sess = freeze_session(b, &cfg);
+        app.run(&mut sess, chains);
+        (sess.metrics().clone(), sess.oom())
+    })
 }
 
 /// Effective-bandwidth value for a figure point (None on OOM — the paper
@@ -414,16 +439,18 @@ pub fn run_sbli_tall_cfg(
     let n = [24usize, 24, 1024];
     let mut cfg = cfg.clone();
     cfg.app = AppCalib::OPENSBLI;
-    let base = base_bytes(|b| {
-        OpenSbli::new_aniso(b, n, steps_per_chain, 1);
-    });
-    let scale = model_scale(base, target_gb);
-    let mut b = ProgramBuilder::new();
-    let mut app = OpenSbli::new_aniso(&mut b, n, steps_per_chain, scale);
-    let mut sess = freeze_session(b, &cfg);
-    if trace {
-        sess.metrics_mut().enable_trace();
-    }
-    app.run(&mut sess, chains);
-    (sess.metrics().clone(), sess.oom())
+    with_span_capture(|| {
+        let base = base_bytes(|b| {
+            OpenSbli::new_aniso(b, n, steps_per_chain, 1);
+        });
+        let scale = model_scale(base, target_gb);
+        let mut b = ProgramBuilder::new();
+        let mut app = OpenSbli::new_aniso(&mut b, n, steps_per_chain, scale);
+        let mut sess = freeze_session(b, &cfg);
+        if trace {
+            sess.metrics_mut().enable_trace();
+        }
+        app.run(&mut sess, chains);
+        (sess.metrics().clone(), sess.oom())
+    })
 }

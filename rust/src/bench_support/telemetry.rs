@@ -1,0 +1,403 @@
+//! Bench-trajectory telemetry: the figure benches record one flat JSON
+//! point per (app, platform, size) cell into `BENCH_<name>.json`, and
+//! `ops-oc bench-diff <old> <new>` compares two trajectory files,
+//! failing when any shared cell's makespan regressed by more than the
+//! tolerance. Hand-rendered and hand-parsed — the crate is
+//! dependency-free — but the parser tolerates pretty-printed output
+//! (e.g. a file rewritten by `python3 -m json.tool`).
+
+use crate::exec::Metrics;
+use std::io;
+use std::path::PathBuf;
+
+/// FNV-1a over the parts that identify a cell's configuration, with a
+/// separator byte so `("ab","c")` and `("a","bc")` digest differently.
+/// Stable across runs and platforms — the digest pins a trajectory
+/// point to its configuration so diffs of unrelated sweeps are caught.
+pub fn config_digest(parts: &[&str]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for p in parts {
+        for b in p.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h ^= 0xff;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Render one flat trajectory point. `key` identifies the cell within
+/// the trajectory (diffs match on it); everything else is the cell's
+/// observed telemetry.
+pub fn point_json(
+    key: &str,
+    app: &str,
+    platform: &str,
+    size_gb: f64,
+    m: &Metrics,
+    oom: bool,
+) -> String {
+    let q = |p: f64| {
+        m.histogram_quantiles("loop_time_s", &[p])
+            .map_or(0.0, |v| v[0])
+    };
+    format!(
+        concat!(
+            "{{\"key\":\"{}\",\"app\":\"{}\",\"platform\":\"{}\",",
+            "\"size_gb\":{:.3},\"makespan_s\":{:.9},\"bound\":\"{}\",",
+            "\"oom\":{},\"avg_bandwidth_gbs\":{:.3},",
+            "\"util_compute\":{:.4},\"util_upload\":{:.4},",
+            "\"p50_loop_time_s\":{:.9},\"p99_loop_time_s\":{:.9},",
+            "\"spans_recorded\":{},\"config_digest\":\"{:016x}\"}}"
+        ),
+        esc(key),
+        esc(app),
+        esc(platform),
+        size_gb,
+        m.elapsed_s,
+        m.bound().name(),
+        oom,
+        m.average_bandwidth_gbs(),
+        m.stream_util(crate::exec::timeline::StreamClass::Compute),
+        m.stream_util(crate::exec::timeline::StreamClass::Upload),
+        q(0.5),
+        q(0.99),
+        m.spans_recorded,
+        config_digest(&[app, platform, &format!("{size_gb:.3}")]),
+    )
+}
+
+/// Collects trajectory points for one bench and writes
+/// `BENCH_<name>.json` (a JSON array of flat points) into
+/// `$OPS_OC_BENCH_DIR` or the current directory.
+#[derive(Debug, Default)]
+pub struct BenchRecorder {
+    name: String,
+    points: Vec<String>,
+}
+
+impl BenchRecorder {
+    pub fn new(name: &str) -> Self {
+        BenchRecorder {
+            name: name.to_string(),
+            points: Vec::new(),
+        }
+    }
+
+    /// Record one cell's telemetry.
+    pub fn point(
+        &mut self,
+        key: &str,
+        app: &str,
+        platform: &str,
+        size_gb: f64,
+        m: &Metrics,
+        oom: bool,
+    ) {
+        self.points
+            .push(point_json(key, app, platform, size_gb, m, oom));
+    }
+
+    /// The output path: `BENCH_<name>.json` under `$OPS_OC_BENCH_DIR`
+    /// (or `.`).
+    pub fn path(&self) -> PathBuf {
+        let dir = std::env::var("OPS_OC_BENCH_DIR").unwrap_or_else(|_| ".".into());
+        PathBuf::from(dir).join(format!("BENCH_{}.json", self.name))
+    }
+
+    /// Write the trajectory file and return its path.
+    pub fn write(&self) -> io::Result<PathBuf> {
+        let path = self.path();
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+
+    /// The file contents: one point per line inside a JSON array.
+    pub fn render(&self) -> String {
+        let mut out = String::from("[\n");
+        out.push_str(&self.points.join(",\n"));
+        out.push_str("\n]\n");
+        out
+    }
+}
+
+/// Append one point to a trajectory file, creating it when absent —
+/// the CLI's `--bench-out` accumulates runs into one file this way.
+pub fn append_point(path: &str, point: &str) -> io::Result<()> {
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let trimmed = existing.trim_end();
+    let out = match trimmed.strip_suffix(']') {
+        Some(head) if !head.trim().is_empty() => {
+            let head = head.trim_end();
+            if head.ends_with('[') {
+                format!("{head}\n{point}\n]\n")
+            } else {
+                format!("{head},\n{point}\n]\n")
+            }
+        }
+        _ => format!("[\n{point}\n]\n"),
+    };
+    std::fs::write(path, out)
+}
+
+/// One parsed trajectory point: its key and makespan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchPoint {
+    pub key: String,
+    pub makespan_s: f64,
+}
+
+/// Parse a trajectory file (a JSON array of flat objects). Tolerant of
+/// whitespace and field order; only `key` and `makespan_s` are read.
+pub fn parse_points(text: &str) -> Result<Vec<BenchPoint>, String> {
+    let mut points = Vec::new();
+    for (i, obj) in split_objects(text)?.into_iter().enumerate() {
+        let key = find_string_field(&obj, "key")
+            .ok_or_else(|| format!("point {i}: missing \"key\""))?;
+        let makespan_s = find_number_field(&obj, "makespan_s")
+            .ok_or_else(|| format!("point {i} ({key}): missing \"makespan_s\""))?;
+        points.push(BenchPoint { key, makespan_s });
+    }
+    Ok(points)
+}
+
+/// Split the top-level JSON array into the text of each object,
+/// tracking strings and brace depth.
+fn split_objects(text: &str) -> Result<Vec<String>, String> {
+    let mut objs = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut escaped = false;
+    let mut start = None;
+    for (i, c) in text.char_indices() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' => {
+                if depth == 0 {
+                    start = Some(i);
+                }
+                depth += 1;
+            }
+            '}' => {
+                depth = depth
+                    .checked_sub(1)
+                    .ok_or_else(|| "unbalanced '}'".to_string())?;
+                if depth == 0 {
+                    let s = start.take().ok_or_else(|| "object without start".to_string())?;
+                    objs.push(text[s..=i].to_string());
+                }
+            }
+            _ => {}
+        }
+    }
+    if depth != 0 || in_str {
+        return Err("truncated JSON".into());
+    }
+    Ok(objs)
+}
+
+/// Value text after `"name":` (whitespace-tolerant), up to the next
+/// comma/brace at the value level.
+fn field_value<'a>(obj: &'a str, name: &str) -> Option<&'a str> {
+    let pat = format!("\"{name}\"");
+    let mut from = 0;
+    while let Some(off) = obj[from..].find(&pat) {
+        let after = from + off + pat.len();
+        let rest = obj[after..].trim_start();
+        if let Some(v) = rest.strip_prefix(':') {
+            return Some(v.trim_start());
+        }
+        from = after;
+    }
+    None
+}
+
+fn find_string_field(obj: &str, name: &str) -> Option<String> {
+    let v = field_value(obj, name)?.strip_prefix('"')?;
+    let mut out = String::new();
+    let mut escaped = false;
+    for c in v.chars() {
+        if escaped {
+            out.push(c);
+            escaped = false;
+        } else if c == '\\' {
+            escaped = true;
+        } else if c == '"' {
+            return Some(out);
+        } else {
+            out.push(c);
+        }
+    }
+    None
+}
+
+fn find_number_field(obj: &str, name: &str) -> Option<f64> {
+    let v = field_value(obj, name)?;
+    let end = v
+        .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+        .unwrap_or(v.len());
+    v[..end].parse().ok()
+}
+
+/// One compared cell.
+#[derive(Debug, Clone)]
+pub struct DiffLine {
+    pub key: String,
+    pub old_s: f64,
+    pub new_s: f64,
+    pub delta_pct: f64,
+    pub regressed: bool,
+}
+
+/// The result of comparing two trajectory files.
+#[derive(Debug, Clone, Default)]
+pub struct DiffReport {
+    pub lines: Vec<DiffLine>,
+    /// Keys present in the old file but not the new.
+    pub missing: Vec<String>,
+    /// Keys present only in the new file.
+    pub added: Vec<String>,
+}
+
+impl DiffReport {
+    pub fn regressions(&self) -> usize {
+        self.lines.iter().filter(|l| l.regressed).count()
+    }
+}
+
+/// Compare two trajectories; a cell regresses when its new makespan is
+/// *strictly* above `old * (1 + tol_pct/100)` — a file diffed against
+/// itself passes at any tolerance, including 0%.
+pub fn diff(old_text: &str, new_text: &str, tol_pct: f64) -> Result<DiffReport, String> {
+    let old = parse_points(old_text)?;
+    let new = parse_points(new_text)?;
+    let mut report = DiffReport::default();
+    for o in &old {
+        match new.iter().find(|n| n.key == o.key) {
+            None => report.missing.push(o.key.clone()),
+            Some(n) => {
+                let delta_pct = if o.makespan_s > 0.0 {
+                    (n.makespan_s / o.makespan_s - 1.0) * 100.0
+                } else {
+                    0.0
+                };
+                let regressed = n.makespan_s > o.makespan_s * (1.0 + tol_pct / 100.0);
+                report.lines.push(DiffLine {
+                    key: o.key.clone(),
+                    old_s: o.makespan_s,
+                    new_s: n.makespan_s,
+                    delta_pct,
+                    regressed,
+                });
+            }
+        }
+    }
+    for n in &new {
+        if !old.iter().any(|o| o.key == n.key) {
+            report.added.push(n.key.clone());
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m_with_time(t: f64) -> Metrics {
+        let mut m = Metrics::new();
+        m.record_loop("k", 1_000_000_000, t / 2.0);
+        m.record_loop("k", 1_000_000_000, t / 2.0);
+        m.elapsed_s = t;
+        m
+    }
+
+    #[test]
+    fn points_roundtrip_through_the_parser() {
+        let mut rec = BenchRecorder::new("t");
+        rec.point("a|6", "cl2d", "knl", 6.0, &m_with_time(0.25), false);
+        rec.point("a|48", "cl2d", "knl", 48.0, &m_with_time(2.0), false);
+        let pts = parse_points(&rec.render()).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].key, "a|6");
+        assert!((pts[0].makespan_s - 0.25).abs() < 1e-12);
+        assert!((pts[1].makespan_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parser_tolerates_pretty_printed_json() {
+        let text = "[\n  {\n    \"key\": \"cell one\",\n    \"makespan_s\": 1.5e-1,\n    \"bound\": \"idle\"\n  },\n  {\"makespan_s\":2, \"key\":\"two\"}\n]\n";
+        let pts = parse_points(text).unwrap();
+        assert_eq!(pts[0].key, "cell one");
+        assert!((pts[0].makespan_s - 0.15).abs() < 1e-12);
+        assert_eq!(pts[1].key, "two");
+        assert_eq!(pts[1].makespan_s, 2.0);
+    }
+
+    #[test]
+    fn self_diff_passes_at_zero_tolerance() {
+        let mut rec = BenchRecorder::new("t");
+        rec.point("a", "x", "p", 6.0, &m_with_time(0.5), false);
+        let text = rec.render();
+        let report = diff(&text, &text, 0.0).unwrap();
+        assert_eq!(report.regressions(), 0);
+        assert!(report.missing.is_empty() && report.added.is_empty());
+    }
+
+    #[test]
+    fn regression_beyond_tolerance_is_flagged() {
+        let old = "[{\"key\":\"a\",\"makespan_s\":1.0}]";
+        let ok = "[{\"key\":\"a\",\"makespan_s\":1.09}]";
+        let bad = "[{\"key\":\"a\",\"makespan_s\":1.2}]";
+        assert_eq!(diff(old, ok, 10.0).unwrap().regressions(), 0);
+        let r = diff(old, bad, 10.0).unwrap();
+        assert_eq!(r.regressions(), 1);
+        assert!((r.lines[0].delta_pct - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn missing_and_added_keys_are_reported() {
+        let old = "[{\"key\":\"a\",\"makespan_s\":1.0},{\"key\":\"b\",\"makespan_s\":1.0}]";
+        let new = "[{\"key\":\"b\",\"makespan_s\":1.0},{\"key\":\"c\",\"makespan_s\":1.0}]";
+        let r = diff(old, new, 5.0).unwrap();
+        assert_eq!(r.missing, vec!["a"]);
+        assert_eq!(r.added, vec!["c"]);
+        assert_eq!(r.lines.len(), 1);
+    }
+
+    #[test]
+    fn append_point_grows_an_array_in_place() {
+        let dir = std::env::temp_dir().join("ops_oc_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_append.json");
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+        append_point(path, "{\"key\":\"a\",\"makespan_s\":1.0}").unwrap();
+        append_point(path, "{\"key\":\"b\",\"makespan_s\":2.0}").unwrap();
+        let pts = parse_points(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].key, "b");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn digest_separates_part_boundaries() {
+        assert_ne!(config_digest(&["ab", "c"]), config_digest(&["a", "bc"]));
+        assert_eq!(config_digest(&["a", "b"]), config_digest(&["a", "b"]));
+    }
+}

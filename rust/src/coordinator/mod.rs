@@ -10,7 +10,7 @@ pub mod config;
 pub mod report;
 
 pub use config::{Config, InnerPlatform, Platform, Target, TieredTarget};
-pub use report::{json_record, print_summary, Summary};
+pub use report::{json_record, print_summary, print_summary_with_topology, Summary};
 
 use crate::exec::Metrics;
 use crate::ops::surface::Drive;

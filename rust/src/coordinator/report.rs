@@ -67,6 +67,32 @@ pub fn json_record(
             }
         }
     }
+    // Telemetry fields: histogram quantiles (`p50_*`/`p90_*`/`p99_*`)
+    // from the obs registry, and per-stream roofline rows keyed under a
+    // stable `roofline_*` prefix (see `crate::obs::roofline`).
+    let san = |s: &str| -> String {
+        s.chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect()
+    };
+    let mut obs_fields = String::new();
+    for (name, h) in m.obs.histograms() {
+        let key = san(name);
+        for (label, q) in [("p50", 0.5), ("p90", 0.9), ("p99", 0.99)] {
+            if let Some(v) = h.quantile(q) {
+                obs_fields.push_str(&format!(",\"{label}_{key}\":{v:.9}"));
+            }
+        }
+    }
+    for row in &crate::obs::roofline::build(topology, m).rows {
+        let key = san(&row.name);
+        obs_fields.push_str(&format!(
+            ",\"roofline_{key}_peak_gbs\":{:.3},\"roofline_{key}_achieved_gbs\":{:.3},\"roofline_{key}_frac\":{:.4}",
+            row.peak_gbs,
+            row.achieved_gbs,
+            row.frac_of_peak(),
+        ));
+    }
     format!(
         concat!(
             "{{\"app\":\"{}\",\"platform\":\"{}\",\"topology\":\"{}\",",
@@ -79,7 +105,8 @@ pub fn json_record(
             "\"tuned_model_s\":{:.6},\"heuristic_model_s\":{:.6},",
             "\"tune_model_speedup\":{:.4},",
             "\"analysis_builds\":{},\"analysis_reuse_hits\":{},",
-            "\"program_freeze_s\":{:.6}}}"
+            "\"program_freeze_s\":{:.6},",
+            "\"spans_recorded\":{},\"span_max_depth\":{}{}}}"
         ),
         esc(app),
         esc(platform),
@@ -92,7 +119,7 @@ pub fn json_record(
         m.effective_bandwidth_gbs(),
         m.halo_time_s,
         m.tiles,
-        m.bound(),
+        m.bound().name(),
         m.stream_util(StreamClass::Compute),
         m.stream_util(StreamClass::Upload),
         m.stream_util(StreamClass::Download),
@@ -107,6 +134,9 @@ pub fn json_record(
         m.analysis_builds,
         m.analysis_reuse_hits,
         m.program_freeze_s,
+        m.spans_recorded,
+        m.span_max_depth,
+        obs_fields,
     )
 }
 
@@ -186,7 +216,7 @@ pub fn print_summary(label: &str, problem_bytes: u64, m: &Metrics, oom: bool) {
         );
     }
     if !m.per_resource.is_empty() {
-        println!("  bound by            : {} stream", m.bound());
+        println!("  bound by            : {} stream", m.bound().name());
         if let Some((name, u)) = m.bound_resource() {
             println!("  busiest stream      : {} ({:.0}%)", name, u * 100.0);
         }
@@ -262,6 +292,62 @@ pub fn print_summary(label: &str, problem_bytes: u64, m: &Metrics, oom: bool) {
             );
         }
     }
+    if let Some(qs) = m.histogram_quantiles("loop_time_s", &[0.5, 0.99]) {
+        println!(
+            "  loop time quantiles : p50 {:.6} s, p99 {:.6} s ({} samples)",
+            qs[0],
+            qs[1],
+            m.obs.histogram("loop_time_s").map_or(0, |h| h.count())
+        );
+    }
+    if m.spans_recorded > 0 {
+        println!(
+            "  lifecycle spans     : {} recorded, max depth {}",
+            m.spans_recorded, m.span_max_depth
+        );
+    }
+}
+
+/// [`print_summary`] plus a per-stream roofline table: modelled achieved
+/// GB/s on every stream against the topology's peak for that stream's
+/// tier or link, and the §5.1 per-kernel bytes ledger.
+pub fn print_summary_with_topology(
+    label: &str,
+    problem_bytes: u64,
+    topology: &Topology,
+    m: &Metrics,
+    oom: bool,
+) {
+    print_summary(label, problem_bytes, m, oom);
+    if oom {
+        return;
+    }
+    let roof = crate::obs::roofline::build(topology, m);
+    if !roof.rows.is_empty() {
+        println!("  roofline (modelled achieved vs topology peak):");
+        for row in &roof.rows {
+            println!(
+                "    {:<18} {:>8.1} / {:<8.1} GB/s  {:>5.1} % of peak  (busy {:>5.1} %)",
+                row.name,
+                row.achieved_gbs,
+                row.peak_gbs,
+                row.frac_of_peak() * 100.0,
+                row.busy_frac * 100.0,
+            );
+        }
+    }
+    if !roof.kernels.is_empty() {
+        println!("  kernel bytes ledger (§5.1):");
+        for k in roof.kernels.iter().take(5) {
+            println!(
+                "    {:<28} {:>9.3} GB  {:>8.1} GB/s  x{}",
+                k.name,
+                k.bytes as f64 / 1e9,
+                k.achieved_gbs,
+                k.invocations,
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -294,7 +380,9 @@ mod tests {
         assert!(j.contains("\"oom\":false"));
         assert!(j.contains("\"tuned\":false"));
         assert!(j.contains("\"tune_model_speedup\":1.0000"));
-        assert!(j.contains("\"bound\":\"none\""));
+        assert!(j.contains("\"bound\":\"idle\""));
+        assert!(j.contains("\"spans_recorded\":0"));
+        assert!(j.contains("\"p50_loop_time_s\":"));
         assert!(j.contains("\"util_compute\":0.0000"));
         assert!(!j.contains("util_tier_"), "no per-tier streams ran: {j}");
     }

@@ -94,6 +94,9 @@ impl Engine for ShardedEngine {
             return;
         }
         world.metrics.chains += 1;
+        let sp = crate::obs::span("sharded");
+        sp.field("loops", chain.len());
+        sp.field("ranks", self.inner.len());
         let ranks = self.inner.len();
         let decomp: Decomposition = decompose(chain, ranks, self.kind);
 
@@ -127,6 +130,12 @@ impl Engine for ShardedEngine {
         let mut wall_exchange = 0.0f64;
         let mut messages = 0u64;
         for r in 0..ranks {
+            // Spans recorded by the rank's inner engine carry the same
+            // `r{r}:` prefix as its re-namespaced streams and trace
+            // events, so a sharded span tree attributes work per rank.
+            let _ns = crate::obs::namespace(&format!("r{r}"));
+            let rsp = crate::obs::span("rank");
+            rsp.field("rank", r);
             let rank_chain: Vec<LoopInst> = chain
                 .iter()
                 .filter_map(|l| {

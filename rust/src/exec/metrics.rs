@@ -4,6 +4,7 @@
 //! — equivalently, total useful bytes over total loop time.
 
 use super::timeline::{StreamClass, Timeline, TraceEvent};
+use crate::obs::Registry;
 use std::collections::{BTreeMap, HashMap};
 
 /// Accumulated statistics for one kernel name.
@@ -65,6 +66,29 @@ impl RankStat {
     }
 }
 
+/// Bottleneck attribution verdict: which stream class the run spent the
+/// largest fraction of its wall clock on, or [`Bound::Idle`] when no
+/// stream accumulated any busy time at all (nothing ran — e.g. a chain
+/// whose datasets were all skipped via §4.1 skip lists).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    /// No resource was ever busy: there is nothing to attribute.
+    Idle,
+    /// The busiest stream class.
+    Stream(StreamClass),
+}
+
+impl Bound {
+    /// Stable lower-case name for reports and the `--json` record
+    /// (`"idle"`, `"compute"`, `"upload"`, ...).
+    pub fn name(self) -> &'static str {
+        match self {
+            Bound::Idle => "idle",
+            Bound::Stream(c) => c.name(),
+        }
+    }
+}
+
 /// Simulation-wide metrics sink.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
@@ -122,6 +146,17 @@ pub struct Metrics {
     /// Per-timeline-resource busy/byte accounting (bottleneck
     /// attribution). BTreeMap for deterministic report ordering.
     pub per_resource: BTreeMap<String, ResourceStat>,
+    /// Observability registry: counters, gauges and log-linear
+    /// histograms of modelled quantities (per-loop timings, chain
+    /// makespans, halo exchanges). Merges exactly like the scalar
+    /// fields, so sweep cells and sharded ranks fold together.
+    pub obs: Registry,
+    /// Lifecycle spans recorded by the run's thread (captured from
+    /// [`crate::obs::span_stats`] by the bench/CLI drivers — spans are
+    /// thread-local and do not live on this sink).
+    pub spans_recorded: u64,
+    /// Deepest span nesting observed (freeze → replay → chain → tile).
+    pub span_max_depth: u64,
     /// Recorded timeline events (`Some` once tracing is enabled; the
     /// `--trace` Chrome-trace export renders these).
     trace: Option<Vec<TraceEvent>>,
@@ -136,6 +171,7 @@ impl Metrics {
     pub fn record_loop(&mut self, name: &str, bytes: u64, time_s: f64) {
         self.loop_bytes += bytes;
         self.loop_time_s += time_s;
+        self.obs.record("loop_time_s", time_s);
         let st = self.per_loop.entry(name.to_string()).or_default();
         st.invocations += 1;
         st.bytes += bytes;
@@ -238,7 +274,17 @@ impl Metrics {
                 sink.push(ev);
             }
         }
+        self.obs.record("chain_makespan_s", tl.makespan());
         self.elapsed_s += tl.makespan();
+    }
+
+    /// Quantile point estimates for one registry histogram: `None` when
+    /// the series was never recorded, otherwise one (conservative upper
+    /// bound) value per requested quantile. The fleet-simulator p50/p99
+    /// API (ROADMAP #4).
+    pub fn histogram_quantiles(&self, name: &str, qs: &[f64]) -> Option<Vec<f64>> {
+        let h = self.obs.histogram(name)?;
+        qs.iter().map(|&q| h.quantile(q)).collect()
     }
 
     /// Utilisation of one stream class over the whole run, in `[0, 1]`:
@@ -287,13 +333,19 @@ impl Metrics {
             .iter()
             .map(|(k, st)| (k.as_str(), (st.busy_s / self.elapsed_s).min(1.0)))
             .max_by(|a, b| a.1.total_cmp(&b.1))
+            // a ledger of never-busy streams (every dataset skipped via
+            // §4.1 skip lists) has no bottleneck — don't name an
+            // arbitrary idle stream
+            .filter(|&(_, u)| u > 0.0)
     }
 
     /// Bottleneck attribution: the stream class with the highest
-    /// utilisation (`"none"` when nothing ran). A compute-bound run
-    /// reports `compute`; a PCIe-upload-bound streaming run `upload`.
-    pub fn bound(&self) -> &'static str {
-        let mut name = "none";
+    /// utilisation, or [`Bound::Idle`] when nothing accumulated busy
+    /// time (empty ledger, or an all-skipped chain). A compute-bound
+    /// run reports `Stream(Compute)`; a PCIe-upload-bound streaming run
+    /// `Stream(Upload)`.
+    pub fn bound(&self) -> Bound {
+        let mut bound = Bound::Idle;
         let mut top = 0.0f64;
         for class in StreamClass::ALL {
             let u = self.stream_util(class);
@@ -301,10 +353,10 @@ impl Metrics {
             // class, and a bound requires some utilisation at all
             if u > top {
                 top = u;
-                name = class.name();
+                bound = Bound::Stream(class);
             }
         }
-        name
+        bound
     }
 
     /// The headline metric: weighted Average Bandwidth in GB/s.
@@ -390,6 +442,9 @@ impl Metrics {
         for (name, st) in &other.per_resource {
             self.record_stream(name, st.class, st.busy_s, st.bytes, st.events);
         }
+        self.obs.merge(&other.obs);
+        self.spans_recorded += other.spans_recorded;
+        self.span_max_depth = self.span_max_depth.max(other.span_max_depth);
         if let Some(theirs) = &other.trace {
             // Event times stay on each source's own clock — sweep cells
             // are independent runs, so a merged trace is per-cell.
@@ -468,18 +523,40 @@ mod tests {
         assert_eq!(evs[0].start_s, 1.0);
         assert_eq!(evs[1].start_s, 1.5);
         // attribution: compute is the busiest stream
-        assert_eq!(m.bound(), "compute");
+        assert_eq!(m.bound(), Bound::Stream(StreamClass::Compute));
+        assert_eq!(m.bound().name(), "compute");
+        // the absorbed chain's makespan landed in the registry
+        assert_eq!(m.obs.histogram("chain_makespan_s").unwrap().count(), 1);
         assert!((m.stream_util(StreamClass::Compute) - 2.0 / 3.5).abs() < 1e-12);
         assert!((m.stream_util(StreamClass::Upload) - 0.5 / 3.5).abs() < 1e-12);
         assert_eq!(m.stream_util(StreamClass::Download), 0.0);
     }
 
     #[test]
-    fn bound_is_none_when_nothing_ran() {
+    fn bound_is_idle_when_nothing_ran() {
         let m = Metrics::new();
-        assert_eq!(m.bound(), "none");
+        assert_eq!(m.bound(), Bound::Idle);
+        assert_eq!(m.bound().name(), "idle");
         assert!(!m.trace_enabled());
         assert!(m.trace_events().is_empty());
+    }
+
+    #[test]
+    fn all_skipped_chain_reports_idle_not_an_arbitrary_stream() {
+        // §4.1 skip lists can skip every dataset of a chain: streams get
+        // registered on the timeline but never accumulate busy time.
+        // Attribution must say "idle", not crown the first-named stream.
+        let mut m = Metrics::new();
+        m.elapsed_s = 1.0;
+        m.record_stream("compute", StreamClass::Compute, 0.0, 0, 0);
+        m.record_stream("upload", StreamClass::Upload, 0.0, 0, 0);
+        assert_eq!(m.bound(), Bound::Idle);
+        assert_eq!(m.bound().name(), "idle");
+        assert_eq!(m.bound_resource(), None, "no idle stream gets named");
+        // the moment anything runs, attribution resumes
+        m.record_stream("upload", StreamClass::Upload, 0.25, 64, 1);
+        assert_eq!(m.bound(), Bound::Stream(StreamClass::Upload));
+        assert_eq!(m.bound_resource(), Some(("upload", 0.25)));
     }
 
     #[test]
@@ -506,7 +583,29 @@ mod tests {
         m.record_stream("r0:compute", StreamClass::Compute, 9.0, 0, 1);
         m.record_stream("r1:compute", StreamClass::Compute, 4.0, 0, 1);
         assert!((m.stream_util(StreamClass::Compute) - 0.9).abs() < 1e-12);
-        assert_eq!(m.bound(), "compute");
+        assert_eq!(m.bound(), Bound::Stream(StreamClass::Compute));
+    }
+
+    #[test]
+    fn registry_and_span_stats_ride_along_on_merge() {
+        let mut a = Metrics::new();
+        a.record_loop("k", 8, 0.5);
+        a.spans_recorded = 3;
+        a.span_max_depth = 2;
+        let mut b = Metrics::new();
+        b.record_loop("k", 8, 1.5);
+        b.obs.counter_add("tiles_done", 4);
+        b.spans_recorded = 5;
+        b.span_max_depth = 4;
+        a.merge(&b);
+        assert_eq!(a.obs.histogram("loop_time_s").unwrap().count(), 2);
+        assert_eq!(a.obs.counter("tiles_done"), 4);
+        assert_eq!(a.spans_recorded, 8);
+        assert_eq!(a.span_max_depth, 4);
+        let qs = a.histogram_quantiles("loop_time_s", &[0.5, 0.99]).unwrap();
+        assert_eq!(qs.len(), 2);
+        assert!(qs[0] <= qs[1]);
+        assert!(a.histogram_quantiles("absent", &[0.5]).is_none());
     }
 
     #[test]

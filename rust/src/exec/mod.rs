@@ -13,10 +13,12 @@ pub mod native;
 pub mod pjrt;
 pub mod timeline;
 
-pub use metrics::{LoopStat, Metrics, RankStat, ResourceStat};
+pub use metrics::{Bound, LoopStat, Metrics, RankStat, ResourceStat};
 pub use native::NativeExecutor;
 pub use pjrt::PjrtExecutor;
-pub use timeline::{chrome_trace_json, EventKind, StreamClass, Timeline, TraceEvent};
+pub use timeline::{
+    chrome_trace_json, chrome_trace_json_with_spans, EventKind, StreamClass, Timeline, TraceEvent,
+};
 
 use crate::ops::{DataStore, Dataset, LoopInst, Range3, Reduction, Stencil};
 

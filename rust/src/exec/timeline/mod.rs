@@ -404,6 +404,59 @@ pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
     out
 }
 
+/// [`chrome_trace_json`] plus the run's lifecycle spans as a second
+/// trace process: pid 0 carries the modelled streams, pid 1 the host-
+/// time span tree (one `tid` per nesting depth, so parents visually
+/// contain their children). Lets `--trace` show *why* the modelled
+/// clock advanced (which freeze/replay/tile phase drove it) next to the
+/// streams themselves.
+pub fn chrome_trace_json_with_spans(
+    events: &[TraceEvent],
+    spans: &[crate::obs::SpanRec],
+) -> String {
+    let base = chrome_trace_json(events);
+    if spans.is_empty() {
+        return base;
+    }
+    // splice span events into the traceEvents array before the closing
+    // "]}" of the base render
+    let mut out = String::from(&base[..base.len() - 2]);
+    let had_events = !events.is_empty();
+    let mut first = !had_events;
+    let mut push = |s: String, first: &mut bool, out: &mut String| {
+        if !*first {
+            out.push(',');
+            out.push('\n');
+        }
+        *first = false;
+        out.push_str(&s);
+    };
+    push(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{\"name\":\"lifecycle spans (host time)\"}}"
+            .to_string(),
+        &mut first,
+        &mut out,
+    );
+    for sp in spans {
+        push(
+            format!(
+                "{{\"name\":\"{}\",\"cat\":\"span\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+                 \"ts\":{:.3},\"dur\":{:.3},\"args\":{{\"depth\":{}}}}}",
+                esc(&sp.name),
+                sp.depth,
+                sp.start_s * 1e6,
+                (sp.end_s - sp.start_s) * 1e6,
+                sp.depth,
+            ),
+            &mut first,
+            &mut out,
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -483,6 +536,47 @@ mod tests {
         assert_eq!(evs.len(), 1);
         assert_eq!(evs[0].label, "k");
         assert_eq!(evs[0].bytes, 8);
+    }
+
+    #[test]
+    fn chrome_trace_with_spans_adds_a_second_process() {
+        use crate::obs::SpanRec;
+        let mut tl = Timeline::new(true);
+        let c = tl.resource("compute", StreamClass::Compute);
+        tl.push(c, EventKind::Compute, "k", 1e-3, 64);
+        let spans = vec![
+            SpanRec {
+                id: 0,
+                parent: None,
+                name: "replay".into(),
+                depth: 0,
+                start_s: 0.0,
+                end_s: 2e-3,
+                fields: Vec::new(),
+            },
+            SpanRec {
+                id: 1,
+                parent: Some(0),
+                name: "chain".into(),
+                depth: 1,
+                start_s: 5e-4,
+                end_s: 1.5e-3,
+                fields: Vec::new(),
+            },
+        ];
+        let j = chrome_trace_json_with_spans(&tl.take_events(), &spans);
+        assert!(j.starts_with("{\"traceEvents\":["));
+        assert!(j.ends_with("]}"));
+        assert!(j.contains("\"name\":\"k\""), "engine events kept");
+        assert!(j.contains("lifecycle spans (host time)"));
+        assert!(j.contains("\"name\":\"replay\",\"cat\":\"span\""));
+        assert!(j.contains("\"pid\":1,\"tid\":1"), "child span on depth tid");
+        // no spans → byte-identical to the plain renderer
+        let mut tl2 = Timeline::new(true);
+        let c2 = tl2.resource("compute", StreamClass::Compute);
+        tl2.push(c2, EventKind::Compute, "k", 1e-3, 64);
+        let evs = tl2.take_events();
+        assert_eq!(chrome_trace_json_with_spans(&evs, &[]), chrome_trace_json(&evs));
     }
 
     #[test]

@@ -89,6 +89,23 @@
 //! modelled clocks bit-exactly; the legacy [`Platform`] enum survives
 //! as a thin compatibility layer over the presets
 //! ([`Platform::topology`]).
+//!
+//! ## Observability
+//!
+//! The [`obs`] subsystem is the telemetry layer the §5.1 evaluation
+//! rests on: Average Bandwidth is bytes touched per loop over modelled
+//! runtime, and [`obs`] attributes both sides of that fraction.
+//! Hierarchical lifecycle spans ([`obs::span`], exported by `--spans`
+//! or merged into the Chrome trace) cover freeze → chain analysis →
+//! tuner candidates → replay → per-tile execution → halo exchange; a
+//! mergeable metrics registry ([`obs::Registry`] on
+//! [`exec::Metrics::obs`]) keeps log-linear histograms of per-loop and
+//! per-exchange timings with p50/p90/p99 bounds
+//! ([`exec::Metrics::histogram_quantiles`]); and the roofline report
+//! ([`obs::roofline`]) compares each stream's modelled achieved GB/s
+//! against its tier/link peak from the [`topology::Topology`].
+//! `bench_support::telemetry` serialises the same numbers into
+//! `BENCH_<name>.json` trajectory records gated by `ops-oc bench-diff`.
 
 pub mod apps;
 pub mod bench_support;
@@ -98,6 +115,7 @@ pub mod errors;
 pub mod exec;
 pub mod lazy;
 pub mod memory;
+pub mod obs;
 pub mod ops;
 pub mod program;
 pub mod runtime;

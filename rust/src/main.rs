@@ -35,11 +35,17 @@
 //! `--trace <path>` (run only) writes the engine's discrete-event
 //!   timeline — every compute/upload/download/exchange event of the
 //!   timed region, per tier when the stack is deeper than two — as
-//!   Chrome-trace JSON for `chrome://tracing` or Perfetto.
+//!   Chrome-trace JSON for `chrome://tracing` or Perfetto (with the
+//!   lifecycle spans as a second process row).
+//! `--spans <path>` (run only) writes the hierarchical lifecycle-span
+//!   tree (freeze → analyze, replay → chain → engine → tile) as JSON.
+//! `--bench-out <file>` appends one flat trajectory point to a
+//!   `BENCH_*.json` file; `ops-oc bench-diff <old> <new> [--tol-pct T]`
+//!   compares two such files and exits 1 on a >T% makespan regression.
 
-use ops_oc::bench_support::{self, Figure};
-use ops_oc::coordinator::{json_record, print_summary, Config};
-use ops_oc::exec::chrome_trace_json;
+use ops_oc::bench_support::{self, telemetry, Figure};
+use ops_oc::coordinator::{json_record, print_summary_with_topology, Config};
+use ops_oc::exec::chrome_trace_json_with_spans;
 use ops_oc::memory::AppCalib;
 use ops_oc::tuner::TuneOpts;
 use std::process::exit;
@@ -56,6 +62,11 @@ struct Args {
     tune: bool,
     tune_budget: u32,
     trace: Option<String>,
+    spans: Option<String>,
+    bench_out: Option<String>,
+    tol_pct: f64,
+    /// Positional arguments (the two trajectory files of `bench-diff`).
+    extra: Vec<String>,
 }
 
 fn parse_args() -> Args {
@@ -71,24 +82,41 @@ fn parse_args() -> Args {
         tune: false,
         tune_budget: TuneOpts::default().budget,
         trace: None,
+        spans: None,
+        bench_out: None,
+        tol_pct: 10.0,
+        extra: vec![],
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
     while i < argv.len() {
         match argv[i].as_str() {
-            "run" | "sweep" | "list" | "list-platforms" | "help" | "--help" | "-h" => {
-                a.cmd = argv[i].trim_start_matches('-').to_string()
-            }
+            "run" | "sweep" | "list" | "list-platforms" | "bench-diff" | "help" | "--help"
+            | "-h" => a.cmd = argv[i].trim_start_matches('-').to_string(),
             "--list-platforms" => a.cmd = "list-platforms".into(),
             "--json" => a.json = true,
             "--tune" => a.tune = true,
-            "--trace" => {
+            path_flag @ ("--trace" | "--spans" | "--bench-out") => {
                 i += 1;
                 let Some(v) = argv.get(i) else {
-                    eprintln!("missing path for --trace");
+                    eprintln!("missing path for {path_flag}");
                     exit(2);
                 };
-                a.trace = Some(v.clone());
+                match path_flag {
+                    "--trace" => a.trace = Some(v.clone()),
+                    "--spans" => a.spans = Some(v.clone()),
+                    _ => a.bench_out = Some(v.clone()),
+                }
+            }
+            "--tol-pct" => {
+                i += 1;
+                match argv.get(i).and_then(|v| v.parse::<f64>().ok()) {
+                    Some(t) if t >= 0.0 => a.tol_pct = t,
+                    _ => {
+                        eprintln!("bad value for --tol-pct (expected a percentage >= 0)");
+                        exit(2);
+                    }
+                }
             }
             flag @ ("--app" | "--platform" | "--size-gb" | "--steps" | "--chain-steps"
             | "--ranks" | "--tune-budget") => {
@@ -131,6 +159,10 @@ fn parse_args() -> Args {
                     },
                     _ => a.chain_steps = num(flag, v),
                 }
+            }
+            // bench-diff takes two positional trajectory files
+            other if a.cmd == "bench-diff" && !other.starts_with('-') => {
+                a.extra.push(other.to_string())
             }
             // a bare `xN` argument shards the platform (the spec-suffix
             // form `--platform gpu-explicit:…:xN` composes the same way)
@@ -255,7 +287,11 @@ fn main() {
             println!("  run   --app A --platform P [--size-gb G] [--steps N] [--chain-steps C]");
             println!("        [--ranks R | xR] [--tune] [--tune-budget E] [--json]");
             println!("        [--trace PATH]   (Chrome-trace JSON of the engine timeline)");
+            println!("        [--spans PATH]   (hierarchical lifecycle-span tree, JSON)");
+            println!("        [--bench-out F]  (append a trajectory point to F)");
             println!("  sweep --app A --platform P [--tune] [--json]  (problem-size sweep)");
+            println!("  bench-diff OLD NEW [--tol-pct T]   (compare two BENCH_*.json");
+            println!("        trajectories; exit 1 when a makespan regressed > T%, default 10)");
             println!("  list                                          (apps + platform specs)");
             println!("  list-platforms        (preset topology table + tiers: grammar)");
         }
@@ -303,8 +339,9 @@ fn main() {
                 a.steps,
                 a.chain_steps,
             );
+            let spans = ops_oc::obs::snapshot_spans();
             if let Some(path) = &a.trace {
-                let json = chrome_trace_json(m.trace_events());
+                let json = chrome_trace_json_with_spans(m.trace_events(), &spans);
                 if let Err(e) = std::fs::write(path, &json) {
                     eprintln!("cannot write trace {path:?}: {e}");
                     exit(1);
@@ -313,6 +350,24 @@ fn main() {
                     "wrote {} timeline events to {path} (open in chrome://tracing or Perfetto)",
                     m.trace_events().len()
                 );
+            }
+            if let Some(path) = &a.spans {
+                let json = ops_oc::obs::spans_json(&spans);
+                if let Err(e) = std::fs::write(path, &json) {
+                    eprintln!("cannot write spans {path:?}: {e}");
+                    exit(1);
+                }
+                eprintln!("wrote {} lifecycle spans to {path}", spans.len());
+            }
+            if let Some(path) = &a.bench_out {
+                let key = format!("{}|{}|{:.3}", a.app, cfg.label(), a.size_gb);
+                let point =
+                    telemetry::point_json(&key, &a.app, &cfg.label(), a.size_gb, &m, oom);
+                if let Err(e) = telemetry::append_point(path, &point) {
+                    eprintln!("cannot append trajectory point to {path:?}: {e}");
+                    exit(1);
+                }
+                eprintln!("appended trajectory point {key:?} to {path}");
             }
             if a.json {
                 println!(
@@ -328,13 +383,60 @@ fn main() {
                     )
                 );
             } else {
-                print_summary(
+                print_summary_with_topology(
                     &format!("{} / {}", a.app, cfg.label()),
                     (a.size_gb * 1e9) as u64,
+                    &cfg.topology(),
                     &m,
                     oom,
                 );
             }
+        }
+        "bench-diff" => {
+            if a.extra.len() != 2 {
+                eprintln!("usage: ops-oc bench-diff OLD.json NEW.json [--tol-pct T]");
+                exit(2);
+            }
+            let read = |p: &str| -> String {
+                std::fs::read_to_string(p).unwrap_or_else(|e| {
+                    eprintln!("cannot read {p:?}: {e}");
+                    exit(2);
+                })
+            };
+            let (old_text, new_text) = (read(&a.extra[0]), read(&a.extra[1]));
+            let report = telemetry::diff(&old_text, &new_text, a.tol_pct).unwrap_or_else(|e| {
+                eprintln!("bench-diff: {e}");
+                exit(2);
+            });
+            for l in &report.lines {
+                println!(
+                    "{} {:<48} {:>12.6} s -> {:>12.6} s  ({:+.2} %)",
+                    if l.regressed { "REGRESSED" } else { "ok       " },
+                    l.key,
+                    l.old_s,
+                    l.new_s,
+                    l.delta_pct,
+                );
+            }
+            for k in &report.missing {
+                println!("missing   {k} (in {} only)", a.extra[0]);
+            }
+            for k in &report.added {
+                println!("added     {k} (in {} only)", a.extra[1]);
+            }
+            let n = report.regressions();
+            if n > 0 {
+                eprintln!(
+                    "bench-diff: {n} cell(s) regressed beyond {:.1} % tolerance",
+                    a.tol_pct
+                );
+                exit(1);
+            }
+            println!(
+                "bench-diff: {} cell(s) within {:.1} % tolerance",
+                report.lines.len(),
+                a.tol_pct
+            );
         }
         "sweep" => {
             if a.trace.is_some() {

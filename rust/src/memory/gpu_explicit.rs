@@ -182,6 +182,8 @@ impl Engine for GpuExplicitEngine {
         cyclic_phase: bool,
     ) {
         world.metrics.chains += 1;
+        let sp = crate::obs::span("gpu_explicit");
+        sp.field("loops", chain.len());
         // Legacy eager path: no cached analysis, rebuild it per flush.
         let mut local = None;
         let analysis =
@@ -208,6 +210,7 @@ impl Engine for GpuExplicitEngine {
             );
         }
         let nt = plan.num_tiles();
+        sp.field("tiles", nt);
         world.metrics.tiles += nt as u64;
         let norm = chain_bw_norm(world, chain);
 
@@ -248,6 +251,8 @@ impl Engine for GpuExplicitEngine {
         }
 
         for t in 0..nt {
+            let tsp = crate::obs::span("tile");
+            tsp.field("t", t);
             let label = |what: &str| -> String {
                 if tracing {
                     format!("{what} {t}")
@@ -301,6 +306,7 @@ impl Engine for GpuExplicitEngine {
             // One compute event per executed tile (the per-loop split is
             // in `per_loop`; the stream sees the fused tile execution).
             tl.push(s0, EventKind::Compute, &label("tile"), tile_compute, tile_bytes_sum);
+            world.metrics.obs.record("tile_compute_s", tile_compute);
             last_tile_compute = tile_compute;
 
             // ---- finishing: wait streams 0 & 2; edge copy; download.
@@ -675,7 +681,7 @@ mod tests {
         assert_eq!(m.per_resource["upload"].bytes, m.h2d_bytes);
         assert_eq!(m.per_resource["download"].bytes, m.d2h_bytes);
         // a small-HBM PCIe streaming run is transfer-bound
-        assert_eq!(m.bound(), "upload");
+        assert_eq!(m.bound().name(), "upload");
         use crate::exec::timeline::StreamClass;
         assert!(m.stream_util(StreamClass::Upload) > m.stream_util(StreamClass::Compute));
         assert!(m.stream_util(StreamClass::Upload) <= 1.0 + 1e-12);

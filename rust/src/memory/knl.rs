@@ -103,6 +103,9 @@ impl Engine for KnlEngine {
         _cyclic_phase: bool,
     ) {
         world.metrics.chains += 1;
+        let sp = crate::obs::span("knl");
+        sp.field("loops", chain.len());
+        sp.field("tiled", self.tiled);
         let tile_dim = analysis.map_or_else(|| pick_tile_dim(chain), |a| a.tile_dim);
         if self.addr.is_none() {
             self.addr = Some(AddressMap::new(world.datasets, self.calib.cache_granule));
@@ -142,6 +145,7 @@ impl Engine for KnlEngine {
                 world.metrics.halo_time_s += ht;
                 world.metrics.halo_exchanges += n;
                 if n > 0 {
+                    world.metrics.obs.record("halo_exchange_s", ht);
                     halos.push((&l.name, ht));
                 }
             }
@@ -204,6 +208,7 @@ impl Engine for KnlEngine {
         let drained = tl.cursor(rm).max(tl.cursor(rd));
         tl.wait_until(rh, drained);
         if n > 0 {
+            world.metrics.obs.record("halo_exchange_s", ht);
             tl.push(rh, EventKind::Halo, "chain halo", ht, 0);
         }
         world.metrics.absorb_timeline(tl);

@@ -64,6 +64,8 @@ impl PlainEngine {
 impl Engine for PlainEngine {
     fn run_chain(&mut self, chain: &[LoopInst], world: &mut World<'_>, _cyclic_phase: bool) {
         world.metrics.chains += 1;
+        let sp = crate::obs::span("plain");
+        sp.field("loops", chain.len());
         let tile_dim = crate::tiling::plan::pick_tile_dim(chain);
         let norm = chain_bw_norm(world, chain);
         // One compute stream; per-loop MPI halo exchanges (§5.2) run on a
@@ -89,6 +91,7 @@ impl Engine for PlainEngine {
                 world.metrics.halo_time_s += ht;
                 world.metrics.halo_exchanges += n;
                 if n > 0 {
+                    world.metrics.obs.record("halo_exchange_s", ht);
                     let at = tl.cursor(rc);
                     let end = tl.push_at(rh, EventKind::Halo, &l.name, at, ht, 0);
                     tl.wait_until(rc, end);

@@ -242,6 +242,9 @@ impl TieredEngine {
     ) {
         let plan = self.level_plan(level, chain, shifts, ctx.tile_dim, analysis, world);
         let nt = plan.num_tiles();
+        let lsp = crate::obs::span("level");
+        lsp.field("tier", &self.topo.tier(level).name);
+        lsp.field("tiles", nt);
         if level == 0 {
             world.metrics.tiles += nt as u64;
         }
@@ -310,6 +313,8 @@ impl TieredEngine {
             // ---- body: execute on the fastest tier, or recurse one
             // boundary down with the chain restricted to this tile.
             if level == 0 {
+                let tsp = crate::obs::span("tile");
+                tsp.field("t", t);
                 let mut tile_compute = 0.0;
                 let mut tile_bytes_sum = 0u64;
                 for (li, r) in plan.tiles[t].loop_ranges.iter().enumerate() {
@@ -327,6 +332,7 @@ impl TieredEngine {
                     tile_bytes_sum += bytes;
                 }
                 tl.push(ctx.s0, EventKind::Compute, &label("tile"), tile_compute, tile_bytes_sum);
+                world.metrics.obs.record("tile_compute_s", tile_compute);
                 st.last_tile_compute = tile_compute;
             } else {
                 let mut sub_chain: Vec<LoopInst> = Vec::new();
@@ -384,6 +390,8 @@ impl Engine for TieredEngine {
         cyclic_phase: bool,
     ) {
         world.metrics.chains += 1;
+        let sp = crate::obs::span("tiered");
+        sp.field("loops", chain.len());
         let mut local = None;
         let analysis =
             ChainAnalysis::resolve(analysis, &mut local, chain, world.datasets, world.stencils);
@@ -759,7 +767,7 @@ mod tests {
         let (m, _) = run_engine(&mut e, 1, false);
         assert_eq!(m.h2d_bytes + m.d2h_bytes + m.d2d_bytes, 0);
         assert!(m.elapsed_s > 0.0);
-        assert_eq!(m.bound(), "compute");
+        assert_eq!(m.bound().name(), "compute");
         assert!(e.fits(u64::MAX));
     }
 

@@ -160,6 +160,9 @@ impl Engine for UnifiedEngine {
         _cyclic_phase: bool,
     ) {
         world.metrics.chains += 1;
+        let sp = crate::obs::span("unified");
+        sp.field("loops", chain.len());
+        sp.field("tiled", self.tiled);
         let tile_dim = analysis.map_or_else(|| pick_tile_dim(chain), |a| a.tile_dim);
         let norm = chain_bw_norm(world, chain);
         if self.addr.is_none() {
@@ -302,6 +305,7 @@ impl Engine for UnifiedEngine {
                 world.metrics.record_loop(&l.name, bytes, t);
                 tile_compute += t;
             }
+            world.metrics.obs.record("tile_compute_s", tile_compute);
             prev_tile_compute = tile_compute;
         }
         world.metrics.absorb_timeline(tl);

@@ -1,0 +1,324 @@
+//! Metrics registry: counters, gauges, and log-linear histograms.
+//!
+//! The histogram buckets by the top 16 bits of the IEEE-754 double: the
+//! sign+exponent plus the four leading mantissa bits. That is a
+//! *log-linear* layout — every power-of-two binade splits into 16
+//! linear sub-buckets — so a bucket's width is at most 1/16 of its
+//! lower edge (≲6.25% relative error) across the whole positive f64
+//! range, with no configuration and O(1) recording. Quantiles come back
+//! as `(lo, hi)` **bounds** that provably bracket the exact rank-order
+//! statistic (the property suite in `tests/prop_obs.rs` verifies this
+//! against sorted samples); counts/min/max merge exactly, so sharded
+//! ranks and sweep cells combine without precision questions.
+
+use std::collections::BTreeMap;
+
+/// Bucket index of a sample: top 16 bits of its bit pattern. All
+/// non-positive samples land in bucket 0.
+fn bucket_of(v: f64) -> u32 {
+    if !v.is_finite() || v <= 0.0 {
+        return 0;
+    }
+    (v.to_bits() >> 48) as u32
+}
+
+/// Lower edge of a bucket (exact: the smallest double whose top 16 bits
+/// equal `idx`).
+fn bucket_lo(idx: u32) -> f64 {
+    f64::from_bits((idx as u64) << 48)
+}
+
+/// A log-linear-bucket histogram with exact count/min/max/sum side
+/// ledgers. `merge(a, b)` is equivalent to recording `a ∪ b` (bucket
+/// counts, min, max and quantile bounds exactly; the floating `sum` to
+/// summation order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    buckets: BTreeMap<u32, u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: BTreeMap::new(),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample (non-finite samples are ignored).
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        *self.buckets.entry(bucket_of(v)).or_insert(0) += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram in (bucket-exact).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (&b, &n) in &other.buckets {
+            *self.buckets.entry(b).or_insert(0) += n;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Occupied buckets as `(index, count)`, ascending (tests and
+    /// merge-equivalence checks).
+    pub fn buckets(&self) -> impl Iterator<Item = (u32, u64)> + '_ {
+        self.buckets.iter().map(|(&b, &n)| (b, n))
+    }
+
+    /// `(lo, hi)` bracketing the exact q-quantile under the rank rule
+    /// `rank = ceil(q·count)` clamped to `1..=count` (so `q=0` is the
+    /// minimum, `q=1` the maximum). `None` on an empty histogram. The
+    /// true k-th smallest sample lies in `[lo, hi]`, and for positive
+    /// samples `hi − lo ≤ lo/16`.
+    pub fn quantile_bounds(&self, q: f64) -> Option<(f64, f64)> {
+        if self.count == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (&b, &n) in &self.buckets {
+            seen += n;
+            if seen >= rank {
+                // bucket 0 holds every non-positive sample: its true
+                // lower edge is the recorded minimum, not 0.0
+                let raw_lo = if b == 0 { f64::NEG_INFINITY } else { bucket_lo(b) };
+                let lo = raw_lo.max(self.min);
+                let hi = bucket_lo(b + 1).min(self.max);
+                return Some((lo, hi.max(lo)));
+            }
+        }
+        None
+    }
+
+    /// Point estimate: the upper bound of [`Histogram::quantile_bounds`]
+    /// (a conservative "no better than" read for latency-style series).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        self.quantile_bounds(q).map(|(_, hi)| hi)
+    }
+}
+
+/// A named-series registry: monotone counters, last-write gauges, and
+/// [`Histogram`]s. Lives on [`crate::exec::Metrics`] (`metrics.obs`);
+/// label series by suffixing the name (`tile_compute_s:hbm`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter_add(&mut self, name: &str, n: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += n;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Record one sample into the named histogram (created on first
+    /// sight).
+    pub fn record(&mut self, name: &str, v: f64) {
+        self.hists.entry(name.to_string()).or_default().record(v);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// All histograms, name-ordered (deterministic report iteration).
+    pub fn histograms(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.hists.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// All counters, name-ordered.
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    /// Fold another registry in: counters add, gauges take the other's
+    /// value, histograms merge bucket-exactly.
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.hists {
+            self.hists.entry(k.clone()).or_default().merge(h);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_width_is_bounded() {
+        for v in [1e-9, 3.7e-4, 0.5, 1.0, 1.05, 7.3, 1e6, 1e300] {
+            let b = bucket_of(v);
+            let (lo, hi) = (bucket_lo(b), bucket_lo(b + 1));
+            assert!(lo <= v && v < hi, "{v} not in [{lo},{hi})");
+            assert!(hi - lo <= lo / 16.0 + f64::EPSILON, "{v}: [{lo},{hi})");
+        }
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-3.0), 0);
+        assert_eq!(bucket_of(f64::NAN), 0);
+    }
+
+    #[test]
+    fn quantiles_bracket_a_known_sample() {
+        let mut h = Histogram::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 10.0);
+        assert!((h.mean() - 5.5).abs() < 1e-12);
+        // p50 under the ceil-rank rule is the 5th smallest = 5.0
+        let (lo, hi) = h.quantile_bounds(0.5).unwrap();
+        assert!(lo <= 5.0 && 5.0 <= hi, "[{lo},{hi}]");
+        // extremes pin to min/max exactly
+        assert_eq!(h.quantile_bounds(0.0).unwrap().0, 1.0);
+        assert_eq!(h.quantile_bounds(1.0).unwrap().1, 10.0);
+        assert!(h.quantile(0.99).unwrap() <= 10.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_well_defined() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile_bounds(0.5), None);
+        assert_eq!(h.quantile(0.5), None);
+    }
+
+    #[test]
+    fn merge_matches_union_recording() {
+        let a_vals = [0.1, 0.2, 0.35];
+        let b_vals = [0.15, 4.0, 0.001, 0.2];
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut u = Histogram::new();
+        for v in a_vals {
+            a.record(v);
+            u.record(v);
+        }
+        for v in b_vals {
+            b.record(v);
+            u.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), u.count());
+        assert_eq!(a.min(), u.min());
+        assert_eq!(a.max(), u.max());
+        assert_eq!(
+            a.buckets().collect::<Vec<_>>(),
+            u.buckets().collect::<Vec<_>>()
+        );
+        for q in [0.0, 0.25, 0.5, 0.9, 1.0] {
+            assert_eq!(a.quantile_bounds(q), u.quantile_bounds(q), "q={q}");
+        }
+        assert!((a.sum() - u.sum()).abs() <= 1e-12 * u.sum().abs());
+    }
+
+    #[test]
+    fn registry_series_accumulate_and_merge() {
+        let mut r = Registry::new();
+        r.counter_add("tiles", 3);
+        r.counter_add("tiles", 2);
+        r.gauge_set("scale", 8.0);
+        r.record("loop_time_s", 0.5);
+        assert_eq!(r.counter("tiles"), 5);
+        assert_eq!(r.counter("absent"), 0);
+        assert_eq!(r.gauge("scale"), Some(8.0));
+        assert!(!r.is_empty());
+
+        let mut other = Registry::new();
+        other.counter_add("tiles", 10);
+        other.record("loop_time_s", 1.5);
+        other.record("halo_s", 0.1);
+        r.merge(&other);
+        assert_eq!(r.counter("tiles"), 15);
+        assert_eq!(r.histogram("loop_time_s").unwrap().count(), 2);
+        assert_eq!(r.histogram("halo_s").unwrap().count(), 1);
+        assert_eq!(r.histograms().count(), 2);
+        assert_eq!(Registry::new().is_empty(), true);
+    }
+}

@@ -1,0 +1,59 @@
+//! Unified observability: lifecycle spans, a metrics registry, and
+//! roofline reporting.
+//!
+//! The paper's whole evaluation (§5.1–§5.3) is an observability
+//! exercise — *Average Bandwidth* is bytes touched per loop divided by
+//! modelled runtime, and the per-platform claims rest on attributing
+//! where that time went. This module is the substrate those numbers
+//! flow through:
+//!
+//! * [`span`] — hierarchical RAII lifecycle spans on **host** time
+//!   (`Program::freeze`, per-chain analysis, tuner candidate scoring,
+//!   `Session::replay` steps, per-tile engine execution, halo
+//!   exchanges). Spans carry structured `key=value` fields for the
+//!   *modelled* quantities they wrap, nest parent/child per thread, and
+//!   export as a JSON tree ([`spans_json`], the CLI's `--spans`) or
+//!   alongside the Chrome trace
+//!   ([`crate::exec::chrome_trace_json_with_spans`]).
+//! * [`hist`] — [`Registry`] of counters, gauges and log-linear-bucket
+//!   [`Histogram`]s (p50/p90/p99 bounds that provably bracket the exact
+//!   quantile, exact mergeable counts, ≲6% relative bucket error). The
+//!   registry lives on [`crate::exec::Metrics`] (`metrics.obs`), so
+//!   per-chain/per-tier series merge across sweep cells and sharded
+//!   ranks exactly like the scalar fields.
+//! * [`roofline`] — modelled achieved GB/s per stream vs the
+//!   [`crate::topology::Topology`] peak of that tier/link, plus the
+//!   per-kernel §5.1 bytes/time ledger — printed by the run summary and
+//!   emitted under stable `roofline_*` keys in `--json`.
+//!
+//! Spans are thread-local (engines take `&mut Metrics`, guards must not
+//! borrow it); benches and the CLI call [`reset`] once per cell.
+
+pub mod hist;
+pub mod roofline;
+pub mod span;
+
+pub use hist::{Histogram, Registry};
+pub use roofline::{KernelLedger, Roofline, RooflineRow};
+pub use span::{
+    namespace, reset, snapshot_spans, span, span_stats, spans_json, NamespaceGuard, SpanGuard,
+    SpanRec, SpanStats,
+};
+
+/// Minimal JSON string escaping shared by the span/telemetry renderers
+/// (same contract as the Chrome-trace exporter's).
+pub(crate) fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}

@@ -1,0 +1,232 @@
+//! Roofline report: modelled achieved GB/s per stream vs topology peak.
+//!
+//! §5.1 defines *Average Bandwidth* as bytes touched per loop divided by
+//! modelled runtime; the roofline view decomposes that single number by
+//! resource. Every timeline stream the run exercised becomes a row —
+//! bytes it moved, the busy time it took, the achieved GB/s those imply,
+//! and the peak GB/s of the tier or link the stream models — plus a
+//! per-kernel ledger (the §5.1 bytes/time table) sorted by where the
+//! time went. Sharded `r<k>:` prefixes are stripped so rank replicas of
+//! one physical stream aggregate into a single row.
+
+use crate::exec::{Metrics, StreamClass};
+use crate::topology::Topology;
+use std::collections::BTreeMap;
+
+/// One stream row: achieved vs peak for a tier or link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RooflineRow {
+    /// Stream name (rank prefix stripped), e.g. `compute`, `upload`,
+    /// `host:download`, `ddr4`.
+    pub name: String,
+    pub class: StreamClass,
+    /// Peak GB/s of the tier/link this stream models.
+    pub peak_gbs: f64,
+    /// bytes / busy-time, GB/s (0 when the stream was never busy).
+    pub achieved_gbs: f64,
+    /// busy-time / makespan, clamped to [0, 1].
+    pub busy_frac: f64,
+    pub bytes: u64,
+}
+
+impl RooflineRow {
+    /// achieved / peak — how close the stream ran to its roof.
+    pub fn frac_of_peak(&self) -> f64 {
+        if self.peak_gbs > 0.0 {
+            self.achieved_gbs / self.peak_gbs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One kernel's §5.1 ledger entry: bytes touched, modelled time, and
+/// the average bandwidth they imply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelLedger {
+    pub name: String,
+    pub bytes: u64,
+    pub time_s: f64,
+    pub achieved_gbs: f64,
+    pub invocations: u64,
+}
+
+/// The full report: stream rows (name-ordered) and the kernel ledger
+/// (time-ordered, hottest first).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Roofline {
+    pub rows: Vec<RooflineRow>,
+    pub kernels: Vec<KernelLedger>,
+}
+
+/// Strip a sharded `r<digits>:` rank prefix so per-rank replicas of one
+/// stream fold into a single roofline row.
+fn strip_rank(name: &str) -> &str {
+    if let Some((head, rest)) = name.split_once(':') {
+        if let Some(digits) = head.strip_prefix('r') {
+            if !digits.is_empty() && digits.bytes().all(|b| b.is_ascii_digit()) {
+                return rest;
+            }
+        }
+    }
+    name
+}
+
+/// Peak GB/s the topology promises for a stream. Compute streams roof
+/// at the fastest tier's bandwidth (the §3 model runs kernels out of
+/// fast memory); a stream named exactly like a tier uses that tier's
+/// bandwidth; a `tier:direction` boundary stream uses the link below
+/// that tier; anything else is a legacy two-tier transfer stream on
+/// link 0.
+fn peak_for(topo: &Topology, name: &str, class: StreamClass) -> f64 {
+    if class == StreamClass::Compute {
+        return topo.fastest().bw_gbs;
+    }
+    if let Some(tier) = topo.tiers().iter().find(|t| t.name == name) {
+        return tier.bw_gbs;
+    }
+    let links = topo.links();
+    if let Some((tier_name, _dir)) = name.split_once(':') {
+        if let Some(i) = topo.tiers().iter().position(|t| t.name == tier_name) {
+            if !links.is_empty() {
+                return topo.link(i.min(links.len() - 1)).bw_gbs;
+            }
+        }
+    }
+    if !links.is_empty() {
+        topo.link(0).bw_gbs
+    } else {
+        topo.fastest().bw_gbs
+    }
+}
+
+/// Build the report from a finished run's metrics. Exchange streams are
+/// modelled on interconnects outside the memory topology, so they get a
+/// ledger row in `Metrics` but no roofline row here.
+pub fn build(topo: &Topology, m: &Metrics) -> Roofline {
+    let mut agg: BTreeMap<String, (StreamClass, f64, u64)> = BTreeMap::new();
+    for (name, st) in &m.per_resource {
+        if st.class == StreamClass::Exchange {
+            continue;
+        }
+        let e = agg
+            .entry(strip_rank(name).to_string())
+            .or_insert((st.class, 0.0, 0));
+        e.1 += st.busy_s;
+        e.2 += st.bytes;
+    }
+    let rows = agg
+        .into_iter()
+        .map(|(name, (class, busy_s, bytes))| {
+            let achieved_gbs = if busy_s > 0.0 {
+                bytes as f64 / busy_s / 1e9
+            } else {
+                0.0
+            };
+            let busy_frac = if m.elapsed_s > 0.0 {
+                (busy_s / m.elapsed_s).min(1.0)
+            } else {
+                0.0
+            };
+            RooflineRow {
+                peak_gbs: peak_for(topo, &name, class),
+                name,
+                class,
+                achieved_gbs,
+                busy_frac,
+                bytes,
+            }
+        })
+        .collect();
+
+    let mut kernels: Vec<KernelLedger> = m
+        .per_loop
+        .iter()
+        .map(|(name, st)| KernelLedger {
+            name: name.clone(),
+            bytes: st.bytes,
+            time_s: st.time_s,
+            achieved_gbs: st.bandwidth_gbs(),
+            invocations: st.invocations,
+        })
+        .collect();
+    kernels.sort_by(|a, b| b.time_s.total_cmp(&a.time_s).then(a.name.cmp(&b.name)));
+    Roofline { rows, kernels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        crate::topology::preset("gpu-explicit-pcie").unwrap()
+    }
+
+    #[test]
+    fn rank_prefixes_fold_into_one_row() {
+        assert_eq!(strip_rank("r0:upload"), "upload");
+        assert_eq!(strip_rank("r12:host:download"), "host:download");
+        assert_eq!(strip_rank("rank:upload"), "rank:upload");
+        assert_eq!(strip_rank("r:upload"), "r:upload");
+        assert_eq!(strip_rank("compute"), "compute");
+
+        let mut m = Metrics::new();
+        m.record_stream("r0:upload", StreamClass::Upload, 0.5, 4_000_000_000, 2);
+        m.record_stream("r1:upload", StreamClass::Upload, 0.5, 4_000_000_000, 2);
+        m.elapsed_s = 1.0;
+        let r = build(&topo(), &m);
+        assert_eq!(r.rows.len(), 1);
+        let row = &r.rows[0];
+        assert_eq!(row.name, "upload");
+        assert_eq!(row.bytes, 8_000_000_000);
+        assert!((row.achieved_gbs - 8.0).abs() < 1e-9);
+        assert!((row.busy_frac - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peaks_come_from_the_topology() {
+        let t = topo();
+        let fast = t.fastest().bw_gbs;
+        let link = t.link(0).bw_gbs;
+        assert_eq!(peak_for(&t, "compute", StreamClass::Compute), fast);
+        assert_eq!(peak_for(&t, "upload", StreamClass::Upload), link);
+        assert_eq!(peak_for(&t, "download", StreamClass::Download), link);
+
+        // deeper topology: tier-named and tier:direction streams
+        let (target, _) = crate::coordinator::Config::parse_spec(
+            "tiers:hbm=64k@509.7+host=256k@11~0.00001+nvme=inf@6~0.00002:cyclic",
+        )
+        .unwrap();
+        let deep =
+            crate::coordinator::Config::for_target(target, crate::memory::AppCalib::CLOVERLEAF_2D)
+                .topology();
+        assert_eq!(peak_for(&deep, "host", StreamClass::Upload), 11.0);
+        assert_eq!(peak_for(&deep, "host:upload", StreamClass::Upload), 11.0);
+        assert_eq!(peak_for(&deep, "nvme:download", StreamClass::Download), 6.0);
+    }
+
+    #[test]
+    fn exchange_streams_are_ledger_only() {
+        let mut m = Metrics::new();
+        m.record_stream("halo", StreamClass::Exchange, 0.1, 1_000_000, 1);
+        m.record_stream("compute", StreamClass::Compute, 0.2, 2_000_000_000, 4);
+        m.elapsed_s = 0.25;
+        let r = build(&topo(), &m);
+        assert_eq!(r.rows.len(), 1);
+        assert_eq!(r.rows[0].name, "compute");
+        assert!(r.rows[0].frac_of_peak() > 0.0);
+    }
+
+    #[test]
+    fn kernel_ledger_is_hottest_first() {
+        let mut m = Metrics::new();
+        m.record_loop("warm", 1_000_000_000, 0.01);
+        m.record_loop("hot", 4_000_000_000, 0.04);
+        m.record_loop("cold", 500_000_000, 0.005);
+        let r = build(&topo(), &m);
+        let names: Vec<&str> = r.kernels.iter().map(|k| k.name.as_str()).collect();
+        assert_eq!(names, ["hot", "warm", "cold"]);
+        assert!((r.kernels[0].achieved_gbs - 100.0).abs() < 1e-9);
+        assert_eq!(r.kernels[0].invocations, 1);
+    }
+}

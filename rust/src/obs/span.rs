@@ -1,0 +1,404 @@
+//! Hierarchical lifecycle spans: RAII guards on a thread-local tracer.
+//!
+//! A [`span`] opens a named interval on **host** time (the same clock
+//! `Program::freeze` already reports); dropping the guard closes it.
+//! Open spans form a stack, so every span records its parent and depth
+//! — the export is a proper tree. Guards carry structured `key=value`
+//! [`SpanGuard::field`]s for the *modelled* quantities of the interval
+//! they wrap (a chain's makespan, a halo's bytes), keeping the host
+//! clock and the simulated clock cleanly separated.
+//!
+//! The tracer is deliberately thread-local: engines run under
+//! `&mut World` (which owns `&mut Metrics`), so a guard holding a
+//! metrics borrow across a whole chain would not compile. Per-thread
+//! state also isolates parallel tests for free. Benches and the CLI
+//! call [`reset`] once per cell; [`snapshot_spans`] closes still-open
+//! spans *in the copy only*, so it is safe to export mid-run.
+//!
+//! Sharded runs wrap each modelled rank in a [`namespace`] guard: every
+//! span opened while it lives gets a `r3:`-style name prefix, so nested
+//! rank spans don't collide in merged exports (the same re-namespacing
+//! the per-rank timeline streams get).
+
+use std::cell::RefCell;
+use std::fmt::Display;
+use std::marker::PhantomData;
+use std::time::Instant;
+
+/// One recorded span: a named host-time interval in the span tree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRec {
+    /// Index into the thread's span list (creation order).
+    pub id: u32,
+    /// Parent span id; `None` for roots.
+    pub parent: Option<u32>,
+    /// Full name, namespace prefixes included (`r0:gpu_explicit`).
+    pub name: String,
+    /// Nesting depth (roots are 0).
+    pub depth: u32,
+    /// Host seconds since the tracer epoch ([`reset`]).
+    pub start_s: f64,
+    /// Host end time; open spans report their snapshot time.
+    pub end_s: f64,
+    /// Structured `key=value` fields, in attachment order.
+    pub fields: Vec<(String, String)>,
+}
+
+/// Aggregate span accounting for one thread ([`span_stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpanStats {
+    /// Spans recorded since the last [`reset`].
+    pub total: u64,
+    /// Deepest nesting seen (a single root span counts 1).
+    pub max_depth: u64,
+    /// Spans currently open.
+    pub open: u64,
+    /// Spans dropped at the retention cap.
+    pub dropped: u64,
+}
+
+struct Tracer {
+    epoch: Instant,
+    spans: Vec<SpanRec>,
+    stack: Vec<u32>,
+    prefixes: Vec<String>,
+    dropped: u64,
+}
+
+impl Tracer {
+    fn new() -> Self {
+        Tracer {
+            epoch: Instant::now(),
+            spans: Vec::new(),
+            stack: Vec::new(),
+            prefixes: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+}
+
+thread_local! {
+    static TRACER: RefCell<Tracer> = RefCell::new(Tracer::new());
+}
+
+/// Per-thread retention cap: beyond this, [`span`] hands out no-op
+/// guards and counts the drops — a long sweep cannot grow memory
+/// unboundedly if a caller forgets to [`reset`] between cells.
+const MAX_SPANS: usize = 1 << 20;
+
+const DROPPED_ID: u32 = u32::MAX;
+
+/// RAII guard for one open span; dropping it closes the interval.
+/// `!Send` — spans belong to the thread that opened them.
+pub struct SpanGuard {
+    id: u32,
+    _not_send: PhantomData<*const ()>,
+}
+
+/// RAII guard for one active name prefix (see [`namespace`]).
+pub struct NamespaceGuard {
+    _not_send: PhantomData<*const ()>,
+}
+
+/// Clear the thread's span state and restart its epoch. Call once per
+/// run/bench cell before the work the export should cover.
+pub fn reset() {
+    TRACER.with(|t| *t.borrow_mut() = Tracer::new());
+}
+
+/// Open a span as a child of the innermost open span (or as a root).
+pub fn span(name: &str) -> SpanGuard {
+    TRACER.with(|t| {
+        let mut tr = t.borrow_mut();
+        if tr.spans.len() >= MAX_SPANS {
+            tr.dropped += 1;
+            return SpanGuard {
+                id: DROPPED_ID,
+                _not_send: PhantomData,
+            };
+        }
+        let id = tr.spans.len() as u32;
+        let parent = tr.stack.last().copied();
+        let depth = tr.stack.len() as u32;
+        let full = if tr.prefixes.is_empty() {
+            name.to_string()
+        } else {
+            format!("{}:{name}", tr.prefixes.join(":"))
+        };
+        let start = tr.now();
+        tr.spans.push(SpanRec {
+            id,
+            parent,
+            name: full,
+            depth,
+            start_s: start,
+            end_s: start,
+            fields: Vec::new(),
+        });
+        tr.stack.push(id);
+        SpanGuard {
+            id,
+            _not_send: PhantomData,
+        }
+    })
+}
+
+/// Push a name prefix applied to every span opened while the returned
+/// guard lives (`namespace("r2")` + `span("rank")` → `r2:rank`).
+/// Prefixes stack: nested namespaces join with `:`.
+pub fn namespace(prefix: &str) -> NamespaceGuard {
+    TRACER.with(|t| t.borrow_mut().prefixes.push(prefix.to_string()));
+    NamespaceGuard {
+        _not_send: PhantomData,
+    }
+}
+
+impl Drop for NamespaceGuard {
+    fn drop(&mut self) {
+        TRACER.with(|t| {
+            t.borrow_mut().prefixes.pop();
+        });
+    }
+}
+
+impl SpanGuard {
+    /// Attach one structured field (recorded in attachment order).
+    pub fn field(&self, key: &str, value: impl Display) {
+        if self.id == DROPPED_ID {
+            return;
+        }
+        TRACER.with(|t| {
+            let mut tr = t.borrow_mut();
+            if let Some(s) = tr.spans.get_mut(self.id as usize) {
+                s.fields.push((key.to_string(), value.to_string()));
+            }
+        });
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.id == DROPPED_ID {
+            return;
+        }
+        TRACER.with(|t| {
+            let mut tr = t.borrow_mut();
+            let end = tr.now();
+            // Pop down to and including this span. Guards normally drop
+            // LIFO; if an inner guard leaked, its (still-open) children
+            // are force-closed at the same instant so the tree stays
+            // well-nested.
+            while let Some(top) = tr.stack.pop() {
+                if let Some(s) = tr.spans.get_mut(top as usize) {
+                    s.end_s = end;
+                }
+                if top == self.id {
+                    break;
+                }
+            }
+        });
+    }
+}
+
+/// Copy the thread's span list; spans still open are closed at "now"
+/// *in the copy only* (the live tree is untouched).
+pub fn snapshot_spans() -> Vec<SpanRec> {
+    TRACER.with(|t| {
+        let tr = t.borrow();
+        let now = tr.now();
+        let mut out = tr.spans.clone();
+        for &id in &tr.stack {
+            if let Some(s) = out.get_mut(id as usize) {
+                s.end_s = now;
+            }
+        }
+        out
+    })
+}
+
+/// Aggregate counts for the thread's tracer (fed into
+/// `Metrics::spans_recorded` / `span_max_depth` by the cell runners).
+pub fn span_stats() -> SpanStats {
+    TRACER.with(|t| {
+        let tr = t.borrow();
+        SpanStats {
+            total: tr.spans.len() as u64,
+            max_depth: tr.spans.iter().map(|s| s.depth as u64 + 1).max().unwrap_or(0),
+            open: tr.stack.len() as u64,
+            dropped: tr.dropped,
+        }
+    })
+}
+
+/// Render spans as a nested JSON tree:
+/// `{"spans":[{name,start_s,end_s,fields?,children?},…],"count":N,"max_depth":D}`
+/// — the payload of the CLI's `--spans <path>`.
+pub fn spans_json(spans: &[SpanRec]) -> String {
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); spans.len()];
+    let mut roots: Vec<usize> = Vec::new();
+    for (i, s) in spans.iter().enumerate() {
+        match s.parent {
+            Some(p) if (p as usize) < i => children[p as usize].push(i),
+            _ => roots.push(i),
+        }
+    }
+    let max_depth = spans.iter().map(|s| s.depth as u64 + 1).max().unwrap_or(0);
+    let mut out = String::from("{\"spans\":[");
+    for (k, &r) in roots.iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        render(spans, &children, r, &mut out);
+    }
+    out.push_str(&format!(
+        "],\"count\":{},\"max_depth\":{max_depth}}}",
+        spans.len()
+    ));
+    out
+}
+
+fn render(spans: &[SpanRec], children: &[Vec<usize>], i: usize, out: &mut String) {
+    let s = &spans[i];
+    out.push_str(&format!(
+        "{{\"name\":\"{}\",\"start_s\":{:.9},\"end_s\":{:.9}",
+        super::esc(&s.name),
+        s.start_s,
+        s.end_s
+    ));
+    if !s.fields.is_empty() {
+        out.push_str(",\"fields\":{");
+        for (j, (k, v)) in s.fields.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":\"{}\"", super::esc(k), super::esc(v)));
+        }
+        out.push('}');
+    }
+    if !children[i].is_empty() {
+        out.push_str(",\"children\":[");
+        for (j, &c) in children[i].iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            render(spans, children, c, out);
+        }
+        out.push(']');
+    }
+    out.push('}');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_and_close_in_order() {
+        reset();
+        {
+            let outer = span("outer");
+            outer.field("k", 42);
+            {
+                let inner = span("inner");
+                inner.field("what", "child");
+            }
+            let _second = span("second");
+        }
+        let spans = snapshot_spans();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].name, "outer");
+        assert_eq!(spans[0].parent, None);
+        assert_eq!(spans[0].depth, 0);
+        assert_eq!(spans[1].name, "inner");
+        assert_eq!(spans[1].parent, Some(0));
+        assert_eq!(spans[1].depth, 1);
+        assert_eq!(spans[2].parent, Some(0));
+        assert_eq!(spans[0].fields, vec![("k".to_string(), "42".to_string())]);
+        for s in &spans {
+            assert!(s.end_s >= s.start_s, "{}", s.name);
+            if let Some(p) = s.parent {
+                let p = &spans[p as usize];
+                assert!(s.start_s >= p.start_s && s.end_s <= p.end_s);
+            }
+        }
+        let st = span_stats();
+        assert_eq!(st.total, 3);
+        assert_eq!(st.max_depth, 2);
+        assert_eq!(st.open, 0);
+        assert_eq!(st.dropped, 0);
+    }
+
+    #[test]
+    fn namespace_prefixes_span_names() {
+        reset();
+        {
+            let _root = span("run");
+            for r in 0..2 {
+                let _ns = namespace(&format!("r{r}"));
+                let _s = span("rank");
+            }
+        }
+        let spans = snapshot_spans();
+        let names: Vec<&str> = spans.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["run", "r0:rank", "r1:rank"]);
+    }
+
+    #[test]
+    fn nested_namespaces_join() {
+        reset();
+        {
+            let _a = namespace("outer");
+            let _b = namespace("inner");
+            let _s = span("leaf");
+        }
+        assert_eq!(snapshot_spans()[0].name, "outer:inner:leaf");
+        // prefixes popped on drop
+        let _t = span("plain");
+        drop(_t);
+        assert_eq!(snapshot_spans()[1].name, "plain");
+    }
+
+    #[test]
+    fn snapshot_closes_open_spans_in_copy_only() {
+        reset();
+        let g = span("open");
+        let snap = snapshot_spans();
+        assert_eq!(snap.len(), 1);
+        assert!(snap[0].end_s >= snap[0].start_s);
+        assert_eq!(span_stats().open, 1);
+        drop(g);
+        assert_eq!(span_stats().open, 0);
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        reset();
+        {
+            let _s = span("gone");
+        }
+        assert_eq!(span_stats().total, 1);
+        reset();
+        assert_eq!(span_stats(), SpanStats::default());
+        assert!(snapshot_spans().is_empty());
+    }
+
+    #[test]
+    fn json_tree_shape() {
+        reset();
+        {
+            let p = span("parent");
+            p.field("chain", "flux \"x\"");
+            let _c = span("child");
+        }
+        let json = spans_json(&snapshot_spans());
+        assert!(json.starts_with("{\"spans\":["));
+        assert!(json.contains("\"name\":\"parent\""));
+        assert!(json.contains("\"children\":[{\"name\":\"child\""));
+        assert!(json.contains("\"fields\":{\"chain\":\"flux \\\"x\\\"\"}"));
+        assert!(json.ends_with("\"count\":2,\"max_depth\":2}"));
+    }
+}

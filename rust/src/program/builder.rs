@@ -223,6 +223,9 @@ impl ProgramBuilder {
     ///   whole artifact is fingerprinted.
     pub fn freeze(self) -> crate::Result<Program> {
         let t0 = std::time::Instant::now();
+        let sp = crate::obs::span("freeze");
+        sp.field("chains", self.chains.len());
+        sp.field("datasets", self.datasets.len());
         if let Some(e) = self.errors.first() {
             crate::bail!("program declaration error: {e}");
         }
@@ -234,7 +237,12 @@ impl ProgramBuilder {
         let analyses: Vec<Arc<ChainAnalysis>> = self
             .chains
             .iter()
-            .map(|c| Arc::new(ChainAnalysis::build(&c.loops, &self.datasets, &self.stencils)))
+            .map(|c| {
+                let asp = crate::obs::span("analyze");
+                asp.field("chain", &c.name);
+                asp.field("loops", c.loops.len());
+                Arc::new(ChainAnalysis::build(&c.loops, &self.datasets, &self.stencils))
+            })
             .collect();
         let mut h = Fnv::new();
         h.write_u64(chain_structure_fingerprint(&[], &self.datasets, &self.stencils));

@@ -124,6 +124,9 @@ impl Session {
             return;
         }
         let analysis = program.analysis(chain).clone();
+        let sp = crate::obs::span("replay");
+        sp.field("chain", &spec.name);
+        sp.field("steps", steps);
         for _ in 0..steps {
             if self.frozen_used[chain.0 as usize] {
                 self.metrics.analysis_reuse_hits += 1;
@@ -181,6 +184,8 @@ impl Session {
         stencils: &[Stencil],
         analysis: &ChainAnalysis,
     ) {
+        let sp = crate::obs::span("chain");
+        sp.field("loops", chain.len());
         if !self.engine.fits(analysis.chain_bytes) {
             self.oom = true;
         }
@@ -297,10 +302,14 @@ impl Drive for Session {
     fn exchange_periodic(&mut self, id: crate::ops::DatasetId, dim: usize, depth: usize) {
         self.flush_dynamic();
         let ds = self.program.dataset(id).clone();
+        let sp = crate::obs::span("halo");
+        sp.field("dataset", &ds.name);
         let t0 = self.metrics.elapsed_s;
         let t = crate::ops::api::periodic_exchange(&ds, &mut self.store, dim, depth);
+        sp.field("model_s", t);
         self.metrics.halo_time_s += t;
         self.metrics.halo_exchanges += 1;
+        self.metrics.obs.record("halo_exchange_s", t);
         self.metrics.elapsed_s += t;
         // Periodic boundary wraps run outside any engine chain; attribute
         // them to an exchange stream so the bottleneck ledger sees them.

@@ -100,10 +100,15 @@ pub fn tune(
     }
 
     let budget = opts.budget.max(1);
+    let sp = crate::obs::span("tune");
+    sp.field("budget", budget);
+    sp.field("loops", chain.len());
     let mut evals = 0u32;
     let mut seen: HashSet<Candidate> = HashSet::new();
     let score = |cand: Candidate, evals: &mut u32| -> f64 {
         *evals += 1;
+        let csp = crate::obs::span("candidate");
+        csp.field("eval", *evals);
         model_chain_time(
             &mut *target.build(cand),
             chain,

@@ -117,6 +117,8 @@ const SCHEMA: &[(&str, &str)] = &[
     ("analysis_builds", "num"),
     ("analysis_reuse_hits", "num"),
     ("program_freeze_s", "num"),
+    ("spans_recorded", "num"),
+    ("span_max_depth", "num"),
 ];
 
 fn assert_schema(rec: &BTreeMap<String, Val>) {
@@ -131,20 +133,30 @@ fn assert_schema(rec: &BTreeMap<String, Val>) {
         };
         assert_eq!(&got, ty, "key {key:?}");
     }
-    // Beyond the fixed keys, only the dynamic per-tier utilisation
-    // fields of multi-tier topologies are allowed — numeric, prefixed
-    // `util_tier_`, in [0, 1].
+    // Beyond the fixed keys, only these dynamic families are allowed:
+    // * `util_tier_*` — per-tier utilisation of multi-tier topologies,
+    //   numeric, in [0, 1];
+    // * `p50_*` / `p90_*` / `p99_*` — obs-registry histogram quantiles,
+    //   numeric, >= 0;
+    // * `roofline_*` — per-stream roofline rows (peak/achieved GB/s and
+    //   fraction of peak), numeric, >= 0.
     for (key, v) in rec {
         if SCHEMA.iter().any(|(k, _)| k == key) {
             continue;
         }
+        let quantile = ["p50_", "p90_", "p99_"].iter().any(|p| key.starts_with(p));
+        let roofline = key.starts_with("roofline_");
+        let tier = key.starts_with("util_tier_");
         assert!(
-            key.starts_with("util_tier_"),
+            tier || quantile || roofline,
             "unexpected extra key {key:?}: {:?}",
             rec.keys().collect::<Vec<_>>()
         );
         match v {
-            Val::Num(u) => assert!((0.0..=1.0 + 1e-9).contains(u), "{key} = {u}"),
+            Val::Num(u) if tier => {
+                assert!((0.0..=1.0 + 1e-9).contains(u), "{key} = {u}")
+            }
+            Val::Num(u) => assert!(*u >= 0.0, "{key} = {u}"),
             v => panic!("{key}: {v:?}"),
         }
     }
@@ -168,7 +180,12 @@ fn json_record_roundtrips_and_schema_is_stable() {
     ));
     assert_schema(&rec);
     assert_eq!(rec["topology"], Val::Str("tiers:knl".into()));
-    assert_eq!(rec["bound"], Val::Str("none".into()));
+    assert_eq!(rec["bound"], Val::Str("idle".into()));
+    // record_loop feeds the obs registry: the loop-time quantiles ride
+    // along under the pinned p50_/p99_ prefixes
+    assert!(rec.contains_key("p50_loop_time_s"), "{:?}", rec.keys());
+    assert!(rec.contains_key("p99_loop_time_s"), "{:?}", rec.keys());
+    assert_eq!(rec["spans_recorded"], Val::Num(0.0));
     assert_eq!(rec["util_compute"], Val::Num(0.0));
     assert_eq!(rec["app"], Val::Str("cloverleaf2d".into()));
     assert_eq!(rec["ranks"], Val::Num(1.0));
@@ -291,6 +308,21 @@ fn real_run_produces_a_parseable_record() {
     match &rec["program_freeze_s"] {
         Val::Num(v) => assert!(*v >= 0.0),
         v => panic!("{v:?}"),
+    }
+    // the cell ran with the span tracer on: lifecycle spans were
+    // recorded and roofline rows cover the streams that ran
+    match &rec["spans_recorded"] {
+        Val::Num(n) => assert!(*n >= 1.0, "spans must be recorded: {n}"),
+        v => panic!("{v:?}"),
+    }
+    assert!(
+        rec.keys().any(|k| k.starts_with("roofline_")),
+        "roofline rows must appear for a streamed run: {:?}",
+        rec.keys().collect::<Vec<_>>()
+    );
+    match rec.get("roofline_upload_achieved_gbs") {
+        Some(Val::Num(g)) => assert!(*g > 0.0, "upload stream moved bytes"),
+        v => panic!("roofline_upload_achieved_gbs: {v:?}"),
     }
 }
 

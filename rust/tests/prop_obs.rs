@@ -1,0 +1,261 @@
+//! Property tests for the obs telemetry layer:
+//!
+//! * histogram quantile bounds bracket the exact sample quantiles and
+//!   stay within the log-linear bucket width (≤ 1/16 relative);
+//! * merging two histograms is equivalent to recording the union of
+//!   their samples;
+//! * the span trees produced by real engine runs over randomised chains
+//!   are well-nested on every platform.
+//!
+//! All randomness comes from the same seeded xorshift64* generator the
+//! tuner uses, so failures reproduce deterministically.
+
+use ops_oc::obs::Histogram;
+
+/// Deterministic xorshift64* (the tuner's generator).
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n.max(1)
+    }
+
+    /// A positive sample spanning ~9 decades.
+    fn sample(&mut self) -> f64 {
+        let mantissa = 1.0 + (self.below(1_000_000) as f64) / 1_000_000.0;
+        let exp = self.below(30) as i32 - 15;
+        mantissa * 2f64.powi(exp)
+    }
+}
+
+/// The exact rank a quantile resolves to — the same definition
+/// `Histogram::quantile_bounds` uses.
+fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len() as u64;
+    let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).clamp(1, n);
+    sorted[(rank - 1) as usize]
+}
+
+#[test]
+fn quantile_bounds_bracket_the_exact_quantiles() {
+    let mut rng = Rng::new(0xDECAF);
+    for case in 0..40 {
+        let n = 1 + rng.below(400) as usize;
+        let samples: Vec<f64> = (0..n).map(|_| rng.sample()).collect();
+        let mut h = Histogram::default();
+        for &s in &samples {
+            h.record(s);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.0, 0.01, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let exact = exact_quantile(&sorted, q);
+            let (lo, hi) = h.quantile_bounds(q).expect("non-empty histogram");
+            assert!(
+                lo <= exact && exact <= hi,
+                "case {case} q={q}: exact {exact} outside [{lo}, {hi}]"
+            );
+            assert!(
+                hi - lo <= lo / 16.0 + 1e-300,
+                "case {case} q={q}: bucket too wide: [{lo}, {hi}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn merging_histograms_matches_recording_the_union() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..40 {
+        let na = rng.below(200) as usize;
+        let nb = rng.below(200) as usize;
+        let a: Vec<f64> = (0..na).map(|_| rng.sample()).collect();
+        let b: Vec<f64> = (0..nb).map(|_| rng.sample()).collect();
+
+        let mut ha = Histogram::default();
+        a.iter().for_each(|&v| ha.record(v));
+        let mut hb = Histogram::default();
+        b.iter().for_each(|&v| hb.record(v));
+        ha.merge(&hb);
+
+        let mut hu = Histogram::default();
+        a.iter().chain(b.iter()).for_each(|&v| hu.record(v));
+
+        assert_eq!(ha.count(), hu.count(), "case {case}");
+        assert_eq!(ha.min(), hu.min(), "case {case}");
+        assert_eq!(ha.max(), hu.max(), "case {case}");
+        let scale = hu.sum().abs().max(1e-300);
+        assert!(
+            (ha.sum() - hu.sum()).abs() / scale < 1e-9,
+            "case {case}: sums diverge: {} vs {}",
+            ha.sum(),
+            hu.sum()
+        );
+        assert_eq!(
+            ha.buckets().collect::<Vec<_>>(),
+            hu.buckets().collect::<Vec<_>>(),
+            "case {case}: bucket contents must be identical"
+        );
+        for q in [0.1, 0.5, 0.95] {
+            assert_eq!(
+                ha.quantile_bounds(q),
+                hu.quantile_bounds(q),
+                "case {case} q={q}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Span well-nestedness over randomised chains on real engines.
+
+mod spans {
+    use super::Rng;
+    use ops_oc::exec::{Engine, Metrics, NativeExecutor, World};
+    use ops_oc::memory::{AppCalib, GpuCalib, GpuExplicitEngine, GpuOpts, Link, PlainEngine};
+    use ops_oc::ops::kernel::kernel;
+    use ops_oc::ops::stencil::{shapes, StencilId};
+    use ops_oc::ops::*;
+
+    const APP: AppCalib = AppCalib::CLOVERLEAF_2D;
+
+    fn fixture(rng: &mut Rng) -> (Vec<Dataset>, Vec<Stencil>, DataStore, Vec<LoopInst>) {
+        let nds = 2 + rng.below(3) as u32;
+        let ny = 64 + rng.below(4) as usize * 64;
+        let mut datasets = vec![];
+        let mut store = DataStore::new();
+        for i in 0..nds {
+            let d = Dataset {
+                id: DatasetId(i),
+                block: BlockId(0),
+                name: format!("d{i}"),
+                size: [32, ny, 1],
+                halo_lo: [1, 1, 0],
+                halo_hi: [1, 1, 0],
+                elem_bytes: 8,
+            };
+            store.alloc(&d);
+            datasets.push(d);
+        }
+        let stencils = vec![
+            Stencil {
+                id: StencilId(0),
+                name: "pt".into(),
+                points: shapes::point(),
+            },
+            Stencil {
+                id: StencilId(1),
+                name: "star".into(),
+                points: shapes::star2d(1),
+            },
+        ];
+        let nloops = 1 + rng.below(5) as usize;
+        let mut chain = vec![];
+        for l in 0..nloops {
+            let src = DatasetId(rng.below(nds as u64) as u32);
+            let dst = DatasetId(((src.0 + 1) % nds.max(1)) as u32);
+            chain.push(LoopInst {
+                name: format!("sweep{l}"),
+                block: BlockId(0),
+                range: [(0, 32), (0, ny as isize), (0, 1)],
+                args: vec![
+                    Arg::dat(src, StencilId(1), Access::Read),
+                    Arg::dat(dst, StencilId(0), Access::Write),
+                ],
+                kernel: kernel(|c| {
+                    let v = c.r(0, -1, 0) + c.r(0, 1, 0);
+                    c.w(1, 0, 0, 0.5 * v);
+                }),
+                seq: l as u64,
+                bw_efficiency: 1.0,
+            });
+        }
+        (datasets, stencils, store, chain)
+    }
+
+    fn run(engine: &mut dyn Engine, fx: &(Vec<Dataset>, Vec<Stencil>, DataStore, Vec<LoopInst>)) {
+        let (datasets, stencils, _, chain) = fx;
+        let mut store = DataStore::new();
+        datasets.iter().for_each(|d| store.alloc(d));
+        let mut reds = vec![];
+        let mut metrics = Metrics::new();
+        let mut exec = NativeExecutor::new();
+        let mut world = World {
+            datasets,
+            stencils,
+            store: &mut store,
+            reds: &mut reds,
+            metrics: &mut metrics,
+            exec: &mut exec,
+        };
+        engine.run_chain(chain, &mut world, true);
+    }
+
+    fn assert_well_nested(spans: &[ops_oc::obs::SpanRec]) {
+        assert!(!spans.is_empty(), "engines must record lifecycle spans");
+        for s in spans {
+            assert!(s.end_s >= s.start_s, "{}: negative duration", s.name);
+            match s.parent {
+                None => assert_eq!(s.depth, 0, "{}: root depth", s.name),
+                Some(pid) => {
+                    let p = spans
+                        .iter()
+                        .find(|p| p.id == pid)
+                        .unwrap_or_else(|| panic!("{}: missing parent {pid}", s.name));
+                    assert_eq!(s.depth, p.depth + 1, "{}", s.name);
+                    assert!(p.id < s.id, "{}: parent created first", s.name);
+                    assert!(s.start_s >= p.start_s - 1e-9, "{}", s.name);
+                    assert!(s.end_s <= p.end_s + 1e-9, "{}", s.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn span_trees_are_well_nested_across_random_chains_and_platforms() {
+        let mut rng = Rng::new(0xC0FFEE);
+        for case in 0..12 {
+            let fx = fixture(&mut rng);
+
+            ops_oc::obs::reset();
+            let mut plain = PlainEngine::knl_flat_ddr4(50.0);
+            run(&mut plain, &fx);
+            let stats = ops_oc::obs::span_stats();
+            assert_eq!(stats.open, 0, "case {case}: all plain spans closed");
+            assert_well_nested(&ops_oc::obs::snapshot_spans());
+
+            ops_oc::obs::reset();
+            let mut gpu = GpuExplicitEngine::new(
+                GpuCalib {
+                    hbm_bytes: 64 << 10, // force multi-tile streaming
+                    ..GpuCalib::default()
+                },
+                APP,
+                Link::PciE,
+                GpuOpts::default(),
+            )
+            .unwrap();
+            run(&mut gpu, &fx);
+            let spans = ops_oc::obs::snapshot_spans();
+            assert_eq!(ops_oc::obs::span_stats().open, 0, "case {case}");
+            assert_well_nested(&spans);
+            assert!(
+                spans.iter().any(|s| s.name == "tile"),
+                "case {case}: streamed run must record tile spans"
+            );
+        }
+    }
+}

@@ -174,3 +174,58 @@ fn trace_events_are_well_formed_and_ordered_per_resource() {
     assert!(json.contains("\"traceEvents\""));
     assert!(json.contains("\"ph\":\"X\""));
 }
+
+/// Regression test for sharded span namespacing: the per-rank
+/// re-namespacing that prefixes a rank's streams and trace events with
+/// `r{r}:` must apply to its lifecycle spans too, and the resulting
+/// span tree must stay well-nested.
+#[test]
+fn sharded_runs_namespace_spans_per_rank() {
+    use ops_oc::bench_support::run_cl2d;
+    use ops_oc::coordinator::{InnerPlatform, Platform};
+    use ops_oc::distributed::{DecompKind, Interconnect};
+    use ops_oc::memory::Link;
+    let p = Platform::Sharded {
+        ranks: 2,
+        inner: InnerPlatform::GpuExplicit {
+            link: Link::NvLink,
+            cyclic: true,
+            prefetch: true,
+        },
+        link: Interconnect::NvLink,
+        decomp: DecompKind::OneD,
+        overlap: true,
+    };
+    let (m, oom) = run_cl2d(p, 8, 256, 0.01, 1, 0);
+    assert!(!oom);
+    assert!(m.spans_recorded > 0, "cells record lifecycle spans");
+    // the cell runner resets the tracer before the run, so the thread's
+    // tracer still holds exactly this cell's spans
+    let spans = ops_oc::obs::snapshot_spans();
+    for r in 0..2 {
+        let rank = format!("r{r}:rank");
+        assert!(
+            spans.iter().any(|s| s.name == rank),
+            "missing {rank} span"
+        );
+        assert!(
+            spans
+                .iter()
+                .any(|s| s.name.starts_with(&format!("r{r}:")) && s.name != rank),
+            "rank {r}'s inner-engine spans must carry the r{r}: prefix"
+        );
+    }
+    // well-nested: children sit strictly inside their parent
+    for s in &spans {
+        if let Some(pid) = s.parent {
+            let parent = spans
+                .iter()
+                .find(|p| p.id == pid)
+                .expect("parent span present in the snapshot");
+            assert_eq!(s.depth, parent.depth + 1, "{}", s.name);
+            assert!(s.start_s >= parent.start_s - 1e-9, "{}", s.name);
+            assert!(s.end_s <= parent.end_s + 1e-9, "{}", s.name);
+            assert!(parent.id < s.id, "parents are created before children");
+        }
+    }
+}
