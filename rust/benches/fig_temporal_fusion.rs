@@ -1,0 +1,144 @@
+//! Temporal super-tiling: fuse `k` replays of the recorded step chain
+//! into one skewed super-chain, so each tile's data crosses the slowest
+//! memory boundary once per `k` steps instead of once per step.
+//!
+//! CloverLeaf 2D on a three-tier HBM (16 GiB) → host DRAM (64 GiB) →
+//! NVMe (unbounded, ~6 GB/s) stack, sweeping the fusion depth
+//! `k ∈ {1, 2, 4, 8}` across problem sizes on both sides of the
+//! host-DRAM boundary. The bench asserts the three claims the figure
+//! illustrates:
+//!
+//! * **bit-exactness** — every fused run's store checksum equals the
+//!   unfused (`k = 1`) replay of the same chain, at every size;
+//! * **≈k× slowest-tier traffic reduction** — past the host boundary
+//!   the NVMe→host upload bytes per step fall with `k`, within the
+//!   skew-halo overhead;
+//! * **tuner never loses** — `fuse = 0` (tuner-chosen depth) is never
+//!   slower than the unfused replay.
+
+use ops_oc::bench_support::{
+    run_cl2d_fused_cfg, slowest_boundary_upload_bytes, telemetry::BenchRecorder, Figure,
+};
+use ops_oc::coordinator::Config;
+use ops_oc::memory::AppCalib;
+use std::time::Instant;
+
+/// Replay count per cell — divisible by every depth in the sweep, so no
+/// unfused tail clouds the per-step byte counts.
+const REPLAYS: usize = 8;
+const DEPTHS: [u32; 4] = [1, 2, 4, 8];
+const HOST_GB: f64 = 64.0;
+
+fn main() {
+    let t0 = Instant::now();
+    let (target, _) = Config::parse_spec(
+        "tiers:hbm=16g@509.7+host=64g@11~0.00001+nvme=inf@6~0.00002:cyclic:prefetch",
+    )
+    .unwrap();
+    let cfg = Config::for_target(target, AppCalib::CLOVERLEAF_2D);
+    let topo = cfg.topology();
+
+    let mut fig = Figure::new(
+        "Temporal fusion: CloverLeaf 2D NVMe-boundary traffic vs fusion depth",
+        "slowest-tier GB uploaded per step (modelled)",
+    );
+    let series: Vec<_> = DEPTHS
+        .iter()
+        .map(|k| fig.add_series(&format!("fuse k={k}")))
+        .collect();
+    let s_tuned = fig.add_series("fuse k=tuner");
+
+    let mut rec = BenchRecorder::new("fig_temporal_fusion");
+    // one size inside host DRAM (NVMe silent), two past the boundary
+    for gb in [24.0, 96.0, 128.0] {
+        let runs: Vec<_> = DEPTHS
+            .iter()
+            .map(|&k| run_cl2d_fused_cfg(&cfg.clone().with_fuse(k), false, 8, 6144, gb, REPLAYS))
+            .collect();
+        let tuned = run_cl2d_fused_cfg(&cfg.clone().with_fuse(0), false, 8, 6144, gb, REPLAYS);
+        let base = &runs[0];
+        assert!(!base.oom && !tuned.oom, "streaming never OOMs at {gb} GB");
+        assert_eq!(base.k, 1, "fuse=1 must run unfused");
+
+        for (r, &k) in runs.iter().zip(&DEPTHS) {
+            assert!(!r.oom);
+            assert_eq!(r.k as u32, k, "requested depth is the executed depth");
+            // the whole point: fusion is a re-schedule, not a re-numbering
+            assert_eq!(
+                r.checksum, base.checksum,
+                "fused k={k} diverged from the unfused replay at {gb} GB"
+            );
+            rec.point(
+                &format!("cloverleaf2d|fuse{k}|{gb:.0}"),
+                "cloverleaf2d",
+                &format!("tiers:hbm+host+nvme fuse{k}"),
+                gb,
+                &r.metrics,
+                r.oom,
+            );
+        }
+        assert_eq!(
+            tuned.checksum, base.checksum,
+            "tuner-fused run diverged at {gb} GB"
+        );
+
+        let bytes: Vec<u64> = runs
+            .iter()
+            .map(|r| slowest_boundary_upload_bytes(&topo, &r.metrics))
+            .collect();
+        let per_step = |b: u64| b as f64 / REPLAYS as f64 / 1e9;
+        for (s, &b) in series.iter().zip(&bytes) {
+            fig.push(*s, gb, Some(per_step(b)));
+        }
+        fig.push(
+            s_tuned,
+            gb,
+            Some(per_step(slowest_boundary_upload_bytes(&topo, &tuned.metrics))),
+        );
+
+        // deeper fusion can only remove slowest-boundary traffic
+        for w in bytes.windows(2) {
+            assert!(
+                w[1] <= w[0],
+                "slowest-tier bytes must not grow with k at {gb} GB: {w:?}"
+            );
+        }
+        if gb > HOST_GB {
+            // past host DRAM every step streams over the NVMe link, and
+            // fusing k steps amortises that stream ≈k× (the skew halo
+            // re-uploads a few hundred rows per tile boundary, a small
+            // fraction of the 6144-row domain)
+            assert!(bytes[0] > 0, "past-host runs must stream over NVMe");
+            for (i, &k) in DEPTHS.iter().enumerate().skip(1) {
+                let ratio = bytes[0] as f64 / bytes[i].max(1) as f64;
+                assert!(
+                    ratio >= k as f64 / 2.0,
+                    "fuse k={k} at {gb} GB only cut NVMe bytes {ratio:.2}x \
+                     (expected ≈{k}x, floor {}x)",
+                    k as f64 / 2.0
+                );
+                println!("{gb:>4.0} GB  k={k}: NVMe bytes cut {ratio:.2}x");
+            }
+            assert!(
+                tuned.metrics.fused_steps > 0,
+                "past-host tuner must engage fusion accounting"
+            );
+        }
+
+        // the tuner holds k=1 as the incumbent: it can never model slower
+        assert!(
+            tuned.metrics.elapsed_s <= base.metrics.elapsed_s * 1.001,
+            "tuner-chosen k={} is slower than unfused at {gb} GB: {} > {}",
+            tuned.k,
+            tuned.metrics.elapsed_s,
+            base.metrics.elapsed_s
+        );
+    }
+
+    println!("{}", fig.render());
+    match rec.write() {
+        Ok(p) => println!("trajectory: {}", p.display()),
+        Err(e) => eprintln!("cannot write trajectory: {e}"),
+    }
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -963,14 +963,18 @@ impl CloverLeaf2D {
 
     // ------------------------------------------------------------ driver
 
-    /// One full timestep (the paper's per-iteration chain). Returns dt.
-    pub fn step(&mut self, ctx: &mut impl Drive) -> f64 {
+    /// EOS + viscosity block that precedes the `calc_dt` trigger.
+    fn pre_dt(&self, ctx: &mut impl Record) {
         self.ideal_gas(ctx, false);
         self.halo_cell(ctx, "halo_pressure", self.pressure);
         self.viscosity_kernel(ctx);
         self.halo_cell(ctx, "halo_viscosity", self.viscosity);
-        let dt = self.calc_dt(ctx); // <-- chain trigger (reduction)
+    }
 
+    /// Lagrangian step + split advection for one parity. All kernels
+    /// capture the *current* `self.dt` by value, so this block records
+    /// cleanly into a frozen chain.
+    fn post_dt(&self, ctx: &mut impl Record, xfirst: bool) {
         self.pdv(ctx, true);
         self.ideal_gas(ctx, true);
         self.update_halo_hydro(ctx);
@@ -980,8 +984,6 @@ impl CloverLeaf2D {
         self.pdv(ctx, false);
         self.flux_calc(ctx);
 
-        let xfirst = !self.step_parity;
-        self.step_parity = !self.step_parity;
         if xfirst {
             self.advec_cell(ctx, true, true);
             self.halo_cell(ctx, "halo_density1", self.density1);
@@ -1002,7 +1004,37 @@ impl CloverLeaf2D {
             self.advec_mom(ctx, self.yvel1, true);
         }
         self.reset_field(ctx);
+    }
+
+    /// One full timestep (the paper's per-iteration chain). Returns dt.
+    pub fn step(&mut self, ctx: &mut impl Drive) -> f64 {
+        self.pre_dt(ctx);
+        let dt = self.calc_dt(ctx); // <-- chain trigger (reduction)
+        let xfirst = !self.step_parity;
+        self.step_parity = !self.step_parity;
+        self.post_dt(ctx, xfirst);
         dt
+    }
+
+    /// Record one **fixed-`dt` double step** (both advection parities,
+    /// no `calc_dt`, no summary) once — the record-once API for frozen
+    /// replay via [`crate::program::Session::replay`] /
+    /// [`crate::program::Session::replay_fused`]. The adaptive timestep
+    /// is a reduction trigger, so a frozen chain pins `dt = dtinit`
+    /// (`dt` is captured by value at record time); recording both
+    /// parities makes the chain self-similar under repetition, which is
+    /// what temporal fusion needs.
+    pub fn record_step_chain(
+        &mut self,
+        b: &mut crate::program::ProgramBuilder,
+    ) -> crate::program::ChainId {
+        self.dt = self.dtinit;
+        b.record_chain("cl2d_step2", |r| {
+            for xfirst in [true, false] {
+                self.pre_dt(r);
+                self.post_dt(r, xfirst);
+            }
+        })
     }
 
     /// Conserved-quantity summary (trigger point; every N steps in the

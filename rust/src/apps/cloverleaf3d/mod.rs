@@ -1120,15 +1120,18 @@ impl CloverLeaf3D {
 
     // ------------------------------------------------------------ driver
 
-    /// One timestep: Lagrangian step + x/y/z split advection (sweep order
-    /// rotates with step parity, as in the original).
-    pub fn step(&mut self, ctx: &mut impl Drive) -> f64 {
+    /// EOS + viscosity block that precedes the `calc_dt` trigger.
+    fn pre_dt(&self, ctx: &mut impl Record) {
         self.ideal_gas(ctx, false);
         self.halo_cell(ctx, "halo_pressure", self.pressure);
         self.viscosity_kernel(ctx);
         self.halo_cell(ctx, "halo_viscosity", self.viscosity);
-        let dt = self.calc_dt(ctx); // trigger
+    }
 
+    /// Lagrangian step + split advection for one sweep order. All
+    /// kernels capture the *current* `self.dt` by value, so this block
+    /// records cleanly into a frozen chain.
+    fn post_dt(&self, ctx: &mut impl Record, order: [Dir; 3]) {
         self.pdv(ctx, true);
         self.ideal_gas(ctx, true);
         self.update_halo_hydro(ctx);
@@ -1137,10 +1140,6 @@ impl CloverLeaf3D {
         self.update_halo_vel(ctx);
         self.pdv(ctx, false);
         self.flux_calc(ctx);
-
-        let orders: [[Dir; 3]; 2] = [[Dir::X, Dir::Y, Dir::Z], [Dir::Z, Dir::Y, Dir::X]];
-        let order = orders[(self.step_count % 2) as usize];
-        self.step_count += 1;
 
         let mut remaining = [true, true, true];
         for (k, dir) in order.iter().enumerate() {
@@ -1155,7 +1154,41 @@ impl CloverLeaf3D {
             }
         }
         self.reset_field(ctx);
+    }
+
+    /// One timestep: Lagrangian step + x/y/z split advection (sweep order
+    /// rotates with step parity, as in the original).
+    pub fn step(&mut self, ctx: &mut impl Drive) -> f64 {
+        self.pre_dt(ctx);
+        let dt = self.calc_dt(ctx); // trigger
+
+        let orders: [[Dir; 3]; 2] = [[Dir::X, Dir::Y, Dir::Z], [Dir::Z, Dir::Y, Dir::X]];
+        let order = orders[(self.step_count % 2) as usize];
+        self.step_count += 1;
+        self.post_dt(ctx, order);
         dt
+    }
+
+    /// Record one **fixed-`dt` double step** (both sweep orders, no
+    /// `calc_dt`, no summary) once — the record-once API for frozen
+    /// replay via [`crate::program::Session::replay`] /
+    /// [`crate::program::Session::replay_fused`]. The adaptive timestep
+    /// is a reduction trigger, so a frozen chain pins `dt = dtinit`
+    /// (`dt` is captured by value at record time); recording both sweep
+    /// orders makes the chain self-similar under repetition, which is
+    /// what temporal fusion needs.
+    pub fn record_step_chain(
+        &mut self,
+        b: &mut crate::program::ProgramBuilder,
+    ) -> crate::program::ChainId {
+        self.dt = self.dtinit;
+        let orders: [[Dir; 3]; 2] = [[Dir::X, Dir::Y, Dir::Z], [Dir::Z, Dir::Y, Dir::X]];
+        b.record_chain("cl3d_step2", |r| {
+            for order in orders {
+                self.pre_dt(r);
+                self.post_dt(r, order);
+            }
+        })
     }
 
     pub fn field_summary(&self, ctx: &mut impl Drive) -> FieldSummary3D {

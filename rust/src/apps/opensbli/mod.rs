@@ -573,7 +573,10 @@ impl OpenSbli {
     /// driver does between chains. OpenSBLI has no data-dependent
     /// control flow (fixed `dt`, no reductions in the bulk), so the
     /// whole multi-step chain freezes cleanly.
-    pub fn record_step_chain(&mut self, b: &mut crate::program::ProgramBuilder) -> crate::program::ChainId {
+    pub fn record_step_chain(
+        &mut self,
+        b: &mut crate::program::ProgramBuilder,
+    ) -> crate::program::ChainId {
         let spc = self.steps_per_chain;
         b.record_chain("sbli_steps", |r| {
             for s in 0..spc {

@@ -427,6 +427,204 @@ pub fn run_sbli_tall_cell(
     run_sbli_tall_cfg(&cfg, trace, steps_per_chain, target_gb, chains)
 }
 
+// ---------------------------------------------------------------------------
+// Temporal-fusion cell runners: record the app's fixed-`dt` step chain
+// once, then drive it with [`Session::replay_fused`] so `k` recorded
+// steps run as one skewed super-chain. `cfg.fuse` selects the depth
+// (1 = unfused replay, 0 = ask the tuner). Numerics are bit-exact
+// against unfused replay of the same chain — the returned checksum is
+// the witness the CI smoke and `benches/fig_temporal_fusion.rs` compare
+// across depths.
+
+/// Upper fusion depth the tuner grid explores when `cfg.fuse == 0`.
+pub const DEFAULT_MAX_FUSE: u32 = 8;
+
+/// Result of one fused cell: metrics, OOM flag, the bit-exactness
+/// checksum over every dataset buffer, and the fusion depth actually
+/// used (tuner-resolved when the config asked for `fuse = 0`).
+#[derive(Debug, Clone)]
+pub struct FusedRun {
+    pub metrics: Metrics,
+    pub oom: bool,
+    pub checksum: u64,
+    pub k: usize,
+}
+
+/// Order-sensitive FNV-1a over the raw bit patterns of every dataset
+/// buffer — equal checksums mean bit-identical fields.
+pub fn store_checksum(sess: &Session) -> u64 {
+    let mut h = crate::tiling::analysis::Fnv::new();
+    h.write_u64(sess.store().len() as u64);
+    for id in 0..sess.store().len() {
+        let buf = sess.store().buf(crate::ops::DatasetId(id as u32));
+        h.write_u64(buf.len() as u64);
+        for v in buf {
+            h.write_u64(v.to_bits());
+        }
+    }
+    h.finish()
+}
+
+/// Bytes moved over the topology's *slowest* boundary (the paper's
+/// out-of-core cost): the upload stream feeding the second-to-last tier
+/// for ≥3-tier stacks (`"{tier}:upload"`), the bare `"upload"` stream
+/// for 2-tier stacks and the legacy GPU engines. Sharded runs prefix
+/// streams with `r{rank}:`, so matching is by suffix; all matching
+/// ranks are summed.
+pub fn slowest_boundary_upload_bytes(topo: &crate::topology::Topology, m: &Metrics) -> u64 {
+    let tiers = topo.tiers();
+    let name = if tiers.len() >= 3 {
+        format!("{}:upload", tiers[tiers.len() - 2].name)
+    } else {
+        "upload".to_string()
+    };
+    let suffix = format!(":{name}");
+    m.per_resource
+        .iter()
+        .filter(|(key, _)| **key == name || key.ends_with(&suffix))
+        .map(|(_, st)| st.bytes)
+        .sum()
+}
+
+/// Resolve a config's fusion depth against a frozen step chain:
+/// `fuse = k` is taken literally, `fuse = 0` asks
+/// [`crate::tuner::tune_fuse`] (geometric grid up to
+/// [`DEFAULT_MAX_FUSE`], never worse than `k = 1` by construction).
+fn resolve_fuse(cfg: &Config, sess: &Session, step: crate::program::ChainId) -> usize {
+    match cfg.fuse {
+        0 => match cfg.tuner_target() {
+            Some(target) => {
+                let spec = sess.program().chain(step);
+                let opts = cfg.tune.unwrap_or_default();
+                crate::tuner::tune_fuse(
+                    &target,
+                    &opts,
+                    &spec.loops,
+                    sess.datasets(),
+                    sess.stencils(),
+                    true,
+                    DEFAULT_MAX_FUSE,
+                )
+                .candidate
+                .fuse as usize
+            }
+            None => 1,
+        },
+        k => k as usize,
+    }
+}
+
+/// Shared tail of the fused runners: initialise live, freeze metrics,
+/// resolve the depth, replay the step chain fused, checksum.
+fn drive_fused<A>(
+    cfg: &Config,
+    trace: bool,
+    mut app: A,
+    b: ProgramBuilder,
+    step: crate::program::ChainId,
+    replays: usize,
+    init: impl FnOnce(&mut A, &mut Session),
+) -> FusedRun {
+    use crate::ops::Drive;
+    let mut checksum = 0u64;
+    let mut k_used = 1usize;
+    let (metrics, oom) = with_span_capture(|| {
+        let mut sess = freeze_session(b, cfg);
+        if trace {
+            sess.metrics_mut().enable_trace();
+        }
+        init(&mut app, &mut sess);
+        sess.flush();
+        sess.reset_metrics();
+        sess.set_cyclic_phase(true);
+        let k = resolve_fuse(cfg, &sess, step);
+        sess.replay_fused(step, replays, k);
+        sess.flush();
+        checksum = store_checksum(&sess);
+        k_used = k;
+        (sess.metrics().clone(), sess.oom())
+    });
+    FusedRun {
+        metrics,
+        oom,
+        checksum,
+        k: k_used,
+    }
+}
+
+/// Fused CloverLeaf 2D cell: `replays` fixed-`dt` double steps (the
+/// recorded chain covers both advection parities), fused `cfg.fuse` at
+/// a time.
+pub fn run_cl2d_fused_cfg(
+    cfg: &Config,
+    trace: bool,
+    nx: usize,
+    ny: usize,
+    target_gb: f64,
+    replays: usize,
+) -> FusedRun {
+    let mut cfg = cfg.clone();
+    cfg.app = AppCalib::CLOVERLEAF_2D;
+    let base = base_bytes(|b| {
+        CloverLeaf2D::new(b, nx, ny, 1);
+    });
+    let scale = model_scale(base, target_gb);
+    let mut b = ProgramBuilder::new();
+    let mut app = CloverLeaf2D::new(&mut b, nx, ny, scale);
+    let step = app.record_step_chain(&mut b);
+    drive_fused(&cfg, trace, app, b, step, replays, |app, sess| {
+        app.initialise(sess)
+    })
+}
+
+/// Fused CloverLeaf 3D cell (see [`run_cl2d_fused_cfg`]).
+pub fn run_cl3d_fused_cfg(
+    cfg: &Config,
+    trace: bool,
+    n: [usize; 3],
+    target_gb: f64,
+    replays: usize,
+) -> FusedRun {
+    let mut cfg = cfg.clone();
+    cfg.app = AppCalib::CLOVERLEAF_3D;
+    let base = base_bytes(|b| {
+        CloverLeaf3D::new(b, n[0], n[1], n[2], 1);
+    });
+    let scale = model_scale(base, target_gb);
+    let mut b = ProgramBuilder::new();
+    let mut app = CloverLeaf3D::new(&mut b, n[0], n[1], n[2], scale);
+    let step = app.record_step_chain(&mut b);
+    drive_fused(&cfg, trace, app, b, step, replays, |app, sess| {
+        app.initialise(sess)
+    })
+}
+
+/// Fused tall-z OpenSBLI cell: `chains` chains of `steps_per_chain`
+/// timesteps, fused `cfg.fuse` chains at a time (pure replay — no
+/// halo exchange between chains, matching what the unfused
+/// [`Session::replay`] baseline of the same chain does).
+pub fn run_sbli_fused_cfg(
+    cfg: &Config,
+    trace: bool,
+    steps_per_chain: usize,
+    target_gb: f64,
+    chains: usize,
+) -> FusedRun {
+    let n = [24usize, 24, 1024];
+    let mut cfg = cfg.clone();
+    cfg.app = AppCalib::OPENSBLI;
+    let base = base_bytes(|b| {
+        OpenSbli::new_aniso(b, n, steps_per_chain, 1);
+    });
+    let scale = model_scale(base, target_gb);
+    let mut b = ProgramBuilder::new();
+    let mut app = OpenSbli::new_aniso(&mut b, n, steps_per_chain, scale);
+    let step = app.record_step_chain(&mut b);
+    drive_fused(&cfg, trace, app, b, step, chains, |app, sess| {
+        app.initialise(sess)
+    })
+}
+
 /// Tall-z OpenSBLI cell driven by a full [`Config`] (see
 /// [`run_cl2d_cfg`]).
 pub fn run_sbli_tall_cfg(

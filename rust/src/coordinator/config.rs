@@ -514,11 +514,25 @@ pub struct Config {
     /// When set, wrap the engine in the cost-model auto-tuner
     /// ([`crate::tuner`]); `None` runs the seed heuristics.
     pub tune: Option<TuneOpts>,
+    /// Temporal fusion depth for step replays
+    /// ([`crate::program::Session::replay_fused`]): `1` = off (every
+    /// step is its own chain), `k > 1` = fuse `k` steps per
+    /// super-chain, `0` = ask the tuner ([`crate::tuner::tune_fuse`])
+    /// to pick the depth per chain. Engines ignore this field — the
+    /// step drivers (CLI/bench runners) consume it.
+    pub fuse: u32,
 }
 
 /// A `x<N>` ranks token (`x4` → 4).
 fn parse_ranks_token(tok: &str) -> Option<u32> {
     tok.strip_prefix('x')
+        .filter(|digits| !digits.is_empty())
+        .and_then(|digits| digits.parse::<u32>().ok())
+}
+
+/// A compact `fuse<k>` fusion token (`fuse4` → 4, `fuse0` → tuner-auto).
+fn parse_fuse_token(tok: &str) -> Option<u32> {
+    tok.strip_prefix("fuse")
         .filter(|digits| !digits.is_empty())
         .and_then(|digits| digits.parse::<u32>().ok())
 }
@@ -533,7 +547,14 @@ impl Config {
             gpu: GpuCalib::default(),
             um: UnifiedCalib::default(),
             tune: None,
+            fuse: 1,
         }
+    }
+
+    /// Set the temporal fusion depth (see [`Config::fuse`]).
+    pub fn with_fuse(mut self, k: u32) -> Self {
+        self.fuse = k;
+        self
     }
 
     /// Build a configuration for any parse target — the uniform
@@ -867,25 +888,61 @@ impl Config {
     /// [`Config::parse_platform`] itself keeps the strict grammar (it
     /// rejects `tuned` like any unknown token).
     pub fn parse_spec(spec: &str) -> crate::Result<(Target, bool)> {
+        let (target, tuned, fuse) = Self::parse_spec_opts(spec)?;
+        crate::ensure!(
+            fuse == 1,
+            "spec {spec:?} sets a temporal fusion depth, which this entry \
+             point cannot carry — use Config::parse_spec_opts (CLI: --fuse)"
+        );
+        Ok((target, tuned))
+    }
+
+    /// Like [`Config::parse_spec`], but additionally recognising the
+    /// temporal-fusion token, in either spelling and at any position:
+    /// `fuse:<k>` (a `fuse` token followed by a bare depth) or the
+    /// compact `fuse<k>` — e.g. `tiers:gpu-explicit-pcie:cyclic:fuse:4` or
+    /// `gpu-explicit:fuse4:x2`. Returns `(target, tuned, fuse)` with
+    /// `fuse = 1` when no token is present; `fuse0` (tuner-auto)
+    /// requires a tunable target, like `tuned`.
+    pub fn parse_spec_opts(spec: &str) -> crate::Result<(Target, bool, u32)> {
+        let toks: Vec<&str> = spec.split(':').collect();
         let mut tuned = false;
-        let rest: Vec<&str> = spec
-            .split(':')
-            .filter(|t| {
-                if *t == "tuned" {
-                    tuned = true;
-                    false
-                } else {
-                    true
-                }
-            })
-            .collect();
+        let mut fuse: Option<u32> = None;
+        let set_fuse = |k: u32, fuse: &mut Option<u32>| -> crate::Result<()> {
+            crate::ensure!(
+                fuse.replace(k).is_none(),
+                "duplicate fuse token in spec {spec:?}"
+            );
+            Ok(())
+        };
+        let mut rest: Vec<&str> = Vec::with_capacity(toks.len());
+        let mut i = 0usize;
+        while i < toks.len() {
+            let t = toks[i];
+            if t == "tuned" {
+                tuned = true;
+            } else if t == "fuse" {
+                // the `fuse:<k>` spelling: the depth rides in the next
+                // token (never a valid bare token in any head grammar)
+                let Some(k) = toks.get(i + 1).and_then(|d| d.parse::<u32>().ok()) else {
+                    crate::bail!("fuse token needs a depth: fuse:<k> or fuse<k> in {spec:?}")
+                };
+                set_fuse(k, &mut fuse)?;
+                i += 1;
+            } else if let Some(k) = parse_fuse_token(t) {
+                set_fuse(k, &mut fuse)?;
+            } else {
+                rest.push(t);
+            }
+            i += 1;
+        }
         let target = Self::parse_target(&rest.join(":"))?;
-        if tuned {
+        if tuned || fuse == Some(0) {
             // validate tunability with a throwaway default-calib config
             Config::for_target(target.clone(), AppCalib::CLOVERLEAF_2D)
                 .with_tuning(TuneOpts::default())?;
         }
-        Ok((target, tuned))
+        Ok((target, tuned, fuse.unwrap_or(1)))
     }
 
     /// Instantiate the memory engine for this configuration. With
@@ -974,6 +1031,7 @@ impl Config {
                     gpu: self.gpu.clone(),
                     um: self.um.clone(),
                     tune: None,
+                    fuse: 1,
                 };
                 let engines = (0..ranks.max(1)).map(|_| rank_cfg.build_engine()).collect();
                 Box::new(ShardedEngine::new(engines, decomp, link, overlap))
@@ -1178,6 +1236,42 @@ mod tests {
         assert!(Config::parse_spec("tiers:plain:tuned").is_err());
         // the strict grammar itself still rejects it as unknown
         assert!(Config::parse_platform("gpu-explicit:tuned").is_err());
+    }
+
+    #[test]
+    fn fuse_spec_tokens_parse_in_both_spellings() {
+        // compact fuse<k>, position-independent
+        let (t, tuned, fuse) = Config::parse_spec_opts("gpu-explicit:fuse4:nvlink").unwrap();
+        assert!(!tuned);
+        assert_eq!(fuse, 4);
+        assert_eq!(
+            t.platform().unwrap(),
+            Platform::GpuExplicit {
+                link: Link::NvLink,
+                cyclic: false,
+                prefetch: false
+            }
+        );
+        // the fuse:<k> spelling, composing with tiers and sharding
+        let (t, _, fuse) =
+            Config::parse_spec_opts("tiers:gpu-explicit-pcie:cyclic:fuse:8:x2").unwrap();
+        assert_eq!(fuse, 8);
+        assert_eq!(t.ranks(), 2);
+        assert!(t.tiered().unwrap().opts.cyclic);
+        // absent token defaults to 1 (off)
+        let (_, _, fuse) = Config::parse_spec_opts("knl-cache-tiled").unwrap();
+        assert_eq!(fuse, 1);
+        // fuse0 = tuner-auto: requires a tunable target, like `tuned`
+        let (_, _, fuse) = Config::parse_spec_opts("gpu-explicit:fuse0").unwrap();
+        assert_eq!(fuse, 0);
+        assert!(Config::parse_spec_opts("gpu-baseline:fuse0").is_err());
+        // malformed and duplicate tokens are rejected, not dropped
+        assert!(Config::parse_spec_opts("gpu-explicit:fuse").is_err());
+        assert!(Config::parse_spec_opts("gpu-explicit:fuse:x4").is_err());
+        assert!(Config::parse_spec_opts("gpu-explicit:fuse2:fuse:3").is_err());
+        // the fuse-unaware entry points cannot silently drop the depth
+        assert!(Config::parse_spec("gpu-explicit:fuse4").is_err());
+        assert!(Config::parse_platform("gpu-explicit:fuse4").is_err());
     }
 
     #[test]

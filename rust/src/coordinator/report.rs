@@ -105,6 +105,7 @@ pub fn json_record(
             "\"tuned_model_s\":{:.6},\"heuristic_model_s\":{:.6},",
             "\"tune_model_speedup\":{:.4},",
             "\"analysis_builds\":{},\"analysis_reuse_hits\":{},",
+            "\"fused_steps\":{},",
             "\"program_freeze_s\":{:.6},",
             "\"spans_recorded\":{},\"span_max_depth\":{}{}}}"
         ),
@@ -133,6 +134,7 @@ pub fn json_record(
         m.tune_model_speedup(),
         m.analysis_builds,
         m.analysis_reuse_hits,
+        m.fused_steps,
         m.program_freeze_s,
         m.spans_recorded,
         m.span_max_depth,
@@ -381,6 +383,7 @@ mod tests {
         assert!(j.contains("\"tuned\":false"));
         assert!(j.contains("\"tune_model_speedup\":1.0000"));
         assert!(j.contains("\"bound\":\"idle\""));
+        assert!(j.contains("\"fused_steps\":0"));
         assert!(j.contains("\"spans_recorded\":0"));
         assert!(j.contains("\"p50_loop_time_s\":"));
         assert!(j.contains("\"util_compute\":0.0000"));

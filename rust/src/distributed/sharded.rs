@@ -32,6 +32,22 @@ use crate::tiling::analysis::{chain_structure_fingerprint, ChainAnalysis};
 use std::collections::HashMap;
 use std::sync::Arc;
 
+/// Namespace an inner stream/event name under rank `r`, idempotently:
+/// a name already carrying this rank's prefix (forwarded from an inner
+/// layer that namespaced it, e.g. a future nested sharding or a scratch
+/// ledger drained twice) is left alone. A literal `r0:r0:compute` row
+/// would split one rank's attribution across two ledger keys and
+/// desynchronise streams from the span tree (`obs::namespace` applies
+/// the same innermost-prefix idempotence to span names).
+fn rank_ns(r: usize, name: &str) -> String {
+    let prefix = format!("r{r}:");
+    if name.starts_with(&prefix) {
+        name.to_string()
+    } else {
+        format!("{prefix}{name}")
+    }
+}
+
 /// N modelled ranks, each owning an inner memory engine.
 pub struct ShardedEngine {
     kind: DecompKind,
@@ -243,7 +259,7 @@ impl Engine for ShardedEngine {
             // plus the link exchange.
             for (name, st) in scratch.take_per_resource() {
                 world.metrics.record_stream(
-                    &format!("r{r}:{name}"),
+                    &rank_ns(r, &name),
                     st.class,
                     st.busy_s,
                     st.bytes,
@@ -265,7 +281,7 @@ impl Engine for ShardedEngine {
                 // concurrently from the chain start), and add the link
                 // exchange event.
                 for mut ev in scratch.take_trace_events() {
-                    ev.resource = format!("r{r}:{}", ev.resource);
+                    ev.resource = rank_ns(r, &ev.resource);
                     ev.start_s += chain_t0;
                     ev.end_s += chain_t0;
                     world.metrics.push_trace_event(ev);
@@ -581,6 +597,18 @@ mod tests {
             .trace_events()
             .iter()
             .any(|ev| ev.kind == EventKind::Compute));
+    }
+
+    #[test]
+    fn rank_prefix_is_idempotent() {
+        assert_eq!(rank_ns(0, "compute"), "r0:compute");
+        assert_eq!(rank_ns(0, "hbm:upload"), "r0:hbm:upload");
+        // already-prefixed names are left alone (no r0:r0: rows)
+        assert_eq!(rank_ns(0, "r0:compute"), "r0:compute");
+        // another rank's prefix is NOT this rank's — it still wraps
+        assert_eq!(rank_ns(1, "r0:compute"), "r1:r0:compute");
+        // the match is exact: "r10:" does not alias "r1:"
+        assert_eq!(rank_ns(1, "r10:compute"), "r1:r10:compute");
     }
 
     #[test]

@@ -116,6 +116,11 @@ pub struct Metrics {
     pub halo_exchanges: u64,
     /// Number of loop chains executed.
     pub chains: u64,
+    /// Steps executed inside temporally fused super-chains
+    /// ([`crate::program::Session::replay_fused`]); 0 when fusion is
+    /// off. A run of `n` steps at fusion depth `k` counts
+    /// `k * (n / k)` here, the `n % k` tail replaying unfused.
+    pub fused_steps: u64,
     /// Number of tiles executed (0 if untiled).
     pub tiles: u64,
     /// Auto-tuner: cost-model evaluations spent (0 when tuning is off).
@@ -414,6 +419,7 @@ impl Metrics {
         self.halo_time_s += other.halo_time_s;
         self.halo_exchanges += other.halo_exchanges;
         self.chains += other.chains;
+        self.fused_steps += other.fused_steps;
         self.tiles += other.tiles;
         self.tune_evals += other.tune_evals;
         self.tune_cache_hits += other.tune_cache_hits;

@@ -32,6 +32,10 @@
 //!   Program/Session analysis-reuse counters.
 //! `--tune` / `--tune-budget E` (or a `tuned` spec token) enable the
 //!   cost-model tile-plan auto-tuner on platforms with a tile plan.
+//! `--fuse K` (or a `fuse:K` / `fuseK` spec token) replays K recorded
+//!   fixed-dt steps as one temporally fused super-chain (0 = let the
+//!   tuner pick, 1 = the unfused-replay baseline); the non-JSON output
+//!   gains a greppable `fused: k=… checksum=…` witness line.
 //! `--trace <path>` (run only) writes the engine's discrete-event
 //!   timeline — every compute/upload/download/exchange event of the
 //!   timed region, per tier when the stack is deeper than two — as
@@ -61,6 +65,12 @@ struct Args {
     json: bool,
     tune: bool,
     tune_budget: u32,
+    /// Temporal-fusion depth: `Some(k)` fuses `k` recorded steps into
+    /// one super-chain (`Some(0)` = ask the tuner, `Some(1)` = the
+    /// unfused replay baseline of the same chain); `None` follows the
+    /// platform spec's `fuse` token, defaulting to the legacy
+    /// live-driver path.
+    fuse: Option<u32>,
     trace: Option<String>,
     spans: Option<String>,
     bench_out: Option<String>,
@@ -81,6 +91,7 @@ fn parse_args() -> Args {
         json: false,
         tune: false,
         tune_budget: TuneOpts::default().budget,
+        fuse: None,
         trace: None,
         spans: None,
         bench_out: None,
@@ -119,7 +130,7 @@ fn parse_args() -> Args {
                 }
             }
             flag @ ("--app" | "--platform" | "--size-gb" | "--steps" | "--chain-steps"
-            | "--ranks" | "--tune-budget") => {
+            | "--ranks" | "--tune-budget" | "--fuse") => {
                 i += 1;
                 let Some(v) = argv.get(i) else {
                     eprintln!("missing value for {flag}");
@@ -157,6 +168,8 @@ fn parse_args() -> Args {
                             exit(2);
                         }
                     },
+                    // 0 = tuner-auto, 1 = unfused replay baseline
+                    "--fuse" => a.fuse = Some(num(flag, v)),
                     _ => a.chain_steps = num(flag, v),
                 }
             }
@@ -186,11 +199,14 @@ fn parse_args() -> Args {
 }
 
 /// Parse the platform spec (legacy heads and `tiers:` stacks, including
-/// a possible `tuned` token), apply `--ranks`, and build the run
-/// configuration. The app calibration is a placeholder — the per-app
-/// cell runners set the right one.
-fn config_or_exit(a: &Args) -> Config {
-    let (target, spec_tuned) = Config::parse_spec(&a.platform).unwrap_or_else(|e| {
+/// possible `tuned` / `fuse` tokens), apply `--ranks` and `--fuse`, and
+/// build the run configuration. The app calibration is a placeholder —
+/// the per-app cell runners set the right one. The second return is
+/// whether fusion was *requested* (flag or spec token): `--fuse 1` runs
+/// the fused pipeline at depth 1, the unfused-replay baseline the CI
+/// smoke compares checksums against.
+fn config_or_exit(a: &Args) -> (Config, bool) {
+    let (target, spec_tuned, spec_fuse) = Config::parse_spec_opts(&a.platform).unwrap_or_else(|e| {
         eprintln!("{e}");
         exit(2);
     });
@@ -202,7 +218,26 @@ fn config_or_exit(a: &Args) -> Config {
     } else {
         target
     };
-    let mut cfg = Config::for_target(target, AppCalib::CLOVERLEAF_2D);
+    let fuse = match (a.fuse, spec_fuse) {
+        (None, k) => k,
+        (Some(k), 1) => k,
+        (Some(k1), k2) if k1 == k2 => k1,
+        (Some(k1), k2) => {
+            eprintln!("conflicting fusion depths: --fuse {k1} vs spec fuse:{k2}");
+            exit(2);
+        }
+    };
+    let fused = a.fuse.is_some() || spec_fuse != 1;
+    let mut cfg = Config::for_target(target, AppCalib::CLOVERLEAF_2D).with_fuse(fuse);
+    // `fuse 0` in the spec is validated by the parser; the flag form is
+    // validated here — the tuner needs a tile plan to score depths on.
+    if fuse == 0 && cfg.tuner_target().is_none() {
+        eprintln!(
+            "--fuse 0 asks the auto-tuner for a fusion depth, but platform {:?} is not tunable",
+            cfg.label()
+        );
+        exit(2);
+    }
     if a.tune || spec_tuned {
         cfg = cfg
             .with_tuning(TuneOpts {
@@ -214,18 +249,40 @@ fn config_or_exit(a: &Args) -> Config {
                 exit(2);
             });
     }
-    cfg
+    (cfg, fused)
 }
 
+/// One run/sweep cell. With `fused` the app's fixed-`dt` step chain is
+/// recorded once and driven by `Session::replay_fused` at depth
+/// `cfg.fuse`; the extra return is `(checksum, k)` — the bit-exactness
+/// witness printed for the CI fusion smoke.
+#[allow(clippy::type_complexity)]
 fn run_cell(
     app: &str,
     cfg: &Config,
+    fused: bool,
     trace: bool,
     gb: f64,
     steps: usize,
     chain_steps: usize,
-) -> (ops_oc::exec::Metrics, bool) {
-    match app {
+) -> (ops_oc::exec::Metrics, bool, Option<(u64, usize)>) {
+    if fused {
+        let r = match app {
+            "cloverleaf2d" => bench_support::run_cl2d_fused_cfg(cfg, trace, 8, 6144, gb, steps),
+            "cloverleaf3d" => {
+                bench_support::run_cl3d_fused_cfg(cfg, trace, [8, 8, 6144], gb, steps)
+            }
+            "opensbli" => {
+                bench_support::run_sbli_fused_cfg(cfg, trace, chain_steps, gb, steps.max(1))
+            }
+            other => {
+                eprintln!("unknown app {other:?} (cloverleaf2d|cloverleaf3d|opensbli)");
+                exit(2);
+            }
+        };
+        return (r.metrics, r.oom, Some((r.checksum, r.k)));
+    }
+    let (m, oom) = match app {
         "cloverleaf2d" => bench_support::run_cl2d_cfg(cfg, trace, 8, 6144, gb, steps, 0),
         "cloverleaf3d" => bench_support::run_cl3d_cfg(cfg, trace, [8, 8, 6144], gb, steps, 0),
         "opensbli" => bench_support::run_sbli_tall_cfg(cfg, trace, chain_steps, gb, steps.max(1)),
@@ -233,7 +290,8 @@ fn run_cell(
             eprintln!("unknown app {other:?} (cloverleaf2d|cloverleaf3d|opensbli)");
             exit(2);
         }
-    }
+    };
+    (m, oom, None)
 }
 
 fn list_platforms() {
@@ -286,6 +344,9 @@ fn main() {
             println!("commands:");
             println!("  run   --app A --platform P [--size-gb G] [--steps N] [--chain-steps C]");
             println!("        [--ranks R | xR] [--tune] [--tune-budget E] [--json]");
+            println!("        [--fuse K]       (temporal fusion: replay K recorded steps as one");
+            println!("                          super-chain; 0 = tuner-auto, 1 = unfused replay");
+            println!("                          baseline; or a fuse:K / fuseK spec token)");
             println!("        [--trace PATH]   (Chrome-trace JSON of the engine timeline)");
             println!("        [--spans PATH]   (hierarchical lifecycle-span tree, JSON)");
             println!("        [--bench-out F]  (append a trajectory point to F)");
@@ -313,6 +374,11 @@ fn main() {
             println!("execution : apps run on the record-once/replay-many Program/Session");
             println!("            API — chain analysis is computed once per shape and");
             println!("            reused (--json: analysis_builds / analysis_reuse_hits)");
+            println!("fusion    : --fuse K (or a fuse:K spec token) replays K recorded");
+            println!("            fixed-dt steps as ONE skewed super-chain — one pass");
+            println!("            over the slowest tier per K steps, bit-exact against");
+            println!("            K unfused replays (--json: fused_steps; K=0 asks the");
+            println!("            tuner, never slower than unfused by construction)");
             println!("timelines : every engine schedules on the exec::timeline event");
             println!("            graph; --json reports bound/util_* attribution (plus");
             println!("            util_tier_* per tier) and `run --trace t.json` exports");
@@ -320,7 +386,7 @@ fn main() {
         }
         "list-platforms" => list_platforms(),
         "run" => {
-            let cfg = config_or_exit(&a);
+            let (cfg, fused) = config_or_exit(&a);
             if !a.json {
                 println!(
                     "running {} on {}{} at {:.0} GB modelled ({} steps)\n",
@@ -331,9 +397,10 @@ fn main() {
                     a.steps
                 );
             }
-            let (m, oom) = run_cell(
+            let (m, oom, fuse_info) = run_cell(
                 &a.app,
                 &cfg,
+                fused,
                 a.trace.is_some(),
                 a.size_gb,
                 a.steps,
@@ -383,6 +450,12 @@ fn main() {
                     )
                 );
             } else {
+                if let Some((checksum, k)) = fuse_info {
+                    println!(
+                        "fused: k={k} checksum={checksum:016x} slowest_tier_upload_bytes={}",
+                        bench_support::slowest_boundary_upload_bytes(&cfg.topology(), &m)
+                    );
+                }
                 print_summary_with_topology(
                     &format!("{} / {}", a.app, cfg.label()),
                     (a.size_gb * 1e9) as u64,
@@ -425,11 +498,23 @@ fn main() {
                 println!("added     {k} (in {} only)", a.extra[1]);
             }
             let n = report.regressions();
-            if n > 0 {
-                eprintln!(
-                    "bench-diff: {n} cell(s) regressed beyond {:.1} % tolerance",
-                    a.tol_pct
-                );
+            let gone = report.missing.len();
+            // Disappeared cells are failures too: a renamed or dropped
+            // bench key would otherwise hide a regression forever.
+            if n > 0 || gone > 0 {
+                if n > 0 {
+                    eprintln!(
+                        "bench-diff: {n} cell(s) regressed beyond {:.1} % tolerance",
+                        a.tol_pct
+                    );
+                }
+                if gone > 0 {
+                    eprintln!(
+                        "bench-diff: {gone} cell(s) disappeared from the trajectory \
+                         (present in {} only)",
+                        a.extra[0]
+                    );
+                }
                 exit(1);
             }
             println!(
@@ -443,7 +528,7 @@ fn main() {
                 eprintln!("--trace applies to `run` (one cell, one trace file)");
                 exit(2);
             }
-            let cfg = config_or_exit(&a);
+            let (cfg, fused) = config_or_exit(&a);
             let mut fig = Figure::new(
                 &format!(
                     "{} on {}{}",
@@ -457,7 +542,7 @@ fn main() {
             let mut records = Vec::new();
             let (label, ranks, topo) = (cfg.label(), cfg.ranks(), cfg.topology());
             for gb in bench_support::KNL_SIZES_GB {
-                let (m, oom) = run_cell(&a.app, &cfg, false, gb, a.steps, a.chain_steps);
+                let (m, oom, _) = run_cell(&a.app, &cfg, fused, false, gb, a.steps, a.chain_steps);
                 if a.json {
                     records.push(json_record(&a.app, &label, ranks, gb, &topo, &m, oom));
                 }

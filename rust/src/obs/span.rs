@@ -101,6 +101,10 @@ pub struct SpanGuard {
 
 /// RAII guard for one active name prefix (see [`namespace`]).
 pub struct NamespaceGuard {
+    /// Whether this guard actually pushed a prefix (false when the same
+    /// prefix was already innermost — see [`namespace`]); only what was
+    /// pushed is popped on drop.
+    pushed: bool,
     _not_send: PhantomData<*const ()>,
 }
 
@@ -149,16 +153,32 @@ pub fn span(name: &str) -> SpanGuard {
 
 /// Push a name prefix applied to every span opened while the returned
 /// guard lives (`namespace("r2")` + `span("rank")` → `r2:rank`).
-/// Prefixes stack: nested namespaces join with `:`.
+/// Prefixes stack: nested namespaces join with `:` — except that
+/// re-entering the *innermost* active prefix is idempotent (a sharded
+/// engine replaying a chain through a rank that is itself namespaced
+/// must not mint `r0:r0:…` span names; streams and trace events guard
+/// the same way in `distributed::sharded`).
 pub fn namespace(prefix: &str) -> NamespaceGuard {
-    TRACER.with(|t| t.borrow_mut().prefixes.push(prefix.to_string()));
+    let pushed = TRACER.with(|t| {
+        let mut tr = t.borrow_mut();
+        if tr.prefixes.last().is_some_and(|p| p == prefix) {
+            false
+        } else {
+            tr.prefixes.push(prefix.to_string());
+            true
+        }
+    });
     NamespaceGuard {
+        pushed,
         _not_send: PhantomData,
     }
 }
 
 impl Drop for NamespaceGuard {
     fn drop(&mut self) {
+        if !self.pushed {
+            return;
+        }
         TRACER.with(|t| {
             t.borrow_mut().prefixes.pop();
         });
@@ -360,6 +380,37 @@ mod tests {
         let _t = span("plain");
         drop(_t);
         assert_eq!(snapshot_spans()[1].name, "plain");
+    }
+
+    #[test]
+    fn reentering_the_innermost_namespace_is_idempotent() {
+        reset();
+        {
+            let _a = namespace("r0");
+            let _b = namespace("r0"); // same innermost prefix: no-op
+            let _s = span("leaf");
+        }
+        assert_eq!(snapshot_spans()[0].name, "r0:leaf");
+        // the no-op guard must not pop the prefix it didn't push
+        {
+            let _a = namespace("r0");
+            {
+                let _b = namespace("r0");
+            } // dropping the inner guard leaves "r0" active
+            let _s = span("still");
+        }
+        assert_eq!(snapshot_spans()[1].name, "r0:still");
+        // distinct prefixes still stack, even when non-adjacent repeats
+        {
+            let _a = namespace("r0");
+            let _b = namespace("mid");
+            let _c = namespace("r0"); // not innermost-adjacent: stacks
+            let _s = span("deep");
+        }
+        assert_eq!(snapshot_spans()[2].name, "r0:mid:r0:deep");
+        let _t = span("plain");
+        drop(_t);
+        assert_eq!(snapshot_spans()[3].name, "plain");
     }
 
     #[test]

@@ -6,8 +6,9 @@ use crate::ops::{
     Arg, Block, BlockId, Dataset, DatasetId, Kernel, LoopInst, Range3, RedOp, Reduction,
     ReductionId, Stencil, StencilId,
 };
-use crate::tiling::analysis::{chain_structure_fingerprint, ChainAnalysis, Fnv};
-use std::sync::Arc;
+use crate::tiling::analysis::{chain_structure_fingerprint, fuse_chain, ChainAnalysis, Fnv};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Handle to one named, frozen chain of a [`Program`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -257,10 +258,26 @@ impl ProgramBuilder {
             reds: self.reds,
             chains: self.chains,
             analyses,
+            fused: Mutex::new(HashMap::new()),
             fingerprint: h.finish(),
             freeze_s: t0.elapsed().as_secs_f64(),
         })
     }
+}
+
+/// A memoised temporal super-chain: `k` consecutive time steps of one
+/// frozen chain concatenated into a single replayable chain, with the
+/// cross-step skew analysis precomputed
+/// ([`crate::tiling::analysis::ChainAnalysis::build_fused`]). Built
+/// lazily by [`Program::fused`] and shared by every
+/// [`crate::program::Session`] replaying the program.
+pub struct FusedChain {
+    /// `k` concatenated copies of the base chain's loops.
+    pub loops: Vec<LoopInst>,
+    /// Time steps one run of `loops` advances.
+    pub k: u32,
+    /// The super-chain's analysis, cross-step shifts included.
+    pub analysis: Arc<ChainAnalysis>,
 }
 
 /// Freeze-time stencil validation: every declared access of every
@@ -368,6 +385,10 @@ pub struct Program {
     reds: Vec<Reduction>,
     chains: Vec<ChainSpec>,
     analyses: Vec<Arc<ChainAnalysis>>,
+    /// Lazily-built fused super-chains, keyed by (chain, k). Interior
+    /// mutability keeps the frozen artifact shareable as `Arc<Program>`
+    /// while letting the first fused replay pay the unroll once.
+    fused: Mutex<HashMap<(u32, u32), Arc<FusedChain>>>,
     fingerprint: u64,
     freeze_s: f64,
 }
@@ -412,6 +433,36 @@ impl Program {
     /// The frozen analysis of one chain (computed at freeze time).
     pub fn analysis(&self, id: ChainId) -> &Arc<ChainAnalysis> {
         &self.analyses[id.0 as usize]
+    }
+
+    /// The fused super-chain of `k` consecutive steps of `id`, unrolled
+    /// and analysed on first request and memoised for the life of the
+    /// program. Returns the chain plus whether this call built it (the
+    /// caller accounts `analysis_builds` vs `analysis_reuse_hits`).
+    /// `k` is clamped to at least 1; `k = 1` memoises a copy of the
+    /// base chain under the same machinery.
+    pub fn fused(&self, id: ChainId, k: u32) -> (Arc<FusedChain>, bool) {
+        let k = k.max(1);
+        let mut memo = self.fused.lock().unwrap();
+        if let Some(f) = memo.get(&(id.0, k)) {
+            return (f.clone(), false);
+        }
+        let sp = crate::obs::span("fuse-analyze");
+        let spec = &self.chains[id.0 as usize];
+        sp.field("chain", &spec.name);
+        sp.field("k", k);
+        let f = Arc::new(FusedChain {
+            loops: fuse_chain(&spec.loops, k as usize),
+            k,
+            analysis: Arc::new(ChainAnalysis::build_fused(
+                &spec.loops,
+                &self.datasets,
+                &self.stencils,
+                k as usize,
+            )),
+        });
+        memo.insert((id.0, k), f.clone());
+        (f, true)
     }
 
     /// Structural digest of the whole artifact (declarations + every

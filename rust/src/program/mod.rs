@@ -33,5 +33,5 @@
 pub mod builder;
 pub mod session;
 
-pub use builder::{ChainId, ChainRecorder, ChainSpec, Program, ProgramBuilder};
+pub use builder::{ChainId, ChainRecorder, ChainSpec, FusedChain, Program, ProgramBuilder};
 pub use session::Session;

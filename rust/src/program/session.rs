@@ -14,7 +14,7 @@ use crate::ops::surface::{Drive, Record};
 use crate::ops::{
     Arg, BlockId, DataStore, Dataset, Kernel, LoopInst, Range3, Reduction, ReductionId, Stencil,
 };
-use crate::tiling::analysis::{chain_structure_fingerprint, ChainAnalysis};
+use crate::tiling::analysis::{chain_structure_eq, chain_structure_fingerprint, ChainAnalysis};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -33,8 +33,10 @@ pub struct Session {
     cyclic_phase: bool,
     oom: bool,
     /// Memoised analyses of dynamically recorded chains, keyed by
-    /// structural fingerprint.
-    dyn_analysis: HashMap<u64, Arc<ChainAnalysis>>,
+    /// structural fingerprint. The recorded structure is kept alongside
+    /// the analysis so a hit can be verified: a 64-bit fingerprint
+    /// collision must not silently reuse another chain's shifts/plans.
+    dyn_analysis: HashMap<u64, (Vec<LoopInst>, Arc<ChainAnalysis>)>,
     /// Which frozen chains this session has replayed at least once
     /// (drives the `analysis_builds` / `analysis_reuse_hits` counters).
     frozen_used: Vec<bool>,
@@ -143,6 +145,60 @@ impl Session {
         self.replay(chain, 1);
     }
 
+    /// Replay a frozen chain `steps` times, fusing `k` consecutive
+    /// steps into one skewed super-chain per engine `run_chain` — the
+    /// temporal-tiling extension of Reguly et al. (1704.00693): each
+    /// tile's data crosses the slowest tier boundary once per `k` steps
+    /// instead of once per step. Numerics are bit-exact against
+    /// [`Session::replay`] with the same `steps`: the super-chain is
+    /// the base chain's loops concatenated `k` times, executed in the
+    /// same order, and its skew shifts equal `compute_shifts` of that
+    /// concatenation (see
+    /// [`crate::tiling::dependency::compute_fused_shifts`]).
+    ///
+    /// `k` is clamped to `[1, steps]`; `k <= 1` is exactly `replay`.
+    /// `steps % k` trailing steps run unfused. The fused analysis is
+    /// built once per `(chain, k)` and memoised on the shared
+    /// [`Program`], so sessions across platforms/ranks amortise it.
+    pub fn replay_fused(&mut self, chain: ChainId, steps: usize, k: usize) {
+        let k = k.clamp(1, steps.max(1));
+        if k <= 1 {
+            return self.replay(chain, steps);
+        }
+        self.flush();
+        let program = self.program.clone();
+        let spec = program.chain(chain);
+        if spec.loops.is_empty() {
+            return;
+        }
+        let (fused, built) = program.fused(chain, k as u32);
+        let batches = steps / k;
+        let rem = steps % k;
+        let sp = crate::obs::span("fuse");
+        sp.field("chain", &spec.name);
+        sp.field("k", k);
+        sp.field("batches", batches);
+        self.frozen_used[chain.0 as usize] = true;
+        for i in 0..batches {
+            if i == 0 && built {
+                self.metrics.analysis_builds += 1;
+            } else {
+                self.metrics.analysis_reuse_hits += 1;
+            }
+            self.metrics.fused_steps += k as u64;
+            self.run_now(
+                &fused.loops,
+                program.datasets(),
+                program.stencils(),
+                &fused.analysis,
+            );
+        }
+        drop(sp);
+        if rem > 0 {
+            self.replay(chain, rem);
+        }
+    }
+
     // ---- dynamic recording ----------------------------------------------
 
     /// Loops currently queued (dynamic recording path).
@@ -157,23 +213,43 @@ impl Session {
         }
         let program = self.program.clone();
         let fp = chain_structure_fingerprint(&chain, program.datasets(), program.stencils());
-        let analysis = match self.dyn_analysis.get(&fp) {
-            Some(a) => {
+        // A memo hit is only trusted after verifying structural
+        // equality: the fingerprint is 64-bit FNV, and a collision
+        // would silently replay another chain's shifts and tile plans
+        // (wrong numerics). Some(None) below marks exactly that case.
+        let memo = self
+            .dyn_analysis
+            .get(&fp)
+            .map(|(s, a)| chain_structure_eq(&chain, s).then(|| a.clone()));
+        let analysis = match memo {
+            Some(Some(a)) => {
                 self.metrics.analysis_reuse_hits += 1;
-                a.clone()
+                a
             }
-            None => {
+            occupied => {
                 let a = Arc::new(ChainAnalysis::build(
                     &chain,
                     program.datasets(),
                     program.stencils(),
                 ));
-                self.dyn_analysis.insert(fp, a.clone());
+                // On collision the slot stays with its first owner —
+                // the colliding chain just rebuilds each flush rather
+                // than the two thrashing the entry.
+                if occupied.is_none() {
+                    self.dyn_analysis.insert(fp, (chain.clone(), a.clone()));
+                }
                 self.metrics.analysis_builds += 1;
                 a
             }
         };
         self.run_now(&chain, program.datasets(), program.stencils(), &analysis);
+    }
+
+    /// Test hook: force a dynamic-analysis memo entry under an
+    /// arbitrary fingerprint, simulating a 64-bit FNV collision.
+    #[cfg(test)]
+    fn poison_dyn_analysis(&mut self, fp: u64, loops: Vec<LoopInst>, analysis: Arc<ChainAnalysis>) {
+        self.dyn_analysis.insert(fp, (loops, analysis));
     }
 
     /// Run one analysed chain through the engine.
@@ -456,6 +532,109 @@ mod tests {
         // and both modelled the same schedule
         assert_eq!(frozen.metrics().elapsed_s, dynamic.metrics().elapsed_s);
         assert_eq!(frozen.metrics().tiles, dynamic.metrics().tiles);
+    }
+
+    /// Re-record a frozen chain's loops through the dynamic path.
+    fn record_dynamically(s: &mut Session, prog: &Arc<Program>, chain: ChainId) {
+        for l in &prog.chain(chain).loops {
+            s.par_loop_eff(
+                &l.name,
+                l.block,
+                l.range,
+                l.kernel.clone(),
+                l.args.clone(),
+                l.bw_efficiency,
+            );
+        }
+        s.flush();
+    }
+
+    #[test]
+    fn dynamic_memo_rejects_fingerprint_collisions() {
+        let (prog, step, u) = fixture();
+        let p = Platform::KnlCacheTiled;
+
+        // Reference: a clean dynamic session.
+        let mut clean = Session::new(prog.clone(), &cfg(p));
+        record_dynamically(&mut clean, &prog, step);
+        let want = clean.fetch(u);
+
+        // Poisoned: the step chain's fingerprint maps to a *different*
+        // chain's structure + analysis — a forced 64-bit collision.
+        // Reversing the loops flips the dependency direction, so its
+        // analysis carries the wrong skew shifts.
+        let loops = &prog.chain(step).loops;
+        let fp = chain_structure_fingerprint(loops, prog.datasets(), prog.stencils());
+        let wrong: Vec<LoopInst> = loops.iter().rev().cloned().collect();
+        assert!(!chain_structure_eq(loops, &wrong), "collision fixture must differ");
+        let wrong_analysis = Arc::new(ChainAnalysis::build(
+            &wrong,
+            prog.datasets(),
+            prog.stencils(),
+        ));
+        let mut s = Session::new(prog.clone(), &cfg(p));
+        s.poison_dyn_analysis(fp, wrong.clone(), wrong_analysis);
+        record_dynamically(&mut s, &prog, step);
+        assert_eq!(s.metrics().analysis_builds, 1, "collision must rebuild");
+        assert_eq!(s.metrics().analysis_reuse_hits, 0);
+        assert_eq!(s.fetch(u), want, "collision must not corrupt numerics");
+        // The slot stays with its first owner: the colliding chain
+        // rebuilds on every flush instead of thrashing the entry.
+        record_dynamically(&mut s, &prog, step);
+        assert_eq!(s.metrics().analysis_builds, 2);
+        assert_eq!(s.metrics().analysis_reuse_hits, 0);
+    }
+
+    #[test]
+    fn replay_fused_is_bit_exact_and_counts_fused_steps() {
+        let (prog, step, u) = fixture();
+        let p = Platform::GpuExplicit {
+            link: Link::PciE,
+            cyclic: true,
+            prefetch: true,
+        };
+        let mut plain = Session::new(prog.clone(), &cfg(p));
+        plain.set_cyclic_phase(true);
+        plain.replay(step, 10);
+        let want = plain.fetch(u);
+
+        // k=3 over 10 steps: three fused batches plus one unfused tail.
+        let mut fused = Session::new(prog.clone(), &cfg(p));
+        fused.set_cyclic_phase(true);
+        fused.replay_fused(step, 10, 3);
+        assert_eq!(fused.fetch(u), want, "fused numerics must match k=1");
+        assert_eq!(fused.metrics().fused_steps, 9);
+        assert_eq!(fused.metrics().chains, 4, "3 super-chains + 1 tail");
+
+        // k=1 is exactly replay; k > steps clamps to one super-chain.
+        let mut one = Session::new(prog.clone(), &cfg(p));
+        one.set_cyclic_phase(true);
+        one.replay_fused(step, 10, 1);
+        assert_eq!(one.fetch(u), want);
+        assert_eq!(one.metrics().fused_steps, 0);
+        assert_eq!(one.metrics().chains, 10);
+
+        let mut big = Session::new(prog, &cfg(p));
+        big.set_cyclic_phase(true);
+        big.replay_fused(step, 10, 64);
+        assert_eq!(big.fetch(u), want);
+        assert_eq!(big.metrics().fused_steps, 10);
+        assert_eq!(big.metrics().chains, 1);
+    }
+
+    #[test]
+    fn fused_analysis_is_memoised_on_the_shared_program() {
+        let (prog, step, u) = fixture();
+        let mut a = Session::new(prog.clone(), &cfg(Platform::KnlCacheTiled));
+        a.replay_fused(step, 4, 2);
+        let mut b = Session::new(prog.clone(), &cfg(Platform::KnlCacheTiled));
+        b.replay_fused(step, 4, 2);
+        assert_eq!(a.metrics().analysis_builds, 1);
+        assert_eq!(a.metrics().analysis_reuse_hits, 1);
+        // the second session hits the program-level (chain, k) memo
+        assert_eq!(b.metrics().analysis_builds, 0);
+        assert_eq!(b.metrics().analysis_reuse_hits, 2);
+        assert_eq!(a.fetch(u), b.fetch(u));
     }
 
     #[test]

@@ -22,7 +22,9 @@
 //! [`crate::exec::Engine::run_chain_analyzed`]; `None` (the legacy eager
 //! path) rebuilds the analysis per flush, exactly as the seed did.
 
-use super::dependency::{chain_access_summary, compute_shifts, DatChainInfo};
+use super::dependency::{
+    chain_access_summary, compute_fused_shifts, compute_shifts, DatChainInfo,
+};
 use super::footprint::Interval;
 use super::plan::{self, pick_tile_dim, PlanSource, TilePlan};
 use crate::ops::{Dataset, DatasetId, LoopInst, Stencil};
@@ -123,6 +125,25 @@ pub fn chain_structure_fingerprint(
     h.finish()
 }
 
+/// Structural equality on exactly the facets
+/// [`chain_structure_fingerprint`] hashes — the collision check behind
+/// the dynamic-analysis memo: a 64-bit fingerprint hit is only trusted
+/// when the structures actually match. Declarations (datasets,
+/// stencils) are not compared: both chains come from the same frozen
+/// program, whose declaration tables are immutable.
+pub fn chain_structure_eq(a: &[LoopInst], b: &[LoopInst]) -> bool {
+    let facets = |l: &LoopInst| {
+        (
+            l.range,
+            l.bw_efficiency.to_bits(),
+            l.dat_args()
+                .map(|(d, s, acc)| (d.0, s.0, acc.reads(), acc.writes()))
+                .collect::<Vec<_>>(),
+        )
+    };
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| facets(x) == facets(y))
+}
+
 /// Mix the cyclic-phase flag into a structural fingerprint — the full
 /// cache key the tuner uses (the cyclic flag changes modelled transfer
 /// traffic, so tuned choices must not alias across it).
@@ -145,6 +166,23 @@ pub fn chain_fingerprint(
         chain_structure_fingerprint(chain, datasets, stencils),
         cyclic_phase,
     )
+}
+
+/// The fused super-chain itself: `k` consecutive time steps of `chain`
+/// concatenated into one chain of `k · chain.len()` loops, so a single
+/// tiled pass streams each tile's data across the slowest memory
+/// boundary once per `k` steps instead of once per step. Running the
+/// result through any engine executes exactly the loop sequence `k`
+/// back-to-back replays would — numerics are bit-identical by
+/// construction; only the schedule (and therefore the modelled traffic)
+/// changes.
+pub fn fuse_chain(chain: &[LoopInst], k: usize) -> Vec<LoopInst> {
+    let k = k.max(1);
+    let mut out = Vec::with_capacity(chain.len() * k);
+    for _ in 0..k {
+        out.extend(chain.iter().cloned());
+    }
+    out
 }
 
 /// Plan-memo key: the plan source discriminant plus its parameter
@@ -196,6 +234,33 @@ impl ChainAnalysis {
             fingerprint: chain_structure_fingerprint(chain, datasets, stencils),
             tile_dim,
             shifts: compute_shifts(chain, stencils, tile_dim),
+            summary: chain_access_summary(chain),
+            chain_bytes: plan::chain_bytes(chain, datasets),
+            plans: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Run the analysis for the *fused super-chain* of `k` consecutive
+    /// time steps of `chain` (see [`fuse_chain`]): identical to
+    /// [`ChainAnalysis::build`] on the concatenation, but with the skew
+    /// shifts computed by the O(k·L²) per-step recurrence
+    /// ([`compute_fused_shifts`]) instead of the O((kL)²) rescan. The
+    /// tile dimension, per-dataset summary and chain bytes are those of
+    /// the base chain — fusing repeats the same loops over the same
+    /// datasets, so only the shifts (and the fingerprint) change.
+    pub fn build_fused(
+        chain: &[LoopInst],
+        datasets: &[Dataset],
+        stencils: &[Stencil],
+        k: usize,
+    ) -> Self {
+        let k = k.max(1);
+        let tile_dim = pick_tile_dim(chain);
+        let fused = fuse_chain(chain, k);
+        ChainAnalysis {
+            fingerprint: chain_structure_fingerprint(&fused, datasets, stencils),
+            tile_dim,
+            shifts: compute_fused_shifts(chain, stencils, tile_dim, k),
             summary: chain_access_summary(chain),
             chain_bytes: plan::chain_bytes(chain, datasets),
             plans: Mutex::new(HashMap::new()),
@@ -373,6 +438,29 @@ mod tests {
         let p = a.plan(PlanSource::Auto, &chain, &datasets, &stencils, 1);
         let direct = PlanSource::Auto.plan(&chain, &datasets, &stencils, 1);
         assert_eq!(p.num_tiles(), direct.num_tiles());
+    }
+
+    #[test]
+    fn fused_analysis_matches_analysis_of_concatenated_chain() {
+        let (chain, datasets, stencils) = fixture();
+        for k in [1usize, 2, 4] {
+            let fused_chain = fuse_chain(&chain, k);
+            assert_eq!(fused_chain.len(), chain.len() * k);
+            let fast = ChainAnalysis::build_fused(&chain, &datasets, &stencils, k);
+            let naive = ChainAnalysis::build(&fused_chain, &datasets, &stencils);
+            assert_eq!(fast.fingerprint, naive.fingerprint, "k = {k}");
+            assert_eq!(fast.tile_dim, naive.tile_dim, "k = {k}");
+            assert_eq!(fast.shifts, naive.shifts, "k = {k}");
+            assert_eq!(fast.chain_bytes, naive.chain_bytes, "k = {k}");
+            for (d, info) in &naive.summary {
+                let f = &fast.summary[d];
+                assert_eq!(
+                    (f.read, f.written, f.write_first),
+                    (info.read, info.written, info.write_first),
+                    "k = {k}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -80,32 +80,115 @@ pub fn compute_shifts(chain: &[LoopInst], stencils: &[Stencil], tile_dim: usize)
     for l in (0..n.saturating_sub(1)).rev() {
         let mut s = 0isize; // pure dependency constraints
         for lp in (l + 1)..n {
-            for (dat_l, st_l, acc_l) in chain[l].dat_args() {
-                for (dat_p, st_p, acc_p) in chain[lp].dat_args() {
-                    if dat_l != dat_p {
-                        continue;
-                    }
-                    // flow: l writes, l' reads -> reader is l'
-                    if acc_l.writes() && acc_p.reads() {
-                        let r = stencils[st_p.0 as usize].radius(tile_dim) as isize;
-                        s = s.max(shifts[lp] + r);
-                    }
-                    // anti: l reads, l' writes -> reader is l
-                    if acc_l.reads() && acc_p.writes() {
-                        let r = stencils[st_l.0 as usize].radius(tile_dim) as isize;
-                        s = s.max(shifts[lp] + r);
-                    }
-                    // output: both write -> no reordering of the same
-                    // point across tiles (shift(l) >= shift(l'))
-                    if acc_l.writes() && acc_p.writes() {
-                        s = s.max(shifts[lp]);
-                    }
-                }
+            if let Some(r) = dep_radius(&chain[l], &chain[lp], stencils, tile_dim) {
+                s = s.max(shifts[lp] + r);
             }
         }
         shifts[l] = s;
     }
     shifts
+}
+
+/// The skew constraint one ordered loop pair contributes, if any: the
+/// maximum over every shared-dataset argument pair of the dependency's
+/// reader radius along `tile_dim` (flow: `earlier` writes / `later`
+/// reads — the later stencil's radius; anti: `earlier` reads / `later`
+/// writes — the earlier stencil's radius; output: both write — 0).
+/// `None` means the pair is independent: it must contribute no shift.
+///
+/// This is the per-pair kernel [`compute_shifts`] folds backward over a
+/// chain, factored out so [`compute_fused_shifts`] can evaluate the
+/// same constraint between loops of *different* time steps of a fused
+/// super-chain (the pair's constraint depends only on the two loops'
+/// access modes and stencils, never on their positions).
+pub fn dep_radius(
+    earlier: &LoopInst,
+    later: &LoopInst,
+    stencils: &[Stencil],
+    tile_dim: usize,
+) -> Option<isize> {
+    let mut out: Option<isize> = None;
+    for (dat_e, st_e, acc_e) in earlier.dat_args() {
+        for (dat_l, st_l, acc_l) in later.dat_args() {
+            if dat_e != dat_l {
+                continue;
+            }
+            let mut hit = |r: isize| out = Some(out.map_or(r, |c| c.max(r)));
+            // flow: earlier writes, later reads -> reader is `later`
+            if acc_e.writes() && acc_l.reads() {
+                hit(stencils[st_l.0 as usize].radius(tile_dim) as isize);
+            }
+            // anti: earlier reads, later writes -> reader is `earlier`
+            if acc_e.reads() && acc_l.writes() {
+                hit(stencils[st_e.0 as usize].radius(tile_dim) as isize);
+            }
+            // output: both write -> no reordering of the same point
+            // across tiles (shift(earlier) >= shift(later))
+            if acc_e.writes() && acc_l.writes() {
+                hit(0);
+            }
+        }
+    }
+    out
+}
+
+/// Per-loop skew shifts for a *fused super-chain*: `k` consecutive time
+/// steps of `chain` run back-to-back as one chain of `k · chain.len()`
+/// loops. Returns the shifts in super-chain order (step 0's loops
+/// first), bit-identical to `compute_shifts` on the concatenated chain
+/// but in O(k·L²·A²) instead of O((kL)²·A²).
+///
+/// The recurrence walks steps backward: step `k-1` gets the base
+/// [`compute_shifts`] result, and step `s` layers the cross-step
+/// constraints of step `s+1` on top —
+/// `S_s(l) = max(0, max_{l'>l} dep ⇒ S_s(l')+r, max_{l'} dep ⇒ S_{s+1}(l')+r)`.
+/// Cross-step dependencies at distance ≥ 2 need no terms of their own:
+/// whenever loops `(l, l')` depend at distance `d`, the same pair
+/// depends at distance 1 with the same radius (the constraint is
+/// position-independent), and shifts are monotone non-increasing in the
+/// step index, so the distance-1 term dominates.
+pub fn compute_fused_shifts(
+    chain: &[LoopInst],
+    stencils: &[Stencil],
+    tile_dim: usize,
+    k: usize,
+) -> Vec<isize> {
+    let n = chain.len();
+    let k = k.max(1);
+    let mut out = vec![0isize; n * k];
+    if n == 0 {
+        return out;
+    }
+    // Pairwise constraints are reused k times each: precompute them.
+    // rad[l * n + lp] constrains earlier-loop l against later-loop lp.
+    let mut rad: Vec<Option<isize>> = Vec::with_capacity(n * n);
+    for l in 0..n {
+        for lp in 0..n {
+            rad.push(dep_radius(&chain[l], &chain[lp], stencils, tile_dim));
+        }
+    }
+    for s in (0..k).rev() {
+        for l in (0..n).rev() {
+            let mut sh = 0isize;
+            for lp in (l + 1)..n {
+                if let Some(r) = rad[l * n + lp] {
+                    sh = sh.max(out[s * n + lp] + r);
+                }
+            }
+            if s + 1 < k {
+                // every loop of the next step is a later loop, the
+                // same-index copy included (a loop that rewrites a
+                // dataset it reads depends on its own next-step copy)
+                for lp in 0..n {
+                    if let Some(r) = rad[l * n + lp] {
+                        sh = sh.max(out[(s + 1) * n + lp] + r);
+                    }
+                }
+            }
+            out[s * n + l] = sh;
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -202,6 +285,87 @@ mod tests {
         assert!(!s[&DatasetId(1)].skip_upload());
         assert!(!s[&DatasetId(2)].skip_upload());
         assert!(!s[&DatasetId(2)].skip_download());
+    }
+
+    #[test]
+    fn fused_shifts_match_concatenated_chain() {
+        let stencils = vec![st(0, shapes::point()), st(1, shapes::star2d(1))];
+        // the flow fixture above, fused over several depths: the fast
+        // per-step recurrence must agree with compute_shifts run on the
+        // literal k-fold concatenation, bit for bit
+        let chain = vec![
+            lp(vec![
+                Arg::dat(DatasetId(0), StencilId(1), Access::Read),
+                Arg::dat(DatasetId(1), StencilId(0), Access::Write),
+            ]),
+            lp(vec![
+                Arg::dat(DatasetId(1), StencilId(1), Access::Read),
+                Arg::dat(DatasetId(0), StencilId(0), Access::ReadWrite),
+            ]),
+        ];
+        for k in [1usize, 2, 3, 7] {
+            let concat: Vec<LoopInst> = (0..k).flat_map(|_| chain.clone()).collect();
+            assert_eq!(
+                compute_fused_shifts(&chain, &stencils, 1, k),
+                compute_shifts(&concat, &stencils, 1),
+                "k = {k}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_shifts_step_zero_grows_with_k_and_last_step_is_base() {
+        let stencils = vec![st(0, shapes::point()), st(1, shapes::star2d(1))];
+        let chain = vec![
+            lp(vec![
+                Arg::dat(DatasetId(0), StencilId(1), Access::Read),
+                Arg::dat(DatasetId(1), StencilId(0), Access::Write),
+            ]),
+            lp(vec![
+                Arg::dat(DatasetId(1), StencilId(1), Access::Read),
+                Arg::dat(DatasetId(0), StencilId(0), Access::ReadWrite),
+            ]),
+        ];
+        let base = compute_shifts(&chain, &stencils, 1);
+        let k = 5;
+        let fused = compute_fused_shifts(&chain, &stencils, 1, k);
+        assert_eq!(&fused[(k - 1) * 2..], &base[..], "last step is unfused");
+        for s in 0..k - 1 {
+            for l in 0..2 {
+                assert!(
+                    fused[s * 2 + l] >= fused[(s + 1) * 2 + l],
+                    "shifts are monotone non-increasing over steps"
+                );
+            }
+        }
+        assert!(fused[0] > base[0], "earlier steps accumulate cross-step skew");
+    }
+
+    #[test]
+    fn fused_shifts_of_independent_loops_stay_zero() {
+        let stencils = vec![st(0, shapes::point())];
+        let chain = vec![
+            lp(vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)]),
+            lp(vec![Arg::dat(DatasetId(1), StencilId(0), Access::Write)]),
+        ];
+        // pure writes DO output-depend on their own next-step copies
+        // (shift >= next step's shift), but with zero radius everywhere
+        // the whole super-chain stays unshifted
+        assert!(compute_fused_shifts(&chain, &stencils, 1, 9)
+            .iter()
+            .all(|&s| s == 0));
+    }
+
+    #[test]
+    fn dep_radius_is_position_independent() {
+        let stencils = vec![st(0, shapes::point()), st(1, shapes::star2d(2))];
+        let w = lp(vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)]);
+        let r = lp(vec![Arg::dat(DatasetId(0), StencilId(1), Access::Read)]);
+        let other = lp(vec![Arg::dat(DatasetId(1), StencilId(0), Access::Write)]);
+        assert_eq!(dep_radius(&w, &r, &stencils, 1), Some(2), "flow");
+        assert_eq!(dep_radius(&r, &w, &stencils, 1), Some(2), "anti");
+        assert_eq!(dep_radius(&w, &w, &stencils, 1), Some(0), "output");
+        assert_eq!(dep_radius(&w, &other, &stencils, 1), None, "independent");
     }
 
     #[test]

@@ -71,6 +71,7 @@ mod tests {
                 slots: 3,
                 cyclic: true,
                 prefetch: true,
+                fuse: 1,
             },
             tuned_model_s: 1.5,
             heuristic_model_s: 2.0,

@@ -17,6 +17,11 @@ pub struct Candidate {
     pub cyclic: bool,
     /// Prefetch toggle (GPU-explicit and unified memory).
     pub prefetch: bool,
+    /// Temporal fusion depth `k` (steps per super-chain,
+    /// [`crate::program::Session::replay_fused`]); 1 = unfused. The
+    /// toggle/tile search holds this at 1 — [`super::tune_fuse`] owns
+    /// the k dimension — so plain tuning never aliases across depths.
+    pub fuse: u32,
 }
 
 impl Candidate {
@@ -120,10 +125,12 @@ mod tests {
             slots: 3,
             cyclic: true,
             prefetch: false,
+            fuse: 4,
         };
         let t = c.with_tiles(7);
         assert_eq!(t.tiles, Some(7));
         assert_eq!(t.slots, 3);
         assert!(t.cyclic && !t.prefetch);
+        assert_eq!(t.fuse, 4);
     }
 }

@@ -26,6 +26,14 @@
 //! probes until the evaluation budget is spent. Same inputs + same seed
 //! ⇒ same plan, bit for bit.
 //!
+//! Temporal fusion adds an orthogonal dimension: [`search::tune_fuse`]
+//! scores the modelled **per-step** time of k-fold fused super-chains
+//! ([`crate::tiling::analysis::fuse_chain`]) over a geometric k-grid,
+//! with `k = 1` evaluated first and displaced only by strictly better
+//! depths — so a driver that asks the tuner for a fusion depth
+//! ([`crate::coordinator::Config`] with `fuse = 0`) is never worse than
+//! unfused replay.
+//!
 //! Results are memoised in the process-wide [`cache::TunedPlanCache`],
 //! keyed by (chain fingerprint, platform digest, tuning options), so the
 //! repeated identical chains of a timestepped app — and repeated cells
@@ -44,5 +52,5 @@ pub mod target;
 pub use cache::{TunedChoice, TunedPlanCache};
 pub use candidate::{chain_fingerprint, Candidate, TuneOpts};
 pub use engine::TunedEngine;
-pub use search::{model_chain_time, tune};
+pub use search::{model_chain_time, tune, tune_fuse};
 pub use target::TunerTarget;

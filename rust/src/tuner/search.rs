@@ -14,11 +14,12 @@
 //! slower than the heuristic, and evaluation order is fixed, so the same
 //! inputs and seed always yield the same plan.
 
-use super::cache::TunedChoice;
-use super::candidate::{Candidate, TuneOpts};
+use super::cache::{TunedChoice, TunedPlanCache};
+use super::candidate::{chain_fingerprint, Candidate, Fnv, TuneOpts};
 use super::target::TunerTarget;
 use crate::exec::{Engine, Metrics, NullExecutor, World};
 use crate::ops::{DataStore, Dataset, LoopInst, Reduction, Stencil};
+use crate::tiling::analysis::fuse_chain;
 use crate::tiling::plan::pick_tile_dim;
 use std::collections::HashSet;
 
@@ -236,6 +237,83 @@ pub fn tune(
     }
 }
 
+/// Tune the temporal-fusion depth `k` for one chain on one platform:
+/// score the modelled **per-step** time of the k-fold super-chain
+/// (`model_chain_time(fuse_chain(chain, k)) / k`) over a geometric grid
+/// `{1, 2, 4, …} ∩ [1, max_k]`, on the platform's heuristic toggles.
+///
+/// `k = 1` is evaluated first and owns the incumbent slot — fusion is
+/// chosen only on a *strictly* smaller per-step time, so the returned
+/// depth can never model slower than unfused replay. The result is
+/// memoised in the process-wide [`TunedPlanCache`] under a fuse-salted
+/// key (the plain toggle/tile search and the fuse search must not
+/// alias). `heuristic_model_s` reports the `k = 1` per-step time.
+pub fn tune_fuse(
+    target: &TunerTarget,
+    opts: &TuneOpts,
+    chain: &[LoopInst],
+    datasets: &[Dataset],
+    stencils: &[Stencil],
+    cyclic_phase: bool,
+    max_k: u32,
+) -> TunedChoice {
+    let heuristic = target.heuristic();
+    if chain.is_empty() || max_k <= 1 {
+        return TunedChoice {
+            candidate: heuristic,
+            tuned_model_s: 0.0,
+            heuristic_model_s: 0.0,
+            evals: 0,
+        };
+    }
+    let fp = chain_fingerprint(chain, datasets, stencils, cyclic_phase);
+    let mut salt = Fnv::new();
+    salt.write_str("fuse");
+    salt.write_u64(target.digest());
+    salt.write_u64(max_k as u64);
+    let key = (fp, salt.finish());
+    if let Some(c) = TunedPlanCache::get(key) {
+        return c;
+    }
+
+    let sp = crate::obs::span("tune-fuse");
+    sp.field("max_k", max_k);
+    sp.field("loops", chain.len());
+    let budget = opts.budget.max(1);
+    let mut evals = 0u32;
+    let mut score_k = |k: u32, evals: &mut u32| -> f64 {
+        *evals += 1;
+        let csp = crate::obs::span("candidate");
+        csp.field("fuse", k);
+        let fused = fuse_chain(chain, k as usize);
+        model_chain_time(
+            &mut *target.build(heuristic),
+            &fused,
+            datasets,
+            stencils,
+            cyclic_phase,
+        ) / k as f64
+    };
+    let base_s = score_k(1, &mut evals);
+    let mut best = (heuristic, base_s);
+    let mut k = 2u32;
+    while k <= max_k && evals < budget {
+        let s = score_k(k, &mut evals);
+        if s < best.1 {
+            best = (Candidate { fuse: k, ..heuristic }, s);
+        }
+        k = k.saturating_mul(2);
+    }
+    let choice = TunedChoice {
+        candidate: best.0,
+        tuned_model_s: best.1,
+        heuristic_model_s: base_s,
+        evals,
+    };
+    TunedPlanCache::insert(key, choice);
+    choice
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -353,6 +431,61 @@ mod tests {
         assert_eq!(c.candidate, t.heuristic());
         assert_eq!(c.evals, 1);
         assert_eq!(c.tuned_model_s, c.heuristic_model_s);
+    }
+
+    #[test]
+    fn fuse_choice_is_argmin_of_the_k_grid_and_never_worse() {
+        let (chain, datasets, stencils) = fixture(512);
+        let t = target();
+        let opts = TuneOpts::default();
+        let choice = tune_fuse(&t, &opts, &chain, &datasets, &stencils, true, 8);
+        assert!(
+            choice.tuned_model_s <= choice.heuristic_model_s,
+            "tuned k must never model slower than k=1"
+        );
+        assert_eq!(choice.evals, 4, "grid {{1,2,4,8}}");
+        // reproduce the argmin from scratch (ties keep the smaller k)
+        let mut want = (1u32, f64::INFINITY);
+        for k in [1u32, 2, 4, 8] {
+            let fused = fuse_chain(&chain, k as usize);
+            let s = model_chain_time(
+                &mut *t.build(t.heuristic()),
+                &fused,
+                &datasets,
+                &stencils,
+                true,
+            ) / k as f64;
+            if s < want.1 {
+                want = (k, s);
+            }
+        }
+        assert_eq!(choice.candidate.fuse, want.0);
+        assert_eq!(choice.tuned_model_s, want.1);
+        // non-fuse dimensions stay on the heuristic toggles
+        assert_eq!(
+            Candidate { fuse: 1, ..choice.candidate },
+            t.heuristic()
+        );
+        // second call hits the process-wide cache and agrees bit-for-bit
+        let again = tune_fuse(&t, &opts, &chain, &datasets, &stencils, true, 8);
+        assert_eq!(again.candidate, choice.candidate);
+        assert_eq!(again.tuned_model_s, choice.tuned_model_s);
+    }
+
+    #[test]
+    fn fuse_grid_of_one_short_circuits_to_unfused() {
+        let (chain, datasets, stencils) = fixture(128);
+        let c = tune_fuse(
+            &target(),
+            &TuneOpts::default(),
+            &chain,
+            &datasets,
+            &stencils,
+            true,
+            1,
+        );
+        assert_eq!(c.candidate.fuse, 1);
+        assert_eq!(c.evals, 0);
     }
 
     #[test]

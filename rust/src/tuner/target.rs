@@ -140,24 +140,28 @@ impl TunerTarget {
                 slots: 0,
                 cyclic: false,
                 prefetch: false,
+                fuse: 1,
             },
             TunerTarget::GpuExplicit { opts, .. } => Candidate {
                 tiles: None,
                 slots: opts.slots.clamp(2, 3),
                 cyclic: opts.cyclic,
                 prefetch: opts.prefetch,
+                fuse: 1,
             },
             TunerTarget::GpuUnified { prefetch, .. } => Candidate {
                 tiles: None,
                 slots: 0,
                 cyclic: false,
                 prefetch: *prefetch,
+                fuse: 1,
             },
             TunerTarget::Tiered { opts, .. } => Candidate {
                 tiles: None,
                 slots: opts.slots.clamp(2, 3),
                 cyclic: opts.cyclic,
                 prefetch: opts.prefetch,
+                fuse: 1,
             },
             TunerTarget::Sharded { inner, .. } => inner.heuristic(),
         }
@@ -180,6 +184,7 @@ impl TunerTarget {
                                 slots,
                                 cyclic,
                                 prefetch,
+                                fuse: 1,
                             });
                         }
                     }
@@ -193,6 +198,7 @@ impl TunerTarget {
                     slots: 0,
                     cyclic: false,
                     prefetch,
+                    fuse: 1,
                 })
                 .collect(),
             TunerTarget::Sharded { inner, .. } => inner.toggle_variants(),
@@ -390,6 +396,7 @@ mod tests {
             slots: 2,
             cyclic: true,
             prefetch: true,
+            fuse: 1,
         });
         let d = e.describe();
         assert!(d.contains("Cyclic") && d.contains("Prefetch"), "{d}");

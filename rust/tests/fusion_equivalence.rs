@@ -1,0 +1,132 @@
+//! Temporal-fusion equivalence: `Session::replay_fused(chain, n, k)`
+//! must be **bit-exact** against unfused `replay(chain, n)` of the same
+//! recorded step chain — for every app, on every engine family. Fusion
+//! is a re-schedule (one skewed super-chain instead of k chain
+//! boundaries); the numerics are the same loop bodies in the same
+//! order, so equality is to the last bit, witnessed by an FNV over the
+//! raw bit patterns of every dataset buffer.
+
+use ops_oc::apps::cloverleaf2d::CloverLeaf2D;
+use ops_oc::apps::cloverleaf3d::CloverLeaf3D;
+use ops_oc::apps::opensbli::OpenSbli;
+use ops_oc::bench_support::store_checksum;
+use ops_oc::coordinator::Config;
+use ops_oc::memory::AppCalib;
+use ops_oc::ops::Drive;
+use ops_oc::program::{ProgramBuilder, Session};
+use std::sync::Arc;
+
+/// One target per engine family: plain KNL, tiled KNL cache mode, the
+/// explicit-streaming GPU engine, a hand-spelled three-tier NVMe stack
+/// on the generic N-tier engine, and a sharded two-rank GPU.
+fn targets() -> Vec<Config> {
+    [
+        "knl-flat-ddr4",
+        "knl-cache-tiled",
+        "gpu-explicit:pcie:cyclic:prefetch",
+        "tiers:hbm=64k@509.7+host=256k@11~0.00001+nvme=inf@6~0.00002:cyclic",
+        "gpu-explicit:nvlink:cyclic:x2",
+    ]
+    .iter()
+    .map(|s| {
+        let (t, _) = Config::parse_spec(s).expect("spec parses");
+        Config::for_target(t, AppCalib::CLOVERLEAF_2D)
+    })
+    .collect()
+}
+
+fn cl2d_sum(cfg: &Config, steps: usize, k: usize) -> u64 {
+    let mut b = ProgramBuilder::new();
+    let mut app = CloverLeaf2D::new(&mut b, 16, 16, 1);
+    let step = app.record_step_chain(&mut b);
+    let mut sess = Session::new(Arc::new(b.freeze().expect("freeze")), cfg);
+    app.initialise(&mut sess);
+    sess.flush();
+    sess.set_cyclic_phase(true);
+    sess.replay_fused(step, steps, k);
+    sess.flush();
+    store_checksum(&sess)
+}
+
+fn cl3d_sum(cfg: &Config, steps: usize, k: usize) -> u64 {
+    let mut b = ProgramBuilder::new();
+    let mut app = CloverLeaf3D::new(&mut b, 8, 8, 8, 1);
+    let step = app.record_step_chain(&mut b);
+    let mut sess = Session::new(Arc::new(b.freeze().expect("freeze")), cfg);
+    app.initialise(&mut sess);
+    sess.flush();
+    sess.set_cyclic_phase(true);
+    sess.replay_fused(step, steps, k);
+    sess.flush();
+    store_checksum(&sess)
+}
+
+fn sbli_sum(cfg: &Config, steps: usize, k: usize) -> u64 {
+    let mut b = ProgramBuilder::new();
+    let mut app = OpenSbli::new(&mut b, 16, 2, 1);
+    let step = app.record_step_chain(&mut b);
+    let mut sess = Session::new(Arc::new(b.freeze().expect("freeze")), cfg);
+    app.initialise(&mut sess);
+    sess.flush();
+    sess.set_cyclic_phase(true);
+    sess.replay_fused(step, steps, k);
+    sess.flush();
+    store_checksum(&sess)
+}
+
+// `steps = 5, k = 3` exercises the unfused-tail path (one batch of 3,
+// remainder 2); `k = 8 > steps` exercises the clamp.
+
+#[test]
+fn cloverleaf2d_fused_replay_is_bit_exact_on_all_targets() {
+    for cfg in targets() {
+        let base = cl2d_sum(&cfg, 5, 1);
+        for k in [2, 3, 4, 8] {
+            assert_eq!(
+                base,
+                cl2d_sum(&cfg, 5, k),
+                "cl2d fused k={k} diverged on {}",
+                cfg.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn cloverleaf3d_fused_replay_is_bit_exact_on_all_targets() {
+    for cfg in targets() {
+        let base = cl3d_sum(&cfg, 3, 1);
+        for k in [2, 3] {
+            assert_eq!(
+                base,
+                cl3d_sum(&cfg, 3, k),
+                "cl3d fused k={k} diverged on {}",
+                cfg.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn opensbli_fused_replay_is_bit_exact_on_all_targets() {
+    for cfg in targets() {
+        let base = sbli_sum(&cfg, 4, 1);
+        for k in [2, 3] {
+            assert_eq!(
+                base,
+                sbli_sum(&cfg, 4, k),
+                "sbli fused k={k} diverged on {}",
+                cfg.label()
+            );
+        }
+    }
+}
+
+/// The checksum is a real witness: it distinguishes runs that differ
+/// (different step counts), so the equalities above are not vacuous.
+#[test]
+fn checksum_distinguishes_different_trajectories() {
+    let cfg = &targets()[0];
+    assert_ne!(cl2d_sum(cfg, 5, 1), cl2d_sum(cfg, 4, 1));
+    assert_ne!(sbli_sum(cfg, 4, 1), sbli_sum(cfg, 3, 1));
+}

@@ -116,6 +116,7 @@ const SCHEMA: &[(&str, &str)] = &[
     ("tune_model_speedup", "num"),
     ("analysis_builds", "num"),
     ("analysis_reuse_hits", "num"),
+    ("fused_steps", "num"),
     ("program_freeze_s", "num"),
     ("spans_recorded", "num"),
     ("span_max_depth", "num"),
@@ -195,6 +196,7 @@ fn json_record_roundtrips_and_schema_is_stable() {
     assert_eq!(rec["tune_model_speedup"], Val::Num(1.0));
     assert_eq!(rec["analysis_builds"], Val::Num(0.0));
     assert_eq!(rec["analysis_reuse_hits"], Val::Num(0.0));
+    assert_eq!(rec["fused_steps"], Val::Num(0.0));
     match &rec["avg_bandwidth_gbs"] {
         Val::Num(v) => assert!((v - 200.0).abs() < 1e-9),
         v => panic!("{v:?}"),

@@ -284,6 +284,136 @@ fn prop_auto_plan_respects_budget() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Temporal-fusion shift properties (`tiling::dependency::compute_fused_shifts`)
+
+use ops_oc::tiling::analysis::fuse_chain;
+use ops_oc::tiling::dependency::{compute_fused_shifts, compute_shifts, dep_radius};
+
+/// Largest single-pair dependency radius in the chain (periodic copies
+/// are structurally identical, so this also bounds cross-copy pairs).
+fn max_radius(f: &Fixture, tile_dim: usize) -> isize {
+    let mut r = 0isize;
+    for a in &f.chain {
+        for b in &f.chain {
+            if let Some(d) = dep_radius(a, b, &f.stencils, tile_dim) {
+                r = r.max(d.abs());
+            }
+        }
+    }
+    r
+}
+
+fn max_abs(shifts: &[isize]) -> isize {
+    shifts.iter().map(|s| s.abs()).max().unwrap_or(0)
+}
+
+/// Fused shifts are *defined* as the shifts of the concatenated chain,
+/// and they grow linearly, not quadratically: shifts depend only on
+/// later loops, so the last `k-1` copies of a `k`-fused chain see
+/// exactly the `(k-1)`-fused problem (suffix stability), and each
+/// additional leading copy adds at most one period's worth of radii.
+#[test]
+fn prop_fused_shifts_grow_linearly_and_match_concatenation() {
+    for seed in 1..=25u64 {
+        let f = random_fixture(seed.wrapping_mul(101), 3, 3 + (seed % 6) as usize, 64);
+        let n = f.chain.len();
+        let rmax = max_radius(&f, 1);
+        let mut prev = compute_fused_shifts(&f.chain, &f.stencils, 1, 1);
+        assert_eq!(prev, compute_shifts(&f.chain, &f.stencils, 1), "seed {seed}");
+        for k in 2..=8usize {
+            let shifts = compute_fused_shifts(&f.chain, &f.stencils, 1, k);
+            assert_eq!(shifts.len(), n * k, "seed {seed} k={k}");
+            // definitionally the concatenated chain's shifts
+            assert_eq!(
+                shifts,
+                compute_shifts(&fuse_chain(&f.chain, k), &f.stencils, 1),
+                "seed {seed} k={k}: fused shifts must equal concatenation"
+            );
+            // suffix stability: the trailing k-1 copies are untouched
+            assert_eq!(
+                shifts[n..],
+                prev[..],
+                "seed {seed} k={k}: deeper fusion must not move later copies"
+            );
+            // linear growth: one leading copy adds <= one period of radii
+            assert!(
+                max_abs(&shifts) <= max_abs(&prev) + n as isize * rmax,
+                "seed {seed} k={k}: super-linear shift growth ({} > {} + {n}*{rmax})",
+                max_abs(&shifts),
+                max_abs(&prev)
+            );
+            prev = shifts;
+        }
+        // no overflow at depths far past any tuner grid
+        let deep = compute_fused_shifts(&f.chain, &f.stencils, 1, 64);
+        assert!(
+            max_abs(&deep) <= 64 * n as isize * rmax.max(1),
+            "seed {seed}: deep fusion shifts exceed the linear bound"
+        );
+    }
+}
+
+/// Loops with no cross-loop dependencies (disjoint datasets, point
+/// stencils) must stay unshifted at every fusion depth: fusion skews
+/// only what dependencies force.
+#[test]
+fn prop_independent_loops_stay_unshifted_at_any_depth() {
+    let mut f = random_fixture(7, 6, 1, 64);
+    // rebuild the chain as: loop i reads dataset 2i (point), writes
+    // dataset 2i+1 (point) — no dataset shared across loops, radius 0
+    f.chain = (0..3u32)
+        .map(|i| LoopInst {
+            name: format!("ind{i}"),
+            block: BlockId(0),
+            range: [(0, 24), (0, 64), (0, 1)],
+            args: vec![
+                Arg::dat(DatasetId(2 * i), StencilId(0), Access::Read),
+                Arg::dat(DatasetId(2 * i + 1), StencilId(0), Access::Write),
+            ],
+            kernel: kernel(|c| {
+                let v = c.r(0, 0, 0);
+                c.w(1, 0, 0, v * 0.5);
+            }),
+            seq: i as u64,
+            bw_efficiency: 1.0,
+        })
+        .collect();
+    for k in [1usize, 2, 4, 16, 64] {
+        let shifts = compute_fused_shifts(&f.chain, &f.stencils, 1, k);
+        assert!(
+            shifts.iter().all(|&s| s == 0),
+            "independent loops picked up a shift at k={k}: {shifts:?}"
+        );
+    }
+}
+
+/// Deep fusion where the cumulative skew exceeds the engines' tile
+/// width: numerics must stay bit-exact against sequential execution of
+/// the same super-chain (tiny MCDRAM/HBM targets force multi-plane
+/// tiles far narrower than the k-deep skew halo).
+#[test]
+fn prop_deep_fused_chains_stay_bitexact_past_tile_width() {
+    for seed in [3u64, 9, 17] {
+        let mut f = random_fixture(seed.wrapping_mul(977), 3, 4, 96);
+        f.chain = fuse_chain(&f.chain, 8);
+        let want = run_sequential(&f, seed);
+        let mut knl = KnlEngine::new(small_knl(), APP, true);
+        assert_eq!(
+            want,
+            run_engine(&f, &mut knl, seed),
+            "KNL deep-fused mismatch for seed {seed}"
+        );
+        let mut gpu =
+            GpuExplicitEngine::new(small_gpu(), APP, Link::PciE, GpuOpts::default()).unwrap();
+        assert_eq!(
+            want,
+            run_engine(&f, &mut gpu, seed),
+            "GPU deep-fused mismatch for seed {seed}"
+        );
+    }
+}
+
 #[test]
 fn prop_plan_source_auto_never_panics_on_degenerate_targets() {
     for seed in 200..=220u64 {

@@ -175,6 +175,54 @@ fn trace_events_are_well_formed_and_ordered_per_resource() {
     assert!(json.contains("\"ph\":\"X\""));
 }
 
+/// Regression test for the sharded-tiered rank prefix: a rank whose
+/// inner engine is a multi-tier stack already uses `:`-joined stream
+/// names (`host:upload`), and the re-namespacing layer must prefix each
+/// of them with `r{r}:` exactly once — streams, trace events and
+/// lifecycle spans all agreeing. A double `r0:r0:` row would split one
+/// rank's attribution across two ledger keys.
+#[test]
+fn sharded_tiered_streams_trace_and_spans_agree_on_rank_prefixes() {
+    use ops_oc::bench_support::run_cl2d_cfg;
+    use ops_oc::coordinator::Config;
+    use ops_oc::memory::AppCalib;
+    let (target, _) = Config::parse_spec(
+        "tiers:hbm=64k@509.7+host=256k@11~0.00001+nvme=inf@6~0.00002:cyclic:x2",
+    )
+    .expect("sharded three-tier spec parses");
+    let cfg = Config::for_target(target, AppCalib::CLOVERLEAF_2D);
+    let (m, oom) = run_cl2d_cfg(&cfg, true, 8, 256, 0.01, 1, 0);
+    assert!(!oom);
+    let double = |name: &str| name.contains("r0:r0:") || name.contains("r1:r1:");
+    // streams: each rank's tier boundary streams appear once-prefixed
+    for r in 0..2 {
+        let key = format!("r{r}:host:upload");
+        assert!(m.per_resource.contains_key(&key), "missing stream {key}");
+    }
+    for key in m.per_resource.keys() {
+        assert!(!double(key), "double rank prefix in stream {key}");
+    }
+    // trace events agree with the stream ledger
+    assert!(!m.trace_events().is_empty(), "trace must be populated");
+    for ev in m.trace_events() {
+        assert!(
+            !double(&ev.resource),
+            "double rank prefix in trace event {}",
+            ev.resource
+        );
+    }
+    // lifecycle spans agree too (the cell runner reset the tracer, so
+    // the thread's tracer still holds exactly this cell's spans)
+    let spans = ops_oc::obs::snapshot_spans();
+    assert!(
+        spans.iter().any(|s| s.name.starts_with("r0:")),
+        "per-rank spans must carry the rank prefix"
+    );
+    for s in &spans {
+        assert!(!double(&s.name), "double rank prefix in span {}", s.name);
+    }
+}
+
 /// Regression test for sharded span namespacing: the per-rank
 /// re-namespacing that prefixes a rank's streams and trace events with
 /// `r{r}:` must apply to its lifecycle spans too, and the resulting
