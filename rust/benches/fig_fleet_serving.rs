@@ -1,0 +1,164 @@
+//! Fleet serving: aggregate throughput vs tenant count across cluster
+//! sizes, with the cross-tenant sharing the serving layer exists to
+//! demonstrate. The bench asserts the claims the figure illustrates:
+//!
+//! * **fingerprint batching** — N identical-app tenants freeze ONE
+//!   Program: `analysis_builds == 1` for the single distinct
+//!   fingerprint, every other tenant counts reuse hits, and the
+//!   process-wide tuned-plan cache serves at least N−1 hits;
+//! * **bit-exactness under multi-tenancy** — every request's store
+//!   checksum equals a solo run of the same (member, app, size, steps);
+//! * **serving beats the queue** — aggregate makespan is strictly below
+//!   N sequential solo services, at equal per-request numerics;
+//! * **failure is survivable** — a rank failure mid-trace re-decomposes
+//!   the sharded target onto its survivors and the retried request's
+//!   checksum equals a fresh run on the degraded member.
+
+use ops_oc::bench_support::{telemetry::BenchRecorder, Figure};
+use ops_oc::fleet::{self, Cluster, FleetApp, FleetOpts, Policy, Scenario, Workload};
+use std::time::Instant;
+
+const SIZE_GB: f64 = 0.01;
+const STEPS: usize = 4;
+const TENANTS: [u32; 3] = [2, 4, 8];
+const CLUSTERS: [(&str, &str); 2] = [
+    ("tuned-pair", "fleet:tuned-pair"),
+    ("tuned-quad", "fleet:gpu-explicit:pcie:cyclic:tuned*4"),
+];
+
+fn main() {
+    let t0 = Instant::now();
+    let mut fig = Figure::new(
+        "Fleet serving: aggregate throughput vs tenant count",
+        "requests per modelled second",
+    );
+    let mut rec = BenchRecorder::new("fig_fleet_serving");
+
+    for (label, spec) in CLUSTERS {
+        let cluster = Cluster::parse(spec).unwrap();
+        let (solo_s, solo_checksum) =
+            fleet::solo_run(&cluster.targets[0], FleetApp::CloverLeaf2D, SIZE_GB, STEPS).unwrap();
+        assert!(solo_s > 0.0);
+        let series = fig.add_series(label);
+
+        for n in TENANTS {
+            let w = Workload::parse(&format!(
+                "tenants={n},reqs=1,apps=cloverleaf2d,sizes={SIZE_GB},steps={STEPS},seed=17"
+            ))
+            .unwrap();
+            let opts = FleetOpts {
+                policy: Policy::BestFit,
+                ..FleetOpts::default()
+            };
+            let run = fleet::serve(&cluster, &w, &opts).unwrap();
+            assert_eq!(run.completed(), n as usize);
+            assert!(run.outcomes.iter().all(|o| !o.oom));
+
+            // fingerprint batching: one Program, one fused-analysis
+            // build, everyone else reuses
+            assert_eq!(run.distinct_fingerprints, 1);
+            assert_eq!(run.programs_built, 1, "batching must freeze once for {n} tenants");
+            assert_eq!(
+                run.metrics.analysis_builds, 1,
+                "one analysis build per distinct fingerprint ({label}, {n} tenants)"
+            );
+            assert!(run.metrics.analysis_reuse_hits > 0);
+            // the process-wide tuned-plan cache serves every tenant
+            // after the first search (identical targets share digests)
+            assert!(
+                run.metrics.tune_cache_hits >= n as u64 - 1,
+                "{label}: expected >= {} tuned-plan cache hits, got {}",
+                n - 1,
+                run.metrics.tune_cache_hits
+            );
+
+            // multi-tenancy must not perturb numerics
+            assert!(
+                run.outcomes.iter().all(|o| o.checksum == solo_checksum),
+                "{label}: a fleet request diverged from the solo checksum"
+            );
+            // and must beat N sequential solo runs outright
+            assert!(
+                run.makespan_s < n as f64 * solo_s * 0.999,
+                "{label}: serving {n} tenants took {:.6}s, sequential solo {:.6}s",
+                run.makespan_s,
+                n as f64 * solo_s
+            );
+            let p50 = run.latency_quantile(0.5);
+            let p99 = run.latency_quantile(0.99);
+            assert!(p50 > 0.0 && p99 >= p50);
+            assert!(run.metrics.spans_recorded > 0, "span tree must record");
+
+            println!(
+                "{label:>10} n={n}: makespan={:.6}s throughput={:.1} rps \
+                 p50={:.6}s p99={:.6}s tune_hits={}",
+                run.makespan_s,
+                run.throughput_rps(),
+                p50,
+                p99,
+                run.metrics.tune_cache_hits,
+            );
+            fig.push(series, n as f64, Some(run.throughput_rps()));
+            rec.point(
+                &format!("fleet|{label}|{n}tenants"),
+                "fleet",
+                &format!("{label} best-fit"),
+                SIZE_GB * n as f64,
+                &run.metrics,
+                false,
+            );
+        }
+    }
+
+    // Rank failure mid-trace: the x2 member loses a rank while serving;
+    // the in-flight request is re-decomposed onto the survivor and its
+    // numerics equal a fresh run on the degraded member.
+    {
+        let cluster =
+            Cluster::parse("fleet:gpu-explicit:pcie:cyclic:x2,gpu-explicit:pcie:cyclic").unwrap();
+        let w = Workload::parse(&format!(
+            "tenants=4,reqs=1,apps=cloverleaf2d,sizes={SIZE_GB},steps={STEPS},seed=23"
+        ))
+        .unwrap();
+        let opts = FleetOpts {
+            scenarios: vec![Scenario::parse("fail:0@0.000000001").unwrap()],
+            ..FleetOpts::default()
+        };
+        let run = fleet::serve(&cluster, &w, &opts).unwrap();
+        assert_eq!(run.completed(), 4, "failure must not drop requests");
+        assert_eq!(run.failovers, 1);
+        assert!(run.per_target[0].degraded);
+        let degraded = cluster.targets[0].degrade().unwrap();
+        assert_eq!(degraded.target.ranks(), 1, "x2 re-decomposes to the survivor");
+        let (_, degraded_checksum) =
+            fleet::solo_run(&degraded, FleetApp::CloverLeaf2D, SIZE_GB, STEPS).unwrap();
+        let retried: Vec<_> = run.outcomes.iter().filter(|o| o.retried).collect();
+        assert_eq!(retried.len(), 1);
+        assert_eq!(
+            retried[0].checksum, degraded_checksum,
+            "retried request must match a fresh run on the surviving cluster"
+        );
+        rec.point(
+            "fleet|rank-failure|4tenants",
+            "fleet",
+            "x2+single first-fit fail:0",
+            SIZE_GB * 4.0,
+            &run.metrics,
+            false,
+        );
+        println!(
+            "rank-failure: completed={} failovers={} makespan={:.6}s (degraded target bound={})",
+            run.completed(),
+            run.failovers,
+            run.makespan_s,
+            run.per_target[0].bound,
+        );
+    }
+
+    println!("{}", fig.render());
+    match rec.write() {
+        Ok(p) => println!("trajectory: {}", p.display()),
+        Err(e) => eprintln!("cannot write trajectory: {e}"),
+    }
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -220,6 +220,24 @@ impl Metrics {
         }
     }
 
+    /// Lay another run's collected events onto this sink's clock: shift
+    /// each event by `offset_s` and prefix its resource name, so many
+    /// per-request engine timelines interleave on one virtual serving
+    /// clock without colliding on stream names. No-op when tracing is
+    /// off here.
+    pub fn absorb_trace_events(&mut self, events: &[TraceEvent], offset_s: f64, prefix: &str) {
+        let Some(evs) = &mut self.trace else {
+            return;
+        };
+        for ev in events {
+            let mut ev = ev.clone();
+            ev.resource = format!("{prefix}{}", ev.resource);
+            ev.start_s += offset_s;
+            ev.end_s += offset_s;
+            evs.push(ev);
+        }
+    }
+
     /// Fold one resource's accounting into the attribution ledger (the
     /// class of the first sighting of a name sticks).
     pub fn record_stream(

@@ -1,0 +1,244 @@
+//! Declarative clusters: the set of heterogeneous serving targets a
+//! fleet run schedules onto.
+//!
+//! A cluster is parsed from a `fleet:` spec — a comma-separated list of
+//! *members*, each any execution-target spec the run grammar already
+//! accepts ([`Config::parse_spec_opts`]: legacy platform heads, `tiers:`
+//! stacks, sharded `x<N>` suffixes, `tuned` and `fuse<k>` tokens), with
+//! an optional `*<count>` multiplicity suffix:
+//!
+//! ```text
+//! fleet:gpu-explicit:pcie:cyclic:tuned*2,knl-cache-tiled
+//! fleet:hetero                       (a named preset)
+//! ```
+//!
+//! Commas and `*` never appear inside a member spec (tier stacks join
+//! tiers with `+`, options with `:`), so the split is unambiguous.
+
+use crate::coordinator::config::{Config, Platform, Target};
+use crate::memory::AppCalib;
+use crate::topology::Topology;
+
+/// One serving target of a cluster.
+#[derive(Debug, Clone)]
+pub struct FleetTarget {
+    /// Position in the cluster (stable across the run; placement,
+    /// scenarios and the per-target report refer to it).
+    pub id: usize,
+    /// The member spec this target was parsed from (multiplicity
+    /// expanded away).
+    pub spec: String,
+    pub target: Target,
+    /// Wrap this target's engine in the cost-model auto-tuner.
+    pub tuned: bool,
+    /// Temporal-fusion depth from the member spec (`1` = unset; the
+    /// scheduler deepens to its own floor — see `fleet::scheduler`).
+    pub fuse: u32,
+}
+
+impl FleetTarget {
+    /// Parse one member spec (no multiplicity suffix).
+    pub fn parse(id: usize, member: &str) -> crate::Result<FleetTarget> {
+        let (target, tuned, fuse) = Config::parse_spec_opts(member)?;
+        crate::ensure!(
+            fuse != 0,
+            "fleet member {member:?} asks the tuner for a fusion depth (fuse0); \
+             fleet members pin an explicit depth"
+        );
+        Ok(FleetTarget {
+            id,
+            spec: member.to_string(),
+            target,
+            tuned,
+            fuse,
+        })
+    }
+
+    /// The run configuration a request executes under on this target.
+    pub fn config(&self, app: AppCalib) -> Config {
+        let cfg = Config::for_target(self.target.clone(), app).with_fuse(self.fuse);
+        if self.tuned {
+            cfg.with_tuning(crate::tuner::TuneOpts::default())
+                .expect("tuned member specs are validated at parse time")
+        } else {
+            cfg
+        }
+    }
+
+    /// The member's memory topology (for capacity-aware placement and
+    /// service estimates).
+    pub fn topology(&self) -> Topology {
+        self.config(AppCalib::CLOVERLEAF_2D).topology()
+    }
+
+    /// Display label.
+    pub fn label(&self) -> String {
+        self.target.label()
+    }
+
+    /// Re-decompose onto the survivors after losing one rank: `x<N>`
+    /// becomes `x<N-1>`, collapsing to the inner single-device target
+    /// when only one rank survives. Errors on unsharded members — a
+    /// single-device target has no survivors to re-decompose onto (the
+    /// scheduler retires it instead).
+    pub fn degrade(&self) -> crate::Result<FleetTarget> {
+        let ranks = self.target.ranks();
+        crate::ensure!(
+            ranks > 1,
+            "target {:?} is not sharded: a rank failure retires it outright",
+            self.spec
+        );
+        let survivors = ranks - 1;
+        let target = match &self.target {
+            // Platform::sharded(1) is an identity (the `x1` convenience),
+            // so the one-survivor collapse is explicit.
+            Target::Platform(Platform::Sharded { inner, .. }) if survivors == 1 => {
+                Target::Platform(inner.to_platform())
+            }
+            t => t.clone().sharded(survivors)?,
+        };
+        let spec = format!("{}{}", target.spec(), if self.tuned { ":tuned" } else { "" });
+        Ok(FleetTarget {
+            id: self.id,
+            spec,
+            target,
+            tuned: self.tuned,
+            fuse: self.fuse,
+        })
+    }
+}
+
+/// A declarative set of serving targets.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub targets: Vec<FleetTarget>,
+}
+
+/// Named cluster presets (`fleet:<name>`), mirroring the topology-preset
+/// idiom: each expands to a member list in the same grammar.
+pub const PRESETS: &[(&str, &str)] = &[
+    ("small", "gpu-explicit:pcie:cyclic*2"),
+    (
+        "hetero",
+        "gpu-explicit:nvlink:cyclic,gpu-explicit:pcie:cyclic,knl-cache-tiled",
+    ),
+    (
+        "sharded",
+        "gpu-explicit:nvlink:cyclic:x2,gpu-explicit:pcie:cyclic",
+    ),
+    ("tuned-pair", "gpu-explicit:pcie:cyclic:tuned*2"),
+];
+
+impl Cluster {
+    /// Parse a cluster spec: an optional `fleet:` prefix, then either a
+    /// preset name from [`PRESETS`] or a comma-separated member list
+    /// with optional `*<count>` multiplicities.
+    pub fn parse(spec: &str) -> crate::Result<Cluster> {
+        let body = spec.strip_prefix("fleet:").unwrap_or(spec);
+        let body = match PRESETS.iter().find(|(name, _)| *name == body) {
+            Some((_, expansion)) => expansion,
+            None => body,
+        };
+        crate::ensure!(!body.is_empty(), "empty fleet spec");
+        let mut targets = Vec::new();
+        for member in body.split(',') {
+            let (member, count) = match member.rsplit_once('*') {
+                Some((m, digits)) => {
+                    let n: usize = digits.parse().map_err(|_| {
+                        crate::err!("bad multiplicity {digits:?} in fleet member {member:?}")
+                    })?;
+                    crate::ensure!(
+                        (1..=64).contains(&n),
+                        "fleet member multiplicity {n} out of range (1..=64)"
+                    );
+                    (m, n)
+                }
+                None => (member, 1),
+            };
+            for _ in 0..count {
+                targets.push(FleetTarget::parse(targets.len(), member)?);
+            }
+        }
+        crate::ensure!(targets.len() <= 256, "fleet too large (max 256 targets)");
+        Ok(Cluster { targets })
+    }
+
+    /// Canonical member list (multiplicity expanded; parseable by
+    /// [`Cluster::parse`]).
+    pub fn spec(&self) -> String {
+        let members: Vec<&str> = self.targets.iter().map(|t| t.spec.as_str()).collect();
+        format!("fleet:{}", members.join(","))
+    }
+
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn member_list_with_multiplicity_expands() {
+        let c = Cluster::parse("fleet:gpu-explicit:pcie:cyclic*2,knl-cache-tiled").unwrap();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.targets[0].spec, c.targets[1].spec);
+        assert_eq!(c.targets[2].spec, "knl-cache-tiled");
+        assert_eq!(c.targets[0].id, 0);
+        assert_eq!(c.targets[2].id, 2);
+        // canonical spec reparses to the same cluster
+        let c2 = Cluster::parse(&c.spec()).unwrap();
+        assert_eq!(c2.len(), 3);
+        assert_eq!(c2.targets[2].spec, c.targets[2].spec);
+    }
+
+    #[test]
+    fn presets_expand_and_tuned_members_carry_the_flag() {
+        for (name, _) in PRESETS {
+            let c = Cluster::parse(&format!("fleet:{name}")).unwrap();
+            assert!(!c.is_empty(), "{name}");
+        }
+        let c = Cluster::parse("tuned-pair").unwrap();
+        assert_eq!(c.len(), 2);
+        assert!(c.targets.iter().all(|t| t.tuned));
+    }
+
+    #[test]
+    fn tiers_members_with_plus_and_colon_parse_inside_a_list() {
+        let c = Cluster::parse(
+            "fleet:tiers:hbm=1m@509.7+host=inf@11:cyclic,gpu-explicit:nvlink:cyclic:fuse4",
+        )
+        .unwrap();
+        assert_eq!(c.len(), 2);
+        assert!(c.targets[0].target.tiered().is_some());
+        assert_eq!(c.targets[1].fuse, 4);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(Cluster::parse("").is_err());
+        assert!(Cluster::parse("fleet:no-such-platform").is_err());
+        assert!(Cluster::parse("fleet:knl-cache-tiled*0").is_err());
+        assert!(Cluster::parse("fleet:knl-cache-tiled*banana").is_err());
+        // fuse0 (tuner-chosen depth) is not a pinnable member option
+        assert!(Cluster::parse("fleet:gpu-explicit:pcie:cyclic:fuse0").is_err());
+    }
+
+    #[test]
+    fn degrade_redecomposes_onto_survivors() {
+        let c = Cluster::parse("fleet:gpu-explicit:pcie:cyclic:x3").unwrap();
+        let d = c.targets[0].degrade().unwrap();
+        assert_eq!(d.target.ranks(), 2);
+        let dd = d.degrade().unwrap();
+        assert_eq!(dd.target.ranks(), 1, "one survivor collapses to single-device");
+        assert!(dd.degrade().is_err(), "nothing left to re-decompose onto");
+        // an unsharded member cannot degrade
+        let single = Cluster::parse("fleet:knl-cache-tiled").unwrap();
+        assert!(single.targets[0].degrade().is_err());
+    }
+}

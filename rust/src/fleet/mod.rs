@@ -1,0 +1,35 @@
+//! Fleet-scale multi-tenant serving: many concurrent stencil Programs
+//! on a heterogeneous cluster of modelled targets.
+//!
+//! The engine models one out-of-core stencil run; this layer turns it
+//! into a *service*. A [`Cluster`] is a declarative set of serving
+//! targets (`fleet:` spec grammar — any run-target spec, `*<count>`
+//! multiplicities, named presets). A [`Workload`] is a deterministic
+//! seeded trace of tenant requests (app × size × steps, open- or
+//! closed-loop arrivals). [`serve`] walks the trace on a virtual clock:
+//! a placement [`Policy`] picks a target per request, the request runs
+//! for real (service time = the engine's modelled makespan, numerics
+//! bit-exact against a solo run), and identical-fingerprint requests
+//! share one frozen [`Program`](crate::program::Program) — so
+//! freeze-time `ChainAnalysis` and process-wide tuned-plan cache
+//! entries are built once and amortised across every tenant.
+//! [`Scenario`]s inject rank failures (re-decomposition onto
+//! survivors, in-flight retry) and scale-up/down mid-trace.
+//!
+//! Reports: [`report::fleet_json`] (flat `fleet_*` record for `--json`
+//! and `BENCH_fleet.json`), [`report::summary`], a `fleet` span tree
+//! under `--spans`, and per-request engine timelines interleaved onto
+//! the serving clock under `--trace`.
+
+pub mod cluster;
+pub mod report;
+pub mod scheduler;
+pub mod workload;
+
+pub use cluster::{Cluster, FleetTarget, PRESETS};
+pub use report::{fleet_json, summary};
+pub use scheduler::{
+    serve, solo_run, FleetOpts, FleetRun, Policy, RequestOutcome, Scenario, TargetStat,
+    FUSE_FLOOR,
+};
+pub use workload::{Arrival, FleetApp, Request, Workload};

@@ -1,0 +1,178 @@
+//! Serving reports: the flat `--json` record and the human summary.
+
+use std::fmt::Write as _;
+
+use super::scheduler::FleetRun;
+use crate::obs::esc;
+
+/// Mean request latency over the completed trace.
+pub fn mean_latency_s(run: &FleetRun) -> f64 {
+    if run.outcomes.is_empty() {
+        return 0.0;
+    }
+    run.outcomes.iter().map(|o| o.latency_s).sum::<f64>() / run.outcomes.len() as f64
+}
+
+/// One flat JSON object describing the serving run — fixed `fleet_*`
+/// scalars plus one `fleet_target_<i>_*` family per target (the schema
+/// pin in `tests/json_roundtrip.rs` covers both). Latency quantiles are
+/// the `request_latency_s` histogram's upper bucket bounds.
+pub fn fleet_json(run: &FleetRun) -> String {
+    let m = &run.metrics;
+    let mut s = String::with_capacity(1024);
+    s.push('{');
+    let _ = write!(
+        s,
+        concat!(
+            "\"fleet_spec\":\"{}\",\"policy\":\"{}\",",
+            "\"fleet_targets\":{},\"fleet_requests\":{},\"fleet_completed\":{},",
+            "\"fleet_distinct_fingerprints\":{},\"fleet_programs_built\":{},",
+            "\"fleet_failovers\":{},\"fleet_retired\":{},\"fleet_added\":{},",
+            "\"fleet_makespan_s\":{:.9},\"fleet_throughput_rps\":{:.4},",
+            "\"p50_latency_s\":{:.9},\"p99_latency_s\":{:.9},\"mean_latency_s\":{:.9},",
+            "\"fleet_analysis_builds\":{},\"fleet_analysis_reuse_hits\":{},",
+            "\"fleet_tune_evals\":{},\"fleet_tune_cache_hits\":{},",
+            "\"fleet_program_freeze_s\":{:.9},\"oom\":{}"
+        ),
+        esc(&run.cluster_spec),
+        run.policy.name(),
+        run.per_target.len(),
+        run.completed(),
+        run.completed(),
+        run.distinct_fingerprints,
+        run.programs_built,
+        run.failovers,
+        run.retired,
+        run.added,
+        run.makespan_s,
+        run.throughput_rps(),
+        run.latency_quantile(0.5),
+        run.latency_quantile(0.99),
+        mean_latency_s(run),
+        m.analysis_builds,
+        m.analysis_reuse_hits,
+        m.tune_evals,
+        m.tune_cache_hits,
+        m.program_freeze_s,
+        run.outcomes.iter().any(|o| o.oom),
+    );
+    for t in &run.per_target {
+        let state = if t.retired {
+            "retired"
+        } else if t.degraded {
+            "degraded"
+        } else {
+            "live"
+        };
+        let _ = write!(
+            s,
+            concat!(
+                ",\"fleet_target_{i}_spec\":\"{}\",\"fleet_target_{i}_requests\":{},",
+                "\"fleet_target_{i}_util\":{:.4},\"fleet_target_{i}_bound\":\"{}\",",
+                "\"fleet_target_{i}_state\":\"{}\""
+            ),
+            esc(&t.spec),
+            t.requests,
+            t.util,
+            esc(&t.bound),
+            state,
+            i = t.id,
+        );
+    }
+    s.push('}');
+    s
+}
+
+/// Multi-line human summary of a serving run.
+pub fn summary(run: &FleetRun) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "fleet {} policy={} requests={} makespan={:.6}s throughput={:.2} req/s",
+        run.cluster_spec,
+        run.policy.name(),
+        run.completed(),
+        run.makespan_s,
+        run.throughput_rps(),
+    );
+    let _ = writeln!(
+        s,
+        "  latency p50={:.6}s p99={:.6}s mean={:.6}s",
+        run.latency_quantile(0.5),
+        run.latency_quantile(0.99),
+        mean_latency_s(run),
+    );
+    let _ = writeln!(
+        s,
+        "  sharing: fingerprints={} programs_built={} analysis_builds={} \
+         analysis_reuse_hits={} tune_evals={} tune_cache_hits={} freeze={:.6}s",
+        run.distinct_fingerprints,
+        run.programs_built,
+        run.metrics.analysis_builds,
+        run.metrics.analysis_reuse_hits,
+        run.metrics.tune_evals,
+        run.metrics.tune_cache_hits,
+        run.metrics.program_freeze_s,
+    );
+    if run.failovers + run.retired + run.added > 0 {
+        let _ = writeln!(
+            s,
+            "  scenarios: failovers={} retired={} added={}",
+            run.failovers, run.retired, run.added,
+        );
+    }
+    for t in &run.per_target {
+        let mut flags = String::new();
+        if t.degraded {
+            flags.push_str(" degraded");
+        }
+        if t.retired {
+            flags.push_str(" retired");
+        }
+        let _ = writeln!(
+            s,
+            "  target {}: {} requests={} busy={:.6}s util={:.1}% bound={}{}",
+            t.id,
+            t.spec,
+            t.requests,
+            t.busy_s,
+            t.util * 100.0,
+            t.bound,
+            flags,
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::{serve, Cluster, FleetOpts, Workload};
+
+    #[test]
+    fn fleet_json_is_flat_and_balanced() {
+        let cluster = Cluster::parse("fleet:small").unwrap();
+        let w = Workload::parse("tenants=2,reqs=1,sizes=0.005,steps=4,seed=2").unwrap();
+        let run = serve(&cluster, &w, &FleetOpts::default()).unwrap();
+        let json = fleet_json(&run);
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        // every pinned scalar plus both per-target families must appear
+        for key in [
+            "\"fleet_spec\":",
+            "\"policy\":",
+            "\"fleet_requests\":2",
+            "\"fleet_distinct_fingerprints\":1",
+            "\"p50_latency_s\":",
+            "\"p99_latency_s\":",
+            "\"fleet_tune_cache_hits\":",
+            "\"fleet_target_0_util\":",
+            "\"fleet_target_1_state\":\"live\"",
+            "\"oom\":false",
+        ] {
+            assert!(json.contains(key), "{key} missing in {json}");
+        }
+        let summary = summary(&run);
+        assert!(summary.contains("throughput="));
+        assert!(summary.contains("target 1:"));
+    }
+}

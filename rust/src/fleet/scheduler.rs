@@ -1,0 +1,829 @@
+//! Admission, placement and the discrete-event serving loop.
+//!
+//! The scheduler walks a [`Workload`] trace on a virtual clock: each
+//! request is placed on a cluster target by a [`Policy`], executed for
+//! real (the full modelled engine — the service time *is* the engine's
+//! modelled `elapsed_s`, the numerics are bit-exact against a solo
+//! run), and its completion advances the target's availability.
+//! Identical-fingerprint requests share one frozen [`Program`] when
+//! batching is on, so freeze-time `ChainAnalysis` and process-wide
+//! `TunedPlanCache` entries are built once and hit from every other
+//! tenant — the cross-tenant amortisation this layer exists to
+//! exercise.
+//!
+//! [`Scenario`]s inject failures and elasticity mid-trace: a rank
+//! failure re-decomposes the sharded target onto its survivors (the
+//! in-flight request is retried there, wasted time and all), scale-up
+//! adds a member, scale-down retires one.
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::Arc;
+
+use crate::bench_support::{model_scale, store_checksum};
+use crate::exec::Metrics;
+use crate::ops::Drive;
+use crate::program::{ChainId, Program, ProgramBuilder, Session};
+
+use super::cluster::{Cluster, FleetTarget};
+use super::workload::{FleetApp, Request, Workload};
+
+/// Minimum temporal-fusion depth the serving loop replays at.
+///
+/// Plain `Session::replay` charges one `analysis_builds` per *session*
+/// (each session's first use of a frozen chain), so N tenants sharing a
+/// Program would still count N builds. `Session::replay_fused` with
+/// `k >= 2` memoises the fused analysis on the shared [`Program`]
+/// itself — exactly one session per `(chain, k)` pays the build, every
+/// other tenant counts a reuse hit. Serving therefore never replays
+/// below depth 2 (members may pin deeper). Requests need `steps >= 2`
+/// for the depth not to clamp back to plain replay.
+pub const FUSE_FLOOR: u32 = 2;
+
+/// Placement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Lowest-id target idle at release time; when none is idle, the
+    /// one that frees earliest (ties to lowest id).
+    FirstFit,
+    /// Minimise modelled completion: `max(release, free) + est_service`,
+    /// where the estimate is the last observed service of this
+    /// fingerprint on that target, falling back to a topology
+    /// bytes-over-bottleneck-bandwidth guess.
+    BestFit,
+    /// Prefer targets whose fastest tier holds the whole problem
+    /// (resident class before streaming class), then earliest-free.
+    TierAware,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> crate::Result<Policy> {
+        match s {
+            "first-fit" => Ok(Policy::FirstFit),
+            "best-fit" => Ok(Policy::BestFit),
+            "tier-aware" => Ok(Policy::TierAware),
+            other => crate::bail!(
+                "unknown placement policy {other:?} (first-fit|best-fit|tier-aware)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::FirstFit => "first-fit",
+            Policy::BestFit => "best-fit",
+            Policy::TierAware => "tier-aware",
+        }
+    }
+}
+
+/// A failure/elasticity event injected at a virtual time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scenario {
+    /// Target loses one rank at `at_s`: re-decompose onto the
+    /// survivors (`x<N>` → `x<N-1>`), retrying the in-flight request
+    /// there; an unsharded target is retired outright instead.
+    RankFailure { target: usize, at_s: f64 },
+    /// A new member (any fleet member spec) joins at `at_s`.
+    ScaleUp { member: String, at_s: f64 },
+    /// Target stops taking new requests at `at_s` (drains in-flight).
+    ScaleDown { target: usize, at_s: f64 },
+}
+
+impl Scenario {
+    /// Parse `fail:<target>@<t>`, `up:<member-spec>@<t>`,
+    /// `down:<target>@<t>`. The split is at the *last* `@` — member
+    /// specs contain `:` but never `@`.
+    pub fn parse(s: &str) -> crate::Result<Scenario> {
+        let Some((head, at)) = s.rsplit_once('@') else {
+            crate::bail!("scenario {s:?} needs an @<time_s> suffix");
+        };
+        let at_s: f64 = at
+            .parse()
+            .ok()
+            .filter(|t: &f64| t.is_finite() && *t >= 0.0)
+            .ok_or_else(|| crate::err!("bad scenario time {at:?} in {s:?}"))?;
+        let idx = |digits: &str| -> crate::Result<usize> {
+            digits
+                .parse()
+                .map_err(|_| crate::err!("bad target index {digits:?} in scenario {s:?}"))
+        };
+        if let Some(t) = head.strip_prefix("fail:") {
+            Ok(Scenario::RankFailure { target: idx(t)?, at_s })
+        } else if let Some(spec) = head.strip_prefix("up:") {
+            // validate the member grammar now, not mid-trace
+            FleetTarget::parse(usize::MAX, spec)?;
+            Ok(Scenario::ScaleUp { member: spec.to_string(), at_s })
+        } else if let Some(t) = head.strip_prefix("down:") {
+            Ok(Scenario::ScaleDown { target: idx(t)?, at_s })
+        } else {
+            crate::bail!("unknown scenario {s:?} (fail:<i>@t | up:<spec>@t | down:<i>@t)")
+        }
+    }
+
+    pub fn at_s(&self) -> f64 {
+        match self {
+            Scenario::RankFailure { at_s, .. }
+            | Scenario::ScaleUp { at_s, .. }
+            | Scenario::ScaleDown { at_s, .. } => *at_s,
+        }
+    }
+}
+
+/// Serving options.
+#[derive(Debug, Clone)]
+pub struct FleetOpts {
+    pub policy: Policy,
+    /// Share one frozen Program per `(app, scale)` fingerprint across
+    /// tenants (on by default; off freezes per request — same numerics,
+    /// no cross-tenant amortisation).
+    pub batching: bool,
+    pub scenarios: Vec<Scenario>,
+    /// Collect per-request engine timelines onto the serving clock.
+    pub trace: bool,
+}
+
+impl Default for FleetOpts {
+    fn default() -> Self {
+        FleetOpts {
+            policy: Policy::FirstFit,
+            batching: true,
+            scenarios: Vec::new(),
+            trace: false,
+        }
+    }
+}
+
+/// One completed request.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub id: u32,
+    pub tenant: u32,
+    pub app: FleetApp,
+    pub size_gb: f64,
+    pub fingerprint: u64,
+    /// Target that completed the request.
+    pub target: usize,
+    /// Release time (closed-loop follow-ups release at their
+    /// predecessor's completion).
+    pub arrival_s: f64,
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Modelled engine time of the completing attempt.
+    pub service_s: f64,
+    /// `end - arrival`: queueing + service (+ any failed attempt).
+    pub latency_s: f64,
+    pub checksum: u64,
+    pub oom: bool,
+    /// The request survived a rank failure or target retirement.
+    pub retried: bool,
+}
+
+/// Per-target serving report.
+#[derive(Debug, Clone)]
+pub struct TargetStat {
+    pub id: usize,
+    pub spec: String,
+    pub requests: u64,
+    pub busy_s: f64,
+    /// `busy / makespan`.
+    pub util: f64,
+    /// Dominant stream of the work this target ran.
+    pub bound: String,
+    pub degraded: bool,
+    pub retired: bool,
+}
+
+/// The result of serving one workload on one cluster.
+#[derive(Debug, Clone)]
+pub struct FleetRun {
+    pub outcomes: Vec<RequestOutcome>,
+    /// Aggregate of every request's engine metrics; `elapsed_s` is the
+    /// serving makespan and `program_freeze_s` the total freeze time of
+    /// the *distinct* Programs built (merge would double-count the
+    /// shared one per tenant). The `request_latency_s` histogram in
+    /// `metrics.obs` holds every request latency.
+    pub metrics: Metrics,
+    pub makespan_s: f64,
+    pub distinct_fingerprints: usize,
+    /// Frozen Programs actually built (== distinct fingerprints when
+    /// batching, == requests when not).
+    pub programs_built: u64,
+    pub failovers: u64,
+    pub retired: u64,
+    pub added: u64,
+    /// Final composition (post-scenario), parseable by `Cluster::parse`.
+    pub cluster_spec: String,
+    pub policy: Policy,
+    pub per_target: Vec<TargetStat>,
+}
+
+impl FleetRun {
+    pub fn completed(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.outcomes.len() as f64 / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Latency quantile (upper histogram-bucket bound) over all
+    /// completed requests.
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        self.metrics
+            .histogram_quantiles("request_latency_s", &[q])
+            .map(|v| v[0])
+            .unwrap_or(0.0)
+    }
+}
+
+/// Run one request solo on one member — the same execution recipe the
+/// serving loop uses (same fused depth floor), so a fleet outcome of
+/// the same `(member, app, size, steps)` must match this checksum
+/// bit-for-bit. Returns `(service_s, checksum)`.
+pub fn solo_run(
+    member: &FleetTarget,
+    app: FleetApp,
+    size_gb: f64,
+    steps: usize,
+) -> crate::Result<(f64, u64)> {
+    let scale = model_scale(app.base_bytes(), size_gb);
+    let mut b = ProgramBuilder::new();
+    let chain = app.declare_with_chain(&mut b, scale);
+    let program = Arc::new(b.freeze()?);
+    let done = execute(member, app, scale, steps, &program, chain, false);
+    Ok((done.service_s, done.checksum))
+}
+
+/// One executed attempt.
+struct Attempt {
+    service_s: f64,
+    checksum: u64,
+    oom: bool,
+    metrics: Metrics,
+    trace: Vec<crate::exec::timeline::TraceEvent>,
+}
+
+fn execute(
+    member: &FleetTarget,
+    app: FleetApp,
+    scale: u64,
+    steps: usize,
+    program: &Arc<Program>,
+    chain: ChainId,
+    trace: bool,
+) -> Attempt {
+    let cfg = member.config(app.calib());
+    let mut sess = Session::new(program.clone(), &cfg);
+    if trace {
+        sess.metrics_mut().enable_trace();
+    }
+    app.initialise(scale, &mut sess);
+    sess.flush();
+    sess.reset_metrics();
+    sess.set_cyclic_phase(true);
+    let k = member.fuse.max(FUSE_FLOOR) as usize;
+    sess.replay_fused(chain, steps, k);
+    sess.flush();
+    let checksum = store_checksum(&sess);
+    let oom = sess.oom();
+    let mut metrics = sess.metrics().clone();
+    let trace = metrics.take_trace_events();
+    Attempt {
+        service_s: metrics.elapsed_s,
+        checksum,
+        oom,
+        metrics,
+        trace,
+    }
+}
+
+/// The frozen-Program registry: one Program per `(app, scale)` when
+/// batching, a fresh freeze per request when not.
+struct Programs {
+    batching: bool,
+    map: HashMap<(FleetApp, u64), (Arc<Program>, ChainId)>,
+    freeze_total_s: f64,
+    built: u64,
+}
+
+impl Programs {
+    fn get(&mut self, app: FleetApp, scale: u64) -> crate::Result<(Arc<Program>, ChainId)> {
+        if self.batching {
+            if let Some((p, c)) = self.map.get(&(app, scale)) {
+                return Ok((p.clone(), *c));
+            }
+        }
+        let mut b = ProgramBuilder::new();
+        let chain = app.declare_with_chain(&mut b, scale);
+        let program = Arc::new(b.freeze()?);
+        self.freeze_total_s += program.freeze_s();
+        self.built += 1;
+        if self.batching {
+            self.map.insert((app, scale), (program.clone(), chain));
+        }
+        Ok((program, chain))
+    }
+}
+
+/// One target's serving state.
+struct Server {
+    member: FleetTarget,
+    free_at: f64,
+    available_from: f64,
+    busy_s: f64,
+    requests: u64,
+    degraded: bool,
+    retired: bool,
+    metrics: Metrics,
+}
+
+impl Server {
+    fn new(member: FleetTarget, available_from: f64) -> Server {
+        Server {
+            member,
+            free_at: available_from,
+            available_from,
+            busy_s: 0.0,
+            requests: 0,
+            degraded: false,
+            retired: false,
+            metrics: Metrics::default(),
+        }
+    }
+
+    /// Earliest start this target could give a request released at `rel`.
+    fn earliest(&self, rel: f64) -> f64 {
+        rel.max(self.free_at).max(self.available_from)
+    }
+}
+
+/// Topology fallback for the best-fit estimate: bytes moved over the
+/// bottleneck bandwidth (fastest-tier bandwidth when the problem is
+/// resident, the slowest crossing link when it streams), split across
+/// ranks. A placement heuristic only — real service is modelled by the
+/// engine at dispatch.
+fn heuristic_service_s(member: &FleetTarget, bytes: u64, steps: usize) -> f64 {
+    let topo = member.topology();
+    let moved_gb = bytes as f64 * steps as f64 / 1e9;
+    let fastest = topo.fastest();
+    let resident = fastest.capacity_bytes.is_none_or(|c| bytes <= c);
+    let bw = if resident {
+        fastest.bw_gbs
+    } else {
+        topo.links()
+            .iter()
+            .map(|l| l.bw_gbs)
+            .fold(fastest.bw_gbs, f64::min)
+    };
+    moved_gb / bw.max(1e-9) / member.target.ranks().max(1) as f64
+}
+
+/// Serve `workload` on `cluster`. Deterministic: the same
+/// (cluster, workload, opts) triple yields bit-identical placements,
+/// latencies and checksums.
+pub fn serve(cluster: &Cluster, workload: &Workload, opts: &FleetOpts) -> crate::Result<FleetRun> {
+    crate::ensure!(!cluster.is_empty(), "cannot serve on an empty fleet");
+    crate::ensure!(
+        workload.steps >= 2,
+        "fleet requests replay fused (>= 2 steps) so freeze-time analysis is \
+         shared across tenants; got steps={}",
+        workload.steps
+    );
+
+    crate::obs::reset();
+    let root = crate::obs::span("fleet");
+    root.field("targets", cluster.len());
+    root.field("requests", workload.total());
+    root.field("policy", opts.policy.name());
+
+    let mut servers: Vec<Server> = cluster
+        .targets
+        .iter()
+        .map(|m| Server::new(m.clone(), 0.0))
+        .collect();
+    let mut scenarios: Vec<(Scenario, bool)> = {
+        let mut v: Vec<_> = opts.scenarios.iter().map(|s| (s.clone(), false)).collect();
+        v.sort_by(|a, b| a.0.at_s().total_cmp(&b.0.at_s()));
+        v
+    };
+
+    // Split the trace into released requests and closed-loop follow-ups
+    // (released at their predecessor's completion).
+    let mut ready: Vec<Request> = Vec::new();
+    let mut held: Vec<std::collections::VecDeque<Request>> =
+        (0..workload.tenants).map(|_| Default::default()).collect();
+    for r in workload.generate() {
+        if r.seq == 0 || r.arrival_s > 0.0 {
+            ready.push(r);
+        } else {
+            held[r.tenant as usize].push_back(r);
+        }
+    }
+
+    let mut programs = Programs {
+        batching: opts.batching,
+        map: HashMap::new(),
+        freeze_total_s: 0.0,
+        built: 0,
+    };
+    let mut estimates: HashMap<(u64, usize), f64> = HashMap::new();
+    let mut aggregate = Metrics::default();
+    if opts.trace {
+        aggregate.enable_trace();
+    }
+    let mut outcomes: Vec<RequestOutcome> = Vec::new();
+    let mut failovers = 0u64;
+    let mut retired = 0u64;
+    let mut added = 0u64;
+
+    while !ready.is_empty() {
+        // Earliest release wins, ties to generation order.
+        let next = ready
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id))
+            })
+            .map(|(i, _)| i)
+            .expect("ready is non-empty");
+        let req = ready.remove(next);
+
+        // Elasticity scenarios due by this release apply before
+        // placement (rank failures apply at dispatch — they intercept
+        // the request whose service spans them).
+        for (sc, applied) in scenarios.iter_mut() {
+            if *applied || sc.at_s() > req.arrival_s {
+                continue;
+            }
+            match sc {
+                Scenario::ScaleUp { member, at_s } => {
+                    let m = FleetTarget::parse(servers.len(), member)?;
+                    servers.push(Server::new(m, *at_s));
+                    added += 1;
+                    *applied = true;
+                }
+                Scenario::ScaleDown { target, .. } => {
+                    crate::ensure!(
+                        *target < servers.len(),
+                        "scale-down of unknown target {target}"
+                    );
+                    if !servers[*target].retired {
+                        servers[*target].retired = true;
+                        retired += 1;
+                    }
+                    *applied = true;
+                }
+                Scenario::RankFailure { .. } => {}
+            }
+        }
+
+        let scale = model_scale(req.app.base_bytes(), req.size_gb);
+        let (program, chain) = programs.get(req.app, scale)?;
+        let fingerprint = program.fingerprint();
+        let bytes = program.problem_bytes();
+
+        let mut release = req.arrival_s;
+        let mut retried_req = false;
+        let outcome = 'placement: loop {
+            // Eligible targets: live and big enough for the problem.
+            let mut eligible: Vec<usize> = servers
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| !s.retired && s.member.topology().fits(bytes))
+                .map(|(i, _)| i)
+                .collect();
+            crate::ensure!(
+                !eligible.is_empty(),
+                "no serving target left that fits request {} ({} GB)",
+                req.id,
+                req.size_gb
+            );
+            let pick = match opts.policy {
+                Policy::FirstFit => eligible
+                    .iter()
+                    .copied()
+                    .find(|&i| servers[i].earliest(release) <= release)
+                    .unwrap_or_else(|| {
+                        eligible.sort_by(|&a, &b| {
+                            servers[a]
+                                .earliest(release)
+                                .total_cmp(&servers[b].earliest(release))
+                                .then(a.cmp(&b))
+                        });
+                        eligible[0]
+                    }),
+                Policy::BestFit => {
+                    eligible.sort_by(|&a, &b| {
+                        let done = |i: usize| {
+                            let s = &servers[i];
+                            let est = estimates.get(&(fingerprint, i)).copied().unwrap_or_else(
+                                || heuristic_service_s(&s.member, bytes, req.steps),
+                            );
+                            s.earliest(release) + est
+                        };
+                        done(a).total_cmp(&done(b)).then(a.cmp(&b))
+                    });
+                    eligible[0]
+                }
+                Policy::TierAware => {
+                    eligible.sort_by(|&a, &b| {
+                        let class = |i: usize| -> (u8, f64, usize) {
+                            let s = &servers[i];
+                            let resident = s
+                                .member
+                                .topology()
+                                .fastest()
+                                .capacity_bytes
+                                .is_none_or(|c| bytes <= c);
+                            (u8::from(!resident), s.earliest(release), i)
+                        };
+                        class(a).partial_cmp(&class(b)).expect("finite times")
+                    });
+                    eligible[0]
+                }
+            };
+
+            let start = servers[pick].earliest(release);
+            let sp = crate::obs::span("request");
+            sp.field("id", req.id);
+            sp.field("tenant", req.tenant);
+            sp.field("app", req.app.name());
+            sp.field("target", pick);
+            sp.field("retry", u8::from(retried_req));
+            let attempt = execute(
+                &servers[pick].member,
+                req.app,
+                scale,
+                req.steps,
+                &program,
+                chain,
+                opts.trace,
+            );
+            drop(sp);
+            estimates.insert((fingerprint, pick), attempt.service_s);
+            let end = start + attempt.service_s;
+
+            // A rank failure whose instant lands inside (or before) this
+            // attempt's service interval intercepts it.
+            let failure = scenarios.iter_mut().find(|(sc, applied)| {
+                matches!(sc, Scenario::RankFailure { target, .. } if *target == pick)
+                    && !*applied
+                    && sc.at_s() < end
+            });
+            if let Some((sc, applied)) = failure {
+                let at_s = sc.at_s();
+                *applied = true;
+                let wasted = (at_s - start).max(0.0);
+                if wasted > 0.0 {
+                    // The attempt ran until the failure: its modelled
+                    // work happened, so its counters (and timeline)
+                    // fold in; the checksum is discarded with the rerun.
+                    servers[pick].busy_s += wasted;
+                    servers[pick].metrics.merge(&attempt.metrics);
+                    aggregate.merge(&attempt.metrics);
+                    aggregate.absorb_trace_events(&attempt.trace, start, &format!("t{pick}:"));
+                    failovers += 1;
+                    retried_req = true;
+                }
+                match servers[pick].member.degrade() {
+                    Ok(m) => {
+                        servers[pick].member = m;
+                        servers[pick].degraded = true;
+                        // the degraded engine is a different platform;
+                        // stale observations would mislead best-fit
+                        estimates.retain(|(_, i), _| *i != pick);
+                    }
+                    Err(_) => {
+                        // Unsharded: nothing to re-decompose onto —
+                        // retire the target and place elsewhere.
+                        servers[pick].retired = true;
+                        retired += 1;
+                        if wasted == 0.0 {
+                            failovers += 1;
+                            retried_req = true;
+                        }
+                    }
+                }
+                servers[pick].free_at = at_s.max(servers[pick].free_at);
+                release = release.max(at_s);
+                continue 'placement;
+            }
+
+            servers[pick].free_at = end;
+            servers[pick].busy_s += attempt.service_s;
+            servers[pick].requests += 1;
+            servers[pick].metrics.merge(&attempt.metrics);
+            aggregate.merge(&attempt.metrics);
+            aggregate.absorb_trace_events(&attempt.trace, start, &format!("t{pick}:"));
+            aggregate
+                .obs
+                .record("request_latency_s", end - req.arrival_s);
+            break RequestOutcome {
+                id: req.id,
+                tenant: req.tenant,
+                app: req.app,
+                size_gb: req.size_gb,
+                fingerprint,
+                target: pick,
+                arrival_s: req.arrival_s,
+                start_s: start,
+                end_s: end,
+                service_s: attempt.service_s,
+                latency_s: end - req.arrival_s,
+                checksum: attempt.checksum,
+                oom: attempt.oom,
+                retried: retried_req,
+            };
+        };
+
+        // Closed loop: completion releases the tenant's next request.
+        if let Some(mut follow) = held[req.tenant as usize].pop_front() {
+            follow.arrival_s = outcome.end_s;
+            ready.push(follow);
+        }
+        outcomes.push(outcome);
+    }
+
+    // Scenarios after the last dispatch still shape the final cluster.
+    for (sc, applied) in scenarios.iter_mut().filter(|(_, a)| !*a) {
+        *applied = true;
+        match sc {
+            Scenario::ScaleUp { member, at_s } => {
+                let m = FleetTarget::parse(servers.len(), member)?;
+                servers.push(Server::new(m, *at_s));
+                added += 1;
+            }
+            Scenario::ScaleDown { target, .. } | Scenario::RankFailure { target, .. }
+                if *target >= servers.len() =>
+            {
+                crate::bail!("scenario names unknown target {target}")
+            }
+            Scenario::ScaleDown { target, .. } => {
+                if !servers[*target].retired {
+                    servers[*target].retired = true;
+                    retired += 1;
+                }
+            }
+            Scenario::RankFailure { target, .. } => match servers[*target].member.degrade() {
+                Ok(m) => {
+                    servers[*target].member = m;
+                    servers[*target].degraded = true;
+                }
+                Err(_) => {
+                    if !servers[*target].retired {
+                        servers[*target].retired = true;
+                        retired += 1;
+                    }
+                }
+            },
+        }
+    }
+
+    drop(root);
+    let st = crate::obs::span_stats();
+    aggregate.spans_recorded = st.total;
+    aggregate.span_max_depth = st.max_depth;
+
+    let makespan_s = outcomes.iter().map(|o| o.end_s).fold(0.0f64, f64::max);
+    aggregate.elapsed_s = makespan_s;
+    aggregate.program_freeze_s = programs.freeze_total_s;
+    let distinct: BTreeSet<u64> = outcomes.iter().map(|o| o.fingerprint).collect();
+
+    let per_target: Vec<TargetStat> = servers
+        .iter()
+        .map(|s| TargetStat {
+            id: s.member.id,
+            spec: s.member.spec.clone(),
+            requests: s.requests,
+            busy_s: s.busy_s,
+            util: if makespan_s > 0.0 {
+                (s.busy_s / makespan_s).min(1.0)
+            } else {
+                0.0
+            },
+            bound: s.metrics.bound().name().to_string(),
+            degraded: s.degraded,
+            retired: s.retired,
+        })
+        .collect();
+    let members: Vec<String> = servers
+        .iter()
+        .filter(|s| !s.retired)
+        .map(|s| s.member.spec.clone())
+        .collect();
+
+    Ok(FleetRun {
+        outcomes,
+        metrics: aggregate,
+        makespan_s,
+        distinct_fingerprints: distinct.len(),
+        programs_built: programs.built,
+        failovers,
+        retired,
+        added,
+        cluster_spec: format!("fleet:{}", members.join(",")),
+        policy: opts.policy,
+        per_target,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::workload::Workload;
+
+    fn tiny(spec: &str, workload: &str, opts: FleetOpts) -> FleetRun {
+        let cluster = Cluster::parse(spec).unwrap();
+        let w = Workload::parse(workload).unwrap();
+        serve(&cluster, &w, &opts).unwrap()
+    }
+
+    #[test]
+    fn policy_and_scenario_parse() {
+        assert_eq!(Policy::parse("best-fit").unwrap(), Policy::BestFit);
+        assert!(Policy::parse("round-robin").is_err());
+        assert_eq!(
+            Scenario::parse("fail:0@0.5").unwrap(),
+            Scenario::RankFailure { target: 0, at_s: 0.5 }
+        );
+        let up = Scenario::parse("up:gpu-explicit:pcie:cyclic@1.5").unwrap();
+        assert_eq!(
+            up,
+            Scenario::ScaleUp { member: "gpu-explicit:pcie:cyclic".into(), at_s: 1.5 }
+        );
+        assert!(Scenario::parse("fail:0").is_err());
+        assert!(Scenario::parse("up:no-such-platform@1").is_err());
+        assert!(Scenario::parse("explode:0@1").is_err());
+    }
+
+    #[test]
+    fn closed_loop_batched_serving_shares_one_analysis() {
+        let run = tiny(
+            "fleet:gpu-explicit:pcie:cyclic*2",
+            "tenants=4,reqs=1,apps=cloverleaf2d,sizes=0.005,steps=4,seed=3",
+            FleetOpts::default(),
+        );
+        assert_eq!(run.completed(), 4);
+        assert_eq!(run.distinct_fingerprints, 1);
+        assert_eq!(run.programs_built, 1, "batching freezes once");
+        assert_eq!(
+            run.metrics.analysis_builds, 1,
+            "fused analysis memoised on the shared Program"
+        );
+        assert!(run.metrics.analysis_reuse_hits > 0);
+        // identical requests on identical targets: identical numerics
+        let c0 = run.outcomes[0].checksum;
+        assert!(run.outcomes.iter().all(|o| o.checksum == c0));
+        // two equal targets split four equal requests two apiece
+        assert!(run.per_target.iter().all(|t| t.requests == 2), "{:?}", run.per_target);
+        assert!(run.makespan_s > 0.0 && run.throughput_rps() > 0.0);
+        assert!(run.latency_quantile(0.99) >= run.latency_quantile(0.5));
+    }
+
+    #[test]
+    fn policies_place_on_every_live_target() {
+        for policy in [Policy::FirstFit, Policy::BestFit, Policy::TierAware] {
+            let run = tiny(
+                "fleet:gpu-explicit:pcie:cyclic,gpu-explicit:nvlink:cyclic",
+                "tenants=4,reqs=1,apps=cloverleaf2d,sizes=0.005,steps=4,seed=5",
+                FleetOpts { policy, ..FleetOpts::default() },
+            );
+            assert_eq!(run.completed(), 4, "{:?}", policy);
+            assert!(
+                run.per_target.iter().all(|t| t.requests > 0),
+                "{:?} starved a target: {:?}",
+                policy,
+                run.per_target
+            );
+        }
+    }
+
+    #[test]
+    fn elasticity_scenarios_reshape_the_cluster() {
+        let run = tiny(
+            "fleet:gpu-explicit:pcie:cyclic*2",
+            "tenants=6,reqs=1,apps=cloverleaf2d,sizes=0.005,steps=4,arrival=open@1000,seed=9",
+            FleetOpts {
+                scenarios: vec![
+                    Scenario::parse("up:gpu-explicit:nvlink:cyclic@0.0001").unwrap(),
+                    Scenario::parse("down:0@0.001").unwrap(),
+                ],
+                ..FleetOpts::default()
+            },
+        );
+        assert_eq!(run.completed(), 6);
+        assert_eq!(run.added, 1);
+        assert_eq!(run.retired, 1);
+        assert_eq!(run.per_target.len(), 3);
+        assert!(run.per_target[0].retired);
+        // the final spec drops the retired member, keeps the new one
+        assert_eq!(
+            run.cluster_spec,
+            "fleet:gpu-explicit:pcie:cyclic,gpu-explicit:nvlink:cyclic"
+        );
+    }
+}

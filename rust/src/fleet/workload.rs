@@ -1,0 +1,434 @@
+//! Deterministic seeded workload generation: who asks for what, when.
+//!
+//! A [`Workload`] describes a population of tenants, each issuing
+//! requests drawn (seeded, reproducibly) from an app × size menu, under
+//! an open-loop arrival process (global Poisson stream at a fixed rate)
+//! or a closed loop (each tenant issues its next request the moment the
+//! previous one completes). Same seed ⇒ bit-identical request trace —
+//! the property `tests/prop_fleet.rs` pins.
+//!
+//! Spec grammar (`--workload`): comma-separated `key=value` pairs,
+//! list values joined with `|`:
+//!
+//! ```text
+//! tenants=8,reqs=2,apps=cloverleaf2d|opensbli,sizes=0.01|0.02,steps=4,arrival=open@200,seed=7
+//! ```
+
+use crate::program::{ChainId, ProgramBuilder};
+
+/// The paper applications a fleet request can run. Grids are fixed and
+/// small (real numerics, modelled bytes scaled by problem size) so a
+/// serving trace of dozens of requests stays test-sized; two requests
+/// with the same `(app, size)` freeze byte-identical Programs and so
+/// share one fingerprint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FleetApp {
+    CloverLeaf2D,
+    CloverLeaf3D,
+    OpenSbli,
+}
+
+/// CloverLeaf 2D fleet grid.
+pub const CL2D_GRID: (usize, usize) = (8, 256);
+/// CloverLeaf 3D fleet grid.
+pub const CL3D_GRID: [usize; 3] = [8, 8, 64];
+/// OpenSBLI (tall-z) fleet grid and steps-per-chain.
+pub const SBLI_GRID: [usize; 3] = [16, 16, 96];
+pub const SBLI_STEPS_PER_CHAIN: usize = 2;
+
+impl FleetApp {
+    pub fn parse(s: &str) -> crate::Result<FleetApp> {
+        match s {
+            "cloverleaf2d" | "cl2d" => Ok(FleetApp::CloverLeaf2D),
+            "cloverleaf3d" | "cl3d" => Ok(FleetApp::CloverLeaf3D),
+            "opensbli" | "sbli" => Ok(FleetApp::OpenSbli),
+            other => crate::bail!(
+                "unknown fleet app {other:?} (cloverleaf2d|cloverleaf3d|opensbli)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetApp::CloverLeaf2D => "cloverleaf2d",
+            FleetApp::CloverLeaf3D => "cloverleaf3d",
+            FleetApp::OpenSbli => "opensbli",
+        }
+    }
+
+    /// Modelled bytes of this app's fleet grid at `model_scale = 1`.
+    pub fn base_bytes(&self) -> u64 {
+        crate::bench_support::base_bytes(|b| {
+            self.declare(b, 1);
+        })
+    }
+
+    /// Declare this app's fleet grid into a builder at `scale` and
+    /// record its fixed-`dt` step chain — the record-once half every
+    /// same-fingerprint tenant shares.
+    pub fn declare_with_chain(&self, b: &mut ProgramBuilder, scale: u64) -> ChainId {
+        match self {
+            FleetApp::CloverLeaf2D => {
+                let mut app =
+                    crate::apps::cloverleaf2d::CloverLeaf2D::new(b, CL2D_GRID.0, CL2D_GRID.1, scale);
+                app.record_step_chain(b)
+            }
+            FleetApp::CloverLeaf3D => {
+                let mut app = crate::apps::cloverleaf3d::CloverLeaf3D::new(
+                    b,
+                    CL3D_GRID[0],
+                    CL3D_GRID[1],
+                    CL3D_GRID[2],
+                    scale,
+                );
+                app.record_step_chain(b)
+            }
+            FleetApp::OpenSbli => {
+                let mut app = crate::apps::opensbli::OpenSbli::new_aniso(
+                    b,
+                    SBLI_GRID,
+                    SBLI_STEPS_PER_CHAIN,
+                    scale,
+                );
+                app.record_step_chain(b)
+            }
+        }
+    }
+
+    /// Declarations only (for [`FleetApp::base_bytes`] and the
+    /// per-request initialiser, which needs the dataset handles but not
+    /// the chain).
+    fn declare(&self, b: &mut ProgramBuilder, scale: u64) {
+        match self {
+            FleetApp::CloverLeaf2D => {
+                crate::apps::cloverleaf2d::CloverLeaf2D::new(b, CL2D_GRID.0, CL2D_GRID.1, scale);
+            }
+            FleetApp::CloverLeaf3D => {
+                crate::apps::cloverleaf3d::CloverLeaf3D::new(
+                    b,
+                    CL3D_GRID[0],
+                    CL3D_GRID[1],
+                    CL3D_GRID[2],
+                    scale,
+                );
+            }
+            FleetApp::OpenSbli => {
+                crate::apps::opensbli::OpenSbli::new_aniso(b, SBLI_GRID, SBLI_STEPS_PER_CHAIN, scale);
+            }
+        }
+    }
+
+    /// Write this app's initial fields into a session bound to a
+    /// Program frozen from [`FleetApp::declare_with_chain`] at the same
+    /// `scale`. Declaration order is deterministic, so a throwaway
+    /// builder reproduces the dataset handles of the shared Program.
+    pub fn initialise(&self, scale: u64, sess: &mut crate::program::Session) {
+        let mut b = ProgramBuilder::new();
+        match self {
+            FleetApp::CloverLeaf2D => {
+                let app = crate::apps::cloverleaf2d::CloverLeaf2D::new(
+                    &mut b,
+                    CL2D_GRID.0,
+                    CL2D_GRID.1,
+                    scale,
+                );
+                app.initialise(sess);
+            }
+            FleetApp::CloverLeaf3D => {
+                let app = crate::apps::cloverleaf3d::CloverLeaf3D::new(
+                    &mut b,
+                    CL3D_GRID[0],
+                    CL3D_GRID[1],
+                    CL3D_GRID[2],
+                    scale,
+                );
+                app.initialise(sess);
+            }
+            FleetApp::OpenSbli => {
+                let app = crate::apps::opensbli::OpenSbli::new_aniso(
+                    &mut b,
+                    SBLI_GRID,
+                    SBLI_STEPS_PER_CHAIN,
+                    scale,
+                );
+                app.initialise(sess);
+            }
+        }
+    }
+
+    /// The app's memory-model calibration.
+    pub fn calib(&self) -> crate::memory::AppCalib {
+        match self {
+            FleetApp::CloverLeaf2D => crate::memory::AppCalib::CLOVERLEAF_2D,
+            FleetApp::CloverLeaf3D => crate::memory::AppCalib::CLOVERLEAF_3D,
+            FleetApp::OpenSbli => crate::memory::AppCalib::OPENSBLI,
+        }
+    }
+}
+
+/// The arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Open loop: one global Poisson stream at `rate_rps` requests per
+    /// modelled second; tenants take arrivals round-robin.
+    Open { rate_rps: f64 },
+    /// Closed loop: each tenant issues request `j + 1` at the modelled
+    /// completion instant of request `j` (zero think time).
+    Closed,
+}
+
+/// One serving request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Global id (generation order; ties in the event loop break on it).
+    pub id: u32,
+    pub tenant: u32,
+    /// Index within the tenant's sequence.
+    pub seq: u32,
+    pub app: FleetApp,
+    pub size_gb: f64,
+    /// Replay steps of the recorded step chain.
+    pub steps: usize,
+    /// Absolute modelled arrival. Closed-loop requests with `seq > 0`
+    /// carry 0 here; the scheduler releases them at the predecessor's
+    /// completion.
+    pub arrival_s: f64,
+}
+
+/// A deterministic request-trace generator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub tenants: u32,
+    /// Requests per tenant.
+    pub per_tenant: u32,
+    pub apps: Vec<FleetApp>,
+    pub sizes_gb: Vec<f64>,
+    pub steps: usize,
+    pub arrival: Arrival,
+    pub seed: u64,
+}
+
+impl Default for Workload {
+    fn default() -> Self {
+        Workload {
+            tenants: 4,
+            per_tenant: 1,
+            apps: vec![FleetApp::CloverLeaf2D],
+            sizes_gb: vec![0.01],
+            steps: 4,
+            arrival: Arrival::Closed,
+            seed: 0xF1EE7,
+        }
+    }
+}
+
+impl Workload {
+    /// Parse the `--workload` grammar; absent keys keep their defaults,
+    /// an empty spec is the default workload.
+    pub fn parse(spec: &str) -> crate::Result<Workload> {
+        let mut w = Workload::default();
+        for pair in spec.split(',').filter(|p| !p.is_empty()) {
+            let Some((key, val)) = pair.split_once('=') else {
+                crate::bail!("bad workload token {pair:?} (expected key=value)");
+            };
+            let num = |what: &str| -> crate::Result<u32> {
+                val.parse::<u32>()
+                    .ok()
+                    .filter(|n| *n >= 1)
+                    .ok_or_else(|| crate::err!("bad workload {what} {val:?} (expected >= 1)"))
+            };
+            match key {
+                "tenants" => w.tenants = num("tenant count")?,
+                "reqs" => w.per_tenant = num("request count")?,
+                "steps" => w.steps = num("step count")? as usize,
+                "seed" => {
+                    w.seed = val
+                        .parse()
+                        .map_err(|_| crate::err!("bad workload seed {val:?}"))?
+                }
+                "apps" => {
+                    w.apps = val
+                        .split('|')
+                        .map(FleetApp::parse)
+                        .collect::<crate::Result<Vec<_>>>()?;
+                    crate::ensure!(!w.apps.is_empty(), "empty workload app list");
+                }
+                "sizes" => {
+                    w.sizes_gb = val
+                        .split('|')
+                        .map(|s| {
+                            s.parse::<f64>()
+                                .ok()
+                                .filter(|g| *g > 0.0 && g.is_finite())
+                                .ok_or_else(|| crate::err!("bad workload size {s:?} (GB > 0)"))
+                        })
+                        .collect::<crate::Result<Vec<_>>>()?;
+                }
+                "arrival" => {
+                    w.arrival = match val.split_once('@') {
+                        None if val == "closed" => Arrival::Closed,
+                        Some(("open", rate)) => {
+                            let r: f64 = rate.parse().ok().filter(|r| *r > 0.0).ok_or_else(
+                                || crate::err!("bad open-loop rate {rate:?} (rps > 0)"),
+                            )?;
+                            Arrival::Open { rate_rps: r }
+                        }
+                        _ => crate::bail!(
+                            "bad arrival {val:?} (expected closed or open@<rate_rps>)"
+                        ),
+                    }
+                }
+                other => crate::bail!(
+                    "unknown workload key {other:?} \
+                     (tenants|reqs|apps|sizes|steps|arrival|seed)"
+                ),
+            }
+        }
+        crate::ensure!(
+            w.tenants as u64 * w.per_tenant as u64 <= 4096,
+            "workload too large (max 4096 requests)"
+        );
+        Ok(w)
+    }
+
+    /// Total requests in the trace.
+    pub fn total(&self) -> u32 {
+        self.tenants * self.per_tenant
+    }
+
+    /// Generate the request trace. Deterministic: the same spec (seed
+    /// included) yields a bit-identical `Vec<Request>`.
+    pub fn generate(&self) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed);
+        let mut out = Vec::with_capacity(self.total() as usize);
+        // Requests are minted in global arrival order, tenants
+        // round-robin, so open-loop inter-arrival gaps accumulate over
+        // one stream the way a shared front door sees them.
+        let mut clock = 0.0f64;
+        for g in 0..self.total() {
+            let tenant = g % self.tenants;
+            let seq = g / self.tenants;
+            let app = self.apps[rng.pick(self.apps.len())];
+            let size_gb = self.sizes_gb[rng.pick(self.sizes_gb.len())];
+            let arrival_s = match self.arrival {
+                Arrival::Open { rate_rps } => {
+                    clock += rng.exp(rate_rps);
+                    clock
+                }
+                Arrival::Closed => 0.0,
+            };
+            out.push(Request {
+                id: g,
+                tenant,
+                seq,
+                app,
+                size_gb,
+                steps: self.steps,
+                arrival_s,
+            });
+        }
+        out
+    }
+}
+
+/// xorshift64* — the same deterministic-seeded idiom the tuner search
+/// uses; good enough spread for menu picks and exponential gaps, zero
+/// dependencies.
+#[derive(Debug, Clone)]
+pub(crate) struct Rng(u64);
+
+impl Rng {
+    pub(crate) fn new(seed: u64) -> Self {
+        // a zero state would be absorbing; fold in a non-zero constant
+        Rng(seed ^ 0x9E37_79B9_7F4A_7C15)
+    }
+
+    pub(crate) fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub(crate) fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform index into a menu of `n` options.
+    pub(crate) fn pick(&mut self, n: usize) -> usize {
+        (self.next_u64() % n.max(1) as u64) as usize
+    }
+
+    /// Exponential inter-arrival gap at `rate` events per second.
+    pub(crate) fn exp(&mut self, rate: f64) -> f64 {
+        -(1.0 - self.f64()).ln() / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_trace() {
+        let w = Workload::parse(
+            "tenants=3,reqs=2,apps=cloverleaf2d|opensbli,sizes=0.01|0.02,arrival=open@100,seed=42",
+        )
+        .unwrap();
+        let a = w.generate();
+        let b = w.generate();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 6);
+        // arrivals strictly increase along the global stream
+        for pair in a.windows(2) {
+            assert!(pair[1].arrival_s > pair[0].arrival_s);
+        }
+        // a different seed moves at least the arrival times
+        let mut w2 = w.clone();
+        w2.seed = 43;
+        assert_ne!(w2.generate(), a);
+    }
+
+    #[test]
+    fn closed_loop_releases_only_first_requests() {
+        let w = Workload::parse("tenants=2,reqs=3,seed=1").unwrap();
+        let trace = w.generate();
+        assert_eq!(trace.len(), 6);
+        assert!(trace.iter().all(|r| r.arrival_s == 0.0));
+        assert_eq!(trace.iter().filter(|r| r.seq == 0).count(), 2);
+    }
+
+    #[test]
+    fn spec_errors_are_caught() {
+        assert!(Workload::parse("tenants=0").is_err());
+        assert!(Workload::parse("nonsense").is_err());
+        assert!(Workload::parse("apps=quake").is_err());
+        assert!(Workload::parse("sizes=-1").is_err());
+        assert!(Workload::parse("arrival=open@0").is_err());
+        assert!(Workload::parse("arrival=sometimes").is_err());
+        assert!(Workload::parse("tenants=100,reqs=100").is_err());
+    }
+
+    #[test]
+    fn fleet_apps_declare_and_fingerprint_stably() {
+        for app in [FleetApp::CloverLeaf2D, FleetApp::CloverLeaf3D, FleetApp::OpenSbli] {
+            assert!(app.base_bytes() > 0, "{:?}", app);
+            let mut b = crate::program::ProgramBuilder::new();
+            let chain = app.declare_with_chain(&mut b, 2);
+            let p1 = b.freeze().unwrap();
+            assert!(!p1.chain(chain).loops.is_empty());
+            let mut b2 = crate::program::ProgramBuilder::new();
+            app.declare_with_chain(&mut b2, 2);
+            let p2 = b2.freeze().unwrap();
+            assert_eq!(
+                p1.fingerprint(),
+                p2.fingerprint(),
+                "same app+scale must share one fingerprint ({:?})",
+                app
+            );
+        }
+    }
+}

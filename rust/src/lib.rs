@@ -106,6 +106,25 @@
 //! against its tier/link peak from the [`topology::Topology`].
 //! `bench_support::telemetry` serialises the same numbers into
 //! `BENCH_<name>.json` trajectory records gated by `ops-oc bench-diff`.
+//!
+//! ## Fleet serving
+//!
+//! The [`fleet`] subsystem turns the single-run engine into a
+//! multi-tenant service: a declarative [`fleet::Cluster`] of
+//! heterogeneous targets (`fleet:` spec grammar with presets and
+//! `*<count>` multiplicities), a deterministic seeded
+//! [`fleet::Workload`] of tenant requests (open- and closed-loop
+//! arrivals), and a discrete-event scheduler ([`fleet::serve`]) with
+//! first-fit / best-fit / tier-aware placement. Identical-fingerprint
+//! requests share one frozen [`Program`] — freeze-time chain analysis
+//! and process-wide tuned plans are built once and hit from every
+//! other tenant — while rank-failure and scale-up/down
+//! [`fleet::Scenario`]s exercise re-decomposition mid-trace. Reports
+//! flow through the same surfaces as single runs: `fleet_*` keys in
+//! `--json`, a `fleet` span tree in `--spans`, per-request engine
+//! timelines on the serving clock in `--trace`, and
+//! `BENCH_fleet.json` trajectory points. CLI:
+//! `ops-oc fleet <spec> --workload …`.
 
 pub mod apps;
 pub mod bench_support;
@@ -113,6 +132,7 @@ pub mod coordinator;
 pub mod distributed;
 pub mod errors;
 pub mod exec;
+pub mod fleet;
 pub mod lazy;
 pub mod memory;
 pub mod obs;

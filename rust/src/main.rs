@@ -9,6 +9,9 @@
 //!   ops-oc run   --app opensbli --size-gb 800 \
 //!                --platform "tiers:hbm=16g@509.7+host=512g@11~0.00001+nvme=4t@6~0.00002"
 //!   ops-oc sweep --app opensbli --platform gpu-explicit:nvlink:cyclic:prefetch
+//!   ops-oc fleet fleet:tuned-pair \
+//!                --workload "tenants=8,apps=cloverleaf2d,sizes=0.01,steps=4" \
+//!                --policy best-fit --json   (multi-tenant serving simulation)
 //!   ops-oc list
 //!   ops-oc list-platforms                 (preset topology table + grammar)
 //!
@@ -75,7 +78,16 @@ struct Args {
     spans: Option<String>,
     bench_out: Option<String>,
     tol_pct: f64,
-    /// Positional arguments (the two trajectory files of `bench-diff`).
+    /// `fleet` workload spec (`tenants=8,apps=cloverleaf2d,…`).
+    workload: String,
+    /// `fleet` placement policy (first-fit | best-fit | tier-aware).
+    policy: String,
+    /// `fleet` failure/elasticity scenarios (repeatable `--scenario`).
+    scenarios: Vec<String>,
+    /// Disable `fleet` fingerprint batching (freeze per request).
+    no_batch: bool,
+    /// Positional arguments (the two trajectory files of `bench-diff`,
+    /// the cluster spec of `fleet`).
     extra: Vec<String>,
 }
 
@@ -96,17 +108,34 @@ fn parse_args() -> Args {
         spans: None,
         bench_out: None,
         tol_pct: 10.0,
+        workload: String::new(),
+        policy: "first-fit".into(),
+        scenarios: vec![],
+        no_batch: false,
         extra: vec![],
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
     while i < argv.len() {
         match argv[i].as_str() {
-            "run" | "sweep" | "list" | "list-platforms" | "bench-diff" | "help" | "--help"
-            | "-h" => a.cmd = argv[i].trim_start_matches('-').to_string(),
+            "run" | "sweep" | "fleet" | "list" | "list-platforms" | "bench-diff" | "help"
+            | "--help" | "-h" => a.cmd = argv[i].trim_start_matches('-').to_string(),
             "--list-platforms" => a.cmd = "list-platforms".into(),
             "--json" => a.json = true,
             "--tune" => a.tune = true,
+            "--no-batch" => a.no_batch = true,
+            str_flag @ ("--workload" | "--policy" | "--scenario") => {
+                i += 1;
+                let Some(v) = argv.get(i) else {
+                    eprintln!("missing value for {str_flag}");
+                    exit(2);
+                };
+                match str_flag {
+                    "--workload" => a.workload = v.clone(),
+                    "--policy" => a.policy = v.clone(),
+                    _ => a.scenarios.push(v.clone()),
+                }
+            }
             path_flag @ ("--trace" | "--spans" | "--bench-out") => {
                 i += 1;
                 let Some(v) = argv.get(i) else {
@@ -173,8 +202,9 @@ fn parse_args() -> Args {
                     _ => a.chain_steps = num(flag, v),
                 }
             }
-            // bench-diff takes two positional trajectory files
-            other if a.cmd == "bench-diff" && !other.starts_with('-') => {
+            // bench-diff takes two positional trajectory files; fleet
+            // takes its positional cluster spec
+            other if (a.cmd == "bench-diff" || a.cmd == "fleet") && !other.starts_with('-') => {
                 a.extra.push(other.to_string())
             }
             // a bare `xN` argument shards the platform (the spec-suffix
@@ -351,6 +381,14 @@ fn main() {
             println!("        [--spans PATH]   (hierarchical lifecycle-span tree, JSON)");
             println!("        [--bench-out F]  (append a trajectory point to F)");
             println!("  sweep --app A --platform P [--tune] [--json]  (problem-size sweep)");
+            println!("  fleet SPEC --workload W [--policy P] [--scenario S]… [--no-batch]");
+            println!("        [--json] [--spans PATH] [--trace PATH] [--bench-out F]");
+            println!("        (multi-tenant serving simulation on a cluster of targets;");
+            println!("         SPEC = fleet:<member,member*N,…> or a preset — small |");
+            println!("         hetero | sharded | tuned-pair; W = tenants=8,reqs=1,");
+            println!("         apps=cloverleaf2d|opensbli,sizes=0.01,steps=4,");
+            println!("         arrival=closed|open@RPS,seed=S; P = first-fit | best-fit |");
+            println!("         tier-aware; S = fail:<i>@t | up:<spec>@t | down:<i>@t)");
             println!("  bench-diff OLD NEW [--tol-pct T]   (compare two BENCH_*.json");
             println!("        trajectories; exit 1 when a makespan regressed > T%, default 10)");
             println!("  list                                          (apps + platform specs)");
@@ -463,6 +501,88 @@ fn main() {
                     &m,
                     oom,
                 );
+            }
+        }
+        "fleet" => {
+            let Some(spec) = a.extra.first() else {
+                eprintln!(
+                    "usage: ops-oc fleet <fleet:spec|preset> --workload \"tenants=8,…\" \
+                     [--policy P] [--scenario S]…"
+                );
+                exit(2);
+            };
+            let cluster = ops_oc::fleet::Cluster::parse(spec).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                exit(2);
+            });
+            let workload = ops_oc::fleet::Workload::parse(&a.workload).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                exit(2);
+            });
+            let policy = ops_oc::fleet::Policy::parse(&a.policy).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                exit(2);
+            });
+            let scenarios = a
+                .scenarios
+                .iter()
+                .map(|s| ops_oc::fleet::Scenario::parse(s))
+                .collect::<Result<Vec<_>, _>>()
+                .unwrap_or_else(|e| {
+                    eprintln!("{e}");
+                    exit(2);
+                });
+            let opts = ops_oc::fleet::FleetOpts {
+                policy,
+                batching: !a.no_batch,
+                scenarios,
+                trace: a.trace.is_some(),
+            };
+            let run = ops_oc::fleet::serve(&cluster, &workload, &opts).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                exit(1);
+            });
+            let spans = ops_oc::obs::snapshot_spans();
+            if let Some(path) = &a.trace {
+                let json = chrome_trace_json_with_spans(run.metrics.trace_events(), &spans);
+                if let Err(e) = std::fs::write(path, &json) {
+                    eprintln!("cannot write trace {path:?}: {e}");
+                    exit(1);
+                }
+                eprintln!(
+                    "wrote {} serving-timeline events to {path}",
+                    run.metrics.trace_events().len()
+                );
+            }
+            if let Some(path) = &a.spans {
+                let json = ops_oc::obs::spans_json(&spans);
+                if let Err(e) = std::fs::write(path, &json) {
+                    eprintln!("cannot write spans {path:?}: {e}");
+                    exit(1);
+                }
+                eprintln!("wrote {} lifecycle spans to {path}", spans.len());
+            }
+            if let Some(path) = &a.bench_out {
+                let key = format!("fleet|{}|{}|{}", spec, a.policy, a.workload);
+                let served_gb: f64 = run.outcomes.iter().map(|o| o.size_gb).sum();
+                let point = telemetry::point_json(
+                    &key,
+                    "fleet",
+                    &run.cluster_spec,
+                    served_gb,
+                    &run.metrics,
+                    run.outcomes.iter().any(|o| o.oom),
+                );
+                if let Err(e) = telemetry::append_point(path, &point) {
+                    eprintln!("cannot append trajectory point to {path:?}: {e}");
+                    exit(1);
+                }
+                eprintln!("appended trajectory point {key:?} to {path}");
+            }
+            if a.json {
+                println!("{}", ops_oc::fleet::fleet_json(&run));
+            } else {
+                print!("{}", ops_oc::fleet::summary(&run));
             }
         }
         "bench-diff" => {

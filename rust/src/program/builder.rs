@@ -443,7 +443,12 @@ impl Program {
     /// base chain under the same machinery.
     pub fn fused(&self, id: ChainId, k: u32) -> (Arc<FusedChain>, bool) {
         let k = k.max(1);
-        let mut memo = self.fused.lock().unwrap();
+        // Recover from poisoning: the memo is shared by every session
+        // (tenant) of this program, and a tenant panicking mid-build
+        // must not wedge it for the rest. Recovery is sound — the only
+        // write is the insert of a fully-built Arc after the build
+        // succeeds, so a poisoned map holds no partial entry.
+        let mut memo = self.fused.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(f) = memo.get(&(id.0, k)) {
             return (f.clone(), false);
         }
@@ -518,6 +523,39 @@ mod tests {
         assert!(p.fingerprint() != 0);
         assert!(p.freeze_s() >= 0.0);
         assert_eq!(p.problem_bytes(), 10 * 10 * 8);
+    }
+
+    #[test]
+    fn fused_memo_recovers_from_poisoning() {
+        let (mut b, blk, d, s) = small_builder();
+        let id = b.record_chain("step", |r| {
+            r.par_loop(
+                "w",
+                blk,
+                [(0, 8), (0, 8), (0, 1)],
+                kernel(|c| c.w(0, 0, 0, 1.0)),
+                vec![Arg::dat(d, s, Access::Write)],
+            );
+        });
+        let p = b.freeze().unwrap();
+        let (f1, built) = p.fused(id, 2);
+        assert!(built);
+        // Poison the memo the way a panicking tenant would: unwind
+        // while holding the guard (poisoning is per-mutex, not
+        // per-thread, so same-thread catch_unwind reproduces it).
+        let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = p.fused.lock().unwrap_or_else(|e| e.into_inner());
+            panic!("tenant panicked while holding the fused memo");
+        }));
+        assert!(poison.is_err());
+        assert!(p.fused.is_poisoned(), "the panic must actually poison");
+        // Other tenants of the shared program still hit the memo...
+        let (f2, built2) = p.fused(id, 2);
+        assert!(!built2, "memoised entry survives the poisoning");
+        assert!(Arc::ptr_eq(&f1, &f2));
+        // ...and can still build new depths.
+        let (_, built3) = p.fused(id, 3);
+        assert!(built3);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 
 use super::candidate::Candidate;
 use std::collections::HashMap;
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Mutex, MutexGuard, OnceLock};
 
 /// A finished tuning decision for one (chain, platform) pair.
 #[derive(Debug, Clone, Copy)]
@@ -39,21 +39,30 @@ fn cache() -> &'static Mutex<HashMap<Key, TunedChoice>> {
     CACHE.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
+/// Lock the cache, recovering from poisoning: the cache is shared by
+/// every tenant in the process, and a panicking candidate evaluation
+/// must not wedge it for everyone else. Recovery is sound because every
+/// write is a single `HashMap` insert of a fully-built value — a
+/// panicking holder can leave no half-written entry behind.
+fn locked() -> MutexGuard<'static, HashMap<Key, TunedChoice>> {
+    cache().lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Facade over the process-wide cache.
 pub struct TunedPlanCache;
 
 impl TunedPlanCache {
     pub fn get(key: Key) -> Option<TunedChoice> {
-        cache().lock().unwrap().get(&key).copied()
+        locked().get(&key).copied()
     }
 
     pub fn insert(key: Key, choice: TunedChoice) {
-        cache().lock().unwrap().insert(key, choice);
+        locked().insert(key, choice);
     }
 
     /// Number of cached choices (diagnostics/tests).
     pub fn len() -> usize {
-        cache().lock().unwrap().len()
+        locked().len()
     }
 }
 
@@ -82,5 +91,38 @@ mod tests {
         assert_eq!(got.candidate, c.candidate);
         assert_eq!(got.evals, 12);
         assert!(TunedPlanCache::len() >= 1);
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_for_other_tenants() {
+        let key = (0x5E1F_0001_u64, 0xBAD_u64);
+        let c = TunedChoice {
+            candidate: Candidate {
+                tiles: None,
+                slots: 3,
+                cyclic: false,
+                prefetch: false,
+                fuse: 1,
+            },
+            tuned_model_s: 0.5,
+            heuristic_model_s: 0.5,
+            evals: 1,
+        };
+        TunedPlanCache::insert(key, c);
+        // Poison the shared mutex the way a panicking candidate
+        // evaluation would: panic while holding the guard. Unwinding
+        // through a held guard poisons it even on the same thread.
+        let poison = std::panic::catch_unwind(|| {
+            let _guard = cache().lock().unwrap_or_else(|e| e.into_inner());
+            panic!("candidate evaluation panicked while holding the cache");
+        });
+        assert!(poison.is_err());
+        assert!(cache().is_poisoned(), "the panic must actually poison");
+        // Every other tenant still reads and writes through the facade.
+        let got = TunedPlanCache::get(key).expect("poisoning must not lose the cache");
+        assert_eq!(got.candidate, c.candidate);
+        let key2 = (0x5E1F_0002_u64, 0xBAD_u64);
+        TunedPlanCache::insert(key2, c);
+        assert!(TunedPlanCache::get(key2).is_some());
     }
 }

@@ -328,6 +328,109 @@ fn real_run_produces_a_parseable_record() {
     }
 }
 
+/// The pinned fleet-report schema (`ops-oc fleet --json`): every fixed
+/// key with its type. Per-target fields are a dynamic family covered by
+/// the prefix rule in [`assert_fleet_schema`].
+const FLEET_SCHEMA: &[(&str, &str)] = &[
+    ("fleet_spec", "str"),
+    ("policy", "str"),
+    ("fleet_targets", "num"),
+    ("fleet_requests", "num"),
+    ("fleet_completed", "num"),
+    ("fleet_distinct_fingerprints", "num"),
+    ("fleet_programs_built", "num"),
+    ("fleet_failovers", "num"),
+    ("fleet_retired", "num"),
+    ("fleet_added", "num"),
+    ("fleet_makespan_s", "num"),
+    ("fleet_throughput_rps", "num"),
+    ("p50_latency_s", "num"),
+    ("p99_latency_s", "num"),
+    ("mean_latency_s", "num"),
+    ("fleet_analysis_builds", "num"),
+    ("fleet_analysis_reuse_hits", "num"),
+    ("fleet_tune_evals", "num"),
+    ("fleet_tune_cache_hits", "num"),
+    ("fleet_program_freeze_s", "num"),
+    ("oom", "bool"),
+];
+
+fn assert_fleet_schema(rec: &BTreeMap<String, Val>) {
+    for (key, ty) in FLEET_SCHEMA {
+        let v = rec
+            .get(*key)
+            .unwrap_or_else(|| panic!("missing fleet key {key:?}"));
+        let got = match v {
+            Val::Str(_) => "str",
+            Val::Num(_) => "num",
+            Val::Bool(_) => "bool",
+        };
+        assert_eq!(&got, ty, "fleet key {key:?}");
+    }
+    // Beyond the fixed keys, only the per-target family is allowed:
+    // `fleet_target_<i>_*`, where spec/bound/state are strings and
+    // every other member (requests, util) is a non-negative number.
+    for (key, v) in rec {
+        if FLEET_SCHEMA.iter().any(|(k, _)| k == key) {
+            continue;
+        }
+        assert!(
+            key.starts_with("fleet_target_"),
+            "unexpected extra fleet key {key:?}: {:?}",
+            rec.keys().collect::<Vec<_>>()
+        );
+        let stringy = ["_spec", "_bound", "_state"].iter().any(|s| key.ends_with(s));
+        match v {
+            Val::Str(s) if stringy => {
+                if key.ends_with("_state") {
+                    assert!(
+                        ["live", "degraded", "retired"].contains(&s.as_str()),
+                        "{key} = {s:?}"
+                    );
+                }
+            }
+            Val::Num(u) if !stringy => assert!(*u >= 0.0, "{key} = {u}"),
+            v => panic!("{key}: {v:?}"),
+        }
+    }
+}
+
+#[test]
+fn fleet_report_roundtrips_and_schema_is_stable() {
+    use ops_oc::fleet::{fleet_json, serve, Cluster, FleetOpts, Workload};
+    let cluster = Cluster::parse("fleet:gpu-explicit:pcie:cyclic*2").unwrap();
+    let w = Workload::parse("tenants=3,reqs=1,sizes=0.005,steps=4,seed=6").unwrap();
+    let run = serve(&cluster, &w, &FleetOpts::default()).unwrap();
+    let rec = parse_flat(&fleet_json(&run));
+    assert_fleet_schema(&rec);
+    assert_eq!(rec["fleet_requests"], Val::Num(3.0));
+    assert_eq!(rec["fleet_completed"], Val::Num(3.0));
+    assert_eq!(rec["fleet_targets"], Val::Num(2.0));
+    assert_eq!(rec["policy"], Val::Str("first-fit".into()));
+    assert_eq!(rec["fleet_distinct_fingerprints"], Val::Num(1.0));
+    assert_eq!(rec["fleet_programs_built"], Val::Num(1.0));
+    assert_eq!(rec["oom"], Val::Bool(false));
+    assert_eq!(
+        rec["fleet_spec"],
+        Val::Str("fleet:gpu-explicit:pcie:cyclic,gpu-explicit:pcie:cyclic".into())
+    );
+    // quantiles are histogram upper bounds over a real latency series
+    match (&rec["p50_latency_s"], &rec["p99_latency_s"]) {
+        (Val::Num(p50), Val::Num(p99)) => {
+            assert!(*p50 > 0.0 && p99 >= p50, "p50={p50} p99={p99}")
+        }
+        v => panic!("{v:?}"),
+    }
+    // both per-target families are present and well-typed
+    for i in 0..2 {
+        assert!(rec.contains_key(&format!("fleet_target_{i}_util")));
+        assert_eq!(
+            rec[&format!("fleet_target_{i}_state")],
+            Val::Str("live".into())
+        );
+    }
+}
+
 #[test]
 fn three_tier_run_reports_topology_and_per_tier_utilisation() {
     use ops_oc::bench_support::run_cl2d_cfg;

@@ -1,0 +1,176 @@
+//! Property tests for the fleet serving layer:
+//!
+//! * **deterministic**: the same (cluster, workload, opts) triple
+//!   served twice yields bit-identical placements, start/end times,
+//!   latencies and checksums — across every placement policy;
+//! * **solo-exact**: every request's store checksum equals a fresh solo
+//!   run of the same (member, app, size, steps) — multi-tenancy and
+//!   queueing never perturb numerics;
+//! * **batching-invariant**: sharing one frozen Program per fingerprint
+//!   changes how often freeze-time work runs (once per fingerprint vs
+//!   once per request), never what any request computes or where it
+//!   lands;
+//! * **quantiles bracket**: the reported latency quantile bounds
+//!   bracket the exact rank-rule quantile of the recorded latencies;
+//! * **failure-correct**: a rank failure mid-service re-decomposes the
+//!   sharded member onto its survivors and the retried request matches
+//!   a fresh run on the degraded member bit-for-bit.
+
+use ops_oc::fleet::{serve, solo_run, Cluster, FleetOpts, FleetRun, Policy, Scenario, Workload};
+
+const HETERO: &str = "fleet:gpu-explicit:pcie:cyclic,gpu-explicit:nvlink:cyclic";
+const WORKLOAD: &str =
+    "tenants=5,reqs=2,apps=cloverleaf2d|cloverleaf3d,sizes=0.004|0.008,steps=4,seed=41";
+
+fn run(spec: &str, workload: &str, opts: &FleetOpts) -> FleetRun {
+    let cluster = Cluster::parse(spec).expect("cluster spec");
+    let w = Workload::parse(workload).expect("workload spec");
+    serve(&cluster, &w, opts).expect("serve")
+}
+
+#[test]
+fn same_seed_same_placements_and_latencies() {
+    for policy in [Policy::FirstFit, Policy::BestFit, Policy::TierAware] {
+        let opts = FleetOpts { policy, ..FleetOpts::default() };
+        let a = run(HETERO, WORKLOAD, &opts);
+        let b = run(HETERO, WORKLOAD, &opts);
+        assert_eq!(a.completed(), b.completed(), "{policy:?}");
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{policy:?}");
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.id, y.id, "{policy:?}: replay order diverged");
+            assert_eq!(x.target, y.target, "{policy:?}: placement diverged");
+            assert_eq!(x.start_s.to_bits(), y.start_s.to_bits(), "{policy:?}");
+            assert_eq!(x.end_s.to_bits(), y.end_s.to_bits(), "{policy:?}");
+            assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits(), "{policy:?}");
+            assert_eq!(x.checksum, y.checksum, "{policy:?}: numerics diverged");
+        }
+    }
+}
+
+#[test]
+fn every_request_matches_a_solo_run() {
+    let cluster = Cluster::parse(HETERO).unwrap();
+    let fleet = run(HETERO, WORKLOAD, &FleetOpts::default());
+    assert_eq!(fleet.completed(), 10);
+    // Solo checksums per (target, app, size) actually served — computed
+    // once per distinct triple, then compared against every outcome.
+    let mut solo: std::collections::HashMap<(usize, &str, u64), u64> = Default::default();
+    for o in &fleet.outcomes {
+        let key = (o.target, o.app.name(), o.size_gb.to_bits());
+        let expect = *solo.entry(key).or_insert_with(|| {
+            let (_, sum) = solo_run(&cluster.targets[o.target], o.app, o.size_gb, 4)
+                .expect("solo run");
+            sum
+        });
+        assert_eq!(
+            o.checksum, expect,
+            "request {} ({} {:.3} GB on target {}) diverged from its solo run",
+            o.id,
+            o.app.name(),
+            o.size_gb,
+            o.target
+        );
+        assert!(!o.oom);
+        assert!(o.latency_s >= o.service_s, "latency includes service");
+    }
+}
+
+#[test]
+fn batching_never_changes_results() {
+    let batched = run(HETERO, WORKLOAD, &FleetOpts::default());
+    let unbatched = run(
+        HETERO,
+        WORKLOAD,
+        &FleetOpts { batching: false, ..FleetOpts::default() },
+    );
+    // Distinct fingerprints == distinct (app, size) pairs the trace
+    // actually drew — derived from the workload, not hard-coded.
+    let drawn: std::collections::HashSet<(&str, u64)> = Workload::parse(WORKLOAD)
+        .unwrap()
+        .generate()
+        .iter()
+        .map(|r| (r.app.name(), r.size_gb.to_bits()))
+        .collect();
+    assert_eq!(batched.distinct_fingerprints, drawn.len());
+    assert_eq!(
+        batched.programs_built as usize, batched.distinct_fingerprints,
+        "batching freezes once per fingerprint"
+    );
+    assert_eq!(
+        unbatched.programs_built as usize,
+        unbatched.completed(),
+        "no batching freezes once per request"
+    );
+    assert!(batched.metrics.analysis_builds < unbatched.metrics.analysis_builds);
+    assert!(batched.metrics.analysis_reuse_hits > 0);
+    // ... but every observable result is identical.
+    assert_eq!(batched.completed(), unbatched.completed());
+    assert_eq!(batched.makespan_s.to_bits(), unbatched.makespan_s.to_bits());
+    for (x, y) in batched.outcomes.iter().zip(&unbatched.outcomes) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.target, y.target);
+        assert_eq!(x.checksum, y.checksum, "batching changed request {} numerics", x.id);
+        assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+    }
+}
+
+#[test]
+fn latency_quantiles_bracket_exact_sample_quantiles() {
+    let fleet = run(HETERO, WORKLOAD, &FleetOpts::default());
+    let mut exact: Vec<f64> = fleet.outcomes.iter().map(|o| o.latency_s).collect();
+    exact.sort_by(f64::total_cmp);
+    let n = exact.len();
+    let hist = fleet
+        .metrics
+        .obs
+        .histogram("request_latency_s")
+        .expect("serving records a latency histogram");
+    assert_eq!(hist.count() as usize, n);
+    for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+        // the histogram's rank rule: rank = ceil(q*count) in 1..=count
+        let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+        let sample = exact[rank - 1];
+        let (lo, hi) = hist.quantile_bounds(q).expect("non-empty");
+        assert!(
+            lo <= sample && sample <= hi,
+            "q={q}: exact sample {sample} outside histogram bracket [{lo}, {hi}]"
+        );
+        assert_eq!(fleet.latency_quantile(q).to_bits(), hi.to_bits());
+    }
+}
+
+#[test]
+fn rank_failure_redecomposes_and_matches_degraded_solo() {
+    let spec = "fleet:gpu-explicit:pcie:cyclic:x2,gpu-explicit:pcie:cyclic";
+    let workload = "tenants=4,reqs=1,apps=cloverleaf2d,sizes=0.005,steps=4,seed=13";
+    let opts = FleetOpts {
+        scenarios: vec![Scenario::parse("fail:0@0.0000001").unwrap()],
+        ..FleetOpts::default()
+    };
+    let fleet = run(spec, workload, &opts);
+    assert_eq!(fleet.completed(), 4, "failure must not drop requests");
+    assert_eq!(fleet.failovers, 1);
+    assert!(fleet.per_target[0].degraded);
+    assert!(!fleet.per_target[0].retired, "x2 degrades, it does not retire");
+
+    let cluster = Cluster::parse(spec).unwrap();
+    let degraded = cluster.targets[0].degrade().expect("x2 has survivors");
+    let retried: Vec<_> = fleet.outcomes.iter().filter(|o| o.retried).collect();
+    assert_eq!(retried.len(), 1, "exactly the in-flight request retries");
+    let o = retried[0];
+    assert_eq!(o.target, 0, "the retry lands on the degraded member");
+    let (_, degraded_sum) = solo_run(&degraded, o.app, o.size_gb, 4).unwrap();
+    assert_eq!(
+        o.checksum, degraded_sum,
+        "retried request must equal a fresh run on the surviving cluster"
+    );
+    // the failed attempt's wasted time is part of the latency
+    assert!(o.latency_s > o.service_s);
+    // the untouched member keeps serving: every non-retried request on
+    // target 1 matches ITS solo run too
+    let (_, t1_sum) = solo_run(&cluster.targets[1], o.app, o.size_gb, 4).unwrap();
+    for other in fleet.outcomes.iter().filter(|r| r.target == 1) {
+        assert_eq!(other.checksum, t1_sum);
+        assert!(!other.retried);
+    }
+}
