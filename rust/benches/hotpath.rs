@@ -1,13 +1,24 @@
 //! Hot-path microbenchmarks for the §Perf pass: the simulator and
-//! planner components that sit on the coordinator's critical path.
+//! planner components that sit on the coordinator's critical path, plus
+//! the kernel-backend point-throughput comparison (closure-based
+//! [`NativeExecutor`] vs the IR-compiling [`VectorExecutor`]) recorded
+//! to `BENCH_hotpath.json`.
+//!
+//! The backend comparison runs the same [`LoopInst`] — carrying both a
+//! handwritten closure and the mirrored kernel IR — through both
+//! executors, asserts the outputs are bit-identical, and asserts the
+//! vector backend is not slower on the star-stencil case (the CI smoke
+//! gate).
+use ops_oc::bench_support::telemetry::BenchRecorder;
+use ops_oc::exec::{Executor, Metrics, NativeExecutor, VectorExecutor};
 use ops_oc::memory::{AddressMap, CacheSim};
 use ops_oc::ops::kernel::kernel;
 use ops_oc::ops::stencil::shapes;
 use ops_oc::ops::*;
-use ops_oc::exec::{Executor, NativeExecutor};
-use ops_oc::tiling::plan::plan_chain;
 use ops_oc::tiling::dependency::compute_shifts;
+use ops_oc::tiling::plan::plan_chain;
 use std::hint::black_box;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn bench<F: FnMut()>(name: &str, iters: u32, unit_per_iter: f64, unit: &str, mut f: F) {
@@ -54,11 +65,179 @@ fn fixture(nds: u32, ny: usize) -> (Vec<Dataset>, Vec<Stencil>, Vec<LoopInst>) {
                 let v = c.r(0, -1, 0) + c.r(0, 1, 0);
                 c.w(1, 0, 0, v);
             }),
+            kernel_ir: None,
             seq: li as u64,
             bw_efficiency: 1.0,
         })
         .collect();
     (datasets, stencils, chain)
+}
+
+/// Backend-comparison grid: wide x extent so the row programs have
+/// something to vectorise.
+const KX: usize = 1024;
+const KY: usize = 512;
+
+fn kdat(i: u32) -> Dataset {
+    Dataset {
+        id: DatasetId(i),
+        block: BlockId(0),
+        name: format!("k{i}"),
+        size: [KX, KY, 1],
+        halo_lo: [1, 1, 0],
+        halo_hi: [1, 1, 0],
+        elem_bytes: 8,
+    }
+}
+
+/// One kernel case: a `LoopInst` carrying a handwritten closure (the
+/// native path) and the mirrored IR (the vector path), plus the dataset
+/// the kernel writes so outputs can be compared bit-exactly.
+struct KernelCase {
+    name: &'static str,
+    datasets: Vec<Dataset>,
+    l: LoopInst,
+    out: DatasetId,
+}
+
+fn star_case() -> KernelCase {
+    let mut k = KirBuilder::new();
+    k.store(
+        1,
+        kir::read(0, [-1, 0, 0]) + kir::read(0, [1, 0, 0]) + kir::read(0, [0, -1, 0])
+            + kir::read(0, [0, 1, 0])
+            - kir::lit(4.0) * kir::read(0, [0, 0, 0]),
+    );
+    KernelCase {
+        name: "star5",
+        datasets: vec![kdat(0), kdat(1)],
+        l: LoopInst {
+            name: "star5".into(),
+            block: BlockId(0),
+            range: [(0, KX as isize), (0, KY as isize), (0, 1)],
+            args: vec![
+                Arg::dat(DatasetId(0), StencilId(1), Access::Read),
+                Arg::dat(DatasetId(1), StencilId(0), Access::Write),
+            ],
+            kernel: kernel(|c| {
+                let v = c.r(0, -1, 0) + c.r(0, 1, 0) + c.r(0, 0, -1) + c.r(0, 0, 1)
+                    - 4.0 * c.r(0, 0, 0);
+                c.w(1, 0, 0, v);
+            }),
+            kernel_ir: Some(Arc::new(k.build())),
+            seq: 0,
+            bw_efficiency: 1.0,
+        },
+        out: DatasetId(1),
+    }
+}
+
+fn axpy_case() -> KernelCase {
+    let mut k = KirBuilder::new();
+    k.store(2, kir::read(0, [0, 0, 0]) + kir::lit(2.5) * kir::read(1, [0, 0, 0]));
+    KernelCase {
+        name: "axpy",
+        datasets: vec![kdat(0), kdat(1), kdat(2)],
+        l: LoopInst {
+            name: "axpy".into(),
+            block: BlockId(0),
+            range: [(0, KX as isize), (0, KY as isize), (0, 1)],
+            args: vec![
+                Arg::dat(DatasetId(0), StencilId(0), Access::Read),
+                Arg::dat(DatasetId(1), StencilId(0), Access::Read),
+                Arg::dat(DatasetId(2), StencilId(0), Access::Write),
+            ],
+            kernel: kernel(|c| {
+                c.w(2, 0, 0, c.r(0, 0, 0) + 2.5 * c.r(1, 0, 0));
+            }),
+            kernel_ir: Some(Arc::new(k.build())),
+            seq: 0,
+            bw_efficiency: 1.0,
+        },
+        out: DatasetId(2),
+    }
+}
+
+/// Allocate + deterministically seed every dataset of a case.
+fn seeded_store(datasets: &[Dataset]) -> DataStore {
+    let mut store = DataStore::new();
+    for d in datasets {
+        store.alloc(d);
+        let buf = store.buf_mut(d.id);
+        for (j, v) in buf.iter_mut().enumerate() {
+            *v = ((j * 31 + d.id.0 as usize * 7) % 1000) as f64 * 1e-3;
+        }
+    }
+    store
+}
+
+/// Best-of-3 timing of `iters` loop executions; returns ns/point.
+fn time_loop(
+    exec: &mut dyn Executor,
+    l: &LoopInst,
+    datasets: &[Dataset],
+    store: &mut DataStore,
+    iters: u32,
+) -> f64 {
+    let mut reds: Vec<Reduction> = vec![];
+    exec.run_loop(l, l.range, datasets, store, &mut reds); // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            exec.run_loop(l, l.range, datasets, store, &mut reds);
+        }
+        best = best.min(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    best * 1e9 / (KX * KY) as f64
+}
+
+/// Run one case through both backends: bit-exact check, ns/point per
+/// backend into `rec`, returns `(native_ns, vector_ns)`.
+fn run_case(rec: &mut BenchRecorder, case: &KernelCase, iters: u32) -> (f64, f64) {
+    let size_gb = case.datasets.iter().map(Dataset::bytes).sum::<u64>() as f64 / 1e9;
+    let mut nat_store = seeded_store(&case.datasets);
+    let mut vec_store = seeded_store(&case.datasets);
+    let mut nexec = NativeExecutor::new();
+    let mut vexec = VectorExecutor::new();
+    let nat_ns = time_loop(&mut nexec, &case.l, &case.datasets, &mut nat_store, iters);
+    let vec_ns = time_loop(&mut vexec, &case.l, &case.datasets, &mut vec_store, iters);
+    // the comparison is meaningless if the IR silently fell back
+    let (vectorised, fallback) = vexec.kir_loop_stats();
+    assert!(
+        vectorised > 0 && fallback == 0,
+        "{}: vector backend fell back to the closure path",
+        case.name
+    );
+    assert_eq!(
+        nat_store.buf(case.out),
+        vec_store.buf(case.out),
+        "{}: vector output diverged from native",
+        case.name
+    );
+    for (backend, ns) in [("native", nat_ns), ("vector", vec_ns)] {
+        let m = Metrics {
+            elapsed_s: ns * 1e-9,
+            exec_backend: backend.to_string(),
+            ..Default::default()
+        };
+        rec.point(
+            &format!("{}|{backend}", case.name),
+            case.name,
+            backend,
+            size_gb,
+            &m,
+            false,
+        );
+    }
+    println!(
+        "kernel {:<10} native {:>7.2} ns/pt   vector {:>7.2} ns/pt   speedup {:>5.2}x",
+        case.name,
+        nat_ns,
+        vec_ns,
+        nat_ns / vec_ns
+    );
+    (nat_ns, vec_ns)
 }
 
 fn main() {
@@ -83,17 +262,18 @@ fn main() {
         black_box(plan_chain(&chain, &datasets, &stencils, 64));
     });
 
-    // 4. native executor point throughput
-    let mut store = DataStore::new();
-    datasets.iter().for_each(|d| store.alloc(d));
-    let mut reds: Vec<Reduction> = vec![];
-    let mut exec = NativeExecutor::new();
-    let pts = 16.0 * 4096.0 * 8.0;
-    bench("native executor (8 loops)", 10, pts, "point", || {
-        for l in chain.iter().take(8) {
-            exec.run_loop(l, l.range, &datasets, &mut store, &mut reds);
-        }
-    });
+    // 4. kernel point throughput: closure path vs compiled row programs
+    let mut rec = BenchRecorder::new("hotpath");
+    let (star_nat, star_vec) = run_case(&mut rec, &star_case(), 20);
+    run_case(&mut rec, &axpy_case(), 20);
+    let path = rec.write().expect("write BENCH_hotpath.json");
+    println!("trajectory -> {}", path.display());
+    // CI smoke gate: the vector backend must not be slower than the
+    // closure path on the star-stencil case.
+    assert!(
+        star_vec <= star_nat,
+        "vector backend slower on star5: {star_vec:.2} ns/pt vs {star_nat:.2} ns/pt native"
+    );
 
     // 5. address-map slab computation
     let map = AddressMap::new(&datasets, 1 << 20);

@@ -15,6 +15,7 @@
 pub mod kernels;
 
 use crate::ops::kernel::kernel;
+use crate::ops::kir;
 use crate::ops::stencil::shapes;
 use crate::ops::{
     Access, Arg, BlockId, DatasetId, Declare, Drive, RedOp, Record, ReductionId, StencilId,
@@ -103,6 +104,22 @@ pub struct FieldSummary {
     pub internal_energy: f64,
     pub kinetic_energy: f64,
     pub pressure: f64,
+}
+
+/// Van-Leer limited difference as kernel IR (mirrors [`limited`]
+/// term-by-term; the data-dependent branch becomes a `select`).
+fn limited_ir(diffuw: kir::Expr, diffdw: kir::Expr, sigma: kir::Expr) -> kir::Expr {
+    let auw = diffuw.clone().abs();
+    let adw = diffdw.clone().abs();
+    let wind = diffdw.clone().le(0.0).select(kir::lit(-1.0), kir::lit(1.0));
+    let val = (kir::lit(1.0) - sigma.clone())
+        * wind
+        * (kir::lit(1.0 / 6.0)
+            * ((kir::lit(1.0) + sigma.clone()) * auw.clone()
+                + (kir::lit(2.0) - sigma) * adw.clone()))
+        .min(auw)
+        .min(adw);
+    (diffuw * diffdw).gt(0.0).select(val, kir::lit(0.0))
 }
 
 /// Van-Leer-style limited difference used by the advection kernels.
@@ -363,27 +380,30 @@ impl CloverLeaf2D {
         } else {
             (self.density0, self.energy0)
         };
-        ctx.par_loop(
+        // EOS as kernel IR: the tree mirrors the original closure
+        // term-by-term, so the derived closure is bit-identical.
+        let mut k = kir::KirBuilder::new();
+        let d = k.let_(kir::read(0, [0, 0, 0]).max(G_SMALL));
+        let e = kir::read(1, [0, 0, 0]);
+        let v = k.let_(kir::lit(1.0) / d.clone());
+        let p = k.let_(kir::lit(gamma - 1.0) * d.clone() * e);
+        let pe = kir::lit(gamma - 1.0) * d.clone();
+        let pv = -d * p.clone() * v.clone(); // dp/dv along isochor, as in the original
+        let ss2 = v.clone() * v * (p.clone() * pe - pv);
+        k.store(2, p);
+        k.store(3, ss2.max(G_SMALL).sqrt());
+        ctx.par_loop_ir(
             "cl2d_ideal_gas",
             self.block,
             self.cells(),
-            kernel(move |c| {
-                let d = c.r(0, 0, 0).max(G_SMALL);
-                let e = c.r(1, 0, 0);
-                let v = 1.0 / d;
-                let p = (gamma - 1.0) * d * e;
-                let pe = (gamma - 1.0) * d;
-                let pv = -d * p * v; // dp/dv along isochor, as in the original
-                let ss2 = v * v * (p * pe - pv);
-                c.w(2, 0, 0, p);
-                c.w(3, 0, 0, ss2.max(G_SMALL).sqrt());
-            }),
+            k.build(),
             vec![
                 Arg::dat(den, self.s_pt, Access::Read),
                 Arg::dat(ener, self.s_pt, Access::Read),
                 Arg::dat(self.pressure, self.s_pt, Access::Write),
                 Arg::dat(self.soundspeed, self.s_pt, Access::Write),
             ],
+            1.0,
         );
     }
 
@@ -480,45 +500,40 @@ impl CloverLeaf2D {
     /// with the full dt — exactly the original's two branches.
     pub fn pdv(&self, ctx: &mut impl Record, predict: bool) {
         let dt = self.dt;
-        ctx.par_loop(
+        // Per-face flux: area × frac × (sum of the two face-node
+        // velocities; predictor doubles vel0, corrector adds vel1).
+        let face = |area: usize, ao: [i32; 3], v0: usize, v1: usize, o1: [i32; 3], o2: [i32; 3]| {
+            if predict {
+                kir::read(area, ao)
+                    * kir::lit(0.25 * dt * 0.5)
+                    * kir::lit(2.0)
+                    * (kir::read(v0, o1) + kir::read(v0, o2))
+            } else {
+                kir::read(area, ao)
+                    * kir::lit(0.25 * dt)
+                    * (kir::read(v0, o1) + kir::read(v0, o2) + kir::read(v1, o1)
+                        + kir::read(v1, o2))
+            }
+        };
+        let lf = face(5, [0, 0, 0], 1, 2, [0, 0, 0], [0, 1, 0]);
+        let rf = face(5, [1, 0, 0], 1, 2, [1, 0, 0], [1, 1, 0]);
+        let bf = face(6, [0, 0, 0], 3, 4, [0, 0, 0], [1, 0, 0]);
+        let tf = face(6, [0, 1, 0], 3, 4, [0, 1, 0], [1, 1, 0]);
+        let mut k = kir::KirBuilder::new();
+        let total_flux = k.let_(rf - lf + tf - bf);
+        let vol = k.let_(kir::read(7, [0, 0, 0]));
+        let volume_change = vol.clone() / (vol.clone() + total_flux.clone()).max(G_SMALL);
+        let d0 = k.let_(kir::read(0, [0, 0, 0]));
+        let recip = kir::lit(1.0) / (d0.clone() * vol).max(G_SMALL);
+        let e1 = kir::read(8, [0, 0, 0])
+            - (kir::read(9, [0, 0, 0]) + kir::read(10, [0, 0, 0])) * total_flux * recip;
+        k.store(11, e1);
+        k.store(12, d0 * volume_change);
+        ctx.par_loop_ir(
             if predict { "cl2d_pdv_predict" } else { "cl2d_pdv" },
             self.block,
             self.cells(),
-            kernel(move |c| {
-                let (lf, rf, bf, tf) = if predict {
-                    let frac = 0.25 * dt * 0.5;
-                    (
-                        c.r(5, 0, 0) * frac * 2.0 * (c.r(1, 0, 0) + c.r(1, 0, 1)),
-                        c.r(5, 1, 0) * frac * 2.0 * (c.r(1, 1, 0) + c.r(1, 1, 1)),
-                        c.r(6, 0, 0) * frac * 2.0 * (c.r(3, 0, 0) + c.r(3, 1, 0)),
-                        c.r(6, 0, 1) * frac * 2.0 * (c.r(3, 0, 1) + c.r(3, 1, 1)),
-                    )
-                } else {
-                    let frac = 0.25 * dt;
-                    (
-                        c.r(5, 0, 0)
-                            * frac
-                            * (c.r(1, 0, 0) + c.r(1, 0, 1) + c.r(2, 0, 0) + c.r(2, 0, 1)),
-                        c.r(5, 1, 0)
-                            * frac
-                            * (c.r(1, 1, 0) + c.r(1, 1, 1) + c.r(2, 1, 0) + c.r(2, 1, 1)),
-                        c.r(6, 0, 0)
-                            * frac
-                            * (c.r(3, 0, 0) + c.r(3, 1, 0) + c.r(4, 0, 0) + c.r(4, 1, 0)),
-                        c.r(6, 0, 1)
-                            * frac
-                            * (c.r(3, 0, 1) + c.r(3, 1, 1) + c.r(4, 0, 1) + c.r(4, 1, 1)),
-                    )
-                };
-                let total_flux = rf - lf + tf - bf;
-                let vol = c.r(7, 0, 0);
-                let volume_change = vol / (vol + total_flux).max(G_SMALL);
-                let d0 = c.r(0, 0, 0);
-                let recip = 1.0 / (d0 * vol).max(G_SMALL);
-                let e1 = c.r(8, 0, 0) - (c.r(9, 0, 0) + c.r(10, 0, 0)) * total_flux * recip;
-                c.w(11, 0, 0, e1);
-                c.w(12, 0, 0, d0 * volume_change);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.density0, self.s_pt, Access::Read),
                 Arg::dat(self.xvel0, self.s_node_to_cell, Access::Read),
@@ -534,27 +549,27 @@ impl CloverLeaf2D {
                 Arg::dat(self.energy1, self.s_pt, Access::Write),
                 Arg::dat(self.density1, self.s_pt, Access::Write),
             ],
+            1.0,
         );
     }
 
     /// Revert: discard the predictor state.
     pub fn revert(&self, ctx: &mut impl Record) {
-        ctx.par_loop(
+        let mut k = kir::KirBuilder::new();
+        k.store(2, kir::read(0, [0, 0, 0]));
+        k.store(3, kir::read(1, [0, 0, 0]));
+        ctx.par_loop_ir(
             "cl2d_revert",
             self.block,
             self.cells(),
-            kernel(|c| {
-                let d = c.r(0, 0, 0);
-                let e = c.r(1, 0, 0);
-                c.w(2, 0, 0, d);
-                c.w(3, 0, 0, e);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.density0, self.s_pt, Access::Read),
                 Arg::dat(self.energy0, self.s_pt, Access::Read),
                 Arg::dat(self.density1, self.s_pt, Access::Write),
                 Arg::dat(self.energy1, self.s_pt, Access::Write),
             ],
+            1.0,
         );
     }
 
@@ -563,25 +578,29 @@ impl CloverLeaf2D {
     pub fn accelerate(&self, ctx: &mut impl Record) {
         let dt = self.dt;
         let (dx, dy) = (self.dx, self.dy);
-        ctx.par_loop(
+        let vol = dx * dy;
+        let mut k = kir::KirBuilder::new();
+        let nodal_mass = kir::lit(0.25)
+            * (kir::read(0, [-1, -1, 0])
+                + kir::read(0, [0, -1, 0])
+                + kir::read(0, [0, 0, 0])
+                + kir::read(0, [-1, 0, 0]))
+            * kir::lit(vol);
+        let sbm = k.let_(kir::lit(0.25 * dt) / nodal_mass.max(G_SMALL));
+        let diff = |a: usize, hi: [i32; 3], lo: [i32; 3]| kir::read(a, hi) - kir::read(a, lo);
+        let dpx = diff(1, [0, 0, 0], [-1, 0, 0]) + diff(1, [0, -1, 0], [-1, -1, 0]);
+        let dvx = diff(2, [0, 0, 0], [-1, 0, 0]) + diff(2, [0, -1, 0], [-1, -1, 0]);
+        let dpy = diff(1, [0, 0, 0], [0, -1, 0]) + diff(1, [-1, 0, 0], [-1, -1, 0]);
+        let dvy = diff(2, [0, 0, 0], [0, -1, 0]) + diff(2, [-1, 0, 0], [-1, -1, 0]);
+        let xv = kir::read(3, [0, 0, 0]) - sbm.clone() * kir::lit(dy) * (dpx + dvx);
+        let yv = kir::read(4, [0, 0, 0]) - sbm * kir::lit(dx) * (dpy + dvy);
+        k.store(5, xv);
+        k.store(6, yv);
+        ctx.par_loop_ir(
             "cl2d_accelerate",
             self.block,
             self.nodes(),
-            kernel(move |c| {
-                let vol = dx * dy;
-                let nodal_mass = 0.25
-                    * (c.r(0, -1, -1) + c.r(0, 0, -1) + c.r(0, 0, 0) + c.r(0, -1, 0))
-                    * vol;
-                let sbm = 0.25 * dt / nodal_mass.max(G_SMALL);
-                let dpx = (c.r(1, 0, 0) - c.r(1, -1, 0)) + (c.r(1, 0, -1) - c.r(1, -1, -1));
-                let dvx = (c.r(2, 0, 0) - c.r(2, -1, 0)) + (c.r(2, 0, -1) - c.r(2, -1, -1));
-                let dpy = (c.r(1, 0, 0) - c.r(1, 0, -1)) + (c.r(1, -1, 0) - c.r(1, -1, -1));
-                let dvy = (c.r(2, 0, 0) - c.r(2, 0, -1)) + (c.r(2, -1, 0) - c.r(2, -1, -1));
-                let xv = c.r(3, 0, 0) - sbm * dy * (dpx + dvx);
-                let yv = c.r(4, 0, 0) - sbm * dx * (dpy + dvy);
-                c.w(5, 0, 0, xv);
-                c.w(6, 0, 0, yv);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.density0, self.s_cell_to_node, Access::Read),
                 Arg::dat(self.pressure, self.s_cell_to_node, Access::Read),
@@ -591,47 +610,58 @@ impl CloverLeaf2D {
                 Arg::dat(self.xvel1, self.s_pt, Access::Write),
                 Arg::dat(self.yvel1, self.s_pt, Access::Write),
             ],
+            1.0,
         );
     }
 
     /// Face volume fluxes from the time-averaged velocities.
     pub fn flux_calc(&self, ctx: &mut impl Record) {
         let dt = self.dt;
-        ctx.par_loop(
+        let mut k = kir::KirBuilder::new();
+        k.store(
+            3,
+            kir::lit(0.25 * dt)
+                * kir::read(0, [0, 0, 0])
+                * (kir::read(1, [0, 0, 0])
+                    + kir::read(1, [0, 1, 0])
+                    + kir::read(2, [0, 0, 0])
+                    + kir::read(2, [0, 1, 0])),
+        );
+        ctx.par_loop_ir(
             "cl2d_flux_calc_x",
             self.block,
             [(0, self.nx as isize + 1), (0, self.ny as isize), (0, 1)],
-            kernel(move |c| {
-                let f = 0.25
-                    * dt
-                    * c.r(0, 0, 0)
-                    * (c.r(1, 0, 0) + c.r(1, 0, 1) + c.r(2, 0, 0) + c.r(2, 0, 1));
-                c.w(3, 0, 0, f);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.xarea, self.s_pt, Access::Read),
                 Arg::dat(self.xvel0, self.s_yp1, Access::Read),
                 Arg::dat(self.xvel1, self.s_yp1, Access::Read),
                 Arg::dat(self.vol_flux_x, self.s_pt, Access::Write),
             ],
+            1.0,
         );
-        ctx.par_loop(
+        let mut k = kir::KirBuilder::new();
+        k.store(
+            3,
+            kir::lit(0.25 * dt)
+                * kir::read(0, [0, 0, 0])
+                * (kir::read(1, [0, 0, 0])
+                    + kir::read(1, [1, 0, 0])
+                    + kir::read(2, [0, 0, 0])
+                    + kir::read(2, [1, 0, 0])),
+        );
+        ctx.par_loop_ir(
             "cl2d_flux_calc_y",
             self.block,
             [(0, self.nx as isize), (0, self.ny as isize + 1), (0, 1)],
-            kernel(move |c| {
-                let f = 0.25
-                    * dt
-                    * c.r(0, 0, 0)
-                    * (c.r(1, 0, 0) + c.r(1, 1, 0) + c.r(2, 0, 0) + c.r(2, 1, 0));
-                c.w(3, 0, 0, f);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.yarea, self.s_pt, Access::Read),
                 Arg::dat(self.yvel0, self.s_xp1, Access::Read),
                 Arg::dat(self.yvel1, self.s_xp1, Access::Read),
                 Arg::dat(self.vol_flux_y, self.s_pt, Access::Write),
             ],
+            1.0,
         );
     }
 
@@ -644,29 +674,28 @@ impl CloverLeaf2D {
             (self.vol_flux_y, self.mass_flux_y)
         };
 
-        // pass 1: pre/post volumes into work1/work2
+        // pass 1: pre/post volumes into work1/work2 (the sweep flags are
+        // record-time constants, so the telescoping unrolls into the IR)
         {
-            let fs = first_sweep;
-            let xd = xdir;
-            ctx.par_loop(
+            let mut k = kir::KirBuilder::new();
+            let vol = k.let_(kir::read(0, [0, 0, 0]));
+            let dfx = kir::read(1, [1, 0, 0]) - kir::read(1, [0, 0, 0]);
+            let dfy = kir::read(2, [0, 1, 0]) - kir::read(2, [0, 0, 0]);
+            let (pre, post) = if first_sweep {
+                let pre = k.let_(vol + dfx.clone() + dfy.clone());
+                let post = pre.clone() - if xdir { dfx } else { dfy };
+                (pre, post)
+            } else {
+                let pre = vol.clone() + if xdir { dfx } else { dfy };
+                (pre, vol)
+            };
+            k.store(3, pre);
+            k.store(4, post);
+            ctx.par_loop_ir(
                 if xdir { "cl2d_advec_cell_x_pre" } else { "cl2d_advec_cell_y_pre" },
                 self.block,
                 self.cells_h(2),
-                kernel(move |c| {
-                    let vol = c.r(0, 0, 0);
-                    let dfx = c.r(1, 1, 0) - c.r(1, 0, 0);
-                    let dfy = c.r(2, 0, 1) - c.r(2, 0, 0);
-                    let (pre, post) = if fs {
-                        let pre = vol + dfx + dfy;
-                        let post = pre - if xd { dfx } else { dfy };
-                        (pre, post)
-                    } else {
-                        let pre = vol + if xd { dfx } else { dfy };
-                        (pre, vol)
-                    };
-                    c.w(3, 0, 0, pre);
-                    c.w(4, 0, 0, post);
-                }),
+                k.build(),
                 vec![
                     Arg::dat(self.volume, self.s_pt, Access::Read),
                     Arg::dat(self.vol_flux_x, self.s_xp1, Access::Read),
@@ -674,6 +703,7 @@ impl CloverLeaf2D {
                     Arg::dat(self.work1, self.s_pt, Access::Write),
                     Arg::dat(self.work2, self.s_pt, Access::Write),
                 ],
+                1.0,
             );
         }
 
@@ -684,34 +714,43 @@ impl CloverLeaf2D {
             } else {
                 [(0, self.nx as isize), (0, self.ny as isize + 1), (0, 1)]
             };
-            let xd = xdir;
             let adv_st = if xdir { self.s_adv_x } else { self.s_adv_y };
-            ctx.par_loop(
+            let o = |kk: i32| if xdir { [kk, 0, 0] } else { [0, kk, 0] };
+            // Both upwind orientations are built as subtrees and the sign
+            // of the volume flux selects between them — the selected side
+            // evaluates the exact arithmetic the branchy closure ran.
+            let mut k = kir::KirBuilder::new();
+            let vf = k.let_(kir::read(0, [0, 0, 0]));
+            let orient = |k: &mut kir::KirBuilder, upwind: i32, donor: i32, downwind: i32| {
+                let (ou, od, ow) = (o(upwind), o(donor), o(downwind));
+                let pre_donor = k.let_(kir::read(1, od).max(G_SMALL));
+                let sigmat = vf.clone().abs() / pre_donor.clone();
+                let den_d = k.let_(kir::read(2, od));
+                let lim_d = limited_ir(
+                    den_d.clone() - kir::read(2, ou),
+                    kir::read(2, ow) - den_d.clone(),
+                    sigmat,
+                );
+                let mf = k.let_(vf.clone() * (den_d.clone() + lim_d));
+                let sigmam = mf.clone().abs() / (den_d * pre_donor).max(G_SMALL);
+                let en_d = k.let_(kir::read(3, od));
+                let lim_e = limited_ir(
+                    en_d.clone() - kir::read(3, ou),
+                    kir::read(3, ow) - en_d.clone(),
+                    sigmam,
+                );
+                (mf.clone(), mf * (en_d + lim_e))
+            };
+            let (mf_up, ef_up) = orient(&mut k, -2, -1, 0);
+            let (mf_dn, ef_dn) = orient(&mut k, 1, 0, -1);
+            let cond = vf.gt(0.0);
+            k.store(4, cond.clone().select(mf_up, mf_dn));
+            k.store(5, cond.select(ef_up, ef_dn));
+            ctx.par_loop_ir(
                 if xdir { "cl2d_advec_cell_x_flux" } else { "cl2d_advec_cell_y_flux" },
                 self.block,
                 range,
-                kernel(move |c| {
-                    let o = |k: isize| if xd { (k, 0) } else { (0, k) };
-                    let vf = c.r(0, 0, 0);
-                    let (upwind, donor, downwind): (isize, isize, isize) = if vf > 0.0 {
-                        (-2, -1, 0)
-                    } else {
-                        (1, 0, -1)
-                    };
-                    let (ux, uy) = o(upwind);
-                    let (dx_, dy_) = o(donor);
-                    let (wx, wy) = o(downwind);
-                    let pre_donor = c.r(1, dx_, dy_).max(G_SMALL);
-                    let sigmat = vf.abs() / pre_donor;
-                    let den_d = c.r(2, dx_, dy_);
-                    let lim_d = limited(den_d - c.r(2, ux, uy), c.r(2, wx, wy) - den_d, sigmat);
-                    let mf = vf * (den_d + lim_d);
-                    c.w(4, 0, 0, mf);
-                    let sigmam = mf.abs() / (den_d * pre_donor).max(G_SMALL);
-                    let en_d = c.r(3, dx_, dy_);
-                    let lim_e = limited(en_d - c.r(3, ux, uy), c.r(3, wx, wy) - en_d, sigmam);
-                    c.w(5, 0, 0, mf * (en_d + lim_e));
-                }),
+                k.build(),
                 vec![
                     Arg::dat(vol_flux, self.s_pt, Access::Read),
                     Arg::dat(self.work1, adv_st, Access::Read),
@@ -720,31 +759,30 @@ impl CloverLeaf2D {
                     Arg::dat(mass_flux, self.s_pt, Access::Write),
                     Arg::dat(self.work7, self.s_pt, Access::Write),
                 ],
+                1.0,
             );
         }
 
         // pass 3: conservative update of density1/energy1
         {
-            let xd = xdir;
             let st1 = if xdir { self.s_xp1 } else { self.s_yp1 };
-            ctx.par_loop(
+            let o1 = if xdir { [1, 0, 0] } else { [0, 1, 0] };
+            let mut k = kir::KirBuilder::new();
+            let pre_vol = kir::read(0, [0, 0, 0]);
+            let post_vol = kir::read(1, [0, 0, 0]);
+            let den = kir::read(2, [0, 0, 0]);
+            let en = kir::read(3, [0, 0, 0]);
+            let pre_mass = k.let_(den * pre_vol);
+            let post_mass = k.let_(pre_mass.clone() + kir::read(4, [0, 0, 0]) - kir::read(4, o1));
+            let post_en = (en * pre_mass + kir::read(5, [0, 0, 0]) - kir::read(5, o1))
+                / post_mass.clone().max(G_SMALL);
+            k.store(2, post_mass / post_vol.max(G_SMALL));
+            k.store(3, post_en);
+            ctx.par_loop_ir(
                 if xdir { "cl2d_advec_cell_x_upd" } else { "cl2d_advec_cell_y_upd" },
                 self.block,
                 self.cells(),
-                kernel(move |c| {
-                    let o = |k: isize| if xd { (k, 0) } else { (0, k) };
-                    let (ox, oy) = o(1);
-                    let pre_vol = c.r(0, 0, 0);
-                    let post_vol = c.r(1, 0, 0);
-                    let den = c.r(2, 0, 0);
-                    let en = c.r(3, 0, 0);
-                    let pre_mass = den * pre_vol;
-                    let post_mass = pre_mass + c.r(4, 0, 0) - c.r(4, ox, oy);
-                    let post_en = (en * pre_mass + c.r(5, 0, 0) - c.r(5, ox, oy))
-                        / post_mass.max(G_SMALL);
-                    c.w(2, 0, 0, post_mass / post_vol.max(G_SMALL));
-                    c.w(3, 0, 0, post_en);
-                }),
+                k.build(),
                 vec![
                     Arg::dat(self.work1, self.s_pt, Access::Read),
                     Arg::dat(self.work2, self.s_pt, Access::Read),
@@ -753,6 +791,7 @@ impl CloverLeaf2D {
                     Arg::dat(mass_flux, st1, Access::Read),
                     Arg::dat(self.work7, st1, Access::Read),
                 ],
+                1.0,
             );
         }
     }
@@ -879,39 +918,37 @@ impl CloverLeaf2D {
 
     /// Copy the advected state back to level 0.
     pub fn reset_field(&self, ctx: &mut impl Record) {
-        ctx.par_loop(
+        let mut k = kir::KirBuilder::new();
+        k.store(2, kir::read(0, [0, 0, 0]));
+        k.store(3, kir::read(1, [0, 0, 0]));
+        ctx.par_loop_ir(
             "cl2d_reset_field",
             self.block,
             self.cells(),
-            kernel(|c| {
-                let d = c.r(0, 0, 0);
-                let e = c.r(1, 0, 0);
-                c.w(2, 0, 0, d);
-                c.w(3, 0, 0, e);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.density1, self.s_pt, Access::Read),
                 Arg::dat(self.energy1, self.s_pt, Access::Read),
                 Arg::dat(self.density0, self.s_pt, Access::Write),
                 Arg::dat(self.energy0, self.s_pt, Access::Write),
             ],
+            1.0,
         );
-        ctx.par_loop(
+        let mut k = kir::KirBuilder::new();
+        k.store(2, kir::read(0, [0, 0, 0]));
+        k.store(3, kir::read(1, [0, 0, 0]));
+        ctx.par_loop_ir(
             "cl2d_reset_vel",
             self.block,
             self.nodes(),
-            kernel(|c| {
-                let xv = c.r(0, 0, 0);
-                let yv = c.r(1, 0, 0);
-                c.w(2, 0, 0, xv);
-                c.w(3, 0, 0, yv);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.xvel1, self.s_pt, Access::Read),
                 Arg::dat(self.yvel1, self.s_pt, Access::Read),
                 Arg::dat(self.xvel0, self.s_pt, Access::Write),
                 Arg::dat(self.yvel0, self.s_pt, Access::Write),
             ],
+            1.0,
         );
     }
 
@@ -1040,27 +1077,29 @@ impl CloverLeaf2D {
     /// Conserved-quantity summary (trigger point; every N steps in the
     /// paper's runs — the "one long loop chain with poor overlap").
     pub fn field_summary(&self, ctx: &mut impl Drive) -> FieldSummary {
-        ctx.par_loop(
+        let mut k = kir::KirBuilder::new();
+        let vol = k.let_(kir::read(0, [0, 0, 0]));
+        let den = k.let_(kir::read(1, [0, 0, 0]));
+        let en = kir::read(2, [0, 0, 0]);
+        let press = kir::read(3, [0, 0, 0]);
+        let sq = |o: [i32; 3]| {
+            let x = kir::read(4, o);
+            let y = kir::read(5, o);
+            x.clone() * x + y.clone() * y
+        };
+        let vsqrd = kir::lit(0.25)
+            * (sq([0, 0, 0]) + sq([1, 0, 0]) + sq([0, 1, 0]) + sq([1, 1, 0]));
+        let mass = k.let_(den.clone() * vol.clone());
+        k.reduce(0, RedOp::Sum, vol);
+        k.reduce(1, RedOp::Sum, mass.clone());
+        k.reduce(2, RedOp::Sum, mass.clone() * en);
+        k.reduce(3, RedOp::Sum, kir::lit(0.5) * mass.clone() * vsqrd);
+        k.reduce(4, RedOp::Sum, mass * press / den.max(G_SMALL));
+        ctx.par_loop_ir(
             "cl2d_field_summary",
             self.block,
             self.cells(),
-            kernel(|c| {
-                let vol = c.r(0, 0, 0);
-                let den = c.r(1, 0, 0);
-                let en = c.r(2, 0, 0);
-                let press = c.r(3, 0, 0);
-                let vsqrd = 0.25
-                    * ((c.r(4, 0, 0) * c.r(4, 0, 0) + c.r(5, 0, 0) * c.r(5, 0, 0))
-                        + (c.r(4, 1, 0) * c.r(4, 1, 0) + c.r(5, 1, 0) * c.r(5, 1, 0))
-                        + (c.r(4, 0, 1) * c.r(4, 0, 1) + c.r(5, 0, 1) * c.r(5, 0, 1))
-                        + (c.r(4, 1, 1) * c.r(4, 1, 1) + c.r(5, 1, 1) * c.r(5, 1, 1)));
-                let mass = den * vol;
-                c.red_sum(0, vol);
-                c.red_sum(1, mass);
-                c.red_sum(2, mass * en);
-                c.red_sum(3, 0.5 * mass * vsqrd);
-                c.red_sum(4, mass * press / den.max(G_SMALL));
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.volume, self.s_pt, Access::Read),
                 Arg::dat(self.density0, self.s_pt, Access::Read),
@@ -1074,6 +1113,7 @@ impl CloverLeaf2D {
                 Arg::GblRed { red: self.r_ke, op: RedOp::Sum },
                 Arg::GblRed { red: self.r_press, op: RedOp::Sum },
             ],
+            1.0,
         );
         let volume = ctx.reduction_result(self.r_vol);
         let mass = ctx.reduction_result(self.r_mass);

@@ -13,9 +13,10 @@
 //! distinct named loops per sweep (as OPS code generation does).
 
 use crate::ops::kernel::kernel;
+use crate::ops::kir;
 use crate::ops::stencil::shapes;
 use crate::ops::{
-    Access, Arg, BlockId, Ctx, DatasetId, Declare, Drive, RedOp, Record, ReductionId, StencilId,
+    Access, Arg, BlockId, DatasetId, Declare, Drive, RedOp, Record, ReductionId, StencilId,
 };
 
 const G_SMALL: f64 = 1.0e-16;
@@ -75,6 +76,28 @@ const NODE_TO_CELL: [[isize; 3]; 8] = [
     [0, 1, 1],
     [1, 1, 1],
 ];
+
+/// Van-Leer limited difference as kernel IR (mirrors [`limited`]
+/// term-by-term; the data-dependent branch becomes a `select`).
+fn limited_ir(diffuw: kir::Expr, diffdw: kir::Expr, sigma: kir::Expr) -> kir::Expr {
+    let auw = diffuw.clone().abs();
+    let adw = diffdw.clone().abs();
+    let wind = diffdw.clone().le(0.0).select(kir::lit(-1.0), kir::lit(1.0));
+    let val = (kir::lit(1.0) - sigma.clone())
+        * wind
+        * (kir::lit(1.0 / 6.0)
+            * ((kir::lit(1.0) + sigma.clone()) * auw.clone()
+                + (kir::lit(2.0) - sigma) * adw.clone()))
+        .min(auw)
+        .min(adw);
+    (diffuw * diffdw).gt(0.0).select(val, kir::lit(0.0))
+}
+
+/// `[isize; 3]` offset → stencil-point form for [`kir::read`].
+#[inline]
+fn pt(o: [isize; 3]) -> [i32; 3] {
+    [o[0] as i32, o[1] as i32, o[2] as i32]
+}
 
 /// Van-Leer limited difference (same as 2D).
 #[inline]
@@ -466,27 +489,30 @@ impl CloverLeaf3D {
         } else {
             (self.density0, self.energy0)
         };
-        ctx.par_loop(
+        // EOS as kernel IR: the tree mirrors the original closure
+        // term-by-term, so the derived closure is bit-identical.
+        let mut k = kir::KirBuilder::new();
+        let d = k.let_(kir::read(0, [0, 0, 0]).max(G_SMALL));
+        let e = kir::read(1, [0, 0, 0]);
+        let v = k.let_(kir::lit(1.0) / d.clone());
+        let p = k.let_(kir::lit(gamma - 1.0) * d.clone() * e);
+        let pe = kir::lit(gamma - 1.0) * d.clone();
+        let pv = -d * p.clone() * v.clone();
+        let ss2 = v.clone() * v * (p.clone() * pe - pv);
+        k.store(2, p);
+        k.store(3, ss2.max(G_SMALL).sqrt());
+        ctx.par_loop_ir(
             "cl3d_ideal_gas",
             self.block,
             self.cells(),
-            kernel(move |c| {
-                let d = c.r3(0, 0, 0, 0).max(G_SMALL);
-                let e = c.r3(1, 0, 0, 0);
-                let v = 1.0 / d;
-                let p = (gamma - 1.0) * d * e;
-                let pe = (gamma - 1.0) * d;
-                let pv = -d * p * v;
-                let ss2 = v * v * (p * pe - pv);
-                c.w3(2, 0, 0, 0, p);
-                c.w3(3, 0, 0, 0, ss2.max(G_SMALL).sqrt());
-            }),
+            k.build(),
             vec![
                 Arg::dat(den, self.s_pt, Access::Read),
                 Arg::dat(ener, self.s_pt, Access::Read),
                 Arg::dat(self.pressure, self.s_pt, Access::Write),
                 Arg::dat(self.soundspeed, self.s_pt, Access::Write),
             ],
+            1.0,
         );
     }
 
@@ -605,50 +631,52 @@ impl CloverLeaf3D {
         let dt = self.dt;
         // args: 0 density0, 1..=3 vel0, 4..=6 vel1, 7..=9 areas, 10 volume,
         // 11 energy0, 12 pressure, 13 viscosity, 14 energy1 W, 15 density1 W
-        ctx.par_loop(
+        // Sum of the 4 node velocities on the lo/hi dir-face; the
+        // predictor halves dt and doubles vel0 instead of adding vel1.
+        let face_vel_sum = |dir: usize, hi: isize| -> kir::Expr {
+            let mut s0 = kir::lit(0.0); // vel0
+            let mut s1 = kir::lit(0.0); // vel1
+            for o in NODE_TO_CELL {
+                if o[dir] == hi {
+                    s0 = s0 + kir::read(1 + dir, pt(o));
+                    s1 = s1 + kir::read(4 + dir, pt(o));
+                }
+            }
+            if predict {
+                kir::lit(2.0) * s0
+            } else {
+                s0 + s1
+            }
+        };
+        let frac = if predict { 0.125 * dt * 0.5 } else { 0.125 * dt };
+        let mut k = kir::KirBuilder::new();
+        let mut total_flux = kir::lit(0.0);
+        for dir in 0..3 {
+            let area_lo = kir::read(7 + dir, [0, 0, 0]);
+            let o = [
+                [1, 0, 0][dir] as isize,
+                [0, 1, 0][dir] as isize,
+                [0, 0, 1][dir] as isize,
+            ];
+            let area_hi = kir::read(7 + dir, pt(o));
+            let lo = area_lo * kir::lit(frac) * face_vel_sum(dir, 0);
+            let hi = area_hi * kir::lit(frac) * face_vel_sum(dir, 1);
+            total_flux = total_flux + (hi - lo);
+        }
+        let total_flux = k.let_(total_flux);
+        let vol = k.let_(kir::read(10, [0, 0, 0]));
+        let volume_change = vol.clone() / (vol.clone() + total_flux.clone()).max(G_SMALL);
+        let d0 = k.let_(kir::read(0, [0, 0, 0]));
+        let recip = kir::lit(1.0) / (d0.clone() * vol).max(G_SMALL);
+        let e1 = kir::read(11, [0, 0, 0])
+            - (kir::read(12, [0, 0, 0]) + kir::read(13, [0, 0, 0])) * total_flux * recip;
+        k.store(14, e1);
+        k.store(15, d0 * volume_change);
+        ctx.par_loop_ir(
             if predict { "cl3d_pdv_predict" } else { "cl3d_pdv" },
             self.block,
             self.cells(),
-            kernel(move |c| {
-                let face_vel_sum = |c: &Ctx, dir: usize, hi: isize| -> f64 {
-                    // sum of the 4 node velocities on the lo/hi dir-face
-                    let mut s0 = 0.0; // vel0
-                    let mut s1 = 0.0; // vel1
-                    for o in NODE_TO_CELL {
-                        if o[dir] == hi {
-                            s0 += c.r3(1 + dir, o[0], o[1], o[2]);
-                            s1 += c.r3(4 + dir, o[0], o[1], o[2]);
-                        }
-                    }
-                    if predict {
-                        2.0 * s0
-                    } else {
-                        s0 + s1
-                    }
-                };
-                let frac = if predict { 0.125 * dt * 0.5 } else { 0.125 * dt };
-                let mut total_flux = 0.0;
-                for dir in 0..3 {
-                    let area_lo = c.r3(7 + dir, 0, 0, 0);
-                    let o = [
-                        [1, 0, 0][dir] as isize,
-                        [0, 1, 0][dir] as isize,
-                        [0, 0, 1][dir] as isize,
-                    ];
-                    let area_hi = c.r3(7 + dir, o[0], o[1], o[2]);
-                    let lo = area_lo * frac * face_vel_sum(c, dir, 0);
-                    let hi = area_hi * frac * face_vel_sum(c, dir, 1);
-                    total_flux += hi - lo;
-                }
-                let vol = c.r3(10, 0, 0, 0);
-                let volume_change = vol / (vol + total_flux).max(G_SMALL);
-                let d0 = c.r3(0, 0, 0, 0);
-                let recip = 1.0 / (d0 * vol).max(G_SMALL);
-                let e1 =
-                    c.r3(11, 0, 0, 0) - (c.r3(12, 0, 0, 0) + c.r3(13, 0, 0, 0)) * total_flux * recip;
-                c.w3(14, 0, 0, 0, e1);
-                c.w3(15, 0, 0, 0, d0 * volume_change);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.density0, self.s_pt, Access::Read),
                 Arg::dat(self.vel0[0], self.s_n2c, Access::Read),
@@ -667,61 +695,61 @@ impl CloverLeaf3D {
                 Arg::dat(self.energy1, self.s_pt, Access::Write),
                 Arg::dat(self.density1, self.s_pt, Access::Write),
             ],
+            1.0,
         );
     }
 
     pub fn revert(&self, ctx: &mut impl Record) {
-        ctx.par_loop(
+        let mut k = kir::KirBuilder::new();
+        k.store(2, kir::read(0, [0, 0, 0]));
+        k.store(3, kir::read(1, [0, 0, 0]));
+        ctx.par_loop_ir(
             "cl3d_revert",
             self.block,
             self.cells(),
-            kernel(|c| {
-                let d = c.r3(0, 0, 0, 0);
-                let e = c.r3(1, 0, 0, 0);
-                c.w3(2, 0, 0, 0, d);
-                c.w3(3, 0, 0, 0, e);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.density0, self.s_pt, Access::Read),
                 Arg::dat(self.energy0, self.s_pt, Access::Read),
                 Arg::dat(self.density1, self.s_pt, Access::Write),
                 Arg::dat(self.energy1, self.s_pt, Access::Write),
             ],
+            1.0,
         );
     }
 
     pub fn accelerate(&self, ctx: &mut impl Record) {
         let dt = self.dt;
         let dd = self.d;
-        ctx.par_loop(
+        let vol = dd[0] * dd[1] * dd[2];
+        let mut k = kir::KirBuilder::new();
+        let mut nm = kir::lit(0.0);
+        for o in CELL_TO_NODE {
+            nm = nm + kir::read(0, pt(o));
+        }
+        let nodal_mass = k.let_(nm * kir::lit(0.125 * vol));
+        let sbm = k.let_(kir::lit(0.125 * dt) / nodal_mass.max(G_SMALL));
+        // per direction: sum over the 4 cell-pairs straddling the node
+        for dir in 0..3 {
+            let mut dp = kir::lit(0.0);
+            let mut dv = kir::lit(0.0);
+            for o in CELL_TO_NODE {
+                if o[dir] == 0 {
+                    let mut om = o;
+                    om[dir] = -1;
+                    dp = dp + (kir::read(1, pt(o)) - kir::read(1, pt(om)));
+                    dv = dv + (kir::read(2, pt(o)) - kir::read(2, pt(om)));
+                }
+            }
+            // dv_dir = sbm * area_dir * (dp + dv), area_dir = vol/d[dir]
+            let v = kir::read(3 + dir, [0, 0, 0]) - sbm.clone() * kir::lit(vol / dd[dir]) * (dp + dv);
+            k.store(6 + dir, v);
+        }
+        ctx.par_loop_ir(
             "cl3d_accelerate",
             self.block,
             self.nodes(),
-            kernel(move |c| {
-                let vol = dd[0] * dd[1] * dd[2];
-                let mut nodal_mass = 0.0;
-                for o in CELL_TO_NODE {
-                    nodal_mass += c.r3(0, o[0], o[1], o[2]);
-                }
-                nodal_mass *= 0.125 * vol;
-                let sbm = 0.125 * dt / nodal_mass.max(G_SMALL);
-                // per direction: sum over the 4 cell-pairs straddling the node
-                for dir in 0..3 {
-                    let mut dp = 0.0;
-                    let mut dv = 0.0;
-                    for o in CELL_TO_NODE {
-                        if o[dir] == 0 {
-                            let mut om = o;
-                            om[dir] = -1;
-                            dp += c.r3(1, o[0], o[1], o[2]) - c.r3(1, om[0], om[1], om[2]);
-                            dv += c.r3(2, o[0], o[1], o[2]) - c.r3(2, om[0], om[1], om[2]);
-                        }
-                    }
-                    // dv_dir = sbm * area_dir * (dp + dv), area_dir = vol/d[dir]
-                    let v = c.r3(3 + dir, 0, 0, 0) - sbm * (vol / dd[dir]) * (dp + dv);
-                    c.w3(6 + dir, 0, 0, 0, v);
-                }
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.density0, self.s_c2n, Access::Read),
                 Arg::dat(self.pressure, self.s_c2n, Access::Read),
@@ -733,6 +761,7 @@ impl CloverLeaf3D {
                 Arg::dat(self.vel1[1], self.s_pt, Access::Write),
                 Arg::dat(self.vel1[2], self.s_pt, Access::Write),
             ],
+            1.0,
         );
     }
 
@@ -740,26 +769,27 @@ impl CloverLeaf3D {
         let dt = self.dt;
         for dir in Dir::all() {
             let i = dir as usize;
-            ctx.par_loop(
+            // average of 4 face-node velocities, vel0+vel1
+            let mut k = kir::KirBuilder::new();
+            let mut s = kir::lit(0.0);
+            for o in NODE_TO_CELL {
+                if o[i] == 0 {
+                    s = s + (kir::read(1, pt(o)) + kir::read(2, pt(o)));
+                }
+            }
+            k.store(3, kir::lit(0.125 * dt) * kir::read(0, [0, 0, 0]) * s);
+            ctx.par_loop_ir(
                 &format!("cl3d_flux_calc_{}", dir.name()),
                 self.block,
                 self.faces(dir),
-                kernel(move |c| {
-                    // average of 4 face-node velocities, vel0+vel1
-                    let mut s = 0.0;
-                    for o in NODE_TO_CELL {
-                        if o[i] == 0 {
-                            s += c.r3(1, o[0], o[1], o[2]) + c.r3(2, o[0], o[1], o[2]);
-                        }
-                    }
-                    c.w3(3, 0, 0, 0, 0.125 * dt * c.r3(0, 0, 0, 0) * s);
-                }),
+                k.build(),
                 vec![
                     Arg::dat(self.area[i], self.s_pt, Access::Read),
                     Arg::dat(self.vel0[i], self.s_face[i], Access::Read),
                     Arg::dat(self.vel1[i], self.s_face[i], Access::Read),
                     Arg::dat(self.vol_flux[i], self.s_pt, Access::Write),
                 ],
+                1.0,
             );
         }
     }
@@ -771,25 +801,26 @@ impl CloverLeaf3D {
         let i = dir as usize;
         let dn = dir.name();
 
-        // pass 1: pre/post volumes
-        ctx.par_loop(
+        // pass 1: pre/post volumes (the `remaining` mask is a record-time
+        // constant, so the telescoping unrolls into the IR tree)
+        let mut k = kir::KirBuilder::new();
+        let mut pre = kir::read(0, [0, 0, 0]);
+        for (d2, rem) in remaining.iter().enumerate() {
+            if *rem {
+                let o = Dir::all()[d2].o(1);
+                pre = pre + (kir::read(1 + d2, pt(o)) - kir::read(1 + d2, [0, 0, 0]));
+            }
+        }
+        let pre = k.let_(pre);
+        let oi = Dir::all()[i].o(1);
+        let post = pre.clone() - (kir::read(1 + i, pt(oi)) - kir::read(1 + i, [0, 0, 0]));
+        k.store(4, pre);
+        k.store(5, post);
+        ctx.par_loop_ir(
             &format!("cl3d_advec_cell_{dn}_pre"),
             self.block,
             self.cells_h(2),
-            kernel(move |c| {
-                let vol = c.r3(0, 0, 0, 0);
-                let mut pre = vol;
-                for (d2, rem) in remaining.iter().enumerate() {
-                    if *rem {
-                        let o = Dir::all()[d2].o(1);
-                        pre += c.r3(1 + d2, o[0], o[1], o[2]) - c.r3(1 + d2, 0, 0, 0);
-                    }
-                }
-                let oi = Dir::all()[i].o(1);
-                let post = pre - (c.r3(1 + i, oi[0], oi[1], oi[2]) - c.r3(1 + i, 0, 0, 0));
-                c.w3(4, 0, 0, 0, pre);
-                c.w3(5, 0, 0, 0, post);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.volume, self.s_pt, Access::Read),
                 Arg::dat(self.vol_flux[0], self.s_p1[0], Access::Read),
@@ -798,39 +829,47 @@ impl CloverLeaf3D {
                 Arg::dat(self.work1, self.s_pt, Access::Write),
                 Arg::dat(self.work2, self.s_pt, Access::Write),
             ],
+            1.0,
         );
 
-        // pass 2: limited upwind mass/energy fluxes
-        ctx.par_loop(
+        // pass 2: limited upwind mass/energy fluxes. Both upwind
+        // orientations are built as subtrees and the sign of the volume
+        // flux selects between them — the selected side evaluates the
+        // exact arithmetic the branchy closure used to run.
+        let mut k = kir::KirBuilder::new();
+        let vf = k.let_(kir::read(0, [0, 0, 0]));
+        let orient = |k: &mut kir::KirBuilder, up: isize, don: isize, down: isize| {
+            let ou = pt(Dir::all()[i].o(up));
+            let od = pt(Dir::all()[i].o(don));
+            let ow = pt(Dir::all()[i].o(down));
+            let pre_d = k.let_(kir::read(1, od).max(G_SMALL));
+            let sig = vf.clone().abs() / pre_d.clone();
+            let den_d = k.let_(kir::read(2, od));
+            let lim = limited_ir(
+                den_d.clone() - kir::read(2, ou),
+                kir::read(2, ow) - den_d.clone(),
+                sig,
+            );
+            let mf = k.let_(vf.clone() * (den_d.clone() + lim));
+            let sigm = mf.clone().abs() / (den_d * pre_d).max(G_SMALL);
+            let en_d = k.let_(kir::read(3, od));
+            let lime = limited_ir(
+                en_d.clone() - kir::read(3, ou),
+                kir::read(3, ow) - en_d.clone(),
+                sigm,
+            );
+            (mf.clone(), mf * (en_d + lime))
+        };
+        let (mf_up, ef_up) = orient(&mut k, -2, -1, 0);
+        let (mf_dn, ef_dn) = orient(&mut k, 1, 0, -1);
+        let cond = vf.gt(0.0);
+        k.store(4, cond.clone().select(mf_up, mf_dn));
+        k.store(5, cond.select(ef_up, ef_dn));
+        ctx.par_loop_ir(
             &format!("cl3d_advec_cell_{dn}_flux"),
             self.block,
             self.faces(dir),
-            kernel(move |c| {
-                let vf = c.r3(0, 0, 0, 0);
-                let (up, don, down): (isize, isize, isize) =
-                    if vf > 0.0 { (-2, -1, 0) } else { (1, 0, -1) };
-                let ou = Dir::all()[i].o(up);
-                let od = Dir::all()[i].o(don);
-                let ow = Dir::all()[i].o(down);
-                let pre_d = c.r3(1, od[0], od[1], od[2]).max(G_SMALL);
-                let sig = vf.abs() / pre_d;
-                let den_d = c.r3(2, od[0], od[1], od[2]);
-                let lim = limited(
-                    den_d - c.r3(2, ou[0], ou[1], ou[2]),
-                    c.r3(2, ow[0], ow[1], ow[2]) - den_d,
-                    sig,
-                );
-                let mf = vf * (den_d + lim);
-                c.w3(4, 0, 0, 0, mf);
-                let sigm = mf.abs() / (den_d * pre_d).max(G_SMALL);
-                let en_d = c.r3(3, od[0], od[1], od[2]);
-                let lime = limited(
-                    en_d - c.r3(3, ou[0], ou[1], ou[2]),
-                    c.r3(3, ow[0], ow[1], ow[2]) - en_d,
-                    sigm,
-                );
-                c.w3(5, 0, 0, 0, mf * (en_d + lime));
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.vol_flux[i], self.s_pt, Access::Read),
                 Arg::dat(self.work1, self.s_adv[i], Access::Read),
@@ -839,26 +878,27 @@ impl CloverLeaf3D {
                 Arg::dat(self.mass_flux[i], self.s_pt, Access::Write),
                 Arg::dat(self.work7, self.s_pt, Access::Write),
             ],
+            1.0,
         );
 
         // pass 3: conservative update
-        ctx.par_loop(
+        let mut k = kir::KirBuilder::new();
+        let o1 = pt(Dir::all()[i].o(1));
+        let pre_vol = kir::read(0, [0, 0, 0]);
+        let post_vol = kir::read(1, [0, 0, 0]);
+        let den = kir::read(2, [0, 0, 0]);
+        let en = kir::read(3, [0, 0, 0]);
+        let pre_mass = k.let_(den * pre_vol);
+        let post_mass = k.let_(pre_mass.clone() + kir::read(4, [0, 0, 0]) - kir::read(4, o1));
+        let post_en = (en * pre_mass + kir::read(5, [0, 0, 0]) - kir::read(5, o1))
+            / post_mass.clone().max(G_SMALL);
+        k.store(2, post_mass / post_vol.max(G_SMALL));
+        k.store(3, post_en);
+        ctx.par_loop_ir(
             &format!("cl3d_advec_cell_{dn}_upd"),
             self.block,
             self.cells(),
-            kernel(move |c| {
-                let o1 = Dir::all()[i].o(1);
-                let pre_vol = c.r3(0, 0, 0, 0);
-                let post_vol = c.r3(1, 0, 0, 0);
-                let den = c.r3(2, 0, 0, 0);
-                let en = c.r3(3, 0, 0, 0);
-                let pre_mass = den * pre_vol;
-                let post_mass = pre_mass + c.r3(4, 0, 0, 0) - c.r3(4, o1[0], o1[1], o1[2]);
-                let post_en = (en * pre_mass + c.r3(5, 0, 0, 0) - c.r3(5, o1[0], o1[1], o1[2]))
-                    / post_mass.max(G_SMALL);
-                c.w3(2, 0, 0, 0, post_mass / post_vol.max(G_SMALL));
-                c.w3(3, 0, 0, 0, post_en);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.work1, self.s_pt, Access::Read),
                 Arg::dat(self.work2, self.s_pt, Access::Read),
@@ -867,6 +907,7 @@ impl CloverLeaf3D {
                 Arg::dat(self.mass_flux[i], self.s_p1[i], Access::Read),
                 Arg::dat(self.work7, self.s_p1[i], Access::Read),
             ],
+            1.0,
         );
     }
 
@@ -994,37 +1035,36 @@ impl CloverLeaf3D {
     }
 
     pub fn reset_field(&self, ctx: &mut impl Record) {
-        ctx.par_loop(
+        let mut k = kir::KirBuilder::new();
+        k.store(2, kir::read(0, [0, 0, 0]));
+        k.store(3, kir::read(1, [0, 0, 0]));
+        ctx.par_loop_ir(
             "cl3d_reset_field",
             self.block,
             self.cells(),
-            kernel(|c| {
-                let d = c.r3(0, 0, 0, 0);
-                let e = c.r3(1, 0, 0, 0);
-                c.w3(2, 0, 0, 0, d);
-                c.w3(3, 0, 0, 0, e);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.density1, self.s_pt, Access::Read),
                 Arg::dat(self.energy1, self.s_pt, Access::Read),
                 Arg::dat(self.density0, self.s_pt, Access::Write),
                 Arg::dat(self.energy0, self.s_pt, Access::Write),
             ],
+            1.0,
         );
-        ctx.par_loop(
+        let mut k = kir::KirBuilder::new();
+        for i in 0..3 {
+            k.store(3 + i, kir::read(i, [0, 0, 0]));
+        }
+        ctx.par_loop_ir(
             "cl3d_reset_vel",
             self.block,
             self.nodes(),
-            kernel(|c| {
-                for i in 0..3 {
-                    let v = c.r3(i, 0, 0, 0);
-                    c.w3(3 + i, 0, 0, 0, v);
-                }
-            }),
+            k.build(),
             (0..3)
                 .map(|i| Arg::dat(self.vel1[i], self.s_pt, Access::Read))
                 .chain((0..3).map(|i| Arg::dat(self.vel0[i], self.s_pt, Access::Write)))
                 .collect(),
+            1.0,
         );
     }
 
@@ -1192,29 +1232,29 @@ impl CloverLeaf3D {
     }
 
     pub fn field_summary(&self, ctx: &mut impl Drive) -> FieldSummary3D {
-        ctx.par_loop(
+        let mut k = kir::KirBuilder::new();
+        let vol = k.let_(kir::read(0, [0, 0, 0]));
+        let den = k.let_(kir::read(1, [0, 0, 0]));
+        let en = kir::read(2, [0, 0, 0]);
+        let press = kir::read(3, [0, 0, 0]);
+        let mut vsqrd = kir::lit(0.0);
+        for o in NODE_TO_CELL {
+            for vdim in 0..3 {
+                let v = kir::read(4 + vdim, pt(o));
+                vsqrd = vsqrd + kir::lit(0.125) * v.clone() * v;
+            }
+        }
+        let mass = k.let_(den.clone() * vol.clone());
+        k.reduce(0, RedOp::Sum, vol);
+        k.reduce(1, RedOp::Sum, mass.clone());
+        k.reduce(2, RedOp::Sum, mass.clone() * en);
+        k.reduce(3, RedOp::Sum, kir::lit(0.5) * mass.clone() * vsqrd);
+        k.reduce(4, RedOp::Sum, mass * press / den.max(G_SMALL));
+        ctx.par_loop_ir(
             "cl3d_field_summary",
             self.block,
             self.cells(),
-            kernel(|c| {
-                let vol = c.r3(0, 0, 0, 0);
-                let den = c.r3(1, 0, 0, 0);
-                let en = c.r3(2, 0, 0, 0);
-                let press = c.r3(3, 0, 0, 0);
-                let mut vsqrd = 0.0;
-                for o in NODE_TO_CELL {
-                    for vdim in 0..3 {
-                        let v = c.r3(4 + vdim, o[0], o[1], o[2]);
-                        vsqrd += 0.125 * v * v;
-                    }
-                }
-                let mass = den * vol;
-                c.red_sum(0, vol);
-                c.red_sum(1, mass);
-                c.red_sum(2, mass * en);
-                c.red_sum(3, 0.5 * mass * vsqrd);
-                c.red_sum(4, mass * press / den.max(G_SMALL));
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.volume, self.s_pt, Access::Read),
                 Arg::dat(self.density0, self.s_pt, Access::Read),
@@ -1229,6 +1269,7 @@ impl CloverLeaf3D {
                 Arg::GblRed { red: self.r_ke, op: RedOp::Sum },
                 Arg::GblRed { red: self.r_press, op: RedOp::Sum },
             ],
+            1.0,
         );
         FieldSummary3D {
             volume: ctx.reduction_result(self.r_vol),

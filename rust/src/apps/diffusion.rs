@@ -8,6 +8,7 @@
 //! movement optimisations all have something to act on.
 
 use crate::ops::kernel::kernel;
+use crate::ops::kir;
 use crate::ops::stencil::shapes;
 use crate::ops::{
     Access, Arg, BlockId, DatasetId, Declare, Drive, RedOp, Record, ReductionId, StencilId,
@@ -91,36 +92,44 @@ impl Diffusion2D {
             (0, self.ny as isize),
             (0, 1),
         ];
-        ctx.par_loop(
+        // Both step kernels are recorded as declarative kernel IR: the
+        // native executor runs the closure *derived* from the IR, the
+        // vector executor compiles it into row programs — bit-identical
+        // either way.
+        let mut k = kir::KirBuilder::new();
+        let l = k.let_(
+            kir::read(0, [-1, 0, 0]) + kir::read(0, [1, 0, 0]) + kir::read(0, [0, -1, 0])
+                + kir::read(0, [0, 1, 0])
+                - kir::lit(4.0) * kir::read(0, [0, 0, 0]),
+        );
+        k.store(2, kir::read(1, [0, 0, 0]) * l);
+        ctx.par_loop_ir(
             "diff_lap",
             self.block,
             interior,
-            kernel(|c| {
-                let l = c.r(0, -1, 0) + c.r(0, 1, 0) + c.r(0, 0, -1) + c.r(0, 0, 1)
-                    - 4.0 * c.r(0, 0, 0);
-                let k = c.r(1, 0, 0);
-                c.w(2, 0, 0, k * l);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.u, self.s_star, Access::Read),
                 Arg::dat(self.kappa, self.s_pt, Access::Read),
                 Arg::dat(self.lap, self.s_pt, Access::Write),
             ],
+            1.0,
         );
-        let alpha = self.alpha;
-        ctx.par_loop(
+        let mut k = kir::KirBuilder::new();
+        k.store(
+            0,
+            kir::read(0, [0, 0, 0]) + kir::lit(self.alpha) * kir::read(1, [0, 0, 0]),
+        );
+        ctx.par_loop_ir(
             "diff_update",
             self.block,
             interior,
-            kernel(move |c| {
-                let u = c.r(0, 0, 0);
-                let l = c.r(1, 0, 0);
-                c.w(0, 0, 0, u + alpha * l);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.u, self.s_pt, Access::ReadWrite),
                 Arg::dat(self.lap, self.s_pt, Access::Read),
             ],
+            1.0,
         );
     }
 
@@ -171,14 +180,13 @@ impl Diffusion2D {
             (0, self.ny as isize),
             (0, 1),
         ];
-        ctx.par_loop(
+        let mut k = kir::KirBuilder::new();
+        k.reduce(0, RedOp::Sum, kir::read(0, [0, 0, 0]));
+        ctx.par_loop_ir(
             "diff_sum",
             self.block,
             interior,
-            kernel(|c| {
-                let v = c.r(0, 0, 0);
-                c.red_sum(0, v);
-            }),
+            k.build(),
             vec![
                 Arg::dat(self.u, self.s_pt, Access::Read),
                 Arg::GblRed {
@@ -186,6 +194,7 @@ impl Diffusion2D {
                     op: RedOp::Sum,
                 },
             ],
+            1.0,
         );
     }
 }

@@ -33,7 +33,7 @@
 //! [`Config`].
 
 use crate::distributed::{DecompKind, Interconnect, ShardedEngine};
-use crate::exec::Engine;
+use crate::exec::{Engine, ExecBackend};
 use crate::memory::{
     AppCalib, GpuCalib, GpuExplicitEngine, GpuOpts, KnlCalib, KnlEngine, Link, PlainEngine,
     TieredEngine, UnifiedCalib, UnifiedEngine,
@@ -521,6 +521,10 @@ pub struct Config {
     /// to pick the depth per chain. Engines ignore this field — the
     /// step drivers (CLI/bench runners) consume it.
     pub fuse: u32,
+    /// Which numeric executor [`crate::program::Session::new`] builds
+    /// (the `--exec` CLI seam). Numerics are bit-identical across
+    /// backends; only the loop-body machinery differs.
+    pub exec: ExecBackend,
 }
 
 /// A `x<N>` ranks token (`x4` → 4).
@@ -548,12 +552,19 @@ impl Config {
             um: UnifiedCalib::default(),
             tune: None,
             fuse: 1,
+            exec: ExecBackend::default(),
         }
     }
 
     /// Set the temporal fusion depth (see [`Config::fuse`]).
     pub fn with_fuse(mut self, k: u32) -> Self {
         self.fuse = k;
+        self
+    }
+
+    /// Select the numeric executor backend (see [`Config::exec`]).
+    pub fn with_exec(mut self, exec: ExecBackend) -> Self {
+        self.exec = exec;
         self
     }
 
@@ -1032,6 +1043,7 @@ impl Config {
                     um: self.um.clone(),
                     tune: None,
                     fuse: 1,
+                    exec: self.exec,
                 };
                 let engines = (0..ranks.max(1)).map(|_| rank_cfg.build_engine()).collect();
                 Box::new(ShardedEngine::new(engines, decomp, link, overlap))

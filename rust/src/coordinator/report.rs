@@ -106,6 +106,8 @@ pub fn json_record(
             "\"tune_model_speedup\":{:.4},",
             "\"analysis_builds\":{},\"analysis_reuse_hits\":{},",
             "\"fused_steps\":{},",
+            "\"exec_backend\":\"{}\",\"kir_kernels_compiled\":{},",
+            "\"kir_fallback_loops\":{},",
             "\"program_freeze_s\":{:.6},",
             "\"spans_recorded\":{},\"span_max_depth\":{}{}}}"
         ),
@@ -135,6 +137,9 @@ pub fn json_record(
         m.analysis_builds,
         m.analysis_reuse_hits,
         m.fused_steps,
+        esc(&m.exec_backend),
+        m.kir_kernels_compiled,
+        m.kir_fallback_loops,
         m.program_freeze_s,
         m.spans_recorded,
         m.span_max_depth,
@@ -384,6 +389,9 @@ mod tests {
         assert!(j.contains("\"tune_model_speedup\":1.0000"));
         assert!(j.contains("\"bound\":\"idle\""));
         assert!(j.contains("\"fused_steps\":0"));
+        assert!(j.contains("\"exec_backend\":\"\""));
+        assert!(j.contains("\"kir_kernels_compiled\":0"));
+        assert!(j.contains("\"kir_fallback_loops\":0"));
         assert!(j.contains("\"spans_recorded\":0"));
         assert!(j.contains("\"p50_loop_time_s\":"));
         assert!(j.contains("\"util_compute\":0.0000"));

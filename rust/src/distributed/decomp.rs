@@ -201,6 +201,7 @@ mod tests {
             range,
             args: vec![],
             kernel: kernel(|_| {}),
+            kernel_ir: None,
             seq: 0,
             bw_efficiency: 1.0,
         }

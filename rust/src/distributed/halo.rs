@@ -202,6 +202,7 @@ mod tests {
                     Arg::dat(DatasetId(1), StencilId(0), Access::Write),
                 ],
                 kernel: kernel(|_| {}),
+                kernel_ir: None,
                 seq: 0,
                 bw_efficiency: 1.0,
             },
@@ -214,6 +215,7 @@ mod tests {
                     Arg::dat(DatasetId(0), StencilId(0), Access::Write),
                 ],
                 kernel: kernel(|_| {}),
+                kernel_ir: None,
                 seq: 1,
                 bw_efficiency: 1.0,
             },

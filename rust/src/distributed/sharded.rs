@@ -397,6 +397,7 @@ mod tests {
                     let [x, y, _] = c.idx();
                     c.w(0, 0, 0, (x * 3 + y) as f64 * 0.5);
                 }),
+                kernel_ir: None,
                 seq: 0,
                 bw_efficiency: 1.0,
             },
@@ -412,6 +413,7 @@ mod tests {
                     let v = c.r(0, -1, 0) + c.r(0, 1, 0) + c.r(0, 0, -1) + c.r(0, 0, 1);
                     c.w(1, 0, 0, 0.25 * v);
                 }),
+                kernel_ir: None,
                 seq: 1,
                 bw_efficiency: 1.0,
             },
@@ -428,6 +430,7 @@ mod tests {
                     let s = c.r(1, 0, 0);
                     c.w(1, 0, 0, s + 0.1 * v);
                 }),
+                kernel_ir: None,
                 seq: 2,
                 bw_efficiency: 1.0,
             },

@@ -144,6 +144,16 @@ pub struct Metrics {
     /// Host seconds spent freezing the Program (declaration validation +
     /// per-chain analysis), charged once per Session.
     pub program_freeze_s: f64,
+    /// Name of the numeric executor backing the run (`"native"`,
+    /// `"vector"`, ...); empty when no Session was involved.
+    pub exec_backend: String,
+    /// Distinct kernel IRs the frozen Program compiled to vector row
+    /// plans (a per-Session constant, like `program_freeze_s`).
+    pub kir_kernels_compiled: u64,
+    /// Loop executions the vector backend ran through the closure
+    /// fallback instead of a compiled row plan (0 on the native
+    /// backend).
+    pub kir_fallback_loops: u64,
     /// Per-kernel-name breakdown.
     pub per_loop: HashMap<String, LoopStat>,
     /// Per-rank breakdown of sharded execution (empty when unsharded).
@@ -446,6 +456,11 @@ impl Metrics {
         self.analysis_builds += other.analysis_builds;
         self.analysis_reuse_hits += other.analysis_reuse_hits;
         self.program_freeze_s += other.program_freeze_s;
+        if self.exec_backend.is_empty() {
+            self.exec_backend = other.exec_backend.clone();
+        }
+        self.kir_kernels_compiled += other.kir_kernels_compiled;
+        self.kir_fallback_loops += other.kir_fallback_loops;
         for (k, v) in &other.per_loop {
             let st = self.per_loop.entry(k.clone()).or_default();
             st.invocations += v.invocations;

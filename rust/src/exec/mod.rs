@@ -12,15 +12,48 @@ pub mod metrics;
 pub mod native;
 pub mod pjrt;
 pub mod timeline;
+pub mod vector;
 
 pub use metrics::{Bound, LoopStat, Metrics, RankStat, ResourceStat};
 pub use native::NativeExecutor;
 pub use pjrt::PjrtExecutor;
+pub use vector::VectorExecutor;
 pub use timeline::{
     chrome_trace_json, chrome_trace_json_with_spans, EventKind, StreamClass, Timeline, TraceEvent,
 };
 
 use crate::ops::{DataStore, Dataset, LoopInst, Range3, Reduction, Stencil};
+
+/// Which numeric executor a [`crate::program::Session`] builds — the
+/// `--exec` seam. Numerics are bit-identical either way; only the loop
+/// body machinery differs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// Point-by-point closure execution ([`NativeExecutor`]).
+    #[default]
+    Native,
+    /// Compiled kernel-IR row programs with closure fallback
+    /// ([`VectorExecutor`]).
+    Vector,
+}
+
+impl ExecBackend {
+    /// Parse a `--exec` flag value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "native" => Some(ExecBackend::Native),
+            "vector" => Some(ExecBackend::Vector),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecBackend::Native => "native",
+            ExecBackend::Vector => "vector",
+        }
+    }
+}
 
 /// Everything an engine needs to run a chain: dataset/stencil metadata,
 /// the canonical data store, reduction slots and the metrics sink.
@@ -48,6 +81,12 @@ pub trait Executor {
 
     /// Executor name for reports.
     fn name(&self) -> &'static str;
+
+    /// `(vector_loops, fallback_loops)` counters for executors that
+    /// specialise kernel IR; everything else reports zeros.
+    fn kir_loop_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// Executor that runs nothing. Used wherever a chain must be *priced*

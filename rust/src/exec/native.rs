@@ -39,25 +39,30 @@ impl Executor for NativeExecutor {
     }
 }
 
-/// Free-function core so other executors (PJRT fallback) can reuse it.
-pub fn run_loop_native(
+/// Per-loop execution tables: argument views positioned at the range
+/// origin, the flat global-constant table and the local reduction slots.
+/// Shared by the native and vector executors so both resolve arguments
+/// identically.
+pub(crate) struct LoopSetup {
+    pub views: Vec<ArgView>,
+    pub consts: Vec<f64>,
+    /// Local slot → global `ReductionId` index.
+    pub red_slots: Vec<usize>,
+    /// Per-loop partial values, starting at the operator identity.
+    pub red_vals: Vec<f64>,
+}
+
+pub(crate) fn loop_setup(
     l: &LoopInst,
-    range: Range3,
+    range: &Range3,
     datasets: &[Dataset],
     store: &mut DataStore,
-    reds: &mut [Reduction],
-) {
-    let (x0, x1) = range[0];
-    let (y0, y1) = range[1];
-    let (z0, z1) = range[2];
-    if x0 >= x1 || y0 >= y1 || z0 >= z1 {
-        return;
-    }
-
-    // Build per-argument views positioned at the range origin, plus the
-    // reduction slot table and the global-constant table for this loop.
+) -> LoopSetup {
+    let (x0, _) = range[0];
+    let (y0, _) = range[1];
+    let (z0, _) = range[2];
     let mut views: Vec<ArgView> = Vec::with_capacity(l.args.len());
-    let mut red_slots: Vec<usize> = Vec::new(); // slot -> global ReductionId index
+    let mut red_slots: Vec<usize> = Vec::new();
     let mut red_vals: Vec<f64> = Vec::new();
     let mut consts: Vec<f64> = Vec::new();
 
@@ -90,37 +95,82 @@ pub fn run_loop_native(
         }
     }
 
-    let nviews = views.len();
-    let mut row_views = views.clone();
-    for z in z0..z1 {
-        for y in y0..y1 {
-            // Position row start: origin + (y - y0)*sy + (z - z0)*sz.
-            for v in 0..nviews {
-                let s = views[v].strides;
-                row_views[v].ptr = unsafe {
-                    views[v].ptr.offset((y - y0) * s[1] + (z - z0) * s[2])
-                };
-            }
-            let mut ctx = Ctx {
-                args: &row_views,
-                red: &mut red_vals,
-                consts: &consts,
-                idx: [x0, y, z],
-                xoff: 0,
-            };
-            for x in x0..x1 {
-                ctx.idx[0] = x;
-                ctx.xoff = x - x0;
-                (l.kernel)(&mut ctx);
-            }
-        }
+    LoopSetup {
+        views,
+        consts,
+        red_slots,
+        red_vals,
     }
+}
 
-    // Fold local reduction slots into the global reduction table.
+/// Fold per-loop reduction slots into the global reduction table.
+pub(crate) fn fold_reductions(red_slots: &[usize], red_vals: &[f64], reds: &mut [Reduction]) {
     for (slot, &rid) in red_slots.iter().enumerate() {
         let r = &mut reds[rid];
         r.value = r.op.combine(r.value, red_vals[slot]);
     }
+}
+
+/// Free-function core so other executors (PJRT fallback, the vector
+/// backend's non-IR path) can reuse it.
+pub fn run_loop_native(
+    l: &LoopInst,
+    range: Range3,
+    datasets: &[Dataset],
+    store: &mut DataStore,
+    reds: &mut [Reduction],
+) {
+    let (x0, x1) = range[0];
+    let (y0, y1) = range[1];
+    let (z0, z1) = range[2];
+    if x0 >= x1 || y0 >= y1 || z0 >= z1 {
+        return;
+    }
+
+    let LoopSetup {
+        views,
+        consts,
+        red_slots,
+        mut red_vals,
+    } = loop_setup(l, &range, datasets, store);
+
+    // Row positioning is incremental: plane views advance by the z
+    // stride per plane, row views by the y stride per row — no per-row
+    // re-derivation from the range origin.
+    let mut plane_views = views;
+    for z in z0..z1 {
+        let mut row_views = plane_views.clone();
+        for y in y0..y1 {
+            {
+                let mut ctx = Ctx {
+                    args: &row_views,
+                    red: &mut red_vals,
+                    consts: &consts,
+                    idx: [x0, y, z],
+                    xoff: 0,
+                    #[cfg(debug_assertions)]
+                    wrote: 0,
+                };
+                for x in x0..x1 {
+                    ctx.idx[0] = x;
+                    ctx.xoff = x - x0;
+                    #[cfg(debug_assertions)]
+                    {
+                        ctx.wrote = 0;
+                    }
+                    (l.kernel)(&mut ctx);
+                }
+            }
+            for v in row_views.iter_mut() {
+                v.ptr = unsafe { v.ptr.offset(v.strides[1]) };
+            }
+        }
+        for v in plane_views.iter_mut() {
+            v.ptr = unsafe { v.ptr.offset(v.strides[2]) };
+        }
+    }
+
+    fold_reductions(&red_slots, &red_vals, reds);
 }
 
 #[cfg(test)]
@@ -163,6 +213,7 @@ mod tests {
                 let [x, y, _] = c.idx();
                 c.w(0, 0, 0, (x + 10 * y) as f64);
             }),
+            kernel_ir: None,
             seq: 0,
             bw_efficiency: 1.0,
         };
@@ -179,6 +230,7 @@ mod tests {
                 let v = c.r(0, -1, 0) + c.r(0, 1, 0) + c.r(0, 0, -1) + c.r(0, 0, 1);
                 c.w(1, 0, 0, v);
             }),
+            kernel_ir: None,
             seq: 1,
             bw_efficiency: 1.0,
         };
@@ -211,6 +263,7 @@ mod tests {
                 let [x, y, _] = c.idx();
                 c.w(0, 0, 0, ((x - 1) * (y - 2)) as f64);
             }),
+            kernel_ir: None,
             seq: 0,
             bw_efficiency: 1.0,
         };
@@ -229,6 +282,7 @@ mod tests {
                 let v = c.r(0, 0, 0);
                 c.red_min(0, v);
             }),
+            kernel_ir: None,
             seq: 1,
             bw_efficiency: 1.0,
         };
@@ -261,6 +315,7 @@ mod tests {
                 let v = c.gbl(0) * c.gbl(1);
                 c.w(0, 0, 0, v);
             }),
+            kernel_ir: None,
             seq: 0,
             bw_efficiency: 1.0,
         };
@@ -287,11 +342,70 @@ mod tests {
             kernel: kernel(move |_| {
                 called2.store(true, std::sync::atomic::Ordering::SeqCst)
             }),
+            kernel_ir: None,
             seq: 0,
             bw_efficiency: 1.0,
         };
         let mut ex = NativeExecutor::new();
         ex.run_loop(&l, l.range, &datasets, &mut store, &mut reds);
         assert!(!called.load(std::sync::atomic::Ordering::SeqCst));
+    }
+
+    /// Write-first data may be read back after the same-point write (the
+    /// OPS_WRITE carve-out the debug access check must preserve).
+    #[test]
+    fn write_first_read_back_after_write_is_allowed() {
+        let d0 = dataset(0, [4, 4, 1]);
+        let mut store = DataStore::new();
+        store.alloc(&d0);
+        let datasets = vec![d0];
+        let mut reds = vec![];
+        let l = LoopInst {
+            name: "wf".into(),
+            block: BlockId(0),
+            range: [(0, 4), (0, 4), (0, 1)],
+            args: vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)],
+            kernel: kernel(|c| {
+                c.w(0, 0, 0, 3.0);
+                let v = c.r(0, 0, 0); // read back own write: fine
+                c.w(0, 0, 0, v * 2.0);
+            }),
+            kernel_ir: None,
+            seq: 0,
+            bw_efficiency: 1.0,
+        };
+        let mut ex = NativeExecutor::new();
+        ex.run_loop(&l, l.range, &datasets, &mut store, &mut reds);
+        let off = datasets[0].offset([1, 1, 0]) as usize;
+        assert_eq!(store.buf(DatasetId(0))[off], 6.0);
+    }
+
+    /// Reading a write-first argument *before* writing it observes dead
+    /// data — the debug access check must catch it (this used to be a
+    /// tautological assert that always passed).
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "reads write-first argument")]
+    fn read_before_write_of_write_first_arg_panics() {
+        let d0 = dataset(0, [4, 4, 1]);
+        let mut store = DataStore::new();
+        store.alloc(&d0);
+        let datasets = vec![d0];
+        let mut reds = vec![];
+        let l = LoopInst {
+            name: "bad".into(),
+            block: BlockId(0),
+            range: [(0, 4), (0, 4), (0, 1)],
+            args: vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)],
+            kernel: kernel(|c| {
+                let v = c.r(0, 0, 0); // read of dead write-first data
+                c.w(0, 0, 0, v + 1.0);
+            }),
+            kernel_ir: None,
+            seq: 0,
+            bw_efficiency: 1.0,
+        };
+        let mut ex = NativeExecutor::new();
+        ex.run_loop(&l, l.range, &datasets, &mut store, &mut reds);
     }
 }

@@ -1,0 +1,730 @@
+//! The vector executor: a specialising backend that compiles
+//! [`KernelIr`](crate::ops::kir::KernelIr) kernels into statement-major
+//! *row programs* — slice-based x-inner loops the autovectoriser can chew
+//! on — and falls back to [`run_loop_native`] bit-exactly for everything
+//! else.
+//!
+//! ## Execution model
+//!
+//! For each (y, z) row of the iteration range, the compiled
+//! [`RowPlan`](crate::ops::kir::RowPlan) executes its statements as whole
+//! -row passes: a `let` fills the local's row buffer, a `store` fills the
+//! destination row (through a temp when the expression reads its own
+//! argument), a `reduce` folds an evaluated row into the loop's partial
+//! in x order. Because IR compilation rejects kernels that read a
+//! *written* argument anywhere but the centre point, statement-major
+//! row passes observe exactly the same values as the native executor's
+//! point-major order — numerics are bit-identical, which
+//! `tests/prop_kir.rs` fuzzes and the app equivalence suites pin.
+//!
+//! ## Aliasing discipline
+//!
+//! Row buffers come from four disjoint places: dataset rows (distinct
+//! heap allocations per dataset; the loop validator guarantees a written
+//! dataset appears exactly once among the args), `let` row buffers,
+//! tape registers, and the temp row. A step's destination never aliases
+//! its own operands: register destinations are allocated before operand
+//! registers are released, `let` destinations only read earlier locals,
+//! and in-place stores are routed through the temp row. That invariant
+//! is what makes the detached-slice access below sound.
+
+use super::native::{fold_reductions, loop_setup, run_loop_native, LoopSetup};
+use super::Executor;
+use crate::ops::kernel::ArgView;
+use crate::ops::kir::{BinOp, Op, PlanStmt, RowPlan, Step, Tape, UnOp, OUT};
+use crate::ops::parloop::range_points;
+use crate::ops::{DataStore, Dataset, LoopInst, Range3, RedOp, Reduction};
+
+/// Runs IR-carrying loops through compiled row programs; everything else
+/// through [`run_loop_native`].
+#[derive(Debug, Default)]
+pub struct VectorExecutor {
+    /// Loop executions performed (diagnostics).
+    pub loops_run: u64,
+    /// Iteration points executed (diagnostics).
+    pub points_run: u64,
+    /// Loops that took the compiled row-program fast path.
+    pub vector_loops: u64,
+    /// Loops that ran through the closure fallback (no IR, IR outside
+    /// the vectorisable subset, or a runtime shape mismatch).
+    pub fallback_loops: u64,
+    scratch: Scratch,
+}
+
+impl VectorExecutor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Executor for VectorExecutor {
+    fn run_loop(
+        &mut self,
+        l: &LoopInst,
+        range: Range3,
+        datasets: &[Dataset],
+        store: &mut DataStore,
+        reds: &mut [Reduction],
+    ) {
+        self.loops_run += 1;
+        self.points_run += range_points(&range);
+        if let Some(plan) = l.kernel_ir.as_ref().and_then(|ir| ir.plan()) {
+            if run_loop_vector(l, plan, range, datasets, store, reds, &mut self.scratch) {
+                self.vector_loops += 1;
+                return;
+            }
+        }
+        self.fallback_loops += 1;
+        run_loop_native(l, range, datasets, store, reds);
+    }
+
+    fn name(&self) -> &'static str {
+        "vector"
+    }
+
+    fn kir_loop_stats(&self) -> (u64, u64) {
+        (self.vector_loops, self.fallback_loops)
+    }
+}
+
+/// Reusable row buffers, grown per loop and shared across rows.
+#[derive(Debug, Default)]
+struct Scratch {
+    locals: Vec<Vec<f64>>,
+    regs: Vec<Vec<f64>>,
+    tmp: Vec<f64>,
+}
+
+impl Scratch {
+    fn ensure(&mut self, plan: &RowPlan, n: usize) {
+        if self.locals.len() < plan.n_locals {
+            self.locals.resize_with(plan.n_locals, Vec::new);
+        }
+        for b in self.locals.iter_mut().take(plan.n_locals) {
+            if b.len() < n {
+                b.resize(n, 0.0);
+            }
+        }
+        if self.regs.len() < plan.n_regs {
+            self.regs.resize_with(plan.n_regs, Vec::new);
+        }
+        for b in self.regs.iter_mut().take(plan.n_regs) {
+            if b.len() < n {
+                b.resize(n, 0.0);
+            }
+        }
+        if self.tmp.len() < n {
+            self.tmp.resize(n, 0.0);
+        }
+    }
+}
+
+/// Run one loop through its row plan. Returns `false` (without touching
+/// any data) when the plan's shape does not fit this loop's runtime
+/// tables — the caller then falls back to the closure.
+fn run_loop_vector(
+    l: &LoopInst,
+    plan: &RowPlan,
+    range: Range3,
+    datasets: &[Dataset],
+    store: &mut DataStore,
+    reds: &mut [Reduction],
+    scratch: &mut Scratch,
+) -> bool {
+    let (x0, x1) = range[0];
+    let (y0, y1) = range[1];
+    let (z0, z1) = range[2];
+    if x0 >= x1 || y0 >= y1 || z0 >= z1 {
+        return true;
+    }
+    let LoopSetup {
+        views,
+        consts,
+        red_slots,
+        mut red_vals,
+    } = loop_setup(l, &range, datasets, store);
+    if plan.n_args > views.len() || plan.n_gbl > consts.len() || plan.n_red > red_vals.len() {
+        return false;
+    }
+    if views.iter().any(|v| v.strides[0] != 1) {
+        return false;
+    }
+    #[cfg(debug_assertions)]
+    check_bounds(plan, &views, &range);
+
+    let n = (x1 - x0) as usize;
+    scratch.ensure(plan, n);
+
+    let mut plane_views = views;
+    for z in z0..z1 {
+        let mut row_views = plane_views.clone();
+        for y in y0..y1 {
+            let env = RowEnv {
+                views: &row_views,
+                consts: &consts,
+                x0,
+                y,
+                z,
+                n,
+            };
+            run_row(plan, &env, scratch, &mut red_vals);
+            for v in row_views.iter_mut() {
+                v.ptr = unsafe { v.ptr.offset(v.strides[1]) };
+            }
+        }
+        for v in plane_views.iter_mut() {
+            v.ptr = unsafe { v.ptr.offset(v.strides[2]) };
+        }
+    }
+
+    fold_reductions(&red_slots, &red_vals, reds);
+    true
+}
+
+/// Debug analogue of `Ctx::addr`'s bounds assert: the row path computes
+/// addresses directly, so pre-check every (arg, offset) access over the
+/// full range extent before touching memory.
+#[cfg(debug_assertions)]
+fn check_bounds(plan: &RowPlan, views: &[ArgView], range: &Range3) {
+    for &(arg, off) in &plan.accesses {
+        let v = &views[arg];
+        let first = off[0] as isize
+            + off[1] as isize * v.strides[1]
+            + off[2] as isize * v.strides[2];
+        let last = first
+            + (range[0].1 - range[0].0 - 1)
+            + (range[1].1 - range[1].0 - 1) * v.strides[1]
+            + (range[2].1 - range[2].0 - 1) * v.strides[2];
+        let p0 = v.ptr.wrapping_offset(first) as *const f64;
+        let p1 = v.ptr.wrapping_offset(last) as *const f64;
+        assert!(
+            p0 >= v.lo && p1 < v.hi,
+            "vector kernel access out of bounds: arg {arg} offset {off:?}"
+        );
+    }
+}
+
+/// Everything a row pass needs: views positioned at the row start
+/// `(x0, y, z)`, the constant table and the row geometry.
+struct RowEnv<'a> {
+    views: &'a [ArgView],
+    consts: &'a [f64],
+    x0: isize,
+    y: isize,
+    z: isize,
+    n: usize,
+}
+
+fn run_row(plan: &RowPlan, env: &RowEnv<'_>, scratch: &mut Scratch, red_vals: &mut [f64]) {
+    let Scratch { locals, regs, tmp } = scratch;
+    for stmt in &plan.steps {
+        match stmt {
+            PlanStmt::Let { dst, tape } => {
+                // Split so the destination local is exclusive while the
+                // tape reads only earlier locals (compile-validated).
+                let (done, rest) = locals.split_at_mut(*dst);
+                let dstbuf = &mut rest[0][..env.n];
+                exec_tape(tape, dstbuf, env, done, regs);
+            }
+            PlanStmt::Store {
+                arg,
+                in_place,
+                tape,
+            } => {
+                let row = env.views[*arg].ptr;
+                if *in_place {
+                    let t = &mut tmp[..env.n];
+                    exec_tape(tape, t, env, locals, regs);
+                    unsafe { detached_mut(row, env.n) }.copy_from_slice(t);
+                } else {
+                    // SAFETY: no operand of this tape reads the stored
+                    // argument (`in_place` is false) and a written
+                    // dataset appears exactly once among the loop args,
+                    // so the destination row aliases nothing the tape
+                    // reads.
+                    let d = unsafe { detached_mut(row, env.n) };
+                    exec_tape(tape, d, env, locals, regs);
+                }
+            }
+            PlanStmt::Reduce { slot, op, tape } => {
+                let t = &mut tmp[..env.n];
+                exec_tape(tape, t, env, locals, regs);
+                // Fold in x order with exactly the `Ctx::red_*` scalar
+                // semantics (`<`/`>` comparisons, not f64::min/max).
+                let acc = &mut red_vals[*slot];
+                match op {
+                    RedOp::Sum => {
+                        for &v in t.iter() {
+                            *acc += v;
+                        }
+                    }
+                    RedOp::Min => {
+                        for &v in t.iter() {
+                            if v < *acc {
+                                *acc = v;
+                            }
+                        }
+                    }
+                    RedOp::Max => {
+                        for &v in t.iter() {
+                            if v > *acc {
+                                *acc = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A resolved row operand: a contiguous slice or a scalar splat.
+#[derive(Clone, Copy)]
+enum Src<'a> {
+    S(&'a [f64]),
+    K(f64),
+}
+
+/// SAFETY: caller guarantees `p..p+n` is in bounds and not mutably
+/// aliased for the lifetime of the slice (see the module-level aliasing
+/// discipline).
+unsafe fn detached<'t>(p: *const f64, n: usize) -> &'t [f64] {
+    std::slice::from_raw_parts(p, n)
+}
+
+/// SAFETY: caller guarantees `p..p+n` is in bounds and exclusively owned
+/// for the lifetime of the slice (see the module-level aliasing
+/// discipline).
+unsafe fn detached_mut<'t>(p: *mut f64, n: usize) -> &'t mut [f64] {
+    std::slice::from_raw_parts_mut(p, n)
+}
+
+fn resolve<'t>(
+    op: &Op,
+    env: &RowEnv<'_>,
+    locals: &[Vec<f64>],
+    regs: &[Vec<f64>],
+) -> Src<'t> {
+    match op {
+        Op::Read { arg, off } => {
+            let v = &env.views[*arg as usize];
+            let o = off[0] as isize
+                + off[1] as isize * v.strides[1]
+                + off[2] as isize * v.strides[2];
+            // SAFETY: in bounds (debug pre-checked, mirrors Ctx::addr);
+            // never mutably aliased within a step per the module
+            // invariant.
+            Src::S(unsafe { detached(v.ptr.offset(o) as *const f64, env.n) })
+        }
+        Op::Local(i) => Src::S(unsafe { detached(locals[*i as usize].as_ptr(), env.n) }),
+        Op::Reg(r) => Src::S(unsafe { detached(regs[*r as usize].as_ptr(), env.n) }),
+        Op::Lit(v) => Src::K(*v),
+        Op::Gbl(i) => Src::K(env.consts[*i as usize]),
+        Op::IdxY => Src::K(env.y as f64),
+        Op::IdxZ => Src::K(env.z as f64),
+        Op::IotaX => unreachable!("IotaX only appears as a Mov source"),
+    }
+}
+
+fn exec_tape(
+    tape: &Tape,
+    out: &mut [f64],
+    env: &RowEnv<'_>,
+    locals: &[Vec<f64>],
+    regs: &mut [Vec<f64>],
+) {
+    let n = out.len();
+    for step in &tape.steps {
+        match step {
+            Step::Mov { dst, a } => {
+                if matches!(a, Op::IotaX) {
+                    let d = dst_slice(*dst, out, regs, n);
+                    for (i, v) in d.iter_mut().enumerate() {
+                        *v = (env.x0 + i as isize) as f64;
+                    }
+                } else {
+                    let s = resolve(a, env, locals, regs);
+                    let d = dst_slice(*dst, out, regs, n);
+                    match s {
+                        Src::S(x) => d.copy_from_slice(x),
+                        Src::K(k) => d.fill(k),
+                    }
+                }
+            }
+            Step::Un { op, dst, a } => {
+                let a = resolve(a, env, locals, regs);
+                let d = dst_slice(*dst, out, regs, n);
+                match op {
+                    UnOp::Neg => map1(d, a, |v| -v),
+                    UnOp::Abs => map1(d, a, |v| v.abs()),
+                    UnOp::Sqrt => map1(d, a, |v| v.sqrt()),
+                }
+            }
+            Step::Bin { op, dst, a, b } => {
+                let a = resolve(a, env, locals, regs);
+                let b = resolve(b, env, locals, regs);
+                let d = dst_slice(*dst, out, regs, n);
+                bin(*op, d, a, b);
+            }
+            Step::Sel { dst, c, t, f } => {
+                let c = resolve(c, env, locals, regs);
+                let t = resolve(t, env, locals, regs);
+                let f = resolve(f, env, locals, regs);
+                let d = dst_slice(*dst, out, regs, n);
+                zip3(d, c, t, f, |c, t, f| if c != 0.0 { t } else { f });
+            }
+            Step::Sum { dst, terms } => {
+                let srcs: Vec<Src<'_>> = terms
+                    .iter()
+                    .map(|t| resolve(t, env, locals, regs))
+                    .collect();
+                let d = dst_slice(*dst, out, regs, n);
+                sum(d, &srcs);
+            }
+            Step::Axpy { dst, base, coef, x } => {
+                let base = resolve(base, env, locals, regs);
+                let Src::K(k) = resolve(coef, env, locals, regs) else {
+                    unreachable!("axpy coefficient is a splat by construction")
+                };
+                let x = resolve(x, env, locals, regs);
+                let d = dst_slice(*dst, out, regs, n);
+                zip2(d, base, x, move |b, v| b + k * v);
+            }
+        }
+    }
+}
+
+/// Resolve a step destination. SAFETY of the register branch: a step's
+/// destination register is never one of its own operand registers (the
+/// compiler allocates destinations before releasing operands), so the
+/// detached exclusive slice aliases none of the operand slices resolved
+/// for the same step.
+fn dst_slice<'t>(dst: u32, out: &mut [f64], regs: &mut [Vec<f64>], n: usize) -> &'t mut [f64] {
+    if dst == OUT {
+        unsafe { detached_mut(out.as_mut_ptr(), n) }
+    } else {
+        unsafe { detached_mut(regs[dst as usize].as_mut_ptr(), n) }
+    }
+}
+
+#[inline]
+fn map1(dst: &mut [f64], a: Src<'_>, f: impl Fn(f64) -> f64) {
+    match a {
+        Src::S(x) => {
+            for (d, &v) in dst.iter_mut().zip(x) {
+                *d = f(v);
+            }
+        }
+        Src::K(k) => dst.fill(f(k)),
+    }
+}
+
+#[inline]
+fn zip2(dst: &mut [f64], a: Src<'_>, b: Src<'_>, f: impl Fn(f64, f64) -> f64 + Copy) {
+    match (a, b) {
+        (Src::S(x), Src::S(y)) => {
+            for ((d, &p), &q) in dst.iter_mut().zip(x).zip(y) {
+                *d = f(p, q);
+            }
+        }
+        (Src::S(x), Src::K(k)) => {
+            for (d, &p) in dst.iter_mut().zip(x) {
+                *d = f(p, k);
+            }
+        }
+        (Src::K(k), Src::S(y)) => {
+            for (d, &q) in dst.iter_mut().zip(y) {
+                *d = f(k, q);
+            }
+        }
+        (Src::K(p), Src::K(q)) => dst.fill(f(p, q)),
+    }
+}
+
+#[inline]
+fn at(s: Src<'_>, i: usize) -> f64 {
+    match s {
+        Src::S(x) => x[i],
+        Src::K(k) => k,
+    }
+}
+
+#[inline]
+fn zip3(
+    dst: &mut [f64],
+    a: Src<'_>,
+    b: Src<'_>,
+    c: Src<'_>,
+    f: impl Fn(f64, f64, f64) -> f64 + Copy,
+) {
+    if let (Src::S(x), Src::S(y), Src::S(w)) = (a, b, c) {
+        for (((d, &p), &q), &r) in dst.iter_mut().zip(x).zip(y).zip(w) {
+            *d = f(p, q, r);
+        }
+    } else {
+        for (i, d) in dst.iter_mut().enumerate() {
+            *d = f(at(a, i), at(b, i), at(c, i));
+        }
+    }
+}
+
+fn bin(op: BinOp, d: &mut [f64], a: Src<'_>, b: Src<'_>) {
+    match op {
+        BinOp::Add => zip2(d, a, b, |x, y| x + y),
+        BinOp::Sub => zip2(d, a, b, |x, y| x - y),
+        BinOp::Mul => zip2(d, a, b, |x, y| x * y),
+        BinOp::Div => zip2(d, a, b, |x, y| x / y),
+        BinOp::Min => zip2(d, a, b, |x, y| x.min(y)),
+        BinOp::Max => zip2(d, a, b, |x, y| x.max(y)),
+        BinOp::Gt => zip2(d, a, b, |x, y| if x > y { 1.0 } else { 0.0 }),
+        BinOp::Ge => zip2(d, a, b, |x, y| if x >= y { 1.0 } else { 0.0 }),
+        BinOp::Lt => zip2(d, a, b, |x, y| if x < y { 1.0 } else { 0.0 }),
+        BinOp::Le => zip2(d, a, b, |x, y| if x <= y { 1.0 } else { 0.0 }),
+    }
+}
+
+/// Left-associated add chain. Fused arms cover the star-stencil shapes;
+/// the generic path accumulates with one vectorised pass per extra term,
+/// preserving the association order exactly.
+fn sum(dst: &mut [f64], terms: &[Src<'_>]) {
+    match terms {
+        [Src::S(a), Src::S(b), Src::S(c)] => {
+            for (((d, &x), &y), &z) in dst.iter_mut().zip(*a).zip(*b).zip(*c) {
+                *d = (x + y) + z;
+            }
+        }
+        [Src::S(a), Src::S(b), Src::S(c), Src::S(e)] => {
+            for ((((d, &x), &y), &z), &w) in dst.iter_mut().zip(*a).zip(*b).zip(*c).zip(*e) {
+                *d = ((x + y) + z) + w;
+            }
+        }
+        [Src::K(k), Src::S(a), Src::S(b), Src::S(c), Src::S(e)] => {
+            let k = *k;
+            for ((((d, &x), &y), &z), &w) in dst.iter_mut().zip(*a).zip(*b).zip(*c).zip(*e) {
+                *d = (((k + x) + y) + z) + w;
+            }
+        }
+        _ => {
+            zip2(dst, terms[0], terms[1], |x, y| x + y);
+            for t in &terms[2..] {
+                match *t {
+                    Src::S(x) => {
+                        for (d, &v) in dst.iter_mut().zip(x) {
+                            *d += v;
+                        }
+                    }
+                    Src::K(k) => {
+                        for d in dst.iter_mut() {
+                            *d += k;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::kir::{lit, read, KirBuilder};
+    use crate::ops::stencil::StencilId;
+    use crate::ops::{Access, Arg, BlockId, DatasetId, KernelIr, RedOp, ReductionId};
+    use std::sync::Arc;
+
+    fn dataset(id: u32, size: [usize; 3]) -> Dataset {
+        Dataset {
+            id: DatasetId(id),
+            block: BlockId(0),
+            name: format!("d{id}"),
+            size,
+            halo_lo: [2, 2, 1],
+            halo_hi: [2, 2, 1],
+            elem_bytes: 8,
+        }
+    }
+
+    fn seed(store: &mut DataStore, id: DatasetId, scale: f64) {
+        for (i, v) in store.buf_mut(id).iter_mut().enumerate() {
+            *v = ((i * 2654435761) % 1000) as f64 * scale - 250.0 * scale;
+        }
+    }
+
+    fn ir_loop(ir: KernelIr, args: Vec<Arg>, range: Range3) -> LoopInst {
+        let ir = Arc::new(ir);
+        LoopInst {
+            name: "t".into(),
+            block: BlockId(0),
+            range,
+            args,
+            kernel: ir.to_kernel(),
+            kernel_ir: Some(ir),
+            seq: 0,
+            bw_efficiency: 1.0,
+        }
+    }
+
+    /// Run the same IR loop through both executors on identically seeded
+    /// stores; every written buffer and reduction must be bit-identical.
+    fn assert_bit_exact(ir: KernelIr, args: Vec<Arg>, range: Range3, nsets: u32) {
+        let datasets: Vec<Dataset> = (0..nsets).map(|i| dataset(i, [6, 5, 3])).collect();
+        let mut s_nat = DataStore::new();
+        let mut s_vec = DataStore::new();
+        for d in &datasets {
+            s_nat.alloc(d);
+            s_vec.alloc(d);
+        }
+        for d in &datasets {
+            seed(&mut s_nat, d.id, 0.25 + d.id.0 as f64);
+            seed(&mut s_vec, d.id, 0.25 + d.id.0 as f64);
+        }
+        let mut r_nat = vec![
+            Reduction::new(ReductionId(0), "a", RedOp::Sum),
+            Reduction::new(ReductionId(1), "b", RedOp::Min),
+        ];
+        let mut r_vec = r_nat.clone();
+
+        let l = ir_loop(ir, args, range);
+        assert!(l.kernel_ir.as_ref().unwrap().is_vectorizable());
+
+        let mut nat = crate::exec::NativeExecutor::new();
+        nat.run_loop(&l, l.range, &datasets, &mut s_nat, &mut r_nat);
+        let mut vec = VectorExecutor::new();
+        vec.run_loop(&l, l.range, &datasets, &mut s_vec, &mut r_vec);
+        assert_eq!(vec.vector_loops, 1, "must take the row-program path");
+
+        for d in &datasets {
+            let a = s_nat.buf(d.id);
+            let b = s_vec.buf(d.id);
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "dataset {} differs at {i}: {x} vs {y}",
+                    d.id.0
+                );
+            }
+        }
+        for (a, b) in r_nat.iter().zip(&r_vec) {
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "reduction differs");
+        }
+    }
+
+    #[test]
+    fn star_stencil_bit_exact() {
+        let mut k = KirBuilder::new();
+        let l = k.let_(
+            read(0, [-1, 0, 0]) + read(0, [1, 0, 0]) + read(0, [0, -1, 0]) + read(0, [0, 1, 0])
+                - lit(4.0) * read(0, [0, 0, 0]),
+        );
+        k.store(1, l * lit(0.3));
+        assert_bit_exact(
+            k.build(),
+            vec![
+                Arg::dat(DatasetId(0), StencilId(0), Access::Read),
+                Arg::dat(DatasetId(1), StencilId(0), Access::Write),
+            ],
+            [(0, 6), (0, 5), (0, 3)],
+            2,
+        );
+    }
+
+    #[test]
+    fn in_place_axpy_bit_exact() {
+        let mut k = KirBuilder::new();
+        k.store(0, read(0, [0, 0, 0]) + lit(0.1) * read(1, [0, 0, 0]));
+        assert_bit_exact(
+            k.build(),
+            vec![
+                Arg::dat(DatasetId(0), StencilId(0), Access::ReadWrite),
+                Arg::dat(DatasetId(1), StencilId(0), Access::Read),
+            ],
+            [(0, 6), (0, 5), (0, 3)],
+            2,
+        );
+    }
+
+    #[test]
+    fn reductions_and_select_bit_exact() {
+        let mut k = KirBuilder::new();
+        let v = k.let_(read(0, [0, 0, 1]).abs().max(lit(1e-9)));
+        k.reduce(0, RedOp::Sum, v.clone().gt(lit(100.0)).select(lit(1.0), v.clone()));
+        k.reduce(1, RedOp::Min, lit(1.0) / v);
+        assert_bit_exact(
+            k.build(),
+            vec![
+                Arg::dat(DatasetId(0), StencilId(0), Access::Read),
+                Arg::GblRed {
+                    red: ReductionId(0),
+                    op: RedOp::Sum,
+                },
+                Arg::GblRed {
+                    red: ReductionId(1),
+                    op: RedOp::Min,
+                },
+            ],
+            [(0, 6), (0, 5), (0, 3)],
+            1,
+        );
+    }
+
+    #[test]
+    fn idx_and_gbl_bit_exact() {
+        use crate::ops::kir::{gbl, idx};
+        let mut k = KirBuilder::new();
+        k.store(0, idx(0) * gbl(0) + idx(1) * gbl(1) + idx(2));
+        assert_bit_exact(
+            k.build(),
+            vec![
+                Arg::dat(DatasetId(0), StencilId(0), Access::Write),
+                Arg::GblConst {
+                    values: vec![3.5, -1.25],
+                },
+            ],
+            [(0, 6), (0, 5), (0, 3)],
+            1,
+        );
+    }
+
+    #[test]
+    fn sequential_stores_observe_statement_order() {
+        // d1 = d0 * 2; d2 = d1 (centre read of the *updated* d1).
+        let mut k = KirBuilder::new();
+        let v = k.let_(read(0, [0, 0, 0]) * lit(2.0));
+        k.store(1, v.clone());
+        k.store(2, v + read(1, [0, 0, 0]));
+        assert_bit_exact(
+            k.build(),
+            vec![
+                Arg::dat(DatasetId(0), StencilId(0), Access::Read),
+                Arg::dat(DatasetId(1), StencilId(0), Access::ReadWrite),
+                Arg::dat(DatasetId(2), StencilId(0), Access::Write),
+            ],
+            [(0, 6), (0, 5), (0, 3)],
+            3,
+        );
+    }
+
+    #[test]
+    fn loop_without_ir_falls_back() {
+        let d0 = dataset(0, [4, 4, 1]);
+        let mut store = DataStore::new();
+        store.alloc(&d0);
+        let datasets = vec![d0];
+        let mut reds = vec![];
+        let l = LoopInst {
+            name: "plain".into(),
+            block: BlockId(0),
+            range: [(0, 4), (0, 4), (0, 1)],
+            args: vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)],
+            kernel: crate::ops::kernel::kernel(|c| c.w(0, 0, 0, 7.0)),
+            kernel_ir: None,
+            seq: 0,
+            bw_efficiency: 1.0,
+        };
+        let mut ex = VectorExecutor::new();
+        ex.run_loop(&l, l.range, &datasets, &mut store, &mut reds);
+        assert_eq!((ex.vector_loops, ex.fallback_loops), (0, 1));
+        let off = datasets[0].offset([2, 2, 0]) as usize;
+        assert_eq!(store.buf(DatasetId(0))[off], 7.0);
+    }
+}

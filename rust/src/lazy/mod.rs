@@ -63,6 +63,7 @@ mod tests {
             range: [(0, 1), (0, 1), (0, 1)],
             args: vec![],
             kernel: kernel(|_| {}),
+            kernel_ir: None,
             seq: 0,
             bw_efficiency: 1.0,
         }

@@ -52,7 +52,7 @@
 
 use ops_oc::bench_support::{self, telemetry, Figure};
 use ops_oc::coordinator::{json_record, print_summary_with_topology, Config};
-use ops_oc::exec::chrome_trace_json_with_spans;
+use ops_oc::exec::{chrome_trace_json_with_spans, ExecBackend};
 use ops_oc::memory::AppCalib;
 use ops_oc::tuner::TuneOpts;
 use std::process::exit;
@@ -74,6 +74,10 @@ struct Args {
     /// platform spec's `fuse` token, defaulting to the legacy
     /// live-driver path.
     fuse: Option<u32>,
+    /// Numeric executor backend (`--exec native|vector`): vector
+    /// compiles kernel IR into row programs, falling back to the
+    /// closure per loop without IR; numerics are bit-identical.
+    exec: ExecBackend,
     trace: Option<String>,
     spans: Option<String>,
     bench_out: Option<String>,
@@ -104,6 +108,7 @@ fn parse_args() -> Args {
         tune: false,
         tune_budget: TuneOpts::default().budget,
         fuse: None,
+        exec: ExecBackend::default(),
         trace: None,
         spans: None,
         bench_out: None,
@@ -146,6 +151,16 @@ fn parse_args() -> Args {
                     "--trace" => a.trace = Some(v.clone()),
                     "--spans" => a.spans = Some(v.clone()),
                     _ => a.bench_out = Some(v.clone()),
+                }
+            }
+            "--exec" => {
+                i += 1;
+                match argv.get(i).and_then(|v| ExecBackend::parse(v)) {
+                    Some(b) => a.exec = b,
+                    None => {
+                        eprintln!("bad value for --exec (expected native|vector)");
+                        exit(2);
+                    }
                 }
             }
             "--tol-pct" => {
@@ -258,7 +273,9 @@ fn config_or_exit(a: &Args) -> (Config, bool) {
         }
     };
     let fused = a.fuse.is_some() || spec_fuse != 1;
-    let mut cfg = Config::for_target(target, AppCalib::CLOVERLEAF_2D).with_fuse(fuse);
+    let mut cfg = Config::for_target(target, AppCalib::CLOVERLEAF_2D)
+        .with_fuse(fuse)
+        .with_exec(a.exec);
     // `fuse 0` in the spec is validated by the parser; the flag form is
     // validated here — the tuner needs a tile plan to score depths on.
     if fuse == 0 && cfg.tuner_target().is_none() {
@@ -377,6 +394,9 @@ fn main() {
             println!("        [--fuse K]       (temporal fusion: replay K recorded steps as one");
             println!("                          super-chain; 0 = tuner-auto, 1 = unfused replay");
             println!("                          baseline; or a fuse:K / fuseK spec token)");
+            println!("        [--exec E]       (numeric executor: native = per-point closures,");
+            println!("                          vector = compiled kernel-IR row programs with");
+            println!("                          closure fallback; bit-identical numerics)");
             println!("        [--trace PATH]   (Chrome-trace JSON of the engine timeline)");
             println!("        [--spans PATH]   (hierarchical lifecycle-span tree, JSON)");
             println!("        [--bench-out F]  (append a trajectory point to F)");
@@ -411,7 +431,10 @@ fn main() {
             println!("            the HBM/3 heuristic and numerics stay bit-exact");
             println!("execution : apps run on the record-once/replay-many Program/Session");
             println!("            API — chain analysis is computed once per shape and");
-            println!("            reused (--json: analysis_builds / analysis_reuse_hits)");
+            println!("            reused (--json: analysis_builds / analysis_reuse_hits);");
+            println!("            --exec vector runs loop bodies as compiled kernel-IR");
+            println!("            row programs (bit-exact vs native; --json reports");
+            println!("            exec_backend / kir_kernels_compiled / kir_fallback_loops)");
             println!("fusion    : --fuse K (or a fuse:K spec token) replays K recorded");
             println!("            fixed-dt steps as ONE skewed super-chain — one pass");
             println!("            over the slowest tier per K steps, bit-exact against");

@@ -128,6 +128,7 @@ mod tests {
             range: [(0, 100), (0, 100), (0, 1)],
             args: vec![Arg::dat(DatasetId(0), StencilId(st), acc)],
             kernel: kernel(|_| {}),
+            kernel_ir: None,
             seq: 0,
             bw_efficiency: 1.0,
         };

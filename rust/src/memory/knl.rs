@@ -284,6 +284,7 @@ mod tests {
                         let v = c.r(0, 0, 0) + c.r(0, 1, 0);
                         c.w(1, 0, 0, v);
                     }),
+                    kernel_ir: None,
                     seq: (r * nds as usize + i as usize) as u64,
                     bw_efficiency: 1.0,
                 });

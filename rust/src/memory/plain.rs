@@ -158,6 +158,7 @@ mod tests {
             range: [(0, 64), (0, 64), (0, 1)],
             args: vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)],
             kernel: kernel(|c| c.w(0, 0, 0, 1.0)),
+            kernel_ir: None,
             seq: 0,
             bw_efficiency: 1.0,
         }];

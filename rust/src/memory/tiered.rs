@@ -589,6 +589,7 @@ mod tests {
                     let v = c.r(0, -1, 0) + c.r(0, 1, 0) + c.r(1, 0, 0);
                     c.w(2, 0, 0, v * 0.25);
                 }),
+                kernel_ir: None,
                 seq: 0,
                 bw_efficiency: 1.0,
             },
@@ -605,6 +606,7 @@ mod tests {
                     let s = c.r(1, 0, 0);
                     c.w(1, 0, 0, s + 0.1 * v);
                 }),
+                kernel_ir: None,
                 seq: 1,
                 bw_efficiency: 1.0,
             },

@@ -379,6 +379,7 @@ mod tests {
                     let old = c.r(1, 0, 0);
                     c.w(1, 0, 0, v + 0.01 * old);
                 }),
+                kernel_ir: None,
                 seq: i as u64,
                 bw_efficiency: 1.0,
             });

@@ -4,7 +4,9 @@
 use super::block::{Block, BlockId};
 use super::dataset::{DataStore, Dataset, DatasetId};
 use super::kernel::Kernel;
+use super::kir::KernelIr;
 use super::parloop::{Arg, LoopInst, Range3};
+use std::sync::Arc;
 use super::reduction::{RedOp, Reduction, ReductionId};
 use super::stencil::{Stencil, StencilId};
 use crate::exec::{Engine, Executor, Metrics, NativeExecutor, World};
@@ -173,6 +175,7 @@ impl OpsContext {
             range,
             args,
             kernel,
+            kernel_ir: None,
             seq: 0,
             bw_efficiency,
         });
@@ -182,6 +185,32 @@ impl OpsContext {
         // loop queued and flush on the query. (No action needed here; the
         // flag is informative.)
         let _ = has_red;
+    }
+
+    /// [`Self::par_loop_eff`] from a declarative [`KernelIr`] body: the
+    /// closure is derived from the IR, and the IR rides along on the
+    /// queued loop for IR-specialising executors.
+    pub fn par_loop_ir(
+        &mut self,
+        name: &str,
+        block: BlockId,
+        range: Range3,
+        ir: KernelIr,
+        args: Vec<Arg>,
+        bw_efficiency: f64,
+    ) {
+        crate::program::builder::validate_loop("ops", name, &args, &self.datasets, &self.stencils);
+        let ir = Arc::new(ir);
+        self.queue.push(LoopInst {
+            name: name.to_string(),
+            block,
+            range,
+            args,
+            kernel: ir.to_kernel(),
+            kernel_ir: Some(ir),
+            seq: 0,
+            bw_efficiency,
+        });
     }
 
     // ---- trigger points (return data to user space) ------------------------
@@ -567,6 +596,18 @@ impl crate::ops::surface::Record for OpsContext {
         bw_efficiency: f64,
     ) {
         OpsContext::par_loop_eff(self, name, block, range, kernel, args, bw_efficiency)
+    }
+
+    fn par_loop_ir(
+        &mut self,
+        name: &str,
+        block: BlockId,
+        range: Range3,
+        ir: KernelIr,
+        args: Vec<Arg>,
+        bw_efficiency: f64,
+    ) {
+        OpsContext::par_loop_ir(self, name, block, range, ir, args, bw_efficiency)
     }
 }
 

@@ -40,6 +40,12 @@ pub struct Ctx<'a> {
     /// x distance from the row origin the views are positioned at (the
     /// executor advances this instead of rewriting every view pointer).
     pub(crate) xoff: isize,
+    /// Bitmask of argument indices written *at the current point* —
+    /// executors reset it per point. Backs the debug-mode read-access
+    /// check's carve-out for write-first data read back after a
+    /// same-point write.
+    #[cfg(debug_assertions)]
+    pub(crate) wrote: u64,
 }
 
 impl<'a> Ctx<'a> {
@@ -69,11 +75,13 @@ impl<'a> Ctx<'a> {
     #[inline(always)]
     pub fn r3(&self, a: usize, ox: isize, oy: isize, oz: isize) -> f64 {
         #[cfg(debug_assertions)]
-        assert!(self.args[a].acc.reads() || {
+        assert!(
             // write-first datasets may be read back within the same loop
-            // *after* being written (OPS_WRITE semantics).
-            true
-        });
+            // *after* being written at this point (OPS_WRITE semantics);
+            // args ≥ 64 are beyond the tracking mask and get a pass.
+            self.args[a].acc.reads() || a >= 64 || self.wrote & (1u64 << a) != 0,
+            "kernel reads write-first argument {a} before writing it"
+        );
         unsafe { *self.addr(a, [ox, oy, oz]) }
     }
 
@@ -87,10 +95,15 @@ impl<'a> Ctx<'a> {
     #[inline(always)]
     pub fn w3(&mut self, a: usize, ox: isize, oy: isize, oz: isize, v: f64) {
         #[cfg(debug_assertions)]
-        assert!(
-            self.args[a].acc.writes(),
-            "kernel writes a read-only argument {a}"
-        );
+        {
+            assert!(
+                self.args[a].acc.writes(),
+                "kernel writes a read-only argument {a}"
+            );
+            if a < 64 {
+                self.wrote |= 1u64 << a;
+            }
+        }
         unsafe { *self.addr(a, [ox, oy, oz]) = v }
     }
 

@@ -1,0 +1,1147 @@
+//! Declarative kernel IR — the vectorisable subset of stencil kernels.
+//!
+//! A [`KernelIr`] describes a kernel body as a short list of statements
+//! over an expression tree: reads of dataset arguments at constant
+//! stencil offsets, literals, loop-invariant globals, the iteration
+//! index, and previously-bound locals. Kernels recorded through
+//! [`Record::par_loop_ir`](crate::ops::Record::par_loop_ir) carry the IR
+//! on [`LoopInst`](crate::ops::LoopInst) *alongside* a closure derived
+//! from it with [`KernelIr::to_kernel`], so every executor still works:
+//! the [`NativeExecutor`](crate::exec::NativeExecutor) interprets the
+//! closure point-by-point, while the
+//! [`VectorExecutor`](crate::exec::VectorExecutor) compiles the IR once
+//! into a row program of slice-based x-inner loops the autovectoriser
+//! can chew on.
+//!
+//! Bit-exactness is by construction: both paths evaluate the *same*
+//! expression tree with the same scalar operators ([`UnOp::apply`],
+//! [`BinOp::apply`]) — the vector path merely changes the loop nest from
+//! point-major to statement-major, which is legal because compilation
+//! rejects (falls back on) any kernel whose reads of a written argument
+//! are not at the centre point.
+//!
+//! The IR has a stable text form (`Display` + [`KernelIr::parse`]) used
+//! by the round-trip tests and handy for debugging:
+//!
+//! ```text
+//! let (sub (add (add (add (read 0 -1 0 0) (read 0 1 0 0)) (read 0 0 -1 0))
+//!     (read 0 0 1 0)) (mul (lit 4.0) (read 0 0 0 0)))
+//! store 2 (mul (loc 1) (loc 0))
+//! reduce 0 sum (read 0 0 0 0)
+//! ```
+
+use super::kernel::{kernel, Ctx, Kernel};
+use super::reduction::RedOp;
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+
+/// Upper bound on `let`-bound locals per kernel (the interpreter keeps
+/// them in a fixed stack array; the row compiler allocates one row
+/// buffer per local).
+pub const MAX_LOCALS: usize = 64;
+
+/// Unary scalar operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Abs,
+    Sqrt,
+}
+
+impl UnOp {
+    /// The single scalar semantics both executors share.
+    #[inline(always)]
+    pub fn apply(self, v: f64) -> f64 {
+        match self {
+            UnOp::Neg => -v,
+            UnOp::Abs => v.abs(),
+            UnOp::Sqrt => v.sqrt(),
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            UnOp::Neg => "neg",
+            UnOp::Abs => "abs",
+            UnOp::Sqrt => "sqrt",
+        }
+    }
+}
+
+/// Binary scalar operators. Comparisons yield `1.0`/`0.0` (select masks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+    Gt,
+    Ge,
+    Lt,
+    Le,
+}
+
+impl BinOp {
+    /// The single scalar semantics both executors share.
+    #[inline(always)]
+    pub fn apply(self, a: f64, b: f64) -> f64 {
+        match self {
+            BinOp::Add => a + b,
+            BinOp::Sub => a - b,
+            BinOp::Mul => a * b,
+            BinOp::Div => a / b,
+            BinOp::Min => a.min(b),
+            BinOp::Max => a.max(b),
+            BinOp::Gt => {
+                if a > b {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            BinOp::Ge => {
+                if a >= b {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            BinOp::Lt => {
+                if a < b {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            BinOp::Le => {
+                if a <= b {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            BinOp::Add => "add",
+            BinOp::Sub => "sub",
+            BinOp::Mul => "mul",
+            BinOp::Div => "div",
+            BinOp::Min => "min",
+            BinOp::Max => "max",
+            BinOp::Gt => "gt",
+            BinOp::Ge => "ge",
+            BinOp::Lt => "lt",
+            BinOp::Le => "le",
+        }
+    }
+}
+
+/// A pure scalar expression over the kernel's per-point environment.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// Dataset argument `arg` at constant stencil offset `off`.
+    Read { arg: usize, off: [i32; 3] },
+    /// Literal constant (captured at record time, like closure captures).
+    Lit(f64),
+    /// Loop-invariant global: flat index into the concatenated
+    /// [`Arg::GblConst`](crate::ops::Arg::GblConst) values.
+    Gbl(usize),
+    /// Iteration index component (0 = x, 1 = y, 2 = z) as `f64`.
+    Idx(usize),
+    /// A previously `let`-bound statement value.
+    Local(usize),
+    Unary(UnOp, Box<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    /// `if cond != 0.0 { then } else { els }`. Both branches are pure, so
+    /// the vector path may evaluate both and blend.
+    Select {
+        cond: Box<Expr>,
+        then: Box<Expr>,
+        els: Box<Expr>,
+    },
+}
+
+/// Read of dataset argument `arg` at stencil offset `off`.
+pub fn read(arg: usize, off: [i32; 3]) -> Expr {
+    Expr::Read { arg, off }
+}
+
+/// Literal constant.
+pub fn lit(v: f64) -> Expr {
+    Expr::Lit(v)
+}
+
+/// Loop-invariant global constant (flat `Ctx::gbl` index).
+pub fn gbl(i: usize) -> Expr {
+    Expr::Gbl(i)
+}
+
+/// Iteration index component as `f64`.
+pub fn idx(d: usize) -> Expr {
+    Expr::Idx(d)
+}
+
+impl From<f64> for Expr {
+    fn from(v: f64) -> Expr {
+        Expr::Lit(v)
+    }
+}
+
+impl Expr {
+    fn bin(op: BinOp, a: Expr, b: Expr) -> Expr {
+        Expr::Binary(op, Box::new(a), Box::new(b))
+    }
+
+    pub fn min(self, o: impl Into<Expr>) -> Expr {
+        Expr::bin(BinOp::Min, self, o.into())
+    }
+
+    pub fn max(self, o: impl Into<Expr>) -> Expr {
+        Expr::bin(BinOp::Max, self, o.into())
+    }
+
+    pub fn gt(self, o: impl Into<Expr>) -> Expr {
+        Expr::bin(BinOp::Gt, self, o.into())
+    }
+
+    pub fn ge(self, o: impl Into<Expr>) -> Expr {
+        Expr::bin(BinOp::Ge, self, o.into())
+    }
+
+    pub fn lt(self, o: impl Into<Expr>) -> Expr {
+        Expr::bin(BinOp::Lt, self, o.into())
+    }
+
+    pub fn le(self, o: impl Into<Expr>) -> Expr {
+        Expr::bin(BinOp::Le, self, o.into())
+    }
+
+    pub fn abs(self) -> Expr {
+        Expr::Unary(UnOp::Abs, Box::new(self))
+    }
+
+    pub fn sqrt(self) -> Expr {
+        Expr::Unary(UnOp::Sqrt, Box::new(self))
+    }
+
+    /// `if self != 0.0 { then } else { els }`.
+    pub fn select(self, then: impl Into<Expr>, els: impl Into<Expr>) -> Expr {
+        Expr::Select {
+            cond: Box::new(self),
+            then: Box::new(then.into()),
+            els: Box::new(els.into()),
+        }
+    }
+}
+
+macro_rules! impl_expr_bin {
+    ($tr:ident, $meth:ident, $op:expr) => {
+        impl std::ops::$tr for Expr {
+            type Output = Expr;
+            fn $meth(self, rhs: Expr) -> Expr {
+                Expr::bin($op, self, rhs)
+            }
+        }
+        impl std::ops::$tr<f64> for Expr {
+            type Output = Expr;
+            fn $meth(self, rhs: f64) -> Expr {
+                Expr::bin($op, self, Expr::Lit(rhs))
+            }
+        }
+        impl std::ops::$tr<Expr> for f64 {
+            type Output = Expr;
+            fn $meth(self, rhs: Expr) -> Expr {
+                Expr::bin($op, Expr::Lit(self), rhs)
+            }
+        }
+    };
+}
+
+impl_expr_bin!(Add, add, BinOp::Add);
+impl_expr_bin!(Sub, sub, BinOp::Sub);
+impl_expr_bin!(Mul, mul, BinOp::Mul);
+impl_expr_bin!(Div, div, BinOp::Div);
+
+impl std::ops::Neg for Expr {
+    type Output = Expr;
+    fn neg(self) -> Expr {
+        Expr::Unary(UnOp::Neg, Box::new(self))
+    }
+}
+
+/// One kernel statement, executed in order at every iteration point.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// Bind the next local (locals number 0, 1, … in statement order).
+    Let(Expr),
+    /// Store to dataset argument `arg` at the centre point `(0,0,0)`.
+    Store { arg: usize, expr: Expr },
+    /// Accumulate into reduction slot `slot` with `Ctx::red_*` semantics.
+    Reduce { slot: usize, op: RedOp, expr: Expr },
+}
+
+/// A declarative kernel body: statements over [`Expr`] trees, plus a
+/// lazily-compiled row program ([`VectorExecutor`] fast path).
+///
+/// [`VectorExecutor`]: crate::exec::VectorExecutor
+#[derive(Debug)]
+pub struct KernelIr {
+    pub stmts: Vec<Stmt>,
+    plan: OnceLock<Option<RowPlan>>,
+}
+
+impl Clone for KernelIr {
+    fn clone(&self) -> Self {
+        KernelIr::new(self.stmts.clone())
+    }
+}
+
+impl PartialEq for KernelIr {
+    fn eq(&self, other: &Self) -> bool {
+        self.stmts == other.stmts
+    }
+}
+
+impl KernelIr {
+    pub fn new(stmts: Vec<Stmt>) -> Self {
+        KernelIr {
+            stmts,
+            plan: OnceLock::new(),
+        }
+    }
+
+    /// The compiled row program, or `None` if this kernel is outside the
+    /// vectorisable subset (the executor then falls back to the closure).
+    pub(crate) fn plan(&self) -> Option<&RowPlan> {
+        self.plan.get_or_init(|| compile(self)).as_ref()
+    }
+
+    /// Does this kernel compile to the vector fast path?
+    pub fn is_vectorizable(&self) -> bool {
+        self.plan().is_some()
+    }
+
+    /// Derive the per-point closure: an interpreter over the public
+    /// [`Ctx`] API. Loops recorded via `par_loop_ir` carry this closure,
+    /// so the native path and the vector path execute the *same* tree.
+    pub fn to_kernel(self: &Arc<Self>) -> Kernel {
+        let ir = Arc::clone(self);
+        kernel(move |c| ir.apply(c))
+    }
+
+    /// Run the kernel body once at the current iteration point.
+    pub fn apply(&self, c: &mut Ctx) {
+        let mut locals = [0.0f64; MAX_LOCALS];
+        let mut n = 0usize;
+        for s in &self.stmts {
+            match s {
+                Stmt::Let(e) => {
+                    locals[n] = eval(e, c, &locals);
+                    n += 1;
+                }
+                Stmt::Store { arg, expr } => {
+                    let v = eval(expr, c, &locals);
+                    c.w3(*arg, 0, 0, 0, v);
+                }
+                Stmt::Reduce { slot, op, expr } => {
+                    let v = eval(expr, c, &locals);
+                    match op {
+                        RedOp::Sum => c.red_sum(*slot, v),
+                        RedOp::Min => c.red_min(*slot, v),
+                        RedOp::Max => c.red_max(*slot, v),
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn eval(e: &Expr, c: &Ctx, locals: &[f64]) -> f64 {
+    match e {
+        Expr::Read { arg, off } => {
+            c.r3(*arg, off[0] as isize, off[1] as isize, off[2] as isize)
+        }
+        Expr::Lit(v) => *v,
+        Expr::Gbl(i) => c.gbl(*i),
+        Expr::Idx(d) => c.idx()[*d] as f64,
+        Expr::Local(i) => locals[*i],
+        Expr::Unary(op, a) => op.apply(eval(a, c, locals)),
+        Expr::Binary(op, a, b) => op.apply(eval(a, c, locals), eval(b, c, locals)),
+        Expr::Select { cond, then, els } => {
+            if eval(cond, c, locals) != 0.0 {
+                eval(then, c, locals)
+            } else {
+                eval(els, c, locals)
+            }
+        }
+    }
+}
+
+/// Incremental builder with Rust-like `let` ergonomics:
+///
+/// ```
+/// use ops_oc::ops::kir::{lit, read, KirBuilder};
+/// let mut k = KirBuilder::new();
+/// let l = k.let_(read(0, [-1, 0, 0]) + read(0, [1, 0, 0]) - lit(2.0) * read(0, [0, 0, 0]));
+/// k.store(1, l * lit(0.25));
+/// let ir = k.build();
+/// assert!(ir.is_vectorizable());
+/// ```
+#[derive(Default)]
+pub struct KirBuilder {
+    stmts: Vec<Stmt>,
+    locals: usize,
+}
+
+impl KirBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bind `e` as the next local; returns the [`Expr::Local`] handle.
+    pub fn let_(&mut self, e: Expr) -> Expr {
+        assert!(self.locals < MAX_LOCALS, "kernel exceeds {MAX_LOCALS} locals");
+        self.stmts.push(Stmt::Let(e));
+        self.locals += 1;
+        Expr::Local(self.locals - 1)
+    }
+
+    /// Store `e` to argument `arg` at the centre point.
+    pub fn store(&mut self, arg: usize, e: Expr) {
+        self.stmts.push(Stmt::Store { arg, expr: e });
+    }
+
+    /// Accumulate `e` into reduction slot `slot`.
+    pub fn reduce(&mut self, slot: usize, op: RedOp, e: Expr) {
+        self.stmts.push(Stmt::Reduce { slot, op, expr: e });
+    }
+
+    pub fn build(self) -> KernelIr {
+        KernelIr::new(self.stmts)
+    }
+}
+
+// --------------------------------------------------------------- row plan
+
+/// Destination tag meaning "this statement's output row" in a [`Tape`].
+pub(crate) const OUT: u32 = u32::MAX;
+
+/// Row-program operand, resolved per row to a contiguous slice or a
+/// scalar splat.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Op {
+    /// Dataset argument row at constant offset (x-contiguous slice).
+    Read { arg: u32, off: [i32; 3] },
+    /// A `let`-bound local's row buffer.
+    Local(u32),
+    /// A tape-internal register row buffer.
+    Reg(u32),
+    Lit(f64),
+    Gbl(u32),
+    /// y / z index splat.
+    IdxY,
+    IdxZ,
+    /// x-index ramp; only ever appears as a [`Step::Mov`] source.
+    IotaX,
+}
+
+/// One vector instruction over whole rows.
+#[derive(Clone, Debug)]
+pub(crate) enum Step {
+    Mov { dst: u32, a: Op },
+    Un { op: UnOp, dst: u32, a: Op },
+    Bin { op: BinOp, dst: u32, a: Op, b: Op },
+    Sel { dst: u32, c: Op, t: Op, f: Op },
+    /// Left-associated add chain of ≥ 3 leaf operands (star stencils).
+    Sum { dst: u32, terms: Vec<Op> },
+    /// `base + coef·x` with a splat `coef` (update kernels).
+    Axpy { dst: u32, base: Op, coef: Op, x: Op },
+}
+
+/// The register program for one statement; the last step writes [`OUT`].
+#[derive(Clone, Debug)]
+pub(crate) struct Tape {
+    pub steps: Vec<Step>,
+}
+
+/// One compiled statement.
+#[derive(Clone, Debug)]
+pub(crate) enum PlanStmt {
+    Let {
+        dst: usize,
+        tape: Tape,
+    },
+    Store {
+        arg: usize,
+        /// The expression reads the stored argument (at the centre), so
+        /// the row must be evaluated into a temp and copied back — never
+        /// aliased in place.
+        in_place: bool,
+        tape: Tape,
+    },
+    Reduce {
+        slot: usize,
+        op: RedOp,
+        tape: Tape,
+    },
+}
+
+/// A compiled kernel: statement-major row passes, executed per (y, z) row.
+#[derive(Clone, Debug)]
+pub(crate) struct RowPlan {
+    pub steps: Vec<PlanStmt>,
+    pub n_locals: usize,
+    pub n_regs: usize,
+    /// Dataset argument indices touched are `< n_args`.
+    pub n_args: usize,
+    /// Required length of the flat global-constant table.
+    pub n_gbl: usize,
+    /// Required number of reduction slots.
+    pub n_red: usize,
+    /// Every (arg, offset) access — reads plus centre writes — for the
+    /// debug-mode bounds pre-check (the row path bypasses `Ctx::addr`).
+    pub accesses: Vec<(usize, [i32; 3])>,
+}
+
+fn walk(e: &Expr, f: &mut impl FnMut(&Expr)) {
+    f(e);
+    match e {
+        Expr::Unary(_, a) => walk(a, f),
+        Expr::Binary(_, a, b) => {
+            walk(a, f);
+            walk(b, f);
+        }
+        Expr::Select { cond, then, els } => {
+            walk(cond, f);
+            walk(then, f);
+            walk(els, f);
+        }
+        _ => {}
+    }
+}
+
+fn expr_reads_arg(e: &Expr, arg: usize) -> bool {
+    let mut found = false;
+    walk(e, &mut |n| {
+        if matches!(n, Expr::Read { arg: a, .. } if *a == arg) {
+            found = true;
+        }
+    });
+    found
+}
+
+fn stmt_expr(s: &Stmt) -> &Expr {
+    match s {
+        Stmt::Let(e) => e,
+        Stmt::Store { expr, .. } => expr,
+        Stmt::Reduce { expr, .. } => expr,
+    }
+}
+
+/// Leaf operands (resolve to a slice or splat without any tape step).
+fn leaf_op(e: &Expr) -> Option<Op> {
+    match e {
+        Expr::Read { arg, off } => Some(Op::Read {
+            arg: *arg as u32,
+            off: *off,
+        }),
+        Expr::Local(i) => Some(Op::Local(*i as u32)),
+        Expr::Lit(v) => Some(Op::Lit(*v)),
+        Expr::Gbl(i) => Some(Op::Gbl(*i as u32)),
+        Expr::Idx(1) => Some(Op::IdxY),
+        Expr::Idx(2) => Some(Op::IdxZ),
+        _ => None,
+    }
+}
+
+/// Scalar-splat operands (loop-invariant within a row).
+fn splat_op(e: &Expr) -> Option<Op> {
+    match e {
+        Expr::Lit(_) | Expr::Gbl(_) | Expr::Idx(1) | Expr::Idx(2) => leaf_op(e),
+        _ => None,
+    }
+}
+
+/// Collect a left-associated all-leaf add chain into `out`.
+fn add_chain(e: &Expr, out: &mut Vec<Op>) -> bool {
+    match e {
+        Expr::Binary(BinOp::Add, a, b) => {
+            if let Some(bo) = leaf_op(b) {
+                if add_chain(a, out) {
+                    out.push(bo);
+                    return true;
+                }
+            }
+            false
+        }
+        _ => {
+            if let Some(o) = leaf_op(e) {
+                out.push(o);
+                true
+            } else {
+                false
+            }
+        }
+    }
+}
+
+/// Match `base + coef·x` (or `base + x·coef`) with leaf `base`/`x` and a
+/// splat `coef`. `coef·x` and `x·coef` are bit-identical, so the fused
+/// loop always computes `base + coef·x`.
+fn as_axpy(e: &Expr) -> Option<(Op, Op, Op)> {
+    if let Expr::Binary(BinOp::Add, base, m) = e {
+        let base = leaf_op(base)?;
+        if let Expr::Binary(BinOp::Mul, a, b) = &**m {
+            if let (Some(coef), Some(x)) = (splat_op(a), leaf_op(b)) {
+                return Some((base, coef, x));
+            }
+            if let (Some(x), Some(coef)) = (leaf_op(a), splat_op(b)) {
+                return Some((base, coef, x));
+            }
+        }
+    }
+    None
+}
+
+/// Register-allocating expression compiler. Destination registers are
+/// allocated *before* operand registers are released, so a step's `dst`
+/// is never one of its own operands — the row executor relies on this
+/// for aliasing-free slice access.
+#[derive(Default)]
+struct Comp {
+    steps: Vec<Step>,
+    free: Vec<u32>,
+    n_regs: u32,
+}
+
+impl Comp {
+    fn alloc(&mut self) -> u32 {
+        self.free.pop().unwrap_or_else(|| {
+            self.n_regs += 1;
+            self.n_regs - 1
+        })
+    }
+
+    fn release(&mut self, op: Op) {
+        if let Op::Reg(r) = op {
+            self.free.push(r);
+        }
+    }
+
+    fn operand(&mut self, e: &Expr) -> Op {
+        if let Some(o) = leaf_op(e) {
+            return o;
+        }
+        let d = self.alloc();
+        self.emit(e, d);
+        Op::Reg(d)
+    }
+
+    fn emit(&mut self, e: &Expr, dst: u32) {
+        let mut terms = Vec::new();
+        if add_chain(e, &mut terms) && terms.len() >= 3 {
+            self.steps.push(Step::Sum { dst, terms });
+            return;
+        }
+        if let Some((base, coef, x)) = as_axpy(e) {
+            self.steps.push(Step::Axpy { dst, base, coef, x });
+            return;
+        }
+        if let Some(a) = leaf_op(e) {
+            self.steps.push(Step::Mov { dst, a });
+            return;
+        }
+        match e {
+            Expr::Idx(0) => self.steps.push(Step::Mov { dst, a: Op::IotaX }),
+            Expr::Unary(op, a) => {
+                let ao = self.operand(a);
+                self.steps.push(Step::Un { op: *op, dst, a: ao });
+                self.release(ao);
+            }
+            Expr::Binary(op, a, b) => {
+                let ao = self.operand(a);
+                let bo = self.operand(b);
+                self.steps.push(Step::Bin {
+                    op: *op,
+                    dst,
+                    a: ao,
+                    b: bo,
+                });
+                self.release(ao);
+                self.release(bo);
+            }
+            Expr::Select { cond, then, els } => {
+                let co = self.operand(cond);
+                let to = self.operand(then);
+                let fo = self.operand(els);
+                self.steps.push(Step::Sel {
+                    dst,
+                    c: co,
+                    t: to,
+                    f: fo,
+                });
+                self.release(co);
+                self.release(to);
+                self.release(fo);
+            }
+            _ => unreachable!("leaf expressions are handled above"),
+        }
+    }
+}
+
+/// Compile to a row plan, or `None` when the kernel is outside the
+/// vectorisable subset:
+///
+/// - a read of a *written* argument at a non-centre offset (statement-
+///   major row passes would then see cross-point updates the per-point
+///   order never produces), or
+/// - malformed locals (forward references, > [`MAX_LOCALS`]), or an
+///   index dimension > 2.
+fn compile(ir: &KernelIr) -> Option<RowPlan> {
+    let written: Vec<usize> = ir
+        .stmts
+        .iter()
+        .filter_map(|s| match s {
+            Stmt::Store { arg, .. } => Some(*arg),
+            _ => None,
+        })
+        .collect();
+
+    let mut n_locals = 0usize;
+    let mut n_args = 0usize;
+    let mut n_gbl = 0usize;
+    let mut n_red = 0usize;
+    let mut accesses: Vec<(usize, [i32; 3])> = Vec::new();
+    for s in &ir.stmts {
+        let mut ok = true;
+        walk(stmt_expr(s), &mut |e| match e {
+            Expr::Read { arg, off } => {
+                n_args = n_args.max(*arg + 1);
+                if !accesses.contains(&(*arg, *off)) {
+                    accesses.push((*arg, *off));
+                }
+                if written.contains(arg) && *off != [0, 0, 0] {
+                    ok = false;
+                }
+            }
+            Expr::Local(i) => {
+                if *i >= n_locals {
+                    ok = false;
+                }
+            }
+            Expr::Gbl(i) => n_gbl = n_gbl.max(*i + 1),
+            Expr::Idx(d) => {
+                if *d > 2 {
+                    ok = false;
+                }
+            }
+            _ => {}
+        });
+        if !ok {
+            return None;
+        }
+        match s {
+            Stmt::Let(_) => {
+                n_locals += 1;
+                if n_locals > MAX_LOCALS {
+                    return None;
+                }
+            }
+            Stmt::Store { arg, .. } => {
+                n_args = n_args.max(*arg + 1);
+                if !accesses.contains(&(*arg, [0, 0, 0])) {
+                    accesses.push((*arg, [0, 0, 0]));
+                }
+            }
+            Stmt::Reduce { slot, .. } => n_red = n_red.max(*slot + 1),
+        }
+    }
+
+    let mut steps = Vec::with_capacity(ir.stmts.len());
+    let mut n_regs = 0usize;
+    let mut lets = 0usize;
+    for s in &ir.stmts {
+        let mut c = Comp::default();
+        match s {
+            Stmt::Let(e) => {
+                c.emit(e, OUT);
+                steps.push(PlanStmt::Let {
+                    dst: lets,
+                    tape: Tape { steps: c.steps },
+                });
+                lets += 1;
+            }
+            Stmt::Store { arg, expr } => {
+                c.emit(expr, OUT);
+                steps.push(PlanStmt::Store {
+                    arg: *arg,
+                    in_place: expr_reads_arg(expr, *arg),
+                    tape: Tape { steps: c.steps },
+                });
+            }
+            Stmt::Reduce { slot, op, expr } => {
+                c.emit(expr, OUT);
+                steps.push(PlanStmt::Reduce {
+                    slot: *slot,
+                    op: *op,
+                    tape: Tape { steps: c.steps },
+                });
+            }
+        }
+        n_regs = n_regs.max(c.n_regs as usize);
+    }
+
+    Some(RowPlan {
+        steps,
+        n_locals,
+        n_regs,
+        n_args,
+        n_gbl,
+        n_red,
+        accesses,
+    })
+}
+
+// ------------------------------------------------------------ text form
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Read { arg, off } => {
+                write!(f, "(read {arg} {} {} {})", off[0], off[1], off[2])
+            }
+            Expr::Lit(v) => write!(f, "(lit {v:?})"),
+            Expr::Gbl(i) => write!(f, "(gbl {i})"),
+            Expr::Idx(d) => write!(f, "(idx {d})"),
+            Expr::Local(i) => write!(f, "(loc {i})"),
+            Expr::Unary(op, a) => write!(f, "({} {a})", op.name()),
+            Expr::Binary(op, a, b) => write!(f, "({} {a} {b})", op.name()),
+            Expr::Select { cond, then, els } => write!(f, "(sel {cond} {then} {els})"),
+        }
+    }
+}
+
+fn red_name(op: RedOp) -> &'static str {
+    match op {
+        RedOp::Sum => "sum",
+        RedOp::Min => "min",
+        RedOp::Max => "max",
+    }
+}
+
+impl fmt::Display for Stmt {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Stmt::Let(e) => write!(f, "let {e}"),
+            Stmt::Store { arg, expr } => write!(f, "store {arg} {expr}"),
+            Stmt::Reduce { slot, op, expr } => {
+                write!(f, "reduce {slot} {} {expr}", red_name(*op))
+            }
+        }
+    }
+}
+
+impl fmt::Display for KernelIr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, s) in self.stmts.iter().enumerate() {
+            if i > 0 {
+                writeln!(f)?;
+            }
+            write!(f, "{s}")?;
+        }
+        Ok(())
+    }
+}
+
+struct Parser<'a> {
+    toks: Vec<&'a str>,
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn next(&mut self) -> Result<&'a str, String> {
+        let t = self
+            .toks
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| "unexpected end of input".to_string())?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn expect(&mut self, t: &str) -> Result<(), String> {
+        let got = self.next()?;
+        if got == t {
+            Ok(())
+        } else {
+            Err(format!("expected '{t}', got '{got}'"))
+        }
+    }
+
+    fn num<T: std::str::FromStr>(&mut self, what: &str) -> Result<T, String> {
+        let t = self.next()?;
+        t.parse().map_err(|_| format!("bad {what}: '{t}'"))
+    }
+
+    fn expr(&mut self) -> Result<Expr, String> {
+        self.expect("(")?;
+        let head = self.next()?;
+        let e = match head {
+            "read" => Expr::Read {
+                arg: self.num("arg")?,
+                off: [self.num("off")?, self.num("off")?, self.num("off")?],
+            },
+            "lit" => Expr::Lit(self.num("literal")?),
+            "gbl" => Expr::Gbl(self.num("gbl index")?),
+            "idx" => Expr::Idx(self.num("idx dim")?),
+            "loc" => {
+                let i: usize = self.num("local index")?;
+                if i >= MAX_LOCALS {
+                    return Err(format!("local {i} out of range"));
+                }
+                Expr::Local(i)
+            }
+            "neg" | "abs" | "sqrt" => {
+                let op = match head {
+                    "neg" => UnOp::Neg,
+                    "abs" => UnOp::Abs,
+                    _ => UnOp::Sqrt,
+                };
+                Expr::Unary(op, Box::new(self.expr()?))
+            }
+            "sel" => Expr::Select {
+                cond: Box::new(self.expr()?),
+                then: Box::new(self.expr()?),
+                els: Box::new(self.expr()?),
+            },
+            _ => {
+                let op = match head {
+                    "add" => BinOp::Add,
+                    "sub" => BinOp::Sub,
+                    "mul" => BinOp::Mul,
+                    "div" => BinOp::Div,
+                    "min" => BinOp::Min,
+                    "max" => BinOp::Max,
+                    "gt" => BinOp::Gt,
+                    "ge" => BinOp::Ge,
+                    "lt" => BinOp::Lt,
+                    "le" => BinOp::Le,
+                    _ => return Err(format!("unknown operator '{head}'")),
+                };
+                Expr::bin(op, self.expr()?, self.expr()?)
+            }
+        };
+        self.expect(")")?;
+        Ok(e)
+    }
+}
+
+impl KernelIr {
+    /// Parse the `Display` text form back into an IR (round-trip tested).
+    pub fn parse(src: &str) -> Result<KernelIr, String> {
+        let spaced = src.replace('(', " ( ").replace(')', " ) ");
+        let mut p = Parser {
+            toks: spaced.split_whitespace().collect(),
+            pos: 0,
+        };
+        let mut stmts = Vec::new();
+        while p.pos < p.toks.len() {
+            match p.next()? {
+                "let" => stmts.push(Stmt::Let(p.expr()?)),
+                "store" => stmts.push(Stmt::Store {
+                    arg: p.num("store arg")?,
+                    expr: p.expr()?,
+                }),
+                "reduce" => {
+                    let slot = p.num("reduce slot")?;
+                    let op = match p.next()? {
+                        "sum" => RedOp::Sum,
+                        "min" => RedOp::Min,
+                        "max" => RedOp::Max,
+                        o => return Err(format!("unknown reduction '{o}'")),
+                    };
+                    stmts.push(Stmt::Reduce {
+                        slot,
+                        op,
+                        expr: p.expr()?,
+                    });
+                }
+                t => return Err(format!("expected statement, got '{t}'")),
+            }
+        }
+        Ok(KernelIr::new(stmts))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn star_ir() -> KernelIr {
+        let mut k = KirBuilder::new();
+        let l = k.let_(
+            read(0, [-1, 0, 0]) + read(0, [1, 0, 0]) + read(0, [0, -1, 0]) + read(0, [0, 1, 0])
+                - lit(4.0) * read(0, [0, 0, 0]),
+        );
+        let kap = k.let_(read(1, [0, 0, 0]));
+        k.store(2, kap * l);
+        k.build()
+    }
+
+    #[test]
+    fn display_parse_round_trip() {
+        let mut k = KirBuilder::new();
+        let d = k.let_(read(0, [0, 0, 0]).max(lit(1e-12)));
+        let s = k.let_(d.clone().gt(lit(0.5)).select(d.clone().sqrt(), -d));
+        k.store(1, s.clone() + lit(0.125) * idx(0));
+        k.reduce(0, RedOp::Min, s / 2.0);
+        let ir = k.build();
+        let text = ir.to_string();
+        let back = KernelIr::parse(&text).expect("parse");
+        assert_eq!(ir, back);
+        assert_eq!(text, back.to_string());
+    }
+
+    #[test]
+    fn star_chain_compiles_to_sum_step() {
+        let ir = star_ir();
+        let plan = ir.plan().expect("vectorizable");
+        assert_eq!(plan.n_locals, 2);
+        assert_eq!(plan.n_args, 3);
+        let has_sum = plan.steps.iter().any(|s| match s {
+            PlanStmt::Let { tape, .. } => tape
+                .steps
+                .iter()
+                .any(|st| matches!(st, Step::Sum { terms, .. } if terms.len() == 4)),
+            _ => false,
+        });
+        assert!(has_sum, "4-point star should fuse into a Sum step: {plan:?}");
+    }
+
+    #[test]
+    fn axpy_peephole_and_in_place() {
+        // u += alpha * lap — reads the written arg at the centre.
+        let mut k = KirBuilder::new();
+        k.store(0, read(0, [0, 0, 0]) + lit(0.1) * read(1, [0, 0, 0]));
+        let ir = k.build();
+        let plan = ir.plan().expect("vectorizable");
+        match &plan.steps[0] {
+            PlanStmt::Store { in_place, tape, .. } => {
+                assert!(*in_place, "centre read of the stored arg is in-place");
+                assert!(matches!(tape.steps[0], Step::Axpy { .. }), "{tape:?}");
+            }
+            other => panic!("expected store, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn offset_read_of_written_arg_falls_back() {
+        // d0 = d0[-1] — statement-major row passes would see updated
+        // neighbours; must refuse to compile.
+        let mut k = KirBuilder::new();
+        k.store(0, read(0, [-1, 0, 0]));
+        assert!(!k.build().is_vectorizable());
+        // …but an offset read of a *read-only* arg is fine.
+        let mut k = KirBuilder::new();
+        k.store(1, read(0, [-1, 0, 0]));
+        assert!(k.build().is_vectorizable());
+    }
+
+    #[test]
+    fn forward_local_reference_rejected() {
+        let ir = KernelIr::new(vec![Stmt::Store {
+            arg: 0,
+            expr: Expr::Local(0),
+        }]);
+        assert!(!ir.is_vectorizable());
+    }
+
+    #[test]
+    fn step_dst_never_aliases_operands() {
+        // Deep expression: registers must be reused, but a step's dst
+        // must never equal one of its own operand registers.
+        let e = ((read(0, [0, 0, 0]) * read(1, [0, 0, 0]) + read(2, [0, 0, 0]).sqrt())
+            * (read(0, [1, 0, 0]) - read(1, [1, 0, 0]) * read(2, [1, 0, 0])))
+        .max(read(0, [2, 0, 0]) * read(1, [2, 0, 0]));
+        let mut k = KirBuilder::new();
+        k.store(3, e);
+        let ir = k.build();
+        let plan = ir.plan().expect("vectorizable");
+        for s in &plan.steps {
+            let tape = match s {
+                PlanStmt::Let { tape, .. }
+                | PlanStmt::Store { tape, .. }
+                | PlanStmt::Reduce { tape, .. } => tape,
+            };
+            for st in &tape.steps {
+                let (dst, ops): (u32, Vec<Op>) = match st {
+                    Step::Mov { dst, a } => (*dst, vec![*a]),
+                    Step::Un { dst, a, .. } => (*dst, vec![*a]),
+                    Step::Bin { dst, a, b, .. } => (*dst, vec![*a, *b]),
+                    Step::Sel { dst, c, t, f } => (*dst, vec![*c, *t, *f]),
+                    Step::Sum { dst, terms } => (*dst, terms.clone()),
+                    Step::Axpy { dst, base, coef, x } => (*dst, vec![*base, *coef, *x]),
+                };
+                for o in ops {
+                    if let Op::Reg(r) = o {
+                        assert_ne!(dst, r, "dst aliases operand reg in {st:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interpreter_matches_hand_math() {
+        use crate::exec::native::run_loop_native;
+        use crate::ops::stencil::StencilId;
+        use crate::ops::{Access, Arg, BlockId, DataStore, Dataset, DatasetId, LoopInst};
+
+        let d = |id: u32| Dataset {
+            id: DatasetId(id),
+            block: BlockId(0),
+            name: format!("d{id}"),
+            size: [6, 4, 1],
+            halo_lo: [1, 1, 0],
+            halo_hi: [1, 1, 0],
+            elem_bytes: 8,
+        };
+        let datasets = vec![d(0), d(1)];
+        let mut store = DataStore::new();
+        store.alloc(&datasets[0]);
+        store.alloc(&datasets[1]);
+        for (i, v) in store.buf_mut(DatasetId(0)).iter_mut().enumerate() {
+            *v = i as f64 * 0.5;
+        }
+
+        let mut k = KirBuilder::new();
+        let s = k.let_(read(0, [-1, 0, 0]) + read(0, [1, 0, 0]));
+        k.store(1, s * lit(0.5) + idx(0));
+        let ir = Arc::new(k.build());
+        let l = LoopInst {
+            name: "t".into(),
+            block: BlockId(0),
+            range: [(0, 6), (0, 4), (0, 1)],
+            args: vec![
+                Arg::dat(DatasetId(0), StencilId(0), Access::Read),
+                Arg::dat(DatasetId(1), StencilId(0), Access::Write),
+            ],
+            kernel: ir.to_kernel(),
+            kernel_ir: Some(ir),
+            seq: 0,
+            bw_efficiency: 1.0,
+        };
+        let mut reds = vec![];
+        run_loop_native(&l, l.range, &datasets, &mut store, &mut reds);
+        let off = |x: isize, y: isize| datasets[0].offset([x, y, 0]) as usize;
+        let src = store.buf(DatasetId(0)).to_vec();
+        let got = store.buf(DatasetId(1))[datasets[1].offset([2, 1, 0]) as usize];
+        let want = (src[off(1, 1)] + src[off(3, 1)]) * 0.5 + 2.0;
+        assert_eq!(got, want);
+    }
+}

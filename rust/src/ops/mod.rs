@@ -12,6 +12,7 @@ pub mod api;
 pub mod block;
 pub mod dataset;
 pub mod kernel;
+pub mod kir;
 pub mod parloop;
 pub mod reduction;
 pub mod stencil;
@@ -24,6 +25,7 @@ pub use surface::{Declare, Drive, Record};
 pub use block::{Block, BlockId};
 pub use dataset::{DataStore, Dataset, DatasetId};
 pub use kernel::{Ctx, Kernel};
+pub use kir::{KernelIr, KirBuilder};
 pub use parloop::{Arg, LoopInst, Range3};
 pub use reduction::{RedOp, Reduction, ReductionId};
 pub use stencil::{Stencil, StencilId};

@@ -5,8 +5,10 @@ use super::access::Access;
 use super::block::BlockId;
 use super::dataset::DatasetId;
 use super::kernel::Kernel;
+use super::kir::KernelIr;
 use super::reduction::{RedOp, ReductionId};
 use super::stencil::StencilId;
+use std::sync::Arc;
 
 /// An iteration range: half-open `[lo, hi)` per dimension. 2D loops use
 /// `z = (0, 1)`.
@@ -52,6 +54,12 @@ pub struct LoopInst {
     pub range: Range3,
     pub args: Vec<Arg>,
     pub kernel: Kernel,
+    /// Declarative kernel IR, when the loop was recorded through
+    /// [`super::Record::par_loop_ir`]. The closure above is derived from
+    /// it, so executors may run either representation; the
+    /// [`VectorExecutor`](crate::exec::VectorExecutor) compiles it into
+    /// slice-based row loops and falls back to the closure otherwise.
+    pub kernel_ir: Option<Arc<KernelIr>>,
     /// Monotonically increasing id assigned at enqueue time.
     pub seq: u64,
     /// Relative cost factor of this kernel: 1.0 = pure streaming
@@ -104,6 +112,7 @@ mod tests {
             range: [(0, 10), (0, 5), (0, 1)],
             args,
             kernel: kernel(|_| {}),
+            kernel_ir: None,
             seq: 0,
             bw_efficiency: 1.0,
         }

@@ -19,9 +19,11 @@
 use super::block::BlockId;
 use super::dataset::DatasetId;
 use super::kernel::Kernel;
+use super::kir::KernelIr;
 use super::parloop::{Arg, Range3};
 use super::reduction::{RedOp, ReductionId};
 use super::stencil::StencilId;
+use std::sync::Arc;
 
 /// Declaration surface: blocks, datasets, stencils, reductions.
 pub trait Declare {
@@ -62,6 +64,26 @@ pub trait Record {
         args: Vec<Arg>,
         bw_efficiency: f64,
     );
+
+    /// Record a parallel loop from a declarative [`KernelIr`] body. The
+    /// closure is *derived* from the IR ([`KernelIr::to_kernel`]), so
+    /// every executor computes the same expression tree; recorders that
+    /// keep [`super::LoopInst`]s override this to also attach the IR for
+    /// the vector backend. The default derives the closure and drops the
+    /// IR (correct, native-only).
+    fn par_loop_ir(
+        &mut self,
+        name: &str,
+        block: BlockId,
+        range: Range3,
+        ir: KernelIr,
+        args: Vec<Arg>,
+        bw_efficiency: f64,
+    ) {
+        let ir = Arc::new(ir);
+        let kernel = ir.to_kernel();
+        self.par_loop_eff(name, block, range, kernel, args, bw_efficiency)
+    }
 
     /// Record a parallel loop. Execution is deferred until a
     /// data-returning call (lazy queues) or until the chain is replayed

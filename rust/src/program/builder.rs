@@ -3,7 +3,7 @@
 
 use crate::ops::surface::{Declare, Record};
 use crate::ops::{
-    Arg, Block, BlockId, Dataset, DatasetId, Kernel, LoopInst, Range3, RedOp, Reduction,
+    Arg, Block, BlockId, Dataset, DatasetId, Kernel, KernelIr, LoopInst, Range3, RedOp, Reduction,
     ReductionId, Stencil, StencilId,
 };
 use crate::tiling::analysis::{chain_structure_fingerprint, fuse_chain, ChainAnalysis, Fnv};
@@ -61,6 +61,31 @@ impl Record for ChainRecorder<'_> {
             range,
             args,
             kernel,
+            kernel_ir: None,
+            seq,
+            bw_efficiency,
+        });
+    }
+
+    fn par_loop_ir(
+        &mut self,
+        name: &str,
+        block: BlockId,
+        range: Range3,
+        ir: KernelIr,
+        args: Vec<Arg>,
+        bw_efficiency: f64,
+    ) {
+        validate_loop(&self.name, name, &args, self.datasets, self.stencils);
+        let ir = Arc::new(ir);
+        let seq = self.loops.len() as u64;
+        self.loops.push(LoopInst {
+            name: name.to_string(),
+            block,
+            range,
+            args,
+            kernel: ir.to_kernel(),
+            kernel_ir: Some(ir),
             seq,
             bw_efficiency,
         });
@@ -235,6 +260,24 @@ impl ProgramBuilder {
                 validate_stencil_reach(&spec.name, l, &self.datasets, &self.stencils)?;
             }
         }
+        // Compile every distinct kernel IR's row plan now, so replay
+        // never pays the lazy compile; count the vectorisable ones for
+        // the report (`kir_kernels_compiled`).
+        let mut seen_irs: Vec<*const KernelIr> = Vec::new();
+        let mut kir_compiled = 0u64;
+        for spec in &self.chains {
+            for l in &spec.loops {
+                if let Some(ir) = &l.kernel_ir {
+                    let p = Arc::as_ptr(ir);
+                    if !seen_irs.contains(&p) {
+                        seen_irs.push(p);
+                        if ir.is_vectorizable() {
+                            kir_compiled += 1;
+                        }
+                    }
+                }
+            }
+        }
         let analyses: Vec<Arc<ChainAnalysis>> = self
             .chains
             .iter()
@@ -261,6 +304,7 @@ impl ProgramBuilder {
             fused: Mutex::new(HashMap::new()),
             fingerprint: h.finish(),
             freeze_s: t0.elapsed().as_secs_f64(),
+            kir_compiled,
         })
     }
 }
@@ -391,6 +435,8 @@ pub struct Program {
     fused: Mutex<HashMap<(u32, u32), Arc<FusedChain>>>,
     fingerprint: u64,
     freeze_s: f64,
+    /// Distinct kernel IRs that compiled to a vector row plan at freeze.
+    kir_compiled: u64,
 }
 
 impl Program {
@@ -480,6 +526,12 @@ impl Program {
     /// Host seconds the freeze (validation + per-chain analysis) took.
     pub fn freeze_s(&self) -> f64 {
         self.freeze_s
+    }
+
+    /// Distinct kernel IRs that compiled to a vector row plan at freeze
+    /// time (the [`crate::exec::VectorExecutor`] fast path).
+    pub fn kir_kernels_compiled(&self) -> u64 {
+        self.kir_compiled
     }
 
     /// Modelled total bytes of all declared datasets.

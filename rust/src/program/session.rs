@@ -8,11 +8,12 @@
 
 use super::builder::{validate_loop, ChainId, Program};
 use crate::coordinator::Config;
-use crate::exec::{Engine, Executor, Metrics, NativeExecutor, World};
+use crate::exec::{Engine, ExecBackend, Executor, Metrics, NativeExecutor, VectorExecutor, World};
 use crate::lazy::LoopQueue;
 use crate::ops::surface::{Drive, Record};
 use crate::ops::{
-    Arg, BlockId, DataStore, Dataset, Kernel, LoopInst, Range3, Reduction, ReductionId, Stencil,
+    Arg, BlockId, DataStore, Dataset, Kernel, KernelIr, LoopInst, Range3, Reduction, ReductionId,
+    Stencil,
 };
 use crate::tiling::analysis::{chain_structure_eq, chain_structure_fingerprint, ChainAnalysis};
 use std::collections::HashMap;
@@ -40,13 +41,21 @@ pub struct Session {
     /// Which frozen chains this session has replayed at least once
     /// (drives the `analysis_builds` / `analysis_reuse_hits` counters).
     frozen_used: Vec<bool>,
+    /// Executor fallback-loop count at the last metrics reset — the
+    /// executor's counter is cumulative, the metric covers the timed
+    /// region.
+    kir_fallback_base: u64,
 }
 
 impl Session {
     /// Bind `program` to the engine `cfg` describes (tuned engines
-    /// included), with the native executor.
+    /// included), with the executor backend `cfg.exec` selects.
     pub fn new(program: Arc<Program>, cfg: &Config) -> Self {
-        Self::with_engine(program, cfg.build_engine())
+        let mut s = Self::with_engine(program, cfg.build_engine());
+        if cfg.exec == ExecBackend::Vector {
+            s.set_executor(Box::new(VectorExecutor::new()));
+        }
+        s
     }
 
     /// Bind `program` to an explicit engine. Like
@@ -63,6 +72,8 @@ impl Session {
         let reds = program.reductions().to_vec();
         let mut metrics = Metrics::new();
         metrics.program_freeze_s = program.freeze_s();
+        metrics.kir_kernels_compiled = program.kir_kernels_compiled();
+        metrics.exec_backend = "native".to_string();
         let frozen_used = vec![false; program.chains().len()];
         Session {
             store,
@@ -75,13 +86,17 @@ impl Session {
             oom: false,
             dyn_analysis: HashMap::new(),
             frozen_used,
+            kir_fallback_base: 0,
             program,
         }
     }
 
-    /// Swap in a different numeric executor (e.g. the PJRT backend).
+    /// Swap in a different numeric executor (e.g. the vector or PJRT
+    /// backend).
     pub fn set_executor(&mut self, exec: Box<dyn Executor>) {
         self.exec = exec;
+        self.metrics.exec_backend = self.exec.name().to_string();
+        self.kir_fallback_base = self.exec.kir_loop_stats().1;
     }
 
     /// Rebind this session to a different memory engine. Pending
@@ -275,6 +290,11 @@ impl Session {
         };
         self.engine
             .run_chain_analyzed(chain, Some(analysis), &mut world, self.cyclic_phase);
+        self.metrics.kir_fallback_loops = self
+            .exec
+            .kir_loop_stats()
+            .1
+            .saturating_sub(self.kir_fallback_base);
     }
 
     // ---- introspection ---------------------------------------------------
@@ -345,6 +365,36 @@ impl Record for Session {
             range,
             args,
             kernel,
+            kernel_ir: None,
+            seq: 0,
+            bw_efficiency,
+        });
+    }
+
+    fn par_loop_ir(
+        &mut self,
+        name: &str,
+        block: BlockId,
+        range: Range3,
+        ir: KernelIr,
+        args: Vec<Arg>,
+        bw_efficiency: f64,
+    ) {
+        validate_loop(
+            "session",
+            name,
+            &args,
+            self.program.datasets(),
+            self.program.stencils(),
+        );
+        let ir = Arc::new(ir);
+        self.queue.push(LoopInst {
+            name: name.to_string(),
+            block,
+            range,
+            args,
+            kernel: ir.to_kernel(),
+            kernel_ir: Some(ir),
             seq: 0,
             bw_efficiency,
         });
@@ -411,11 +461,19 @@ impl Drive for Session {
 
     fn reset_metrics(&mut self) {
         let freeze = self.metrics.program_freeze_s;
+        let backend = std::mem::take(&mut self.metrics.exec_backend);
+        let compiled = self.metrics.kir_kernels_compiled;
         let tracing = self.metrics.trace_enabled();
         self.metrics = Metrics::new();
         // The freeze cost is a per-Session constant, not part of any
-        // timed region — keep reporting it after warm-up resets.
+        // timed region — keep reporting it after warm-up resets. Same
+        // for the executor backend and the freeze-time kernel-compile
+        // count; the fallback-loop counter restarts with the timed
+        // region.
         self.metrics.program_freeze_s = freeze;
+        self.metrics.exec_backend = backend;
+        self.metrics.kir_kernels_compiled = compiled;
+        self.kir_fallback_base = self.exec.kir_loop_stats().1;
         // Tracing is a session-level switch: a warm-up reset drops the
         // initialisation events but keeps collecting — the exported
         // trace covers exactly the timed region.

@@ -382,6 +382,7 @@ mod tests {
                 range,
                 args: vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)],
                 kernel: kernel(|_| {}),
+                kernel_ir: None,
                 seq: 0,
                 bw_efficiency: 1.0,
             },
@@ -394,6 +395,7 @@ mod tests {
                     Arg::dat(DatasetId(1), StencilId(0), Access::Write),
                 ],
                 kernel: kernel(|_| {}),
+                kernel_ir: None,
                 seq: 1,
                 bw_efficiency: 1.0,
             },

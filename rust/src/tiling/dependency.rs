@@ -213,6 +213,7 @@ mod tests {
             range: [(0, 16), (0, 16), (0, 1)],
             args,
             kernel: kernel(|_| {}),
+            kernel_ir: None,
             seq: 0,
             bw_efficiency: 1.0,
         }

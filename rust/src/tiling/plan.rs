@@ -448,6 +448,7 @@ mod tests {
             range: [(0, 16), (0, ny), (0, 1)],
             args,
             kernel: kernel(|_| {}),
+            kernel_ir: None,
             seq: 0,
             bw_efficiency: 1.0,
         }

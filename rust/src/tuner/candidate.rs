@@ -87,6 +87,7 @@ mod tests {
             range: [(0, 16), (0, ny as isize), (0, 1)],
             args: vec![Arg::dat(DatasetId(0), StencilId(0), Access::Write)],
             kernel: kernel(|_| {}),
+            kernel_ir: None,
             seq: 0,
             bw_efficiency: eff,
         }];

@@ -187,6 +187,7 @@ mod tests {
                     let v = c.r(0, -1, 0) + c.r(0, 1, 0);
                     c.w(1, 0, 0, 0.5 * v);
                 }),
+                kernel_ir: None,
                 seq: 0,
                 bw_efficiency: 1.0,
             },
@@ -203,6 +204,7 @@ mod tests {
                     let s = c.r(1, 0, 0);
                     c.w(1, 0, 0, s + 0.1 * v);
                 }),
+                kernel_ir: None,
                 seq: 1,
                 bw_efficiency: 1.0,
             },

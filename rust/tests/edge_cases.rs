@@ -204,6 +204,7 @@ fn lp(name: &str, ny: isize, args: Vec<Arg>) -> LoopInst {
         range: [(0, 32), (0, ny), (0, 1)],
         args,
         kernel: kernel(|_| {}),
+        kernel_ir: None,
         seq: 0,
         bw_efficiency: 1.0,
     }

@@ -117,6 +117,9 @@ const SCHEMA: &[(&str, &str)] = &[
     ("analysis_builds", "num"),
     ("analysis_reuse_hits", "num"),
     ("fused_steps", "num"),
+    ("exec_backend", "str"),
+    ("kir_kernels_compiled", "num"),
+    ("kir_fallback_loops", "num"),
     ("program_freeze_s", "num"),
     ("spans_recorded", "num"),
     ("span_max_depth", "num"),

@@ -1,0 +1,363 @@
+//! Property tests for the kernel IR (in-tree xorshift PRNG — the
+//! vendored crate set has no proptest):
+//!
+//! * **differential fuzz** — random IR kernels (random expression trees
+//!   over reads/literals/locals/globals/indices, random stores and
+//!   reduction accumulations, random sub-ranges) must produce
+//!   bit-identical stores and reductions when run through the
+//!   [`VectorExecutor`]'s compiled row programs vs the
+//!   [`NativeExecutor`] running the closure derived from the *same* IR;
+//! * **text round-trip** — `KernelIr::parse(ir.to_string())` recovers
+//!   the IR exactly, literals included;
+//! * **app equivalence** — every paper app is bit-exact under
+//!   `--exec vector` vs `--exec native` at the [`Session`] level.
+
+use ops_oc::apps::cloverleaf2d::CloverLeaf2D;
+use ops_oc::apps::cloverleaf3d::CloverLeaf3D;
+use ops_oc::apps::diffusion::Diffusion2D;
+use ops_oc::apps::opensbli::OpenSbli;
+use ops_oc::coordinator::{Config, Platform};
+use ops_oc::exec::{ExecBackend, Executor, NativeExecutor, VectorExecutor};
+use ops_oc::memory::AppCalib;
+use ops_oc::ops::kir::{self, Expr, KernelIr, KirBuilder};
+use ops_oc::ops::*;
+use ops_oc::program::{ProgramBuilder, Session};
+use std::sync::Arc;
+
+/// Deterministic xorshift64* PRNG.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+    fn f64(&mut self) -> f64 {
+        (self.next() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+// ------------------------------------------------------- random kernels
+
+/// Read-only dataset arguments 0..NREAD; stores go to args NREAD and
+/// NREAD+1 (never read back, so every generated kernel stays inside the
+/// vectorisable subset).
+const NREAD: usize = 3;
+
+fn dataset(i: u32) -> Dataset {
+    Dataset {
+        id: DatasetId(i),
+        block: BlockId(0),
+        name: format!("d{i}"),
+        size: [10, 7, 3],
+        halo_lo: [2, 2, 1],
+        halo_hi: [2, 2, 1],
+        elem_bytes: 8,
+    }
+}
+
+fn seed_store(store: &mut DataStore, id: DatasetId, scale: f64) {
+    for (i, v) in store.buf_mut(id).iter_mut().enumerate() {
+        *v = ((i * 2654435761) % 1000) as f64 * scale - 250.0 * scale;
+    }
+}
+
+/// Random stencil offset within the declared halos ([2, 2, 1]).
+fn rand_off(rng: &mut Rng) -> [i32; 3] {
+    [
+        rng.below(5) as i32 - 2,
+        rng.below(5) as i32 - 2,
+        rng.below(3) as i32 - 1,
+    ]
+}
+
+/// Random expression over reads of args `0..NREAD`, literals, iteration
+/// indices, already-bound locals, and (optionally) global constants.
+/// Division and sqrt are generated unguarded: inf/NaN results are still
+/// deterministic, and `select` branches per element rather than
+/// blending, so bitwise comparison stays meaningful.
+fn rand_expr(rng: &mut Rng, depth: usize, use_gbl: bool, locals: &[Expr]) -> Expr {
+    if depth == 0 || rng.below(3) == 0 {
+        let mut kinds = 4 + u64::from(use_gbl);
+        if locals.is_empty() {
+            kinds -= 1;
+        }
+        return match rng.below(kinds) {
+            0 => kir::lit((rng.f64() - 0.5) * 8.0),
+            1 => kir::idx(rng.below(3) as usize),
+            2 => kir::read(rng.below(NREAD as u64) as usize, rand_off(rng)),
+            3 if !locals.is_empty() => locals[rng.below(locals.len() as u64) as usize].clone(),
+            _ => kir::gbl(rng.below(2) as usize),
+        };
+    }
+    let a = rand_expr(rng, depth - 1, use_gbl, locals);
+    let b = rand_expr(rng, depth - 1, use_gbl, locals);
+    match rng.below(13) {
+        0 => a + b,
+        1 => a - b,
+        2 => a * b,
+        3 => a / b,
+        4 => a.min(b),
+        5 => a.max(b),
+        6 => a.abs(),
+        7 => a.sqrt(),
+        8 => -a,
+        9 => a.gt(b),
+        10 => a.le(b),
+        11 => a.ge(b.clone()) * b,
+        _ => {
+            let c = rand_expr(rng, depth - 1, use_gbl, locals);
+            a.lt(b).select(c, kir::lit(0.5))
+        }
+    }
+}
+
+struct RandLoop {
+    ir: KernelIr,
+    args: Vec<Arg>,
+    n_red: usize,
+    range: Range3,
+}
+
+fn rand_loop(rng: &mut Rng) -> RandLoop {
+    let use_gbl = rng.below(2) == 1;
+    let mut k = KirBuilder::new();
+    let mut locals: Vec<Expr> = vec![];
+    for _ in 0..rng.below(3) {
+        let e = rand_expr(rng, 2, use_gbl, &locals);
+        locals.push(k.let_(e));
+    }
+    let two_stores = rng.below(2) == 1;
+    k.store(NREAD, rand_expr(rng, 3, use_gbl, &locals));
+    if two_stores {
+        k.store(NREAD + 1, rand_expr(rng, 3, use_gbl, &locals));
+    }
+    let red_ops = [RedOp::Sum, RedOp::Min, RedOp::Max];
+    let n_red = rng.below(3) as usize;
+    let mut red_args = vec![];
+    for slot in 0..n_red {
+        let op = red_ops[rng.below(3) as usize];
+        k.reduce(slot, op, rand_expr(rng, 2, use_gbl, &locals));
+        red_args.push(Arg::GblRed {
+            red: ReductionId(slot as u32),
+            op,
+        });
+    }
+
+    let mut args: Vec<Arg> = (0..NREAD as u32)
+        .map(|i| Arg::dat(DatasetId(i), StencilId(0), Access::Read))
+        .collect();
+    args.push(Arg::dat(
+        DatasetId(NREAD as u32),
+        StencilId(0),
+        Access::Write,
+    ));
+    if two_stores {
+        args.push(Arg::dat(
+            DatasetId(NREAD as u32 + 1),
+            StencilId(0),
+            Access::Write,
+        ));
+    }
+    args.extend(red_args);
+    if use_gbl {
+        args.push(Arg::GblConst {
+            values: vec![rng.f64() * 3.0, rng.f64() - 0.5],
+        });
+    }
+
+    // random (possibly partial) sub-range of the 10x7x3 interior
+    let sub = |rng: &mut Rng, n: isize| {
+        let lo = rng.below(n as u64 / 2) as isize;
+        let hi = lo + 1 + rng.below((n - lo) as u64) as isize;
+        (lo, hi.min(n))
+    };
+    let range = [sub(rng, 10), sub(rng, 7), sub(rng, 3)];
+    RandLoop {
+        ir: k.build(),
+        args,
+        n_red,
+        range,
+    }
+}
+
+/// Run one random loop through both executors on identically seeded
+/// stores; every buffer and reduction must be bit-identical.
+fn check_differential(seed: u64) {
+    let mut rng = Rng::new(seed);
+    let rl = rand_loop(&mut rng);
+    let datasets: Vec<Dataset> = (0..NREAD as u32 + 2).map(dataset).collect();
+    let mut s_nat = DataStore::new();
+    let mut s_vec = DataStore::new();
+    for d in &datasets {
+        s_nat.alloc(d);
+        s_vec.alloc(d);
+        seed_store(&mut s_nat, d.id, 0.25 + d.id.0 as f64);
+        seed_store(&mut s_vec, d.id, 0.25 + d.id.0 as f64);
+    }
+    let red_op = |i: u32| {
+        rl.args
+            .iter()
+            .find_map(|a| match a {
+                Arg::GblRed { red, op } if red.0 == i => Some(*op),
+                _ => None,
+            })
+            .unwrap_or(RedOp::Sum)
+    };
+    let mk_reds = || -> Vec<Reduction> {
+        (0..rl.n_red as u32)
+            .map(|i| Reduction::new(ReductionId(i), &format!("r{i}"), red_op(i)))
+            .collect()
+    };
+    let mut r_nat = mk_reds();
+    let mut r_vec = mk_reds();
+
+    let ir = Arc::new(rl.ir);
+    assert!(
+        ir.is_vectorizable(),
+        "seed {seed}: generated IR fell outside the vectorisable subset:\n{ir}"
+    );
+    let l = LoopInst {
+        name: format!("fuzz{seed}"),
+        block: BlockId(0),
+        range: rl.range,
+        args: rl.args,
+        kernel: ir.to_kernel(),
+        kernel_ir: Some(ir),
+        seq: 0,
+        bw_efficiency: 1.0,
+    };
+
+    let mut nexec = NativeExecutor::new();
+    nexec.run_loop(&l, l.range, &datasets, &mut s_nat, &mut r_nat);
+    let mut vexec = VectorExecutor::new();
+    vexec.run_loop(&l, l.range, &datasets, &mut s_vec, &mut r_vec);
+    assert_eq!(
+        (vexec.vector_loops, vexec.fallback_loops),
+        (1, 0),
+        "seed {seed}: loop must take the row-program path"
+    );
+
+    for d in &datasets {
+        let a = s_nat.buf(d.id);
+        let b = s_vec.buf(d.id);
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "seed {seed}: dataset {} differs at {i}: {x:e} vs {y:e}",
+                d.id.0
+            );
+        }
+    }
+    for (i, (a, b)) in r_nat.iter().zip(&r_vec).enumerate() {
+        assert!(
+            a.value.to_bits() == b.value.to_bits(),
+            "seed {seed}: reduction {i} differs: {} vs {}",
+            a.value,
+            b.value
+        );
+    }
+}
+
+#[test]
+fn random_kernels_bit_exact_across_backends() {
+    for seed in 0..300 {
+        check_differential(seed);
+    }
+}
+
+#[test]
+fn random_kernels_display_parse_round_trip() {
+    for seed in 0..100 {
+        let mut rng = Rng::new(seed + 1000);
+        let rl = rand_loop(&mut rng);
+        let text = rl.ir.to_string();
+        let back = KernelIr::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: parse failed: {e}\n{text}"));
+        assert_eq!(back, rl.ir, "seed {seed}: round-trip changed the IR");
+    }
+}
+
+// --------------------------------------------------- app-level equivalence
+
+fn cfgs(app: AppCalib) -> (Config, Config) {
+    let native = Config::new(Platform::KnlFlatDdr4, app);
+    let vector = native.clone().with_exec(ExecBackend::Vector);
+    (native, vector)
+}
+
+#[test]
+fn diffusion_bit_exact_under_vector_backend() {
+    let (c_nat, c_vec) = cfgs(AppCalib::CLOVERLEAF_2D);
+    let run = |cfg: &Config| {
+        let mut b = ProgramBuilder::new();
+        let app = Diffusion2D::new(&mut b, 48, 48, 1);
+        let chains = app.record_chains(&mut b, 1);
+        let prog = Arc::new(b.freeze().expect("diffusion freezes"));
+        let mut s = Session::new(prog, cfg);
+        s.run_chain(chains.init);
+        s.replay(chains.step, 10);
+        (s.fetch(app.u), s.metrics().clone())
+    };
+    let (want, m_nat) = run(&c_nat);
+    let (got, m_vec) = run(&c_vec);
+    assert_eq!(want, got, "diffusion numerics differ across backends");
+    assert_eq!(m_nat.exec_backend, "native");
+    assert_eq!(m_vec.exec_backend, "vector");
+    // both step kernels carry IR, and the vector session runs them on
+    // the fast path (the init chain's idx-dependent kernel falls back)
+    assert!(m_vec.kir_kernels_compiled >= 2, "{m_vec:?}");
+    assert_eq!(m_nat.kir_kernels_compiled, m_vec.kir_kernels_compiled);
+}
+
+#[test]
+fn cloverleaf2d_bit_exact_under_vector_backend() {
+    let (c_nat, c_vec) = cfgs(AppCalib::CLOVERLEAF_2D);
+    let run = |cfg: &Config| {
+        let mut b = ProgramBuilder::new();
+        let mut app = CloverLeaf2D::new(&mut b, 16, 16, 1);
+        let prog = Arc::new(b.freeze().expect("cloverleaf2d freezes"));
+        let mut s = Session::new(prog, cfg);
+        app.run(&mut s, 3, 2);
+        (s.fetch(app.density0), s.fetch(app.xvel0), s.fetch(app.energy0))
+    };
+    assert_eq!(run(&c_nat), run(&c_vec), "cloverleaf2d differs across backends");
+}
+
+#[test]
+fn cloverleaf3d_bit_exact_under_vector_backend() {
+    let (c_nat, c_vec) = cfgs(AppCalib::CLOVERLEAF_3D);
+    let run = |cfg: &Config| {
+        let mut b = ProgramBuilder::new();
+        let mut app = CloverLeaf3D::new(&mut b, 8, 8, 8, 1);
+        let prog = Arc::new(b.freeze().expect("cloverleaf3d freezes"));
+        let mut s = Session::new(prog, cfg);
+        app.run(&mut s, 2, 0);
+        (s.fetch(app.density0), s.fetch(app.energy0))
+    };
+    assert_eq!(run(&c_nat), run(&c_vec), "cloverleaf3d differs across backends");
+}
+
+#[test]
+fn opensbli_bit_exact_under_vector_backend() {
+    let (c_nat, c_vec) = cfgs(AppCalib::OPENSBLI);
+    let run = |cfg: &Config| {
+        let mut b = ProgramBuilder::new();
+        let mut app = OpenSbli::new(&mut b, 16, 1, 1);
+        let prog = Arc::new(b.freeze().expect("opensbli freezes"));
+        let mut s = Session::new(prog, cfg);
+        app.run(&mut s, 2);
+        (s.fetch(app.q[0]), s.fetch(app.q[4]))
+    };
+    assert_eq!(run(&c_nat), run(&c_vec), "opensbli differs across backends");
+}

@@ -179,6 +179,7 @@ mod spans {
                     let v = c.r(0, -1, 0) + c.r(0, 1, 0);
                     c.w(1, 0, 0, 0.5 * v);
                 }),
+                kernel_ir: None,
                 seq: l as u64,
                 bw_efficiency: 1.0,
             });

@@ -106,6 +106,7 @@ fn random_fixture(seed: u64, nds: u32, nloops: usize, ny: usize) -> Fixture {
                 let old = c.r(1, 0, 0);
                 c.w(1, 0, 0, coef * v + 0.1 * old);
             }),
+            kernel_ir: None,
             seq: li as u64,
             bw_efficiency: 1.0,
         });
@@ -375,6 +376,7 @@ fn prop_independent_loops_stay_unshifted_at_any_depth() {
                 let v = c.r(0, 0, 0);
                 c.w(1, 0, 0, v * 0.5);
             }),
+            kernel_ir: None,
             seq: i as u64,
             bw_efficiency: 1.0,
         })

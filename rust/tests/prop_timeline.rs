@@ -108,6 +108,7 @@ fn random_fixture(seed: u64, nds: u32, nloops: usize, ny: usize) -> Fixture {
                 Arg::dat(dst, StencilId(0), acc),
             ],
             kernel: kernel(|_| {}),
+            kernel_ir: None,
             seq: li as u64,
             bw_efficiency: 0.5 + 0.5 * rng.f64(),
         });

@@ -113,6 +113,7 @@ fn random_fixture(seed: u64, nds: u32, nloops: usize, ny: usize) -> Fixture {
                 let old = c.r(1, 0, 0);
                 c.w(1, 0, 0, coef * v + 0.1 * old);
             }),
+            kernel_ir: None,
             seq: li as u64,
             bw_efficiency: 0.8 + 0.2 * rng.f64(),
         });
@@ -303,6 +304,7 @@ fn tuned_strictly_beats_inflated_heuristic() {
                 let v = c.r(0, 0, -1) + c.r(0, 0, 1);
                 c.w(1, 0, 0, 0.5 * v);
             }),
+            kernel_ir: None,
             seq: 0,
             bw_efficiency: 1.0,
         },
@@ -317,6 +319,7 @@ fn tuned_strictly_beats_inflated_heuristic() {
                 let v = c.r(0, 0, 0);
                 c.w(0, 0, 0, v + 1.0);
             }),
+            kernel_ir: None,
             seq: 1,
             bw_efficiency: 1.0,
         },

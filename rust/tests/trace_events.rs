@@ -53,6 +53,7 @@ fn fixture(ny: usize) -> (Vec<Dataset>, Vec<Stencil>, DataStore, Vec<LoopInst>) 
             let v = c.r(0, -1, 0) + c.r(0, 1, 0);
             c.w(1, 0, 0, 0.5 * v);
         }),
+        kernel_ir: None,
         seq: 0,
         bw_efficiency: 1.0,
     }];
