@@ -1,0 +1,171 @@
+//! Codec boundary sweep: compression ratio × problem size across each
+//! tier boundary.
+//!
+//! Shen et al. (arXiv 2204.11315) compress GPU stencil state 2–5×
+//! before it crosses the host boundary; this figure attaches a `~c:`
+//! codec to the NVMe link of the three-tier stack and sweeps the
+//! problem size across both capacity boundaries at several ratios.
+//! The claims under test:
+//!
+//! * while the problem fits host DRAM the NVMe codec is silent — every
+//!   in-host cell is *bit-identical* to its codec-free twin;
+//! * past the host boundary the slowest-tier wire traffic drops by at
+//!   least `min(ratio, 2)/2×` (the conservative floor: ceil rounding
+//!   and per-tile minimum wire bytes eat into small ratios);
+//! * the auto-tuner's codec toggle honours the never-worse guarantee
+//!   (`tuned_model_s <= heuristic_model_s`) with codecs in the space;
+//! * with slow codec kernels, at least one swept cell flips from
+//!   transfer-bound to **codec-bound** — the attribution the codec
+//!   stream exists to make visible.
+
+use ops_oc::bench_support::{
+    run_cl2d_cfg, slowest_boundary_upload_bytes, telemetry::BenchRecorder, Figure,
+};
+use ops_oc::coordinator::Config;
+use ops_oc::memory::AppCalib;
+use ops_oc::tuner::TuneOpts;
+use std::time::Instant;
+
+const HOST_GB: f64 = 64.0;
+
+fn stack(codec: &str) -> String {
+    format!("tiers:hbm=16g@509.7+host=64g@11~0.00001+nvme=inf@6~0.00002{codec}:cyclic:prefetch")
+}
+
+fn cfg_for(spec: &str) -> Config {
+    let (t, _) = Config::parse_spec(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+    Config::for_target(t, AppCalib::CLOVERLEAF_2D)
+}
+
+fn main() {
+    let t0 = Instant::now();
+    let plain = cfg_for(&stack(""));
+    let ratios = [1.5, 2.5, 3.5];
+
+    let mut fig = Figure::new(
+        "Codec boundary sweep: CloverLeaf 2D, NVMe-link codec past host DRAM (64 GB)",
+        "effective GB/s (modelled)",
+    );
+    let s_plain = fig.add_series("no codec");
+    let s_ratio: Vec<usize> = ratios
+        .iter()
+        .map(|r| fig.add_series(&format!("~c:{r}")))
+        .collect();
+
+    let sizes = [8.0, 16.0, 32.0, 48.0, 96.0, 128.0, 192.0];
+    let mut rec = BenchRecorder::new("fig_codec_boundary");
+    for gb in sizes {
+        let (mp, oom_p) = run_cl2d_cfg(&plain, false, 8, 6144, gb, 2, 0);
+        assert!(!oom_p, "streaming never OOMs at {gb} GB");
+        rec.point(
+            &format!("cloverleaf2d|plain|{gb:.0}"),
+            "cloverleaf2d",
+            "tiers:3t",
+            gb,
+            &mp,
+            oom_p,
+        );
+        fig.push(s_plain, gb, Some(mp.effective_bandwidth_gbs()));
+        let plain_bytes = slowest_boundary_upload_bytes(&plain.topology(), &mp);
+
+        for (i, ratio) in ratios.iter().enumerate() {
+            let ccfg = cfg_for(&stack(&format!("~c:{ratio}")));
+            let (mc, oom_c) = run_cl2d_cfg(&ccfg, false, 8, 6144, gb, 2, 0);
+            assert!(!oom_c, "{gb} GB at ratio {ratio}");
+            rec.point(
+                &format!("cloverleaf2d|c{ratio}|{gb:.0}"),
+                "cloverleaf2d",
+                &format!("tiers:3t~c:{ratio}"),
+                gb,
+                &mc,
+                oom_c,
+            );
+            fig.push(s_ratio[i], gb, Some(mc.effective_bandwidth_gbs()));
+            // §5.1 byte accounting is schedule- and codec-independent
+            assert_eq!(mp.loop_bytes, mc.loop_bytes, "{gb} GB ratio {ratio}");
+
+            if gb <= 48.0 {
+                // fits host DRAM: the NVMe boundary (and its codec) is
+                // silent — the cell is bit-identical to the plain twin
+                assert_eq!(
+                    mp.elapsed_s.to_bits(),
+                    mc.elapsed_s.to_bits(),
+                    "in-host cell must be bit-identical at {gb} GB ratio {ratio}"
+                );
+                assert_eq!(mc.codec_bytes_saved, 0, "{gb} GB ratio {ratio}");
+            } else if gb >= 2.0 * HOST_GB {
+                // past host DRAM: the codec pays off on the slowest tier
+                let codec_bytes = slowest_boundary_upload_bytes(&ccfg.topology(), &mc);
+                assert!(
+                    codec_bytes < plain_bytes,
+                    "{gb} GB ratio {ratio}: {codec_bytes} !< {plain_bytes}"
+                );
+                let reduction = plain_bytes as f64 / codec_bytes as f64;
+                let floor = ratio.min(2.0) / 2.0;
+                assert!(
+                    reduction >= floor,
+                    "{gb} GB ratio {ratio}: wire reduction {reduction:.2} < floor {floor:.2}"
+                );
+                assert!(mc.codec_bytes_saved > 0, "{gb} GB ratio {ratio}");
+                assert!(
+                    mc.elapsed_s <= mp.elapsed_s * (1.0 + 1e-9),
+                    "{gb} GB ratio {ratio}: a fast codec never costs time"
+                );
+            }
+        }
+    }
+
+    // the tuner's codec toggle keeps the never-worse guarantee with
+    // codecs in the candidate space
+    let tuned = cfg_for(&stack("~c:3.5"))
+        .with_tuning(TuneOpts { budget: 32, seed: 0xC0DEC })
+        .expect("tiered targets are tunable");
+    let (mt, oom_t) = run_cl2d_cfg(&tuned, false, 8, 6144, 128.0, 2, 0);
+    assert!(!oom_t);
+    assert!(mt.tune_evals > 0, "the search must actually run");
+    assert!(
+        mt.tuned_model_s <= mt.heuristic_model_s,
+        "codec toggle breaks never-worse: {} > {}",
+        mt.tuned_model_s,
+        mt.heuristic_model_s
+    );
+    rec.point(
+        "cloverleaf2d|c3.5-tuned|128",
+        "cloverleaf2d",
+        "tiers:3t~c:3.5:tuned",
+        128.0,
+        &mt,
+        oom_t,
+    );
+
+    // slow codec kernels past the boundary: the run must report itself
+    // codec-bound — the flip this subsystem exists to attribute
+    let slow = cfg_for(&stack("~c:3.5@1/1.5"));
+    let (ms, oom_s) = run_cl2d_cfg(&slow, false, 8, 6144, 128.0, 2, 0);
+    assert!(!oom_s);
+    assert_eq!(
+        ms.bound().name(),
+        "codec",
+        "1 GB/s codec kernels against a 6 GB/s NVMe link must dominate"
+    );
+    rec.point(
+        "cloverleaf2d|c3.5-slowkernels|128",
+        "cloverleaf2d",
+        "tiers:3t~c:3.5@1/1.5",
+        128.0,
+        &ms,
+        oom_s,
+    );
+
+    println!("{}", fig.render());
+    println!(
+        "codec-bound cell at 128 GB: bound={} (slow kernels), saved {} wire bytes at ratio 3.5",
+        ms.bound().name(),
+        ms.codec_bytes_saved
+    );
+    match rec.write() {
+        Ok(p) => println!("trajectory: {}", p.display()),
+        Err(e) => eprintln!("cannot write trajectory: {e}"),
+    }
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -52,6 +52,7 @@ pub fn point_json(
             "\"size_gb\":{:.3},\"makespan_s\":{:.9},\"bound\":\"{}\",",
             "\"oom\":{},\"avg_bandwidth_gbs\":{:.3},",
             "\"util_compute\":{:.4},\"util_upload\":{:.4},",
+            "\"util_codec\":{:.4},\"codec_bytes_saved\":{},",
             "\"p50_loop_time_s\":{:.9},\"p99_loop_time_s\":{:.9},",
             "\"spans_recorded\":{},\"config_digest\":\"{:016x}\"}}"
         ),
@@ -65,6 +66,8 @@ pub fn point_json(
         m.average_bandwidth_gbs(),
         m.stream_util(crate::exec::timeline::StreamClass::Compute),
         m.stream_util(crate::exec::timeline::StreamClass::Upload),
+        m.stream_util(crate::exec::timeline::StreamClass::Codec),
+        m.codec_bytes_saved,
         q(0.5),
         q(0.99),
         m.spans_recorded,
@@ -155,12 +158,20 @@ pub struct BenchPoint {
 /// Parse a trajectory file (a JSON array of flat objects). Tolerant of
 /// whitespace and field order; only `key` and `makespan_s` are read.
 pub fn parse_points(text: &str) -> Result<Vec<BenchPoint>, String> {
+    parse_points_field(text, "makespan_s")
+}
+
+/// Like [`parse_points`], but reading an arbitrary numeric field into
+/// [`BenchPoint::makespan_s`] — the `bench-diff --field` seam
+/// (`codec_bytes_saved`, `util_upload`, …). A point without the field
+/// is an error, not a silently passing cell.
+pub fn parse_points_field(text: &str, field: &str) -> Result<Vec<BenchPoint>, String> {
     let mut points = Vec::new();
     for (i, obj) in split_objects(text)?.into_iter().enumerate() {
         let key = find_string_field(&obj, "key")
             .ok_or_else(|| format!("point {i}: missing \"key\""))?;
-        let makespan_s = find_number_field(&obj, "makespan_s")
-            .ok_or_else(|| format!("point {i} ({key}): missing \"makespan_s\""))?;
+        let makespan_s = find_number_field(&obj, field)
+            .ok_or_else(|| format!("point {i} ({key}): missing \"{field}\""))?;
         points.push(BenchPoint { key, makespan_s });
     }
     Ok(points)
@@ -284,8 +295,23 @@ impl DiffReport {
 /// *strictly* above `old * (1 + tol_pct/100)` — a file diffed against
 /// itself passes at any tolerance, including 0%.
 pub fn diff(old_text: &str, new_text: &str, tol_pct: f64) -> Result<DiffReport, String> {
-    let old = parse_points(old_text)?;
-    let new = parse_points(new_text)?;
+    diff_field(old_text, new_text, tol_pct, "makespan_s")
+}
+
+/// Like [`diff`], but gating on an arbitrary numeric point field
+/// (`bench-diff --field`): the same strictly-above-tolerance rule,
+/// applied to that field's values — an *increase* beyond tolerance is
+/// the regression, so pick fields where smaller is better (times,
+/// utilisations of a stream the change should relieve, bytes on the
+/// wire).
+pub fn diff_field(
+    old_text: &str,
+    new_text: &str,
+    tol_pct: f64,
+    field: &str,
+) -> Result<DiffReport, String> {
+    let old = parse_points_field(old_text, field)?;
+    let new = parse_points_field(new_text, field)?;
     let mut report = DiffReport::default();
     for o in &old {
         match new.iter().find(|n| n.key == o.key) {
@@ -368,6 +394,28 @@ mod tests {
         let r = diff(old, bad, 10.0).unwrap();
         assert_eq!(r.regressions(), 1);
         assert!((r.lines[0].delta_pct - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diff_field_gates_on_arbitrary_numeric_fields() {
+        let old = "[{\"key\":\"a\",\"makespan_s\":1.0,\"codec_bytes_saved\":100}]";
+        let ok = "[{\"key\":\"a\",\"makespan_s\":9.0,\"codec_bytes_saved\":105}]";
+        let bad = "[{\"key\":\"a\",\"makespan_s\":1.0,\"codec_bytes_saved\":200}]";
+        // the gated field decides; makespan_s is ignored here
+        let r = diff_field(old, ok, 10.0, "codec_bytes_saved").unwrap();
+        assert_eq!(r.regressions(), 0);
+        assert!((r.lines[0].delta_pct - 5.0).abs() < 1e-9);
+        assert_eq!(diff_field(old, bad, 10.0, "codec_bytes_saved").unwrap().regressions(), 1);
+        // a missing field is an error, not a silently passing cell
+        assert!(diff_field(old, ok, 10.0, "bogus_field").is_err());
+        // points emitted by point_json carry the codec fields
+        let mut rec = BenchRecorder::new("t");
+        rec.point("a", "x", "p", 6.0, &m_with_time(0.5), false);
+        let text = rec.render();
+        assert!(text.contains("\"util_codec\":0.0000"), "{text}");
+        assert!(text.contains("\"codec_bytes_saved\":0"), "{text}");
+        assert_eq!(diff_field(&text, &text, 0.0, "codec_bytes_saved").unwrap().regressions(), 0);
+        assert_eq!(diff_field(&text, &text, 0.0, "util_upload").unwrap().regressions(), 0);
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Link codecs: modelled compression on tier-boundary and inter-rank
+//! traffic.
+//!
+//! Out-of-core runs are bandwidth-bound on their slowest link; Shen et
+//! al. (arXiv 2204.11315) show GPU stencil state compresses 2–5× with
+//! error-bounded lossy codecs, turning the host boundary from a wall
+//! into a stream. A [`CodecSpec`] attaches to one link of a
+//! [`crate::topology::Topology`] (the `~c:` tier annotation) or to the
+//! inter-rank interconnect and describes three modelled quantities:
+//!
+//! * **ratio** — logical bytes per wire byte (`wire = ceil(bytes/ratio)`);
+//! * **compress / decompress throughput** (GB/s) — the codec kernels'
+//!   achieved rates, paid on a dedicated per-link `codec` timeline
+//!   stream so they overlap transfers and compute like every other
+//!   stream, and so [`crate::exec::Metrics::bound`] can attribute a run
+//!   as *codec-bound* when the codec kernels, not the wire, dominate;
+//! * an optional **read-only ratio** — halo exchanges and read-only
+//!   uploads ship immutable data, which typically compresses better;
+//!   when set, those paths use it instead of `ratio`.
+//!
+//! The codec is a *timeline and byte-ledger model only*: numerics are
+//! untouched by construction, and a `ratio = 1.0` codec is bit-identical
+//! (clocks, bytes, ledger) to no codec at all — engines bypass the codec
+//! path entirely for [`CodecSpec::is_identity`] specs.
+
+use crate::memory::calib_util::GB;
+
+/// Default modelled compression throughput, GB/s (cuZFP-class fixed-rate
+/// kernel on a V100-generation part).
+pub const DEFAULT_COMPRESS_GBS: f64 = 50.0;
+/// Default modelled decompression throughput, GB/s.
+pub const DEFAULT_DECOMPRESS_GBS: f64 = 80.0;
+
+/// One link's compression model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CodecSpec {
+    /// Logical-to-wire byte ratio (≥ 1.0; 1.0 = identity).
+    pub ratio: f64,
+    /// Compression throughput over the logical bytes, GB/s.
+    pub compress_gbs: f64,
+    /// Decompression throughput over the logical bytes, GB/s.
+    pub decompress_gbs: f64,
+    /// Ratio override for read-only data (halo planes, read-only
+    /// uploads); `None` falls back to `ratio`.
+    pub ro_ratio: Option<f64>,
+}
+
+impl CodecSpec {
+    /// A codec with the default throughput calibration.
+    pub const fn new(ratio: f64) -> Self {
+        CodecSpec {
+            ratio,
+            compress_gbs: DEFAULT_COMPRESS_GBS,
+            decompress_gbs: DEFAULT_DECOMPRESS_GBS,
+            ro_ratio: None,
+        }
+    }
+
+    /// ZFP fixed-accuracy calibration: Shen et al. report 2–5×
+    /// compression on out-of-core GPU stencil state; 3.5 is the midpoint
+    /// of their reported band, throughputs at the defaults.
+    pub const ZFP: CodecSpec = CodecSpec::new(3.5);
+
+    /// Validate the spec's numerics; errors name the offending field.
+    pub fn validate(&self) -> crate::Result<()> {
+        crate::ensure!(
+            self.ratio.is_finite() && self.ratio >= 1.0,
+            "codec ratio {} must be a finite value >= 1.0",
+            self.ratio
+        );
+        crate::ensure!(
+            self.compress_gbs.is_finite() && self.compress_gbs > 0.0,
+            "codec compress throughput {} GB/s must be finite and positive",
+            self.compress_gbs
+        );
+        crate::ensure!(
+            self.decompress_gbs.is_finite() && self.decompress_gbs > 0.0,
+            "codec decompress throughput {} GB/s must be finite and positive",
+            self.decompress_gbs
+        );
+        if let Some(ro) = self.ro_ratio {
+            crate::ensure!(
+                ro.is_finite() && ro >= 1.0,
+                "codec read-only ratio {ro} must be a finite value >= 1.0"
+            );
+        }
+        Ok(())
+    }
+
+    /// Whether this codec changes nothing: engines skip the codec path
+    /// entirely (bit-identical to no codec).
+    pub fn is_identity(&self) -> bool {
+        self.ratio == 1.0 && self.ro_ratio.map_or(true, |r| r == 1.0)
+    }
+
+    /// The ratio applied to a transfer; read-only data may use the
+    /// override.
+    pub fn ratio_for(&self, read_only: bool) -> f64 {
+        if read_only {
+            self.ro_ratio.unwrap_or(self.ratio)
+        } else {
+            self.ratio
+        }
+    }
+
+    /// Bytes on the wire for `bytes` logical bytes (0 stays 0; anything
+    /// else compresses to at least one byte).
+    pub fn wire_bytes(&self, bytes: u64) -> u64 {
+        self.wire_bytes_for(bytes, false)
+    }
+
+    /// [`CodecSpec::wire_bytes`] with the read-only ratio selection.
+    pub fn wire_bytes_for(&self, bytes: u64, read_only: bool) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        ((bytes as f64 / self.ratio_for(read_only)).ceil() as u64).max(1)
+    }
+
+    /// Time the compression kernel occupies the codec stream, seconds.
+    pub fn compress_time_s(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            bytes as f64 / (self.compress_gbs * GB)
+        }
+    }
+
+    /// Time the decompression kernel occupies the codec stream, seconds.
+    pub fn decompress_time_s(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            bytes as f64 / (self.decompress_gbs * GB)
+        }
+    }
+
+    /// Parse the value grammar shared by the `~c:` tier annotation, the
+    /// `codec` spec token and the `--codec` flag:
+    ///
+    /// ```text
+    /// <ratio>                          e.g. 3.5
+    /// <ratio>@<cgbs>/<dgbs>            e.g. 3.5@50/80
+    /// <ratio>@<cgbs>/<dgbs>/<ro>       e.g. 3.5@50/80/5
+    /// ```
+    pub fn parse(tok: &str) -> crate::Result<CodecSpec> {
+        let bad = |what: &str| crate::err!("codec spec {tok:?}: bad {what}");
+        let (ratio_str, rest) = match tok.split_once('@') {
+            Some((r, rest)) => (r, Some(rest)),
+            None => (tok, None),
+        };
+        let ratio: f64 = ratio_str.parse().map_err(|_| bad("ratio"))?;
+        let mut spec = CodecSpec::new(ratio);
+        if let Some(rest) = rest {
+            let mut parts = rest.split('/');
+            let c = parts.next().ok_or_else(|| bad("throughputs"))?;
+            let d = parts
+                .next()
+                .ok_or_else(|| crate::err!("codec spec {tok:?}: expected <cgbs>/<dgbs> after '@'"))?;
+            spec.compress_gbs = c.parse().map_err(|_| bad("compress throughput"))?;
+            spec.decompress_gbs = d.parse().map_err(|_| bad("decompress throughput"))?;
+            if let Some(ro) = parts.next() {
+                spec.ro_ratio = Some(ro.parse().map_err(|_| bad("read-only ratio"))?);
+            }
+            crate::ensure!(
+                parts.next().is_none(),
+                "codec spec {tok:?}: too many '/' segments"
+            );
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Exact inverse of [`CodecSpec::parse`]: the short form when the
+    /// throughputs are at the defaults and no read-only override is set,
+    /// the long form otherwise.
+    pub fn render(&self) -> String {
+        let default_tp = self.compress_gbs == DEFAULT_COMPRESS_GBS
+            && self.decompress_gbs == DEFAULT_DECOMPRESS_GBS;
+        match (default_tp, self.ro_ratio) {
+            (true, None) => format!("{}", self.ratio),
+            (_, None) => format!("{}@{}/{}", self.ratio, self.compress_gbs, self.decompress_gbs),
+            (_, Some(ro)) => format!(
+                "{}@{}/{}/{}",
+                self.ratio, self.compress_gbs, self.decompress_gbs, ro
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_and_long_forms_round_trip() {
+        let cases = [
+            CodecSpec::new(3.5),
+            CodecSpec::new(1.0),
+            CodecSpec {
+                ratio: 2.25,
+                compress_gbs: 12.5,
+                decompress_gbs: 40.0,
+                ro_ratio: None,
+            },
+            CodecSpec {
+                ratio: 4.0,
+                compress_gbs: 50.0,
+                decompress_gbs: 80.0,
+                ro_ratio: Some(6.5),
+            },
+        ];
+        for c in cases {
+            let s = c.render();
+            let p = CodecSpec::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
+            assert_eq!(p, c, "{s}");
+        }
+        // the ro form always renders long (throughputs included) so the
+        // slash positions stay unambiguous
+        assert_eq!(cases[3].render(), "4@50/80/6.5");
+        assert_eq!(cases[0].render(), "3.5");
+    }
+
+    #[test]
+    fn malformed_specs_are_typed_errors() {
+        for bad in ["", "x", "0.5", "-3", "3.5@", "3.5@50", "3.5@a/b", "3.5@50/0", "3.5@50/80/0.2", "3.5@50/80/5/9", "inf", "nan"] {
+            let e = CodecSpec::parse(bad);
+            assert!(e.is_err(), "{bad:?} must be rejected");
+            let msg = e.unwrap_err().to_string();
+            assert!(msg.contains("codec"), "{bad:?}: {msg}");
+        }
+    }
+
+    #[test]
+    fn wire_bytes_and_times() {
+        let c = CodecSpec::new(3.5);
+        assert_eq!(c.wire_bytes(0), 0);
+        assert_eq!(c.wire_bytes(1), 1);
+        assert_eq!(c.wire_bytes(35), 10);
+        assert_eq!(c.wire_bytes(36), 11, "wire bytes round up");
+        assert_eq!(c.compress_time_s(0), 0.0);
+        let t = c.compress_time_s(50_000_000_000);
+        assert!((t - 1.0).abs() < 1e-12, "{t}");
+        let t = c.decompress_time_s(80_000_000_000);
+        assert!((t - 1.0).abs() < 1e-12, "{t}");
+    }
+
+    #[test]
+    fn identity_and_read_only_selection() {
+        assert!(CodecSpec::new(1.0).is_identity());
+        assert!(!CodecSpec::new(1.5).is_identity());
+        let mut c = CodecSpec::new(1.0);
+        c.ro_ratio = Some(2.0);
+        assert!(!c.is_identity(), "an ro override is not identity");
+        let z = CodecSpec {
+            ro_ratio: Some(7.0),
+            ..CodecSpec::ZFP
+        };
+        assert_eq!(z.ratio_for(false), 3.5);
+        assert_eq!(z.ratio_for(true), 7.0);
+        assert_eq!(z.wire_bytes_for(70, true), 10);
+        assert_eq!(CodecSpec::ZFP.ratio_for(true), 3.5, "no override falls back");
+    }
+
+    #[test]
+    fn zfp_preset_is_valid() {
+        CodecSpec::ZFP.validate().unwrap();
+        assert_eq!(CodecSpec::ZFP.ratio, 3.5);
+    }
+}

@@ -32,6 +32,7 @@
 //! `tiers:` head into a [`Target::Tiered`] and rides the same
 //! [`Config`].
 
+use crate::codec::CodecSpec;
 use crate::distributed::{DecompKind, Interconnect, ShardedEngine};
 use crate::exec::{Engine, ExecBackend};
 use crate::memory::{
@@ -482,6 +483,25 @@ impl Target {
         }
     }
 
+    /// Attach `codec` to every link of the target's tier stack — the
+    /// `codec` spec token and `--codec` flag funnel through here.
+    /// Errors for legacy platform targets (their closed topologies take
+    /// codecs via `tiers:` stacks, e.g. `tiers:gpu-explicit-pcie-zfp`)
+    /// and for stacks that already carry a `~c:` tier annotation.
+    pub fn with_codec(self, codec: CodecSpec) -> crate::Result<Target> {
+        match self {
+            Target::Platform(p) => crate::bail!(
+                "platform {:?} takes no codec token — legacy platform targets take \
+                 codecs via tiers: stacks (e.g. tiers:gpu-explicit-pcie-zfp)",
+                p.label()
+            ),
+            Target::Tiered(mut t) => {
+                t.topology = t.topology.with_codec_all(codec)?;
+                Ok(Target::Tiered(t))
+            }
+        }
+    }
+
     /// Shard across `ranks` with default sharding settings (mirrors
     /// [`Platform::sharded`]; tiered targets are always shardable).
     pub fn sharded(self, ranks: u32) -> crate::Result<Target> {
@@ -838,9 +858,16 @@ impl Config {
             return Ok(Target::Platform(Self::parse_platform(spec)?));
         };
         let mut parts = body.split(':');
-        let stack = parts.next().unwrap_or("");
-        let topo = topology::spec::parse_stack(stack)?;
-        let toks: Vec<&str> = parts.collect();
+        let mut stack = parts.next().unwrap_or("").to_string();
+        let mut toks: Vec<&str> = parts.collect();
+        // A `~c:` codec annotation carries a ':' inside the stack token,
+        // which the token split above cut off — stitch the value piece(s)
+        // back on before handing the stack to the topology parser.
+        while stack.ends_with("~c") && !toks.is_empty() {
+            stack.push(':');
+            stack.push_str(toks.remove(0));
+        }
+        let topo = topology::spec::parse_stack(&stack)?;
         let xpos = toks.iter().position(|t| parse_ranks_token(t).is_some());
         let (inner_toks, shard_toks) = match xpos {
             Some(i) => (&toks[..i], &toks[i + 1..]),
@@ -899,7 +926,7 @@ impl Config {
     /// [`Config::parse_platform`] itself keeps the strict grammar (it
     /// rejects `tuned` like any unknown token).
     pub fn parse_spec(spec: &str) -> crate::Result<(Target, bool)> {
-        let (target, tuned, fuse) = Self::parse_spec_opts(spec)?;
+        let (target, tuned, fuse, _codec) = Self::parse_spec_opts(spec)?;
         crate::ensure!(
             fuse == 1,
             "spec {spec:?} sets a temporal fusion depth, which this entry \
@@ -909,20 +936,34 @@ impl Config {
     }
 
     /// Like [`Config::parse_spec`], but additionally recognising the
-    /// temporal-fusion token, in either spelling and at any position:
-    /// `fuse:<k>` (a `fuse` token followed by a bare depth) or the
-    /// compact `fuse<k>` — e.g. `tiers:gpu-explicit-pcie:cyclic:fuse:4` or
-    /// `gpu-explicit:fuse4:x2`. Returns `(target, tuned, fuse)` with
-    /// `fuse = 1` when no token is present; `fuse0` (tuner-auto)
-    /// requires a tunable target, like `tuned`.
-    pub fn parse_spec_opts(spec: &str) -> crate::Result<(Target, bool, u32)> {
+    /// temporal-fusion and codec tokens, in either spelling and at any
+    /// position: `fuse:<k>` (a `fuse` token followed by a bare depth)
+    /// or the compact `fuse<k>`, and `codec:<spec>` / `codec<spec>`
+    /// with the codec-value grammar of [`CodecSpec::parse`] — e.g.
+    /// `tiers:gpu-explicit-pcie:cyclic:fuse:4` or
+    /// `tiers:gpu-explicit-pcie:codec3.5:x2`. Returns
+    /// `(target, tuned, fuse, codec)` with `fuse = 1` when no token is
+    /// present; `fuse0` (tuner-auto) requires a tunable target, like
+    /// `tuned`. A `codec` token is **already applied** to the returned
+    /// target (every link of its stack, via [`Target::with_codec`]) —
+    /// the fourth element only reports it, so the CLI can detect
+    /// conflicts with the `--codec` flag.
+    pub fn parse_spec_opts(spec: &str) -> crate::Result<(Target, bool, u32, Option<CodecSpec>)> {
         let toks: Vec<&str> = spec.split(':').collect();
         let mut tuned = false;
         let mut fuse: Option<u32> = None;
+        let mut codec: Option<CodecSpec> = None;
         let set_fuse = |k: u32, fuse: &mut Option<u32>| -> crate::Result<()> {
             crate::ensure!(
                 fuse.replace(k).is_none(),
                 "duplicate fuse token in spec {spec:?}"
+            );
+            Ok(())
+        };
+        let set_codec = |c: CodecSpec, codec: &mut Option<CodecSpec>| -> crate::Result<()> {
+            crate::ensure!(
+                codec.replace(c).is_none(),
+                "duplicate codec token in spec {spec:?}"
             );
             Ok(())
         };
@@ -942,18 +983,36 @@ impl Config {
                 i += 1;
             } else if let Some(k) = parse_fuse_token(t) {
                 set_fuse(k, &mut fuse)?;
+            } else if t == "codec" {
+                // the `codec:<spec>` spelling, mirroring `fuse:<k>`
+                let Some(v) = toks.get(i + 1) else {
+                    crate::bail!(
+                        "codec token needs a value: codec:<spec> or codec<spec> in {spec:?}"
+                    )
+                };
+                let c = CodecSpec::parse(v)
+                    .map_err(|e| crate::err!("codec token in {spec:?}: {e}"))?;
+                set_codec(c, &mut codec)?;
+                i += 1;
+            } else if let Some(v) = t.strip_prefix("codec").filter(|v| !v.is_empty()) {
+                let c = CodecSpec::parse(v)
+                    .map_err(|e| crate::err!("codec token in {spec:?}: {e}"))?;
+                set_codec(c, &mut codec)?;
             } else {
                 rest.push(t);
             }
             i += 1;
         }
-        let target = Self::parse_target(&rest.join(":"))?;
+        let mut target = Self::parse_target(&rest.join(":"))?;
+        if let Some(c) = codec {
+            target = target.with_codec(c)?;
+        }
         if tuned || fuse == Some(0) {
             // validate tunability with a throwaway default-calib config
             Config::for_target(target.clone(), AppCalib::CLOVERLEAF_2D)
                 .with_tuning(TuneOpts::default())?;
         }
-        Ok((target, tuned, fuse.unwrap_or(1)))
+        Ok((target, tuned, fuse.unwrap_or(1), codec))
     }
 
     /// Instantiate the memory engine for this configuration. With
@@ -1069,8 +1128,13 @@ impl Config {
             )
         };
         if t.ranks > 1 {
+            // Halo exchanges ride the slowest boundary link, so they
+            // inherit that link's codec (the outermost one).
+            let halo = t.topology.codec(t.topology.num_tiers().saturating_sub(2));
             let engines = (0..t.ranks).map(|_| mk()).collect();
-            Box::new(ShardedEngine::new(engines, t.decomp, t.link, t.overlap))
+            Box::new(
+                ShardedEngine::new(engines, t.decomp, t.link, t.overlap).with_codec(halo),
+            )
         } else {
             mk()
         }
@@ -1253,7 +1317,7 @@ mod tests {
     #[test]
     fn fuse_spec_tokens_parse_in_both_spellings() {
         // compact fuse<k>, position-independent
-        let (t, tuned, fuse) = Config::parse_spec_opts("gpu-explicit:fuse4:nvlink").unwrap();
+        let (t, tuned, fuse, _) = Config::parse_spec_opts("gpu-explicit:fuse4:nvlink").unwrap();
         assert!(!tuned);
         assert_eq!(fuse, 4);
         assert_eq!(
@@ -1265,16 +1329,16 @@ mod tests {
             }
         );
         // the fuse:<k> spelling, composing with tiers and sharding
-        let (t, _, fuse) =
+        let (t, _, fuse, _) =
             Config::parse_spec_opts("tiers:gpu-explicit-pcie:cyclic:fuse:8:x2").unwrap();
         assert_eq!(fuse, 8);
         assert_eq!(t.ranks(), 2);
         assert!(t.tiered().unwrap().opts.cyclic);
         // absent token defaults to 1 (off)
-        let (_, _, fuse) = Config::parse_spec_opts("knl-cache-tiled").unwrap();
+        let (_, _, fuse, _) = Config::parse_spec_opts("knl-cache-tiled").unwrap();
         assert_eq!(fuse, 1);
         // fuse0 = tuner-auto: requires a tunable target, like `tuned`
-        let (_, _, fuse) = Config::parse_spec_opts("gpu-explicit:fuse0").unwrap();
+        let (_, _, fuse, _) = Config::parse_spec_opts("gpu-explicit:fuse0").unwrap();
         assert_eq!(fuse, 0);
         assert!(Config::parse_spec_opts("gpu-baseline:fuse0").is_err());
         // malformed and duplicate tokens are rejected, not dropped
@@ -1284,6 +1348,61 @@ mod tests {
         // the fuse-unaware entry points cannot silently drop the depth
         assert!(Config::parse_spec("gpu-explicit:fuse4").is_err());
         assert!(Config::parse_platform("gpu-explicit:fuse4").is_err());
+    }
+
+    #[test]
+    fn codec_spec_tokens_parse_and_apply() {
+        // compact codec<spec> attaches the codec to every link
+        let (t, _, _, c) = Config::parse_spec_opts("tiers:gpu-explicit-pcie:codec3.5").unwrap();
+        assert_eq!(c, Some(CodecSpec::new(3.5)));
+        assert_eq!(t.tiered().unwrap().topology.codec(0), Some(CodecSpec::new(3.5)));
+        // the codec:<spec> spelling, position-independent and composing
+        // with the other option tokens
+        let (t, _, fuse, _) =
+            Config::parse_spec_opts("tiers:gpu-explicit-pcie:cyclic:codec:2@12/40:fuse4")
+                .unwrap();
+        assert_eq!(fuse, 4);
+        let cs = t.tiered().unwrap().topology.codec(0).unwrap();
+        assert!((cs.ratio - 2.0).abs() < 1e-12);
+        assert!((cs.compress_gbs - 12.0).abs() < 1e-12);
+        // inline ~c: annotations survive the ':'-split of the tiers body
+        // (they are tier grammar, not the codec token)
+        let (t, _, _, c) =
+            Config::parse_spec_opts("tiers:hbm=16g@509.7+host=512g@11~c:3.5").unwrap();
+        assert!(c.is_none());
+        assert_eq!(t.tiered().unwrap().topology.codec(0), Some(CodecSpec::new(3.5)));
+        // …also per-link mid-spec, with trailing tokens, and the
+        // canonical spec round-trips
+        let (t, _, _, _) = Config::parse_spec_opts(
+            "tiers:hbm=16g@509.7+host=48g@11~c:2.5@12/40+nvme=inf@6~c:1.5:cyclic:x2:ib",
+        )
+        .unwrap();
+        let tt = t.tiered().unwrap();
+        assert!(tt.opts.cyclic && tt.ranks == 2);
+        assert!(tt.topology.codec(0).is_some() && tt.topology.codec(1).is_some());
+        let (t2, _, _, _) = Config::parse_spec_opts(&t.spec()).unwrap();
+        assert_eq!(t, t2, "{}", t.spec());
+        // misuse is a typed error: legacy platforms take no codec token,
+        // annotated stacks reject a second source, values must parse,
+        // single-tier stacks have no links
+        assert!(Config::parse_spec_opts("gpu-explicit:codec3.5").is_err());
+        assert!(Config::parse_spec_opts("tiers:gpu-explicit-pcie-zfp:codec3.5").is_err());
+        assert!(Config::parse_spec_opts("tiers:gpu-explicit-pcie:codec3.5:codec:2").is_err());
+        assert!(Config::parse_spec_opts("tiers:gpu-explicit-pcie:codec").is_err());
+        assert!(Config::parse_spec_opts("tiers:gpu-explicit-pcie:codec:bogus").is_err());
+        assert!(Config::parse_spec_opts("tiers:plain:codec3.5").is_err());
+    }
+
+    #[test]
+    fn sharded_tiered_engines_inherit_the_boundary_codec() {
+        // the halo codec rides the outermost link's ~c: annotation
+        let (t, _, _, _) = Config::parse_spec_opts(
+            "tiers:hbm=16g@509.7+host=inf@11~c:3.5:x2",
+        )
+        .unwrap();
+        let cfg = Config::for_target(t, AppCalib::CLOVERLEAF_2D);
+        let d = cfg.build_engine().describe();
+        assert!(d.contains("Sharded x2"), "{d}");
     }
 
     #[test]

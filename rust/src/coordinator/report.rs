@@ -58,7 +58,7 @@ pub fn json_record(
     };
     let mut tier_utils = String::new();
     for tier in topology.tiers() {
-        for dir in ["upload", "download"] {
+        for dir in ["upload", "download", "codec"] {
             if let Some(u) = tier_util(&tier.name, dir) {
                 tier_utils.push_str(&format!(
                     ",\"util_tier_{}_{dir}\":{u:.4}",
@@ -100,7 +100,8 @@ pub fn json_record(
             "\"oom\":{},\"runtime_s\":{:.6},\"avg_bandwidth_gbs\":{:.3},",
             "\"eff_bandwidth_gbs\":{:.3},\"halo_time_s\":{:.6},\"tiles\":{},",
             "\"bound\":\"{}\",\"util_compute\":{:.4},\"util_upload\":{:.4},",
-            "\"util_download\":{:.4},\"util_exchange\":{:.4}{},",
+            "\"util_download\":{:.4},\"util_exchange\":{:.4},",
+            "\"util_codec\":{:.4},\"codec_bytes_saved\":{}{},",
             "\"tuned\":{},\"tune_evals\":{},\"tune_cache_hits\":{},",
             "\"tuned_model_s\":{:.6},\"heuristic_model_s\":{:.6},",
             "\"tune_model_speedup\":{:.4},",
@@ -127,6 +128,8 @@ pub fn json_record(
         m.stream_util(StreamClass::Upload),
         m.stream_util(StreamClass::Download),
         m.stream_util(StreamClass::Exchange),
+        m.stream_util(StreamClass::Codec),
+        m.codec_bytes_saved,
         tier_utils,
         tuned,
         m.tune_evals,
@@ -205,6 +208,12 @@ pub fn print_summary(label: &str, problem_bytes: u64, m: &Metrics, oom: bool) {
             m.d2d_bytes as f64 / 1e9
         );
     }
+    if m.codec_bytes_saved > 0 {
+        println!(
+            "  link codecs         : {:.2} GB saved on the wire",
+            m.codec_bytes_saved as f64 / 1e9
+        );
+    }
     if m.page_faults > 0 {
         println!("  page faults         : {}", m.page_faults);
     }
@@ -242,7 +251,10 @@ pub fn print_summary(label: &str, problem_bytes: u64, m: &Metrics, oom: bool) {
             .iter()
             .filter(|(k, st)| {
                 k.contains(':')
-                    && matches!(st.class, StreamClass::Upload | StreamClass::Download)
+                    && matches!(
+                        st.class,
+                        StreamClass::Upload | StreamClass::Download | StreamClass::Codec
+                    )
             })
             .collect();
         if !detailed.is_empty() && m.elapsed_s > 0.0 {
@@ -395,7 +407,28 @@ mod tests {
         assert!(j.contains("\"spans_recorded\":0"));
         assert!(j.contains("\"p50_loop_time_s\":"));
         assert!(j.contains("\"util_compute\":0.0000"));
+        assert!(j.contains("\"util_codec\":0.0000"));
+        assert!(j.contains("\"codec_bytes_saved\":0"));
         assert!(!j.contains("util_tier_"), "no per-tier streams ran: {j}");
+    }
+
+    #[test]
+    fn json_record_reports_codec_streams() {
+        use crate::exec::timeline::StreamClass;
+        let t = crate::topology::spec::parse_stack(
+            "hbm=16g@509.7+host=inf@11~c:3.5",
+        )
+        .unwrap();
+        let mut m = Metrics::new();
+        m.record_loop("k", 1_000_000_000, 0.01);
+        m.elapsed_s = 0.02;
+        m.record_stream("host:codec", StreamClass::Codec, 0.012, 1 << 20, 4);
+        m.codec_bytes_saved = 123;
+        let j = json_record("a", "p", 1, 6.0, &t, &m, false);
+        assert!(j.contains("\"util_codec\":0.6000"), "{j}");
+        assert!(j.contains("\"codec_bytes_saved\":123"), "{j}");
+        assert!(j.contains("\"util_tier_host_codec\":0.6000"), "{j}");
+        assert!(j.contains("~c:3.5"), "spec renders the annotation: {j}");
     }
 
     #[test]

@@ -25,7 +25,9 @@
 use super::decomp::{decompose, DecompKind, Decomposition};
 use super::halo::HaloExchange;
 use super::interconnect::Interconnect;
+use crate::codec::CodecSpec;
 use crate::exec::timeline::{EventKind, StreamClass, Timeline, TraceEvent};
+use crate::memory::calib_util::GB;
 use crate::exec::{Engine, Executor, Metrics, NullExecutor, RankStat, World};
 use crate::ops::{Dataset, LoopInst, Reduction};
 use crate::tiling::analysis::{chain_structure_fingerprint, ChainAnalysis};
@@ -55,6 +57,11 @@ pub struct ShardedEngine {
     /// Overlap halo exchange with interior compute (the fig12 ablation
     /// switch: `false` serialises exchange after compute).
     pub overlap: bool,
+    /// Codec on the inter-rank link (inherited from the topology's
+    /// slowest-boundary link by the config layer). Halo payloads are
+    /// read-only snapshots of the neighbour's strip, so the codec's
+    /// read-only ratio applies.
+    codec: Option<CodecSpec>,
     inner: Vec<Box<dyn Engine>>,
     inner_label: String,
     /// Per-rank memo of restricted-sub-chain analyses, keyed by the
@@ -79,10 +86,24 @@ impl ShardedEngine {
             kind,
             link,
             overlap,
+            codec: None,
             inner,
             inner_label,
             rank_analysis,
         }
+    }
+
+    /// Attach (or clear) the inter-rank link codec. Identity codecs are
+    /// stripped at schedule time, so `Some(ratio 1.0)` models exactly
+    /// like `None`.
+    pub fn with_codec(mut self, codec: Option<CodecSpec>) -> Self {
+        self.codec = codec;
+        self
+    }
+
+    /// The inter-rank link codec, if any.
+    pub fn codec(&self) -> Option<CodecSpec> {
+        self.codec
     }
 
     pub fn ranks(&self) -> usize {
@@ -228,30 +249,75 @@ impl Engine for ShardedEngine {
             let rank_loop_time = scratch.loop_time_s;
 
             let ex = plan.rank_cost(&decomp, r, self.link);
+            // Link codec: halo payloads are read-only, so the read-only
+            // ratio applies. `rank_cost` prices each message as
+            // latency + bytes/bw, so the wire time recomputes exactly
+            // from the message count and the compressed byte total.
+            let codec = self.codec.filter(|c| !c.is_identity() && ex.messages > 0);
+            let (ex_time, ex_wire) = match &codec {
+                Some(c) => {
+                    let wire = c.wire_bytes_for(ex.bytes, true);
+                    let spec = self.link.spec();
+                    (
+                        ex.messages as f64 * spec.latency_s + wire as f64 / (spec.bw_gbs * GB),
+                        wire,
+                    )
+                }
+                None => (ex.time_s, ex.bytes),
+            };
+            let (c_time, d_time) = match &codec {
+                Some(c) => (c.compress_time_s(ex.bytes), c.decompress_time_s(ex.bytes)),
+                None => (0.0, 0.0),
+            };
             // The rank's event sub-graph. Both compute spans ride one
             // `r{r}:compute` solver resource; the exchange gets the
-            // rank's `r{r}:link`. (These solver events are *not* traced:
-            // the trace shows the inner engine's real per-stream events,
-            // forwarded below, plus the link event.)
+            // rank's `r{r}:link`, codec kernels the rank's `r{r}:codec`.
+            // (These solver events are *not* traced: the trace shows the
+            // inner engine's real per-stream events, forwarded below,
+            // plus the link/codec events.)
             let rc = tl.resource(&format!("r{r}:compute"), StreamClass::Compute);
             let rl = tl.resource(&format!("r{r}:link"), StreamClass::Exchange);
-            let ex_start = if self.overlap {
+            let rk = codec
+                .as_ref()
+                .map(|_| tl.resource(&format!("r{r}:codec"), StreamClass::Codec));
+            // Schedule the exchange path from `start`: with a codec,
+            // compress → wire → decompress chained on dependency edges;
+            // without, just the wire event. Returns (wire event start,
+            // usable-data time).
+            let schedule_exchange = |tl: &mut Timeline, start: f64| -> (f64, f64) {
+                match (&codec, rk) {
+                    (Some(_), Some(rko)) => {
+                        let c_end =
+                            tl.push_at(rko, EventKind::Compress, "", start, c_time, ex.bytes);
+                        let x_end = tl.push_at(rl, EventKind::Exchange, "", c_end, ex_time, ex_wire);
+                        let d_end =
+                            tl.push_at(rko, EventKind::Decompress, "", x_end, d_time, ex.bytes);
+                        tl.wait_until(rl, d_end);
+                        (c_end, d_end)
+                    }
+                    _ => {
+                        let x_end = tl.push_at(rl, EventKind::Exchange, "", start, ex_time, ex_wire);
+                        (start, x_end)
+                    }
+                }
+            };
+            let (ex_start, ex_path) = if self.overlap {
                 // Exchange posts at chain start; interior compute runs
-                // under it; the boundary strip waits on both.
+                // under it; the boundary strip waits on usable halo data
+                // (decompress end when a codec is attached).
                 let boundary = compute * plan.boundary_fraction(&decomp, r);
                 tl.push(rc, EventKind::Compute, "", compute - boundary, 0);
-                let ex_end = tl.push(rl, EventKind::Exchange, "", ex.time_s, ex.bytes);
-                tl.wait_until(rc, ex_end);
+                let (ws, done) = schedule_exchange(&mut tl, 0.0);
+                tl.wait_until(rc, done);
                 tl.push(rc, EventKind::Compute, "", boundary, 0);
-                0.0
+                (ws, done)
             } else {
                 // Ablation: exchange strictly after the rank's compute.
                 let c_end = tl.push(rc, EventKind::Compute, "", compute, 0);
-                tl.wait_until(rl, c_end);
-                tl.push(rl, EventKind::Exchange, "", ex.time_s, ex.bytes);
-                compute
+                let (ws, done) = schedule_exchange(&mut tl, c_end);
+                (ws, done - c_end)
             };
-            wall_exchange = wall_exchange.max(ex.time_s);
+            wall_exchange = wall_exchange.max(ex_path);
             messages += ex.messages;
 
             // Attribution: the rank's inner streams, re-namespaced per
@@ -270,10 +336,20 @@ impl Engine for ShardedEngine {
                 world.metrics.record_stream(
                     &format!("r{r}:link"),
                     StreamClass::Exchange,
-                    ex.time_s,
-                    ex.bytes,
+                    ex_time,
+                    ex_wire,
                     ex.messages,
                 );
+                if codec.is_some() {
+                    world.metrics.record_stream(
+                        &rank_ns(r, "codec"),
+                        StreamClass::Codec,
+                        c_time + d_time,
+                        ex.bytes,
+                        2,
+                    );
+                    world.metrics.codec_bytes_saved += ex.bytes - ex_wire;
+                }
             }
             if tracing {
                 // Forward the inner engine's events onto the global
@@ -293,9 +369,29 @@ impl Engine for ShardedEngine {
                         kind: EventKind::Exchange,
                         label: "halo exchange".into(),
                         start_s: chain_t0 + ex_start,
-                        end_s: chain_t0 + ex_start + ex.time_s,
-                        bytes: ex.bytes,
+                        end_s: chain_t0 + ex_start + ex_time,
+                        bytes: ex_wire,
                     });
+                    if codec.is_some() {
+                        world.metrics.push_trace_event(TraceEvent {
+                            resource: format!("r{r}:codec"),
+                            class: StreamClass::Codec,
+                            kind: EventKind::Compress,
+                            label: "halo compress".into(),
+                            start_s: chain_t0 + ex_start - c_time,
+                            end_s: chain_t0 + ex_start,
+                            bytes: ex.bytes,
+                        });
+                        world.metrics.push_trace_event(TraceEvent {
+                            resource: format!("r{r}:codec"),
+                            class: StreamClass::Codec,
+                            kind: EventKind::Decompress,
+                            label: "halo decompress".into(),
+                            start_s: chain_t0 + ex_start + ex_time,
+                            end_s: chain_t0 + ex_start + ex_time + d_time,
+                            bytes: ex.bytes,
+                        });
+                    }
                 }
             }
 
@@ -311,7 +407,7 @@ impl Engine for ShardedEngine {
             world.metrics.merge(&scratch);
             let rs = &mut world.metrics.per_rank[r];
             rs.compute_s += compute;
-            rs.exchange_s += ex.time_s;
+            rs.exchange_s += ex_path;
             rs.exchange_bytes += ex.bytes;
             rs.loop_bytes += rank_bytes;
             rs.loop_time_s += rank_loop_time;
@@ -600,6 +696,69 @@ mod tests {
             .trace_events()
             .iter()
             .any(|ev| ev.kind == EventKind::Compute));
+    }
+
+    #[test]
+    fn link_codec_compresses_halos_and_identity_is_bitexact() {
+        use crate::codec::CodecSpec;
+        let run = |codec: Option<CodecSpec>| {
+            let (datasets, stencils, mut store, chain) = fixture(128);
+            let mut reds = vec![];
+            let mut metrics = Metrics::new();
+            let mut exec = NativeExecutor::new();
+            let inner = (0..2).map(|_| gpu_rank()).collect();
+            let mut e =
+                ShardedEngine::new(inner, DecompKind::OneD, Interconnect::InfiniBand, true)
+                    .with_codec(codec);
+            for _ in 0..2 {
+                let mut world = World {
+                    datasets: &datasets,
+                    stencils: &stencils,
+                    store: &mut store,
+                    reds: &mut reds,
+                    metrics: &mut metrics,
+                    exec: &mut exec,
+                };
+                e.run_chain(&chain, &mut world, true);
+            }
+            let bufs: Vec<Vec<f64>> =
+                datasets.iter().map(|d| store.buf(d.id).to_vec()).collect();
+            (bufs, metrics)
+        };
+        let (dp, mp) = run(None);
+
+        let (di, mi) = run(Some(CodecSpec::new(1.0)));
+        assert_eq!(dp, di);
+        assert_eq!(mp.elapsed_s, mi.elapsed_s, "identity codec is bit-identical");
+        assert_eq!(mi.codec_bytes_saved, 0);
+        assert!(!mi.per_resource.contains_key("r0:codec"));
+
+        let (dz, mz) = run(Some(CodecSpec::ZFP));
+        assert_eq!(dp, dz, "codec is a timeline model — numerics untouched");
+        assert!(mz.codec_bytes_saved > 0);
+        assert!(mz.per_resource.contains_key("r0:codec"));
+        assert!(mz.per_resource.contains_key("r1:codec"));
+        assert!(
+            mz.per_resource["r0:link"].bytes < mp.per_resource["r0:link"].bytes,
+            "the link ships wire bytes"
+        );
+        assert_eq!(
+            mz.per_rank[0].exchange_bytes, mp.per_rank[0].exchange_bytes,
+            "per-rank ledger keeps logical bytes"
+        );
+
+        // halos are read-only, so the read-only ratio override bites
+        let ro = CodecSpec {
+            ro_ratio: Some(7.0),
+            ..CodecSpec::ZFP
+        };
+        let (_, mro) = run(Some(ro));
+        assert!(
+            mro.codec_bytes_saved > mz.codec_bytes_saved,
+            "{} !> {}",
+            mro.codec_bytes_saved,
+            mz.codec_bytes_saved
+        );
     }
 
     #[test]

@@ -105,6 +105,9 @@ pub struct Metrics {
     pub d2h_bytes: u64,
     /// Device→device bytes (tile edge copies).
     pub d2d_bytes: u64,
+    /// Logical bytes minus wire bytes across every codec-equipped link
+    /// (see [`crate::codec`]); 0 when no codec is attached.
+    pub codec_bytes_saved: u64,
     /// MCDRAM-cache statistics (KNL cache mode).
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -441,6 +444,7 @@ impl Metrics {
         self.h2d_bytes += other.h2d_bytes;
         self.d2h_bytes += other.d2h_bytes;
         self.d2d_bytes += other.d2d_bytes;
+        self.codec_bytes_saved += other.codec_bytes_saved;
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
         self.page_faults += other.page_faults;

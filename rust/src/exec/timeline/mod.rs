@@ -52,14 +52,19 @@ pub enum StreamClass {
     /// Inter-rank / inter-process communication: MPI halo exchanges,
     /// the sharded engine's interconnect links.
     Exchange,
+    /// Link-codec kernels: compress/decompress time on a tier boundary
+    /// or interconnect codec (see [`crate::codec`]). Last in `ALL` so
+    /// the earlier classes keep winning `bound()` ties.
+    Codec,
 }
 
 impl StreamClass {
-    pub const ALL: [StreamClass; 4] = [
+    pub const ALL: [StreamClass; 5] = [
         StreamClass::Compute,
         StreamClass::Upload,
         StreamClass::Download,
         StreamClass::Exchange,
+        StreamClass::Codec,
     ];
 
     pub fn name(self) -> &'static str {
@@ -68,6 +73,7 @@ impl StreamClass {
             StreamClass::Upload => "upload",
             StreamClass::Download => "download",
             StreamClass::Exchange => "exchange",
+            StreamClass::Codec => "codec",
         }
     }
 }
@@ -93,6 +99,10 @@ pub enum EventKind {
     Halo,
     /// Inter-rank halo exchange over the modelled interconnect.
     Exchange,
+    /// Codec compression kernel ahead of a transfer.
+    Compress,
+    /// Codec decompression kernel behind a transfer.
+    Decompress,
 }
 
 impl EventKind {
@@ -107,6 +117,8 @@ impl EventKind {
             EventKind::CacheFill => "cache-fill",
             EventKind::Halo => "halo",
             EventKind::Exchange => "exchange",
+            EventKind::Compress => "compress",
+            EventKind::Decompress => "decompress",
         }
     }
 }

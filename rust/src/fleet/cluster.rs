@@ -4,8 +4,9 @@
 //! A cluster is parsed from a `fleet:` spec — a comma-separated list of
 //! *members*, each any execution-target spec the run grammar already
 //! accepts ([`Config::parse_spec_opts`]: legacy platform heads, `tiers:`
-//! stacks, sharded `x<N>` suffixes, `tuned` and `fuse<k>` tokens), with
-//! an optional `*<count>` multiplicity suffix:
+//! stacks — including `~c:` link codecs and `codec<spec>` tokens —
+//! sharded `x<N>` suffixes, `tuned` and `fuse<k>` tokens), with an
+//! optional `*<count>` multiplicity suffix:
 //!
 //! ```text
 //! fleet:gpu-explicit:pcie:cyclic:tuned*2,knl-cache-tiled
@@ -39,7 +40,7 @@ pub struct FleetTarget {
 impl FleetTarget {
     /// Parse one member spec (no multiplicity suffix).
     pub fn parse(id: usize, member: &str) -> crate::Result<FleetTarget> {
-        let (target, tuned, fuse) = Config::parse_spec_opts(member)?;
+        let (target, tuned, fuse, _codec) = Config::parse_spec_opts(member)?;
         crate::ensure!(
             fuse != 0,
             "fleet member {member:?} asks the tuner for a fusion depth (fuse0); \

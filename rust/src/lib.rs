@@ -90,6 +90,22 @@
 //! as a thin compatibility layer over the presets
 //! ([`Platform::topology`]).
 //!
+//! ## Compression-aware tier links
+//!
+//! The [`codec`] subsystem models compression on the traffic crossing a
+//! tier boundary or the inter-rank interconnect: a [`codec::CodecSpec`]
+//! (ratio + compress/decompress throughput, optional read-only ratio
+//! override) attaches to any link via the `~c:` tier annotation
+//! (`tiers:hbm=16g@509.7+host=512g@11~c:3.5`), a `codec` spec token, or
+//! the `--codec` flag. Engines emit compress → transfer(wire bytes) →
+//! decompress as first-class timeline streams (`codec`,
+//! `<tier>:codec`, `r<rank>:codec`), so the attribution surfaces show
+//! when a link flips from transfer-bound to **codec-bound**, and the
+//! byte ledger reports `codec_bytes_saved`. Numerics are untouched by
+//! construction; a ratio-1.0 codec is bit-identical to no codec. The
+//! tuner searches a per-target codec on/off toggle with the same
+//! never-worse guarantee as every other dimension.
+//!
 //! ## Observability
 //!
 //! The [`obs`] subsystem is the telemetry layer the §5.1 evaluation
@@ -128,6 +144,7 @@
 
 pub mod apps;
 pub mod bench_support;
+pub mod codec;
 pub mod coordinator;
 pub mod distributed;
 pub mod errors;

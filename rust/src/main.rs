@@ -47,10 +47,17 @@
 //! `--spans <path>` (run only) writes the hierarchical lifecycle-span
 //!   tree (freeze → analyze, replay → chain → engine → tile) as JSON.
 //! `--bench-out <file>` appends one flat trajectory point to a
-//!   `BENCH_*.json` file; `ops-oc bench-diff <old> <new> [--tol-pct T]`
-//!   compares two such files and exits 1 on a >T% makespan regression.
+//!   `BENCH_*.json` file; `ops-oc bench-diff <old> <new> [--tol-pct T]
+//!   [--field F]` compares two such files and exits 1 on a >T%
+//!   regression of the gated field (`makespan_s` by default; any
+//!   numeric point field, e.g. `codec_bytes_saved` or `util_upload`).
+//! `--codec <spec>` attaches a modelled compress/decompress codec to
+//!   every link of a `tiers:` platform (same value grammar as the `~c:`
+//!   tier annotation and the `codec:<spec>` token; conflicts between
+//!   flag and token are rejected).
 
 use ops_oc::bench_support::{self, telemetry, Figure};
+use ops_oc::codec::CodecSpec;
 use ops_oc::coordinator::{json_record, print_summary_with_topology, Config};
 use ops_oc::exec::{chrome_trace_json_with_spans, ExecBackend};
 use ops_oc::memory::AppCalib;
@@ -82,6 +89,13 @@ struct Args {
     spans: Option<String>,
     bench_out: Option<String>,
     tol_pct: f64,
+    /// `bench-diff` gate field (`makespan_s`, `codec_bytes_saved`,
+    /// `util_*`, …): which numeric per-point field regressions are
+    /// judged on.
+    field: String,
+    /// `--codec <spec>` — attach a link codec to every link of a
+    /// `tiers:` platform (value grammar of [`CodecSpec::parse`]).
+    codec: Option<String>,
     /// `fleet` workload spec (`tenants=8,apps=cloverleaf2d,…`).
     workload: String,
     /// `fleet` placement policy (first-fit | best-fit | tier-aware).
@@ -113,6 +127,8 @@ fn parse_args() -> Args {
         spans: None,
         bench_out: None,
         tol_pct: 10.0,
+        field: "makespan_s".into(),
+        codec: None,
         workload: String::new(),
         policy: "first-fit".into(),
         scenarios: vec![],
@@ -129,7 +145,7 @@ fn parse_args() -> Args {
             "--json" => a.json = true,
             "--tune" => a.tune = true,
             "--no-batch" => a.no_batch = true,
-            str_flag @ ("--workload" | "--policy" | "--scenario") => {
+            str_flag @ ("--workload" | "--policy" | "--scenario" | "--field" | "--codec") => {
                 i += 1;
                 let Some(v) = argv.get(i) else {
                     eprintln!("missing value for {str_flag}");
@@ -138,6 +154,8 @@ fn parse_args() -> Args {
                 match str_flag {
                     "--workload" => a.workload = v.clone(),
                     "--policy" => a.policy = v.clone(),
+                    "--field" => a.field = v.clone(),
+                    "--codec" => a.codec = Some(v.clone()),
                     _ => a.scenarios.push(v.clone()),
                 }
             }
@@ -251,10 +269,11 @@ fn parse_args() -> Args {
 /// the fused pipeline at depth 1, the unfused-replay baseline the CI
 /// smoke compares checksums against.
 fn config_or_exit(a: &Args) -> (Config, bool) {
-    let (target, spec_tuned, spec_fuse) = Config::parse_spec_opts(&a.platform).unwrap_or_else(|e| {
-        eprintln!("{e}");
-        exit(2);
-    });
+    let (target, spec_tuned, spec_fuse, spec_codec) =
+        Config::parse_spec_opts(&a.platform).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            exit(2);
+        });
     let target = if a.ranks > 1 {
         target.sharded(a.ranks).unwrap_or_else(|e| {
             eprintln!("{e}");
@@ -262,6 +281,33 @@ fn config_or_exit(a: &Args) -> (Config, bool) {
         })
     } else {
         target
+    };
+    // `--codec` mirrors the `codec` spec token (same value grammar); the
+    // token's codec is already applied to the target, so the flag only
+    // needs to agree with it — or apply when the spec carried none.
+    let target = match &a.codec {
+        None => target,
+        Some(v) => {
+            let c = CodecSpec::parse(v).unwrap_or_else(|e| {
+                eprintln!("bad value for --codec: {e}");
+                exit(2);
+            });
+            match spec_codec {
+                Some(sc) if sc == c => target,
+                Some(sc) => {
+                    eprintln!(
+                        "conflicting codecs: --codec {} vs spec codec:{}",
+                        c.render(),
+                        sc.render()
+                    );
+                    exit(2);
+                }
+                None => target.with_codec(c).unwrap_or_else(|e| {
+                    eprintln!("{e}");
+                    exit(2);
+                }),
+            }
+        }
     };
     let fuse = match (a.fuse, spec_fuse) {
         (None, k) => k,
@@ -354,7 +400,11 @@ fn list_platforms() {
             };
             let link = if i > 0 {
                 let l = t.link(i - 1);
-                format!("   link: {} GB/s, {} s latency", l.bw_gbs, l.latency_s)
+                let codec = match t.codec(i - 1) {
+                    Some(c) => format!(", codec {}", c.render()),
+                    None => String::new(),
+                };
+                format!("   link: {} GB/s, {} s latency{codec}", l.bw_gbs, l.latency_s)
             } else {
                 String::new()
             };
@@ -371,7 +421,15 @@ fn list_platforms() {
     println!("  (last tier only); bw in GB/s; ~lat in seconds for the link");
     println!("  into the tier above (default 0.00001). Example:");
     println!("    tiers:hbm=16g@509.7+host=512g@11~0.00001+nvme=4t@6~0.00002");
-    println!("  Options: append :cyclic, :prefetch, :tuned and/or the");
+    println!("  A ~c:<ratio>[@<cgbs>/<dgbs>[/<ro>]] annotation attaches a modelled");
+    println!("  compress/decompress codec to the link into the tier above (the");
+    println!("  first tier has none): ratio = wire compression factor, cgbs/dgbs =");
+    println!("  codec kernel throughputs in GB/s (default 50/80), ro = read-only");
+    println!("  ratio override for halo traffic. Example:");
+    println!("    tiers:hbm=16g@509.7+host=512g@11~c:3.5");
+    println!("  Options: append :cyclic, :prefetch, :tuned, :codec:<spec> (or the");
+    println!("  compact :codec<spec> — attach a codec to every link; same value");
+    println!("  grammar as ~c:, also the --codec flag) and/or the");
     println!("  :xN[:peer|:nvlink|:ib][:1d|:2d][:no-overlap] sharding suffix.");
     println!();
     println!("legacy platform heads map onto these preset *stacks* (Platform::topology):");
@@ -394,6 +452,10 @@ fn main() {
             println!("        [--fuse K]       (temporal fusion: replay K recorded steps as one");
             println!("                          super-chain; 0 = tuner-auto, 1 = unfused replay");
             println!("                          baseline; or a fuse:K / fuseK spec token)");
+            println!("        [--codec C]      (attach a modelled compress/decompress codec to");
+            println!("                          every link of a tiers: platform; C uses the");
+            println!("                          ~c: value grammar, e.g. 3.5 or 3.5@50/80;");
+            println!("                          or a codec:<C> / codec<C> spec token)");
             println!("        [--exec E]       (numeric executor: native = per-point closures,");
             println!("                          vector = compiled kernel-IR row programs with");
             println!("                          closure fallback; bit-identical numerics)");
@@ -409,8 +471,10 @@ fn main() {
             println!("         apps=cloverleaf2d|opensbli,sizes=0.01,steps=4,");
             println!("         arrival=closed|open@RPS,seed=S; P = first-fit | best-fit |");
             println!("         tier-aware; S = fail:<i>@t | up:<spec>@t | down:<i>@t)");
-            println!("  bench-diff OLD NEW [--tol-pct T]   (compare two BENCH_*.json");
-            println!("        trajectories; exit 1 when a makespan regressed > T%, default 10)");
+            println!("  bench-diff OLD NEW [--tol-pct T] [--field F]  (compare two BENCH_*.json");
+            println!("        trajectories; exit 1 when a cell's field — makespan_s by default,");
+            println!("        any numeric point field like codec_bytes_saved or util_upload");
+            println!("        via --field — grew > T%, default tolerance 10%)");
             println!("  list                                          (apps + platform specs)");
             println!("  list-platforms        (preset topology table + tiers: grammar)");
         }
@@ -610,7 +674,9 @@ fn main() {
         }
         "bench-diff" => {
             if a.extra.len() != 2 {
-                eprintln!("usage: ops-oc bench-diff OLD.json NEW.json [--tol-pct T]");
+                eprintln!(
+                    "usage: ops-oc bench-diff OLD.json NEW.json [--tol-pct T] [--field F]"
+                );
                 exit(2);
             }
             let read = |p: &str| -> String {
@@ -620,10 +686,11 @@ fn main() {
                 })
             };
             let (old_text, new_text) = (read(&a.extra[0]), read(&a.extra[1]));
-            let report = telemetry::diff(&old_text, &new_text, a.tol_pct).unwrap_or_else(|e| {
-                eprintln!("bench-diff: {e}");
-                exit(2);
-            });
+            let report = telemetry::diff_field(&old_text, &new_text, a.tol_pct, &a.field)
+                .unwrap_or_else(|e| {
+                    eprintln!("bench-diff: {e}");
+                    exit(2);
+                });
             for l in &report.lines {
                 println!(
                     "{} {:<48} {:>12.6} s -> {:>12.6} s  ({:+.2} %)",

@@ -33,6 +33,7 @@
 
 use super::calib_util::{chain_bw_norm, elem_bytes, GB};
 use super::gpu_explicit::{tile_traffic, GpuOpts};
+use crate::codec::CodecSpec;
 use crate::exec::timeline::{EventKind, ResourceId, StreamClass, Timeline};
 use crate::exec::{Engine, World};
 use crate::ops::LoopInst;
@@ -89,6 +90,10 @@ struct Ctx<'a> {
     s0: ResourceId,
     ups: Vec<ResourceId>,
     downs: Vec<ResourceId>,
+    /// Per-level link codec (identity codecs stripped, so `None` here
+    /// means the legacy byte-identical code path) and its codec stream.
+    codecs: Vec<Option<CodecSpec>>,
+    cods: Vec<Option<ResourceId>>,
     /// Tracing label prefix per level (empty for two-tier stacks, which
     /// keep the legacy `tile N` labels).
     prefix: Vec<String>,
@@ -251,11 +256,42 @@ impl TieredEngine {
         let su = ctx.ups[level];
         let sd = ctx.downs[level];
         let link = self.topo.link(level);
+        let codec = ctx.codecs[level];
         let pre = &ctx.prefix[level];
+
+        // One boundary crossing with a codec: compress on the sending
+        // side, ship the wire bytes, decompress on the receiving side —
+        // three chained events, with the transfer stream's cursor moved
+        // to decompress-end so every existing consumer wait sees the
+        // *usable* tile, while the stream's busy time (and so `util_*`)
+        // stays pure wire time. Saved bytes go to the codec ledger;
+        // `h2d/d2h_bytes` keep logical bytes and the stream's own byte
+        // ledger carries what actually crossed the link.
+        let codec_xfer = |tl: &mut Timeline,
+                          world: &mut World<'_>,
+                          c: &CodecSpec,
+                          sx: ResourceId,
+                          kind: EventKind,
+                          lbl: &str,
+                          ready: f64,
+                          time_s: f64,
+                          logical: u64,
+                          wire: u64| {
+            let sc = ctx.cods[level].expect("codec stream exists when a codec is attached");
+            let c_end = tl.push_at(sc, EventKind::Compress, lbl, ready, c.compress_time_s(logical), logical);
+            let x_end = tl.push_at(sx, kind, lbl, c_end, time_s, wire);
+            let d_end = tl.push_at(sc, EventKind::Decompress, lbl, x_end, c.decompress_time_s(logical), logical);
+            tl.wait_until(sx, d_end);
+            world.metrics.codec_bytes_saved += logical - wire;
+        };
 
         // ---- stage in the first tile of this (sub-)chain.
         let tr0 = tile_traffic(&plan, 0, world.datasets, ctx.skip_upload, ctx.skip_download);
-        let mut up_time = link.time_s(tr0.upload);
+        let wire0 = match &codec {
+            Some(c) => c.wire_bytes(tr0.upload),
+            None => tr0.upload,
+        };
+        let mut up_time = link.time_s(wire0);
         if level == 0 && !st.first_seen {
             st.first_seen = true;
             st.first_upload_bytes = tr0.upload;
@@ -274,7 +310,15 @@ impl TieredEngine {
             } else {
                 String::new()
             };
-            tl.push(su, EventKind::Upload, &lbl, up_time, tr0.upload);
+            match &codec {
+                Some(c) => {
+                    let ready = tl.cursor(su);
+                    codec_xfer(tl, world, c, su, EventKind::Upload, &lbl, ready, up_time, tr0.upload, wire0);
+                }
+                None => {
+                    tl.push(su, EventKind::Upload, &lbl, up_time, tr0.upload);
+                }
+            }
         }
 
         for t in 0..nt {
@@ -303,7 +347,27 @@ impl TieredEngine {
                     } else {
                         String::new()
                     };
-                    tl.push(su, EventKind::Upload, &lbl, link.time_s(trn.upload), trn.upload);
+                    match &codec {
+                        Some(c) => {
+                            let wire = c.wire_bytes(trn.upload);
+                            let ready = tl.cursor(su);
+                            codec_xfer(
+                                tl,
+                                world,
+                                c,
+                                su,
+                                EventKind::Upload,
+                                &lbl,
+                                ready,
+                                link.time_s(wire),
+                                trn.upload,
+                                wire,
+                            );
+                        }
+                        None => {
+                            tl.push(su, EventKind::Upload, &lbl, link.time_s(trn.upload), trn.upload);
+                        }
+                    }
                 }
                 if level == 0 {
                     world.metrics.h2d_bytes += trn.upload;
@@ -368,7 +432,30 @@ impl TieredEngine {
                 world.metrics.d2d_bytes += tr.edge;
             }
             if tr.download > 0 {
-                tl.push(sd, EventKind::Download, &label("tile"), link.time_s(tr.download), tr.download);
+                match &codec {
+                    Some(c) => {
+                        let wire = c.wire_bytes(tr.download);
+                        // the tile is ready for compression once the
+                        // finisher handed it over (the wait above moved
+                        // sd's cursor there)
+                        let ready = tl.cursor(sd);
+                        codec_xfer(
+                            tl,
+                            world,
+                            c,
+                            sd,
+                            EventKind::Download,
+                            &label("tile"),
+                            ready,
+                            link.time_s(wire),
+                            tr.download,
+                            wire,
+                        );
+                    }
+                    None => {
+                        tl.push(sd, EventKind::Download, &label("tile"), link.time_s(tr.download), tr.download);
+                    }
+                }
             }
             if level == 0 {
                 world.metrics.d2h_bytes += tr.download;
@@ -451,6 +538,8 @@ impl Engine for TieredEngine {
         let s0 = tl.resource("compute", StreamClass::Compute);
         let mut ups = Vec::with_capacity(levels);
         let mut downs = Vec::with_capacity(levels);
+        let mut codecs = Vec::with_capacity(levels);
+        let mut cods = Vec::with_capacity(levels);
         let mut prefix = Vec::with_capacity(levels);
         for l in 0..levels {
             let (un, dn, pre) = if two_tier {
@@ -465,6 +554,19 @@ impl Engine for TieredEngine {
             };
             ups.push(tl.resource(&un, StreamClass::Upload));
             downs.push(tl.resource(&dn, StreamClass::Download));
+            // Identity codecs are stripped here so the scheduling below
+            // takes the exact legacy code path (the ratio-1.0
+            // bit-identical bar).
+            let codec = self.topo.codec(l).filter(|c| !c.is_identity());
+            cods.push(codec.as_ref().map(|_| {
+                let cn = if two_tier {
+                    "codec".to_string()
+                } else {
+                    format!("{}:codec", self.topo.tier(l).name)
+                };
+                tl.resource(&cn, StreamClass::Codec)
+            }));
+            codecs.push(codec);
             prefix.push(pre);
         }
         let ctx = Ctx {
@@ -476,6 +578,8 @@ impl Engine for TieredEngine {
             s0,
             ups,
             downs,
+            codecs,
+            cods,
             prefix,
         };
         let mut st = SchedState {
@@ -819,6 +923,48 @@ mod tests {
         let warm = run_pair(false);
         let cold = run_pair(true);
         assert!(cold > warm, "reset must lose the prefetch overlap: {cold} !> {warm}");
+    }
+
+    #[test]
+    fn codec_identity_is_bitexact_and_real_codec_cuts_wire_bytes() {
+        use crate::codec::CodecSpec;
+        let opts = GpuOpts::default();
+        let base = gpu_two_tier(SMALL_HBM, Link::PciE);
+        let with = |c: CodecSpec| base.clone().with_codecs(vec![Some(c)]).unwrap();
+        let mut plain_e = TieredEngine::new(base.clone(), APP.gpu, 7e-6, opts).unwrap();
+        let (mp, dp) = run_engine(&mut plain_e, 2, true);
+
+        // ratio 1.0: clocks, bytes and ledger all bit-identical
+        let mut id_e = TieredEngine::new(with(CodecSpec::new(1.0)), APP.gpu, 7e-6, opts).unwrap();
+        let (mi, di) = run_engine(&mut id_e, 2, true);
+        assert_eq!(dp, di);
+        assert_eq!(mp.elapsed_s, mi.elapsed_s);
+        assert_eq!(mp.h2d_bytes, mi.h2d_bytes);
+        assert_eq!(mi.codec_bytes_saved, 0);
+        assert!(!mi.per_resource.contains_key("codec"), "identity codec emits no stream");
+        for (k, v) in &mp.per_resource {
+            let w = &mi.per_resource[k];
+            assert_eq!(v.busy_s, w.busy_s, "stream {k}");
+            assert_eq!(v.bytes, w.bytes, "stream {k}");
+        }
+
+        // a real codec: same numerics, fewer wire bytes, its own stream
+        let mut z_e = TieredEngine::new(with(CodecSpec::ZFP), APP.gpu, 7e-6, opts).unwrap();
+        let (mz, dz) = run_engine(&mut z_e, 2, true);
+        assert_eq!(dp, dz, "codec is a timeline model — numerics untouched");
+        assert!(mz.codec_bytes_saved > 0);
+        assert_eq!(mz.h2d_bytes, mp.h2d_bytes, "h2d ledger keeps logical bytes");
+        assert!(
+            mz.per_resource["upload"].bytes < mp.per_resource["upload"].bytes,
+            "the upload stream ships wire bytes"
+        );
+        assert!(mz.per_resource["codec"].busy_s > 0.0);
+        assert!(
+            mz.elapsed_s < mp.elapsed_s,
+            "this transfer-bound cell must speed up: {} !< {}",
+            mz.elapsed_s,
+            mp.elapsed_s
+        );
     }
 
     #[test]

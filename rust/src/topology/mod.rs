@@ -37,6 +37,7 @@ pub mod spec;
 
 pub use presets::{preset, presets};
 
+use crate::codec::CodecSpec;
 use crate::memory::calib_util::GB;
 
 /// Default per-transfer launch latency of a link the spec grammar
@@ -122,6 +123,10 @@ pub struct Topology {
     pub name: Option<String>,
     tiers: Vec<Tier>,
     links: Vec<LinkSpec>,
+    /// Per-link compression models (`codecs[i]` rides on `links[i]`);
+    /// `None` everywhere unless the spec grammar's `~c:` annotation or
+    /// [`Topology::with_codecs`] attached one.
+    codecs: Vec<Option<CodecSpec>>,
 }
 
 /// Upper bound on tier count — enough for any plausible machine while
@@ -214,11 +219,65 @@ impl Topology {
                 tiers[i + 1].bw_gbs
             );
         }
+        let codecs = vec![None; links.len()];
         Ok(Topology {
             name: name.map(str::to_string),
             tiers,
             links,
+            codecs,
         })
+    }
+
+    /// Attach per-link codecs (one slot per link; `None` = uncompressed
+    /// link). Validates every spec; errors name the link.
+    pub fn with_codecs(mut self, codecs: Vec<Option<CodecSpec>>) -> crate::Result<Self> {
+        crate::ensure!(
+            codecs.len() == self.links.len(),
+            "a {}-link stack needs {} codec slot(s), got {}",
+            self.links.len(),
+            self.links.len(),
+            codecs.len()
+        );
+        for (i, c) in codecs.iter().enumerate() {
+            if let Some(c) = c {
+                c.validate().map_err(|e| {
+                    crate::err!(
+                        "link {}→{}: {e}",
+                        self.tiers[i + 1].name,
+                        self.tiers[i].name
+                    )
+                })?;
+            }
+        }
+        self.codecs = codecs;
+        Ok(self)
+    }
+
+    /// Attach `codec` to every link (the `codec` spec token / `--codec`
+    /// flag semantics). Errors on single-tier stacks (no links) and when
+    /// the `~c:` grammar already attached a codec somewhere — the two
+    /// sources must not silently override each other.
+    pub fn with_codec_all(&self, codec: CodecSpec) -> crate::Result<Self> {
+        crate::ensure!(
+            !self.links.is_empty(),
+            "topology {:?} has a single tier — no links to attach a codec to",
+            self.label()
+        );
+        crate::ensure!(
+            !self.has_codec(),
+            "topology {:?} already carries a ~c: codec in its tiers: spec; \
+             drop the codec token/flag or the tier annotation",
+            self.label()
+        );
+        self.clone().with_codecs(vec![Some(codec); self.links.len()])
+    }
+
+    /// The same stack with every codec removed (the tuner's codec-off
+    /// candidate).
+    pub fn without_codecs(&self) -> Self {
+        let mut t = self.clone();
+        t.codecs = vec![None; t.links.len()];
+        t
     }
 
     /// Build a stack whose links are derived from the lower tiers'
@@ -264,6 +323,21 @@ impl Topology {
     /// The link between tier `i` (faster) and tier `i + 1` (slower).
     pub fn link(&self, i: usize) -> LinkSpec {
         self.links[i]
+    }
+
+    /// The codec riding on link `i`, if any (out-of-range is `None`).
+    pub fn codec(&self, i: usize) -> Option<CodecSpec> {
+        self.codecs.get(i).copied().flatten()
+    }
+
+    /// All per-link codec slots (`codecs()[i]` rides on `links()[i]`).
+    pub fn codecs(&self) -> &[Option<CodecSpec>] {
+        &self.codecs
+    }
+
+    /// Whether any link carries a codec.
+    pub fn has_codec(&self) -> bool {
+        self.codecs.iter().any(Option::is_some)
     }
 
     /// The fastest (compute-adjacent) tier.
@@ -312,10 +386,11 @@ impl Topology {
         spec::render(self)
     }
 
-    /// Structural equality: same tiers and links, names-of-the-stack
-    /// included but the cosmetic preset [`Topology::name`] ignored.
+    /// Structural equality: same tiers, links and codecs,
+    /// names-of-the-stack included but the cosmetic preset
+    /// [`Topology::name`] ignored.
     pub fn same_stack(&self, other: &Topology) -> bool {
-        self.tiers == other.tiers && self.links == other.links
+        self.tiers == other.tiers && self.links == other.links && self.codecs == other.codecs
     }
 }
 
@@ -427,6 +502,40 @@ mod tests {
         .unwrap();
         assert!(bounded.fits(1 << 40));
         assert!(!bounded.fits((1 << 40) + 1));
+    }
+
+    #[test]
+    fn codec_attachment_and_removal() {
+        use crate::codec::CodecSpec;
+        let t = hbm_host();
+        assert!(!t.has_codec());
+        assert_eq!(t.codec(0), None);
+        assert_eq!(t.codec(99), None, "out of range is None, not a panic");
+
+        let c = t.with_codec_all(CodecSpec::ZFP).unwrap();
+        assert!(c.has_codec());
+        assert_eq!(c.codec(0), Some(CodecSpec::ZFP));
+        assert_eq!(c.codecs(), &[Some(CodecSpec::ZFP)]);
+        assert!(!t.same_stack(&c), "codecs are part of the stack identity");
+        assert!(c.without_codecs().same_stack(&t));
+
+        // double attachment is a conflict, not a silent override
+        let e = c.with_codec_all(CodecSpec::new(2.0)).unwrap_err();
+        assert!(e.to_string().contains("already carries"), "{e}");
+
+        // wrong slot count and invalid specs are typed errors
+        let e = t.clone().with_codecs(vec![]).unwrap_err();
+        assert!(e.to_string().contains("codec slot"), "{e}");
+        let e = t
+            .clone()
+            .with_codecs(vec![Some(CodecSpec::new(0.5))])
+            .unwrap_err();
+        assert!(e.to_string().contains("host→hbm"), "{e}");
+
+        // single-tier stacks have no links to compress
+        let solo = Topology::new(None, vec![Tier::new("ddr", None, 90.0)], vec![]).unwrap();
+        let e = solo.with_codec_all(CodecSpec::ZFP).unwrap_err();
+        assert!(e.to_string().contains("single tier"), "{e}");
     }
 
     #[test]

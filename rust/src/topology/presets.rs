@@ -16,6 +16,7 @@
 //! prints this table with each preset's canonical spec string.
 
 use super::{LinkSpec, Tier, Topology};
+use crate::codec::CodecSpec;
 use crate::memory::hierarchy::{GpuCalib, KnlCalib, Link};
 
 /// All named presets, in display order.
@@ -26,6 +27,7 @@ pub fn presets() -> Vec<Topology> {
         knl_cache(&k),
         gpu_explicit(&g, Link::PciE),
         gpu_explicit(&g, Link::NvLink),
+        gpu_explicit_zfp(&g),
         gpu_unified(&g, Link::PciE),
         gpu_unified(&g, Link::NvLink),
         plain(&k),
@@ -59,6 +61,18 @@ pub fn knl_cache(k: &KnlCalib) -> Topology {
 /// graphics-clock boost when built into an engine.
 pub fn gpu_explicit(g: &GpuCalib, link: Link) -> Topology {
     gpu_stack("gpu-explicit", g, link)
+}
+
+/// [`gpu_explicit`] over PCIe with a ZFP-class codec on the host link:
+/// Shen et al. (arXiv 2204.11315) report 2–5× fixed-accuracy
+/// compression on out-of-core GPU stencil state — [`CodecSpec::ZFP`]
+/// models the midpoint of that band at cuZFP-class kernel throughputs.
+pub fn gpu_explicit_zfp(g: &GpuCalib) -> Topology {
+    let mut t = gpu_stack("gpu-explicit", g, Link::PciE)
+        .with_codecs(vec![Some(CodecSpec::ZFP)])
+        .expect("preset topologies are well-formed");
+    t.name = Some("gpu-explicit-pcie-zfp".to_string());
+    t
 }
 
 /// P100 unified memory (§5.4): the same physical stack as
@@ -126,6 +140,10 @@ mod tests {
 
         assert_eq!(preset("plain").unwrap().num_tiers(), 1);
         assert!(preset("bogus").is_none());
+
+        let zfp = preset("gpu-explicit-pcie-zfp").unwrap();
+        assert_eq!(zfp.codec(0), Some(CodecSpec::ZFP));
+        assert!(zfp.without_codecs().same_stack(&preset("gpu-explicit-pcie").unwrap()));
     }
 
     #[test]

@@ -2,13 +2,18 @@
 //!
 //! ```text
 //! stack    := <preset-name> | tier ( "+" tier )+
-//! tier     := name "=" capacity "@" bw [ "~" latency ]
+//! tier     := name "=" capacity "@" bw ( "~" annot )*
+//! annot    := latency | "c:" codec
 //! capacity := <integer>[k|m|g|t]        (binary suffixes: k=2^10 … t=2^40)
 //!           | inf                       (unbounded; last tier only)
 //! bw       := <float>                   (achieved GB/s)
 //! latency  := <float>                   (seconds; the link INTO the tier
 //!                                        above — not allowed on the first
 //!                                        tier, defaults to 10e-6)
+//! codec    := <ratio>[@<cgbs>/<dgbs>[/<ro>]]   (see [`crate::codec`];
+//!                                        annotates the same link as the
+//!                                        latency, so not on the first
+//!                                        tier either)
 //! ```
 //!
 //! Examples (all as the `:`-separated platform-spec token after the
@@ -17,14 +22,19 @@
 //! * `tiers:knl` — a [`super::presets`] name;
 //! * `tiers:hbm=16g@509.7+host=inf@11` — today's P100/PCIe machine;
 //! * `tiers:hbm=16g@509.7+host=48g@11~0.00001+nvme=inf@6~0.00002` — a
-//!   three-tier stack that keeps computing past host DRAM.
+//!   three-tier stack that keeps computing past host DRAM;
+//! * `tiers:hbm=16g@509.7+host=512g@11~c:3.5` — PCIe host link with a
+//!   3.5× codec at default compress/decompress throughputs
+//!   (`~c:3.5@50/80` spells them out).
 //!
 //! [`render`] is the exact inverse: capacities print with the largest
 //! exact binary suffix, floats with Rust's shortest round-trip
-//! formatting, and every non-first tier carries its `~latency`, so
+//! formatting, every non-first tier carries its `~latency`, and links
+//! with a codec append `~c:<codec>` ([`CodecSpec::render`]), so
 //! `parse_stack(render(t))` reproduces `t` tier-for-tier.
 
 use super::{presets, Tier, Topology, DEFAULT_LINK_LATENCY_S};
+use crate::codec::CodecSpec;
 
 /// Parse one `tiers:` stack body (the part after the `tiers:` head):
 /// either a preset name or a `+`-separated tier list. Malformed tier
@@ -46,8 +56,9 @@ pub fn parse_stack(stack: &str) -> crate::Result<Topology> {
     );
     let mut tiers = Vec::with_capacity(toks.len());
     let mut latencies = Vec::with_capacity(toks.len().saturating_sub(1));
+    let mut codecs = Vec::with_capacity(toks.len().saturating_sub(1));
     for (i, tok) in toks.iter().enumerate() {
-        let (tier, latency) = parse_tier(tok)?;
+        let (tier, latency, codec) = parse_tier(tok)?;
         match latency {
             Some(lat) => {
                 crate::ensure!(
@@ -60,6 +71,21 @@ pub fn parse_stack(stack: &str) -> crate::Result<Topology> {
             None => {
                 if i > 0 {
                     latencies.push(DEFAULT_LINK_LATENCY_S);
+                }
+            }
+        }
+        match codec {
+            Some(c) => {
+                crate::ensure!(
+                    i > 0,
+                    "tier token {tok:?}: a ~c: codec annotates the link into the \
+                     tier above — the first (fastest) tier has none"
+                );
+                codecs.push(Some(c));
+            }
+            None => {
+                if i > 0 {
+                    codecs.push(None);
                 }
             }
         }
@@ -76,33 +102,50 @@ pub fn parse_stack(stack: &str) -> crate::Result<Topology> {
         );
         tiers.push(tier);
     }
-    Topology::from_tiers(None, tiers, &latencies)
+    Topology::from_tiers(None, tiers, &latencies)?.with_codecs(codecs)
 }
 
-/// Parse one `name=capacity@bw[~latency]` token.
-fn parse_tier(tok: &str) -> crate::Result<(Tier, Option<f64>)> {
-    let (name, rest) = tok
-        .split_once('=')
-        .ok_or_else(|| crate::err!("tier token {tok:?}: expected name=capacity@bw[~latency]"))?;
+/// Parse one `name=capacity@bw[~latency][~c:codec]` token (the two `~`
+/// annotations may come in either order).
+fn parse_tier(tok: &str) -> crate::Result<(Tier, Option<f64>, Option<CodecSpec>)> {
+    let (name, rest) = tok.split_once('=').ok_or_else(|| {
+        crate::err!("tier token {tok:?}: expected name=capacity@bw[~latency][~c:codec]")
+    })?;
     crate::ensure!(!name.is_empty(), "tier token {tok:?}: empty tier name");
     let (cap_str, rest) = rest
         .split_once('@')
         .ok_or_else(|| crate::err!("tier token {tok:?}: missing @bandwidth"))?;
-    let (bw_str, lat_str) = match rest.split_once('~') {
-        Some((b, l)) => (b, Some(l)),
-        None => (rest, None),
-    };
+    // Neither a latency float nor a codec value contains '~', so the
+    // annotations split cleanly.
+    let mut segs = rest.split('~');
+    let bw_str = segs.next().expect("split yields at least one piece");
     let capacity = parse_capacity(tok, cap_str)?;
     let bw: f64 = bw_str
         .parse()
         .map_err(|_| crate::err!("tier token {tok:?}: bad bandwidth {bw_str:?} (GB/s float)"))?;
-    let latency = match lat_str {
-        Some(l) => Some(l.parse::<f64>().map_err(|_| {
-            crate::err!("tier token {tok:?}: bad link latency {l:?} (seconds, e.g. 0.00001)")
-        })?),
-        None => None,
-    };
-    Ok((Tier::new(name, capacity, bw), latency))
+    let mut latency = None;
+    let mut codec = None;
+    for seg in segs {
+        if let Some(cs) = seg.strip_prefix("c:") {
+            crate::ensure!(
+                codec.is_none(),
+                "tier token {tok:?}: more than one ~c: codec annotation"
+            );
+            codec = Some(
+                CodecSpec::parse(cs)
+                    .map_err(|e| crate::err!("tier token {tok:?}: {e}"))?,
+            );
+        } else {
+            crate::ensure!(
+                latency.is_none(),
+                "tier token {tok:?}: more than one ~latency annotation"
+            );
+            latency = Some(seg.parse::<f64>().map_err(|_| {
+                crate::err!("tier token {tok:?}: bad link latency {seg:?} (seconds, e.g. 0.00001)")
+            })?);
+        }
+    }
+    Ok((Tier::new(name, capacity, bw), latency, codec))
 }
 
 /// Parse a capacity: decimal integer with an optional binary suffix, or
@@ -161,6 +204,10 @@ pub fn render(topo: &Topology) -> String {
         if i > 0 {
             out.push('~');
             out.push_str(&format!("{}", topo.link(i - 1).latency_s));
+            if let Some(c) = topo.codec(i - 1) {
+                out.push_str("~c:");
+                out.push_str(&c.render());
+            }
         }
     }
     out
@@ -192,11 +239,50 @@ mod tests {
     }
 
     #[test]
+    fn codec_annotations_parse_in_both_forms_and_orders() {
+        use crate::codec::CodecSpec;
+        let t = parse_stack("hbm=16g@509.7+host=512g@11~c:3.5+nvme=inf@6~0.00002").unwrap();
+        assert_eq!(t.codec(0), Some(CodecSpec::new(3.5)));
+        assert_eq!(t.codec(1), None);
+        assert_eq!(t.link(0).latency_s, super::DEFAULT_LINK_LATENCY_S);
+
+        // long form, after the latency
+        let t = parse_stack("hbm=16g@509.7+host=inf@11~1e-5~c:2.5@12/40").unwrap();
+        let c = t.codec(0).unwrap();
+        assert_eq!((c.ratio, c.compress_gbs, c.decompress_gbs), (2.5, 12.0, 40.0));
+        assert_eq!(t.link(0).latency_s, 1e-5);
+
+        // annotation order is free: codec first, latency second
+        let t2 = parse_stack("hbm=16g@509.7+host=inf@11~c:2.5@12/40~1e-5").unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn codec_annotations_reject_malformed_and_first_tier() {
+        let cases = [
+            (
+                "hbm=16g@550~c:3.5+host=inf@11",
+                "a ~c: codec annotates the link into the tier above",
+            ),
+            ("hbm=16g@550+host=inf@11~c:0.5", "codec"),
+            ("hbm=16g@550+host=inf@11~c:", "codec"),
+            ("hbm=16g@550+host=inf@11~c:3.5~c:2", "more than one ~c:"),
+            ("hbm=16g@550+host=inf@11~1e-5~2e-5", "more than one ~latency"),
+        ];
+        for (spec, needle) in cases {
+            let e = parse_stack(spec).unwrap_err().to_string();
+            assert!(e.contains(needle), "{spec}: {e}");
+        }
+    }
+
+    #[test]
     fn render_round_trips() {
         for s in [
             "hbm=16g@509.7+host=inf@11",
             "hbm=16g@509.7+host=48g@11~0.00001+nvme=inf@6~0.00002",
             "a=1023@3.5+b=1k@2+c=inf@0.25~0.5",
+            "hbm=16g@509.7+host=512g@11~c:3.5",
+            "hbm=16g@509.7+host=48g@11~c:2.5@12/40/5+nvme=inf@6~c:1.5",
         ] {
             let t = parse_stack(s).unwrap();
             let r = render(&t);

@@ -81,6 +81,7 @@ mod tests {
                 cyclic: true,
                 prefetch: true,
                 fuse: 1,
+                codec: false,
             },
             tuned_model_s: 1.5,
             heuristic_model_s: 2.0,
@@ -103,6 +104,7 @@ mod tests {
                 cyclic: false,
                 prefetch: false,
                 fuse: 1,
+                codec: false,
             },
             tuned_model_s: 0.5,
             heuristic_model_s: 0.5,

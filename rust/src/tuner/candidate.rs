@@ -22,6 +22,10 @@ pub struct Candidate {
     /// toggle/tile search holds this at 1 — [`super::tune_fuse`] owns
     /// the k dimension — so plain tuning never aliases across depths.
     pub fuse: u32,
+    /// Keep the stack's link codecs enabled (tiered stacks that carry
+    /// `~c:` annotations); normalised to `false` everywhere else, so
+    /// codec-free platforms never alias across this field.
+    pub codec: bool,
 }
 
 impl Candidate {
@@ -127,11 +131,13 @@ mod tests {
             cyclic: true,
             prefetch: false,
             fuse: 4,
+            codec: true,
         };
         let t = c.with_tiles(7);
         assert_eq!(t.tiles, Some(7));
         assert_eq!(t.slots, 3);
         assert!(t.cyclic && !t.prefetch);
         assert_eq!(t.fuse, 4);
+        assert!(t.codec);
     }
 }

@@ -111,7 +111,10 @@ impl TunerTarget {
                     prefetch: cand.prefetch,
                     slots: cand.slots.clamp(2, 3),
                 };
-                let mut e = TieredEngine::new(topo.clone(), *compute_bw, *launch_s, cand_opts)
+                // The codec toggle: `false` strips every link codec, so
+                // the search can price compression against raw transfer.
+                let topo = if cand.codec { topo.clone() } else { topo.without_codecs() };
+                let mut e = TieredEngine::new(topo, *compute_bw, *launch_s, cand_opts)
                     .expect("clamped slots are always valid");
                 if !e.plans.is_empty() {
                     e.plans[0] = plan_source(cand);
@@ -125,8 +128,16 @@ impl TunerTarget {
                 link,
                 overlap,
             } => {
+                // Halo exchanges inherit the inner stack's boundary
+                // codec exactly like `Config::build_tiered_engine`.
+                let halo = match inner.as_ref() {
+                    TunerTarget::Tiered { topo, .. } if cand.codec => {
+                        topo.codec(topo.num_tiers().saturating_sub(2))
+                    }
+                    _ => None,
+                };
                 let engines = (0..(*ranks).max(1)).map(|_| inner.build(cand)).collect();
-                Box::new(ShardedEngine::new(engines, *kind, *link, *overlap))
+                Box::new(ShardedEngine::new(engines, *kind, *link, *overlap).with_codec(halo))
             }
         }
     }
@@ -141,6 +152,7 @@ impl TunerTarget {
                 cyclic: false,
                 prefetch: false,
                 fuse: 1,
+                codec: false,
             },
             TunerTarget::GpuExplicit { opts, .. } => Candidate {
                 tiles: None,
@@ -148,6 +160,7 @@ impl TunerTarget {
                 cyclic: opts.cyclic,
                 prefetch: opts.prefetch,
                 fuse: 1,
+                codec: false,
             },
             TunerTarget::GpuUnified { prefetch, .. } => Candidate {
                 tiles: None,
@@ -155,13 +168,16 @@ impl TunerTarget {
                 cyclic: false,
                 prefetch: *prefetch,
                 fuse: 1,
+                codec: false,
             },
-            TunerTarget::Tiered { opts, .. } => Candidate {
+            TunerTarget::Tiered { topo, opts, .. } => Candidate {
                 tiles: None,
                 slots: opts.slots.clamp(2, 3),
                 cyclic: opts.cyclic,
                 prefetch: opts.prefetch,
                 fuse: 1,
+                // the configured state: annotated stacks run compressed
+                codec: topo.has_codec(),
             },
             TunerTarget::Sharded { inner, .. } => inner.heuristic(),
         }
@@ -175,17 +191,27 @@ impl TunerTarget {
         match self {
             TunerTarget::Knl { .. } => vec![self.heuristic()],
             TunerTarget::GpuExplicit { .. } | TunerTarget::Tiered { .. } => {
-                let mut v = Vec::with_capacity(8);
+                // Codec-carrying stacks cross the per-link codec on/off
+                // toggle into the space; everywhere else it is
+                // normalised to `false` (no aliased candidates).
+                let codec_dims: &[bool] = match self {
+                    TunerTarget::Tiered { topo, .. } if topo.has_codec() => &[true, false],
+                    _ => &[false],
+                };
+                let mut v = Vec::with_capacity(8 * codec_dims.len());
                 for slots in [3u8, 2] {
                     for cyclic in [true, false] {
                         for prefetch in [true, false] {
-                            v.push(Candidate {
-                                tiles: None,
-                                slots,
-                                cyclic,
-                                prefetch,
-                                fuse: 1,
-                            });
+                            for &codec in codec_dims {
+                                v.push(Candidate {
+                                    tiles: None,
+                                    slots,
+                                    cyclic,
+                                    prefetch,
+                                    fuse: 1,
+                                    codec,
+                                });
+                            }
                         }
                     }
                 }
@@ -199,6 +225,7 @@ impl TunerTarget {
                     cyclic: false,
                     prefetch,
                     fuse: 1,
+                    codec: false,
                 })
                 .collect(),
             TunerTarget::Sharded { inner, .. } => inner.toggle_variants(),
@@ -397,8 +424,38 @@ mod tests {
             cyclic: true,
             prefetch: true,
             fuse: 1,
+            codec: false,
         });
         let d = e.describe();
         assert!(d.contains("Cyclic") && d.contains("Prefetch"), "{d}");
+    }
+
+    #[test]
+    fn codec_toggle_doubles_annotated_tiered_spaces() {
+        let tiered = |stack: &str| TunerTarget::Tiered {
+            topo: crate::topology::spec::parse_stack(stack).unwrap(),
+            compute_bw: 80.0,
+            launch_s: 1e-5,
+            opts: GpuOpts {
+                cyclic: false,
+                prefetch: false,
+                slots: 3,
+            },
+        };
+        let with = tiered("hbm=16g@509.7+host=inf@11~c:3.5");
+        assert!(with.heuristic().codec, "annotated stacks run compressed by default");
+        assert_eq!(with.toggle_variants().len(), 16);
+        assert!(with.toggle_variants().iter().any(|c| !c.codec));
+        // codec-free stacks keep the 8-variant space, normalised false
+        let without = tiered("hbm=16g@509.7+host=inf@11");
+        assert!(!without.heuristic().codec);
+        assert_eq!(without.toggle_variants().len(), 8);
+        assert!(without.toggle_variants().iter().all(|c| !c.codec));
+        // both codec states build (the stripped twin drops the codecs)
+        with.build(with.heuristic());
+        with.build(Candidate {
+            codec: false,
+            ..with.heuristic()
+        });
     }
 }

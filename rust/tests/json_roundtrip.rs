@@ -108,6 +108,8 @@ const SCHEMA: &[(&str, &str)] = &[
     ("util_upload", "num"),
     ("util_download", "num"),
     ("util_exchange", "num"),
+    ("util_codec", "num"),
+    ("codec_bytes_saved", "num"),
     ("tuned", "bool"),
     ("tune_evals", "num"),
     ("tune_cache_hits", "num"),
@@ -328,6 +330,50 @@ fn real_run_produces_a_parseable_record() {
     match rec.get("roofline_upload_achieved_gbs") {
         Some(Val::Num(g)) => assert!(*g > 0.0, "upload stream moved bytes"),
         v => panic!("roofline_upload_achieved_gbs: {v:?}"),
+    }
+}
+
+#[test]
+fn codec_run_reports_savings_and_codec_utilisation() {
+    use ops_oc::bench_support::run_cl2d_cfg;
+    use ops_oc::coordinator::Config;
+    use ops_oc::memory::AppCalib;
+
+    // Same three-tier shape as above, with a 3.5:1 codec on the nvme
+    // link: the record must carry the codec fields and show savings.
+    let (t, _) = Config::parse_spec(
+        "tiers:hbm=64k@509.7+host=256k@11~0.00001+nvme=inf@6~0.00002~c:3.5:cyclic",
+    )
+    .unwrap();
+    let cfg = Config::for_target(t, AppCalib::CLOVERLEAF_2D);
+    let (m, oom) = run_cl2d_cfg(&cfg, false, 8, 256, 0.01, 1, 0);
+    assert!(!oom);
+    assert!(m.codec_bytes_saved > 0, "codec must shrink wire traffic");
+    let rec = parse_flat(&json_record(
+        "cloverleaf2d",
+        &cfg.label(),
+        cfg.ranks(),
+        0.01,
+        &cfg.topology(),
+        &m,
+        oom,
+    ));
+    assert_schema(&rec);
+    match &rec["topology"] {
+        Val::Str(s) => assert!(s.contains("~c:3.5"), "{s}"),
+        v => panic!("{v:?}"),
+    }
+    match &rec["codec_bytes_saved"] {
+        Val::Num(v) => assert!(*v > 0.0),
+        v => panic!("{v:?}"),
+    }
+    match &rec["util_codec"] {
+        Val::Num(u) => assert!(*u > 0.0, "codec stream must be attributed"),
+        v => panic!("{v:?}"),
+    }
+    match rec.get("util_tier_host_codec") {
+        Some(Val::Num(u)) => assert!(*u > 0.0, "per-tier codec utilisation"),
+        v => panic!("util_tier_host_codec: {v:?}"),
     }
 }
 

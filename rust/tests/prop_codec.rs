@@ -1,0 +1,250 @@
+//! Codec-subsystem properties: randomized codec-annotated stacks
+//! round-trip through the full spec grammar; a ratio-1.0 codec is
+//! bit-identical to no codec at all; effective bandwidth is monotone in
+//! the compression ratio; codec-bound attribution flips exactly where
+//! the hand-computed throughput threshold says it must; and sharded
+//! codec streams are rank-namespaced exactly once.
+
+use ops_oc::bench_support::run_cl2d_cfg;
+use ops_oc::codec::CodecSpec;
+use ops_oc::coordinator::Config;
+use ops_oc::exec::Metrics;
+use ops_oc::memory::AppCalib;
+use ops_oc::topology::{Tier, Topology};
+
+/// Deterministic xorshift (no rng dependency).
+struct XorShift(u64);
+
+impl XorShift {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+/// A random valid codec: short form, long form, or long form with a
+/// read-only override. f64 `Display` round-trips exactly, so arbitrary
+/// two-decimal values exercise the render→parse inverse fully.
+fn random_codec(rng: &mut XorShift) -> CodecSpec {
+    let mut c = CodecSpec::new(1.0 + (rng.below(700) as f64) / 100.0);
+    if rng.below(2) == 0 {
+        c.compress_gbs = 0.5 + (rng.below(400) as f64) / 4.0;
+        c.decompress_gbs = 0.5 + (rng.below(400) as f64) / 4.0;
+        if rng.below(2) == 0 {
+            c.ro_ratio = Some(1.0 + (rng.below(900) as f64) / 100.0);
+        }
+    }
+    c
+}
+
+/// Property (satellite): 200 randomized codec-annotated stacks
+/// round-trip exactly through `Topology::spec()` → `Config::parse_spec`
+/// — including the `~c:` colon that the option-token split must stitch
+/// back together.
+#[test]
+fn randomized_codec_stacks_round_trip() {
+    let mut rng = XorShift(0xC0DE_CAFE_0000_0001);
+    for case in 0..200 {
+        let n = 2 + rng.below(4) as usize; // 2..=5 tiers
+        let mut tiers = Vec::new();
+        let mut lats = Vec::new();
+        let mut codecs = Vec::new();
+        for i in 0..n {
+            let cap = if i + 1 == n {
+                None // unbounded home tier
+            } else {
+                Some((1 + rng.below(64)) << 20)
+            };
+            let bw = 0.25 + (rng.below(10_000) as f64) / 7.0;
+            tiers.push(Tier::new(&format!("t{i}"), cap, bw));
+            if i > 0 {
+                lats.push((rng.below(100_000) as f64) * 1e-9);
+                // ~2/3 of the links carry a codec
+                codecs.push((rng.below(3) != 0).then(|| random_codec(&mut rng)));
+            }
+        }
+        let topo = Topology::from_tiers(None, tiers, &lats)
+            .and_then(|t| t.with_codecs(codecs))
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let s = topo.spec();
+        let (t, tuned) = Config::parse_spec(&s).unwrap_or_else(|e| panic!("case {case} {s}: {e}"));
+        assert!(!tuned);
+        let parsed = &t.tiered().unwrap_or_else(|| panic!("{s}")).topology;
+        assert_eq!(parsed, &topo, "case {case}: {s}");
+        // equality above covers the codecs; spot-check the accessor too
+        for l in 0..topo.num_tiers() - 1 {
+            assert_eq!(parsed.codec(l), topo.codec(l), "case {case} link {l}");
+        }
+    }
+}
+
+fn run(spec: &str, gb: f64) -> (Metrics, bool) {
+    let (t, _) = Config::parse_spec(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+    let cfg = Config::for_target(t, AppCalib::CLOVERLEAF_2D);
+    run_cl2d_cfg(&cfg, false, 8, 256, gb, 2, 0)
+}
+
+/// Assert two runs are bit-identical: clocks, byte ledgers, and the
+/// whole per-resource timeline accounting.
+fn assert_bit_identical(a: &Metrics, b: &Metrics, what: &str) {
+    assert_eq!(a.elapsed_s.to_bits(), b.elapsed_s.to_bits(), "{what}: elapsed");
+    assert_eq!(a.loop_bytes, b.loop_bytes, "{what}: loop bytes");
+    assert_eq!(a.loop_time_s.to_bits(), b.loop_time_s.to_bits(), "{what}: loop time");
+    assert_eq!(a.h2d_bytes, b.h2d_bytes, "{what}: h2d");
+    assert_eq!(a.d2h_bytes, b.d2h_bytes, "{what}: d2h");
+    assert_eq!(a.codec_bytes_saved, 0, "{what}: identity saves nothing");
+    assert_eq!(b.codec_bytes_saved, 0, "{what}: codec-free twin");
+    assert_eq!(
+        a.per_resource.keys().collect::<Vec<_>>(),
+        b.per_resource.keys().collect::<Vec<_>>(),
+        "{what}: stream sets"
+    );
+    for (k, sa) in &a.per_resource {
+        let sb = &b.per_resource[k];
+        assert_eq!(sa.busy_s.to_bits(), sb.busy_s.to_bits(), "{what}: {k} busy");
+        assert_eq!(sa.bytes, sb.bytes, "{what}: {k} bytes");
+        assert_eq!(sa.events, sb.events, "{what}: {k} events");
+    }
+}
+
+/// Equivalence bar (tentpole): a ratio-1.0 codec takes the exact legacy
+/// code path — bit-identical clocks, bytes and ledger to no codec —
+/// even with absurd modelled throughputs, on two- and three-tier stacks
+/// and through the sharded wrapper.
+#[test]
+fn identity_codec_twin_is_bit_identical() {
+    let cases = [
+        (
+            "tiers:hbm=64k@509.7+host=inf@11~c:1:cyclic",
+            "tiers:hbm=64k@509.7+host=inf@11:cyclic",
+        ),
+        // identity is about the ratio, not the throughputs: the engine
+        // must strip it before any codec-stream scheduling happens
+        (
+            "tiers:hbm=64k@509.7+host=inf@11~c:1@0.001/0.001:cyclic",
+            "tiers:hbm=64k@509.7+host=inf@11:cyclic",
+        ),
+        (
+            "tiers:hbm=64k@509.7+host=256k@11~0.00001~c:1+nvme=inf@6~0.00002~c:1:cyclic:prefetch",
+            "tiers:hbm=64k@509.7+host=256k@11~0.00001+nvme=inf@6~0.00002:cyclic:prefetch",
+        ),
+        (
+            "tiers:hbm=256k@509.7+host=inf@11~c:1:cyclic:x2",
+            "tiers:hbm=256k@509.7+host=inf@11:cyclic:x2",
+        ),
+    ];
+    for (with, without) in cases {
+        let (ma, oa) = run(with, 0.01);
+        let (mb, ob) = run(without, 0.01);
+        assert_eq!(oa, ob, "{with}");
+        assert_bit_identical(&ma, &mb, with);
+    }
+}
+
+/// Property (satellite): with the codec kernels fast enough to stay off
+/// the critical path, wall clock is monotone non-increasing in the
+/// compression ratio — more compression never costs time — and a real
+/// ratio is strictly faster than identity on a transfer-bound cell.
+#[test]
+fn effective_bandwidth_is_monotone_in_ratio() {
+    let mut prev = f64::INFINITY;
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for (i, ratio) in ["1", "1.5", "2.5", "3.5", "6"].iter().enumerate() {
+        let spec = format!("tiers:hbm=64k@509.7+host=inf@11~c:{ratio}@1000/1000:cyclic");
+        let (m, oom) = run(&spec, 0.01);
+        assert!(!oom, "{spec}");
+        assert!(
+            m.elapsed_s <= prev * (1.0 + 1e-9),
+            "ratio {ratio}: {} !<= {prev}",
+            m.elapsed_s
+        );
+        prev = m.elapsed_s;
+        if i == 0 {
+            first = m.elapsed_s;
+        }
+        last = m.elapsed_s;
+    }
+    assert!(
+        last < first * 0.999,
+        "a 6:1 codec must beat identity on a transfer-bound cell: {last} !< {first}"
+    );
+}
+
+/// Property (satellite): the codec-bound flip sits where the arithmetic
+/// says. On a zero-latency link of bandwidth `bw` with ratio `r` and
+/// symmetric codec throughput `t`, the codec stream's busy time per
+/// logical byte is `1/t` against the wire's `1/(r·bw)` — so the run is
+/// codec-bound iff `t < r·bw`. Here `r·bw = 3.5 × 11 = 38.5` GB/s;
+/// probe a decade either side.
+#[test]
+fn codec_bound_detection_matches_hand_computed_threshold() {
+    let (slow, oom) = run("tiers:hbm=64k@509.7+host=inf@11~c:3.5@5/5:cyclic", 0.01);
+    assert!(!oom);
+    assert_eq!(
+        slow.bound().name(),
+        "codec",
+        "5 GB/s codec kernels against a 38.5 GB/s effective wire must dominate"
+    );
+    assert!(slow.stream_util(ops_oc::exec::StreamClass::Codec) > 0.0);
+    assert!(slow.codec_bytes_saved > 0);
+
+    let (fast, oom) = run("tiers:hbm=64k@509.7+host=inf@11~c:3.5@500/500:cyclic", 0.01);
+    assert!(!oom);
+    assert_ne!(
+        fast.bound().name(),
+        "codec",
+        "500 GB/s codec kernels cannot be the bottleneck (bound: {:?})",
+        fast.bound().name()
+    );
+    // same wire model: both save the same bytes, the slow codec just
+    // pays more stream time for them
+    assert_eq!(slow.codec_bytes_saved, fast.codec_bytes_saved);
+    let slow_busy = slow.per_resource["codec"].busy_s;
+    let fast_busy = fast.per_resource["codec"].busy_s;
+    assert!(
+        (slow_busy / fast_busy - 100.0).abs() < 1.0,
+        "busy time scales inversely with throughput: {slow_busy} vs {fast_busy}"
+    );
+}
+
+/// Property (satellite): sharded runs namespace codec streams exactly
+/// once — `r<rank>:codec`, never a bare `codec` and never a double
+/// `r0:r0:` prefix — and every rank carries one.
+#[test]
+fn sharded_codec_streams_are_rank_namespaced_idempotently() {
+    for ranks in [2usize, 4] {
+        let spec = format!("tiers:hbm=256k@509.7+host=inf@11~c:3.5:cyclic:x{ranks}");
+        let (m, oom) = run(&spec, 0.01);
+        assert!(!oom, "{spec}");
+        assert!(m.codec_bytes_saved > 0, "{spec}");
+        let codec_keys: Vec<&str> = m
+            .per_resource
+            .keys()
+            .map(|k| k.as_str())
+            .filter(|k| k.contains("codec"))
+            .collect();
+        assert_eq!(codec_keys.len(), ranks, "{spec}: {codec_keys:?}");
+        for key in &codec_keys {
+            let (rank, rest) = key.split_once(':').unwrap_or_else(|| panic!("{key}"));
+            assert_eq!(rest, "codec", "{spec}: {key} must namespace exactly once");
+            let digits = rank.strip_prefix('r').unwrap_or_else(|| panic!("{key}"));
+            let r: usize = digits.parse().unwrap_or_else(|_| panic!("{key}"));
+            assert!(r < ranks, "{spec}: {key}");
+        }
+        for r in 0..ranks {
+            assert!(
+                codec_keys.contains(&format!("r{r}:codec").as_str()),
+                "{spec}: rank {r} missing from {codec_keys:?}"
+            );
+        }
+    }
+}

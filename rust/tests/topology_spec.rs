@@ -108,6 +108,13 @@ fn malformed_tier_tokens_are_typed_errors_naming_the_token() {
         ("tiers:", "empty tiers: spec"),
         ("tiers:hbm=16g@550+host=inf@oops", "bad bandwidth"),
         ("tiers:hbm=16g@550~1e-5+host=inf@11", "first (fastest) tier"),
+        // satellite bugfix: codec annotations are link properties too —
+        // the first tier has no inbound link to attach one to, and the
+        // error must name the offending tier token
+        ("tiers:hbm=16g@550~c:3.5+host=inf@11", "first (fastest) tier"),
+        ("tiers:hbm=16g@550~c:3.5+host=inf@11", "hbm=16g@550~c:3.5"),
+        ("tiers:hbm=16g@550+host=inf@11~c:0.5", "ratio"),
+        ("tiers:hbm=16g@550+host=inf@11~c:3.5~c:2", "more than one ~c:"),
     ];
     for (s, needle) in cases {
         let e = Config::parse_spec(s).unwrap_err().to_string();
